@@ -1,0 +1,117 @@
+//! END-TO-END driver: the full three-layer system on a real workload.
+//!
+//! Generates a Drell-Yan sample (default 1M events; pass --events 5400000
+//! for the paper-sized run), registers it with a multi-worker cluster using
+//! the cache-aware pull scheduler, and serves the four Table-3 queries
+//! through the AOT-compiled Pallas/PJRT kernels (falling back to the native
+//! columnar backend if artifacts are missing). Prints the Z-peak histogram,
+//! per-query latency, and cluster cache statistics.
+//!
+//!     cargo run --release --example dimuon_spectrum -- [--events N] [--workers W]
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::executor::PjrtBackend;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::hist::ascii;
+use std::path::Path;
+use std::time::Duration;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> Result<(), String> {
+    let n_events = arg("--events", 1_000_000);
+    let n_workers = arg("--workers", 4);
+
+    // Pick the PJRT backend when artifacts exist.
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (backend, backend_name) = if artifacts.join("manifest.json").exists() {
+        (Backend::Pjrt(PjrtBackend::new(artifacts)), "pjrt (AOT Pallas kernels)")
+    } else {
+        (Backend::Columnar, "columnar (run `make artifacts` for pjrt)")
+    };
+    println!("backend: {backend_name}");
+
+    println!("generating {n_events} Drell-Yan events...");
+    let t0 = std::time::Instant::now();
+    let cs = generate_drellyan(n_events, 2024);
+    println!("  generated in {:.2}s ({:.1} MB exploded)",
+        t0.elapsed().as_secs_f64(), cs.byte_size() as f64 / 1e6);
+
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_workers,
+            cache_bytes_per_worker: 1 << 30,
+            policy: Policy::cache_aware(),
+            fetch_delay_per_mib: Duration::from_millis(5),
+            claim_ttl: Duration::from_secs(60),
+            straggler: None,
+        },
+        backend,
+    );
+    cluster.catalog.register("dy", cs, 16_384);
+    println!(
+        "cluster: {n_workers} workers, dataset 'dy' in {} partitions of 16384 events",
+        cluster.catalog.n_partitions("dy").unwrap()
+    );
+
+    // Serve the four analysis queries twice: cold (cache misses) and warm.
+    let queries = [
+        QueryKind::MaxPt,
+        QueryKind::EtaBest,
+        QueryKind::PtSumPairs,
+        QueryKind::MassPairs,
+    ];
+    println!("\n{:<14} {:>12} {:>12} {:>14}", "query", "cold (ms)", "warm (ms)", "events/s warm");
+    let mut mass_hist = None;
+    for kind in queries {
+        let q = Query::new(kind, "dy", "muons");
+        let cold = cluster.run(&q)?;
+        let warm = cluster.run(&q)?;
+        println!(
+            "{:<14} {:>12.1} {:>12.1} {:>14.2e}",
+            kind.artifact(),
+            cold.latency.as_secs_f64() * 1e3,
+            warm.latency.as_secs_f64() * 1e3,
+            warm.events as f64 / warm.latency.as_secs_f64()
+        );
+        if kind == QueryKind::MassPairs {
+            mass_hist = Some(warm.hist);
+        }
+    }
+
+    let mass = mass_hist.unwrap();
+    println!("\n{}", ascii::render(&mass, "dimuon invariant mass [GeV] (all pairs)", 48));
+    let peak = mass.bin_center(mass.mode_bin());
+    println!("Z peak reconstructed at {peak:.1} GeV (expect ~91)");
+
+    let stats = cluster.stats();
+    let hits: u64 = stats.iter().map(|s| s.cache_hits).sum();
+    let misses: u64 = stats.iter().map(|s| s.cache_misses).sum();
+    println!(
+        "\ncache: {hits} hits / {misses} misses ({:.1}% hit rate after warmup)",
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
+    for (i, s) in stats.iter().enumerate() {
+        println!(
+            "  worker {i}: {} tasks, {} events, busy {:.2}s",
+            s.tasks_done, s.events_processed, s.busy.as_secs_f64()
+        );
+    }
+    cluster.shutdown();
+
+    if !(85.0..=97.0).contains(&peak) {
+        return Err(format!("Z peak at {peak:.1} GeV is out of range"));
+    }
+    println!("\nend-to-end OK");
+    Ok(())
+}

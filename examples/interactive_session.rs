@@ -1,0 +1,100 @@
+//! The paper's §4 sizing scenario: "a hundred physicists online, submitting
+//! a query every ten seconds" — each gets a slice of the cluster, and every
+//! plot should come back on a human timescale.
+//!
+//! Simulates `--users` concurrent physicists issuing a randomized query mix
+//! over several datasets (time-compressed: no think-time between queries;
+//! `--queries` per user), and reports the latency distribution.
+//!
+//!     cargo run --release --example interactive_session -- [--users N]
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> Result<(), String> {
+    let n_users = arg("--users", 20);
+    let queries_per_user = arg("--queries", 5);
+    let n_workers = arg("--workers", 8);
+
+    let cluster = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers,
+            cache_bytes_per_worker: 512 << 20,
+            policy: Policy::cache_aware(),
+            fetch_delay_per_mib: Duration::from_millis(10),
+            claim_ttl: Duration::from_secs(30),
+            straggler: None,
+        },
+        Backend::Columnar,
+    ));
+    // Four shared datasets (the "popular sample" effect).
+    for d in 0..4 {
+        cluster
+            .catalog
+            .register(&format!("ds{d}"), generate_drellyan(200_000, 7 + d as u64), 20_000);
+    }
+    println!(
+        "{n_users} users x {queries_per_user} queries on {n_workers} workers, 4 datasets of 200k events"
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for u in 0..n_users {
+        let cluster = cluster.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::new(1000 + u as u64);
+            let kinds = [
+                QueryKind::MaxPt,
+                QueryKind::EtaBest,
+                QueryKind::PtSumPairs,
+                QueryKind::MassPairs,
+            ];
+            let mut latencies = Vec::new();
+            for _ in 0..queries_per_user {
+                // Physicists cluster on popular datasets.
+                let ds = if rng.bool_with(0.5) {
+                    "ds0".to_string()
+                } else {
+                    format!("ds{}", rng.below(4))
+                };
+                let q = Query::new(*rng.choose(&kinds), &ds, "muons");
+                let res = cluster.run(&q).expect("query failed");
+                latencies.push(res.latency.as_secs_f64());
+            }
+            latencies
+        }));
+    }
+    let mut all: Vec<f64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("user thread"))
+        .collect();
+    let wall = t0.elapsed();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| all[((all.len() as f64 * p) as usize).min(all.len() - 1)];
+
+    println!("\n{} queries in {:.2}s ({:.1} queries/s)", all.len(), wall.as_secs_f64(),
+        all.len() as f64 / wall.as_secs_f64());
+    println!("latency: p50 {:.0} ms   p90 {:.0} ms   p99 {:.0} ms   max {:.0} ms",
+        pct(0.50) * 1e3, pct(0.90) * 1e3, pct(0.99) * 1e3, all.last().unwrap() * 1e3);
+    println!("cache hit rate: {:.1}%", cluster.total_cache_hit_rate() * 100.0);
+
+    let sub_second = all.iter().filter(|&&l| l < 1.0).count();
+    println!(
+        "{:.1}% of queries under the paper's 1-second latency goal",
+        100.0 * sub_second as f64 / all.len() as f64
+    );
+    Ok(())
+}

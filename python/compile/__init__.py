@@ -1,0 +1,1 @@
+"""hepq build-time compile package (never imported at runtime)."""

@@ -1,0 +1,97 @@
+"""AOT export: lower every L2 query graph to HLO text + a manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Produces:
+    artifacts/q_<name>.hlo.txt     one module per query
+    artifacts/manifest.json        shapes + input layout for the Rust runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.shapes import DEFAULT_SPEC, NBINS, PartitionSpec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_query(name: str, spec: PartitionSpec):
+    factory, n_content = model.QUERIES[name]
+    fn = factory(spec)
+    args = model.example_args(spec, n_content)
+    return jax.jit(fn).lower(*args), n_content
+
+
+def export_all(out_dir: str, spec: PartitionSpec) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "partition": {
+            "n_events": spec.n_events,
+            "k_max": spec.k_max,
+            "content_cap": spec.content_cap,
+            "n_offsets": spec.n_offsets,
+        },
+        "nbins": NBINS,
+        "hist_slots": NBINS + 2,
+        "queries": {},
+    }
+    for name in model.QUERIES:
+        lowered, n_content = lower_query(name, spec)
+        text = to_hlo_text(lowered)
+        fname = f"q_{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["queries"][name] = {
+            "file": fname,
+            "n_content_arrays": n_content,
+            "inputs": ["offsets_i32"]
+            + [f"content_f32_{i}" for i in range(n_content)]
+            + ["lo_f32", "hi_f32"],
+            "output": "hist_f32_slots",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--events", type=int, default=DEFAULT_SPEC.n_events,
+        help="events per partition baked into the artifacts",
+    )
+    ap.add_argument("--kmax", type=int, default=DEFAULT_SPEC.k_max)
+    args = ap.parse_args()
+    spec = PartitionSpec(
+        n_events=args.events,
+        k_max=args.kmax,
+        content_cap=8 * args.events,
+        block_events=min(DEFAULT_SPEC.block_events, args.events),
+    )
+    export_all(args.out_dir, spec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for hepq.
+
+Every kernel accumulates a partial histogram of shape [NBINS + 2]
+(slot 0 = underflow, slots 1..NBINS = in-range bins, slot NBINS+1 =
+overflow) over a partition of events, fusing the physics computation with
+the histogram fill so pair tensors never round-trip through HBM.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode (which lowers to plain HLO) is both
+the correctness path and the artifact path on this testbed. The BlockSpec
+structure is still written for TPU: the event axis is tiled so each block's
+working set fits VMEM (see DESIGN.md section Hardware-Adaptation).
+"""
+
+from .shapes import PartitionSpec, DEFAULT_SPEC, NBINS
+from . import hist, event, pairs, ref
+
+__all__ = ["PartitionSpec", "DEFAULT_SPEC", "NBINS", "hist", "event", "pairs", "ref"]

@@ -1,0 +1,87 @@
+"""L1 Pallas kernels: per-event reductions fused with histogram fill.
+
+Table 3's first two analysis functions:
+  * ``max p_T``      — per-event maximum over the muon list;
+  * ``eta of best``  — eta of the highest-p_T muon (maximize one attribute,
+                       plot another).
+
+The paper's per-event Python loops become masked row-reductions over padded
+[events, K] tiles; the per-event scalar then feeds the same one-hot
+histogram contraction as `hist.py`, all inside one kernel so nothing but
+the [NBINS+2] accumulator leaves VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .shapes import NBINS
+from .hist import _hist_block
+
+# Python float literal (a jnp scalar would be captured as a pallas constant).
+_NEG = -3.0e38
+
+
+def _max_pt_kernel(pt_ref, m_ref, lo_ref, hi_ref, o_ref, *, nbins):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    mask = m_ref[...] != 0
+    pt = jnp.where(mask, pt_ref[...], _NEG)
+    ev_max = jnp.max(pt, axis=1)                 # [block]
+    ev_has = jnp.any(mask, axis=1)               # paper: fill only if >=1 muon
+    o_ref[...] += _hist_block(ev_max, ev_has, lo_ref[0], hi_ref[0], nbins)
+
+
+def _eta_best_kernel(pt_ref, eta_ref, m_ref, lo_ref, hi_ref, o_ref, *, nbins):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    mask = m_ref[...] != 0
+    pt = jnp.where(mask, pt_ref[...], _NEG)
+    # argmax picks the first maximal lane — same as the paper's strict `>`
+    # update rule scanning left to right.
+    best = jnp.argmax(pt, axis=1)                # [block]
+    eta = jnp.take_along_axis(eta_ref[...], best[:, None], axis=1)[:, 0]
+    ev_has = jnp.any(mask, axis=1)
+    o_ref[...] += _hist_block(eta, ev_has, lo_ref[0], hi_ref[0], nbins)
+
+
+def _call_event_kernel(kernel, arrays, lo, hi, *, block, nbins):
+    n, k = arrays[0].shape
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = n // block
+    in_specs = [pl.BlockSpec((block, k), lambda i: (i, 0)) for _ in arrays] + [
+        pl.BlockSpec((1,), lambda i: (0,)),
+        pl.BlockSpec((1,), lambda i: (0,)),
+    ]
+    return pl.pallas_call(
+        functools.partial(kernel, nbins=nbins),
+        grid=(grid,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((nbins + 2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins + 2,), jnp.float32),
+        interpret=True,
+    )(*arrays, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "nbins"))
+def max_pt_hist(pt, mask, lo, hi, *, block=2048, nbins=NBINS):
+    """Histogram of per-event max pt. pt/mask: [N, K]; lo/hi: f32[1]."""
+    return _call_event_kernel(_max_pt_kernel, [pt, mask], lo, hi, block=block, nbins=nbins)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "nbins"))
+def eta_best_hist(pt, eta, mask, lo, hi, *, block=2048, nbins=NBINS):
+    """Histogram of eta of the highest-pt muon per event."""
+    return _call_event_kernel(
+        _eta_best_kernel, [pt, eta, mask], lo, hi, block=block, nbins=nbins
+    )

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: masked histogram fill via one-hot contraction.
+
+The paper's hot loop is ``fill_histogram(value)`` executed hundreds of
+millions of times per second. A TPU has no efficient scatter, so the
+histogram fill is re-thought for the MXU (DESIGN.md Hardware-Adaptation):
+each value is mapped to a bin index, the indices are expanded to a one-hot
+matrix against a broadcasted iota, and the bin counts are the column sums —
+a [block, slots] reduction the systolic array handles natively.
+
+Slot convention: 0 = underflow, 1..NBINS = in-range, NBINS+1 = overflow.
+Masked-out lanes are parked in a dead slot so they never contribute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .shapes import NBINS
+
+
+def _bin_indices(values, mask, lo, hi, nbins):
+    """Map values to histogram slots [0, nbins+1]; masked lanes -> -1."""
+    width = (hi - lo) / nbins
+    raw = jnp.floor((values - lo) / width)
+    idx = jnp.clip(raw, -1.0, float(nbins)).astype(jnp.int32) + 1  # 0..nbins+1
+    # NaNs compare false everywhere; route them (and masked lanes) to -1,
+    # which matches no one-hot column.
+    idx = jnp.where(jnp.isnan(values), -1, idx)
+    return jnp.where(mask, idx, -1)
+
+
+#: Histogram binning strategy:
+#:   "scatter" (default) — scatter-add into the bin vector: O(M) work, the
+#:       fast path for the CPU-PJRT artifacts this repo executes;
+#:   "onehot"  — one-hot matrix against a broadcasted iota contracted over
+#:       the block: O(M x slots) scalar work but a single dense [M, slots]
+#:       reduction the TPU MXU executes natively (scatter is the op TPUs
+#:       lack). Select with HEPQ_HIST_MODE when baking artifacts.
+#: Perf note (EXPERIMENTS.md §Perf): switching the CPU artifacts from
+#: onehot to scatter sped the pair-query kernels up by ~40x end to end.
+import os
+
+HIST_MODE = os.environ.get("HEPQ_HIST_MODE", "scatter")
+
+
+def _hist_block(values, mask, lo, hi, nbins):
+    """Histogram a flat block of values into [nbins+2] counts."""
+    idx = _bin_indices(values, mask, lo, hi, nbins)
+    if HIST_MODE == "onehot":
+        slots = jax.lax.broadcasted_iota(jnp.int32, (values.shape[0], nbins + 2), 1)
+        onehot = (idx[:, None] == slots).astype(jnp.float32)
+        return jnp.sum(onehot, axis=0)
+    # Scatter mode: park invalid lanes (-1) in a dead slot past the end and
+    # drop it after the scatter-add.
+    idx = jnp.where(idx < 0, nbins + 2, idx)
+    hist = jnp.zeros(nbins + 3, dtype=jnp.float32).at[idx].add(1.0)
+    return hist[: nbins + 2]
+
+
+def _fill_kernel(v_ref, m_ref, lo_ref, hi_ref, o_ref, *, nbins):
+    """Grid step: accumulate this block's partial histogram."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    block = _hist_block(
+        v_ref[...], m_ref[...] != 0, lo_ref[0], hi_ref[0], nbins
+    )
+    o_ref[...] += block
+
+
+@functools.partial(jax.jit, static_argnames=("block", "nbins"))
+def hist_fill(values, mask, lo, hi, *, block=4096, nbins=NBINS):
+    """Histogram a flat f32 vector under an i32 validity mask.
+
+    values: f32[M] (M must be a multiple of `block`)
+    mask:   i32[M] (nonzero = valid)
+    lo/hi:  f32[1] binning range
+    returns f32[nbins+2] = [underflow, bins..., overflow]
+    """
+    (m,) = values.shape
+    assert m % block == 0, f"M={m} not a multiple of block={block}"
+    grid = m // block
+    return pl.pallas_call(
+        functools.partial(_fill_kernel, nbins=nbins),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((nbins + 2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins + 2,), jnp.float32),
+        interpret=True,
+    )(values, mask, lo, hi)

@@ -1,0 +1,136 @@
+"""Pure-numpy oracle for every kernel and query — the CORE correctness
+signal.
+
+Implemented exactly as the paper's Table-3 pseudocode: explicit Python
+loops over events and muons, no vectorization, no clever indexing. If a
+Pallas kernel and this file agree across the hypothesis sweep, the kernel
+is right.
+
+Histogram slot convention matches the kernels:
+[underflow, bins..., overflow] → NBINS + 2 slots; values with x == hi go to
+overflow (right-open bins); NaN is dropped.
+"""
+
+import math
+
+import numpy as np
+
+from .shapes import NBINS
+
+
+def hist_slots(values, lo, hi, nbins=NBINS):
+    """Histogram a python iterable into [under, bins..., over]."""
+    out = np.zeros(nbins + 2, dtype=np.float64)
+    width = (hi - lo) / nbins
+    for v in values:
+        v = float(v)
+        if math.isnan(v):
+            continue
+        if v < lo:
+            out[0] += 1.0
+        else:
+            i = int(math.floor((v - lo) / width))
+            if i < nbins:
+                out[1 + i] += 1.0
+            else:
+                out[nbins + 1] += 1.0
+    return out
+
+
+def events_from_offsets(offsets, *arrays):
+    """Yield per-event lists of attribute tuples from exploded arrays."""
+    for i in range(len(offsets) - 1):
+        lo, hi = int(offsets[i]), int(offsets[i + 1])
+        yield [tuple(float(a[k]) for a in arrays) for k in range(lo, hi)]
+
+
+# ---------------------------------------------------------------- Table 3
+
+def max_pt(offsets, pt, lo, hi, nbins=NBINS):
+    """for event: maximum = -inf; for muon: if pt > max ...; fill(max)
+    (fills only when the event has at least one muon)."""
+    vals = []
+    for muons in events_from_offsets(offsets, pt):
+        if not muons:
+            continue
+        maximum = -float("inf")
+        for (mpt,) in muons:
+            if mpt > maximum:
+                maximum = mpt
+        vals.append(maximum)
+    return hist_slots(vals, lo, hi, nbins)
+
+
+def eta_best(offsets, pt, eta, lo, hi, nbins=NBINS):
+    """eta of the highest-pt muon per event (first wins on ties)."""
+    vals = []
+    for muons in events_from_offsets(offsets, pt, eta):
+        maximum = -float("inf")
+        best = None
+        for (mpt, meta) in muons:
+            if mpt > maximum:
+                maximum = mpt
+                best = meta
+        if best is not None:
+            vals.append(best)
+    return hist_slots(vals, lo, hi, nbins)
+
+
+def ptsum_pairs(offsets, pt, lo, hi, nbins=NBINS):
+    """pt_i + pt_j over distinct pairs i < j."""
+    vals = []
+    for muons in events_from_offsets(offsets, pt):
+        n = len(muons)
+        for i in range(n):
+            for j in range(i + 1, n):
+                vals.append(muons[i][0] + muons[j][0])
+    return hist_slots(vals, lo, hi, nbins)
+
+
+def mass_pairs(offsets, pt, eta, phi, lo, hi, nbins=NBINS):
+    """sqrt(2 pt_i pt_j (cosh(deta) - cos(dphi))) over distinct pairs."""
+    vals = []
+    for muons in events_from_offsets(offsets, pt, eta, phi):
+        n = len(muons)
+        for i in range(n):
+            for j in range(i + 1, n):
+                p1, e1, f1 = muons[i]
+                p2, e2, f2 = muons[j]
+                m2 = 2.0 * p1 * p2 * (math.cosh(e1 - e2) - math.cos(f1 - f2))
+                vals.append(math.sqrt(max(m2, 0.0)))
+    return hist_slots(vals, lo, hi, nbins)
+
+
+def jetpt_hist(offsets, pt, lo, hi, nbins=NBINS):
+    """Table 1's payload: histogram every jet pt."""
+    vals = []
+    for jets in events_from_offsets(offsets, pt):
+        for (jpt,) in jets:
+            vals.append(jpt)
+    return hist_slots(vals, lo, hi, nbins)
+
+
+# ------------------------------------------------------------- pad helpers
+
+def pad_from_offsets(offsets, content, n_events, k_max, fill=0.0):
+    """Reference implementation of the L2 gather/pad: exploded -> [N, K]
+    padded matrix + i32 mask. Events beyond len(offsets)-1 are empty.
+    Lists longer than k_max are truncated (the coordinator guarantees the
+    generators respect k_max, but the kernel contract is explicit)."""
+    out = np.full((n_events, k_max), fill, dtype=np.float32)
+    mask = np.zeros((n_events, k_max), dtype=np.int32)
+    for i in range(min(n_events, len(offsets) - 1)):
+        lo, hi = int(offsets[i]), int(offsets[i + 1])
+        n = min(hi - lo, k_max)
+        out[i, :n] = content[lo : lo + n]
+        mask[i, :n] = 1
+    return out, mask
+
+
+def truncate_offsets(offsets, k_max):
+    """Per-event lengths clamped to k_max (what the padded view computes)."""
+    off = np.asarray(offsets, dtype=np.int64)
+    counts = np.minimum(off[1:] - off[:-1], k_max)
+    out = np.zeros(len(off), dtype=np.int64)
+    out[1:] = np.cumsum(counts)
+    return out

@@ -1,0 +1,48 @@
+"""Static partition shapes shared by L1 kernels, L2 query graphs and the
+Rust runtime.
+
+PJRT executables have fixed input shapes, so the coordinator pads every
+partition to exactly these sizes (trailing events get zero-length particle
+lists by repeating the last offset). The numbers are chosen so one block of
+every kernel fits comfortably in a TPU core's ~16 MiB VMEM — the footprint
+table lives in DESIGN.md.
+"""
+
+from dataclasses import dataclass
+
+#: In-range histogram bins baked into every artifact. Slot layout of kernel
+#: output: [underflow, bins..., overflow] → NBINS + 2 slots.
+NBINS = 64
+
+
+@dataclass(frozen=True)
+class PartitionSpec:
+    """Shapes of one padded partition."""
+
+    n_events: int = 16384   #: events per partition (padded)
+    k_max: int = 8          #: max particles per event after padding
+    content_cap: int = 131072  #: capacity of each content array (= 8 * n_events)
+    block_events: int = 2048   #: events per Pallas grid step
+
+    @property
+    def n_offsets(self) -> int:
+        return self.n_events + 1
+
+    @property
+    def hist_slots(self) -> int:
+        return NBINS + 2
+
+    def vmem_block_bytes(self, n_attrs: int) -> int:
+        """Estimated VMEM working set of one pair-kernel block: padded
+        attribute tiles + the KxK pair tensor + the histogram accumulator."""
+        tile = self.block_events * self.k_max * 4 * n_attrs
+        pair = self.block_events * self.k_max * self.k_max * 4
+        hist = self.hist_slots * 4
+        return tile + pair + hist
+
+
+#: Production artifact shapes (what `make artifacts` bakes).
+DEFAULT_SPEC = PartitionSpec()
+
+#: Small shapes for fast pytest/hypothesis sweeps.
+TEST_SPEC = PartitionSpec(n_events=32, k_max=4, content_cap=256, block_events=8)

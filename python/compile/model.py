@@ -1,0 +1,130 @@
+"""Layer-2 JAX query graphs.
+
+Each query program is one jitted function over a *padded partition*:
+
+    (offsets i32[N+1], content arrays f32[C], lo f32[1], hi f32[1])
+        -> (hist f32[NBINS+2],)
+
+The graph has two stages, fused by XLA into a single module:
+
+1. **Regularize** — turn the exploded offsets+content representation into
+   padded [N, K] tiles with a validity mask, using a clamped gather
+   (`offsets[i] + k`). No event objects are ever materialized: this is the
+   columnar-to-columnar reshaping the paper performs implicitly when it
+   vectorizes transformed loops.
+2. **Compute+fill** — call the L1 Pallas kernel, which fuses the Table-3
+   physics computation with the histogram fill.
+
+Python (this file) runs only at build time: `aot.py` lowers these functions
+to HLO text, and the Rust coordinator executes the artifacts via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import event, hist, pairs
+from .kernels.shapes import NBINS, PartitionSpec
+
+
+def pad_partition(offsets, content, n_events, k_max):
+    """Exploded (offsets, content) -> padded [N, K] values + i32 mask.
+
+    offsets: i32[N+1] (monotone, offsets[0] == 0, offsets may imply more
+             than K items per event — extra items are truncated, matching
+             `ref.pad_from_offsets`).
+    content: f32[C]   (C >= offsets[-1])
+    """
+    counts = jnp.minimum(offsets[1:] - offsets[:-1], k_max)       # [N]
+    k = jax.lax.broadcasted_iota(jnp.int32, (n_events, k_max), 1)  # [N, K]
+    idx = offsets[:-1, None] + k                                   # [N, K]
+    mask = (k < counts[:, None]).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, content.shape[0] - 1)
+    vals = content[idx]                                            # gather
+    vals = jnp.where(mask != 0, vals, 0.0)
+    return vals, mask
+
+
+def _block(spec: PartitionSpec) -> int:
+    return min(spec.block_events, spec.n_events)
+
+
+def q_max_pt(spec: PartitionSpec):
+    """Query: histogram of per-event max muon pt."""
+
+    def fn(offsets, pt, lo, hi):
+        vals, mask = pad_partition(offsets, pt, spec.n_events, spec.k_max)
+        return (event.max_pt_hist(vals, mask, lo, hi, block=_block(spec)),)
+
+    return fn
+
+
+def q_eta_best(spec: PartitionSpec):
+    """Query: histogram of eta of the highest-pt muon per event."""
+
+    def fn(offsets, pt, eta, lo, hi):
+        p, mask = pad_partition(offsets, pt, spec.n_events, spec.k_max)
+        e, _ = pad_partition(offsets, eta, spec.n_events, spec.k_max)
+        return (event.eta_best_hist(p, e, mask, lo, hi, block=_block(spec)),)
+
+    return fn
+
+
+def q_ptsum_pairs(spec: PartitionSpec):
+    """Query: histogram of pt_i + pt_j over distinct muon pairs."""
+
+    def fn(offsets, pt, lo, hi):
+        p, mask = pad_partition(offsets, pt, spec.n_events, spec.k_max)
+        return (pairs.ptsum_pairs_hist(p, mask, lo, hi, block=_block(spec)),)
+
+    return fn
+
+
+def q_mass_pairs(spec: PartitionSpec):
+    """Query: histogram of dimuon invariant mass over distinct pairs."""
+
+    def fn(offsets, pt, eta, phi, lo, hi):
+        p, mask = pad_partition(offsets, pt, spec.n_events, spec.k_max)
+        e, _ = pad_partition(offsets, eta, spec.n_events, spec.k_max)
+        f, _ = pad_partition(offsets, phi, spec.n_events, spec.k_max)
+        return (pairs.mass_pairs_hist(p, e, f, mask, lo, hi, block=_block(spec)),)
+
+    return fn
+
+
+def q_flat_hist(spec: PartitionSpec):
+    """Query: histogram of every item of one content array (Table 1's
+    jet-pt fill). Works directly on the flat content array: the validity
+    mask is `position < offsets[-1]`, no padding needed."""
+
+    def fn(offsets, pt, lo, hi):
+        total = offsets[-1]
+        pos = jax.lax.iota(jnp.int32, pt.shape[0])
+        mask = (pos < total).astype(jnp.int32)
+        return (hist.hist_fill(pt, mask, lo, hi, block=_flat_block(spec)),)
+
+    return fn
+
+
+def _flat_block(spec: PartitionSpec) -> int:
+    return min(4096, spec.content_cap)
+
+
+#: name -> (factory, content-argument count (excluding offsets/lo/hi))
+QUERIES = {
+    "max_pt": (q_max_pt, 1),
+    "eta_best": (q_eta_best, 2),
+    "ptsum_pairs": (q_ptsum_pairs, 1),
+    "mass_pairs": (q_mass_pairs, 3),
+    "flat_hist": (q_flat_hist, 1),
+}
+
+
+def example_args(spec: PartitionSpec, n_content_arrays: int):
+    """ShapeDtypeStructs for lowering a query with the given arity."""
+    off = jax.ShapeDtypeStruct((spec.n_offsets,), jnp.int32)
+    content = [
+        jax.ShapeDtypeStruct((spec.content_cap,), jnp.float32)
+        for _ in range(n_content_arrays)
+    ]
+    scalar = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return [off, *content, scalar, scalar]

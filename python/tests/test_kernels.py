@@ -1,0 +1,220 @@
+"""Kernel-vs-oracle correctness: every L1 Pallas kernel against the pure
+numpy/python-loop reference, over hand-picked cases and hypothesis sweeps
+of shapes, multiplicities and value ranges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import event, hist, pairs, ref
+from compile.kernels.shapes import NBINS
+
+
+def make_exploded(rng, n_events, k_max, lo=-50.0, hi=150.0):
+    """Random exploded arrays with multiplicities in [0, k_max]."""
+    counts = rng.integers(0, k_max + 1, size=n_events)
+    offsets = np.zeros(n_events + 1, dtype=np.int32)
+    offsets[1:] = np.cumsum(counts)
+    total = int(offsets[-1])
+    pt = rng.uniform(0.5, 120.0, size=total).astype(np.float32)
+    eta = rng.uniform(-2.4, 2.4, size=total).astype(np.float32)
+    phi = rng.uniform(-np.pi, np.pi, size=total).astype(np.float32)
+    return offsets, pt, eta, phi
+
+
+def pad(offsets, content, n_events, k):
+    return ref.pad_from_offsets(offsets, content, n_events, k)
+
+
+def as_scalar_arrays(lo, hi):
+    return np.array([lo], np.float32), np.array([hi], np.float32)
+
+
+# ------------------------------------------------------------- hist_fill
+
+class TestHistFill:
+    def test_basic_binning(self):
+        values = np.array([0.5, 1.5, 1.6, 63.9, -1.0, 64.0, 200.0, 5.0],
+                          np.float32)
+        mask = np.ones(8, np.int32)
+        lo, hi = as_scalar_arrays(0.0, 64.0)
+        out = np.asarray(hist.hist_fill(values, mask, lo, hi, block=8))
+        expect = ref.hist_slots(values, 0.0, 64.0)
+        np.testing.assert_allclose(out, expect)
+        assert out[0] == 1.0      # underflow
+        assert out[NBINS + 1] == 2.0  # 64.0 and 200.0 overflow
+
+    def test_mask_excludes(self):
+        values = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+        mask = np.array([1, 0, 1, 0], np.int32)
+        lo, hi = as_scalar_arrays(0.0, 8.0)
+        out = np.asarray(hist.hist_fill(values, mask, lo, hi, block=4))
+        assert out.sum() == 2.0
+
+    def test_nan_dropped(self):
+        values = np.array([np.nan, 1.0, np.nan, 2.0], np.float32)
+        mask = np.ones(4, np.int32)
+        lo, hi = as_scalar_arrays(0.0, 8.0)
+        out = np.asarray(hist.hist_fill(values, mask, lo, hi, block=4))
+        assert out.sum() == 2.0
+
+    def test_multi_block_accumulation(self):
+        rng = np.random.default_rng(0)
+        values = rng.uniform(-10, 110, size=64).astype(np.float32)
+        mask = (rng.random(64) < 0.7).astype(np.int32)
+        lo, hi = as_scalar_arrays(0.0, 100.0)
+        out = np.asarray(hist.hist_fill(values, mask, lo, hi, block=16))
+        expect = ref.hist_slots(values[mask == 1], 0.0, 100.0)
+        np.testing.assert_allclose(out, expect)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([16, 32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        lo=st.floats(-100.0, 0.0),
+        width=st.floats(1.0, 300.0),
+    )
+    def test_hypothesis_sweep(self, n, seed, lo, width):
+        rng = np.random.default_rng(seed)
+        values = rng.uniform(lo - 50, lo + width + 50, n).astype(np.float32)
+        mask = (rng.random(n) < 0.8).astype(np.int32)
+        slo, shi = as_scalar_arrays(lo, lo + width)
+        out = np.asarray(hist.hist_fill(values, mask, slo, shi, block=n // 2))
+        expect = ref.hist_slots(values[mask == 1], np.float32(lo),
+                                np.float32(lo + width))
+        np.testing.assert_allclose(out, expect)
+
+
+# ----------------------------------------------------------- event kernels
+
+class TestMaxPt:
+    def test_simple(self):
+        offsets = np.array([0, 2, 2, 5], np.int32)
+        pt = np.array([10.0, 30.0, 7.0, 5.0, 9.0], np.float32)
+        p, m = pad(offsets, pt, 4, 4)
+        lo, hi = as_scalar_arrays(0.0, 64.0)
+        out = np.asarray(event.max_pt_hist(p, m, lo, hi, block=4))
+        expect = ref.max_pt(offsets, pt, 0.0, 64.0)
+        np.testing.assert_allclose(out, expect)
+        assert out.sum() == 2.0  # empty event contributes nothing
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 32, 64]))
+    def test_hypothesis_sweep(self, seed, n):
+        rng = np.random.default_rng(seed)
+        offsets, pt, _, _ = make_exploded(rng, n, 6)
+        p, m = pad(offsets, pt, n, 6)
+        lo, hi = as_scalar_arrays(0.0, 128.0)
+        out = np.asarray(event.max_pt_hist(p, m, lo, hi, block=n // 2))
+        np.testing.assert_allclose(out, ref.max_pt(offsets, pt, 0.0, 128.0))
+
+
+class TestEtaBest:
+    def test_tie_takes_first(self):
+        offsets = np.array([0, 2], np.int32)
+        pt = np.array([30.0, 30.0], np.float32)
+        eta = np.array([1.0, -1.0], np.float32)
+        p, m = pad(offsets, pt, 1, 2)
+        e, _ = pad(offsets, eta, 1, 2)
+        lo, hi = as_scalar_arrays(-2.4, 2.4)
+        out = np.asarray(event.eta_best_hist(p, e, m, lo, hi, block=1))
+        expect = ref.eta_best(offsets, pt, eta, -2.4, 2.4)
+        np.testing.assert_allclose(out, expect)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 32]))
+    def test_hypothesis_sweep(self, seed, n):
+        rng = np.random.default_rng(seed)
+        offsets, pt, eta, _ = make_exploded(rng, n, 5)
+        p, m = pad(offsets, pt, n, 5)
+        e, _ = pad(offsets, eta, n, 5)
+        lo, hi = as_scalar_arrays(-2.4, 2.4)
+        out = np.asarray(event.eta_best_hist(p, e, m, lo, hi, block=n // 2))
+        np.testing.assert_allclose(
+            out, ref.eta_best(offsets, pt, eta, np.float32(-2.4), np.float32(2.4))
+        )
+
+
+# ------------------------------------------------------------ pair kernels
+
+class TestPtSumPairs:
+    def test_three_muons_three_pairs(self):
+        offsets = np.array([0, 3], np.int32)
+        pt = np.array([10.0, 20.0, 30.0], np.float32)
+        p, m = pad(offsets, pt, 1, 4)
+        lo, hi = as_scalar_arrays(0.0, 64.0)
+        out = np.asarray(pairs.ptsum_pairs_hist(p, m, lo, hi, block=1))
+        expect = ref.ptsum_pairs(offsets, pt, 0.0, 64.0)
+        np.testing.assert_allclose(out, expect)
+        assert out.sum() == 3.0
+
+    def test_zero_and_one_muon_no_pairs(self):
+        offsets = np.array([0, 0, 1], np.int32)
+        pt = np.array([50.0], np.float32)
+        p, m = pad(offsets, pt, 2, 4)
+        lo, hi = as_scalar_arrays(0.0, 64.0)
+        out = np.asarray(pairs.ptsum_pairs_hist(p, m, lo, hi, block=2))
+        assert out.sum() == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 32]))
+    def test_hypothesis_sweep(self, seed, n):
+        rng = np.random.default_rng(seed)
+        offsets, pt, _, _ = make_exploded(rng, n, 6)
+        p, m = pad(offsets, pt, n, 6)
+        lo, hi = as_scalar_arrays(0.0, 256.0)
+        out = np.asarray(pairs.ptsum_pairs_hist(p, m, lo, hi, block=n // 2))
+        np.testing.assert_allclose(out, ref.ptsum_pairs(offsets, pt, 0.0, 256.0))
+
+
+class TestMassPairs:
+    def test_back_to_back_is_z_like(self):
+        # Two muons, pt 45.6 each, opposite phi, same eta:
+        # m = sqrt(2*45.6*45.6*(1 - cos(pi))) = 91.2
+        offsets = np.array([0, 2], np.int32)
+        pt = np.array([45.6, 45.6], np.float32)
+        eta = np.array([0.0, 0.0], np.float32)
+        phi = np.array([0.0, np.pi], np.float32)
+        p, m = pad(offsets, pt, 1, 2)
+        e, _ = pad(offsets, eta, 1, 2)
+        f, _ = pad(offsets, phi, 1, 2)
+        lo, hi = as_scalar_arrays(0.0, 128.0)
+        out = np.asarray(pairs.mass_pairs_hist(p, e, f, m, lo, hi, block=1))
+        # 91.2 lands in bin floor(91.2/2) = 45 → slot 46
+        assert out[46] == 1.0
+        assert out.sum() == 1.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 16]))
+    def test_hypothesis_sweep(self, seed, n):
+        rng = np.random.default_rng(seed)
+        offsets, pt, eta, phi = make_exploded(rng, n, 5)
+        p, m = pad(offsets, pt, n, 5)
+        e, _ = pad(offsets, eta, n, 5)
+        f, _ = pad(offsets, phi, n, 5)
+        lo, hi = as_scalar_arrays(0.0, 200.0)
+        out = np.asarray(pairs.mass_pairs_hist(p, e, f, m, lo, hi, block=n // 2))
+        expect = ref.mass_pairs(offsets, pt, eta, phi, 0.0, 200.0)
+        # f32 cosh/cos vs f64 math: values landing exactly on a bin edge can
+        # differ by one bin; compare totals exactly and bins loosely.
+        assert out.sum() == expect.sum()
+        # At most a couple of edge migrations allowed.
+        assert np.abs(out - expect).sum() <= 4.0
+
+
+# -------------------------------------------------------------- pad helper
+
+class TestPadFromOffsets:
+    def test_truncates_long_lists(self):
+        offsets = np.array([0, 6], np.int32)
+        content = np.arange(6, dtype=np.float32)
+        out, mask = ref.pad_from_offsets(offsets, content, 1, 4)
+        assert mask.sum() == 4
+        np.testing.assert_allclose(out[0], [0, 1, 2, 3])
+
+    def test_pads_missing_events(self):
+        offsets = np.array([0, 1], np.int32)
+        content = np.array([5.0], np.float32)
+        out, mask = ref.pad_from_offsets(offsets, content, 3, 2)
+        assert mask.sum() == 1
+        assert out.shape == (3, 2)

@@ -1,0 +1,126 @@
+"""L2 query graphs vs the oracle: the whole padded-partition pipeline
+(offsets gather + kernel + histogram), plus AOT lowering smoke tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.shapes import NBINS, PartitionSpec
+
+SPEC = PartitionSpec(n_events=32, k_max=4, content_cap=256, block_events=8)
+
+
+def make_partition(rng, spec, n_live=None):
+    """Random padded partition in the runtime's wire layout."""
+    n_live = spec.n_events if n_live is None else n_live
+    counts = rng.integers(0, spec.k_max + 1, size=n_live)
+    offsets = np.zeros(spec.n_offsets, dtype=np.int32)
+    offsets[1 : n_live + 1] = np.cumsum(counts)
+    offsets[n_live + 1 :] = offsets[n_live]  # padding events are empty
+    total = int(offsets[-1])
+    def content():
+        arr = np.zeros(spec.content_cap, dtype=np.float32)
+        arr[:total] = rng.uniform(0.5, 120.0, size=total)
+        return arr
+    return offsets, content(), content(), content()
+
+
+def scalars(lo, hi):
+    return np.array([lo], np.float32), np.array([hi], np.float32)
+
+
+class TestQueriesAgainstOracle:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_live=st.sampled_from([0, 7, 32]))
+    def test_max_pt(self, seed, n_live):
+        rng = np.random.default_rng(seed)
+        offsets, pt, _, _ = make_partition(rng, SPEC, n_live)
+        lo, hi = scalars(0.0, 128.0)
+        (out,) = model.q_max_pt(SPEC)(offsets, pt, lo, hi)
+        np.testing.assert_allclose(
+            np.asarray(out), ref.max_pt(offsets, pt, 0.0, 128.0)
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_eta_best(self, seed):
+        rng = np.random.default_rng(seed)
+        offsets, pt, eta, _ = make_partition(rng, SPEC)
+        eta = (eta % 4.8) - 2.4
+        lo, hi = scalars(-2.4, 2.4)
+        (out,) = model.q_eta_best(SPEC)(offsets, pt, eta, lo, hi)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            ref.eta_best(offsets, pt, eta, np.float32(-2.4), np.float32(2.4)),
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_ptsum_pairs(self, seed):
+        rng = np.random.default_rng(seed)
+        offsets, pt, _, _ = make_partition(rng, SPEC)
+        lo, hi = scalars(0.0, 256.0)
+        (out,) = model.q_ptsum_pairs(SPEC)(offsets, pt, lo, hi)
+        np.testing.assert_allclose(
+            np.asarray(out), ref.ptsum_pairs(offsets, pt, 0.0, 256.0)
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_mass_pairs(self, seed):
+        rng = np.random.default_rng(seed)
+        offsets, pt, eta, phi = make_partition(rng, SPEC)
+        eta = (eta % 4.8) - 2.4
+        phi = (phi % (2 * np.pi)) - np.pi
+        lo, hi = scalars(0.0, 200.0)
+        (out,) = model.q_mass_pairs(SPEC)(offsets, pt, eta, phi, lo, hi)
+        expect = ref.mass_pairs(offsets, pt, eta, phi, 0.0, 200.0)
+        out = np.asarray(out)
+        assert out.sum() == expect.sum()
+        assert np.abs(out - expect).sum() <= 4.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_flat_hist(self, seed):
+        rng = np.random.default_rng(seed)
+        offsets, pt, _, _ = make_partition(rng, SPEC)
+        lo, hi = scalars(0.0, 128.0)
+        (out,) = model.q_flat_hist(SPEC)(offsets, pt, lo, hi)
+        np.testing.assert_allclose(
+            np.asarray(out), ref.jetpt_hist(offsets, pt, 0.0, 128.0)
+        )
+
+    def test_empty_partition(self):
+        offsets = np.zeros(SPEC.n_offsets, dtype=np.int32)
+        pt = np.zeros(SPEC.content_cap, dtype=np.float32)
+        lo, hi = scalars(0.0, 64.0)
+        for q in [model.q_max_pt(SPEC), model.q_ptsum_pairs(SPEC),
+                  model.q_flat_hist(SPEC)]:
+            (out,) = q(offsets, pt, lo, hi)
+            assert np.asarray(out).sum() == 0.0
+
+
+class TestPadPartition:
+    def test_matches_reference(self):
+        rng = np.random.default_rng(3)
+        offsets, pt, _, _ = make_partition(rng, SPEC)
+        got_v, got_m = model.pad_partition(offsets, pt, SPEC.n_events, SPEC.k_max)
+        want_v, want_m = ref.pad_from_offsets(offsets, pt, SPEC.n_events, SPEC.k_max)
+        np.testing.assert_allclose(np.asarray(got_v), want_v)
+        np.testing.assert_array_equal(np.asarray(got_m), want_m)
+
+
+class TestAotLowering:
+    def test_all_queries_lower_to_hlo_text(self, tmp_path):
+        from compile import aot
+
+        spec = PartitionSpec(n_events=16, k_max=4, content_cap=128,
+                             block_events=8)
+        manifest = aot.export_all(str(tmp_path), spec)
+        assert set(manifest["queries"]) == set(model.QUERIES)
+        for q in manifest["queries"].values():
+            text = (tmp_path / q["file"]).read_text()
+            assert "HloModule" in text
+        assert (tmp_path / "manifest.json").exists()

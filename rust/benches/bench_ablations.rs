@@ -1,0 +1,67 @@
+//! Ablations of design choices called out in DESIGN.md:
+//!   * loop fusion (the paper's §3 special case) on the flat-fill query;
+//!   * transformed-program evaluator vs the fully compiled (hand-written)
+//!     endpoint — the interpretation overhead a JIT would remove;
+//!   * compression codec vs selective-read interaction in femto-ROOT.
+
+use hepq::datagen::{generate_drellyan, generate_ttbar};
+use hepq::engine::columnar_exec;
+use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
+use hepq::hist::H1;
+use hepq::queryir::{self, table3};
+use hepq::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let n_events: usize = std::env::var("HEPQ_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let mut b = Bench::new("ablations");
+    let n = n_events as f64;
+
+    // --- fusion ablation on the flat jet-pt fill -------------------------
+    let tt = generate_ttbar(n_events / 4, 6, 3);
+    let prog = queryir::compile(table3::JET_PT, &tt.schema).unwrap();
+    assert!(prog.fused.is_some());
+    let nt = (n_events / 4) as f64;
+    b.run("jet_pt transform, fused single loop", nt, || {
+        let mut h = H1::new(64, 0.0, 256.0);
+        queryir::flat::run(&prog, &tt, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("jet_pt transform, unfused event loop", nt, || {
+        let mut h = H1::new(64, 0.0, 256.0);
+        queryir::flat::run_unfused(&prog, &tt, &mut h).unwrap();
+        black_box(h.total());
+    });
+
+    // --- evaluator overhead vs compiled endpoint -------------------------
+    let dy = generate_drellyan(n_events, 4);
+    let mass_prog = queryir::compile(table3::MASS_PAIRS, &dy.schema).unwrap();
+    b.run("mass_pairs transformed evaluator", n, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::flat::run(&mass_prog, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("mass_pairs hand-written columnar", n, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        columnar_exec::run(hepq::engine::QueryKind::MassPairs, &dy, "muons", &mut h).unwrap();
+        black_box(h.total());
+    });
+
+    // --- codec ablation: read-back throughput ----------------------------
+    let dir = std::env::temp_dir().join("hepq-bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    for codec in [Codec::None, Codec::Zstd(3), Codec::Flate] {
+        let path = dir.join(format!("dy_abl_{}.froot", codec.name()));
+        let bytes = write_dataset(&path, &dy, WriteOptions { codec, basket_items: 256 * 1024 })
+            .unwrap();
+        b.run(&format!("selective read, codec {} ({} MiB file)", codec.name(), bytes >> 20), n, || {
+            let mut r = DatasetReader::open(&path).unwrap();
+            let data = r.read_selective(&["muons.pt"]).unwrap();
+            black_box(data.n_events);
+        });
+    }
+
+    b.finish();
+}

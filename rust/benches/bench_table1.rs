@@ -1,0 +1,119 @@
+//! Table 1 reproduction: the rate ladder for filling one histogram of jet
+//! pT on a tt̄-like sample with 95 jet branches.
+//!
+//! Paper (single-threaded, MHz of events):
+//!   0.018  full framework (CMSSW)
+//!   0.029  load all 95 jet branches in ROOT
+//!   2.8    load jet pT branch (and no others)
+//!   12     allocate C++ objects on heap, fill, delete
+//!   ~30    allocate on stack, fill
+//!   250    minimal "for" loop in memory
+//!
+//! We reproduce the six rungs on femto-ROOT + our engine. Absolute MHz are
+//! machine-dependent; the claim under test is the *shape*: ~4 orders of
+//! magnitude end to end, with the big cliffs at selective reading and at
+//! de-materialization.
+
+use hepq::datagen::generate_ttbar;
+use hepq::engine::{columnar_exec, object_baseline, Query, QueryKind};
+use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
+use hepq::hist::H1;
+use hepq::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let n_events: usize = std::env::var("HEPQ_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    eprintln!("table1: generating {n_events} tt̄ events with 95 jet branches...");
+    let cs = generate_ttbar(n_events, 95, 1);
+    let n = n_events as f64;
+    let total_jets = cs.leaf("jets.pt").unwrap().len();
+
+    let dir = std::env::temp_dir().join("hepq-bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ttbar_table1.froot");
+    write_dataset(&path, &cs, WriteOptions { codec: Codec::None, basket_items: 64 * 1024 })
+        .unwrap();
+
+    let q = Query::new(QueryKind::FlatHist, "tt", "jets");
+    let mut b = Bench::new("table1");
+
+    // Rung 1: full framework — all branches read, every event materialized
+    // as a generic object tree, module chain on top.
+    b.run("1 full framework (all branches + modules)", n, || {
+        let mut r = DatasetReader::open(&path).unwrap();
+        let data = r.read_full().unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        object_baseline::FrameworkSim::new()
+            .run(&data, "jets", q.kind, &mut h)
+            .unwrap();
+        black_box(h.total());
+    });
+
+    // Rung 2: load all 95 branches, then fill from arrays.
+    b.run("2 load all 95 jet branches + fill", n, || {
+        let mut r = DatasetReader::open(&path).unwrap();
+        let data = r.read_full().unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        columnar_exec::run(q.kind, &data, "jets", &mut h).unwrap();
+        black_box(h.total());
+    });
+
+    // Rung 3: load ONLY jets.pt, then fill.
+    b.run("3 load jet pt branch only + fill", n, || {
+        let mut r = DatasetReader::open(&path).unwrap();
+        let data = r.read_selective(&["jets.pt"]).unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        columnar_exec::run(q.kind, &data, "jets", &mut h).unwrap();
+        black_box(h.total());
+    });
+
+    // In-memory slim view for the materialization rungs.
+    let slim = cs.project(&["jets.pt", "jets.eta", "jets.phi"]);
+
+    // Rung 4: heap-object materialization + fill.
+    b.run("4 heap objects + fill", n, || {
+        let events = object_baseline::materialize_heap(&slim, "jets").unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        object_baseline::run_heap(q.kind, &events, &mut h);
+        black_box(h.total());
+    });
+
+    // Rung 5: stack-object materialization + fill.
+    b.run("5 stack objects + fill", n, || {
+        let events = object_baseline::materialize_stack(&slim, "jets").unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        object_baseline::run_stack(q.kind, &events, &mut h);
+        black_box(h.total());
+    });
+
+    // Rung 5b: columnar flat fill through H1 (arrays already in memory).
+    let pt = cs.leaf("jets.pt").unwrap().as_f32().unwrap().to_vec();
+    b.run("5b columnar fill (arrays in memory)", n, || {
+        let mut h = H1::new(64, q.lo, q.hi);
+        columnar_exec::flat_hist(&pt, &mut h);
+        black_box(h.total());
+    });
+
+    // Rung 6: the minimal for loop.
+    let mut bins = vec![0u64; 64];
+    b.run("6 minimal for loop in memory", n, || {
+        bins.iter_mut().for_each(|x| *x = 0);
+        columnar_exec::minimal_loop(&pt, 0.0, 256.0, &mut bins);
+        black_box(bins[0]);
+    });
+
+    b.finish();
+
+    // Shape assertions (soft: print, don't panic, but flag).
+    let r1 = b.get("1 full framework (all branches + modules)").unwrap().rate();
+    let r3 = b.get("3 load jet pt branch only + fill").unwrap().rate();
+    let r6 = b.get("6 minimal for loop in memory").unwrap().rate();
+    eprintln!(
+        "\nshape check: rung6/rung1 = {:.0}x (paper: ~14000x), rung3/rung1 = {:.0}x (paper: ~156x)",
+        r6 / r1,
+        r3 / r1
+    );
+    eprintln!("total jets histogrammed per pass: {total_jets}");
+}

@@ -1,0 +1,463 @@
+//! Exploded column storage: typed content arrays + offsets arrays.
+//!
+//! A `ColumnSet` is the in-memory form of a dataset partition: one `Array`
+//! per schema leaf ("branch") and one `Vec<i64>` of offsets per list level —
+//! the paper's Table-2 representation. Queries run directly on these arrays
+//! without ever materializing event objects.
+
+use super::schema::{PrimType, Ty};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Array {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Bool(Vec<u8>),
+}
+
+impl Array {
+    pub fn new(p: PrimType) -> Array {
+        match p {
+            PrimType::F32 => Array::F32(Vec::new()),
+            PrimType::F64 => Array::F64(Vec::new()),
+            PrimType::I32 => Array::I32(Vec::new()),
+            PrimType::I64 => Array::I64(Vec::new()),
+            PrimType::Bool => Array::Bool(Vec::new()),
+        }
+    }
+
+    pub fn prim(&self) -> PrimType {
+        match self {
+            Array::F32(_) => PrimType::F32,
+            Array::F64(_) => PrimType::F64,
+            Array::I32(_) => PrimType::I32,
+            Array::I64(_) => PrimType::I64,
+            Array::Bool(_) => PrimType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Array::F32(v) => v.len(),
+            Array::F64(v) => v.len(),
+            Array::I32(v) => v.len(),
+            Array::I64(v) => v.len(),
+            Array::Bool(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.prim().byte_width()
+    }
+
+    /// Element as f64 (lossless for all but huge i64) — used by interpreters.
+    #[inline]
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            Array::F32(v) => v[i] as f64,
+            Array::F64(v) => v[i],
+            Array::I32(v) => v[i] as f64,
+            Array::I64(v) => v[i] as f64,
+            Array::Bool(v) => v[i] as f64,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Array::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Array::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn push_f64(&mut self, x: f64) {
+        match self {
+            Array::F32(v) => v.push(x as f32),
+            Array::F64(v) => v.push(x),
+            Array::I32(v) => v.push(x as i32),
+            Array::I64(v) => v.push(x as i64),
+            Array::Bool(v) => v.push(if x != 0.0 { 1 } else { 0 }),
+        }
+    }
+
+    /// Raw little-endian bytes (for the file format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            Array::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Array::F64(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Array::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Array::I64(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Array::Bool(v) => v.clone(),
+        }
+    }
+
+    pub fn from_bytes(p: PrimType, bytes: &[u8]) -> Result<Array, String> {
+        let w = p.byte_width();
+        if bytes.len() % w != 0 {
+            return Err(format!(
+                "byte length {} not a multiple of width {w}",
+                bytes.len()
+            ));
+        }
+        let n = bytes.len() / w;
+        Ok(match p {
+            PrimType::F32 => Array::F32(
+                (0..n)
+                    .map(|i| f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap()))
+                    .collect(),
+            ),
+            PrimType::F64 => Array::F64(
+                (0..n)
+                    .map(|i| f64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap()))
+                    .collect(),
+            ),
+            PrimType::I32 => Array::I32(
+                (0..n)
+                    .map(|i| i32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap()))
+                    .collect(),
+            ),
+            PrimType::I64 => Array::I64(
+                (0..n)
+                    .map(|i| i64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap()))
+                    .collect(),
+            ),
+            PrimType::Bool => Array::Bool(bytes.to_vec()),
+        })
+    }
+
+    /// Slice [lo, hi) into a new Array (used by partitioning).
+    pub fn slice(&self, lo: usize, hi: usize) -> Array {
+        match self {
+            Array::F32(v) => Array::F32(v[lo..hi].to_vec()),
+            Array::F64(v) => Array::F64(v[lo..hi].to_vec()),
+            Array::I32(v) => Array::I32(v[lo..hi].to_vec()),
+            Array::I64(v) => Array::I64(v[lo..hi].to_vec()),
+            Array::Bool(v) => Array::Bool(v[lo..hi].to_vec()),
+        }
+    }
+}
+
+/// A set of exploded columns for `n_events` events.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnSet {
+    pub schema: Ty,
+    pub n_events: usize,
+    /// list path (layout key) → offsets array of length (#outer items + 1).
+    pub offsets: BTreeMap<String, Vec<i64>>,
+    /// leaf path → content array.
+    pub leaves: BTreeMap<String, Array>,
+}
+
+impl ColumnSet {
+    pub fn empty(schema: Ty) -> ColumnSet {
+        let layout = schema.layout();
+        let mut offsets = BTreeMap::new();
+        for l in &layout.lists {
+            offsets.insert(l.clone(), vec![0i64]);
+        }
+        let mut leaves = BTreeMap::new();
+        for (p, prim) in &layout.leaves {
+            leaves.insert(p.clone(), Array::new(*prim));
+        }
+        ColumnSet {
+            schema,
+            n_events: 0,
+            offsets,
+            leaves,
+        }
+    }
+
+    pub fn leaf(&self, path: &str) -> Option<&Array> {
+        self.leaves.get(path)
+    }
+
+    pub fn offsets_of(&self, list_path: &str) -> Option<&[i64]> {
+        self.offsets.get(list_path).map(|v| v.as_slice())
+    }
+
+    /// Total bytes across all arrays (cache accounting).
+    pub fn byte_size(&self) -> usize {
+        let leaf_bytes: usize = self.leaves.values().map(|a| a.byte_len()).sum();
+        let off_bytes: usize = self.offsets.values().map(|o| o.len() * 8).sum();
+        leaf_bytes + off_bytes
+    }
+
+    /// Check structural invariants: offsets monotone, starting at 0, and the
+    /// lengths of sibling leaf arrays under each list agree.
+    pub fn validate(&self) -> Result<(), String> {
+        let layout = self.schema.layout();
+        for key in &layout.lists {
+            let off = self
+                .offsets
+                .get(key)
+                .ok_or_else(|| format!("missing offsets '{key}'"))?;
+            if off.first() != Some(&0) {
+                return Err(format!("offsets '{key}' must start at 0"));
+            }
+            if off.windows(2).any(|w| w[1] < w[0]) {
+                return Err(format!("offsets '{key}' not monotone"));
+            }
+        }
+        // Every leaf under a list must have length == *offsets.last().
+        for (path, _) in &layout.leaves {
+            let arr = self
+                .leaves
+                .get(path)
+                .ok_or_else(|| format!("missing leaf '{path}'"))?;
+            match self.innermost_list_of(path, &layout) {
+                Some(list_key) => {
+                    let want = *self.offsets[&list_key].last().unwrap() as usize;
+                    if arr.len() != want {
+                        return Err(format!(
+                            "leaf '{path}' has {} items, offsets imply {want}",
+                            arr.len()
+                        ));
+                    }
+                }
+                None => {
+                    if arr.len() != self.n_events {
+                        return Err(format!(
+                            "event-level leaf '{path}' has {} items for {} events",
+                            arr.len(),
+                            self.n_events
+                        ));
+                    }
+                }
+            }
+        }
+        // The outermost offsets arrays must cover exactly n_events.
+        for key in &layout.lists {
+            if !key.contains("[]") && !key.contains('.') {
+                let off = &self.offsets[key];
+                if off.len() != self.n_events + 1 {
+                    return Err(format!(
+                        "offsets '{key}' length {} != n_events+1 {}",
+                        off.len(),
+                        self.n_events + 1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The innermost list key governing a leaf path, if any.
+    fn innermost_list_of(&self, leaf: &str, layout: &super::schema::Layout) -> Option<String> {
+        let mut best: Option<&str> = None;
+        for key in &layout.lists {
+            let base = key.trim_end_matches("[]");
+            if leaf == base || leaf.starts_with(&format!("{base}.")) {
+                match best {
+                    Some(b) if key.len() <= b.len() => {}
+                    _ => best = Some(key),
+                }
+            }
+        }
+        best.map(|s| s.to_string())
+    }
+
+    /// Split into event-range slices of at most `events_per_part` events.
+    /// Only supports schemas whose lists are event-level (depth 1), which is
+    /// true for all the physics schemas in this repo.
+    pub fn partition(&self, events_per_part: usize) -> Vec<ColumnSet> {
+        assert!(events_per_part > 0);
+        let layout = self.schema.layout();
+        let mut parts = Vec::new();
+        let mut ev = 0usize;
+        while ev < self.n_events {
+            let hi = (ev + events_per_part).min(self.n_events);
+            let mut offsets = BTreeMap::new();
+            for key in &layout.lists {
+                let off = &self.offsets[key];
+                let base = off[ev];
+                let sliced: Vec<i64> = off[ev..=hi].iter().map(|o| o - base).collect();
+                offsets.insert(key.clone(), sliced);
+            }
+            let mut leaves = BTreeMap::new();
+            for (path, _) in &layout.leaves {
+                let arr = &self.leaves[path];
+                match self.innermost_list_of(path, &layout) {
+                    Some(key) => {
+                        let off = &self.offsets[&key];
+                        let lo = off[ev] as usize;
+                        let hi_c = off[hi] as usize;
+                        leaves.insert(path.clone(), arr.slice(lo, hi_c));
+                    }
+                    None => {
+                        leaves.insert(path.clone(), arr.slice(ev, hi));
+                    }
+                }
+            }
+            parts.push(ColumnSet {
+                schema: self.schema.clone(),
+                n_events: hi - ev,
+                offsets,
+                leaves,
+            });
+            ev = hi;
+        }
+        parts
+    }
+
+    /// Keep only the named leaves (and the offsets they need) — the "slim
+    /// dataset" operation of Figure 1.
+    pub fn project(&self, keep_leaves: &[&str]) -> ColumnSet {
+        let layout = self.schema.layout();
+        let keep: Vec<String> = keep_leaves.iter().map(|s| s.to_string()).collect();
+        let schema = project_schema(&self.schema, "", &keep);
+        let mut leaves = BTreeMap::new();
+        for (path, _) in &layout.leaves {
+            if keep.contains(path) {
+                leaves.insert(path.clone(), self.leaves[path].clone());
+            }
+        }
+        let new_layout = schema.layout();
+        let mut offsets = BTreeMap::new();
+        for key in &new_layout.lists {
+            offsets.insert(key.clone(), self.offsets[key].clone());
+        }
+        ColumnSet {
+            schema,
+            n_events: self.n_events,
+            offsets,
+            leaves,
+        }
+    }
+}
+
+fn project_schema(ty: &Ty, prefix: &str, keep: &[String]) -> Ty {
+    match ty {
+        Ty::Prim(p) => Ty::Prim(*p),
+        Ty::List(inner) => Ty::List(Box::new(project_schema(inner, prefix, keep))),
+        Ty::Record(fields) => Ty::Record(
+            fields
+                .iter()
+                .filter_map(|f| {
+                    let child = if prefix.is_empty() {
+                        f.name.clone()
+                    } else {
+                        format!("{prefix}.{}", f.name)
+                    };
+                    let keeps_under =
+                        keep.iter().any(|k| *k == child || k.starts_with(&format!("{child}.")));
+                    if keeps_under {
+                        Some(super::schema::Field {
+                            name: f.name.clone(),
+                            ty: project_schema(&f.ty, &child, keep),
+                        })
+                    } else {
+                        None
+                    }
+                })
+                .collect(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::schema::muon_event_schema;
+
+    fn tiny() -> ColumnSet {
+        // 3 events with 2, 0, 1 muons.
+        let schema = muon_event_schema();
+        let mut cs = ColumnSet::empty(schema);
+        cs.n_events = 3;
+        cs.offsets.insert("muons".into(), vec![0, 2, 2, 3]);
+        cs.leaves
+            .insert("muons.pt".into(), Array::F32(vec![50.0, 30.0, 22.0]));
+        cs.leaves
+            .insert("muons.eta".into(), Array::F32(vec![0.1, -1.2, 2.0]));
+        cs.leaves
+            .insert("muons.phi".into(), Array::F32(vec![0.0, 1.0, 2.0]));
+        cs.leaves
+            .insert("muons.charge".into(), Array::I32(vec![1, -1, 1]));
+        cs.leaves
+            .insert("met".into(), Array::F32(vec![12.0, 8.0, 40.0]));
+        cs
+    }
+
+    #[test]
+    fn validate_ok() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_length_mismatch() {
+        let mut cs = tiny();
+        cs.leaves
+            .insert("muons.pt".into(), Array::F32(vec![1.0]));
+        assert!(cs.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_offsets() {
+        let mut cs = tiny();
+        cs.offsets.insert("muons".into(), vec![0, 3, 2, 3]);
+        assert!(cs.validate().is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        for arr in [
+            Array::F32(vec![1.5, -2.25]),
+            Array::F64(vec![1.5e300, -1.0]),
+            Array::I32(vec![i32::MIN, 7]),
+            Array::I64(vec![i64::MAX, -9]),
+            Array::Bool(vec![0, 1, 1]),
+        ] {
+            let b = arr.to_bytes();
+            assert_eq!(Array::from_bytes(arr.prim(), &b).unwrap(), arr);
+        }
+    }
+
+    #[test]
+    fn partition_preserves_content() {
+        let cs = tiny();
+        let parts = cs.partition(2);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].n_events, 2);
+        assert_eq!(parts[1].n_events, 1);
+        parts[0].validate().unwrap();
+        parts[1].validate().unwrap();
+        assert_eq!(parts[0].offsets_of("muons").unwrap(), &[0, 2, 2]);
+        assert_eq!(parts[1].offsets_of("muons").unwrap(), &[0, 1]);
+        assert_eq!(
+            parts[1].leaf("muons.pt").unwrap().as_f32().unwrap(),
+            &[22.0]
+        );
+        assert_eq!(parts[1].leaf("met").unwrap().as_f32().unwrap(), &[40.0]);
+    }
+
+    #[test]
+    fn project_slims_dataset() {
+        let cs = tiny();
+        let slim = cs.project(&["muons.pt"]);
+        slim.validate().unwrap();
+        assert!(slim.leaf("muons.pt").is_some());
+        assert!(slim.leaf("muons.eta").is_none());
+        assert!(slim.leaf("met").is_none());
+        assert_eq!(slim.offsets_of("muons").unwrap(), cs.offsets_of("muons").unwrap());
+        assert!(slim.byte_size() < cs.byte_size());
+    }
+
+    #[test]
+    fn get_f64_across_types() {
+        let cs = tiny();
+        assert_eq!(cs.leaf("muons.charge").unwrap().get_f64(1), -1.0);
+        assert_eq!(cs.leaf("met").unwrap().get_f64(2), 40.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Object ⇄ exploded-array conversion ("splitting" / GetEntry).
+//!
+//! `explode` turns a vector of event objects into the flat arrays of
+//! Table 2; `materialize` is the inverse — the expensive object
+//! materialization step that the paper's query path *avoids* and which our
+//! baselines (`engine::object_baseline`) deliberately perform.
+
+use super::arrays::{Array, ColumnSet};
+use super::schema::Ty;
+
+/// A dynamically-typed event object (the "physicist's view").
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F64(f64),
+    I64(i64),
+    Bool(bool),
+    List(Vec<Value>),
+    Rec(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn rec(fields: Vec<(&str, Value)>) -> Value {
+        Value::Rec(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        match self {
+            Value::Rec(fs) => fs.iter().find(|(k, _)| k == name).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(x) => Some(*x),
+            Value::I64(x) => Some(*x as f64),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Explode event objects into columnar arrays according to `schema`.
+pub fn explode(schema: &Ty, events: &[Value]) -> Result<ColumnSet, String> {
+    let mut cs = ColumnSet::empty(schema.clone());
+    cs.n_events = events.len();
+    for ev in events {
+        push_value(schema, ev, "", 0, &mut cs)?;
+    }
+    cs.validate()?;
+    Ok(cs)
+}
+
+fn push_value(
+    ty: &Ty,
+    v: &Value,
+    prefix: &str,
+    list_depth: usize,
+    cs: &mut ColumnSet,
+) -> Result<(), String> {
+    match (ty, v) {
+        (Ty::Prim(_), v) => {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| format!("expected primitive at '{prefix}', got {v:?}"))?;
+            cs.leaves
+                .get_mut(prefix)
+                .ok_or_else(|| format!("no leaf '{prefix}'"))?
+                .push_f64(x);
+            Ok(())
+        }
+        (Ty::List(inner), Value::List(items)) => {
+            let key = if list_depth == 0 {
+                prefix.to_string()
+            } else {
+                format!("{prefix}{}", "[]".repeat(list_depth))
+            };
+            for item in items {
+                push_value(inner, item, prefix, list_depth + 1, cs)?;
+            }
+            let off = cs
+                .offsets
+                .get_mut(&key)
+                .ok_or_else(|| format!("no offsets '{key}'"))?;
+            let last = *off.last().unwrap();
+            off.push(last + items.len() as i64);
+            Ok(())
+        }
+        (Ty::Record(fields), Value::Rec(_)) => {
+            for f in fields {
+                let child = if prefix.is_empty() {
+                    f.name.clone()
+                } else {
+                    format!("{prefix}.{}", f.name)
+                };
+                let fv = v
+                    .get(&f.name)
+                    .ok_or_else(|| format!("missing field '{}' at '{prefix}'", f.name))?;
+                push_value(&f.ty, fv, &child, 0, cs)?;
+            }
+            Ok(())
+        }
+        (t, v) => Err(format!("type mismatch at '{prefix}': {t} vs {v:?}")),
+    }
+}
+
+/// Materialize event `i` from the exploded arrays (inverse of `explode`).
+pub fn materialize(cs: &ColumnSet, i: usize) -> Result<Value, String> {
+    let mut cursor = Cursors::at_event(cs, i)?;
+    read_value(&cs.schema, "", 0, cs, &mut cursor)
+}
+
+/// Materialize every event.
+pub fn materialize_all(cs: &ColumnSet) -> Result<Vec<Value>, String> {
+    (0..cs.n_events).map(|i| materialize(cs, i)).collect()
+}
+
+/// Per-array read positions during materialization. For event `i`, leaf and
+/// offsets cursors start at the positions implied by the outer offsets.
+struct Cursors {
+    /// For event-level access: the event index.
+    event: usize,
+}
+
+impl Cursors {
+    fn at_event(_cs: &ColumnSet, i: usize) -> Result<Cursors, String> {
+        Ok(Cursors { event: i })
+    }
+}
+
+fn read_value(
+    ty: &Ty,
+    prefix: &str,
+    list_depth: usize,
+    cs: &ColumnSet,
+    cur: &mut Cursors,
+) -> Result<Value, String> {
+    read_at(ty, prefix, list_depth, cs, cur.event as i64)
+}
+
+/// Read the value of `ty` at logical index `idx` within its container level.
+fn read_at(ty: &Ty, prefix: &str, list_depth: usize, cs: &ColumnSet, idx: i64) -> Result<Value, String> {
+    match ty {
+        Ty::Prim(_) => {
+            let arr = cs
+                .leaf(prefix)
+                .ok_or_else(|| format!("no leaf '{prefix}'"))?;
+            let x = arr.get_f64(idx as usize);
+            Ok(match arr {
+                Array::I32(_) | Array::I64(_) => Value::I64(x as i64),
+                Array::Bool(_) => Value::Bool(x != 0.0),
+                _ => Value::F64(x),
+            })
+        }
+        Ty::List(inner) => {
+            let key = if list_depth == 0 {
+                prefix.to_string()
+            } else {
+                format!("{prefix}{}", "[]".repeat(list_depth))
+            };
+            let off = cs
+                .offsets_of(&key)
+                .ok_or_else(|| format!("no offsets '{key}'"))?;
+            let lo = off[idx as usize];
+            let hi = off[idx as usize + 1];
+            let mut items = Vec::with_capacity((hi - lo) as usize);
+            for j in lo..hi {
+                items.push(read_at(inner, prefix, list_depth + 1, cs, j)?);
+            }
+            Ok(Value::List(items))
+        }
+        Ty::Record(fields) => {
+            let mut out = Vec::with_capacity(fields.len());
+            for f in fields {
+                let child = if prefix.is_empty() {
+                    f.name.clone()
+                } else {
+                    format!("{prefix}.{}", f.name)
+                };
+                out.push((f.name.clone(), read_at(&f.ty, &child, 0, cs, idx)?));
+            }
+            Ok(Value::Rec(out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::schema::{muon_event_schema, PrimType};
+
+    /// The paper's Table 2: `[[(a,1),(b,2),(c,3)],[],[(d,4)]]` and
+    /// `[[(e,5),(f,6)]]` as a dataset of two outer values, encoded as four
+    /// flat arrays.
+    #[test]
+    fn table2_exact_encoding() {
+        let schema = Ty::record(vec![(
+            "outer",
+            Ty::list(Ty::list(Ty::record(vec![
+                ("first", Ty::Prim(PrimType::I64)),
+                ("second", Ty::Prim(PrimType::I64)),
+            ]))),
+        )]);
+        let ch = |c: char| Value::I64(c as i64);
+        let pair = |c: char, n: i64| {
+            Value::rec(vec![("first", ch(c)), ("second", Value::I64(n))])
+        };
+        let ev1 = Value::rec(vec![(
+            "outer",
+            Value::List(vec![
+                Value::List(vec![pair('a', 1), pair('b', 2), pair('c', 3)]),
+                Value::List(vec![]),
+                Value::List(vec![pair('d', 4)]),
+            ]),
+        )]);
+        let ev2 = Value::rec(vec![(
+            "outer",
+            Value::List(vec![Value::List(vec![pair('e', 5), pair('f', 6)])]),
+        )]);
+        let cs = explode(&schema, &[ev1.clone(), ev2.clone()]).unwrap();
+
+        // Outer offsets: event boundaries in units of inner lists.
+        assert_eq!(cs.offsets_of("outer").unwrap(), &[0, 3, 4]);
+        // Inner offsets: inner-list boundaries in units of pairs.
+        assert_eq!(cs.offsets_of("outer[]").unwrap(), &[0, 3, 3, 4, 6]);
+        // Attribute arrays, flat.
+        let first: Vec<i64> = match cs.leaf("outer.first").unwrap() {
+            Array::I64(v) => v.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(
+            first,
+            vec!['a' as i64, 'b' as i64, 'c' as i64, 'd' as i64, 'e' as i64, 'f' as i64]
+        );
+        let second: Vec<i64> = match cs.leaf("outer.second").unwrap() {
+            Array::I64(v) => v.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(second, vec![1, 2, 3, 4, 5, 6]);
+
+        // Round-trip.
+        assert_eq!(materialize(&cs, 0).unwrap(), ev1);
+        assert_eq!(materialize(&cs, 1).unwrap(), ev2);
+    }
+
+    #[test]
+    fn muon_roundtrip() {
+        let schema = muon_event_schema();
+        let mu = |pt: f64, eta: f64, phi: f64, q: i64| {
+            Value::rec(vec![
+                ("pt", Value::F64(pt)),
+                ("eta", Value::F64(eta)),
+                ("phi", Value::F64(phi)),
+                ("charge", Value::I64(q)),
+            ])
+        };
+        let events = vec![
+            Value::rec(vec![
+                ("muons", Value::List(vec![mu(50.0, 0.5, 1.0, 1), mu(30.0, -1.0, 2.0, -1)])),
+                ("met", Value::F64(15.0)),
+            ]),
+            Value::rec(vec![("muons", Value::List(vec![])), ("met", Value::F64(3.0))]),
+        ];
+        let cs = explode(&schema, &events).unwrap();
+        assert_eq!(cs.n_events, 2);
+        assert_eq!(cs.offsets_of("muons").unwrap(), &[0, 2, 2]);
+        // f32 storage truncation is fine for these values.
+        let back = materialize_all(&cs).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back[0].get("muons").unwrap().as_list().unwrap().len(),
+            2
+        );
+        assert_eq!(back[1].get("met").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            back[0].get("muons").unwrap().as_list().unwrap()[0]
+                .get("pt")
+                .unwrap()
+                .as_f64(),
+            Some(50.0)
+        );
+    }
+
+    #[test]
+    fn explode_rejects_schema_mismatch() {
+        let schema = muon_event_schema();
+        let bad = Value::rec(vec![("muons", Value::F64(1.0)), ("met", Value::F64(0.0))]);
+        assert!(explode(&schema, &[bad]).is_err());
+    }
+
+    #[test]
+    fn explode_rejects_missing_field() {
+        let schema = muon_event_schema();
+        let bad = Value::rec(vec![("muons", Value::List(vec![]))]);
+        assert!(explode(&schema, &[bad]).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Exploded (columnar) data model for hierarchically nested event data —
+//! the paper's Table-2 representation: one content array per attribute and
+//! one offsets array per list level.
+
+pub mod arrays;
+pub mod explode;
+pub mod schema;
+
+pub use arrays::{Array, ColumnSet};
+pub use explode::{explode, materialize, materialize_all, Value};
+pub use schema::{muon_event_schema, jet_event_schema, Field, Layout, PrimType, Ty};

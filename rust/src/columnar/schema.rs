@@ -1,0 +1,332 @@
+//! Dataset schema: the logical, object-oriented type of an event, which the
+//! columnar layer "explodes" (ROOT: "splits") into flat arrays.
+//!
+//! A schema is a tree of primitives, variable-length lists, and records.
+//! Every *leaf* primitive corresponds to one content array (a "branch"), and
+//! every *list* node corresponds to one offsets array — exactly the encoding
+//! of Table 2 in the paper.
+
+use crate::util::json::Json;
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrimType {
+    F32,
+    F64,
+    I32,
+    I64,
+    Bool,
+}
+
+impl PrimType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrimType::F32 => "f32",
+            PrimType::F64 => "f64",
+            PrimType::I32 => "i32",
+            PrimType::I64 => "i64",
+            PrimType::Bool => "bool",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PrimType> {
+        Some(match s {
+            "f32" => PrimType::F32,
+            "f64" => PrimType::F64,
+            "i32" => PrimType::I32,
+            "i64" => PrimType::I64,
+            "bool" => PrimType::Bool,
+            _ => return None,
+        })
+    }
+
+    pub fn byte_width(&self) -> usize {
+        match self {
+            PrimType::F32 | PrimType::I32 => 4,
+            PrimType::F64 | PrimType::I64 => 8,
+            PrimType::Bool => 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub ty: Ty,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Ty {
+    Prim(PrimType),
+    List(Box<Ty>),
+    Record(Vec<Field>),
+}
+
+impl Ty {
+    pub fn record(fields: Vec<(&str, Ty)>) -> Ty {
+        Ty::Record(
+            fields
+                .into_iter()
+                .map(|(n, t)| Field {
+                    name: n.to_string(),
+                    ty: t,
+                })
+                .collect(),
+        )
+    }
+
+    pub fn list(inner: Ty) -> Ty {
+        Ty::List(Box::new(inner))
+    }
+
+    pub fn field(&self, name: &str) -> Option<&Ty> {
+        match self {
+            Ty::Record(fs) => fs.iter().find(|f| f.name == name).map(|f| &f.ty),
+            _ => None,
+        }
+    }
+
+    /// Resolve a dotted path (records only; lists are transparent —
+    /// `muons.pt` names the pt leaf *under* the muons list).
+    pub fn resolve(&self, dotted: &str) -> Option<&Ty> {
+        let mut cur = self.skip_lists();
+        for part in dotted.split('.') {
+            cur = cur.field(part)?.skip_lists_shallow();
+        }
+        Some(cur)
+    }
+
+    fn skip_lists(&self) -> &Ty {
+        match self {
+            Ty::List(inner) => inner.skip_lists(),
+            t => t,
+        }
+    }
+
+    fn skip_lists_shallow(&self) -> &Ty {
+        // For path resolution we look *through* a single list layer so that
+        // "muons.pt" works, but keep the leaf type itself.
+        match self {
+            Ty::List(inner) => inner.skip_lists(),
+            t => t,
+        }
+    }
+
+    /// Enumerate (leaf_path, PrimType) for all content arrays, and
+    /// (list_path,) for all offsets arrays, in schema order. Nested lists at
+    /// the same record path get `[]` suffixes per extra depth, so every
+    /// offsets array has a unique key (`hits`, `hits[]`, ...).
+    pub fn layout(&self) -> Layout {
+        let mut layout = Layout::default();
+        walk(self, String::new(), 0, &mut layout);
+        layout
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Ty::Prim(p) => Json::str(p.name()),
+            Ty::List(inner) => Json::obj(vec![("list", inner.to_json())]),
+            Ty::Record(fields) => Json::obj(vec![(
+                "record",
+                Json::Arr(
+                    fields
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("name", Json::str(f.name.clone())),
+                                ("type", f.ty.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Ty, String> {
+        match j {
+            Json::Str(s) => PrimType::from_name(s)
+                .map(Ty::Prim)
+                .ok_or_else(|| format!("unknown primitive '{s}'")),
+            Json::Obj(_) => {
+                if let Some(inner) = j.get("list") {
+                    Ok(Ty::List(Box::new(Ty::from_json(inner)?)))
+                } else if let Some(fields) = j.get("record") {
+                    let arr = fields.as_arr().ok_or("record must be an array")?;
+                    let mut fs = Vec::with_capacity(arr.len());
+                    for f in arr {
+                        let name = f
+                            .get("name")
+                            .and_then(|n| n.as_str())
+                            .ok_or("field needs a name")?
+                            .to_string();
+                        let ty = Ty::from_json(f.get("type").ok_or("field needs a type")?)?;
+                        fs.push(Field { name, ty });
+                    }
+                    Ok(Ty::Record(fs))
+                } else {
+                    Err("object must have 'list' or 'record'".into())
+                }
+            }
+            _ => Err("bad schema json".into()),
+        }
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Ty::Prim(p) => write!(f, "{}", p.name()),
+            Ty::List(inner) => write!(f, "[{inner}]"),
+            Ty::Record(fields) => {
+                write!(f, "{{")?;
+                for (i, fd) in fields.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{}: {}", fd.name, fd.ty)?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+/// The physical layout implied by a schema.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Layout {
+    /// Paths of offsets arrays, outermost first (e.g. `["muons"]`, or for
+    /// list-of-list `["hits", "hits.samples"]`).
+    pub lists: Vec<String>,
+    /// (path, prim) of every content array, e.g. `("muons.pt", F32)`.
+    pub leaves: Vec<(String, PrimType)>,
+}
+
+fn walk(ty: &Ty, prefix: String, list_depth: usize, out: &mut Layout) {
+    match ty {
+        Ty::Prim(p) => out.leaves.push((prefix, *p)),
+        Ty::List(inner) => {
+            let key = if list_depth == 0 {
+                prefix.clone()
+            } else {
+                format!("{prefix}{}", "[]".repeat(list_depth))
+            };
+            out.lists.push(key);
+            walk(inner, prefix, list_depth + 1, out);
+        }
+        Ty::Record(fields) => {
+            for f in fields {
+                let child = if prefix.is_empty() {
+                    f.name.clone()
+                } else {
+                    format!("{prefix}.{}", f.name)
+                };
+                walk(&f.ty, child, 0, out);
+            }
+        }
+    }
+}
+
+/// The standard muon-event schema used across examples/tests: a Drell-Yan
+/// style event with a variable-length list of muons and event-level MET.
+pub fn muon_event_schema() -> Ty {
+    Ty::record(vec![
+        (
+            "muons",
+            Ty::list(Ty::record(vec![
+                ("pt", Ty::Prim(PrimType::F32)),
+                ("eta", Ty::Prim(PrimType::F32)),
+                ("phi", Ty::Prim(PrimType::F32)),
+                ("charge", Ty::Prim(PrimType::I32)),
+            ])),
+        ),
+        ("met", Ty::Prim(PrimType::F32)),
+    ])
+}
+
+/// Jet-rich schema for the Table-1 experiment: `n_attrs` attributes per jet
+/// (the paper's tt̄ sample has 95 jet branches).
+pub fn jet_event_schema(n_attrs: usize) -> Ty {
+    let mut fields: Vec<(String, Ty)> = vec![
+        ("pt".to_string(), Ty::Prim(PrimType::F32)),
+        ("eta".to_string(), Ty::Prim(PrimType::F32)),
+        ("phi".to_string(), Ty::Prim(PrimType::F32)),
+        ("mass".to_string(), Ty::Prim(PrimType::F32)),
+    ];
+    for i in fields.len()..n_attrs {
+        fields.push((format!("attr{i:02}"), Ty::Prim(PrimType::F32)));
+    }
+    Ty::Record(vec![Field {
+        name: "jets".to_string(),
+        ty: Ty::List(Box::new(Ty::Record(
+            fields
+                .into_iter()
+                .map(|(name, ty)| Field { name, ty })
+                .collect(),
+        ))),
+    }])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_of_muon_schema() {
+        let l = muon_event_schema().layout();
+        assert_eq!(l.lists, vec!["muons"]);
+        assert_eq!(
+            l.leaves
+                .iter()
+                .map(|(p, _)| p.as_str())
+                .collect::<Vec<_>>(),
+            vec!["muons.pt", "muons.eta", "muons.phi", "muons.charge", "met"]
+        );
+        assert_eq!(l.leaves[3].1, PrimType::I32);
+    }
+
+    #[test]
+    fn layout_of_nested_lists() {
+        // Table 2's list-of-lists-of-pairs.
+        let ty = Ty::record(vec![(
+            "outer",
+            Ty::list(Ty::list(Ty::record(vec![
+                ("first", Ty::Prim(PrimType::I64)),
+                ("second", Ty::Prim(PrimType::I64)),
+            ]))),
+        )]);
+        let l = ty.layout();
+        assert_eq!(l.lists, vec!["outer", "outer[]"]); // two list levels, unique keys
+        assert_eq!(l.leaves.len(), 2);
+    }
+
+    #[test]
+    fn schema_json_roundtrip() {
+        for ty in [muon_event_schema(), jet_event_schema(95)] {
+            let j = ty.to_json();
+            let back = Ty::from_json(&j).unwrap();
+            assert_eq!(back, ty);
+        }
+    }
+
+    #[test]
+    fn resolve_paths() {
+        let s = muon_event_schema();
+        assert_eq!(s.resolve("muons.pt"), Some(&Ty::Prim(PrimType::F32)));
+        assert_eq!(s.resolve("met"), Some(&Ty::Prim(PrimType::F32)));
+        assert!(s.resolve("nope").is_none());
+    }
+
+    #[test]
+    fn jet_schema_has_95_branches() {
+        let l = jet_event_schema(95).layout();
+        assert_eq!(l.leaves.len(), 95);
+        assert_eq!(l.lists, vec!["jets"]);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let s = muon_event_schema().to_string();
+        assert!(s.contains("muons: [{pt: f32"));
+    }
+}

@@ -1,0 +1,273 @@
+//! femto-zookeeper: the shared subtask board of Figure 2.
+//!
+//! The paper uses Zookeeper to "advertise new subtasks and globally mark
+//! them as in progress and delete them when done". This module provides the
+//! same semantics in-process: atomic advertise / claim-once / complete /
+//! delete, plus *ephemeral* claims — a claim carries a deadline, and an
+//! expired claim makes the subtask claimable again (the Zookeeper ephemeral
+//! znode that vanishes when a worker dies), which is what bounds straggler
+//! damage.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One unit of work: run one query over one partition of one dataset.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SubtaskId {
+    pub query_id: u64,
+    pub partition: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Subtask {
+    pub id: SubtaskId,
+    pub dataset: String,
+    /// For push schedulers: the worker this subtask is assigned to
+    /// (None = any worker may pull it).
+    pub assigned_to: Option<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum State {
+    Open,
+    Claimed { worker: usize, deadline: Instant },
+    Done,
+}
+
+struct Entry {
+    task: Subtask,
+    state: State,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<SubtaskId, Entry>,
+    /// Insertion order for fair scanning.
+    order: Vec<SubtaskId>,
+}
+
+/// The board. All operations are linearizable (single mutex — the paper's
+/// Zookeeper quorum, minus the network).
+pub struct TaskBoard {
+    inner: Mutex<Inner>,
+    claim_ttl: Duration,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BoardStats {
+    pub open: usize,
+    pub claimed: usize,
+    pub done: usize,
+}
+
+impl TaskBoard {
+    pub fn new(claim_ttl: Duration) -> TaskBoard {
+        TaskBoard {
+            inner: Mutex::new(Inner::default()),
+            claim_ttl,
+        }
+    }
+
+    /// Advertise a batch of subtasks.
+    pub fn advertise(&self, tasks: Vec<Subtask>) {
+        let mut g = self.inner.lock().unwrap();
+        for t in tasks {
+            g.order.push(t.id.clone());
+            g.entries.insert(
+                t.id.clone(),
+                Entry {
+                    task: t,
+                    state: State::Open,
+                },
+            );
+        }
+    }
+
+    /// Claim the first open subtask accepted by `pref`. Expired claims are
+    /// re-opened during the scan. Returns the claimed subtask.
+    pub fn claim<F>(&self, worker: usize, mut pref: F) -> Option<Subtask>
+    where
+        F: FnMut(&Subtask) -> bool,
+    {
+        let now = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        let g = &mut *g;
+        for id in &g.order {
+            let entry = g.entries.get_mut(id).unwrap();
+            // Ephemeral-claim expiry (dead/straggling worker).
+            if let State::Claimed { deadline, .. } = entry.state {
+                if now > deadline {
+                    entry.state = State::Open;
+                }
+            }
+            if entry.state == State::Open && pref(&entry.task) {
+                entry.state = State::Claimed {
+                    worker,
+                    deadline: now + self.claim_ttl,
+                };
+                return Some(entry.task.clone());
+            }
+        }
+        None
+    }
+
+    /// Mark a subtask done (idempotent; late duplicate completions from a
+    /// reclaimed straggler are ignored by the aggregator via doc versioning).
+    pub fn complete(&self, id: &SubtaskId) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(id) {
+            e.state = State::Done;
+        }
+    }
+
+    /// Renew a claim (long-running subtask heartbeat).
+    pub fn heartbeat(&self, id: &SubtaskId, worker: usize) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(id) {
+            if let State::Claimed { worker: w, .. } = e.state {
+                if w == worker {
+                    e.state = State::Claimed {
+                        worker,
+                        deadline: Instant::now() + self.claim_ttl,
+                    };
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    pub fn stats(&self) -> BoardStats {
+        let now = Instant::now();
+        let g = self.inner.lock().unwrap();
+        let mut s = BoardStats::default();
+        for e in g.entries.values() {
+            match e.state {
+                State::Open => s.open += 1,
+                State::Claimed { deadline, .. } if now > deadline => s.open += 1,
+                State::Claimed { .. } => s.claimed += 1,
+                State::Done => s.done += 1,
+            }
+        }
+        s
+    }
+
+    /// All work finished?
+    pub fn all_done(&self, query_id: u64) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.entries
+            .values()
+            .filter(|e| e.task.id.query_id == query_id)
+            .all(|e| e.state == State::Done)
+    }
+
+    /// Drop a query's subtasks (cancellation).
+    pub fn cancel(&self, query_id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.order.retain(|id| id.query_id != query_id);
+        g.entries.retain(|id, _| id.query_id != query_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(q: u64, p: usize, ds: &str) -> Subtask {
+        Subtask {
+            id: SubtaskId { query_id: q, partition: p },
+            dataset: ds.to_string(),
+            assigned_to: None,
+        }
+    }
+
+    #[test]
+    fn claim_once_semantics() {
+        let b = TaskBoard::new(Duration::from_secs(60));
+        b.advertise(vec![task(1, 0, "dy"), task(1, 1, "dy")]);
+        let t0 = b.claim(0, |_| true).unwrap();
+        let t1 = b.claim(1, |_| true).unwrap();
+        assert_ne!(t0.id, t1.id);
+        assert!(b.claim(2, |_| true).is_none());
+    }
+
+    #[test]
+    fn preference_filter() {
+        let b = TaskBoard::new(Duration::from_secs(60));
+        b.advertise(vec![task(1, 0, "dy"), task(1, 1, "tt")]);
+        let t = b.claim(0, |t| t.dataset == "tt").unwrap();
+        assert_eq!(t.dataset, "tt");
+    }
+
+    #[test]
+    fn expired_claims_reopen() {
+        let b = TaskBoard::new(Duration::from_millis(10));
+        b.advertise(vec![task(1, 0, "dy")]);
+        let _ = b.claim(0, |_| true).unwrap();
+        assert!(b.claim(1, |_| true).is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        // The straggler's claim expired; another worker picks it up.
+        assert!(b.claim(1, |_| true).is_some());
+    }
+
+    #[test]
+    fn heartbeat_extends_claim() {
+        let b = TaskBoard::new(Duration::from_millis(40));
+        b.advertise(vec![task(1, 0, "dy")]);
+        let t = b.claim(0, |_| true).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.heartbeat(&t.id, 0));
+        std::thread::sleep(Duration::from_millis(25));
+        // Still claimed because of the heartbeat.
+        assert!(b.claim(1, |_| true).is_none());
+    }
+
+    #[test]
+    fn completion_and_all_done() {
+        let b = TaskBoard::new(Duration::from_secs(60));
+        b.advertise(vec![task(7, 0, "dy"), task(7, 1, "dy")]);
+        let t0 = b.claim(0, |_| true).unwrap();
+        b.complete(&t0.id);
+        assert!(!b.all_done(7));
+        let t1 = b.claim(0, |_| true).unwrap();
+        b.complete(&t1.id);
+        assert!(b.all_done(7));
+        assert_eq!(b.stats().done, 2);
+    }
+
+    #[test]
+    fn cancel_removes_query() {
+        let b = TaskBoard::new(Duration::from_secs(60));
+        b.advertise(vec![task(1, 0, "dy"), task(2, 0, "dy")]);
+        b.cancel(1);
+        let t = b.claim(0, |_| true).unwrap();
+        assert_eq!(t.id.query_id, 2);
+        assert!(b.claim(0, |_| true).is_none());
+    }
+
+    #[test]
+    fn concurrent_claims_do_not_duplicate() {
+        use std::sync::Arc;
+        let b = Arc::new(TaskBoard::new(Duration::from_secs(60)));
+        let n = 200;
+        b.advertise((0..n).map(|p| task(1, p, "dy")).collect());
+        let mut handles = Vec::new();
+        let claimed = Arc::new(Mutex::new(Vec::new()));
+        for w in 0..8 {
+            let b = b.clone();
+            let claimed = claimed.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(t) = b.claim(w, |_| true) {
+                    claimed.lock().unwrap().push(t.id.partition);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = claimed.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+}

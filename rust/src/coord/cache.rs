@@ -1,0 +1,161 @@
+//! Worker-local partition cache (byte-budget LRU).
+//!
+//! "An input dataset in memory on one machine is only useful if subsequent
+//! jobs requiring that input are sent to the same machine" — this cache is
+//! the thing the Figure-2 scheduler tries to hit.
+
+use crate::columnar::arrays::ColumnSet;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// (dataset, partition index) — cache key.
+pub type PartKey = (String, usize);
+
+pub struct PartitionCache {
+    budget_bytes: usize,
+    used_bytes: usize,
+    entries: HashMap<PartKey, (Arc<ColumnSet>, u64)>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PartitionCache {
+    pub fn new(budget_bytes: usize) -> PartitionCache {
+        PartitionCache {
+            budget_bytes,
+            used_bytes: 0,
+            entries: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn contains(&self, key: &PartKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn get(&mut self, key: &PartKey) -> Option<Arc<ColumnSet>> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(key) {
+            Some((cs, stamp)) => {
+                *stamp = clock;
+                self.hits += 1;
+                Some(cs.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a partition, evicting least-recently-used entries to fit.
+    /// A partition larger than the whole budget is admitted alone (the
+    /// cache then holds just it — matches how a worker must hold the
+    /// partition it is actively processing anyway).
+    pub fn put(&mut self, key: PartKey, cs: Arc<ColumnSet>) {
+        let size = cs.byte_size();
+        if let Some((old, _)) = self.entries.remove(&key) {
+            self.used_bytes -= old.byte_size();
+        }
+        while self.used_bytes + size > self.budget_bytes && !self.entries.is_empty() {
+            // Evict LRU.
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            let (evicted, _) = self.entries.remove(&lru).unwrap();
+            self.used_bytes -= evicted.byte_size();
+        }
+        self.clock += 1;
+        self.used_bytes += size;
+        self.entries.insert(key, (cs, self.clock));
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Keys currently cached (for the pull preference check).
+    pub fn keys(&self) -> Vec<PartKey> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::generate_drellyan;
+
+    fn part(n: usize, seed: u64) -> Arc<ColumnSet> {
+        Arc::new(generate_drellyan(n, seed))
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = PartitionCache::new(usize::MAX);
+        let p = part(100, 1);
+        assert!(c.get(&("dy".into(), 0)).is_none());
+        c.put(("dy".into(), 0), p);
+        assert!(c.get(&("dy".into(), 0)).is_some());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let p0 = part(500, 2);
+        let unit = p0.byte_size();
+        let mut c = PartitionCache::new(unit * 2 + unit / 2); // fits 2
+        c.put(("dy".into(), 0), p0);
+        c.put(("dy".into(), 1), part(500, 3));
+        // Touch partition 0 so 1 is LRU.
+        assert!(c.get(&("dy".into(), 0)).is_some());
+        c.put(("dy".into(), 2), part(500, 4));
+        assert!(c.contains(&("dy".into(), 0)), "recently used survived");
+        assert!(!c.contains(&("dy".into(), 1)), "LRU evicted");
+        assert!(c.contains(&("dy".into(), 2)));
+        assert!(c.used_bytes() <= unit * 2 + unit / 2);
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces() {
+        let mut c = PartitionCache::new(usize::MAX);
+        c.put(("dy".into(), 0), part(100, 5));
+        let before = c.used_bytes();
+        c.put(("dy".into(), 0), part(100, 5));
+        assert_eq!(c.used_bytes(), before);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn oversized_partition_admitted_alone() {
+        let p = part(2000, 6);
+        let mut c = PartitionCache::new(p.byte_size() / 2);
+        c.put(("dy".into(), 0), p);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,528 @@
+//! The in-process cluster: dataset catalog, worker pool, incremental
+//! aggregation — the whole Figure-2 machine, wired together.
+//!
+//! Workers are OS threads; the "remote storage" a cache miss pays for is a
+//! deep copy of the partition plus a configurable latency per megabyte
+//! (standing in for disk/network on the paper's testbed). Everything else —
+//! task board, document store, caches — is the real algorithm, not a
+//! simulation.
+
+use crate::columnar::arrays::ColumnSet;
+use crate::coord::board::{Subtask, SubtaskId, TaskBoard};
+use crate::coord::cache::PartitionCache;
+use crate::coord::docstore::{DocStore, PartialDoc};
+use crate::coord::scheduler::Policy;
+use crate::engine::{Backend, Query};
+use crate::hist::H1;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------- catalog
+
+/// The shared dataset store ("remote storage" + partition index).
+pub struct DatasetCatalog {
+    datasets: RwLock<HashMap<String, Vec<Arc<ColumnSet>>>>,
+    /// Simulated remote-fetch latency per MiB on a cache miss.
+    pub fetch_delay_per_mib: Duration,
+    pub fetches: AtomicU64,
+    pub bytes_fetched: AtomicU64,
+}
+
+impl DatasetCatalog {
+    pub fn new(fetch_delay_per_mib: Duration) -> DatasetCatalog {
+        DatasetCatalog {
+            datasets: RwLock::new(HashMap::new()),
+            fetch_delay_per_mib,
+            fetches: AtomicU64::new(0),
+            bytes_fetched: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a dataset, splitting it into partitions of
+    /// `events_per_partition`.
+    pub fn register(&self, name: &str, cs: ColumnSet, events_per_partition: usize) {
+        let parts: Vec<Arc<ColumnSet>> = cs
+            .partition(events_per_partition)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        self.datasets.write().unwrap().insert(name.to_string(), parts);
+    }
+
+    pub fn n_partitions(&self, name: &str) -> Option<usize> {
+        self.datasets.read().unwrap().get(name).map(|p| p.len())
+    }
+
+    /// Registered dataset names with (partitions, events, bytes).
+    pub fn list(&self) -> Vec<(String, usize, usize, usize)> {
+        self.datasets
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, parts)| {
+                (
+                    name.clone(),
+                    parts.len(),
+                    parts.iter().map(|p| p.n_events).sum(),
+                    parts.iter().map(|p| p.byte_size()).sum(),
+                )
+            })
+            .collect()
+    }
+
+    /// Remote fetch: pays the simulated store latency and a deep copy.
+    pub fn fetch(&self, name: &str, part: usize) -> Result<Arc<ColumnSet>, String> {
+        let src = {
+            let g = self.datasets.read().unwrap();
+            g.get(name)
+                .ok_or_else(|| format!("no dataset '{name}'"))?
+                .get(part)
+                .ok_or_else(|| format!("dataset '{name}' has no partition {part}"))?
+                .clone()
+        };
+        let bytes = src.byte_size();
+        if !self.fetch_delay_per_mib.is_zero() {
+            let mib = bytes as f64 / (1024.0 * 1024.0);
+            std::thread::sleep(Duration::from_secs_f64(
+                self.fetch_delay_per_mib.as_secs_f64() * mib,
+            ));
+        }
+        self.fetches.fetch_add(1, Ordering::Relaxed);
+        self.bytes_fetched.fetch_add(bytes as u64, Ordering::Relaxed);
+        // Deep copy: a remote read materializes fresh buffers.
+        Ok(Arc::new((*src).clone()))
+    }
+}
+
+// ----------------------------------------------------------------- worker
+
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub tasks_done: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub events_processed: u64,
+    pub busy: Duration,
+}
+
+struct WorkerCtx {
+    id: usize,
+    board: Arc<TaskBoard>,
+    store: Arc<DocStore>,
+    catalog: Arc<DatasetCatalog>,
+    queries: Arc<RwLock<HashMap<u64, Query>>>,
+    policy: Policy,
+    backend: Backend,
+    cache_bytes: usize,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Mutex<WorkerStats>>,
+    handicap: Duration,
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    let mut cache = PartitionCache::new(ctx.cache_bytes);
+    let mut first_miss: Option<Instant> = None;
+    while !ctx.shutdown.load(Ordering::Relaxed) {
+        // Round 1: preferred work (cache-local / own assignment).
+        let claimed = ctx.board.claim(ctx.id, |t| {
+            let key = (t.dataset.clone(), t.id.partition);
+            ctx.policy.first_round_ok(ctx.id, t, cache.contains(&key))
+        });
+        let task = match claimed {
+            Some(t) => {
+                first_miss = None;
+                Some(t)
+            }
+            None => {
+                // Round 2 after the sub-second delay: take anything.
+                let delay = ctx.policy.second_round_delay();
+                let since = first_miss.get_or_insert_with(Instant::now);
+                if since.elapsed() >= delay {
+                    let t = ctx
+                        .board
+                        .claim(ctx.id, |t| ctx.policy.second_round_ok(ctx.id, t));
+                    if t.is_some() {
+                        first_miss = None;
+                    }
+                    t
+                } else {
+                    None
+                }
+            }
+        };
+        let Some(task) = task else {
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        };
+        if let Err(e) = run_subtask(&ctx, &task, &mut cache) {
+            crate::log_warn!("worker {}: subtask {:?} failed: {e}", ctx.id, task.id);
+            // Leave the claim to expire so another worker retries.
+        }
+        if !ctx.handicap.is_zero() {
+            std::thread::sleep(ctx.handicap); // simulated background load
+        }
+    }
+    // Final stats flush.
+    let mut s = ctx.stats.lock().unwrap();
+    s.cache_hits = cache.hits;
+    s.cache_misses = cache.misses;
+}
+
+fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> Result<(), String> {
+    let t0 = Instant::now();
+    let query = ctx
+        .queries
+        .read()
+        .unwrap()
+        .get(&task.id.query_id)
+        .cloned()
+        .ok_or_else(|| format!("unknown query {}", task.id.query_id))?;
+    let key = (task.dataset.clone(), task.id.partition);
+    let cs = match cache.get(&key) {
+        Some(cs) => cs,
+        None => {
+            let cs = ctx.catalog.fetch(&task.dataset, task.id.partition)?;
+            cache.put(key, cs.clone());
+            cs
+        }
+    };
+    let mut hist = H1::new(query.n_bins, query.lo, query.hi);
+    ctx.backend.run(&query, &cs, &mut hist)?;
+    ctx.store.insert(PartialDoc {
+        id: task.id.clone(),
+        worker: ctx.id,
+        hist,
+        events_processed: cs.n_events as u64,
+    });
+    ctx.board.complete(&task.id);
+    let mut s = ctx.stats.lock().unwrap();
+    s.tasks_done += 1;
+    s.events_processed += cs.n_events as u64;
+    s.busy += t0.elapsed();
+    // Mirror cache counters continuously so live monitoring sees them.
+    s.cache_hits = cache.hits;
+    s.cache_misses = cache.misses;
+    Ok(())
+}
+
+// ---------------------------------------------------------------- cluster
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub n_workers: usize,
+    pub cache_bytes_per_worker: usize,
+    pub policy: Policy,
+    pub fetch_delay_per_mib: Duration,
+    pub claim_ttl: Duration,
+    /// Simulated background load: (worker id, extra time per subtask).
+    /// Models the straggler node whose effect pull-scheduling bounds.
+    pub straggler: Option<(usize, Duration)>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_workers: 4,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::cache_aware(),
+            fetch_delay_per_mib: Duration::from_millis(20),
+            claim_ttl: Duration::from_secs(30),
+            straggler: None,
+        }
+    }
+}
+
+pub struct QueryResult {
+    pub hist: H1,
+    pub latency: Duration,
+    pub partitions: usize,
+    pub events: u64,
+}
+
+pub struct QueryHandle {
+    pub query_id: u64,
+    pub partitions: usize,
+    submitted: Instant,
+}
+
+pub struct Cluster {
+    pub catalog: Arc<DatasetCatalog>,
+    board: Arc<TaskBoard>,
+    store: Arc<DocStore>,
+    queries: Arc<RwLock<HashMap<u64, Query>>>,
+    shutdown: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    worker_stats: Vec<Arc<Mutex<WorkerStats>>>,
+    next_query: AtomicU64,
+    config: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn start(config: ClusterConfig, backend: Backend) -> Cluster {
+        let catalog = Arc::new(DatasetCatalog::new(config.fetch_delay_per_mib));
+        let board = Arc::new(TaskBoard::new(config.claim_ttl));
+        let store = Arc::new(DocStore::new());
+        let queries = Arc::new(RwLock::new(HashMap::new()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::new();
+        let mut worker_stats = Vec::new();
+        for id in 0..config.n_workers {
+            let stats = Arc::new(Mutex::new(WorkerStats::default()));
+            worker_stats.push(stats.clone());
+            let ctx = WorkerCtx {
+                id,
+                board: board.clone(),
+                store: store.clone(),
+                catalog: catalog.clone(),
+                queries: queries.clone(),
+                policy: config.policy,
+                backend: backend.clone(),
+                cache_bytes: config.cache_bytes_per_worker,
+                shutdown: shutdown.clone(),
+                stats,
+                handicap: match config.straggler {
+                    Some((w, d)) if w == id => d,
+                    _ => Duration::ZERO,
+                },
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hepq-worker-{id}"))
+                    .spawn(move || worker_loop(ctx))
+                    .expect("spawn worker"),
+            );
+        }
+        Cluster {
+            catalog,
+            board,
+            store,
+            queries,
+            shutdown,
+            workers,
+            worker_stats,
+            next_query: AtomicU64::new(1),
+            config,
+        }
+    }
+
+    /// Submit a query: advertises one subtask per partition.
+    pub fn submit(&self, query: Query) -> Result<QueryHandle, String> {
+        let partitions = self
+            .catalog
+            .n_partitions(&query.dataset)
+            .ok_or_else(|| format!("no dataset '{}'", query.dataset))?;
+        let query_id = self.next_query.fetch_add(1, Ordering::Relaxed);
+        self.queries.write().unwrap().insert(query_id, query.clone());
+        let mut tasks: Vec<Subtask> = (0..partitions)
+            .map(|p| Subtask {
+                id: SubtaskId { query_id, partition: p },
+                dataset: query.dataset.clone(),
+                assigned_to: None,
+            })
+            .collect();
+        self.config.policy.assign(&mut tasks, self.config.n_workers);
+        self.board.advertise(tasks);
+        Ok(QueryHandle {
+            query_id,
+            partitions,
+            submitted: Instant::now(),
+        })
+    }
+
+    /// Wait for a query, merging partials incrementally. `progress` is
+    /// invoked after every merge round with (merged_partitions, total,
+    /// current histogram); returning false cancels the query.
+    pub fn wait_with_progress<F>(
+        &self,
+        handle: &QueryHandle,
+        query: &Query,
+        mut progress: F,
+    ) -> Result<QueryResult, String>
+    where
+        F: FnMut(usize, usize, &H1) -> bool,
+    {
+        let mut hist = H1::new(query.n_bins, query.lo, query.hi);
+        let mut merged = 0usize;
+        let mut events = 0u64;
+        let deadline = Instant::now() + Duration::from_secs(600);
+        while merged < handle.partitions {
+            if Instant::now() > deadline {
+                return Err(format!(
+                    "query {} timed out with {merged}/{} partitions",
+                    handle.query_id, handle.partitions
+                ));
+            }
+            let docs = self
+                .store
+                .drain_wait(handle.query_id, Duration::from_millis(50));
+            for d in docs {
+                hist.merge(&d.hist)?;
+                events += d.events_processed;
+                merged += 1;
+            }
+            if !progress(merged, handle.partitions, &hist) {
+                self.board.cancel(handle.query_id);
+                self.queries.write().unwrap().remove(&handle.query_id);
+                return Err("cancelled".into());
+            }
+        }
+        self.queries.write().unwrap().remove(&handle.query_id);
+        Ok(QueryResult {
+            hist,
+            latency: handle.submitted.elapsed(),
+            partitions: merged,
+            events,
+        })
+    }
+
+    pub fn wait(&self, handle: &QueryHandle, query: &Query) -> Result<QueryResult, String> {
+        self.wait_with_progress(handle, query, |_, _, _| true)
+    }
+
+    /// Convenience: submit + wait.
+    pub fn run(&self, query: &Query) -> Result<QueryResult, String> {
+        let h = self.submit(query.clone())?;
+        self.wait(&h, query)
+    }
+
+    pub fn stats(&self) -> Vec<WorkerStats> {
+        self.worker_stats
+            .iter()
+            .map(|s| s.lock().unwrap().clone())
+            .collect()
+    }
+
+    pub fn total_cache_hit_rate(&self) -> f64 {
+        let (mut h, mut m) = (0u64, 0u64);
+        for s in self.stats() {
+            h += s.cache_hits;
+            m += s.cache_misses;
+        }
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.config.n_workers
+    }
+
+    pub fn shutdown(mut self) -> Vec<WorkerStats> {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.worker_stats
+            .iter()
+            .map(|s| s.lock().unwrap().clone())
+            .collect()
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::generate_drellyan;
+    use crate::engine::QueryKind;
+
+    fn small_cluster(policy: Policy) -> Cluster {
+        let cfg = ClusterConfig {
+            n_workers: 3,
+            cache_bytes_per_worker: 64 << 20,
+            policy,
+            fetch_delay_per_mib: Duration::from_millis(1),
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        };
+        let c = Cluster::start(cfg, Backend::Columnar);
+        c.catalog.register("dy", generate_drellyan(20_000, 55), 2_000);
+        c
+    }
+
+    #[test]
+    fn distributed_result_matches_local() {
+        let c = small_cluster(Policy::cache_aware());
+        let q = Query::new(QueryKind::MassPairs, "dy", "muons");
+        let res = c.run(&q).unwrap();
+        // Local single-thread reference.
+        let cs = generate_drellyan(20_000, 55);
+        let mut local = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::Columnar.run(&q, &cs, &mut local).unwrap();
+        assert_eq!(res.hist.bins, local.bins);
+        assert_eq!(res.hist.total(), local.total());
+        assert_eq!(res.partitions, 10);
+        assert_eq!(res.events, 20_000);
+        c.shutdown();
+    }
+
+    #[test]
+    fn all_policies_converge() {
+        for policy in [Policy::cache_aware(), Policy::AnyPull, Policy::RoundRobinPush] {
+            let c = small_cluster(policy);
+            let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+            let res = c.run(&q).unwrap();
+            assert_eq!(res.partitions, 10, "{}", policy.name());
+            assert!(res.hist.total() > 0.0);
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn repeat_queries_hit_cache() {
+        let c = small_cluster(Policy::cache_aware());
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        c.run(&q).unwrap(); // cold: all misses
+        for _ in 0..4 {
+            c.run(&q).unwrap(); // warm: should be mostly hits
+        }
+        let rate = c.total_cache_hit_rate();
+        assert!(rate > 0.5, "cache hit rate {rate} too low");
+        c.shutdown();
+    }
+
+    #[test]
+    fn progress_and_cancellation() {
+        let c = small_cluster(Policy::AnyPull);
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        let h = c.submit(q.clone()).unwrap();
+        let res = c.wait_with_progress(&h, &q, |done, _total, _| done == 0);
+        assert!(matches!(res, Err(e) if e == "cancelled"));
+        // Cluster still works after a cancellation.
+        let res2 = c.run(&q).unwrap();
+        assert_eq!(res2.partitions, 10);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let c = small_cluster(Policy::AnyPull);
+        let q = Query::new(QueryKind::MaxPt, "nope", "muons");
+        assert!(c.submit(q).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn worker_stats_accumulate() {
+        let c = small_cluster(Policy::AnyPull);
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        c.run(&q).unwrap();
+        let stats = c.shutdown();
+        let total_tasks: u64 = stats.iter().map(|s| s.tasks_done).sum();
+        assert_eq!(total_tasks, 10);
+        let total_events: u64 = stats.iter().map(|s| s.events_processed).sum();
+        assert_eq!(total_events, 20_000);
+    }
+}

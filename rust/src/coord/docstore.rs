@@ -1,0 +1,163 @@
+//! femto-mongo: the partial-result document store.
+//!
+//! "We imagine storing partial histograms in a document database like
+//! MongoDB and aggregating whatever is available at regular intervals" —
+//! workers insert one document per finished subtask; the aggregator drains
+//! whatever is available, so results accumulate interactively. Duplicate
+//! documents for the same subtask (a reclaimed straggler finishing twice)
+//! are deduplicated by key.
+
+use crate::coord::board::SubtaskId;
+use crate::hist::H1;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Condvar, Mutex};
+
+#[derive(Clone, Debug)]
+pub struct PartialDoc {
+    pub id: SubtaskId,
+    pub worker: usize,
+    pub hist: H1,
+    pub events_processed: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Documents not yet drained by the aggregator.
+    pending: HashMap<SubtaskId, PartialDoc>,
+    /// Subtasks ever inserted (duplicate suppression across drains).
+    seen: HashSet<SubtaskId>,
+    inserted: u64,
+    duplicates: u64,
+}
+
+pub struct DocStore {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for DocStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DocStore {
+    pub fn new() -> DocStore {
+        DocStore {
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Insert a partial result. Returns false if this subtask already has a
+    /// document (late straggler duplicate — dropped).
+    pub fn insert(&self, doc: PartialDoc) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !g.seen.insert(doc.id.clone()) {
+            g.duplicates += 1;
+            return false;
+        }
+        g.inserted += 1;
+        g.pending.insert(doc.id.clone(), doc);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Drain everything currently available for a query (the "aggregate
+    /// whatever is available at regular intervals" operation).
+    pub fn drain(&self, query_id: u64) -> Vec<PartialDoc> {
+        let mut g = self.inner.lock().unwrap();
+        let keys: Vec<SubtaskId> = g
+            .pending
+            .keys()
+            .filter(|k| k.query_id == query_id)
+            .cloned()
+            .collect();
+        keys.iter().map(|k| g.pending.remove(k).unwrap()).collect()
+    }
+
+    /// Block until at least one document for the query is available or the
+    /// timeout expires; then drain.
+    pub fn drain_wait(&self, query_id: u64, timeout: std::time::Duration) -> Vec<PartialDoc> {
+        let g = self.inner.lock().unwrap();
+        let (mut g, _) = self
+            .cv
+            .wait_timeout_while(g, timeout, |g| {
+                !g.pending.keys().any(|k| k.query_id == query_id)
+            })
+            .unwrap();
+        let keys: Vec<SubtaskId> = g
+            .pending
+            .keys()
+            .filter(|k| k.query_id == query_id)
+            .cloned()
+            .collect();
+        keys.iter().map(|k| g.pending.remove(k).unwrap()).collect()
+    }
+
+    pub fn inserted(&self) -> u64 {
+        self.inner.lock().unwrap().inserted
+    }
+
+    pub fn duplicates(&self) -> u64 {
+        self.inner.lock().unwrap().duplicates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(q: u64, p: usize) -> PartialDoc {
+        let mut h = H1::new(4, 0.0, 4.0);
+        h.fill(p as f64);
+        PartialDoc {
+            id: SubtaskId { query_id: q, partition: p },
+            worker: 0,
+            hist: h,
+            events_processed: 10,
+        }
+    }
+
+    #[test]
+    fn insert_and_drain() {
+        let s = DocStore::new();
+        assert!(s.insert(doc(1, 0)));
+        assert!(s.insert(doc(1, 1)));
+        assert!(s.insert(doc(2, 0)));
+        let got = s.drain(1);
+        assert_eq!(got.len(), 2);
+        assert_eq!(s.drain(1).len(), 0);
+        assert_eq!(s.drain(2).len(), 1);
+    }
+
+    #[test]
+    fn duplicates_dropped() {
+        let s = DocStore::new();
+        assert!(s.insert(doc(1, 0)));
+        assert!(!s.insert(doc(1, 0)));
+        assert_eq!(s.duplicates(), 1);
+        assert_eq!(s.drain(1).len(), 1);
+    }
+
+    #[test]
+    fn drain_wait_wakes_on_insert() {
+        use std::sync::Arc;
+        let s = Arc::new(DocStore::new());
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            s2.drain_wait(1, std::time::Duration::from_secs(5))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.insert(doc(1, 0));
+        let got = t.join().unwrap();
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn drain_wait_times_out_empty() {
+        let s = DocStore::new();
+        let got = s.drain_wait(9, std::time::Duration::from_millis(10));
+        assert!(got.is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Distributed query processing with cache-aware work pulling (paper §4,
+//! Figure 2): femto-zookeeper task board, worker-local LRU caches, the
+//! two-round pull scheduler and its baselines, femto-mongo partial-result
+//! store, and the in-process cluster harness that ties them together.
+
+pub mod board;
+pub mod cache;
+pub mod cluster;
+pub mod docstore;
+pub mod scheduler;
+
+pub use board::{Subtask, SubtaskId, TaskBoard};
+pub use cache::PartitionCache;
+pub use cluster::{Cluster, ClusterConfig, DatasetCatalog, QueryResult, WorkerStats};
+pub use docstore::{DocStore, PartialDoc};
+pub use scheduler::Policy;

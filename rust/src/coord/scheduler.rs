@@ -1,0 +1,127 @@
+//! Scheduling policies — the subject of the Figure-2 experiment.
+//!
+//! * `CacheAwarePull` — the paper's scheme: workers pull, preferring
+//!   subtasks whose input partition is already in their local cache; if no
+//!   cache-local work exists, they take *any* work after a sub-second delay
+//!   ("first dibs" for the best-placed workers, elastic scale-out when a
+//!   dataset is hot).
+//! * `AnyPull` — work-stealing without cache preference (the "least busy
+//!   node" strategy: whichever worker is free takes the next subtask).
+//! * `RoundRobinPush` — the classic baseline: the leader statically assigns
+//!   subtasks round-robin at submit time.
+
+use crate::coord::board::Subtask;
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    CacheAwarePull {
+        /// How long a worker keeps insisting on cache-local work before
+        /// falling back to any work (the paper's "sub-second delay").
+        second_round_delay: Duration,
+    },
+    AnyPull,
+    RoundRobinPush,
+}
+
+impl Policy {
+    pub fn cache_aware() -> Policy {
+        // The paper: "if there is no cache-local work to do, compute nodes
+        // will take any work after a sub-second delay". The delay must sit
+        // between per-subtask compute time and remote-fetch time: long
+        // enough that the well-placed worker usually gets there first,
+        // short enough not to idle the cluster (see EXPERIMENTS.md §Perf
+        // for the tuning measurement).
+        Policy::CacheAwarePull {
+            second_round_delay: Duration::from_millis(10),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::CacheAwarePull { .. } => "cache-aware-pull",
+            Policy::AnyPull => "any-pull",
+            Policy::RoundRobinPush => "round-robin-push",
+        }
+    }
+
+    /// Assign `assigned_to` for push policies at advertise time.
+    pub fn assign(&self, tasks: &mut [Subtask], n_workers: usize) {
+        if let Policy::RoundRobinPush = self {
+            for (i, t) in tasks.iter_mut().enumerate() {
+                t.assigned_to = Some(i % n_workers);
+            }
+        }
+    }
+
+    /// May `worker` take `task` in the first (preferred) round?
+    /// `in_cache` reports whether the worker holds the input partition.
+    pub fn first_round_ok(&self, worker: usize, task: &Subtask, in_cache: bool) -> bool {
+        match self {
+            Policy::CacheAwarePull { .. } => in_cache,
+            Policy::AnyPull => true,
+            Policy::RoundRobinPush => task.assigned_to == Some(worker),
+        }
+    }
+
+    /// May `worker` take `task` in the fallback round? (Push policies have
+    /// no fallback: assignments are fixed.)
+    pub fn second_round_ok(&self, worker: usize, task: &Subtask) -> bool {
+        match self {
+            Policy::CacheAwarePull { .. } | Policy::AnyPull => true,
+            Policy::RoundRobinPush => task.assigned_to == Some(worker),
+        }
+    }
+
+    pub fn second_round_delay(&self) -> Duration {
+        match self {
+            Policy::CacheAwarePull { second_round_delay } => *second_round_delay,
+            _ => Duration::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coord::board::SubtaskId;
+
+    fn task(p: usize) -> Subtask {
+        Subtask {
+            id: SubtaskId { query_id: 1, partition: p },
+            dataset: "dy".into(),
+            assigned_to: None,
+        }
+    }
+
+    #[test]
+    fn round_robin_assigns_evenly() {
+        let mut tasks: Vec<Subtask> = (0..10).map(task).collect();
+        Policy::RoundRobinPush.assign(&mut tasks, 3);
+        let counts = [0, 1, 2].map(|w| {
+            tasks.iter().filter(|t| t.assigned_to == Some(w)).count()
+        });
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| (3..=4).contains(&c)));
+        // And workers only take their own.
+        assert!(Policy::RoundRobinPush.first_round_ok(0, &tasks[0], false));
+        assert!(!Policy::RoundRobinPush.first_round_ok(1, &tasks[0], true));
+    }
+
+    #[test]
+    fn cache_aware_rounds() {
+        let p = Policy::cache_aware();
+        let t = task(0);
+        assert!(!p.first_round_ok(0, &t, false));
+        assert!(p.first_round_ok(0, &t, true));
+        assert!(p.second_round_ok(0, &t));
+        assert!(p.second_round_delay() > Duration::ZERO);
+    }
+
+    #[test]
+    fn any_pull_takes_everything() {
+        let t = task(0);
+        assert!(Policy::AnyPull.first_round_ok(3, &t, false));
+        assert_eq!(Policy::AnyPull.second_round_delay(), Duration::ZERO);
+    }
+}

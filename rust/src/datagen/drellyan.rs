@@ -1,0 +1,214 @@
+//! Synthetic Drell-Yan (Z/γ* → μμ) sample — the Figure-1 dataset.
+//!
+//! Each event is, with probability `Z_FRACTION`, a Z-boson decay to two
+//! muons: the Z mass is drawn from a Breit–Wigner around 91.19 GeV, the Z is
+//! given a soft transverse momentum and a longitudinal rapidity, and decayed
+//! isotropically in its rest frame; the muons are boosted back to the lab
+//! and kept if they pass a loose acceptance (pt > 3 GeV, |eta| < 2.4).
+//! Background events and extra soft muons fill out the multiplicity
+//! distribution. Dimuon mass of the generated sample therefore reconstructs
+//! a visible Z peak — which is what `examples/dimuon_spectrum.rs` plots.
+//!
+//! Generation writes straight into exploded arrays (never builds objects):
+//! generating 5.4M events must itself be fast.
+
+use crate::columnar::arrays::{Array, ColumnSet};
+use crate::columnar::schema::muon_event_schema;
+use crate::datagen::kinematics::{boost, ptetaphi};
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::f64::consts::PI;
+
+pub const Z_MASS: f64 = 91.19;
+pub const Z_WIDTH: f64 = 2.49;
+pub const MU_MASS: f64 = 0.105_66;
+const Z_FRACTION: f64 = 0.75;
+/// Hard cap on muons per event — matches the K=8 padding capacity of the
+/// AOT kernels (see DESIGN.md §6).
+pub const MAX_MUONS: usize = 8;
+
+/// Generate `n_events` Drell-Yan events into exploded columns.
+pub fn generate_drellyan(n_events: usize, seed: u64) -> ColumnSet {
+    let mut rng = Pcg32::new(seed);
+    let mut offsets: Vec<i64> = Vec::with_capacity(n_events + 1);
+    offsets.push(0);
+    // Reserve assuming ~2 muons/event.
+    let cap = n_events * 2 + 16;
+    let mut pt: Vec<f32> = Vec::with_capacity(cap);
+    let mut eta: Vec<f32> = Vec::with_capacity(cap);
+    let mut phi: Vec<f32> = Vec::with_capacity(cap);
+    let mut charge: Vec<i32> = Vec::with_capacity(cap);
+    let mut met: Vec<f32> = Vec::with_capacity(n_events);
+
+    let mut scratch: Vec<(f64, f64, f64, i32)> = Vec::with_capacity(MAX_MUONS);
+
+    for _ in 0..n_events {
+        scratch.clear();
+        if rng.bool_with(Z_FRACTION) {
+            gen_z_decay(&mut rng, &mut scratch);
+        }
+        // Soft / background muons.
+        let softs = if scratch.is_empty() {
+            rng.poisson(0.8)
+        } else {
+            rng.poisson(0.3)
+        };
+        for _ in 0..softs {
+            if scratch.len() >= MAX_MUONS {
+                break;
+            }
+            let spt = 2.0 + rng.exponential(5.0);
+            let seta = rng.uniform(-2.4, 2.4);
+            let sphi = rng.uniform(-PI, PI);
+            let q = if rng.bool_with(0.5) { 1 } else { -1 };
+            scratch.push((spt, seta, sphi, q));
+        }
+        // Highest-pt first, like real reco collections.
+        scratch.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(mpt, meta_, mphi, q) in scratch.iter() {
+            pt.push(mpt as f32);
+            eta.push(meta_ as f32);
+            phi.push(mphi as f32);
+            charge.push(q);
+        }
+        offsets.push(pt.len() as i64);
+        met.push(rng.exponential(15.0) as f32);
+    }
+
+    let mut leaves = BTreeMap::new();
+    leaves.insert("muons.pt".to_string(), Array::F32(pt));
+    leaves.insert("muons.eta".to_string(), Array::F32(eta));
+    leaves.insert("muons.phi".to_string(), Array::F32(phi));
+    leaves.insert("muons.charge".to_string(), Array::I32(charge));
+    leaves.insert("met".to_string(), Array::F32(met));
+    let mut off = BTreeMap::new();
+    off.insert("muons".to_string(), offsets);
+
+    let cs = ColumnSet {
+        schema: muon_event_schema(),
+        n_events,
+        offsets: off,
+        leaves,
+    };
+    debug_assert!(cs.validate().is_ok());
+    cs
+}
+
+fn gen_z_decay(rng: &mut Pcg32, out: &mut Vec<(f64, f64, f64, i32)>) {
+    let m = rng.breit_wigner(Z_MASS, Z_WIDTH, 40.0, 200.0);
+    // Z lab kinematics: soft pT, rapidity spread, uniform phi.
+    let zpt = rng.exponential(8.0);
+    let zy = rng.gauss(0.0, 1.4);
+    let zphi = rng.uniform(-PI, PI);
+    let mt = (m * m + zpt * zpt).sqrt();
+    let ez = mt * zy.cosh();
+    let pz = mt * zy.sinh();
+    let zp4 = [zpt * zphi.cos(), zpt * zphi.sin(), pz, ez];
+    let beta = [zp4[0] / zp4[3], zp4[1] / zp4[3], zp4[2] / zp4[3]];
+
+    // Isotropic decay in the Z rest frame.
+    let cos_t = rng.uniform(-1.0, 1.0);
+    let sin_t = (1.0 - cos_t * cos_t).sqrt();
+    let dphi = rng.uniform(-PI, PI);
+    let p_star = (0.25 * m * m - MU_MASS * MU_MASS).max(0.0).sqrt();
+    let e_star = (p_star * p_star + MU_MASS * MU_MASS).sqrt();
+    let dir = [sin_t * dphi.cos(), sin_t * dphi.sin(), cos_t];
+    let mu1 = [p_star * dir[0], p_star * dir[1], p_star * dir[2], e_star];
+    let mu2 = [-p_star * dir[0], -p_star * dir[1], -p_star * dir[2], e_star];
+
+    let q1 = if rng.bool_with(0.5) { 1 } else { -1 };
+    for (p4, q) in [(mu1, q1), (mu2, -q1)] {
+        let lab = boost(p4, beta);
+        let (mpt, meta_, mphi) = ptetaphi([lab[0], lab[1], lab[2]]);
+        // Loose acceptance.
+        if mpt > 3.0 && meta_.abs() < 2.4 && out.len() < MAX_MUONS {
+            out.push((mpt, meta_, mphi, q));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::kinematics::{inv_mass, p4_from_ptetaphim};
+
+    #[test]
+    fn deterministic() {
+        let a = generate_drellyan(200, 42);
+        let b = generate_drellyan(200, 42);
+        assert_eq!(a, b);
+        let c = generate_drellyan(200, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn valid_structure_and_bounds() {
+        let cs = generate_drellyan(3000, 1);
+        cs.validate().unwrap();
+        let off = cs.offsets_of("muons").unwrap();
+        for w in off.windows(2) {
+            assert!((w[1] - w[0]) as usize <= MAX_MUONS);
+        }
+        for &e in cs.leaf("muons.eta").unwrap().as_f32().unwrap() {
+            assert!(e.abs() < 2.4 + 1e-3);
+        }
+        for &p in cs.leaf("muons.pt").unwrap().as_f32().unwrap() {
+            assert!(p > 0.0);
+        }
+    }
+
+    #[test]
+    fn muons_sorted_by_pt_within_event() {
+        let cs = generate_drellyan(2000, 2);
+        let off = cs.offsets_of("muons").unwrap();
+        let pt = cs.leaf("muons.pt").unwrap().as_f32().unwrap();
+        for w in off.windows(2) {
+            for k in w[0]..w[1] - 1 {
+                assert!(pt[k as usize] >= pt[k as usize + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn z_peak_visible_in_dimuon_mass() {
+        // Opposite-charge pairs from 2-muon events should peak near 91 GeV.
+        let cs = generate_drellyan(20_000, 3);
+        let off = cs.offsets_of("muons").unwrap();
+        let pt = cs.leaf("muons.pt").unwrap().as_f32().unwrap();
+        let eta = cs.leaf("muons.eta").unwrap().as_f32().unwrap();
+        let phi = cs.leaf("muons.phi").unwrap().as_f32().unwrap();
+        let mut in_peak = 0usize;
+        let mut total = 0usize;
+        for i in 0..cs.n_events {
+            let (lo, hi) = (off[i] as usize, off[i + 1] as usize);
+            if hi - lo != 2 {
+                continue;
+            }
+            let a = p4_from_ptetaphim(pt[lo] as f64, eta[lo] as f64, phi[lo] as f64, MU_MASS);
+            let b = p4_from_ptetaphim(
+                pt[lo + 1] as f64,
+                eta[lo + 1] as f64,
+                phi[lo + 1] as f64,
+                MU_MASS,
+            );
+            let m = inv_mass(a, b);
+            total += 1;
+            if (m - Z_MASS).abs() < 10.0 {
+                in_peak += 1;
+            }
+        }
+        assert!(total > 5_000, "need a decent number of dimuon events, got {total}");
+        assert!(
+            in_peak as f64 > 0.5 * total as f64,
+            "Z peak not visible: {in_peak}/{total} in ±10 GeV window"
+        );
+    }
+
+    #[test]
+    fn average_multiplicity_reasonable() {
+        let cs = generate_drellyan(10_000, 4);
+        let total = cs.leaf("muons.pt").unwrap().len();
+        let avg = total as f64 / cs.n_events as f64;
+        assert!((1.0..3.0).contains(&avg), "avg multiplicity {avg}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Per-partition execution dispatch: one enum over every backend so the
+//! coordinator, benches and examples pick a path with one value.
+
+use crate::columnar::arrays::ColumnSet;
+use crate::engine::query::Query;
+use crate::engine::{columnar_exec, object_baseline};
+use crate::hist::H1;
+use crate::runtime::{ArtifactRegistry, PaddedPartition, QueryExecutable};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+thread_local! {
+    /// PJRT clients are not Send (the xla crate wraps Rc internally), so
+    /// each worker thread owns its own registry — mirroring a deployment
+    /// where every worker process has its own runtime. Keyed by artifact
+    /// dir; compiled executables are cached inside the registry.
+    static TL_REGISTRIES: RefCell<HashMap<PathBuf, Rc<ArtifactRegistry>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Handle to the AOT artifacts, shareable across threads.
+#[derive(Clone, Debug)]
+pub struct PjrtBackend {
+    pub artifact_dir: Arc<PathBuf>,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: impl Into<PathBuf>) -> PjrtBackend {
+        PjrtBackend {
+            artifact_dir: Arc::new(dir.into()),
+        }
+    }
+
+    /// This thread's registry (created + compiled on first use).
+    pub fn registry(&self) -> Result<Rc<ArtifactRegistry>, String> {
+        TL_REGISTRIES.with(|map| {
+            let mut map = map.borrow_mut();
+            if let Some(r) = map.get(self.artifact_dir.as_ref()) {
+                return Ok(r.clone());
+            }
+            let reg = Rc::new(ArtifactRegistry::open(self.artifact_dir.as_ref())?);
+            map.insert((*self.artifact_dir).clone(), reg.clone());
+            Ok(reg)
+        })
+    }
+}
+
+/// How to execute a query over a partition.
+#[derive(Clone)]
+pub enum Backend {
+    /// Hand-written flat loops (the transformed-code endpoint).
+    Columnar,
+    /// Heap-object materialization then object loops.
+    HeapObjects,
+    /// Stack-object materialization then object loops.
+    StackObjects,
+    /// Full framework simulation (all branches, module chain).
+    FrameworkSim,
+    /// AOT-compiled Pallas/JAX artifact via PJRT.
+    Pjrt(PjrtBackend),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Columnar => "columnar",
+            Backend::HeapObjects => "heap-objects",
+            Backend::StackObjects => "stack-objects",
+            Backend::FrameworkSim => "framework-sim",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Execute `query` over one exploded partition, accumulating into
+    /// `hist`.
+    pub fn run(&self, query: &Query, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+        match self {
+            Backend::Columnar => columnar_exec::run(query.kind, cs, &query.list, hist),
+            Backend::HeapObjects => {
+                let events = object_baseline::materialize_heap(cs, &query.list)?;
+                object_baseline::run_heap(query.kind, &events, hist);
+                Ok(())
+            }
+            Backend::StackObjects => {
+                let events = object_baseline::materialize_stack(cs, &query.list)?;
+                object_baseline::run_stack(query.kind, &events, hist);
+                Ok(())
+            }
+            Backend::FrameworkSim => {
+                object_baseline::FrameworkSim::new().run(cs, &query.list, query.kind, hist)
+            }
+            Backend::Pjrt(pj) => {
+                let reg = pj.registry()?;
+                let exe = QueryExecutable::new(&reg, query.kind.artifact())?;
+                let shape = exe.shape();
+                let leaves = query.leaf_paths();
+                let leaf_refs: Vec<&str> = leaves.iter().map(|s| s.as_str()).collect();
+                // The artifact takes at most shape.n_events events; larger
+                // partitions are processed in chunks.
+                if cs.n_events <= shape.n_events
+                    && cs.leaf(&leaves[0]).map(|a| a.len()).unwrap_or(0) <= shape.content_cap
+                {
+                    let part =
+                        PaddedPartition::from_columns(cs, &query.list, &leaf_refs, shape)?;
+                    exe.run(&part, query.lo, query.hi, hist)
+                } else {
+                    for chunk in cs.partition(shape.n_events) {
+                        let part = PaddedPartition::from_columns(
+                            &chunk,
+                            &query.list,
+                            &leaf_refs,
+                            shape,
+                        )?;
+                        exe.run(&part, query.lo, query.hi, hist)?;
+                    }
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::generate_drellyan;
+    use crate::engine::query::QueryKind;
+
+    #[test]
+    fn non_pjrt_backends_agree() {
+        let cs = generate_drellyan(800, 5);
+        for kind in [QueryKind::MaxPt, QueryKind::MassPairs] {
+            let q = Query::new(kind, "dy", "muons");
+            let mut base = H1::new(q.n_bins, q.lo, q.hi);
+            Backend::Columnar.run(&q, &cs, &mut base).unwrap();
+            for be in [Backend::HeapObjects, Backend::StackObjects] {
+                let mut h = H1::new(q.n_bins, q.lo, q.hi);
+                be.run(&q, &cs, &mut h).unwrap();
+                assert_eq!(h.bins, base.bins, "{kind:?} {be:?}");
+            }
+        }
+    }
+}

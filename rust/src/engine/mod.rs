@@ -1,0 +1,10 @@
+//! Single-node query engine: query model, backend dispatch, the baseline
+//! ladder of Table 1 and the executors behind Figure 1.
+
+pub mod columnar_exec;
+pub mod executor;
+pub mod object_baseline;
+pub mod query;
+
+pub use executor::Backend;
+pub use query::{Query, QueryKind};

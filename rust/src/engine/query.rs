@@ -1,0 +1,172 @@
+//! Query description: what a physicist asks for in one exploratory step —
+//! one analysis function over one dataset, yielding one histogram.
+
+use crate::util::json::Json;
+
+/// The four Table-3 analysis functions plus the Table-1 flat fill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    /// Per-event max muon pt.
+    MaxPt,
+    /// Eta of the highest-pt muon per event.
+    EtaBest,
+    /// pt_i + pt_j over distinct pairs.
+    PtSumPairs,
+    /// Dimuon invariant mass over distinct pairs.
+    MassPairs,
+    /// Histogram every item of one branch (Table 1's jet-pt fill).
+    FlatHist,
+}
+
+impl QueryKind {
+    pub const ALL: [QueryKind; 5] = [
+        QueryKind::MaxPt,
+        QueryKind::EtaBest,
+        QueryKind::PtSumPairs,
+        QueryKind::MassPairs,
+        QueryKind::FlatHist,
+    ];
+
+    /// Artifact name in the manifest.
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            QueryKind::MaxPt => "max_pt",
+            QueryKind::EtaBest => "eta_best",
+            QueryKind::PtSumPairs => "ptsum_pairs",
+            QueryKind::MassPairs => "mass_pairs",
+            QueryKind::FlatHist => "flat_hist",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<QueryKind> {
+        Some(match s {
+            "max_pt" => QueryKind::MaxPt,
+            "eta_best" => QueryKind::EtaBest,
+            "ptsum_pairs" => QueryKind::PtSumPairs,
+            "mass_pairs" => QueryKind::MassPairs,
+            "flat_hist" => QueryKind::FlatHist,
+            _ => return None,
+        })
+    }
+
+    /// Leaf attribute names (relative to the list) the query touches —
+    /// selective reading loads exactly these.
+    pub fn attrs(&self) -> &'static [&'static str] {
+        match self {
+            QueryKind::MaxPt | QueryKind::PtSumPairs | QueryKind::FlatHist => &["pt"],
+            QueryKind::EtaBest => &["pt", "eta"],
+            QueryKind::MassPairs => &["pt", "eta", "phi"],
+        }
+    }
+
+    /// Full leaf paths under a list prefix (e.g. "muons" → "muons.pt"...).
+    pub fn leaf_paths(&self, list: &str) -> Vec<String> {
+        self.attrs().iter().map(|a| format!("{list}.{a}")).collect()
+    }
+
+    /// A sensible default binning for each function.
+    pub fn default_binning(&self) -> (f64, f64) {
+        match self {
+            QueryKind::MaxPt => (0.0, 128.0),
+            QueryKind::EtaBest => (-2.4, 2.4),
+            QueryKind::PtSumPairs => (0.0, 256.0),
+            QueryKind::MassPairs => (0.0, 128.0),
+            QueryKind::FlatHist => (0.0, 256.0),
+        }
+    }
+}
+
+/// A full query: function + dataset + binning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    pub kind: QueryKind,
+    /// Dataset name (resolved by the coordinator's catalog).
+    pub dataset: String,
+    /// List path the function iterates over ("muons", "jets").
+    pub list: String,
+    pub n_bins: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Query {
+    pub fn new(kind: QueryKind, dataset: &str, list: &str) -> Query {
+        let (lo, hi) = kind.default_binning();
+        Query {
+            kind,
+            dataset: dataset.to_string(),
+            list: list.to_string(),
+            n_bins: 64,
+            lo,
+            hi,
+        }
+    }
+
+    pub fn with_binning(mut self, n_bins: usize, lo: f64, hi: f64) -> Query {
+        self.n_bins = n_bins;
+        self.lo = lo;
+        self.hi = hi;
+        self
+    }
+
+    pub fn leaf_paths(&self) -> Vec<String> {
+        self.kind.leaf_paths(&self.list)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.artifact())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("list", Json::str(self.list.clone())),
+            ("n_bins", Json::num(self.n_bins as f64)),
+            ("lo", Json::num(self.lo)),
+            ("hi", Json::num(self.hi)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Query, String> {
+        let kind = QueryKind::from_name(
+            j.get("kind").and_then(|v| v.as_str()).ok_or("missing kind")?,
+        )
+        .ok_or("unknown kind")?;
+        Ok(Query {
+            kind,
+            dataset: j
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .ok_or("missing dataset")?
+                .to_string(),
+            list: j.get("list").and_then(|v| v.as_str()).unwrap_or("muons").to_string(),
+            n_bins: j.get("n_bins").and_then(|v| v.as_usize()).unwrap_or(64),
+            lo: j.get("lo").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            hi: j.get("hi").and_then(|v| v.as_f64()).unwrap_or(128.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_roundtrip() {
+        for k in QueryKind::ALL {
+            assert_eq!(QueryKind::from_name(k.artifact()), Some(k));
+        }
+        assert_eq!(QueryKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn leaf_paths_selective() {
+        assert_eq!(QueryKind::MassPairs.leaf_paths("muons"),
+                   vec!["muons.pt", "muons.eta", "muons.phi"]);
+        assert_eq!(QueryKind::MaxPt.leaf_paths("jets"), vec!["jets.pt"]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let q = Query::new(QueryKind::MassPairs, "dy", "muons").with_binning(64, 0.0, 128.0);
+        let j = Json::parse(&q.to_json().to_string()).unwrap();
+        assert_eq!(Query::from_json(&j).unwrap(), q);
+    }
+}

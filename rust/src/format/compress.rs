@@ -1,0 +1,114 @@
+//! Basket compression codecs.
+//!
+//! ROOT compresses each basket independently with zlib/LZ4/zstd; we offer
+//! `None` (the paper's Figure-1 measurements are on uncompressed data),
+//! `Zstd` and `Flate` (zlib). The codec is recorded per-file.
+
+use std::io::{Read, Write};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    None,
+    Zstd(i32),
+    Flate,
+}
+
+impl Codec {
+    pub fn name(&self) -> String {
+        match self {
+            Codec::None => "none".to_string(),
+            Codec::Zstd(level) => format!("zstd{level}"),
+            Codec::Flate => "flate".to_string(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Codec, String> {
+        if s == "none" {
+            Ok(Codec::None)
+        } else if s == "flate" {
+            Ok(Codec::Flate)
+        } else if let Some(level) = s.strip_prefix("zstd") {
+            let level: i32 = if level.is_empty() {
+                3
+            } else {
+                level.parse().map_err(|_| format!("bad zstd level '{level}'"))?
+            };
+            Ok(Codec::Zstd(level))
+        } else {
+            Err(format!("unknown codec '{s}'"))
+        }
+    }
+
+    pub fn compress(&self, raw: &[u8]) -> Result<Vec<u8>, String> {
+        match self {
+            Codec::None => Ok(raw.to_vec()),
+            Codec::Zstd(level) => {
+                zstd::bulk::compress(raw, *level).map_err(|e| format!("zstd compress: {e}"))
+            }
+            Codec::Flate => {
+                let mut enc =
+                    flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::fast());
+                enc.write_all(raw).map_err(|e| e.to_string())?;
+                enc.finish().map_err(|e| e.to_string())
+            }
+        }
+    }
+
+    pub fn decompress(&self, comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
+        match self {
+            Codec::None => Ok(comp.to_vec()),
+            Codec::Zstd(_) => zstd::bulk::decompress(comp, raw_size)
+                .map_err(|e| format!("zstd decompress: {e}")),
+            Codec::Flate => {
+                let mut dec = flate2::read::ZlibDecoder::new(comp);
+                let mut out = Vec::with_capacity(raw_size);
+                dec.read_to_end(&mut out).map_err(|e| e.to_string())?;
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        (0..10_000u32).flat_map(|i| (i % 251).to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn roundtrip_all_codecs() {
+        let raw = sample();
+        for codec in [Codec::None, Codec::Zstd(3), Codec::Flate] {
+            let c = codec.compress(&raw).unwrap();
+            let d = codec.decompress(&c, raw.len()).unwrap();
+            assert_eq!(d, raw, "codec {codec:?}");
+        }
+    }
+
+    #[test]
+    fn compression_actually_compresses() {
+        let raw = sample();
+        for codec in [Codec::Zstd(3), Codec::Flate] {
+            let c = codec.compress(&raw).unwrap();
+            assert!(c.len() < raw.len() / 2, "codec {codec:?}: {} vs {}", c.len(), raw.len());
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for codec in [Codec::None, Codec::Zstd(7), Codec::Flate] {
+            assert_eq!(Codec::from_name(&codec.name()).unwrap(), codec);
+        }
+        assert!(Codec::from_name("lz77").is_err());
+    }
+
+    #[test]
+    fn empty_input() {
+        for codec in [Codec::None, Codec::Zstd(3), Codec::Flate] {
+            let c = codec.compress(&[]).unwrap();
+            assert_eq!(codec.decompress(&c, 0).unwrap(), Vec::<u8>::new());
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! femto-ROOT on-disk layout.
+//!
+//! ```text
+//! +--------------------+
+//! | magic  "FROOT1\0\0"|  8 bytes
+//! | header_pos  u64 LE |  8 bytes (patched after writing baskets)
+//! | basket bytes ...   |
+//! | header JSON        |  from header_pos to EOF
+//! +--------------------+
+//! ```
+//!
+//! The header describes the schema and, for every branch (one per content
+//! array and one per offsets array), its basket index: absolute file
+//! position, compressed size, raw size and item count per basket. This is
+//! what makes *selective* reading possible: a reader seeks straight to the
+//! baskets of the branches a query needs and touches nothing else — the
+//! first two orders of magnitude of the paper's Table 1.
+
+use crate::columnar::schema::{PrimType, Ty};
+use crate::format::compress::Codec;
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 8] = b"FROOT1\0\0";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BasketInfo {
+    /// Absolute byte position of the compressed basket in the file.
+    pub pos: u64,
+    pub comp_size: u64,
+    pub raw_size: u64,
+    pub items: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BranchKind {
+    /// A content array of the given primitive type.
+    Leaf(PrimType),
+    /// An offsets array, stored verbatim as i64 (length n_outer + 1).
+    Offsets,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BranchInfo {
+    pub name: String,
+    pub kind: BranchKind,
+    pub baskets: Vec<BasketInfo>,
+}
+
+impl BranchInfo {
+    pub fn total_items(&self) -> u64 {
+        self.baskets.iter().map(|b| b.items).sum()
+    }
+
+    pub fn total_comp_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.comp_size).sum()
+    }
+
+    pub fn total_raw_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.raw_size).sum()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Header {
+    pub schema: Ty,
+    pub n_events: u64,
+    pub codec: Codec,
+    pub branches: Vec<BranchInfo>,
+}
+
+impl Header {
+    pub fn branch(&self, name: &str) -> Option<&BranchInfo> {
+        self.branches.iter().find(|b| b.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("schema", self.schema.to_json()),
+            ("n_events", Json::num(self.n_events as f64)),
+            ("codec", Json::str(self.codec.name())),
+            (
+                "branches",
+                Json::Arr(
+                    self.branches
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("name", Json::str(b.name.clone())),
+                                (
+                                    "kind",
+                                    match b.kind {
+                                        BranchKind::Leaf(p) => Json::str(p.name()),
+                                        BranchKind::Offsets => Json::str("offsets"),
+                                    },
+                                ),
+                                (
+                                    "baskets",
+                                    Json::Arr(
+                                        b.baskets
+                                            .iter()
+                                            .map(|k| {
+                                                Json::Arr(vec![
+                                                    Json::num(k.pos as f64),
+                                                    Json::num(k.comp_size as f64),
+                                                    Json::num(k.raw_size as f64),
+                                                    Json::num(k.items as f64),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Header, String> {
+        let schema = Ty::from_json(j.get("schema").ok_or("missing schema")?)?;
+        let n_events = j.get("n_events").and_then(|v| v.as_u64()).ok_or("missing n_events")?;
+        let codec = Codec::from_name(
+            j.get("codec").and_then(|v| v.as_str()).ok_or("missing codec")?,
+        )?;
+        let mut branches = Vec::new();
+        for b in j.get("branches").and_then(|v| v.as_arr()).ok_or("missing branches")? {
+            let name = b.get("name").and_then(|v| v.as_str()).ok_or("branch name")?.to_string();
+            let kind_s = b.get("kind").and_then(|v| v.as_str()).ok_or("branch kind")?;
+            let kind = if kind_s == "offsets" {
+                BranchKind::Offsets
+            } else {
+                BranchKind::Leaf(
+                    PrimType::from_name(kind_s).ok_or_else(|| format!("bad kind '{kind_s}'"))?,
+                )
+            };
+            let mut baskets = Vec::new();
+            for k in b.get("baskets").and_then(|v| v.as_arr()).ok_or("baskets")? {
+                let a = k.as_arr().ok_or("basket entry")?;
+                if a.len() != 4 {
+                    return Err("basket entry must have 4 fields".into());
+                }
+                baskets.push(BasketInfo {
+                    pos: a[0].as_u64().ok_or("pos")?,
+                    comp_size: a[1].as_u64().ok_or("csize")?,
+                    raw_size: a[2].as_u64().ok_or("rsize")?,
+                    items: a[3].as_u64().ok_or("items")?,
+                });
+            }
+            branches.push(BranchInfo { name, kind, baskets });
+        }
+        Ok(Header {
+            schema,
+            n_events,
+            codec,
+            branches,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::schema::muon_event_schema;
+
+    #[test]
+    fn header_json_roundtrip() {
+        let h = Header {
+            schema: muon_event_schema(),
+            n_events: 123,
+            codec: Codec::Zstd(3),
+            branches: vec![BranchInfo {
+                name: "muons.pt".into(),
+                kind: BranchKind::Leaf(PrimType::F32),
+                baskets: vec![
+                    BasketInfo { pos: 16, comp_size: 100, raw_size: 400, items: 100 },
+                    BasketInfo { pos: 116, comp_size: 80, raw_size: 92, items: 23 },
+                ],
+            }],
+        };
+        let j = h.to_json();
+        let back = Header::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.branch("muons.pt").unwrap().total_items(), 123);
+        assert_eq!(back.branch("muons.pt").unwrap().total_raw_bytes(), 492);
+    }
+}

@@ -1,0 +1,13 @@
+//! femto-ROOT: a columnar, basketized, optionally-compressed on-disk format
+//! with selective branch reading — the stand-in for ROOT I/O and the BulkIO
+//! branch→array fast path (paper ref. [2]).
+
+pub mod compress;
+pub mod layout;
+pub mod reader;
+pub mod writer;
+
+pub use compress::Codec;
+pub use layout::{BasketInfo, BranchInfo, BranchKind, Header};
+pub use reader::DatasetReader;
+pub use writer::{write_dataset, WriteOptions};

@@ -1,0 +1,130 @@
+//! femto-ROOT writer: explode-format `ColumnSet` → on-disk branches/baskets.
+
+use crate::columnar::arrays::{Array, ColumnSet};
+use crate::format::compress::Codec;
+use crate::format::layout::{BasketInfo, BranchInfo, BranchKind, Header, MAGIC};
+use std::fs::File;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug)]
+pub struct WriteOptions {
+    pub codec: Codec,
+    /// Items per basket (ROOT default order of magnitude; tune per branch
+    /// type in real ROOT — fixed here).
+    pub basket_items: usize,
+}
+
+impl Default for WriteOptions {
+    fn default() -> Self {
+        Self {
+            codec: Codec::None,
+            basket_items: 64 * 1024,
+        }
+    }
+}
+
+/// Write a dataset file; returns total bytes written.
+pub fn write_dataset(path: &Path, cs: &ColumnSet, opts: WriteOptions) -> Result<u64, String> {
+    cs.validate()?;
+    let mut f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+    f.write_all(MAGIC).map_err(|e| e.to_string())?;
+    f.write_all(&0u64.to_le_bytes()).map_err(|e| e.to_string())?;
+
+    let mut branches: Vec<BranchInfo> = Vec::new();
+
+    // Offsets branches first (readers need them before content), then leaves,
+    // both in deterministic (BTreeMap) order.
+    for (name, off) in &cs.offsets {
+        let baskets = write_baskets_i64(&mut f, off, opts)?;
+        branches.push(BranchInfo {
+            name: format!("@offsets:{name}"),
+            kind: BranchKind::Offsets,
+            baskets,
+        });
+    }
+    for (name, arr) in &cs.leaves {
+        let baskets = write_baskets_array(&mut f, arr, opts)?;
+        branches.push(BranchInfo {
+            name: name.clone(),
+            kind: BranchKind::Leaf(arr.prim()),
+            baskets,
+        });
+    }
+
+    let header = Header {
+        schema: cs.schema.clone(),
+        n_events: cs.n_events as u64,
+        codec: opts.codec,
+        branches,
+    };
+    let header_pos = f.stream_position().map_err(|e| e.to_string())?;
+    let header_bytes = header.to_json().to_string().into_bytes();
+    f.write_all(&header_bytes).map_err(|e| e.to_string())?;
+    let end = f.stream_position().map_err(|e| e.to_string())?;
+
+    // Patch the header position.
+    f.seek(SeekFrom::Start(MAGIC.len() as u64)).map_err(|e| e.to_string())?;
+    f.write_all(&header_pos.to_le_bytes()).map_err(|e| e.to_string())?;
+    f.flush().map_err(|e| e.to_string())?;
+    Ok(end)
+}
+
+fn write_baskets_array(
+    f: &mut File,
+    arr: &Array,
+    opts: WriteOptions,
+) -> Result<Vec<BasketInfo>, String> {
+    let n = arr.len();
+    let mut baskets = Vec::new();
+    let mut lo = 0usize;
+    // Always emit at least one (possibly empty) basket so the branch exists.
+    loop {
+        let hi = (lo + opts.basket_items).min(n);
+        let chunk = arr.slice(lo, hi);
+        let raw = chunk.to_bytes();
+        baskets.push(write_one_basket(f, &raw, (hi - lo) as u64, opts.codec)?);
+        lo = hi;
+        if lo >= n {
+            break;
+        }
+    }
+    Ok(baskets)
+}
+
+fn write_baskets_i64(
+    f: &mut File,
+    values: &[i64],
+    opts: WriteOptions,
+) -> Result<Vec<BasketInfo>, String> {
+    let n = values.len();
+    let mut baskets = Vec::new();
+    let mut lo = 0usize;
+    loop {
+        let hi = (lo + opts.basket_items).min(n);
+        let raw: Vec<u8> = values[lo..hi].iter().flat_map(|x| x.to_le_bytes()).collect();
+        baskets.push(write_one_basket(f, &raw, (hi - lo) as u64, opts.codec)?);
+        lo = hi;
+        if lo >= n {
+            break;
+        }
+    }
+    Ok(baskets)
+}
+
+fn write_one_basket(
+    f: &mut File,
+    raw: &[u8],
+    items: u64,
+    codec: Codec,
+) -> Result<BasketInfo, String> {
+    let comp = codec.compress(raw)?;
+    let pos = f.stream_position().map_err(|e| e.to_string())?;
+    f.write_all(&comp).map_err(|e| e.to_string())?;
+    Ok(BasketInfo {
+        pos,
+        comp_size: comp.len() as u64,
+        raw_size: raw.len() as u64,
+        items,
+    })
+}

@@ -1,0 +1,384 @@
+//! Histogrammar-style composable aggregation (paper ref. [4]).
+//!
+//! The paper extends "the range of supported tasks ... by adopting
+//! generalized aggregation with Histogrammar": instead of a fixed histogram
+//! type, a query's result is a *tree* of composable aggregators, all of
+//! which share a `fill` / `merge` algebra. Merge is what the distributed
+//! aggregator applies across workers, so every aggregator here is a
+//! commutative monoid.
+
+use crate::util::json::Json;
+
+/// A composable aggregator. `fill` consumes (value, weight); `merge`
+/// combines two partial aggregations of the same shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Agg {
+    /// Σw
+    Count { entries: f64 },
+    /// Σw·x
+    Sum { entries: f64, sum: f64 },
+    /// mean of x
+    Average { entries: f64, mean: f64 },
+    /// mean + variance (Welford-style merge)
+    Deviate { entries: f64, mean: f64, m2: f64 },
+    /// min / max
+    Minimize { entries: f64, min: f64 },
+    Maximize { entries: f64, max: f64 },
+    /// Regular binning; each bin holds a sub-aggregator (this is what makes
+    /// the algebra composable: Bin(Count) is a histogram, Bin(Deviate) is a
+    /// profile plot, Bin(Bin(Count)) is 2-D...).
+    Bin {
+        lo: f64,
+        hi: f64,
+        bins: Vec<Agg>,
+        underflow: Box<Agg>,
+        overflow: Box<Agg>,
+    },
+}
+
+impl Agg {
+    pub fn count() -> Agg {
+        Agg::Count { entries: 0.0 }
+    }
+
+    pub fn sum() -> Agg {
+        Agg::Sum { entries: 0.0, sum: 0.0 }
+    }
+
+    pub fn average() -> Agg {
+        Agg::Average { entries: 0.0, mean: 0.0 }
+    }
+
+    pub fn deviate() -> Agg {
+        Agg::Deviate { entries: 0.0, mean: 0.0, m2: 0.0 }
+    }
+
+    pub fn minimize() -> Agg {
+        Agg::Minimize { entries: 0.0, min: f64::INFINITY }
+    }
+
+    pub fn maximize() -> Agg {
+        Agg::Maximize { entries: 0.0, max: f64::NEG_INFINITY }
+    }
+
+    pub fn bin(n: usize, lo: f64, hi: f64, template: Agg) -> Agg {
+        assert!(n > 0 && hi > lo);
+        Agg::Bin {
+            lo,
+            hi,
+            bins: vec![template.clone(); n],
+            underflow: Box::new(template.clone()),
+            overflow: Box::new(template),
+        }
+    }
+
+    /// A plain histogram = Bin(Count).
+    pub fn histogram(n: usize, lo: f64, hi: f64) -> Agg {
+        Agg::bin(n, lo, hi, Agg::count())
+    }
+
+    /// A profile plot = Bin(Deviate): binned in x, fills carry (x, y).
+    pub fn profile(n: usize, lo: f64, hi: f64) -> Agg {
+        Agg::bin(n, lo, hi, Agg::deviate())
+    }
+
+    pub fn entries(&self) -> f64 {
+        match self {
+            Agg::Count { entries }
+            | Agg::Sum { entries, .. }
+            | Agg::Average { entries, .. }
+            | Agg::Deviate { entries, .. }
+            | Agg::Minimize { entries, .. }
+            | Agg::Maximize { entries, .. } => *entries,
+            Agg::Bin { bins, underflow, overflow, .. } => {
+                bins.iter().map(|b| b.entries()).sum::<f64>()
+                    + underflow.entries()
+                    + overflow.entries()
+            }
+        }
+    }
+
+    /// Fill with a 1-D value. For Bin the value selects the bin and is also
+    /// passed to the sub-aggregator (use `fill2` for profile-style fills).
+    pub fn fill(&mut self, x: f64, w: f64) {
+        self.fill2(x, x, w);
+    }
+
+    /// Fill with (binning value x, quantity y).
+    pub fn fill2(&mut self, x: f64, y: f64, w: f64) {
+        if w <= 0.0 || x.is_nan() {
+            return;
+        }
+        match self {
+            Agg::Count { entries } => *entries += w,
+            Agg::Sum { entries, sum } => {
+                *entries += w;
+                *sum += w * y;
+            }
+            Agg::Average { entries, mean } => {
+                *entries += w;
+                *mean += (y - *mean) * w / *entries;
+            }
+            Agg::Deviate { entries, mean, m2 } => {
+                let delta = y - *mean;
+                *entries += w;
+                let shift = delta * w / *entries;
+                *mean += shift;
+                *m2 += w * delta * (y - *mean);
+            }
+            Agg::Minimize { entries, min } => {
+                *entries += w;
+                if y < *min {
+                    *min = y;
+                }
+            }
+            Agg::Maximize { entries, max } => {
+                *entries += w;
+                if y > *max {
+                    *max = y;
+                }
+            }
+            Agg::Bin { lo, hi, bins, underflow, overflow } => {
+                if x < *lo {
+                    underflow.fill2(x, y, w);
+                } else {
+                    let i = ((x - *lo) / (*hi - *lo) * bins.len() as f64) as usize;
+                    if i < bins.len() {
+                        bins[i].fill2(x, y, w);
+                    } else {
+                        overflow.fill2(x, y, w);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Merge another partial aggregation of the same shape.
+    pub fn merge(&mut self, other: &Agg) -> Result<(), String> {
+        match (self, other) {
+            (Agg::Count { entries: a }, Agg::Count { entries: b }) => {
+                *a += b;
+                Ok(())
+            }
+            (Agg::Sum { entries: a, sum: s }, Agg::Sum { entries: b, sum: t }) => {
+                *a += b;
+                *s += t;
+                Ok(())
+            }
+            (
+                Agg::Average { entries: a, mean: m },
+                Agg::Average { entries: b, mean: n },
+            ) => {
+                let tot = *a + b;
+                if tot > 0.0 {
+                    *m = (*m * *a + n * b) / tot;
+                }
+                *a = tot;
+                Ok(())
+            }
+            (
+                Agg::Deviate { entries: a, mean: ma, m2: sa },
+                Agg::Deviate { entries: b, mean: mb, m2: sb },
+            ) => {
+                let tot = *a + b;
+                if tot > 0.0 {
+                    let delta = mb - *ma;
+                    *sa += sb + delta * delta * *a * b / tot;
+                    *ma = (*ma * *a + mb * b) / tot;
+                }
+                *a = tot;
+                Ok(())
+            }
+            (Agg::Minimize { entries: a, min: x }, Agg::Minimize { entries: b, min: y }) => {
+                *a += b;
+                if y < x {
+                    *x = *y;
+                }
+                Ok(())
+            }
+            (Agg::Maximize { entries: a, max: x }, Agg::Maximize { entries: b, max: y }) => {
+                *a += b;
+                if y > x {
+                    *x = *y;
+                }
+                Ok(())
+            }
+            (
+                Agg::Bin { lo, hi, bins, underflow, overflow },
+                Agg::Bin { lo: lo2, hi: hi2, bins: bins2, underflow: u2, overflow: o2 },
+            ) => {
+                if lo != lo2 || hi != hi2 || bins.len() != bins2.len() {
+                    return Err("Bin shape mismatch".into());
+                }
+                for (a, b) in bins.iter_mut().zip(bins2) {
+                    a.merge(b)?;
+                }
+                underflow.merge(u2)?;
+                overflow.merge(o2)
+            }
+            _ => Err("aggregator shape mismatch".into()),
+        }
+    }
+
+    pub fn variance(&self) -> Option<f64> {
+        match self {
+            Agg::Deviate { entries, m2, .. } if *entries > 0.0 => Some(m2 / entries),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Agg::Count { entries } => Json::obj(vec![("count", Json::num(*entries))]),
+            Agg::Sum { entries, sum } => Json::obj(vec![
+                ("sum", Json::num(*sum)),
+                ("entries", Json::num(*entries)),
+            ]),
+            Agg::Average { entries, mean } => Json::obj(vec![
+                ("average", Json::num(*mean)),
+                ("entries", Json::num(*entries)),
+            ]),
+            Agg::Deviate { entries, mean, m2 } => Json::obj(vec![
+                ("deviate_mean", Json::num(*mean)),
+                ("m2", Json::num(*m2)),
+                ("entries", Json::num(*entries)),
+            ]),
+            Agg::Minimize { entries, min } => Json::obj(vec![
+                ("min", Json::num(*min)),
+                ("entries", Json::num(*entries)),
+            ]),
+            Agg::Maximize { entries, max } => Json::obj(vec![
+                ("max", Json::num(*max)),
+                ("entries", Json::num(*entries)),
+            ]),
+            Agg::Bin { lo, hi, bins, underflow, overflow } => Json::obj(vec![
+                ("lo", Json::num(*lo)),
+                ("hi", Json::num(*hi)),
+                ("bins", Json::Arr(bins.iter().map(|b| b.to_json()).collect())),
+                ("underflow", underflow.to_json()),
+                ("overflow", overflow.to_json()),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn histogram_is_bin_count() {
+        let mut h = Agg::histogram(4, 0.0, 4.0);
+        for x in [0.5, 1.5, 1.6, 3.9, 4.0, -1.0] {
+            h.fill(x, 1.0);
+        }
+        if let Agg::Bin { bins, underflow, overflow, .. } = &h {
+            assert_eq!(bins[0].entries(), 1.0);
+            assert_eq!(bins[1].entries(), 2.0);
+            assert_eq!(bins[3].entries(), 1.0);
+            assert_eq!(underflow.entries(), 1.0);
+            assert_eq!(overflow.entries(), 1.0);
+        } else {
+            panic!();
+        }
+        assert_eq!(h.entries(), 6.0);
+    }
+
+    #[test]
+    fn profile_tracks_mean_per_bin() {
+        let mut p = Agg::profile(2, 0.0, 2.0);
+        p.fill2(0.5, 10.0, 1.0);
+        p.fill2(0.6, 20.0, 1.0);
+        p.fill2(1.5, 5.0, 1.0);
+        if let Agg::Bin { bins, .. } = &p {
+            if let Agg::Deviate { mean, .. } = &bins[0] {
+                assert!((mean - 15.0).abs() < 1e-12);
+            } else {
+                panic!();
+            }
+            assert_eq!(bins[1].entries(), 1.0);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential_fill() {
+        // The distributed-aggregation property: fill two partials and merge
+        // == fill one aggregator with everything. Exercised for every shape.
+        let mut rng = Pcg32::new(9);
+        let xs: Vec<(f64, f64)> = (0..400)
+            .map(|_| (rng.uniform(-1.0, 11.0), rng.uniform(0.5, 2.0)))
+            .collect();
+        let shapes = vec![
+            Agg::count(),
+            Agg::sum(),
+            Agg::average(),
+            Agg::deviate(),
+            Agg::minimize(),
+            Agg::maximize(),
+            Agg::histogram(7, 0.0, 10.0),
+            Agg::profile(5, 0.0, 10.0),
+            Agg::bin(3, 0.0, 9.0, Agg::bin(2, 0.0, 9.0, Agg::count())),
+        ];
+        for shape in shapes {
+            let mut whole = shape.clone();
+            let mut a = shape.clone();
+            let mut b = shape.clone();
+            for (i, &(x, w)) in xs.iter().enumerate() {
+                whole.fill2(x, x * 0.5, w);
+                if i % 2 == 0 {
+                    a.fill2(x, x * 0.5, w);
+                } else {
+                    b.fill2(x, x * 0.5, w);
+                }
+            }
+            a.merge(&b).unwrap();
+            assert!(
+                agg_close(&a, &whole),
+                "merge != sequential for {shape:?}"
+            );
+        }
+    }
+
+    /// Numeric comparison via the JSON form with a relative tolerance
+    /// (merge reassociates floating-point sums, so exact equality is too
+    /// strict).
+    fn agg_close(a: &Agg, b: &Agg) -> bool {
+        fn close(x: &Json, y: &Json) -> bool {
+            match (x, y) {
+                (Json::Num(a), Json::Num(b)) => {
+                    (a.is_infinite() && b.is_infinite() && a.signum() == b.signum())
+                        || (a - b).abs() < 1e-6 * (1.0 + a.abs())
+                }
+                (Json::Arr(a), Json::Arr(b)) => {
+                    a.len() == b.len() && a.iter().zip(b).all(|(p, q)| close(p, q))
+                }
+                (Json::Obj(a), Json::Obj(b)) => {
+                    a.len() == b.len()
+                        && a.iter().zip(b).all(|((k1, v1), (k2, v2))| k1 == k2 && close(v1, v2))
+                }
+                (p, q) => p == q,
+            }
+        }
+        close(&a.to_json(), &b.to_json())
+    }
+
+    #[test]
+    fn merge_shape_mismatch_rejected() {
+        let mut a = Agg::histogram(4, 0.0, 1.0);
+        assert!(a.merge(&Agg::histogram(5, 0.0, 1.0)).is_err());
+        assert!(a.merge(&Agg::count()).is_err());
+    }
+
+    #[test]
+    fn deviate_variance() {
+        let mut d = Agg::deviate();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            d.fill(x, 1.0);
+        }
+        assert!((d.variance().unwrap() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,55 @@
+//! Terminal rendering of histograms — the "visualized histogram" the
+//! physicist sees within the latency budget.
+
+use super::h1::H1;
+
+/// Render a horizontal-bar ASCII histogram.
+pub fn render(h: &H1, title: &str, width: usize) -> String {
+    let max = h.bins.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{title}\n  entries={:.0}  mean={:.3}  stddev={:.3}  under={:.0} over={:.0}\n",
+        h.total(),
+        h.mean(),
+        h.stddev(),
+        h.underflow,
+        h.overflow
+    ));
+    for (i, &b) in h.bins.iter().enumerate() {
+        let frac = b / max;
+        let n = (frac * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:>10.3} | {:<w$} {:.0}\n",
+            h.bin_center(i),
+            "#".repeat(n),
+            b,
+            w = width
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_bins() {
+        let mut h = H1::new(5, 0.0, 5.0);
+        for x in [0.5, 2.5, 2.6, 4.9] {
+            h.fill(x);
+        }
+        let s = render(&h, "test", 20);
+        assert_eq!(s.lines().count(), 2 + 5);
+        assert!(s.contains("entries=4"));
+        // Tallest bin has the full bar width.
+        assert!(s.contains(&"#".repeat(20)));
+    }
+
+    #[test]
+    fn empty_histogram_no_panic() {
+        let h = H1::new(3, 0.0, 1.0);
+        let s = render(&h, "empty", 10);
+        assert!(s.contains("entries=0"));
+    }
+}

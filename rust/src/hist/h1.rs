@@ -1,0 +1,301 @@
+//! Fixed-binning 1-D histogram — the query result type.
+//!
+//! Tracks bin contents, under/overflow, and running moments; supports the
+//! `merge` operation that the distributed aggregator applies to partial
+//! histograms from workers (the paper's "histogram aggregation" subtasks).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct H1 {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<f64>,
+    pub underflow: f64,
+    pub overflow: f64,
+    /// Weighted count, Σw·x and Σw·x² for mean/stddev.
+    pub count: f64,
+    pub sum: f64,
+    pub sum2: f64,
+}
+
+impl H1 {
+    pub fn new(n_bins: usize, lo: f64, hi: f64) -> H1 {
+        assert!(n_bins > 0 && hi > lo, "bad binning {n_bins} [{lo}, {hi})");
+        H1 {
+            lo,
+            hi,
+            bins: vec![0.0; n_bins],
+            underflow: 0.0,
+            overflow: 0.0,
+            count: 0.0,
+            sum: 0.0,
+            sum2: 0.0,
+        }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins.len() as f64
+    }
+
+    #[inline]
+    pub fn bin_index(&self, x: f64) -> Option<usize> {
+        if x < self.lo {
+            None
+        } else {
+            let i = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            if i < self.bins.len() {
+                Some(i)
+            } else {
+                None // x >= hi → overflow (also catches x == hi)
+            }
+        }
+    }
+
+    #[inline]
+    pub fn fill(&mut self, x: f64) {
+        self.fill_w(x, 1.0);
+    }
+
+    #[inline]
+    pub fn fill_w(&mut self, x: f64, w: f64) {
+        if x.is_nan() {
+            return;
+        }
+        match self.bin_index(x) {
+            Some(i) => self.bins[i] += w,
+            None if x < self.lo => self.underflow += w,
+            None => self.overflow += w,
+        }
+        self.count += w;
+        self.sum += w * x;
+        self.sum2 += w * x * x;
+    }
+
+    /// Total weight including under/overflow.
+    pub fn total(&self) -> f64 {
+        self.count
+    }
+
+    /// Weight inside the binned range.
+    pub fn in_range(&self) -> f64 {
+        self.bins.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0.0 {
+            self.sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.count > 0.0 {
+            (self.sum2 / self.count - self.mean().powi(2)).max(0.0).sqrt()
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Index of the highest bin.
+    pub fn mode_bin(&self) -> usize {
+        self.bins
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Center of a bin.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * self.bin_width()
+    }
+
+    /// Merge a partial histogram (must have identical binning).
+    pub fn merge(&mut self, other: &H1) -> Result<(), String> {
+        if other.n_bins() != self.n_bins() || other.lo != self.lo || other.hi != self.hi {
+            return Err(format!(
+                "binning mismatch: {}x[{},{}) vs {}x[{},{})",
+                self.n_bins(),
+                self.lo,
+                self.hi,
+                other.n_bins(),
+                other.lo,
+                other.hi
+            ));
+        }
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum2 += other.sum2;
+        Ok(())
+    }
+
+    /// Add raw bin contents produced by a PJRT kernel (in-range bins only;
+    /// the kernels clamp out-of-range values into under/overflow slots).
+    pub fn add_bins(&mut self, bins: &[f32], underflow: f64, overflow: f64) -> Result<(), String> {
+        if bins.len() != self.bins.len() {
+            return Err(format!(
+                "kernel returned {} bins, histogram has {}",
+                bins.len(),
+                self.bins.len()
+            ));
+        }
+        let mut added = 0.0;
+        for (a, &b) in self.bins.iter_mut().zip(bins) {
+            *a += b as f64;
+            added += b as f64;
+        }
+        self.underflow += underflow;
+        self.overflow += overflow;
+        self.count += added + underflow + overflow;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lo", Json::num(self.lo)),
+            ("hi", Json::num(self.hi)),
+            ("bins", Json::Arr(self.bins.iter().map(|&b| Json::num(b)).collect())),
+            ("underflow", Json::num(self.underflow)),
+            ("overflow", Json::num(self.overflow)),
+            ("count", Json::num(self.count)),
+            ("sum", Json::num(self.sum)),
+            ("sum2", Json::num(self.sum2)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<H1, String> {
+        let bins: Vec<f64> = j
+            .get("bins")
+            .and_then(|b| b.as_arr())
+            .ok_or("missing bins")?
+            .iter()
+            .map(|b| b.as_f64().unwrap_or(0.0))
+            .collect();
+        if bins.is_empty() {
+            return Err("empty bins".into());
+        }
+        Ok(H1 {
+            lo: j.get("lo").and_then(|v| v.as_f64()).ok_or("lo")?,
+            hi: j.get("hi").and_then(|v| v.as_f64()).ok_or("hi")?,
+            bins,
+            underflow: j.get("underflow").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            overflow: j.get("overflow").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            count: j.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            sum: j.get("sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            sum2: j.get("sum2").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_and_ranges() {
+        let mut h = H1::new(10, 0.0, 10.0);
+        h.fill(0.0); // bin 0
+        h.fill(9.999); // bin 9
+        h.fill(10.0); // overflow (right-open)
+        h.fill(-0.1); // underflow
+        h.fill(5.5); // bin 5
+        assert_eq!(h.bins[0], 1.0);
+        assert_eq!(h.bins[9], 1.0);
+        assert_eq!(h.bins[5], 1.0);
+        assert_eq!(h.overflow, 1.0);
+        assert_eq!(h.underflow, 1.0);
+        assert_eq!(h.total(), 5.0);
+        assert_eq!(h.in_range(), 3.0);
+    }
+
+    #[test]
+    fn nan_ignored() {
+        let mut h = H1::new(4, 0.0, 1.0);
+        h.fill(f64::NAN);
+        assert_eq!(h.total(), 0.0);
+    }
+
+    #[test]
+    fn moments() {
+        let mut h = H1::new(100, 0.0, 10.0);
+        for x in [2.0, 4.0, 6.0] {
+            h.fill(x);
+        }
+        assert!((h.mean() - 4.0).abs() < 1e-12);
+        assert!((h.stddev() - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = H1::new(5, 0.0, 5.0);
+        let mut b = H1::new(5, 0.0, 5.0);
+        a.fill(1.5);
+        b.fill(1.7);
+        b.fill(4.2);
+        b.fill(-1.0);
+        a.merge(&b).unwrap();
+        assert_eq!(a.bins[1], 2.0);
+        assert_eq!(a.bins[4], 1.0);
+        assert_eq!(a.underflow, 1.0);
+        assert_eq!(a.total(), 4.0);
+    }
+
+    #[test]
+    fn merge_rejects_mismatch() {
+        let mut a = H1::new(5, 0.0, 5.0);
+        let b = H1::new(6, 0.0, 5.0);
+        assert!(a.merge(&b).is_err());
+        let c = H1::new(5, 0.0, 6.0);
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn weighted_fill() {
+        let mut h = H1::new(2, 0.0, 2.0);
+        h.fill_w(0.5, 2.5);
+        h.fill_w(1.5, 0.5);
+        assert_eq!(h.bins, vec![2.5, 0.5]);
+        assert_eq!(h.total(), 3.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut h = H1::new(8, -4.0, 4.0);
+        for i in 0..100 {
+            h.fill_w((i as f64) / 10.0 - 5.0, 1.0 + (i % 3) as f64);
+        }
+        let j = Json::parse(&h.to_json().to_string()).unwrap();
+        assert_eq!(H1::from_json(&j).unwrap(), h);
+    }
+
+    #[test]
+    fn add_bins_from_kernel() {
+        let mut h = H1::new(4, 0.0, 4.0);
+        h.add_bins(&[1.0, 0.0, 2.0, 0.0], 3.0, 1.0).unwrap();
+        assert_eq!(h.bins, vec![1.0, 0.0, 2.0, 0.0]);
+        assert_eq!(h.total(), 7.0);
+        assert!(h.add_bins(&[1.0], 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn mode_and_centers() {
+        let mut h = H1::new(4, 0.0, 8.0);
+        h.fill(5.0);
+        h.fill(5.5);
+        h.fill(1.0);
+        assert_eq!(h.mode_bin(), 2);
+        assert_eq!(h.bin_center(2), 5.0);
+    }
+}

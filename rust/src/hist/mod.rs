@@ -1,0 +1,8 @@
+//! Histogramming and Histogrammar-style composable aggregation (paper [4]).
+
+pub mod aggregator;
+pub mod ascii;
+pub mod h1;
+
+pub use aggregator::Agg;
+pub use h1::H1;

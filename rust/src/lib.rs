@@ -1,0 +1,22 @@
+//! # hepq — a real-time data query system for HEP
+//!
+//! Reproduction of "Toward real-time data query systems in HEP"
+//! (Pivarski, Lange, Jatuphattharachat, 2017). See DESIGN.md for the
+//! system inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack:
+//! Pallas kernels (L1) and JAX query graphs (L2) are AOT-compiled to HLO
+//! artifacts at build time; this crate loads and executes them via PJRT and
+//! provides everything around them — columnar storage, the query language
+//! and its code transformation, and the cache-aware distributed runtime.
+
+pub mod columnar;
+pub mod coord;
+pub mod datagen;
+pub mod format;
+pub mod engine;
+pub mod hist;
+pub mod queryir;
+pub mod runtime;
+pub mod server;
+pub mod util;

@@ -1,0 +1,241 @@
+//! hepq CLI: dataset generation, local queries, the query server, and a
+//! line-protocol client.
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::{generate_drellyan, generate_ttbar};
+use hepq::engine::executor::PjrtBackend;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
+use hepq::hist::{ascii, H1};
+use hepq::server::{Client, Server};
+use hepq::util::cli::{App, CommandSpec, Matches};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn app() -> App {
+    App {
+        name: "hepq",
+        about: "real-time HEP data query service (paper reproduction)",
+        commands: vec![
+            CommandSpec::new("gen-data", "generate a synthetic dataset file")
+                .opt("kind", "drellyan", "drellyan | ttbar")
+                .opt("events", "100000", "number of events")
+                .opt("seed", "42", "rng seed")
+                .opt("codec", "none", "none | zstd[level] | flate")
+                .opt("attrs", "95", "jet branches (ttbar only)")
+                .pos("out", "output .froot path"),
+            CommandSpec::new("inspect", "print a dataset file's header")
+                .pos("file", "input .froot path"),
+            CommandSpec::new("query", "run one query over a dataset file")
+                .opt("kind", "max_pt", "max_pt|eta_best|ptsum_pairs|mass_pairs|flat_hist")
+                .opt("list", "muons", "particle list to iterate")
+                .opt("bins", "64", "histogram bins")
+                .opt("lo", "0", "histogram lower edge")
+                .opt("hi", "128", "histogram upper edge")
+                .opt("backend", "columnar", "columnar|pjrt|heap-objects|stack-objects|framework-sim")
+                .opt("artifacts", "artifacts", "AOT artifact dir (pjrt backend)")
+                .pos("file", "input .froot path"),
+            CommandSpec::new("serve", "start the distributed query server")
+                .opt("addr", "127.0.0.1:8765", "listen address")
+                .opt("workers", "4", "worker threads")
+                .opt("policy", "cache-aware", "cache-aware|any-pull|round-robin")
+                .opt("cache-mb", "512", "per-worker cache budget (MiB)")
+                .opt("backend", "columnar", "columnar|pjrt")
+                .opt("artifacts", "artifacts", "AOT artifact dir")
+                .opt("partition-events", "16384", "events per partition")
+                .req("data", "comma-separated name=path.froot dataset list"),
+            CommandSpec::new("client", "send a query to a running server")
+                .opt("addr", "127.0.0.1:8765", "server address")
+                .opt("kind", "mass_pairs", "query kind")
+                .opt("list", "muons", "particle list")
+                .opt("bins", "64", "bins")
+                .opt("lo", "0", "lower edge")
+                .opt("hi", "128", "upper edge")
+                .pos("dataset", "dataset name on the server"),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, m) = match app().parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "gen-data" => cmd_gen(&m),
+        "inspect" => cmd_inspect(&m),
+        "query" => cmd_query(&m),
+        "serve" => cmd_serve(&m),
+        "client" => cmd_client(&m),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_gen(m: &Matches) -> Result<(), String> {
+    let events = m.usize("events").map_err(|e| e.to_string())?;
+    let seed = m.u64("seed").map_err(|e| e.to_string())?;
+    let codec = Codec::from_name(m.str("codec"))?;
+    let out = Path::new(m.str("out"));
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let cs = match m.str("kind") {
+        "drellyan" => generate_drellyan(events, seed),
+        "ttbar" => generate_ttbar(events, m.usize("attrs").map_err(|e| e.to_string())?, seed),
+        other => return Err(format!("unknown kind '{other}'")),
+    };
+    let bytes = write_dataset(out, &cs, WriteOptions { codec, basket_items: 256 * 1024 })?;
+    println!(
+        "wrote {} events ({} MiB) to {} in {:.2}s",
+        events,
+        bytes >> 20,
+        out.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(m: &Matches) -> Result<(), String> {
+    let r = DatasetReader::open(Path::new(m.str("file")))?;
+    let h = &r.header;
+    println!("schema:   {}", h.schema);
+    println!("events:   {}", h.n_events);
+    println!("codec:    {}", h.codec.name());
+    println!("branches: {}", h.branches.len());
+    for b in &h.branches {
+        println!(
+            "  {:<24} {:>10} items  {:>10} raw B  {:>10} comp B  {} baskets",
+            b.name,
+            b.total_items(),
+            b.total_raw_bytes(),
+            b.total_comp_bytes(),
+            b.baskets.len()
+        );
+    }
+    Ok(())
+}
+
+fn parse_backend(m: &Matches) -> Result<Backend, String> {
+    Ok(match m.str("backend") {
+        "columnar" => Backend::Columnar,
+        "heap-objects" => Backend::HeapObjects,
+        "stack-objects" => Backend::StackObjects,
+        "framework-sim" => Backend::FrameworkSim,
+        "pjrt" => Backend::Pjrt(PjrtBackend::new(m.str("artifacts"))),
+        other => return Err(format!("unknown backend '{other}'")),
+    })
+}
+
+fn cmd_query(m: &Matches) -> Result<(), String> {
+    let kind = QueryKind::from_name(m.str("kind"))
+        .ok_or_else(|| format!("unknown query kind '{}'", m.str("kind")))?;
+    let backend = parse_backend(m)?;
+    let mut r = DatasetReader::open(Path::new(m.str("file")))?;
+    let query = Query::new(kind, "file", m.str("list")).with_binning(
+        m.usize("bins").map_err(|e| e.to_string())?,
+        m.f64("lo").map_err(|e| e.to_string())?,
+        m.f64("hi").map_err(|e| e.to_string())?,
+    );
+    let t0 = std::time::Instant::now();
+    // Selective read: only the branches this query touches (the full
+    // framework and heap baselines deliberately read everything).
+    let leaves = query.leaf_paths();
+    let leaf_refs: Vec<&str> = leaves.iter().map(|s| s.as_str()).collect();
+    let data = match backend {
+        Backend::FrameworkSim | Backend::HeapObjects => r.read_full()?,
+        _ => r.read_selective(&leaf_refs)?,
+    };
+    let t_read = t0.elapsed();
+    let mut hist = H1::new(query.n_bins, query.lo, query.hi);
+    let t1 = std::time::Instant::now();
+    backend.run(&query, &data, &mut hist)?;
+    let t_run = t1.elapsed();
+    println!(
+        "{}",
+        ascii::render(&hist, &format!("{} over {}", m.str("kind"), m.str("file")), 48)
+    );
+    println!(
+        "read {:.1} ms ({} B), compute {:.1} ms, {:.2e} events/s",
+        t_read.as_secs_f64() * 1e3,
+        r.bytes_read(),
+        t_run.as_secs_f64() * 1e3,
+        data.n_events as f64 / t_run.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(m: &Matches) -> Result<(), String> {
+    let policy = match m.str("policy") {
+        "cache-aware" => Policy::cache_aware(),
+        "any-pull" => Policy::AnyPull,
+        "round-robin" => Policy::RoundRobinPush,
+        other => return Err(format!("unknown policy '{other}'")),
+    };
+    let backend = match m.str("backend") {
+        "columnar" => Backend::Columnar,
+        "pjrt" => Backend::Pjrt(PjrtBackend::new(m.str("artifacts"))),
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let cluster = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: m.usize("workers").map_err(|e| e.to_string())?,
+            cache_bytes_per_worker: m.usize("cache-mb").map_err(|e| e.to_string())? << 20,
+            policy,
+            fetch_delay_per_mib: Duration::from_millis(5),
+            claim_ttl: Duration::from_secs(60),
+            straggler: None,
+        },
+        backend,
+    ));
+    let part_events = m.usize("partition-events").map_err(|e| e.to_string())?;
+    for spec in m.str("data").split(',') {
+        let (name, path) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("bad dataset spec '{spec}' (want name=path)"))?;
+        let mut r = DatasetReader::open(Path::new(path))?;
+        let cs = r.read_full()?;
+        println!("loaded dataset '{name}': {} events from {path}", cs.n_events);
+        cluster.catalog.register(name, cs, part_events);
+    }
+    let server = Server::new(cluster);
+    server.serve(m.str("addr"))?;
+    Ok(())
+}
+
+fn cmd_client(m: &Matches) -> Result<(), String> {
+    let kind = QueryKind::from_name(m.str("kind"))
+        .ok_or_else(|| format!("unknown query kind '{}'", m.str("kind")))?;
+    let query = Query::new(kind, m.str("dataset"), m.str("list")).with_binning(
+        m.usize("bins").map_err(|e| e.to_string())?,
+        m.f64("lo").map_err(|e| e.to_string())?,
+        m.f64("hi").map_err(|e| e.to_string())?,
+    );
+    let mut client = Client::connect(m.str("addr"))?;
+    let resp = client.query(&query, |done, total| {
+        eprint!("\r{done}/{total} partitions...");
+    })?;
+    eprintln!();
+    if resp.get("ok") != Some(&hepq::util::json::Json::Bool(true)) {
+        return Err(format!("server error: {resp}"));
+    }
+    let hist = H1::from_json(resp.get("hist").ok_or("no hist in response")?)?;
+    println!("{}", ascii::render(&hist, &format!("{} @ {}", m.str("kind"), m.str("dataset")), 48));
+    println!(
+        "latency {:.0} ms, {} events",
+        resp.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        resp.get("events").and_then(|v| v.as_u64()).unwrap_or(0)
+    );
+    Ok(())
+}

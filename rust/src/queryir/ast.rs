@@ -1,0 +1,155 @@
+//! AST of the hepq query language — the "physicist's view" of section 3.
+//!
+//! The language is a small, indentation-structured Python subset, just rich
+//! enough to express the paper's Table-3 analysis functions:
+//!
+//! ```text
+//! for event in dataset:
+//!     n = len(event.muons)
+//!     for i in range(n):
+//!         for j in range(i + 1, n):
+//!             m1 = event.muons[i]
+//!             m2 = event.muons[j]
+//!             mass = sqrt(2*m1.pt*m2.pt*(cosh(m1.eta - m2.eta) - cos(m1.phi - m2.phi)))
+//!             fill(mass)
+//! ```
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    /// Variable reference (`event`, `muon`, `maximum`, ...).
+    Var(String),
+    /// Attribute access (`muon.pt`, `event.muons`).
+    Attr(Box<Expr>, String),
+    /// Indexing (`event.muons[i]`).
+    Index(Box<Expr>, Box<Expr>),
+    /// Binary arithmetic.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// Comparison (returns a boolean).
+    Cmp(CmpOp, Box<Expr>, Box<Expr>),
+    /// Boolean combination.
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+    /// Unary minus.
+    Neg(Box<Expr>),
+    /// Builtin call: len, sqrt, cosh, cos, sinh, sin, exp, log, abs,
+    /// min, max.
+    Call(String, Vec<Expr>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Loop iteration domains.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Iter {
+    /// `for event in dataset:` — the outer event loop.
+    Dataset,
+    /// `for muon in <list expr>:` — over a particle list.
+    List(Expr),
+    /// `for i in range(n)` / `range(a, b)`.
+    Range(Option<Expr>, Expr),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `x = expr`
+    Assign(String, Expr),
+    /// `for var in iter:` body
+    For {
+        var: String,
+        iter: Iter,
+        body: Vec<Stmt>,
+    },
+    /// `if cond:` then `else:` els
+    If {
+        cond: Expr,
+        then: Vec<Stmt>,
+        els: Vec<Stmt>,
+    },
+    /// `fill(expr)` / `fill(expr, weight)` — histogram fill.
+    Fill(Expr, Option<Expr>),
+}
+
+/// A parsed program: the statements of the top-level `for event in dataset:`
+/// body (the parser requires exactly that top-level shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    /// Name bound to the event (`event`).
+    pub event_var: String,
+    pub body: Vec<Stmt>,
+}
+
+pub const BUILTINS: &[&str] = &[
+    "len", "sqrt", "cosh", "cos", "sinh", "sin", "exp", "log", "abs", "min", "max",
+];
+
+pub fn apply_builtin(name: &str, args: &[f64]) -> Result<f64, String> {
+    let a = |i: usize| -> f64 { args[i] };
+    let need = |n: usize| -> Result<(), String> {
+        if args.len() == n {
+            Ok(())
+        } else {
+            Err(format!("{name} takes {n} args, got {}", args.len()))
+        }
+    };
+    Ok(match name {
+        "sqrt" => {
+            need(1)?;
+            a(0).sqrt()
+        }
+        "cosh" => {
+            need(1)?;
+            a(0).cosh()
+        }
+        "cos" => {
+            need(1)?;
+            a(0).cos()
+        }
+        "sinh" => {
+            need(1)?;
+            a(0).sinh()
+        }
+        "sin" => {
+            need(1)?;
+            a(0).sin()
+        }
+        "exp" => {
+            need(1)?;
+            a(0).exp()
+        }
+        "log" => {
+            need(1)?;
+            a(0).ln()
+        }
+        "abs" => {
+            need(1)?;
+            a(0).abs()
+        }
+        "min" => {
+            need(2)?;
+            a(0).min(a(1))
+        }
+        "max" => {
+            need(2)?;
+            a(0).max(a(1))
+        }
+        _ => return Err(format!("unknown builtin '{name}'")),
+    })
+}

@@ -1,0 +1,209 @@
+//! Executor for transformed (flat-loop) programs.
+//!
+//! Runs a `FlatProgram` directly over exploded arrays: the only mutable
+//! state is a `Vec<f64>` of slots, there is no allocation inside the event
+//! loop, and attribute loads are plain array indexing — the code the paper
+//! hands to Numba/Clang, here evaluated by a tight recursive interpreter
+//! over a resolved-column view (`engine::columnar_exec` plays the role of
+//! the fully compiled endpoint).
+
+use super::ast::{apply_builtin, BinOp, CmpOp};
+use super::transform::{CExpr, CStmt, FlatProgram};
+use crate::columnar::arrays::ColumnSet;
+use crate::hist::H1;
+
+/// Column views resolved once per partition.
+struct Ctx<'a> {
+    item_cols: Vec<&'a [f32]>,
+    event_cols: Vec<&'a [f32]>,
+    offsets: Vec<&'a [i64]>,
+    slots: Vec<f64>,
+    /// Current event index.
+    event: usize,
+}
+
+pub fn run(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    run_inner(prog, cs, hist, true)
+}
+
+/// Run without the fusion optimization (for the ablation bench).
+pub fn run_unfused(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    run_inner(prog, cs, hist, false)
+}
+
+fn run_inner(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1, allow_fused: bool) -> Result<(), String> {
+    let mut item_cols = Vec::with_capacity(prog.item_cols.len());
+    for path in &prog.item_cols {
+        item_cols.push(
+            cs.leaf(path)
+                .ok_or_else(|| format!("no leaf '{path}'"))?
+                .as_f32()
+                .ok_or_else(|| format!("leaf '{path}' is not f32"))?,
+        );
+    }
+    let mut event_cols = Vec::with_capacity(prog.event_cols.len());
+    for path in &prog.event_cols {
+        event_cols.push(
+            cs.leaf(path)
+                .ok_or_else(|| format!("no leaf '{path}'"))?
+                .as_f32()
+                .ok_or_else(|| format!("leaf '{path}' is not f32"))?,
+        );
+    }
+    let mut offsets = Vec::with_capacity(prog.lists.len());
+    for path in &prog.lists {
+        offsets.push(
+            cs.offsets_of(path)
+                .ok_or_else(|| format!("no list '{path}'"))?,
+        );
+    }
+    let mut ctx = Ctx {
+        item_cols,
+        event_cols,
+        offsets,
+        slots: vec![0.0; prog.n_slots],
+        event: 0,
+    };
+    if let (true, Some(fused)) = (allow_fused, prog.fused.as_ref()) {
+        // Single fused loop: `for k in 0..total` — no event iteration.
+        ctx.event = 0;
+        for s in fused {
+            exec(s, &mut ctx, hist)?;
+        }
+        return Ok(());
+    }
+    for ev in 0..cs.n_events {
+        ctx.event = ev;
+        for s in &prog.body {
+            exec(s, &mut ctx, hist)?;
+        }
+    }
+    Ok(())
+}
+
+fn exec(s: &CStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
+    match s {
+        CStmt::Assign { slot, expr } => {
+            ctx.slots[*slot] = eval(expr, ctx)?;
+            Ok(())
+        }
+        CStmt::LoopRange { slot, lo, hi, body } => {
+            let lo = eval(lo, ctx)? as i64;
+            let hi = eval(hi, ctx)? as i64;
+            for k in lo..hi {
+                ctx.slots[*slot] = k as f64;
+                for s in body {
+                    exec(s, ctx, hist)?;
+                }
+            }
+            Ok(())
+        }
+        CStmt::LoopList { list, slot, body } => {
+            let off = ctx.offsets[*list];
+            let (lo, hi) = (off[ctx.event] as i64, off[ctx.event + 1] as i64);
+            for k in lo..hi {
+                ctx.slots[*slot] = k as f64;
+                for s in body {
+                    exec(s, ctx, hist)?;
+                }
+            }
+            Ok(())
+        }
+        CStmt::If { cond, then, els } => {
+            let branch = if eval(cond, ctx)? != 0.0 { then } else { els };
+            for s in branch {
+                exec(s, ctx, hist)?;
+            }
+            Ok(())
+        }
+        CStmt::Fill { expr, weight } => {
+            let x = eval(expr, ctx)?;
+            let w = match weight {
+                Some(w) => eval(w, ctx)?,
+                None => 1.0,
+            };
+            hist.fill_w(x, w);
+            Ok(())
+        }
+    }
+}
+
+fn eval(e: &CExpr, ctx: &Ctx) -> Result<f64, String> {
+    Ok(match e {
+        CExpr::Const(n) => *n,
+        CExpr::Slot(s) => ctx.slots[*s],
+        CExpr::LoadItem { col, idx } => {
+            let k = eval(idx, ctx)? as usize;
+            let arr = ctx.item_cols[*col];
+            *arr.get(k)
+                .ok_or_else(|| format!("index {k} out of bounds (len {})", arr.len()))?
+                as f64
+        }
+        CExpr::LoadEvent { col } => {
+            let arr = ctx.event_cols[*col];
+            *arr.get(ctx.event)
+                .ok_or_else(|| format!("event {} out of bounds", ctx.event))? as f64
+        }
+        CExpr::ListLen { list } => {
+            let off = ctx.offsets[*list];
+            (off[ctx.event + 1] - off[ctx.event]) as f64
+        }
+        CExpr::Bin(op, l, r) => {
+            let (a, b) = (eval(l, ctx)?, eval(r, ctx)?);
+            match op {
+                BinOp::Add => a + b,
+                BinOp::Sub => a - b,
+                BinOp::Mul => a * b,
+                BinOp::Div => a / b,
+            }
+        }
+        CExpr::Cmp(op, l, r) => {
+            let (a, b) = (eval(l, ctx)?, eval(r, ctx)?);
+            let t = match op {
+                CmpOp::Lt => a < b,
+                CmpOp::Le => a <= b,
+                CmpOp::Gt => a > b,
+                CmpOp::Ge => a >= b,
+                CmpOp::Eq => a == b,
+                CmpOp::Ne => a != b,
+            };
+            t as i64 as f64
+        }
+        CExpr::And(l, r) => {
+            if eval(l, ctx)? != 0.0 {
+                (eval(r, ctx)? != 0.0) as i64 as f64
+            } else {
+                0.0
+            }
+        }
+        CExpr::Or(l, r) => {
+            if eval(l, ctx)? != 0.0 {
+                1.0
+            } else {
+                (eval(r, ctx)? != 0.0) as i64 as f64
+            }
+        }
+        CExpr::Not(x) => (eval(x, ctx)? == 0.0) as i64 as f64,
+        CExpr::Neg(x) => -eval(x, ctx)?,
+        CExpr::Call(name, args) => match *name {
+            // `list[j]` → offsets[list][i] + j.
+            "__list_base" => {
+                let lid = eval(&args[0], ctx)? as usize;
+                let j = eval(&args[1], ctx)?;
+                ctx.offsets[lid][ctx.event] as f64 + j
+            }
+            // Fusion bound: total content length of a list.
+            "__list_total" => {
+                let lid = eval(&args[0], ctx)? as usize;
+                *ctx.offsets[lid].last().unwrap() as f64
+            }
+            _ => {
+                let vals = args
+                    .iter()
+                    .map(|a| eval(a, ctx))
+                    .collect::<Result<Vec<_>, _>>()?;
+                apply_builtin(name, &vals)?
+            }
+        },
+    })
+}

@@ -1,0 +1,195 @@
+//! Object-view interpreter — the *untransformed* baseline.
+//!
+//! Materializes each event as a generic object tree (the GetEntry path) and
+//! walks the AST directly, exactly as a physicist's Python would run before
+//! any transformation/compilation. Figure 1's gap between this and the flat
+//! executor is the paper's code-transformation payoff.
+
+use super::ast::{apply_builtin, BinOp, CmpOp, Expr, Iter, Program, Stmt};
+use crate::columnar::arrays::ColumnSet;
+use crate::columnar::explode::{materialize, Value};
+use crate::hist::H1;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+#[derive(Clone, Debug)]
+enum RtVal {
+    Num(f64),
+    Node(Rc<Value>),
+}
+
+pub fn run(prog: &Program, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    let mut env: HashMap<String, RtVal> = HashMap::new();
+    for i in 0..cs.n_events {
+        let event = Rc::new(materialize(cs, i)?);
+        env.insert(prog.event_var.clone(), RtVal::Node(event));
+        for s in &prog.body {
+            exec(s, &mut env, hist)?;
+        }
+    }
+    Ok(())
+}
+
+/// Run over pre-materialized events (to time the analysis loop separately
+/// from materialization).
+pub fn run_materialized(prog: &Program, events: &[Value], hist: &mut H1) -> Result<(), String> {
+    let mut env: HashMap<String, RtVal> = HashMap::new();
+    for ev in events {
+        env.insert(prog.event_var.clone(), RtVal::Node(Rc::new(ev.clone())));
+        for s in &prog.body {
+            exec(s, &mut env, hist)?;
+        }
+    }
+    Ok(())
+}
+
+fn exec(s: &Stmt, env: &mut HashMap<String, RtVal>, hist: &mut H1) -> Result<(), String> {
+    match s {
+        Stmt::Assign(name, e) => {
+            let v = eval(e, env)?;
+            env.insert(name.clone(), v);
+            Ok(())
+        }
+        Stmt::For { var, iter, body } => {
+            match iter {
+                Iter::Dataset => return Err("nested dataset loop".into()),
+                Iter::Range(lo, hi) => {
+                    let lo = match lo {
+                        Some(e) => as_num(&eval(e, env)?)? as i64,
+                        None => 0,
+                    };
+                    let hi = as_num(&eval(hi, env)?)? as i64;
+                    for k in lo..hi {
+                        env.insert(var.clone(), RtVal::Num(k as f64));
+                        for s in body {
+                            exec(s, env, hist)?;
+                        }
+                    }
+                }
+                Iter::List(e) => {
+                    let node = as_node(&eval(e, env)?)?;
+                    let items = node
+                        .as_list()
+                        .ok_or("loop target is not a list")?
+                        .to_vec();
+                    for item in items {
+                        env.insert(var.clone(), RtVal::Node(Rc::new(item)));
+                        for s in body {
+                            exec(s, env, hist)?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }
+        Stmt::If { cond, then, els } => {
+            let c = as_num(&eval(cond, env)?)?;
+            let branch = if c != 0.0 { then } else { els };
+            for s in branch {
+                exec(s, env, hist)?;
+            }
+            Ok(())
+        }
+        Stmt::Fill(e, w) => {
+            let x = as_num(&eval(e, env)?)?;
+            let w = match w {
+                Some(w) => as_num(&eval(w, env)?)?,
+                None => 1.0,
+            };
+            hist.fill_w(x, w);
+            Ok(())
+        }
+    }
+}
+
+fn as_num(v: &RtVal) -> Result<f64, String> {
+    match v {
+        RtVal::Num(n) => Ok(*n),
+        RtVal::Node(n) => n.as_f64().ok_or_else(|| "expected a number".to_string()),
+    }
+}
+
+fn as_node(v: &RtVal) -> Result<Rc<Value>, String> {
+    match v {
+        RtVal::Node(n) => Ok(n.clone()),
+        RtVal::Num(_) => Err("expected an object".into()),
+    }
+}
+
+fn eval(e: &Expr, env: &HashMap<String, RtVal>) -> Result<RtVal, String> {
+    Ok(match e {
+        Expr::Num(n) => RtVal::Num(*n),
+        Expr::Var(name) => env
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("unknown variable '{name}'"))?,
+        Expr::Attr(base, attr) => {
+            let node = as_node(&eval(base, env)?)?;
+            let v = node
+                .get(attr)
+                .ok_or_else(|| format!("no attribute '{attr}'"))?
+                .clone();
+            RtVal::Node(Rc::new(v))
+        }
+        Expr::Index(base, idx) => {
+            let node = as_node(&eval(base, env)?)?;
+            let items = node.as_list().ok_or("indexing a non-list")?;
+            let k = as_num(&eval(idx, env)?)? as usize;
+            RtVal::Node(Rc::new(
+                items
+                    .get(k)
+                    .ok_or_else(|| format!("index {k} out of range"))?
+                    .clone(),
+            ))
+        }
+        Expr::Bin(op, l, r) => {
+            let (a, b) = (as_num(&eval(l, env)?)?, as_num(&eval(r, env)?)?);
+            RtVal::Num(match op {
+                BinOp::Add => a + b,
+                BinOp::Sub => a - b,
+                BinOp::Mul => a * b,
+                BinOp::Div => a / b,
+            })
+        }
+        Expr::Cmp(op, l, r) => {
+            let (a, b) = (as_num(&eval(l, env)?)?, as_num(&eval(r, env)?)?);
+            let t = match op {
+                CmpOp::Lt => a < b,
+                CmpOp::Le => a <= b,
+                CmpOp::Gt => a > b,
+                CmpOp::Ge => a >= b,
+                CmpOp::Eq => a == b,
+                CmpOp::Ne => a != b,
+            };
+            RtVal::Num(t as i64 as f64)
+        }
+        Expr::And(l, r) => {
+            if as_num(&eval(l, env)?)? != 0.0 {
+                RtVal::Num((as_num(&eval(r, env)?)? != 0.0) as i64 as f64)
+            } else {
+                RtVal::Num(0.0)
+            }
+        }
+        Expr::Or(l, r) => {
+            if as_num(&eval(l, env)?)? != 0.0 {
+                RtVal::Num(1.0)
+            } else {
+                RtVal::Num((as_num(&eval(r, env)?)? != 0.0) as i64 as f64)
+            }
+        }
+        Expr::Not(x) => RtVal::Num((as_num(&eval(x, env)?)? == 0.0) as i64 as f64),
+        Expr::Neg(x) => RtVal::Num(-as_num(&eval(x, env)?)?),
+        Expr::Call(name, args) => {
+            if name == "len" {
+                let node = as_node(&eval(&args[0], env)?)?;
+                let items = node.as_list().ok_or("len of a non-list")?;
+                return Ok(RtVal::Num(items.len() as f64));
+            }
+            let vals = args
+                .iter()
+                .map(|a| eval(a, env).and_then(|v| as_num(&v)))
+                .collect::<Result<Vec<_>, _>>()?;
+            RtVal::Num(apply_builtin(name, &vals)?)
+        }
+    })
+}

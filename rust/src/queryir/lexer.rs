@@ -1,0 +1,311 @@
+//! Indentation-aware lexer for the query language.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // structure
+    Newline,
+    Indent,
+    Dedent,
+    // keywords
+    For,
+    In,
+    If,
+    Else,
+    Elif,
+    And,
+    Or,
+    Not,
+    // punctuation
+    Colon,
+    Comma,
+    Dot,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Assign,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    Ne,
+    // atoms
+    Ident(String),
+    Num(f64),
+    Eof,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LexError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+pub fn lex(src: &str) -> Result<Vec<Tok>, LexError> {
+    let mut toks = Vec::new();
+    let mut indents: Vec<usize> = vec![0];
+    for (lineno, raw_line) in src.lines().enumerate() {
+        let line_no = lineno + 1;
+        // Strip comments.
+        let line = match raw_line.find('#') {
+            Some(i) => &raw_line[..i],
+            None => raw_line,
+        };
+        if line.trim().is_empty() {
+            continue; // blank lines don't affect indentation
+        }
+        let indent = line.len() - line.trim_start_matches(' ').len();
+        if line.trim_start().starts_with('\t') || line[..indent.min(line.len())].contains('\t') {
+            return Err(LexError {
+                line: line_no,
+                msg: "tabs are not allowed; use spaces".into(),
+            });
+        }
+        // Indentation bookkeeping.
+        let cur = *indents.last().unwrap();
+        if indent > cur {
+            indents.push(indent);
+            toks.push(Tok::Indent);
+        } else if indent < cur {
+            while *indents.last().unwrap() > indent {
+                indents.pop();
+                toks.push(Tok::Dedent);
+            }
+            if *indents.last().unwrap() != indent {
+                return Err(LexError {
+                    line: line_no,
+                    msg: format!("bad dedent to column {indent}"),
+                });
+            }
+        }
+        lex_line(line.trim_start(), line_no, &mut toks)?;
+        toks.push(Tok::Newline);
+    }
+    while indents.len() > 1 {
+        indents.pop();
+        toks.push(Tok::Dedent);
+    }
+    toks.push(Tok::Eof);
+    Ok(toks)
+}
+
+fn lex_line(s: &str, line: usize, out: &mut Vec<Tok>) -> Result<(), LexError> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i] as char;
+        match c {
+            ' ' => i += 1,
+            ':' => {
+                out.push(Tok::Colon);
+                i += 1;
+            }
+            ',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            '.' => {
+                // Could be the start of a number like `.5`? Not supported;
+                // always attribute dot.
+                out.push(Tok::Dot);
+                i += 1;
+            }
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '[' => {
+                out.push(Tok::LBracket);
+                i += 1;
+            }
+            ']' => {
+                out.push(Tok::RBracket);
+                i += 1;
+            }
+            '+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            '*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            '/' => {
+                out.push(Tok::Slash);
+                i += 1;
+            }
+            '<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Le);
+                    i += 2;
+                } else {
+                    out.push(Tok::Lt);
+                    i += 1;
+                }
+            }
+            '>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ge);
+                    i += 2;
+                } else {
+                    out.push(Tok::Gt);
+                    i += 1;
+                }
+            }
+            '=' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::EqEq);
+                    i += 2;
+                } else {
+                    out.push(Tok::Assign);
+                    i += 1;
+                }
+            }
+            '!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ne);
+                    i += 2;
+                } else {
+                    return Err(LexError {
+                        line,
+                        msg: "unexpected '!'".into(),
+                    });
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && (b[i] as char).is_ascii_digit() {
+                    i += 1;
+                }
+                if i < b.len() && b[i] == b'.' {
+                    i += 1;
+                    while i < b.len() && (b[i] as char).is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    i += 1;
+                    if i < b.len() && (b[i] == b'+' || b[i] == b'-') {
+                        i += 1;
+                    }
+                    while i < b.len() && (b[i] as char).is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                let text = &s[start..i];
+                let n: f64 = text.parse().map_err(|_| LexError {
+                    line,
+                    msg: format!("bad number '{text}'"),
+                })?;
+                out.push(Tok::Num(n));
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && ((b[i] as char).is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let word = &s[start..i];
+                out.push(match word {
+                    "for" => Tok::For,
+                    "in" => Tok::In,
+                    "if" => Tok::If,
+                    "else" => Tok::Else,
+                    "elif" => Tok::Elif,
+                    "and" => Tok::And,
+                    "or" => Tok::Or,
+                    "not" => Tok::Not,
+                    w => Tok::Ident(w.to_string()),
+                });
+            }
+            other => {
+                return Err(LexError {
+                    line,
+                    msg: format!("unexpected character '{other}'"),
+                })
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_structure() {
+        let toks = lex("for event in dataset:\n    x = 1.5\n").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Tok::For,
+                Tok::Ident("event".into()),
+                Tok::In,
+                Tok::Ident("dataset".into()),
+                Tok::Colon,
+                Tok::Newline,
+                Tok::Indent,
+                Tok::Ident("x".into()),
+                Tok::Assign,
+                Tok::Num(1.5),
+                Tok::Newline,
+                Tok::Dedent,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn nested_dedents() {
+        let toks = lex("for a in dataset:\n    if x > 1:\n        y = 2\nz = 3\n").unwrap();
+        let dedents = toks.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(dedents, 2);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored(){
+        let toks = lex("# header\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(toks.len(), 5); // ident assign num newline eof
+    }
+
+    #[test]
+    fn operators() {
+        let toks = lex("a <= b != c == d >= e\n").unwrap();
+        assert!(toks.contains(&Tok::Le));
+        assert!(toks.contains(&Tok::Ne));
+        assert!(toks.contains(&Tok::EqEq));
+        assert!(toks.contains(&Tok::Ge));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("x = $\n").is_err());
+        assert!(lex("for a:\n   b = 1\n  c = 2\n").is_err()); // bad dedent
+    }
+
+    #[test]
+    fn scientific_numbers() {
+        let toks = lex("x = 2.5e-3\n").unwrap();
+        assert!(toks.contains(&Tok::Num(2.5e-3)));
+    }
+}

@@ -1,0 +1,242 @@
+//! The query language and its code transformation (paper §3).
+//!
+//! Physicists write object-style loops over events; `transform` rewrites
+//! them algorithmically into flat loops over offsets/content arrays;
+//! `flat` executes the transformed program with zero materialization, and
+//! `interp` executes the *original* program over materialized objects (the
+//! baseline the transformation is measured against in Figure 1).
+
+pub mod ast;
+pub mod flat;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+pub mod tape;
+pub mod transform;
+
+pub use ast::Program;
+pub use parser::parse;
+pub use transform::{FlatProgram, Transformer};
+
+use crate::columnar::arrays::ColumnSet;
+use crate::columnar::schema::Ty;
+use crate::hist::H1;
+
+/// One-call compile: source text → transformed flat program.
+pub fn compile(src: &str, schema: &Ty) -> Result<FlatProgram, String> {
+    let prog = parse(src).map_err(|e| e.to_string())?;
+    Transformer::compile(&prog, schema).map_err(|e| e.to_string())
+}
+
+/// Parse + transform + run over a partition (the convenient API).
+///
+/// Uses the AST-walking `flat` evaluator: a postfix-tape VM was built and
+/// benchmarked (`queryir::tape`, bench_figure1's "tape VM" series) but
+/// measured *slower* on 3 of 4 Table-3 queries — rustc register-allocates
+/// the recursive evaluator better than a Vec-backed operand stack — so the
+/// tree walker stays the default (EXPERIMENTS.md §Perf).
+pub fn run_transformed(src: &str, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    let prog = compile(src, &cs.schema)?;
+    flat::run(&prog, cs, hist)
+}
+
+/// Parse + run the object interpreter (the baseline API).
+pub fn run_object_view(src: &str, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    let prog = parse(src).map_err(|e| e.to_string())?;
+    interp::run(&prog, cs, hist)
+}
+
+/// The paper's Table-3 analysis functions as query-language source.
+pub mod table3 {
+    pub const MAX_PT: &str = "\
+for event in dataset:
+    maximum = 0.0
+    n = len(event.muons)
+    for muon in event.muons:
+        if muon.pt > maximum:
+            maximum = muon.pt
+    if n > 0:
+        fill(maximum)
+";
+
+    pub const ETA_BEST: &str = "\
+for event in dataset:
+    maximum = 0.0
+    found = 0
+    eta = 0.0
+    for muon in event.muons:
+        if muon.pt > maximum:
+            maximum = muon.pt
+            eta = muon.eta
+            found = 1
+    if found > 0:
+        fill(eta)
+";
+
+    pub const PTSUM_PAIRS: &str = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            m1 = event.muons[i]
+            m2 = event.muons[j]
+            fill(m1.pt + m2.pt)
+";
+
+    pub const MASS_PAIRS: &str = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            m1 = event.muons[i]
+            m2 = event.muons[j]
+            mass = sqrt(2 * m1.pt * m2.pt * (cosh(m1.eta - m2.eta) - cos(m1.phi - m2.phi)))
+            fill(mass)
+";
+
+    /// Table 1's payload (fusable: one total loop over one list).
+    pub const JET_PT: &str = "\
+for event in dataset:
+    for jet in event.jets:
+        fill(jet.pt)
+";
+
+    /// Same flat fill over muons, for the DY dataset.
+    pub const MUON_PT: &str = "\
+for event in dataset:
+    for muon in event.muons:
+        fill(muon.pt)
+";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_drellyan, generate_ttbar};
+    use crate::engine::{columnar_exec, QueryKind};
+
+    fn assert_hists_eq(a: &H1, b: &H1, what: &str) {
+        assert_eq!(a.total(), b.total(), "{what}: totals");
+        let diff: f64 = a.bins.iter().zip(&b.bins).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff <= 4.0, "{what}: bins differ by {diff}");
+    }
+
+    /// The central §3 property: interpreter (objects) and transformed
+    /// (arrays) programs produce identical histograms.
+    #[test]
+    fn transform_equals_interpreter_on_table3() {
+        let cs = generate_drellyan(1200, 31);
+        for (name, src, (lo, hi)) in [
+            ("max_pt", table3::MAX_PT, (0.0, 128.0)),
+            ("eta_best", table3::ETA_BEST, (-2.4, 2.4)),
+            ("ptsum", table3::PTSUM_PAIRS, (0.0, 256.0)),
+            ("mass", table3::MASS_PAIRS, (0.0, 128.0)),
+        ] {
+            let mut h_obj = H1::new(64, lo, hi);
+            run_object_view(src, &cs, &mut h_obj).unwrap();
+            let mut h_flat = H1::new(64, lo, hi);
+            run_transformed(src, &cs, &mut h_flat).unwrap();
+            assert_eq!(h_obj.bins, h_flat.bins, "{name}");
+            assert_eq!(h_obj.total(), h_flat.total(), "{name}");
+        }
+    }
+
+    /// The transformed program must also match the hand-written columnar
+    /// executor (the "what the compiler should have produced" check).
+    /// Note: the query-language MAX_PT starts its maximum at 0.0 (as in the
+    /// paper's pseudocode), identical in effect to -inf here because all
+    /// generated pts are positive.
+    #[test]
+    fn transform_equals_handwritten_columnar() {
+        let cs = generate_drellyan(1500, 32);
+        let cases: [(&str, QueryKind); 4] = [
+            (table3::MAX_PT, QueryKind::MaxPt),
+            (table3::ETA_BEST, QueryKind::EtaBest),
+            (table3::PTSUM_PAIRS, QueryKind::PtSumPairs),
+            (table3::MASS_PAIRS, QueryKind::MassPairs),
+        ];
+        for (src, kind) in cases {
+            let (lo, hi) = kind.default_binning();
+            let mut h_lang = H1::new(64, lo, hi);
+            run_transformed(src, &cs, &mut h_lang).unwrap();
+            let mut h_hand = H1::new(64, lo, hi);
+            columnar_exec::run(kind, &cs, "muons", &mut h_hand).unwrap();
+            assert_hists_eq(&h_lang, &h_hand, kind.artifact());
+        }
+    }
+
+    #[test]
+    fn fusion_applies_to_total_loops_only() {
+        let schema = crate::columnar::schema::jet_event_schema(5);
+        let fused = compile(table3::JET_PT, &schema).unwrap();
+        assert!(fused.fused.is_some(), "jet-pt fill should fuse");
+
+        let dy = crate::columnar::schema::muon_event_schema();
+        let not_fused = compile(table3::MAX_PT, &dy).unwrap();
+        assert!(not_fused.fused.is_none(), "max-pt has per-event state");
+    }
+
+    #[test]
+    fn fused_and_unfused_agree() {
+        let cs = generate_ttbar(800, 5, 33);
+        let prog = compile(table3::JET_PT, &cs.schema).unwrap();
+        let mut h_fused = H1::new(64, 0.0, 256.0);
+        flat::run(&prog, &cs, &mut h_fused).unwrap();
+        let mut h_loop = H1::new(64, 0.0, 256.0);
+        flat::run_unfused(&prog, &cs, &mut h_loop).unwrap();
+        assert_eq!(h_fused.bins, h_loop.bins);
+        assert_eq!(h_fused.total(), h_loop.total());
+    }
+
+    #[test]
+    fn event_level_leaves_work() {
+        let cs = generate_drellyan(500, 34);
+        let src = "for event in dataset:\n    fill(event.met)\n";
+        let mut h_obj = H1::new(32, 0.0, 100.0);
+        run_object_view(src, &cs, &mut h_obj).unwrap();
+        let mut h_flat = H1::new(32, 0.0, 100.0);
+        run_transformed(src, &cs, &mut h_flat).unwrap();
+        assert_eq!(h_obj.bins, h_flat.bins);
+        assert_eq!(h_obj.total(), 500.0);
+    }
+
+    #[test]
+    fn weighted_fills_work() {
+        let cs = generate_drellyan(300, 35);
+        let src = "for event in dataset:\n    fill(event.met, 2.0)\n";
+        let mut h = H1::new(32, 0.0, 100.0);
+        run_transformed(src, &cs, &mut h).unwrap();
+        assert_eq!(h.total(), 600.0);
+    }
+
+    #[test]
+    fn helpful_errors() {
+        let cs = generate_drellyan(10, 36);
+        let bad_attr = "for event in dataset:\n    for m in event.muons:\n        fill(m.bogus)\n";
+        let err = run_transformed(bad_attr, &cs, &mut H1::new(4, 0.0, 1.0)).unwrap_err();
+        assert!(err.contains("bogus"), "{err}");
+        let bad_var = "for event in dataset:\n    fill(nope)\n";
+        let err = run_transformed(bad_var, &cs, &mut H1::new(4, 0.0, 1.0)).unwrap_err();
+        assert!(err.contains("nope"), "{err}");
+        let bad_fn = "for event in dataset:\n    fill(tan(1))\n";
+        let err = run_transformed(bad_fn, &cs, &mut H1::new(4, 0.0, 1.0)).unwrap_err();
+        assert!(err.contains("tan"), "{err}");
+    }
+
+    #[test]
+    fn cuts_with_boolean_logic() {
+        let cs = generate_drellyan(2000, 37);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 20 and muon.eta < 1.0 and muon.eta > -1.0:
+            fill(muon.pt)
+";
+        let mut h_obj = H1::new(64, 0.0, 128.0);
+        run_object_view(src, &cs, &mut h_obj).unwrap();
+        let mut h_flat = H1::new(64, 0.0, 128.0);
+        run_transformed(src, &cs, &mut h_flat).unwrap();
+        assert_eq!(h_obj.bins, h_flat.bins);
+        assert!(h_obj.total() > 0.0);
+    }
+}

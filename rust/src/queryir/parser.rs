@@ -1,0 +1,428 @@
+//! Recursive-descent parser: tokens → `Program`.
+
+use super::ast::{BinOp, CmpOp, Expr, Iter, Program, Stmt};
+use super::lexer::{lex, Tok};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+pub fn parse(src: &str) -> Result<Program, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError(e.to_string()))?;
+    let mut p = Parser { toks, pos: 0 };
+    p.program()
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        self.toks.get(self.pos).unwrap_or(&Tok::Eof)
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.peek().clone();
+        self.pos += 1;
+        t
+    }
+
+    fn expect(&mut self, t: &Tok) -> Result<(), ParseError> {
+        if self.peek() == t {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(ParseError(format!("expected {t:?}, found {:?}", self.peek())))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(ParseError(format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    fn program(&mut self) -> Result<Program, ParseError> {
+        // `for <event> in dataset:` INDENT body DEDENT EOF
+        self.expect(&Tok::For)?;
+        let event_var = self.ident()?;
+        self.expect(&Tok::In)?;
+        let ds = self.ident()?;
+        if ds != "dataset" {
+            return Err(ParseError(format!(
+                "top-level loop must be over 'dataset', found '{ds}'"
+            )));
+        }
+        self.expect(&Tok::Colon)?;
+        self.expect(&Tok::Newline)?;
+        let body = self.block()?;
+        match self.peek() {
+            Tok::Eof => Ok(Program { event_var, body }),
+            other => Err(ParseError(format!(
+                "unexpected {other:?} after the event loop (only one top-level loop allowed)"
+            ))),
+        }
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        self.expect(&Tok::Indent)?;
+        let mut stmts = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Dedent => {
+                    self.pos += 1;
+                    return Ok(stmts);
+                }
+                Tok::Eof => return Ok(stmts),
+                _ => stmts.push(self.statement()?),
+            }
+        }
+    }
+
+    fn statement(&mut self) -> Result<Stmt, ParseError> {
+        match self.peek().clone() {
+            Tok::For => {
+                self.pos += 1;
+                let var = self.ident()?;
+                self.expect(&Tok::In)?;
+                let iter = self.iter_domain()?;
+                self.expect(&Tok::Colon)?;
+                self.expect(&Tok::Newline)?;
+                let body = self.block()?;
+                Ok(Stmt::For { var, iter, body })
+            }
+            Tok::If => {
+                self.pos += 1;
+                self.if_tail()
+            }
+            Tok::Ident(name) => {
+                // `fill(expr)` or assignment.
+                if name == "fill" {
+                    self.pos += 1;
+                    self.expect(&Tok::LParen)?;
+                    let e = self.expr()?;
+                    let w = if self.peek() == &Tok::Comma {
+                        self.pos += 1;
+                        Some(self.expr()?)
+                    } else {
+                        None
+                    };
+                    self.expect(&Tok::RParen)?;
+                    self.expect(&Tok::Newline)?;
+                    Ok(Stmt::Fill(e, w))
+                } else {
+                    self.pos += 1;
+                    self.expect(&Tok::Assign)?;
+                    let e = self.expr()?;
+                    self.expect(&Tok::Newline)?;
+                    Ok(Stmt::Assign(name, e))
+                }
+            }
+            other => Err(ParseError(format!("unexpected {other:?} at statement start"))),
+        }
+    }
+
+    fn if_tail(&mut self) -> Result<Stmt, ParseError> {
+        let cond = self.expr()?;
+        self.expect(&Tok::Colon)?;
+        self.expect(&Tok::Newline)?;
+        let then = self.block()?;
+        let els = match self.peek() {
+            Tok::Else => {
+                self.pos += 1;
+                self.expect(&Tok::Colon)?;
+                self.expect(&Tok::Newline)?;
+                self.block()?
+            }
+            Tok::Elif => {
+                self.pos += 1;
+                vec![self.if_tail()?]
+            }
+            _ => Vec::new(),
+        };
+        Ok(Stmt::If { cond, then, els })
+    }
+
+    fn iter_domain(&mut self) -> Result<Iter, ParseError> {
+        // `range(...)` or a list expression.
+        if let Tok::Ident(name) = self.peek().clone() {
+            if name == "range" {
+                self.pos += 1;
+                self.expect(&Tok::LParen)?;
+                let first = self.expr()?;
+                let iter = if self.peek() == &Tok::Comma {
+                    self.pos += 1;
+                    let second = self.expr()?;
+                    Iter::Range(Some(first), second)
+                } else {
+                    Iter::Range(None, first)
+                };
+                self.expect(&Tok::RParen)?;
+                return Ok(iter);
+            }
+            if name == "dataset" {
+                self.pos += 1;
+                return Ok(Iter::Dataset);
+            }
+        }
+        Ok(Iter::List(self.expr()?))
+    }
+
+    // Expression precedence: or < and < not < cmp < add < mul < unary < postfix.
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while self.peek() == &Tok::Or {
+            self.pos += 1;
+            let rhs = self.and_expr()?;
+            lhs = Expr::Or(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.not_expr()?;
+        while self.peek() == &Tok::And {
+            self.pos += 1;
+            let rhs = self.not_expr()?;
+            lhs = Expr::And(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr, ParseError> {
+        if self.peek() == &Tok::Not {
+            self.pos += 1;
+            Ok(Expr::Not(Box::new(self.not_expr()?)))
+        } else {
+            self.cmp_expr()
+        }
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Lt => CmpOp::Lt,
+            Tok::Le => CmpOp::Le,
+            Tok::Gt => CmpOp::Gt,
+            Tok::Ge => CmpOp::Ge,
+            Tok::EqEq => CmpOp::Eq,
+            Tok::Ne => CmpOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.pos += 1;
+        let rhs = self.add_expr()?;
+        Ok(Expr::Cmp(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.pos += 1;
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                _ => return Ok(lhs),
+            };
+            self.pos += 1;
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ParseError> {
+        if self.peek() == &Tok::Minus {
+            self.pos += 1;
+            Ok(Expr::Neg(Box::new(self.unary_expr()?)))
+        } else {
+            self.postfix_expr()
+        }
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek() {
+                Tok::Dot => {
+                    self.pos += 1;
+                    let name = self.ident()?;
+                    e = Expr::Attr(Box::new(e), name);
+                }
+                Tok::LBracket => {
+                    self.pos += 1;
+                    let idx = self.expr()?;
+                    self.expect(&Tok::RBracket)?;
+                    e = Expr::Index(Box::new(e), Box::new(idx));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Tok::Num(n) => Ok(Expr::Num(n)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                if self.peek() == &Tok::LParen {
+                    self.pos += 1;
+                    let mut args = Vec::new();
+                    if self.peek() != &Tok::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if self.peek() == &Tok::Comma {
+                                self.pos += 1;
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(&Tok::RParen)?;
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => Err(ParseError(format!("unexpected {other:?} in expression"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_max_pt() {
+        let src = "\
+for event in dataset:
+    maximum = 0.0
+    n = len(event.muons)
+    for muon in event.muons:
+        if muon.pt > maximum:
+            maximum = muon.pt
+    if n > 0:
+        fill(maximum)
+";
+        let p = parse(src).unwrap();
+        assert_eq!(p.event_var, "event");
+        assert_eq!(p.body.len(), 4);
+        match &p.body[2] {
+            Stmt::For { var, iter, body } => {
+                assert_eq!(var, "muon");
+                assert_eq!(
+                    iter,
+                    &Iter::List(Expr::Attr(
+                        Box::new(Expr::Var("event".into())),
+                        "muons".into()
+                    ))
+                );
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_pair_loop() {
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            m1 = event.muons[i]
+            m2 = event.muons[j]
+            fill(m1.pt + m2.pt)
+";
+        let p = parse(src).unwrap();
+        match &p.body[1] {
+            Stmt::For { iter: Iter::Range(None, _), body, .. } => match &body[0] {
+                Stmt::For { iter: Iter::Range(Some(_), _), body, .. } => {
+                    assert_eq!(body.len(), 3);
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn precedence() {
+        let src = "for e in dataset:\n    x = 1 + 2 * 3 - 4 / 2\n";
+        let p = parse(src).unwrap();
+        match &p.body[0] {
+            Stmt::Assign(_, e) => {
+                // (1 + (2*3)) - (4/2)
+                match e {
+                    Expr::Bin(BinOp::Sub, l, _) => match &**l {
+                        Expr::Bin(BinOp::Add, _, r) => {
+                            assert!(matches!(&**r, Expr::Bin(BinOp::Mul, _, _)))
+                        }
+                        other => panic!("{other:?}"),
+                    },
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn elif_and_bool_ops() {
+        let src = "\
+for e in dataset:
+    if x > 1 and not y < 2:
+        fill(1)
+    elif x < 0 or y == 3:
+        fill(2)
+    else:
+        fill(3)
+";
+        let p = parse(src).unwrap();
+        match &p.body[0] {
+            Stmt::If { cond: Expr::And(_, _), els, .. } => {
+                assert_eq!(els.len(), 1);
+                assert!(matches!(&els[0], Stmt::If { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_non_dataset_top_loop() {
+        assert!(parse("for e in events:\n    fill(1)\n").is_err());
+        assert!(parse("x = 1\n").is_err());
+    }
+
+    #[test]
+    fn weighted_fill() {
+        let p = parse("for e in dataset:\n    fill(e.met, 2.0)\n").unwrap();
+        assert!(matches!(&p.body[0], Stmt::Fill(_, Some(_))));
+    }
+}

@@ -1,0 +1,487 @@
+//! Bytecode-style execution of transformed programs.
+//!
+//! The straight `flat` evaluator walks the `CExpr` tree for every muon and
+//! every pair — recursion, `Box` chasing and match dispatch in the hottest
+//! loop of the system. This module compiles each expression into a linear
+//! postfix **op tape** evaluated over a reusable f64 stack (with relative
+//! jumps for short-circuit booleans), and mirrors the statement tree with
+//! tape-compiled conditions/bounds. This is the in-repo analogue of the
+//! paper handing transformed code to Numba/Clang: same semantics
+//! (cross-checked against `flat` and the object interpreter by tests),
+//! substantially less interpretive overhead.
+
+use super::ast::{apply_builtin, BinOp, CmpOp};
+use super::transform::{CExpr, CStmt, FlatProgram};
+use crate::columnar::arrays::ColumnSet;
+use crate::hist::H1;
+
+#[derive(Clone, Debug)]
+pub enum Op {
+    Const(f64),
+    Slot(u16),
+    /// pop idx → push item_cols[col][idx]
+    LoadItem(u16),
+    LoadEvent(u16),
+    ListLen(u16),
+    /// pop j → push offsets[list][event] + j
+    ListBase(u16),
+    /// push offsets[list].last()
+    ListTotal(u16),
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    Not,
+    /// pop x; if x == 0 push 0.0 and jump forward by the offset.
+    JumpIfZeroPush0(u16),
+    /// pop x; if x != 0 push 1.0 and jump forward by the offset.
+    JumpIfNonZeroPush1(u16),
+    /// pop x → push (x != 0) as 0/1 (normalizes the rhs of and/or).
+    Truthy,
+    Call1(fn(f64) -> f64),
+    Call2(fn(f64, f64) -> f64),
+    /// Fallback for builtins without a fast-path pointer.
+    CallN(&'static str, u8),
+}
+
+/// A compiled expression: postfix ops + the max stack depth it needs.
+#[derive(Clone, Debug, Default)]
+pub struct Tape {
+    pub ops: Vec<Op>,
+}
+
+#[derive(Clone, Debug)]
+pub enum TStmt {
+    Assign { slot: usize, tape: Tape },
+    LoopRange { slot: usize, lo: Tape, hi: Tape, body: Vec<TStmt> },
+    LoopList { list: usize, slot: usize, body: Vec<TStmt> },
+    If { cond: Tape, then: Vec<TStmt>, els: Vec<TStmt> },
+    Fill { tape: Tape, weight: Option<Tape> },
+}
+
+/// Tape-compiled whole program.
+#[derive(Clone, Debug)]
+pub struct TapeProgram {
+    pub item_cols: Vec<String>,
+    pub event_cols: Vec<String>,
+    pub lists: Vec<String>,
+    pub n_slots: usize,
+    pub body: Vec<TStmt>,
+    pub fused: Option<Vec<TStmt>>,
+}
+
+pub fn compile(prog: &FlatProgram) -> TapeProgram {
+    TapeProgram {
+        item_cols: prog.item_cols.clone(),
+        event_cols: prog.event_cols.clone(),
+        lists: prog.lists.clone(),
+        n_slots: prog.n_slots,
+        body: prog.body.iter().map(stmt).collect(),
+        fused: prog.fused.as_ref().map(|b| b.iter().map(stmt).collect()),
+    }
+}
+
+fn stmt(s: &CStmt) -> TStmt {
+    match s {
+        CStmt::Assign { slot, expr } => TStmt::Assign { slot: *slot, tape: tape_of(expr) },
+        CStmt::LoopRange { slot, lo, hi, body } => TStmt::LoopRange {
+            slot: *slot,
+            lo: tape_of(lo),
+            hi: tape_of(hi),
+            body: body.iter().map(stmt).collect(),
+        },
+        CStmt::LoopList { list, slot, body } => TStmt::LoopList {
+            list: *list,
+            slot: *slot,
+            body: body.iter().map(stmt).collect(),
+        },
+        CStmt::If { cond, then, els } => TStmt::If {
+            cond: tape_of(cond),
+            then: then.iter().map(stmt).collect(),
+            els: els.iter().map(stmt).collect(),
+        },
+        CStmt::Fill { expr, weight } => TStmt::Fill {
+            tape: tape_of(expr),
+            weight: weight.as_ref().map(tape_of),
+        },
+    }
+}
+
+fn tape_of(e: &CExpr) -> Tape {
+    let mut t = Tape::default();
+    emit(e, &mut t.ops);
+    t
+}
+
+fn emit(e: &CExpr, ops: &mut Vec<Op>) {
+    match e {
+        CExpr::Const(n) => ops.push(Op::Const(*n)),
+        CExpr::Slot(s) => ops.push(Op::Slot(*s as u16)),
+        CExpr::LoadItem { col, idx } => {
+            emit(idx, ops);
+            ops.push(Op::LoadItem(*col as u16));
+        }
+        CExpr::LoadEvent { col } => ops.push(Op::LoadEvent(*col as u16)),
+        CExpr::ListLen { list } => ops.push(Op::ListLen(*list as u16)),
+        CExpr::Bin(op, l, r) => {
+            emit(l, ops);
+            emit(r, ops);
+            ops.push(match op {
+                BinOp::Add => Op::Add,
+                BinOp::Sub => Op::Sub,
+                BinOp::Mul => Op::Mul,
+                BinOp::Div => Op::Div,
+            });
+        }
+        CExpr::Cmp(op, l, r) => {
+            emit(l, ops);
+            emit(r, ops);
+            ops.push(match op {
+                CmpOp::Lt => Op::Lt,
+                CmpOp::Le => Op::Le,
+                CmpOp::Gt => Op::Gt,
+                CmpOp::Ge => Op::Ge,
+                CmpOp::Eq => Op::Eq,
+                CmpOp::Ne => Op::Ne,
+            });
+        }
+        CExpr::And(l, r) => {
+            emit(l, ops);
+            let jmp_at = ops.len();
+            ops.push(Op::JumpIfZeroPush0(0)); // patched
+            emit(r, ops);
+            ops.push(Op::Truthy);
+            let dist = (ops.len() - jmp_at - 1) as u16;
+            ops[jmp_at] = Op::JumpIfZeroPush0(dist);
+        }
+        CExpr::Or(l, r) => {
+            emit(l, ops);
+            let jmp_at = ops.len();
+            ops.push(Op::JumpIfNonZeroPush1(0)); // patched
+            emit(r, ops);
+            ops.push(Op::Truthy);
+            let dist = (ops.len() - jmp_at - 1) as u16;
+            ops[jmp_at] = Op::JumpIfNonZeroPush1(dist);
+        }
+        CExpr::Not(x) => {
+            emit(x, ops);
+            ops.push(Op::Not);
+        }
+        CExpr::Neg(x) => {
+            emit(x, ops);
+            ops.push(Op::Neg);
+        }
+        CExpr::Call(name, args) => match *name {
+            "__list_base" => {
+                // args = [Const(list), j]
+                let CExpr::Const(lid) = args[0] else { unreachable!() };
+                emit(&args[1], ops);
+                ops.push(Op::ListBase(lid as u16));
+            }
+            "__list_total" => {
+                let CExpr::Const(lid) = args[0] else { unreachable!() };
+                ops.push(Op::ListTotal(lid as u16));
+            }
+            _ => {
+                for a in args {
+                    emit(a, ops);
+                }
+                match (*name, args.len()) {
+                    ("sqrt", 1) => ops.push(Op::Call1(f64::sqrt)),
+                    ("cosh", 1) => ops.push(Op::Call1(f64::cosh)),
+                    ("cos", 1) => ops.push(Op::Call1(f64::cos)),
+                    ("sinh", 1) => ops.push(Op::Call1(f64::sinh)),
+                    ("sin", 1) => ops.push(Op::Call1(f64::sin)),
+                    ("exp", 1) => ops.push(Op::Call1(f64::exp)),
+                    ("log", 1) => ops.push(Op::Call1(f64::ln)),
+                    ("abs", 1) => ops.push(Op::Call1(f64::abs)),
+                    ("min", 2) => ops.push(Op::Call2(f64::min)),
+                    ("max", 2) => ops.push(Op::Call2(f64::max)),
+                    (n, k) => ops.push(Op::CallN(n, k as u8)),
+                }
+            }
+        },
+    }
+}
+
+// ------------------------------------------------------------- execution
+
+struct Ctx<'a> {
+    item_cols: Vec<&'a [f32]>,
+    event_cols: Vec<&'a [f32]>,
+    offsets: Vec<&'a [i64]>,
+    slots: Vec<f64>,
+    stack: Vec<f64>,
+    event: usize,
+}
+
+pub fn run(prog: &TapeProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    let mut item_cols = Vec::with_capacity(prog.item_cols.len());
+    for path in &prog.item_cols {
+        item_cols.push(
+            cs.leaf(path)
+                .ok_or_else(|| format!("no leaf '{path}'"))?
+                .as_f32()
+                .ok_or_else(|| format!("leaf '{path}' is not f32"))?,
+        );
+    }
+    let mut event_cols = Vec::with_capacity(prog.event_cols.len());
+    for path in &prog.event_cols {
+        event_cols.push(
+            cs.leaf(path)
+                .ok_or_else(|| format!("no leaf '{path}'"))?
+                .as_f32()
+                .ok_or_else(|| format!("leaf '{path}' is not f32"))?,
+        );
+    }
+    let mut offsets = Vec::with_capacity(prog.lists.len());
+    for path in &prog.lists {
+        offsets.push(cs.offsets_of(path).ok_or_else(|| format!("no list '{path}'"))?);
+    }
+    let mut ctx = Ctx {
+        item_cols,
+        event_cols,
+        offsets,
+        slots: vec![0.0; prog.n_slots],
+        stack: Vec::with_capacity(16),
+        event: 0,
+    };
+    if let Some(fused) = prog.fused.as_ref() {
+        for s in fused {
+            exec(s, &mut ctx, hist)?;
+        }
+        return Ok(());
+    }
+    for ev in 0..cs.n_events {
+        ctx.event = ev;
+        for s in &prog.body {
+            exec(s, &mut ctx, hist)?;
+        }
+    }
+    Ok(())
+}
+
+fn exec(s: &TStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
+    match s {
+        TStmt::Assign { slot, tape } => {
+            ctx.slots[*slot] = eval(tape, ctx)?;
+            Ok(())
+        }
+        TStmt::LoopRange { slot, lo, hi, body } => {
+            let lo = eval(lo, ctx)? as i64;
+            let hi = eval(hi, ctx)? as i64;
+            for k in lo..hi {
+                ctx.slots[*slot] = k as f64;
+                for s in body {
+                    exec(s, ctx, hist)?;
+                }
+            }
+            Ok(())
+        }
+        TStmt::LoopList { list, slot, body } => {
+            let off = ctx.offsets[*list];
+            let (lo, hi) = (off[ctx.event], off[ctx.event + 1]);
+            for k in lo..hi {
+                ctx.slots[*slot] = k as f64;
+                for s in body {
+                    exec(s, ctx, hist)?;
+                }
+            }
+            Ok(())
+        }
+        TStmt::If { cond, then, els } => {
+            let branch = if eval(cond, ctx)? != 0.0 { then } else { els };
+            for s in branch {
+                exec(s, ctx, hist)?;
+            }
+            Ok(())
+        }
+        TStmt::Fill { tape, weight } => {
+            let x = eval(tape, ctx)?;
+            let w = match weight {
+                Some(w) => eval(w, ctx)?,
+                None => 1.0,
+            };
+            hist.fill_w(x, w);
+            Ok(())
+        }
+    }
+}
+
+#[inline]
+fn eval(tape: &Tape, ctx: &mut Ctx) -> Result<f64, String> {
+    // Split borrows: the stack lives outside the loop over ops.
+    let mut stack = std::mem::take(&mut ctx.stack);
+    stack.clear();
+    let r = eval_inner(tape, ctx, &mut stack);
+    ctx.stack = stack;
+    r
+}
+
+fn eval_inner(tape: &Tape, ctx: &Ctx, stack: &mut Vec<f64>) -> Result<f64, String> {
+    let ops = &tape.ops;
+    let mut pc = 0usize;
+    macro_rules! binop {
+        ($f:expr) => {{
+            let b = stack.pop().unwrap();
+            let a = stack.pop().unwrap();
+            stack.push($f(a, b));
+        }};
+    }
+    while pc < ops.len() {
+        match &ops[pc] {
+            Op::Const(n) => stack.push(*n),
+            Op::Slot(s) => stack.push(ctx.slots[*s as usize]),
+            Op::LoadItem(c) => {
+                let idx = stack.pop().unwrap() as usize;
+                let col = ctx.item_cols[*c as usize];
+                let v = *col
+                    .get(idx)
+                    .ok_or_else(|| format!("index {idx} out of bounds (len {})", col.len()))?;
+                stack.push(v as f64);
+            }
+            Op::LoadEvent(c) => {
+                let col = ctx.event_cols[*c as usize];
+                let v = *col
+                    .get(ctx.event)
+                    .ok_or_else(|| format!("event {} out of bounds", ctx.event))?;
+                stack.push(v as f64);
+            }
+            Op::ListLen(l) => {
+                let off = ctx.offsets[*l as usize];
+                stack.push((off[ctx.event + 1] - off[ctx.event]) as f64);
+            }
+            Op::ListBase(l) => {
+                let j = stack.pop().unwrap();
+                stack.push(ctx.offsets[*l as usize][ctx.event] as f64 + j);
+            }
+            Op::ListTotal(l) => {
+                stack.push(*ctx.offsets[*l as usize].last().unwrap() as f64);
+            }
+            Op::Add => binop!(|a: f64, b: f64| a + b),
+            Op::Sub => binop!(|a: f64, b: f64| a - b),
+            Op::Mul => binop!(|a: f64, b: f64| a * b),
+            Op::Div => binop!(|a: f64, b: f64| a / b),
+            Op::Neg => {
+                let a = stack.pop().unwrap();
+                stack.push(-a);
+            }
+            Op::Lt => binop!(|a, b| (a < b) as i64 as f64),
+            Op::Le => binop!(|a, b| (a <= b) as i64 as f64),
+            Op::Gt => binop!(|a, b| (a > b) as i64 as f64),
+            Op::Ge => binop!(|a, b| (a >= b) as i64 as f64),
+            Op::Eq => binop!(|a, b| (a == b) as i64 as f64),
+            Op::Ne => binop!(|a, b| (a != b) as i64 as f64),
+            Op::Not => {
+                let a = stack.pop().unwrap();
+                stack.push((a == 0.0) as i64 as f64);
+            }
+            Op::Truthy => {
+                let a = stack.pop().unwrap();
+                stack.push((a != 0.0) as i64 as f64);
+            }
+            Op::JumpIfZeroPush0(d) => {
+                let a = stack.pop().unwrap();
+                if a == 0.0 {
+                    stack.push(0.0);
+                    pc += *d as usize;
+                }
+            }
+            Op::JumpIfNonZeroPush1(d) => {
+                let a = stack.pop().unwrap();
+                if a != 0.0 {
+                    stack.push(1.0);
+                    pc += *d as usize;
+                }
+            }
+            Op::Call1(f) => {
+                let a = stack.pop().unwrap();
+                stack.push(f(a));
+            }
+            Op::Call2(f) => {
+                let b = stack.pop().unwrap();
+                let a = stack.pop().unwrap();
+                stack.push(f(a, b));
+            }
+            Op::CallN(name, k) => {
+                let n = *k as usize;
+                let args: Vec<f64> = stack.split_off(stack.len() - n);
+                stack.push(apply_builtin(name, &args)?);
+            }
+        }
+        pc += 1;
+    }
+    stack.pop().ok_or_else(|| "empty stack at tape end".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::generate_drellyan;
+    use crate::queryir::{self, flat, table3};
+
+    /// The tape VM must agree bin-exactly with the tree-walking flat
+    /// evaluator (and transitively with the object interpreter) on every
+    /// Table-3 program.
+    #[test]
+    fn tape_equals_flat_on_table3() {
+        let cs = generate_drellyan(3000, 61);
+        for src in [
+            table3::MAX_PT,
+            table3::ETA_BEST,
+            table3::PTSUM_PAIRS,
+            table3::MASS_PAIRS,
+            table3::MUON_PT,
+        ] {
+            let prog = queryir::compile(src, &cs.schema).unwrap();
+            let tp = compile(&prog);
+            let mut h_flat = H1::new(64, -10.0, 250.0);
+            flat::run(&prog, &cs, &mut h_flat).unwrap();
+            let mut h_tape = H1::new(64, -10.0, 250.0);
+            run(&tp, &cs, &mut h_tape).unwrap();
+            assert_eq!(h_tape.bins, h_flat.bins);
+            assert_eq!(h_tape.total(), h_flat.total());
+        }
+    }
+
+    #[test]
+    fn short_circuit_semantics() {
+        let cs = generate_drellyan(500, 62);
+        // `muon.eta < 0 or muon.pt > 20` and an `and` with a guard that
+        // would divide by zero if not short-circuited.
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    for muon in event.muons:
+        if n > 0 and muon.pt / n > 1:
+            if muon.eta < 0 or muon.pt > 20:
+                fill(muon.pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let tp = compile(&prog);
+        let mut h_flat = H1::new(32, 0.0, 128.0);
+        flat::run(&prog, &cs, &mut h_flat).unwrap();
+        let mut h_tape = H1::new(32, 0.0, 128.0);
+        run(&tp, &cs, &mut h_tape).unwrap();
+        assert_eq!(h_tape.bins, h_flat.bins);
+        assert!(h_tape.total() > 0.0);
+    }
+
+    #[test]
+    fn event_level_and_weights() {
+        let cs = generate_drellyan(400, 63);
+        let src = "for event in dataset:\n    fill(event.met, 0.5)\n";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let tp = compile(&prog);
+        let mut h = H1::new(16, 0.0, 100.0);
+        run(&tp, &cs, &mut h).unwrap();
+        assert_eq!(h.total(), 200.0);
+    }
+}

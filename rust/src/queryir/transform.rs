@@ -1,0 +1,449 @@
+//! The paper's §3 code transformation: compile the object-oriented AST into
+//! a flat-loop program that references only offsets and content arrays.
+//!
+//! Transformation rules (quoting the paper):
+//!   * each list-object reference (`event.muons`) is replaced by its
+//!     offsets array: `for muon in event.muons` becomes
+//!     `for k in offsets[i] .. offsets[i+1]`;
+//!   * each record-attribute reference (`muon.pt`) is replaced by an
+//!     indexed load from the attribute's content array: `pt[k]`;
+//!   * `len(list)` becomes `offsets[i+1] - offsets[i]`;
+//!   * `list[j]` becomes the index expression `offsets[i] + j`.
+//!
+//! The result is a `FlatProgram` whose only runtime state is a vector of
+//! f64 slots — no objects are ever materialized. This is a type-inferring
+//! compilation pass: variable bindings carry whether a name is a number, an
+//! event, a list, or a list *item* (represented at runtime purely by its
+//! global index).
+
+use super::ast::{BinOp, CmpOp, Expr, Iter, Program, Stmt, BUILTINS};
+use crate::columnar::schema::{PrimType, Ty};
+use std::collections::HashMap;
+
+/// Compiled expression over flat arrays. All scalars are f64; list-item
+/// variables hold their *global content index* in a slot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CExpr {
+    Const(f64),
+    /// Read a local f64 slot.
+    Slot(usize),
+    /// content_cols[col][idx] — an exploded attribute load.
+    LoadItem { col: usize, idx: Box<CExpr> },
+    /// event_cols[col][event_index] — an event-level leaf load.
+    LoadEvent { col: usize },
+    /// offsets[list][i+1] - offsets[list][i] (clamped per-event length).
+    ListLen { list: usize },
+    Bin(BinOp, Box<CExpr>, Box<CExpr>),
+    Cmp(CmpOp, Box<CExpr>, Box<CExpr>),
+    And(Box<CExpr>, Box<CExpr>),
+    Or(Box<CExpr>, Box<CExpr>),
+    Not(Box<CExpr>),
+    Neg(Box<CExpr>),
+    Call(&'static str, Vec<CExpr>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum CStmt {
+    /// slot = expr
+    Assign { slot: usize, expr: CExpr },
+    /// for slot in lo..hi (f64 counting loop)
+    LoopRange {
+        slot: usize,
+        lo: CExpr,
+        hi: CExpr,
+        body: Vec<CStmt>,
+    },
+    /// for slot in offsets[list][i] .. offsets[list][i+1]
+    LoopList {
+        list: usize,
+        slot: usize,
+        body: Vec<CStmt>,
+    },
+    If {
+        cond: CExpr,
+        then: Vec<CStmt>,
+        els: Vec<CStmt>,
+    },
+    Fill { expr: CExpr, weight: Option<CExpr> },
+}
+
+/// The transformed program + its array bindings.
+#[derive(Clone, Debug)]
+pub struct FlatProgram {
+    /// Leaf paths for item (content) columns, in `col` order.
+    pub item_cols: Vec<String>,
+    /// Leaf paths for event-level columns.
+    pub event_cols: Vec<String>,
+    /// List paths in `list` order.
+    pub lists: Vec<String>,
+    pub n_slots: usize,
+    pub body: Vec<CStmt>,
+    /// Set when the whole program is a single total loop over one list with
+    /// no per-event state — the paper's fusable special case.
+    pub fused: Option<Vec<CStmt>>,
+}
+
+#[derive(Clone, Debug)]
+enum Binding {
+    /// Scalar in a slot.
+    Num(usize),
+    /// The event variable.
+    Event,
+    /// An item of a list: its global index lives in a slot.
+    Item { list: String, slot: usize },
+}
+
+pub struct Transformer<'a> {
+    schema: &'a Ty,
+    vars: HashMap<String, Binding>,
+    item_cols: Vec<String>,
+    event_cols: Vec<String>,
+    lists: Vec<String>,
+    n_slots: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransformError(pub String);
+
+impl std::fmt::Display for TransformError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transform error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransformError {}
+
+type TResult<T> = Result<T, TransformError>;
+
+fn err<T>(msg: impl Into<String>) -> TResult<T> {
+    Err(TransformError(msg.into()))
+}
+
+/// Compiled value categories (the "type" of an expression).
+enum CVal {
+    Scalar(CExpr),
+    List(String),
+    Item { list: String, idx: CExpr },
+    Event,
+}
+
+impl<'a> Transformer<'a> {
+    pub fn compile(program: &Program, schema: &'a Ty) -> TResult<FlatProgram> {
+        let mut t = Transformer {
+            schema,
+            vars: HashMap::new(),
+            item_cols: Vec::new(),
+            event_cols: Vec::new(),
+            lists: Vec::new(),
+            n_slots: 0,
+        };
+        t.vars.insert(program.event_var.clone(), Binding::Event);
+        let body = t.block(&program.body)?;
+        let fused = t.try_fuse(&body);
+        Ok(FlatProgram {
+            item_cols: t.item_cols,
+            event_cols: t.event_cols,
+            lists: t.lists,
+            n_slots: t.n_slots,
+            body,
+            fused,
+        })
+    }
+
+    fn new_slot(&mut self) -> usize {
+        self.n_slots += 1;
+        self.n_slots - 1
+    }
+
+    fn list_id(&mut self, path: &str) -> usize {
+        match self.lists.iter().position(|p| p == path) {
+            Some(i) => i,
+            None => {
+                self.lists.push(path.to_string());
+                self.lists.len() - 1
+            }
+        }
+    }
+
+    fn item_col_id(&mut self, path: &str) -> usize {
+        match self.item_cols.iter().position(|p| p == path) {
+            Some(i) => i,
+            None => {
+                self.item_cols.push(path.to_string());
+                self.item_cols.len() - 1
+            }
+        }
+    }
+
+    fn event_col_id(&mut self, path: &str) -> usize {
+        match self.event_cols.iter().position(|p| p == path) {
+            Some(i) => i,
+            None => {
+                self.event_cols.push(path.to_string());
+                self.event_cols.len() - 1
+            }
+        }
+    }
+
+    fn block(&mut self, stmts: &[Stmt]) -> TResult<Vec<CStmt>> {
+        stmts.iter().map(|s| self.stmt(s)).collect()
+    }
+
+    fn stmt(&mut self, s: &Stmt) -> TResult<CStmt> {
+        match s {
+            Stmt::Assign(name, e) => match self.expr(e)? {
+                CVal::Scalar(ce) => {
+                    let slot = match self.vars.get(name) {
+                        Some(Binding::Num(slot)) => *slot,
+                        Some(_) => return err(format!("'{name}' changes type")),
+                        None => {
+                            let slot = self.new_slot();
+                            self.vars.insert(name.clone(), Binding::Num(slot));
+                            slot
+                        }
+                    };
+                    Ok(CStmt::Assign { slot, expr: ce })
+                }
+                CVal::Item { list, idx } => {
+                    // `m1 = event.muons[i]` — bind the item's global index.
+                    let slot = match self.vars.get(name) {
+                        Some(Binding::Item { list: l, slot }) if *l == list => *slot,
+                        Some(_) => return err(format!("'{name}' changes type")),
+                        None => {
+                            let slot = self.new_slot();
+                            self.vars
+                                .insert(name.clone(), Binding::Item { list: list.clone(), slot });
+                            slot
+                        }
+                    };
+                    Ok(CStmt::Assign { slot, expr: idx })
+                }
+                _ => err(format!("cannot assign a list/event to '{name}'")),
+            },
+            Stmt::For { var, iter, body } => match iter {
+                Iter::Dataset => err("nested 'for ... in dataset' is not allowed"),
+                Iter::Range(lo, hi) => {
+                    let lo = match lo {
+                        Some(e) => self.scalar(e)?,
+                        None => CExpr::Const(0.0),
+                    };
+                    let hi = self.scalar(hi)?;
+                    let slot = self.new_slot();
+                    let saved = self.vars.insert(var.clone(), Binding::Num(slot));
+                    let cbody = self.block(body)?;
+                    restore(&mut self.vars, var, saved);
+                    Ok(CStmt::LoopRange { slot, lo, hi, body: cbody })
+                }
+                Iter::List(e) => {
+                    let list = match self.expr(e)? {
+                        CVal::List(path) => path,
+                        _ => return err("loop target is not a list"),
+                    };
+                    let lid = self.list_id(&list);
+                    let slot = self.new_slot();
+                    let saved = self
+                        .vars
+                        .insert(var.clone(), Binding::Item { list: list.clone(), slot });
+                    let cbody = self.block(body)?;
+                    restore(&mut self.vars, var, saved);
+                    Ok(CStmt::LoopList { list: lid, slot, body: cbody })
+                }
+            },
+            Stmt::If { cond, then, els } => Ok(CStmt::If {
+                cond: self.scalar(cond)?,
+                then: self.block(then)?,
+                els: self.block(els)?,
+            }),
+            Stmt::Fill(e, w) => Ok(CStmt::Fill {
+                expr: self.scalar(e)?,
+                weight: w.as_ref().map(|w| self.scalar(w)).transpose()?,
+            }),
+        }
+    }
+
+    fn scalar(&mut self, e: &Expr) -> TResult<CExpr> {
+        match self.expr(e)? {
+            CVal::Scalar(ce) => Ok(ce),
+            _ => err(format!("expected a scalar expression: {e:?}")),
+        }
+    }
+
+    fn expr(&mut self, e: &Expr) -> TResult<CVal> {
+        match e {
+            Expr::Num(n) => Ok(CVal::Scalar(CExpr::Const(*n))),
+            Expr::Var(name) => match self.vars.get(name) {
+                Some(Binding::Num(slot)) => Ok(CVal::Scalar(CExpr::Slot(*slot))),
+                Some(Binding::Event) => Ok(CVal::Event),
+                Some(Binding::Item { list, slot }) => Ok(CVal::Item {
+                    list: list.clone(),
+                    idx: CExpr::Slot(*slot),
+                }),
+                None => err(format!("unknown variable '{name}'")),
+            },
+            Expr::Attr(base, attr) => match self.expr(base)? {
+                CVal::Event => {
+                    // Event attribute: list or event-level leaf, per schema.
+                    match self.schema.field(attr) {
+                        Some(Ty::List(_)) => Ok(CVal::List(attr.clone())),
+                        Some(Ty::Prim(_)) => {
+                            let col = self.event_col_id(attr);
+                            Ok(CVal::Scalar(CExpr::LoadEvent { col }))
+                        }
+                        Some(Ty::Record(_)) => err(format!("nested records ('{attr}') not supported")),
+                        None => err(format!("event has no attribute '{attr}'")),
+                    }
+                }
+                CVal::Item { list, idx } => {
+                    // THE rule: `muon.pt` → `pt[k]`.
+                    let leaf = format!("{list}.{attr}");
+                    self.check_item_attr(&list, attr)?;
+                    let col = self.item_col_id(&leaf);
+                    Ok(CVal::Scalar(CExpr::LoadItem { col, idx: Box::new(idx) }))
+                }
+                _ => err(format!("cannot access '.{attr}' here")),
+            },
+            Expr::Index(base, idx) => match self.expr(base)? {
+                CVal::List(path) => {
+                    // `list[j]` → item at offsets[i] + j.
+                    let lid = self.list_id(&path);
+                    let j = self.scalar(idx)?;
+                    Ok(CVal::Item {
+                        list: path,
+                        idx: CExpr::Call(
+                            "__list_base",
+                            vec![CExpr::Const(lid as f64), j],
+                        ),
+                    })
+                }
+                _ => err("only lists can be indexed"),
+            },
+            Expr::Bin(op, l, r) => Ok(CVal::Scalar(CExpr::Bin(
+                *op,
+                Box::new(self.scalar(l)?),
+                Box::new(self.scalar(r)?),
+            ))),
+            Expr::Cmp(op, l, r) => Ok(CVal::Scalar(CExpr::Cmp(
+                *op,
+                Box::new(self.scalar(l)?),
+                Box::new(self.scalar(r)?),
+            ))),
+            Expr::And(l, r) => Ok(CVal::Scalar(CExpr::And(
+                Box::new(self.scalar(l)?),
+                Box::new(self.scalar(r)?),
+            ))),
+            Expr::Or(l, r) => Ok(CVal::Scalar(CExpr::Or(
+                Box::new(self.scalar(l)?),
+                Box::new(self.scalar(r)?),
+            ))),
+            Expr::Not(x) => Ok(CVal::Scalar(CExpr::Not(Box::new(self.scalar(x)?)))),
+            Expr::Neg(x) => Ok(CVal::Scalar(CExpr::Neg(Box::new(self.scalar(x)?)))),
+            Expr::Call(name, args) => {
+                if name == "len" {
+                    if args.len() != 1 {
+                        return err("len takes one argument");
+                    }
+                    return match self.expr(&args[0])? {
+                        // THE rule: `len(list)` → offsets[i+1] - offsets[i].
+                        CVal::List(path) => {
+                            let lid = self.list_id(&path);
+                            Ok(CVal::Scalar(CExpr::ListLen { list: lid }))
+                        }
+                        _ => err("len() of a non-list"),
+                    };
+                }
+                let Some(stat) = BUILTINS.iter().find(|b| *b == name) else {
+                    return err(format!("unknown function '{name}'"));
+                };
+                let cargs = args
+                    .iter()
+                    .map(|a| self.scalar(a))
+                    .collect::<TResult<Vec<_>>>()?;
+                Ok(CVal::Scalar(CExpr::Call(stat, cargs)))
+            }
+        }
+    }
+
+    fn check_item_attr(&self, list: &str, attr: &str) -> TResult<()> {
+        match self.schema.field(list) {
+            Some(Ty::List(inner)) => match inner.as_ref() {
+                Ty::Record(fields) => {
+                    if fields.iter().any(|f| f.name == attr) {
+                        match fields.iter().find(|f| f.name == attr).map(|f| &f.ty) {
+                            Some(Ty::Prim(PrimType::F32 | PrimType::F64 | PrimType::I32 | PrimType::I64)) => Ok(()),
+                            _ => err(format!("attribute '{list}.{attr}' is not numeric")),
+                        }
+                    } else {
+                        err(format!("'{list}' items have no attribute '{attr}'"))
+                    }
+                }
+                _ => err(format!("'{list}' items are not records")),
+            },
+            _ => err(format!("'{list}' is not a list of the event")),
+        }
+    }
+
+    /// The paper's special case: a program that is exactly one total loop
+    /// over one list whose body only fills from item attributes can drop
+    /// the event loop entirely and run over the content arrays flat:
+    /// `for k in 0 .. inner[outer[N]]`.
+    fn try_fuse(&self, body: &[CStmt]) -> Option<Vec<CStmt>> {
+        if body.len() != 1 {
+            return None;
+        }
+        let CStmt::LoopList { list, slot, body: inner } = &body[0] else {
+            return None;
+        };
+        // Body must not reference per-event state: only Fill/If/Assign of
+        // expressions built from item loads of this loop's slot and consts.
+        fn expr_ok(e: &CExpr, slot: usize) -> bool {
+            match e {
+                CExpr::Const(_) => true,
+                CExpr::Slot(s) => *s == slot,
+                CExpr::LoadItem { idx, .. } => expr_ok(idx, slot),
+                CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => false,
+                CExpr::Bin(_, l, r) | CExpr::Cmp(_, l, r) | CExpr::And(l, r) | CExpr::Or(l, r) => {
+                    expr_ok(l, slot) && expr_ok(r, slot)
+                }
+                CExpr::Not(x) | CExpr::Neg(x) => expr_ok(x, slot),
+                CExpr::Call(name, args) => {
+                    *name != "__list_base" && args.iter().all(|a| expr_ok(a, slot))
+                }
+            }
+        }
+        fn stmt_ok(s: &CStmt, slot: usize) -> bool {
+            match s {
+                CStmt::Fill { expr, weight } => {
+                    expr_ok(expr, slot)
+                        && weight.as_ref().map(|w| expr_ok(w, slot)).unwrap_or(true)
+                }
+                CStmt::If { cond, then, els } => {
+                    expr_ok(cond, slot)
+                        && then.iter().all(|s| stmt_ok(s, slot))
+                        && els.iter().all(|s| stmt_ok(s, slot))
+                }
+                _ => false,
+            }
+        }
+        if inner.iter().all(|s| stmt_ok(s, *slot)) {
+            Some(vec![CStmt::LoopRange {
+                slot: *slot,
+                lo: CExpr::Const(0.0),
+                hi: CExpr::Call("__list_total", vec![CExpr::Const(*list as f64)]),
+                body: inner.clone(),
+            }])
+        } else {
+            None
+        }
+    }
+}
+
+fn restore(vars: &mut HashMap<String, Binding>, name: &str, saved: Option<Binding>) {
+    match saved {
+        Some(b) => {
+            vars.insert(name.to_string(), b);
+        }
+        None => {
+            vars.remove(name);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Artifact registry: parse `artifacts/manifest.json`, load HLO-text
+//! modules, compile them once on the PJRT CPU client and cache the
+//! executables for the lifetime of the process.
+//!
+//! Compilation happens at startup (or first use), never per-query: the
+//! paper's latency budget (a second per plot) cannot absorb an XLA compile.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Partition shapes baked into the artifacts (must match what the Rust side
+/// pads to — see `engine::padded`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionShape {
+    pub n_events: usize,
+    pub k_max: usize,
+    pub content_cap: usize,
+    pub n_offsets: usize,
+    pub nbins: usize,
+    pub hist_slots: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QueryArtifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub n_content_arrays: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub shape: PartitionShape,
+    pub queries: Vec<QueryArtifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| format!("manifest: {e}"))?;
+        let part = j.get("partition").ok_or("manifest: missing partition")?;
+        let shape = PartitionShape {
+            n_events: part.get("n_events").and_then(|v| v.as_usize()).ok_or("n_events")?,
+            k_max: part.get("k_max").and_then(|v| v.as_usize()).ok_or("k_max")?,
+            content_cap: part
+                .get("content_cap")
+                .and_then(|v| v.as_usize())
+                .ok_or("content_cap")?,
+            n_offsets: part.get("n_offsets").and_then(|v| v.as_usize()).ok_or("n_offsets")?,
+            nbins: j.get("nbins").and_then(|v| v.as_usize()).ok_or("nbins")?,
+            hist_slots: j.get("hist_slots").and_then(|v| v.as_usize()).ok_or("hist_slots")?,
+        };
+        let mut queries = Vec::new();
+        for (name, q) in j.get("queries").and_then(|v| v.as_obj()).ok_or("queries")? {
+            queries.push(QueryArtifact {
+                name: name.clone(),
+                file: dir.join(q.get("file").and_then(|v| v.as_str()).ok_or("file")?),
+                n_content_arrays: q
+                    .get("n_content_arrays")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("n_content_arrays")?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            shape,
+            queries,
+        })
+    }
+
+    pub fn query(&self, name: &str) -> Option<&QueryArtifact> {
+        self.queries.iter().find(|q| q.name == name)
+    }
+}
+
+/// Compiled-executable cache. One PJRT client per registry; executables are
+/// compiled on demand and shared behind `Arc`.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry, String> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e:?}"))?;
+        crate::log_info!(
+            "pjrt client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(ArtifactRegistry {
+            manifest,
+            client,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn shape(&self) -> PartitionShape {
+        self.manifest.shape
+    }
+
+    /// Get (compiling if needed) the executable for a query name.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .query(name)
+            .ok_or_else(|| format!("no artifact for query '{name}'"))?
+            .clone();
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.file.to_str().ok_or("bad path")?,
+        )
+        .map_err(|e| format!("parse {}: {e:?}", art.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e:?}"))?;
+        crate::log_info!("compiled artifact '{name}' in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Arc::new(exe);
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (server startup).
+    pub fn warm_all(&self) -> Result<(), String> {
+        let names: Vec<String> = self.manifest.queries.iter().map(|q| q.name.clone()).collect();
+        for name in names {
+            self.executable(&name)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("hepq-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"nbins":64,"hist_slots":66,
+                "partition":{"n_events":16384,"k_max":8,"content_cap":131072,"n_offsets":16385},
+                "queries":{"max_pt":{"file":"q_max_pt.hlo.txt","n_content_arrays":1,
+                           "inputs":["offsets_i32","content_f32_0","lo_f32","hi_f32"],
+                           "output":"hist_f32_slots"}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.shape.n_events, 16384);
+        assert_eq!(m.shape.hist_slots, 66);
+        assert_eq!(m.query("max_pt").unwrap().n_content_arrays, 1);
+        assert!(m.query("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+}

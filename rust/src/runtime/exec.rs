@@ -1,0 +1,152 @@
+//! Partition execution: pack padded partitions into PJRT literals, run the
+//! compiled query, unpack the [underflow, bins..., overflow] histogram.
+
+use super::artifact::{ArtifactRegistry, PartitionShape};
+use crate::columnar::arrays::ColumnSet;
+use crate::hist::H1;
+use std::sync::Arc;
+
+/// A partition padded to the artifact's static wire layout:
+/// offsets i32[N+1] (monotone, padding events empty) and each content array
+/// f32[C] (zero-padded).
+#[derive(Clone, Debug)]
+pub struct PaddedPartition {
+    pub offsets: Vec<i32>,
+    pub contents: Vec<Vec<f32>>,
+    /// Real (unpadded) event count, for accounting.
+    pub n_live_events: usize,
+}
+
+impl PaddedPartition {
+    /// Pad an exploded partition for a query over the given leaf paths.
+    /// `list_path` is the list whose offsets drive the query (e.g. "muons").
+    pub fn from_columns(
+        cs: &ColumnSet,
+        list_path: &str,
+        leaf_paths: &[&str],
+        shape: PartitionShape,
+    ) -> Result<PaddedPartition, String> {
+        if cs.n_events > shape.n_events {
+            return Err(format!(
+                "partition has {} events, artifact takes at most {}",
+                cs.n_events, shape.n_events
+            ));
+        }
+        let off64 = cs
+            .offsets_of(list_path)
+            .ok_or_else(|| format!("no list '{list_path}'"))?;
+        let total = *off64.last().unwrap_or(&0) as usize;
+        if total > shape.content_cap {
+            return Err(format!(
+                "partition has {total} items, content capacity is {}",
+                shape.content_cap
+            ));
+        }
+        let mut offsets = Vec::with_capacity(shape.n_offsets);
+        offsets.extend(off64.iter().map(|&o| o as i32));
+        let last = *offsets.last().unwrap_or(&0);
+        offsets.resize(shape.n_offsets, last); // padding events are empty
+
+        let mut contents = Vec::with_capacity(leaf_paths.len());
+        for path in leaf_paths {
+            let arr = cs
+                .leaf(path)
+                .ok_or_else(|| format!("no leaf '{path}'"))?
+                .as_f32()
+                .ok_or_else(|| format!("leaf '{path}' is not f32"))?;
+            let mut v = Vec::with_capacity(shape.content_cap);
+            v.extend_from_slice(arr);
+            v.resize(shape.content_cap, 0.0);
+            contents.push(v);
+        }
+        Ok(PaddedPartition {
+            offsets,
+            contents,
+            n_live_events: cs.n_events,
+        })
+    }
+}
+
+/// A query bound to its compiled executable — the per-partition hot path.
+pub struct QueryExecutable {
+    pub name: String,
+    shape: PartitionShape,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    n_content_arrays: usize,
+}
+
+impl QueryExecutable {
+    pub fn new(reg: &ArtifactRegistry, name: &str) -> Result<QueryExecutable, String> {
+        let art = reg
+            .manifest
+            .query(name)
+            .ok_or_else(|| format!("unknown query '{name}'"))?;
+        Ok(QueryExecutable {
+            name: name.to_string(),
+            shape: reg.shape(),
+            exe: reg.executable(name)?,
+            n_content_arrays: art.n_content_arrays,
+        })
+    }
+
+    pub fn shape(&self) -> PartitionShape {
+        self.shape
+    }
+
+    /// Execute over one padded partition, adding into `hist`.
+    pub fn run(&self, part: &PaddedPartition, lo: f64, hi: f64, hist: &mut H1) -> Result<(), String> {
+        let slots = self.run_raw(part, lo, hi)?;
+        let nbins = self.shape.nbins;
+        hist.add_bins(&slots[1..=nbins], slots[0] as f64, slots[nbins + 1] as f64)
+    }
+
+    /// Execute and return the raw [underflow, bins..., overflow] slots.
+    pub fn run_raw(&self, part: &PaddedPartition, lo: f64, hi: f64) -> Result<Vec<f32>, String> {
+        if part.contents.len() != self.n_content_arrays {
+            return Err(format!(
+                "query '{}' takes {} content arrays, got {}",
+                self.name,
+                self.n_content_arrays,
+                part.contents.len()
+            ));
+        }
+        if part.offsets.len() != self.shape.n_offsets {
+            return Err(format!(
+                "offsets length {} != {}",
+                part.offsets.len(),
+                self.shape.n_offsets
+            ));
+        }
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(2 + part.contents.len());
+        literals.push(xla::Literal::vec1(&part.offsets));
+        for c in &part.contents {
+            if c.len() != self.shape.content_cap {
+                return Err(format!(
+                    "content length {} != {}",
+                    c.len(),
+                    self.shape.content_cap
+                ));
+            }
+            literals.push(xla::Literal::vec1(c.as_slice()));
+        }
+        literals.push(xla::Literal::vec1(&[lo as f32]));
+        literals.push(xla::Literal::vec1(&[hi as f32]));
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute '{}': {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| format!("tuple: {e:?}"))?;
+        let slots = out.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))?;
+        if slots.len() != self.shape.hist_slots {
+            return Err(format!(
+                "kernel returned {} slots, expected {}",
+                slots.len(),
+                self.shape.hist_slots
+            ));
+        }
+        Ok(slots)
+    }
+}

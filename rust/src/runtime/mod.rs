@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the hot
+//! path. Python is never involved here — `artifacts/` is the only interface
+//! between the build-time compile chain and the serving coordinator.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactRegistry, Manifest, PartitionShape};
+pub use exec::{PaddedPartition, QueryExecutable};

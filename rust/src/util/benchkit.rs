@@ -1,0 +1,225 @@
+//! Benchmark harness (offline replacement for `criterion`).
+//!
+//! `cargo bench` binaries in `rust/benches/` use `harness = false` and drive
+//! this kit directly. It provides warmup, adaptive iteration counts, robust
+//! statistics (median / MAD), events-per-second throughput reporting, and
+//! emits both a human-readable table and a JSON report under `bench_out/`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// Nanoseconds per iteration (one iteration = one full workload pass).
+    pub ns_per_iter: f64,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: u64,
+    /// Workload size (e.g. events processed per iteration), for rates.
+    pub items_per_iter: f64,
+}
+
+impl Sample {
+    /// Items per second (e.g. events/s).
+    pub fn rate(&self) -> f64 {
+        if self.median_ns <= 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter * 1e9 / self.median_ns
+    }
+
+    /// Rate in MHz (matches the units of the paper's Table 1).
+    pub fn rate_mhz(&self) -> f64 {
+        self.rate() / 1e6
+    }
+}
+
+pub struct Bench {
+    pub suite: String,
+    pub samples: Vec<Sample>,
+    pub min_time: Duration,
+    pub max_iters: u64,
+    pub warmup_time: Duration,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Allow a quick mode for CI-style smoke runs.
+        let quick = std::env::var("HEPQ_BENCH_QUICK").is_ok();
+        Self {
+            suite: suite.to_string(),
+            samples: Vec::new(),
+            min_time: if quick {
+                Duration::from_millis(80)
+            } else {
+                Duration::from_millis(600)
+            },
+            max_iters: if quick { 20 } else { 2000 },
+            warmup_time: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(150)
+            },
+        }
+    }
+
+    /// Time `f`, which processes `items` items per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &Sample {
+        // Warmup.
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup_time && warm_iters < 4 {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate per-iter time from warmup to pick a batch size.
+        let per = if warm_iters > 0 {
+            wstart.elapsed().as_nanos() as f64 / warm_iters as f64
+        } else {
+            1e6
+        };
+        let target_iters = ((self.min_time.as_nanos() as f64 / per.max(1.0)).ceil() as u64)
+            .clamp(5, self.max_iters);
+
+        let mut times: Vec<f64> = Vec::with_capacity(target_iters as usize);
+        let total_start = Instant::now();
+        for _ in 0..target_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_nanos() as f64);
+            // Hard cap: do not let one benchmark run forever.
+            if total_start.elapsed() > self.min_time * 20 {
+                break;
+            }
+        }
+        let iters = times.len() as u64;
+        let mean = times.iter().sum::<f64>() / iters as f64;
+        let median = median_of(&mut times.clone());
+        let mad = {
+            let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+            median_of(&mut devs)
+        };
+        let s = Sample {
+            name: name.to_string(),
+            ns_per_iter: mean,
+            median_ns: median,
+            mad_ns: mad,
+            iters,
+            items_per_iter: items,
+        };
+        eprintln!(
+            "  {:<44} {:>12.3} ms/iter  {:>10.4} MHz  ({} iters)",
+            s.name,
+            s.median_ns / 1e6,
+            s.rate_mhz(),
+            s.iters
+        );
+        self.samples.push(s);
+        self.samples.last().unwrap()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Sample> {
+        self.samples.iter().find(|s| s.name == name)
+    }
+
+    /// Render a Markdown table of all samples (rate column in MHz).
+    pub fn table(&self) -> String {
+        let mut out = format!("\n## {}\n\n", self.suite);
+        out.push_str("| benchmark | median ms/iter | rate (M items/s) | iters |\n");
+        out.push_str("|---|---:|---:|---:|\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "| {} | {:.3} | {:.4} | {} |\n",
+                s.name,
+                s.median_ns / 1e6,
+                s.rate_mhz(),
+                s.iters
+            ));
+        }
+        out
+    }
+
+    /// Write a JSON report to `bench_out/<suite>.json`.
+    pub fn write_report(&self) -> std::io::Result<std::path::PathBuf> {
+        use crate::util::json::Json;
+        std::fs::create_dir_all("bench_out")?;
+        let items: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("median_ns", Json::num(s.median_ns)),
+                    ("mad_ns", Json::num(s.mad_ns)),
+                    ("mean_ns", Json::num(s.ns_per_iter)),
+                    ("iters", Json::num(s.iters as f64)),
+                    ("items_per_iter", Json::num(s.items_per_iter)),
+                    ("rate_per_s", Json::num(s.rate())),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("samples", Json::Arr(items)),
+        ]);
+        let path = std::path::PathBuf::from(format!("bench_out/{}.json", self.suite));
+        std::fs::write(&path, j.to_string())?;
+        Ok(path)
+    }
+
+    /// Print the table and write the JSON report; call at the end of a bench.
+    pub fn finish(&self) {
+        println!("{}", self.table());
+        if let Err(e) = self.write_report() {
+            eprintln!("warning: could not write bench report: {e}");
+        }
+    }
+}
+
+pub fn median_of(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median_of(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_of(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median_of(&mut []), 0.0);
+    }
+
+    #[test]
+    fn run_measures_something() {
+        std::env::set_var("HEPQ_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let s = b
+            .run("spin", 1000.0, || {
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+            })
+            .clone();
+        assert!(s.median_ns > 0.0);
+        assert!(s.rate() > 0.0);
+        assert!(b.get("spin").is_some());
+    }
+}

@@ -1,0 +1,300 @@
+//! Declarative command-line parsing (offline replacement for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+    pub positionals: Vec<ArgSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            args: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for p in &self.positionals {
+            s.push_str(&format!("  <{}>  {}\n", p.name, p.help));
+        }
+        for a in &self.args {
+            let d = a
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            if a.is_flag {
+                s.push_str(&format!("  --{}  {}\n", a.name, a.help));
+            } else {
+                s.push_str(&format!("  --{} <v>  {}{}\n", a.name, a.help, d));
+            }
+        }
+        s
+    }
+
+    /// Parse raw args (not including the program/subcommand names).
+    pub fn parse(&self, raw: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos_idx = 0usize;
+        let mut i = 0usize;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.is_flag {
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                let spec = self
+                    .positionals
+                    .get(pos_idx)
+                    .ok_or_else(|| CliError(format!("unexpected positional '{tok}'")))?;
+                values.insert(spec.name.to_string(), tok.clone());
+                pos_idx += 1;
+            }
+            i += 1;
+        }
+        for a in &self.args {
+            if !values.contains_key(a.name) {
+                if let Some(d) = a.default {
+                    values.insert(a.name.to_string(), d.to_string());
+                } else if a.required {
+                    return Err(CliError(format!("missing required --{}", a.name)));
+                }
+            }
+        }
+        if pos_idx < self.positionals.len() {
+            return Err(CliError(format!(
+                "missing positional <{}>",
+                self.positionals[pos_idx].name
+            )));
+        }
+        Ok(Matches { values, flags })
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_default()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} must be an integer")))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} must be an integer")))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} must be a number")))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A multi-subcommand CLI application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nSubcommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<22}{}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `<subcommand> --help` for details.\n");
+        s
+    }
+
+    /// Returns (subcommand-name, matches).
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Matches), CliError> {
+        let sub = argv.first().ok_or_else(|| CliError(self.usage()))?;
+        if sub == "--help" || sub == "-h" || sub == "help" {
+            return Err(CliError(self.usage()));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == sub)
+            .ok_or_else(|| CliError(format!("unknown subcommand '{sub}'\n\n{}", self.usage())))?;
+        let m = spec.parse(&argv[1..])?;
+        Ok((sub.clone(), m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("gen", "generate")
+            .opt("events", "1000", "number of events")
+            .opt("seed", "42", "rng seed")
+            .flag("compress", "enable compression")
+            .pos("out", "output path")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = spec().parse(&["out.froot".to_string()]).unwrap();
+        assert_eq!(m.usize("events").unwrap(), 1000);
+        assert_eq!(m.str("out"), "out.froot");
+        assert!(!m.flag("compress"));
+    }
+
+    #[test]
+    fn key_value_and_equals() {
+        let raw: Vec<String> = ["--events", "5", "--seed=7", "x", "--compress"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let m = spec().parse(&raw).unwrap();
+        assert_eq!(m.usize("events").unwrap(), 5);
+        assert_eq!(m.u64("seed").unwrap(), 7);
+        assert!(m.flag("compress"));
+        assert_eq!(m.str("out"), "x");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&["--bogus".to_string()]).is_err());
+    }
+
+    #[test]
+    fn missing_positional_rejected() {
+        assert!(spec().parse(&[]).is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App {
+            name: "hepq",
+            about: "query service",
+            commands: vec![spec()],
+        };
+        let argv: Vec<String> = ["gen", "out"].iter().map(|s| s.to_string()).collect();
+        let (sub, m) = app.parse(&argv).unwrap();
+        assert_eq!(sub, "gen");
+        assert_eq!(m.str("out"), "out");
+    }
+}

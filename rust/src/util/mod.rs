@@ -1,0 +1,11 @@
+//! Substrate kits: deterministic RNG, JSON, CLI parsing, logging, and the
+//! bench/property-test harnesses (the offline crate set lacks `rand`,
+//! `serde_json`, `clap`, `criterion` and `proptest`, so the repo carries
+//! purpose-built replacements).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod propkit;
+pub mod rng;

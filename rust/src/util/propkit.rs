@@ -1,0 +1,180 @@
+//! Property-based testing harness (offline replacement for `proptest`).
+//!
+//! A property is a function from a deterministically generated random input
+//! to `Result<(), String>`. The harness runs many cases, and on failure
+//! reports the seed so the case can be replayed, then attempts a simple
+//! "shrink by re-generation at smaller size" pass.
+//!
+//! Used throughout `rust/tests/` for coordinator invariants (routing,
+//! batching, claim-once semantics), columnar round-trips and the queryir
+//! transform-vs-interpreter equivalence property.
+
+use crate::util::rng::Pcg32;
+
+/// Controls for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (they scale lists etc. by it).
+    pub max_size: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("HEPQ_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("HEPQ_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self {
+            cases,
+            seed,
+            max_size: 64,
+        }
+    }
+}
+
+/// Generation context handed to generators: RNG + size hint.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg32,
+    pub size: u32,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_to(&mut self, max_incl: usize) -> usize {
+        if max_incl == 0 {
+            0
+        } else {
+            self.rng.below(max_incl as u32 + 1) as usize
+        }
+    }
+
+    pub fn vec_f32(&mut self, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_to(self.size as usize);
+        (0..n)
+            .map(|_| lo + (hi - lo) * self.rng.f32())
+            .collect()
+    }
+
+    /// Variable-length list lengths: a plausible "muons per event" vector.
+    pub fn multiplicities(&mut self, n_events: usize, max_per: usize) -> Vec<usize> {
+        (0..n_events)
+            .map(|_| self.rng.below(max_per as u32 + 1) as usize)
+            .collect()
+    }
+}
+
+/// Run the property over `cfg.cases` random cases. Panics (test failure) with
+/// the seed and case index on the first failing case.
+pub fn check<G, T, P>(name: &str, cfg: &Config, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ ((case as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Pcg32::new(case_seed);
+        // Grow the size with the case index so early cases are tiny (cheap
+        // shrinking for free) and later cases stress harder.
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * case / cfg.cases.max(1);
+        let mut g = Gen {
+            rng: &mut rng,
+            size,
+        };
+        let input = generate(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Shrink attempt: regenerate at smaller sizes with the same seed
+            // lineage and report the smallest failure found.
+            let mut smallest: Option<(u32, String, String)> =
+                Some((size, msg.clone(), format!("{input:?}")));
+            for s in (1..size).rev() {
+                let mut rng2 = Pcg32::new(case_seed);
+                let mut g2 = Gen {
+                    rng: &mut rng2,
+                    size: s,
+                };
+                let inp2 = generate(&mut g2);
+                if let Err(m2) = prop(&inp2) {
+                    smallest = Some((s, m2, format!("{inp2:?}")));
+                }
+            }
+            let (s, m, dbg) = smallest.unwrap();
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {s}):\n  {m}\n  input: {dbg}\n  replay with HEPQ_PROP_SEED={}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config {
+            cases: 32,
+            seed: 1,
+            max_size: 16,
+        };
+        check(
+            "sum-commutes",
+            &cfg,
+            |g| g.vec_f32(-10.0, 10.0),
+            |xs| {
+                let a: f32 = xs.iter().sum();
+                let b: f32 = xs.iter().rev().sum();
+                if (a - b).abs() <= 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("{a} != {b}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-short'")]
+    fn failing_property_reports() {
+        let cfg = Config {
+            cases: 64,
+            seed: 2,
+            max_size: 32,
+        };
+        check(
+            "always-short",
+            &cfg,
+            |g| g.vec_f32(0.0, 1.0),
+            |xs| {
+                if xs.len() < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("len {} >= 5", xs.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn multiplicities_respect_bound() {
+        let cfg = Config::default();
+        check(
+            "mult-bound",
+            &cfg,
+            |g| g.multiplicities(20, 8),
+            |ms| {
+                if ms.iter().all(|&m| m <= 8) && ms.len() == 20 {
+                    Ok(())
+                } else {
+                    Err("bound violated".into())
+                }
+            },
+        );
+    }
+}

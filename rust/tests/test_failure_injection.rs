@@ -1,0 +1,165 @@
+//! Failure injection: the behaviours that make the Figure-2 design safe —
+//! claim expiry after worker death, duplicate suppression, corrupt files,
+//! and malformed queries — exercised end to end.
+
+use hepq::coord::board::{Subtask, SubtaskId, TaskBoard};
+use hepq::coord::docstore::{DocStore, PartialDoc};
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::format::{write_dataset, DatasetReader, WriteOptions};
+use hepq::hist::H1;
+use std::time::Duration;
+
+/// A worker that claims a subtask and dies (never completes): the claim
+/// expires and another worker finishes the query — no lost subtasks.
+#[test]
+fn dead_worker_claim_is_reclaimed() {
+    let board = TaskBoard::new(Duration::from_millis(30));
+    board.advertise(
+        (0..4)
+            .map(|p| Subtask {
+                id: SubtaskId { query_id: 1, partition: p },
+                dataset: "dy".into(),
+                assigned_to: None,
+            })
+            .collect(),
+    );
+    // "Worker 0" claims one subtask and crashes.
+    let doomed = board.claim(0, |_| true).unwrap();
+    // A healthy worker drains the rest.
+    let mut healthy = Vec::new();
+    while let Some(t) = board.claim(1, |_| true) {
+        board.complete(&t.id);
+        healthy.push(t.id.partition);
+    }
+    assert_eq!(healthy.len(), 3);
+    assert!(!board.all_done(1));
+    // After the TTL the dead claim reopens and the healthy worker finishes.
+    std::thread::sleep(Duration::from_millis(50));
+    let reclaimed = board.claim(1, |_| true).expect("expired claim reopens");
+    assert_eq!(reclaimed.id, doomed.id);
+    board.complete(&reclaimed.id);
+    assert!(board.all_done(1));
+}
+
+/// If the dead worker was merely slow and completes after reclamation, the
+/// duplicate partial is dropped and the merged total stays correct.
+#[test]
+fn straggler_duplicate_is_dropped() {
+    let store = DocStore::new();
+    let id = SubtaskId { query_id: 1, partition: 0 };
+    let mut h = H1::new(4, 0.0, 4.0);
+    h.fill(1.0);
+    assert!(store.insert(PartialDoc {
+        id: id.clone(),
+        worker: 1,
+        hist: h.clone(),
+        events_processed: 10,
+    }));
+    // The straggler finishes the same subtask later.
+    assert!(!store.insert(PartialDoc { id, worker: 0, hist: h, events_processed: 10 }));
+    let docs = store.drain(1);
+    assert_eq!(docs.len(), 1);
+    assert_eq!(docs[0].worker, 1);
+    assert_eq!(store.duplicates(), 1);
+}
+
+/// A cluster with an extreme straggler still converges to the exact result
+/// under the pull policies.
+#[test]
+fn cluster_converges_despite_straggler() {
+    let cs = generate_drellyan(8_000, 71);
+    let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+    let mut local = H1::new(q.n_bins, q.lo, q.hi);
+    Backend::Columnar.run(&q, &cs, &mut local).unwrap();
+
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_workers: 3,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::cache_aware(),
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(5),
+            straggler: Some((0, Duration::from_millis(40))),
+        },
+        Backend::Columnar,
+    );
+    cluster.catalog.register("dy", cs, 500);
+    let res = cluster.run(&q).unwrap();
+    assert_eq!(res.hist.bins, local.bins);
+    assert_eq!(res.partitions, 16);
+    cluster.shutdown();
+}
+
+/// Corrupt and truncated files are rejected with errors, not panics.
+#[test]
+fn corrupt_files_are_rejected() {
+    let dir = std::env::temp_dir().join("hepq-failinj");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Truncated mid-baskets.
+    let cs = generate_drellyan(2_000, 72);
+    let path = dir.join("trunc.froot");
+    write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    match DatasetReader::open(&path) {
+        Err(_) => {}
+        Ok(mut r) => {
+            // Header may survive (it is at the end... it is not: header_pos
+            // points past the truncation), but reads must fail cleanly.
+            assert!(r.read_full().is_err());
+        }
+    }
+
+    // Bit-flipped header area.
+    let path2 = dir.join("flip.froot");
+    let mut bytes = full.clone();
+    let n = bytes.len();
+    bytes[n - 20] ^= 0xFF;
+    std::fs::write(&path2, &bytes).unwrap();
+    match DatasetReader::open(&path2) {
+        Err(_) => {}
+        Ok(mut r) => {
+            let _ = r.read_full(); // must not panic; error or garbage-free data
+        }
+    }
+
+    // Wrong magic.
+    let path3 = dir.join("magic.froot");
+    let mut bytes = full;
+    bytes[0] ^= 0xFF;
+    std::fs::write(&path3, &bytes).unwrap();
+    assert!(DatasetReader::open(&path3).is_err());
+}
+
+/// Malformed queries fail fast at submit, not in workers.
+#[test]
+fn malformed_queries_rejected_cleanly() {
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_workers: 1,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(5),
+            straggler: None,
+        },
+        Backend::Columnar,
+    );
+    cluster.catalog.register("dy", generate_drellyan(1_000, 73), 500);
+    // Unknown dataset.
+    assert!(cluster.submit(Query::new(QueryKind::MaxPt, "nope", "muons")).is_err());
+    // Unknown list: submit succeeds (partitions exist) but the query
+    // errors in workers; claims expire and wait_with_progress times out
+    // rather than hanging forever — use cancellation to verify liveness.
+    let bad = Query::new(QueryKind::MaxPt, "dy", "jets");
+    let h = cluster.submit(bad.clone()).unwrap();
+    let res = cluster.wait_with_progress(&h, &bad, |done, _, _| done == 0 && false);
+    assert!(res.is_err());
+    // Cluster still serves good queries afterwards.
+    let good = Query::new(QueryKind::MaxPt, "dy", "muons");
+    assert!(cluster.run(&good).is_ok());
+    cluster.shutdown();
+}

@@ -1,0 +1,209 @@
+//! Property-based integration tests over the core invariants, using the
+//! in-repo propkit harness (seeded, reproducible via HEPQ_PROP_SEED).
+
+use hepq::columnar::explode::{explode, materialize_all, Value};
+use hepq::columnar::schema::muon_event_schema;
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{columnar_exec, Backend, Query, QueryKind};
+use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
+use hepq::hist::H1;
+use hepq::queryir::{self, table3};
+use hepq::util::propkit::{check, Config, Gen};
+use std::time::Duration;
+
+fn random_events(g: &mut Gen, n: usize) -> Vec<Value> {
+    (0..n)
+        .map(|_| {
+            let n_mu = g.rng.below(6) as usize;
+            let muons: Vec<Value> = (0..n_mu)
+                .map(|_| {
+                    Value::rec(vec![
+                        ("pt", Value::F64(g.rng.uniform(0.5, 150.0))),
+                        ("eta", Value::F64(g.rng.uniform(-2.4, 2.4))),
+                        ("phi", Value::F64(g.rng.uniform(-3.14, 3.14))),
+                        ("charge", Value::I64(if g.rng.bool_with(0.5) { 1 } else { -1 })),
+                    ])
+                })
+                .collect();
+            Value::rec(vec![
+                ("muons", Value::List(muons)),
+                ("met", Value::F64(g.rng.exponential(20.0))),
+            ])
+        })
+        .collect()
+}
+
+/// explode → materialize is the identity (modulo f32 storage, which these
+/// generated values survive bit-for-bit in the f64 fields we compare).
+#[test]
+fn prop_explode_materialize_roundtrip() {
+    let cfg = Config::default();
+    check(
+        "explode-materialize-roundtrip",
+        &cfg,
+        |g| {
+            let n = g.usize_to(20);
+            random_events(g, n)
+        },
+        |events| {
+            let cs = explode(&muon_event_schema(), events).map_err(|e| e.to_string())?;
+            cs.validate()?;
+            let back = materialize_all(&cs)?;
+            if back.len() != events.len() {
+                return Err("length changed".into());
+            }
+            for (a, b) in events.iter().zip(&back) {
+                let la = a.get("muons").unwrap().as_list().unwrap().len();
+                let lb = b.get("muons").unwrap().as_list().unwrap().len();
+                if la != lb {
+                    return Err(format!("muon count {la} != {lb}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Running a query on partitions and merging == running on the whole set.
+#[test]
+fn prop_partition_merge_equals_whole() {
+    let cfg = Config { cases: 24, ..Config::default() };
+    check(
+        "partition-merge-equals-whole",
+        &cfg,
+        |g| {
+            let n = 50 + g.usize_to(500);
+            let part = 1 + g.usize_to(100);
+            let seed = g.rng.next_u64();
+            (n, part, seed)
+        },
+        |&(n, part, seed)| {
+            let cs = generate_drellyan(n, seed);
+            for kind in [QueryKind::MaxPt, QueryKind::MassPairs] {
+                let (lo, hi) = kind.default_binning();
+                let mut whole = H1::new(32, lo, hi);
+                columnar_exec::run(kind, &cs, "muons", &mut whole)?;
+                let mut merged = H1::new(32, lo, hi);
+                for p in cs.partition(part) {
+                    let mut h = H1::new(32, lo, hi);
+                    columnar_exec::run(kind, &p, "muons", &mut h)?;
+                    merged.merge(&h)?;
+                }
+                if merged.bins != whole.bins || merged.total() != whole.total() {
+                    return Err(format!("{kind:?}: partitioned != whole"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// femto-ROOT round-trips any generated dataset under any codec.
+#[test]
+fn prop_format_roundtrip_any_codec() {
+    let cfg = Config { cases: 16, ..Config::default() };
+    let dir = std::env::temp_dir().join("hepq-prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut case = 0u32;
+    check(
+        "format-roundtrip",
+        &cfg,
+        |g| {
+            let n = g.usize_to(800);
+            let seed = g.rng.next_u64();
+            let codec = *g.rng.choose(&[Codec::None, Codec::Zstd(1), Codec::Flate]);
+            let basket = 16 + g.usize_to(512);
+            (n, seed, codec, basket)
+        },
+        |&(n, seed, codec, basket)| {
+            case += 1;
+            let cs = generate_drellyan(n, seed);
+            let path = dir.join(format!("prop{case}.froot"));
+            write_dataset(&path, &cs, WriteOptions { codec, basket_items: basket })?;
+            let mut r = DatasetReader::open(&path)?;
+            let back = r.read_full()?;
+            let _ = std::fs::remove_file(&path);
+            if back != cs {
+                return Err(format!("roundtrip failed (codec {codec:?}, basket {basket})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The §3 transformation preserves semantics on random data for every
+/// Table-3 program.
+#[test]
+fn prop_transform_equivalence() {
+    let cfg = Config { cases: 12, ..Config::default() };
+    check(
+        "transform-equivalence",
+        &cfg,
+        |g| (g.usize_to(400), g.rng.next_u64()),
+        |&(n, seed)| {
+            let cs = generate_drellyan(n.max(1), seed);
+            for src in [table3::MAX_PT, table3::ETA_BEST, table3::PTSUM_PAIRS, table3::MASS_PAIRS] {
+                let mut h_obj = H1::new(48, -10.0, 250.0);
+                queryir::run_object_view(src, &cs, &mut h_obj)?;
+                let mut h_flat = H1::new(48, -10.0, 250.0);
+                queryir::run_transformed(src, &cs, &mut h_flat)?;
+                if h_obj.bins != h_flat.bins || h_obj.total() != h_flat.total() {
+                    return Err("interp != transformed".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The distributed cluster returns the same histogram as a local run for
+/// every policy, worker count and partitioning.
+#[test]
+fn prop_cluster_equals_local() {
+    let cfg = Config { cases: 8, ..Config::default() };
+    check(
+        "cluster-equals-local",
+        &cfg,
+        |g| {
+            let n = 500 + g.usize_to(4000);
+            let part = 100 + g.usize_to(900);
+            let workers = 1 + g.usize_to(5);
+            let seed = g.rng.next_u64();
+            let policy = *g.rng.choose(&[
+                Policy::cache_aware(),
+                Policy::AnyPull,
+                Policy::RoundRobinPush,
+            ]);
+            (n, part, workers, seed, policy)
+        },
+        |&(n, part, workers, seed, policy)| {
+            let cs = generate_drellyan(n, seed);
+            let q = Query::new(QueryKind::PtSumPairs, "dy", "muons");
+            let mut local = H1::new(q.n_bins, q.lo, q.hi);
+            columnar_exec::run(q.kind, &cs, "muons", &mut local)?;
+
+            let cluster = Cluster::start(
+                ClusterConfig {
+                    n_workers: workers,
+                    cache_bytes_per_worker: 512 << 20,
+                    policy,
+                    fetch_delay_per_mib: Duration::ZERO,
+                    claim_ttl: Duration::from_secs(10),
+                    straggler: None,
+                },
+                Backend::Columnar,
+            );
+            cluster.catalog.register("dy", cs, part);
+            let res = cluster.run(&q)?;
+            cluster.shutdown();
+            if res.hist.bins != local.bins {
+                return Err(format!(
+                    "policy {} x{workers} part {part}: cluster != local",
+                    policy.name()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,86 @@
+//! Integration: AOT artifacts executed through PJRT must agree with the
+//! hand-written columnar executor on real synthetic physics data — the
+//! end-to-end proof that L1 (Pallas), L2 (JAX graph) and L3 (Rust) compose.
+//!
+//! Requires `make artifacts` (skips with a message if missing).
+
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::hist::H1;
+use hepq::engine::executor::PjrtBackend;
+use std::path::Path;
+
+fn backend() -> Option<PjrtBackend> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtBackend::new(dir))
+}
+
+fn registry_shape() -> Option<usize> {
+    let be = backend()?;
+    Some(be.registry().expect("registry").shape().n_events)
+}
+
+
+#[test]
+fn pjrt_matches_columnar_on_all_queries() {
+    let Some(be) = backend() else { return };
+    // One artifact-sized partition of real DY events.
+    let n = registry_shape().unwrap().min(16384);
+    let cs = generate_drellyan(n, 77);
+    let pjrt = Backend::Pjrt(be);
+    for kind in QueryKind::ALL {
+        let q = Query::new(kind, "dy", "muons");
+        let mut h_col = H1::new(64, q.lo, q.hi);
+        Backend::Columnar.run(&q, &cs, &mut h_col).unwrap();
+        let mut h_pjrt = H1::new(64, q.lo, q.hi);
+        pjrt.run(&q, &cs, &mut h_pjrt).unwrap();
+
+        assert_eq!(
+            h_pjrt.total(),
+            h_col.total(),
+            "{kind:?}: total fills differ (pjrt {} vs columnar {})",
+            h_pjrt.total(),
+            h_col.total()
+        );
+        // f32 (kernel) vs f64 (rust) transcendentals can migrate a value
+        // across a bin edge for the pair-mass query; totals are exact and
+        // bin-level differences must be tiny.
+        let diff: f64 = h_pjrt
+            .bins
+            .iter()
+            .zip(&h_col.bins)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        let tol = if kind == QueryKind::MassPairs { 6.0 } else { 0.0 };
+        assert!(diff <= tol, "{kind:?}: bins differ by {diff}");
+    }
+}
+
+#[test]
+fn pjrt_chunks_large_datasets() {
+    let Some(be) = backend() else { return };
+    // 2.5 partitions worth of events exercises the chunking path.
+    let n = registry_shape().unwrap() * 5 / 2;
+    let cs = generate_drellyan(n, 78);
+    let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+    let mut h_col = H1::new(64, q.lo, q.hi);
+    Backend::Columnar.run(&q, &cs, &mut h_col).unwrap();
+    let mut h_pjrt = H1::new(64, q.lo, q.hi);
+    Backend::Pjrt(be).run(&q, &cs, &mut h_pjrt).unwrap();
+    assert_eq!(h_pjrt.bins, h_col.bins);
+    assert_eq!(h_pjrt.total(), h_col.total());
+}
+
+#[test]
+fn pjrt_empty_partition_is_zero() {
+    let Some(be) = backend() else { return };
+    let cs = generate_drellyan(0, 1);
+    let q = Query::new(QueryKind::PtSumPairs, "dy", "muons");
+    let mut h = H1::new(64, q.lo, q.hi);
+    Backend::Pjrt(be).run(&q, &cs, &mut h).unwrap();
+    assert_eq!(h.total(), 0.0);
+}
