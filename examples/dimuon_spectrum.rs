@@ -13,10 +13,8 @@
 
 use hepq::coord::{Cluster, ClusterConfig, Policy};
 use hepq::datagen::generate_drellyan;
-use hepq::engine::executor::PjrtBackend;
 use hepq::engine::{Backend, Query, QueryKind};
 use hepq::hist::ascii;
-use std::path::Path;
 use std::time::Duration;
 
 fn arg(name: &str, default: usize) -> usize {
@@ -32,13 +30,21 @@ fn main() -> Result<(), String> {
     let n_events = arg("--events", 1_000_000);
     let n_workers = arg("--workers", 4);
 
-    // Pick the PJRT backend when artifacts exist.
-    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let (backend, backend_name) = if artifacts.join("manifest.json").exists() {
-        (Backend::Pjrt(PjrtBackend::new(artifacts)), "pjrt (AOT Pallas kernels)")
-    } else {
-        (Backend::Columnar, "columnar (run `make artifacts` for pjrt)")
+    // Pick the PJRT backend when built with `--features pjrt` and artifacts
+    // exist; otherwise the compiled-tape backend (query language → flat
+    // tape → compiled closure loops).
+    #[cfg(feature = "pjrt")]
+    let (backend, backend_name) = {
+        use hepq::engine::executor::PjrtBackend;
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifacts.join("manifest.json").exists() {
+            (Backend::Pjrt(PjrtBackend::new(artifacts)), "pjrt (AOT Pallas kernels)")
+        } else {
+            (Backend::compiled(), "compiled-tape (run `make artifacts` for pjrt)")
+        }
     };
+    #[cfg(not(feature = "pjrt"))]
+    let (backend, backend_name) = (Backend::compiled(), "compiled-tape");
     println!("backend: {backend_name}");
 
     println!("generating {n_events} Drell-Yan events...");

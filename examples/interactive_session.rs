@@ -38,7 +38,9 @@ fn main() -> Result<(), String> {
             claim_ttl: Duration::from_secs(30),
             straggler: None,
         },
-        Backend::Columnar,
+        // Compiled-tape backend: every distinct query compiles once per
+        // process and is shared by all workers.
+        Backend::compiled(),
     ));
     // Four shared datasets (the "popular sample" effect).
     for d in 0..4 {

@@ -36,7 +36,13 @@ fn main() -> Result<(), String> {
     queryir::run_transformed(src, &data, &mut h_flat)?;
     assert_eq!(h_obj.bins, h_flat.bins, "transform must not change results");
 
-    // 3c. The engine's compiled endpoint.
+    // 3c. The compiled-tape backend: the same source lowered to a compiled
+    // closure graph (what the cluster runs in production).
+    let mut h_compiled = H1::new(64, 0.0, 128.0);
+    Backend::compiled().run(&Query::from_source(src, "dy"), &data, &mut h_compiled)?;
+    assert_eq!(h_obj.bins, h_compiled.bins, "compilation must not change results");
+
+    // 3d. The engine's hand-written endpoint.
     let q = Query::new(QueryKind::MassPairs, "dy", "muons");
     let mut h_engine = H1::new(q.n_bins, q.lo, q.hi);
     Backend::Columnar.run(&q, &data, &mut h_engine)?;

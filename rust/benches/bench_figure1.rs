@@ -16,13 +16,11 @@
 //! reading series.
 
 use hepq::datagen::generate_drellyan;
-use hepq::engine::executor::PjrtBackend;
 use hepq::engine::{columnar_exec, object_baseline, Backend, Query, QueryKind};
 use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
 use hepq::hist::H1;
 use hepq::queryir::{self, table3};
 use hepq::util::benchkit::{black_box, Bench};
-use std::path::Path;
 
 fn main() {
     let n_events: usize = std::env::var("HEPQ_BENCH_EVENTS")
@@ -44,11 +42,17 @@ fn main() {
     write_dataset(&slim_path, &slim, WriteOptions { codec: Codec::None, basket_items: 256 * 1024 })
         .unwrap();
 
-    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let pjrt = artifacts
-        .join("manifest.json")
-        .exists()
-        .then(|| Backend::Pjrt(PjrtBackend::new(artifacts)));
+    #[cfg(feature = "pjrt")]
+    let pjrt = {
+        use hepq::engine::executor::PjrtBackend;
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        artifacts
+            .join("manifest.json")
+            .exists()
+            .then(|| Backend::Pjrt(PjrtBackend::new(artifacts)))
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let pjrt: Option<Backend> = None;
 
     let cases: [(&str, QueryKind, &str); 4] = [
         ("max_pt", QueryKind::MaxPt, table3::MAX_PT),
@@ -102,12 +106,21 @@ fn main() {
             black_box(h.total());
         });
 
-        // ...and the tape-compiled (bytecode) evaluation — the production
-        // path of `run_transformed` (the Numba role in the paper).
+        // ...and the tape-compiled (bytecode) evaluation — the Numba role
+        // in the paper...
         let tp = queryir::tape::compile(&prog);
         b.run(&format!("{name} / code transform (tape VM)"), n, || {
             let mut h = H1::new(64, q.lo, q.hi);
             queryir::tape::run(&tp, &cs, &mut h).unwrap();
+            black_box(h.total());
+        });
+
+        // ...and the compiled-tape closure graph — the production path of
+        // `Backend::CompiledTape`.
+        let cp = queryir::lower::lower(&prog).unwrap();
+        b.run(&format!("{name} / code transform (compiled tape)"), n, || {
+            let mut h = H1::new(64, q.lo, q.hi);
+            queryir::lower::run(&cp, &cs, &mut h).unwrap();
             black_box(h.total());
         });
 

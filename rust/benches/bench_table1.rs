@@ -14,10 +14,11 @@
 //! magnitude end to end, with the big cliffs at selective reading and at
 //! de-materialization.
 
-use hepq::datagen::generate_ttbar;
+use hepq::datagen::{generate_drellyan, generate_ttbar};
 use hepq::engine::{columnar_exec, object_baseline, Query, QueryKind};
 use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
 use hepq::hist::H1;
+use hepq::queryir::{self, table3};
 use hepq::util::benchkit::{black_box, Bench};
 
 fn main() {
@@ -104,7 +105,57 @@ fn main() {
         black_box(bins[0]);
     });
 
+    // --- query-compilation ladder (mass_pairs on Drell-Yan muons) --------
+    // The same physics function executed at every interpretation level the
+    // repo has: object interpreter → transformed AST walk → tape VM →
+    // compiled-tape closures → hand-written loops. The compiled tape is the
+    // production path of `Backend::CompiledTape`; the target is ≥5x over
+    // the object interpreter.
+    let dy_events = (n_events / 5).clamp(2_000, 100_000);
+    eprintln!("table1: query-compilation ladder on {dy_events} DY events...");
+    let dy = generate_drellyan(dy_events, 7);
+    let nd = dy_events as f64;
+    let src = table3::MASS_PAIRS;
+    let parsed = queryir::parse(src).unwrap();
+    let prog = queryir::compile(src, &dy.schema).unwrap();
+    let tp = queryir::tape::compile(&prog);
+    let cp = queryir::lower::lower(&prog).unwrap();
+    b.run("7 mass_pairs object interpreter", nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::interp::run(&parsed, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("8 mass_pairs transformed (AST eval)", nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::flat::run(&prog, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("9 mass_pairs transformed (tape VM)", nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::tape::run(&tp, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("10 mass_pairs compiled tape", nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run(&cp, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("11 mass_pairs hand-written columnar", nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        columnar_exec::run(QueryKind::MassPairs, &dy, "muons", &mut h).unwrap();
+        black_box(h.total());
+    });
+
     b.finish();
+
+    let interp_rate = b.get("7 mass_pairs object interpreter").unwrap().rate();
+    let compiled_rate = b.get("10 mass_pairs compiled tape").unwrap().rate();
+    let speedup = compiled_rate / interp_rate;
+    eprintln!(
+        "\ncompilation check: compiled-tape / object-interpreter = {speedup:.1}x on mass_pairs \
+         (target >= 5x){}",
+        if speedup < 5.0 { "  ** BELOW TARGET **" } else { "" }
+    );
 
     // Shape assertions (soft: print, don't panic, but flag).
     let r1 = b.get("1 full framework (all branches + modules)").unwrap().rate();

@@ -21,9 +21,18 @@ use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------- catalog
 
+/// One registered dataset: partitions + a monotonically increasing version
+/// (bumped on every re-registration, which is how the server's result cache
+/// invalidates without explicit flushes).
+struct DatasetEntry {
+    parts: Vec<Arc<ColumnSet>>,
+    schema: crate::columnar::schema::Ty,
+    version: u64,
+}
+
 /// The shared dataset store ("remote storage" + partition index).
 pub struct DatasetCatalog {
-    datasets: RwLock<HashMap<String, Vec<Arc<ColumnSet>>>>,
+    datasets: RwLock<HashMap<String, DatasetEntry>>,
     /// Simulated remote-fetch latency per MiB on a cache miss.
     pub fetch_delay_per_mib: Duration,
     pub fetches: AtomicU64,
@@ -40,19 +49,39 @@ impl DatasetCatalog {
         }
     }
 
-    /// Register a dataset, splitting it into partitions of
-    /// `events_per_partition`.
+    /// Register (or replace) a dataset, splitting it into partitions of
+    /// `events_per_partition`. Replacing bumps the dataset version.
     pub fn register(&self, name: &str, cs: ColumnSet, events_per_partition: usize) {
+        let schema = cs.schema.clone();
         let parts: Vec<Arc<ColumnSet>> = cs
             .partition(events_per_partition)
             .into_iter()
             .map(Arc::new)
             .collect();
-        self.datasets.write().unwrap().insert(name.to_string(), parts);
+        let mut g = self.datasets.write().unwrap();
+        let version = g.get(name).map(|e| e.version + 1).unwrap_or(1);
+        g.insert(
+            name.to_string(),
+            DatasetEntry {
+                parts,
+                schema,
+                version,
+            },
+        );
     }
 
     pub fn n_partitions(&self, name: &str) -> Option<usize> {
-        self.datasets.read().unwrap().get(name).map(|p| p.len())
+        self.datasets.read().unwrap().get(name).map(|e| e.parts.len())
+    }
+
+    /// Current version of a dataset (1 on first registration).
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.datasets.read().unwrap().get(name).map(|e| e.version)
+    }
+
+    /// Schema of a dataset (for validating source queries at submit time).
+    pub fn schema(&self, name: &str) -> Option<crate::columnar::schema::Ty> {
+        self.datasets.read().unwrap().get(name).map(|e| e.schema.clone())
     }
 
     /// Registered dataset names with (partitions, events, bytes).
@@ -61,12 +90,12 @@ impl DatasetCatalog {
             .read()
             .unwrap()
             .iter()
-            .map(|(name, parts)| {
+            .map(|(name, e)| {
                 (
                     name.clone(),
-                    parts.len(),
-                    parts.iter().map(|p| p.n_events).sum(),
-                    parts.iter().map(|p| p.byte_size()).sum(),
+                    e.parts.len(),
+                    e.parts.iter().map(|p| p.n_events).sum(),
+                    e.parts.iter().map(|p| p.byte_size()).sum(),
                 )
             })
             .collect()
@@ -78,6 +107,7 @@ impl DatasetCatalog {
             let g = self.datasets.read().unwrap();
             g.get(name)
                 .ok_or_else(|| format!("no dataset '{name}'"))?
+                .parts
                 .get(part)
                 .ok_or_else(|| format!("dataset '{name}' has no partition {part}"))?
                 .clone()

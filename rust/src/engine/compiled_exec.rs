@@ -1,0 +1,199 @@
+//! The compiled-tape execution backend (`Backend::CompiledTape`).
+//!
+//! Bridges the query language to the engine: a query — either a built-in
+//! `QueryKind` (rendered to query-language source over the requested list)
+//! or free-form source text — is parsed, transformed to a flat tape and
+//! lowered once (`queryir::lower`), then the compiled program is reused for
+//! every partition. The compile cache is shared behind `Arc`, so cloning
+//! the backend into every cluster worker means each distinct program is
+//! compiled exactly once per process, not once per worker or per partition.
+//!
+//! This closes the gap the hand-written `columnar_exec` left open: new
+//! physics queries no longer need a Rust function per query — any
+//! query-language program runs at compiled-loop speed.
+
+use crate::columnar::arrays::ColumnSet;
+use crate::engine::query::{Query, QueryKind};
+use crate::hist::H1;
+use crate::queryir::{self, lower};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Query-language source for a built-in query kind over an arbitrary list.
+/// Semantically identical to the hand-written loops in `columnar_exec` (and
+/// to `queryir::table3` when `list == "muons"`).
+pub fn source_for(kind: QueryKind, list: &str) -> String {
+    match kind {
+        QueryKind::MaxPt => format!(
+            "for event in dataset:\n    \
+             maximum = 0.0\n    \
+             n = len(event.{list})\n    \
+             for item in event.{list}:\n        \
+             if item.pt > maximum:\n            \
+             maximum = item.pt\n    \
+             if n > 0:\n        \
+             fill(maximum)\n"
+        ),
+        QueryKind::EtaBest => format!(
+            "for event in dataset:\n    \
+             maximum = 0.0\n    \
+             found = 0\n    \
+             eta = 0.0\n    \
+             for item in event.{list}:\n        \
+             if item.pt > maximum:\n            \
+             maximum = item.pt\n            \
+             eta = item.eta\n            \
+             found = 1\n    \
+             if found > 0:\n        \
+             fill(eta)\n"
+        ),
+        QueryKind::PtSumPairs => format!(
+            "for event in dataset:\n    \
+             n = len(event.{list})\n    \
+             for i in range(n):\n        \
+             for j in range(i + 1, n):\n            \
+             a = event.{list}[i]\n            \
+             b = event.{list}[j]\n            \
+             fill(a.pt + b.pt)\n"
+        ),
+        QueryKind::MassPairs => format!(
+            "for event in dataset:\n    \
+             n = len(event.{list})\n    \
+             for i in range(n):\n        \
+             for j in range(i + 1, n):\n            \
+             a = event.{list}[i]\n            \
+             b = event.{list}[j]\n            \
+             mass = sqrt(2 * a.pt * b.pt * (cosh(a.eta - b.eta) - cos(a.phi - b.phi)))\n            \
+             fill(mass)\n"
+        ),
+        QueryKind::FlatHist => format!(
+            "for event in dataset:\n    \
+             for item in event.{list}:\n        \
+             fill(item.pt)\n"
+        ),
+    }
+}
+
+/// The backend: a process-wide compile cache keyed by (source, schema).
+/// Full strings as keys (not digests): query source arrives from untrusted
+/// clients, and a hash-only key would let collisions execute the wrong
+/// program.
+#[derive(Clone, Default)]
+pub struct CompiledTapeBackend {
+    cache: Arc<RwLock<HashMap<String, Arc<lower::CompiledProgram>>>>,
+}
+
+impl CompiledTapeBackend {
+    pub fn new() -> CompiledTapeBackend {
+        CompiledTapeBackend::default()
+    }
+
+    /// Run a query (kind- or source-based) over one partition.
+    pub fn run(&self, query: &Query, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+        match &query.source {
+            Some(src) => self.run_source(src, cs, hist),
+            None => self.run_source(&source_for(query.kind, &query.list), cs, hist),
+        }
+    }
+
+    /// Run query-language source over one partition, compiling on first use.
+    pub fn run_source(&self, src: &str, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+        let prog = self.program_for(src, cs)?;
+        lower::run(&prog, cs, hist)
+    }
+
+    /// Number of distinct programs compiled so far (observability/tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.read().unwrap().len()
+    }
+
+    fn program_for(
+        &self,
+        src: &str,
+        cs: &ColumnSet,
+    ) -> Result<Arc<lower::CompiledProgram>, String> {
+        // Key on source text + schema: the same text over a different
+        // schema may transform to different column bindings.
+        let key = format!("{src}\u{0}{}", cs.schema);
+        if let Some(p) = self.cache.read().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let flat = queryir::compile(src, &cs.schema)?;
+        let compiled = Arc::new(lower::lower(&flat)?);
+        self.cache
+            .write()
+            .unwrap()
+            .insert(key, compiled.clone());
+        Ok(compiled)
+    }
+}
+
+impl std::fmt::Debug for CompiledTapeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CompiledTapeBackend({} programs)", self.compiled_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_drellyan, generate_ttbar};
+    use crate::engine::columnar_exec;
+
+    fn assert_close(a: &H1, b: &H1, what: &str) {
+        assert_eq!(a.total(), b.total(), "{what}: totals");
+        let diff: f64 = a.bins.iter().zip(&b.bins).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff <= 4.0, "{what}: bins differ by {diff}");
+    }
+
+    #[test]
+    fn kinds_match_handwritten_columnar_on_muons() {
+        let cs = generate_drellyan(2000, 41);
+        let be = CompiledTapeBackend::new();
+        for kind in QueryKind::ALL {
+            let q = Query::new(kind, "dy", "muons");
+            let mut h_hand = H1::new(q.n_bins, q.lo, q.hi);
+            columnar_exec::run(kind, &cs, "muons", &mut h_hand).unwrap();
+            let mut h_comp = H1::new(q.n_bins, q.lo, q.hi);
+            be.run(&q, &cs, &mut h_comp).unwrap();
+            assert_close(&h_comp, &h_hand, kind.artifact());
+        }
+        // One program per kind, compiled once.
+        assert_eq!(be.compiled_count(), QueryKind::ALL.len());
+        // Re-running does not recompile.
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        let mut h = H1::new(q.n_bins, q.lo, q.hi);
+        be.run(&q, &cs, &mut h).unwrap();
+        assert_eq!(be.compiled_count(), QueryKind::ALL.len());
+    }
+
+    #[test]
+    fn works_over_other_lists() {
+        // The same built-in kinds run over the jets list of a tt̄ sample —
+        // the thing the hand-written backend needed new Rust code for.
+        let cs = generate_ttbar(500, 6, 42);
+        let be = CompiledTapeBackend::new();
+        let q = Query::new(QueryKind::MaxPt, "tt", "jets");
+        let mut h_hand = H1::new(q.n_bins, q.lo, q.hi);
+        columnar_exec::run(QueryKind::MaxPt, &cs, "jets", &mut h_hand).unwrap();
+        let mut h_comp = H1::new(q.n_bins, q.lo, q.hi);
+        be.run(&q, &cs, &mut h_comp).unwrap();
+        assert_close(&h_comp, &h_hand, "jets max_pt");
+    }
+
+    #[test]
+    fn source_queries_run_and_cache() {
+        let cs = generate_drellyan(800, 43);
+        let be = CompiledTapeBackend::new();
+        let src = "for event in dataset:\n    for m in event.muons:\n        fill(m.pt)\n";
+        let mut h = H1::new(64, 0.0, 128.0);
+        be.run_source(src, &cs, &mut h).unwrap();
+        assert!(h.total() > 0.0);
+        assert_eq!(be.compiled_count(), 1);
+        // Bad source surfaces a compile error, not a worker crash.
+        let err = be
+            .run_source("for event in dataset:\n    fill(nope)\n", &cs, &mut h)
+            .unwrap_err();
+        assert!(err.contains("nope"), "{err}");
+    }
+}

@@ -1,58 +1,72 @@
 //! Per-partition execution dispatch: one enum over every backend so the
-//! coordinator, benches and examples pick a path with one value.
+//! coordinator, server, benches and examples pick a path with one value.
 
 use crate::columnar::arrays::ColumnSet;
+use crate::engine::compiled_exec::CompiledTapeBackend;
 use crate::engine::query::Query;
 use crate::engine::{columnar_exec, object_baseline};
 use crate::hist::H1;
-use crate::runtime::{ArtifactRegistry, PaddedPartition, QueryExecutable};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::rc::Rc;
-use std::sync::Arc;
 
-thread_local! {
-    /// PJRT clients are not Send (the xla crate wraps Rc internally), so
-    /// each worker thread owns its own registry — mirroring a deployment
-    /// where every worker process has its own runtime. Keyed by artifact
-    /// dir; compiled executables are cached inside the registry.
-    static TL_REGISTRIES: RefCell<HashMap<PathBuf, Rc<ArtifactRegistry>>> =
-        RefCell::new(HashMap::new());
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::PjrtBackend;
 
-/// Handle to the AOT artifacts, shareable across threads.
-#[derive(Clone, Debug)]
-pub struct PjrtBackend {
-    pub artifact_dir: Arc<PathBuf>,
-}
+/// The PJRT execution path (behind the `pjrt` cargo feature): load AOT
+/// artifacts and execute them through an XLA binding.
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use crate::runtime::ArtifactRegistry;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::rc::Rc;
+    use std::sync::Arc;
 
-impl PjrtBackend {
-    pub fn new(dir: impl Into<PathBuf>) -> PjrtBackend {
-        PjrtBackend {
-            artifact_dir: Arc::new(dir.into()),
-        }
+    thread_local! {
+        /// PJRT clients are not Send (the xla crate wraps Rc internally), so
+        /// each worker thread owns its own registry — mirroring a deployment
+        /// where every worker process has its own runtime. Keyed by artifact
+        /// dir; compiled executables are cached inside the registry.
+        static TL_REGISTRIES: RefCell<HashMap<PathBuf, Rc<ArtifactRegistry>>> =
+            RefCell::new(HashMap::new());
     }
 
-    /// This thread's registry (created + compiled on first use).
-    pub fn registry(&self) -> Result<Rc<ArtifactRegistry>, String> {
-        TL_REGISTRIES.with(|map| {
-            let mut map = map.borrow_mut();
-            if let Some(r) = map.get(self.artifact_dir.as_ref()) {
-                return Ok(r.clone());
+    /// Handle to the AOT artifacts, shareable across threads.
+    #[derive(Clone, Debug)]
+    pub struct PjrtBackend {
+        pub artifact_dir: Arc<PathBuf>,
+    }
+
+    impl PjrtBackend {
+        pub fn new(dir: impl Into<PathBuf>) -> PjrtBackend {
+            PjrtBackend {
+                artifact_dir: Arc::new(dir.into()),
             }
-            let reg = Rc::new(ArtifactRegistry::open(self.artifact_dir.as_ref())?);
-            map.insert((*self.artifact_dir).clone(), reg.clone());
-            Ok(reg)
-        })
+        }
+
+        /// This thread's registry (created + compiled on first use).
+        pub fn registry(&self) -> Result<Rc<ArtifactRegistry>, String> {
+            TL_REGISTRIES.with(|map| {
+                let mut map = map.borrow_mut();
+                if let Some(r) = map.get(self.artifact_dir.as_ref()) {
+                    return Ok(r.clone());
+                }
+                let reg = Rc::new(ArtifactRegistry::open(self.artifact_dir.as_ref())?);
+                map.insert((*self.artifact_dir).clone(), reg.clone());
+                Ok(reg)
+            })
+        }
     }
 }
 
 /// How to execute a query over a partition.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub enum Backend {
     /// Hand-written flat loops (the transformed-code endpoint).
     Columnar,
+    /// Query-language source → flat tape → compiled closure loops. Runs any
+    /// query the language can express at near-handwritten speed; programs
+    /// compile once per process (shared cache).
+    CompiledTape(CompiledTapeBackend),
     /// Heap-object materialization then object loops.
     HeapObjects,
     /// Stack-object materialization then object loops.
@@ -60,22 +74,24 @@ pub enum Backend {
     /// Full framework simulation (all branches, module chain).
     FrameworkSim,
     /// AOT-compiled Pallas/JAX artifact via PJRT.
+    #[cfg(feature = "pjrt")]
     Pjrt(PjrtBackend),
 }
 
-impl std::fmt::Debug for Backend {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.name())
-    }
-}
-
 impl Backend {
+    /// The compiled-tape backend with a fresh (shareable) compile cache.
+    pub fn compiled() -> Backend {
+        Backend::CompiledTape(CompiledTapeBackend::new())
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Columnar => "columnar",
+            Backend::CompiledTape(_) => "compiled-tape",
             Backend::HeapObjects => "heap-objects",
             Backend::StackObjects => "stack-objects",
             Backend::FrameworkSim => "framework-sim",
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
         }
     }
@@ -83,8 +99,21 @@ impl Backend {
     /// Execute `query` over one exploded partition, accumulating into
     /// `hist`.
     pub fn run(&self, query: &Query, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+        // Free-form source queries run through the code-transformation
+        // pipeline; only the backends that implement it accept them.
+        if let Some(src) = &query.source {
+            return match self {
+                Backend::CompiledTape(ct) => ct.run_source(src, cs, hist),
+                Backend::Columnar => crate::queryir::run_transformed(src, cs, hist),
+                other => Err(format!(
+                    "backend '{}' cannot execute query-language source",
+                    other.name()
+                )),
+            };
+        }
         match self {
             Backend::Columnar => columnar_exec::run(query.kind, cs, &query.list, hist),
+            Backend::CompiledTape(ct) => ct.run(query, cs, hist),
             Backend::HeapObjects => {
                 let events = object_baseline::materialize_heap(cs, &query.list)?;
                 object_baseline::run_heap(query.kind, &events, hist);
@@ -98,7 +127,9 @@ impl Backend {
             Backend::FrameworkSim => {
                 object_baseline::FrameworkSim::new().run(cs, &query.list, query.kind, hist)
             }
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(pj) => {
+                use crate::runtime::{PaddedPartition, QueryExecutable};
                 let reg = pj.registry()?;
                 let exe = QueryExecutable::new(&reg, query.kind.artifact())?;
                 let shape = exe.shape();
@@ -147,6 +178,27 @@ mod tests {
                 be.run(&q, &cs, &mut h).unwrap();
                 assert_eq!(h.bins, base.bins, "{kind:?} {be:?}");
             }
+            // The compiled tape agrees on totals; pair-mass bins may drift
+            // by an ulp against the f32-subtracting hand-written loops.
+            let mut h = H1::new(q.n_bins, q.lo, q.hi);
+            Backend::compiled().run(&q, &cs, &mut h).unwrap();
+            assert_eq!(h.total(), base.total(), "{kind:?} compiled-tape");
         }
+    }
+
+    #[test]
+    fn source_queries_dispatch() {
+        let cs = generate_drellyan(300, 6);
+        let src = "for event in dataset:\n    for m in event.muons:\n        fill(m.pt)\n";
+        let q = Query::from_source(src, "dy");
+        let mut h1 = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::compiled().run(&q, &cs, &mut h1).unwrap();
+        let mut h2 = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::Columnar.run(&q, &cs, &mut h2).unwrap();
+        assert_eq!(h1.bins, h2.bins);
+        assert!(h1.total() > 0.0);
+        // Object baselines reject source queries cleanly.
+        let mut h3 = H1::new(q.n_bins, q.lo, q.hi);
+        assert!(Backend::HeapObjects.run(&q, &cs, &mut h3).is_err());
     }
 }

@@ -2,9 +2,11 @@
 //! ladder of Table 1 and the executors behind Figure 1.
 
 pub mod columnar_exec;
+pub mod compiled_exec;
 pub mod executor;
 pub mod object_baseline;
 pub mod query;
 
+pub use compiled_exec::CompiledTapeBackend;
 pub use executor::Backend;
 pub use query::{Query, QueryKind};

@@ -77,9 +77,17 @@ impl QueryKind {
 }
 
 /// A full query: function + dataset + binning.
+///
+/// Queries come in two forms: a built-in `kind` (the Table-3 functions,
+/// which every backend knows), or free-form query-language `source`
+/// (executed by the code-transformation backends — `Backend::CompiledTape`
+/// compiles it, `Backend::Columnar` interprets the transformed tape). When
+/// `source` is set, `kind` is a placeholder and is ignored by execution.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Query {
     pub kind: QueryKind,
+    /// Query-language source text; overrides `kind` when present.
+    pub source: Option<String>,
     /// Dataset name (resolved by the coordinator's catalog).
     pub dataset: String,
     /// List path the function iterates over ("muons", "jets").
@@ -94,11 +102,25 @@ impl Query {
         let (lo, hi) = kind.default_binning();
         Query {
             kind,
+            source: None,
             dataset: dataset.to_string(),
             list: list.to_string(),
             n_bins: 64,
             lo,
             hi,
+        }
+    }
+
+    /// A free-form query-language query (the exploratory-physics path).
+    pub fn from_source(src: impl Into<String>, dataset: &str) -> Query {
+        Query {
+            kind: QueryKind::FlatHist,
+            source: Some(src.into()),
+            dataset: dataset.to_string(),
+            list: String::new(),
+            n_bins: 64,
+            lo: 0.0,
+            hi: 128.0,
         }
     }
 
@@ -114,23 +136,31 @@ impl Query {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("kind", Json::str(self.kind.artifact())),
             ("dataset", Json::str(self.dataset.clone())),
             ("list", Json::str(self.list.clone())),
             ("n_bins", Json::num(self.n_bins as f64)),
             ("lo", Json::num(self.lo)),
             ("hi", Json::num(self.hi)),
-        ])
+        ];
+        if let Some(src) = &self.source {
+            pairs.push(("src", Json::str(src.clone())));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Query, String> {
-        let kind = QueryKind::from_name(
-            j.get("kind").and_then(|v| v.as_str()).ok_or("missing kind")?,
-        )
-        .ok_or("unknown kind")?;
+        let source = j.get("src").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let kind = match j.get("kind").and_then(|v| v.as_str()) {
+            Some(name) => QueryKind::from_name(name).ok_or("unknown kind")?,
+            // Source queries need no kind; keep a harmless placeholder.
+            None if source.is_some() => QueryKind::FlatHist,
+            None => return Err("missing kind".to_string()),
+        };
         Ok(Query {
             kind,
+            source,
             dataset: j
                 .get("dataset")
                 .and_then(|v| v.as_str())
@@ -168,5 +198,22 @@ mod tests {
         let q = Query::new(QueryKind::MassPairs, "dy", "muons").with_binning(64, 0.0, 128.0);
         let j = Json::parse(&q.to_json().to_string()).unwrap();
         assert_eq!(Query::from_json(&j).unwrap(), q);
+    }
+
+    #[test]
+    fn source_query_json_roundtrip() {
+        let src = "for event in dataset:\n    fill(event.met)\n";
+        let q = Query::from_source(src, "dy").with_binning(32, 0.0, 100.0);
+        let j = Json::parse(&q.to_json().to_string()).unwrap();
+        let back = Query::from_json(&j).unwrap();
+        assert_eq!(back.source.as_deref(), Some(src));
+        assert_eq!(back, q);
+        // A src-only request (no kind) parses too.
+        let req = Json::parse(
+            r#"{"op":"query","src":"for event in dataset:\n    fill(event.met)\n","dataset":"dy"}"#,
+        )
+        .unwrap();
+        let q2 = Query::from_json(&req).unwrap();
+        assert!(q2.source.is_some());
     }
 }

@@ -1,10 +1,26 @@
 //! Basket compression codecs.
 //!
-//! ROOT compresses each basket independently with zlib/LZ4/zstd; we offer
-//! `None` (the paper's Figure-1 measurements are on uncompressed data),
-//! `Zstd` and `Flate` (zlib). The codec is recorded per-file.
-
-use std::io::{Read, Write};
+//! ROOT compresses each basket independently with zlib/LZ4/zstd. The seed
+//! tree delegated `Codec::Zstd`/`Codec::Flate` to the external `zstd` and
+//! `flate2` crates, which made a fresh clone depend on network-fetched
+//! native libraries; the default build must have none (CI builds offline).
+//! Both codec names now run on **femtolz**, an in-repo LZ77 with an
+//! LZ4-style token stream: `Flate` uses a small hash table (fast, weaker),
+//! `Zstd(level)` scales the hash table with the level (slower, stronger).
+//! The decoder is fully bounds-checked: corrupt baskets produce `Err`,
+//! never a panic or out-of-range copy.
+//!
+//! Compatibility note: the codec *tags* ("zstd"/"flate") are kept although
+//! the algorithm changed — no build of this crate ever shipped before the
+//! manifest existed, so no `.froot` files with real zstd/zlib baskets can
+//! exist. If the external codecs ever return (e.g. behind a feature), bump
+//! the tags (e.g. "zstd-ext") rather than reusing these.
+//!
+//! Wire format per basket (byte stream, little-endian):
+//!   repeat: token u8 = (literal_len:4 | match_len-4:4), each nibble
+//!           saturating at 15 with 255-run extension bytes; literal bytes;
+//!           then (unless the stream ends) offset u16 (1-based back
+//!           distance) and the match continues from `out_len - offset`.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Codec {
@@ -12,6 +28,9 @@ pub enum Codec {
     Zstd(i32),
     Flate,
 }
+
+const MIN_MATCH: usize = 4;
+const MAX_OFFSET: usize = 65_535;
 
 impl Codec {
     pub fn name(&self) -> String {
@@ -39,39 +58,188 @@ impl Codec {
         }
     }
 
+    /// Hash-table size (log2) for the LZ77 searcher.
+    fn hash_bits(&self) -> u32 {
+        match self {
+            Codec::None => 0,
+            Codec::Flate => 12,
+            Codec::Zstd(level) => (12 + (*level).clamp(0, 6)) as u32,
+        }
+    }
+
     pub fn compress(&self, raw: &[u8]) -> Result<Vec<u8>, String> {
         match self {
             Codec::None => Ok(raw.to_vec()),
-            Codec::Zstd(level) => {
-                zstd::bulk::compress(raw, *level).map_err(|e| format!("zstd compress: {e}"))
-            }
-            Codec::Flate => {
-                let mut enc =
-                    flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::fast());
-                enc.write_all(raw).map_err(|e| e.to_string())?;
-                enc.finish().map_err(|e| e.to_string())
-            }
+            _ => Ok(lz_compress(raw, self.hash_bits())),
         }
     }
 
     pub fn decompress(&self, comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
         match self {
             Codec::None => Ok(comp.to_vec()),
-            Codec::Zstd(_) => zstd::bulk::decompress(comp, raw_size)
-                .map_err(|e| format!("zstd decompress: {e}")),
-            Codec::Flate => {
-                let mut dec = flate2::read::ZlibDecoder::new(comp);
-                let mut out = Vec::with_capacity(raw_size);
-                dec.read_to_end(&mut out).map_err(|e| e.to_string())?;
-                Ok(out)
-            }
+            _ => lz_decompress(comp, raw_size),
         }
     }
+}
+
+#[inline]
+fn hash4(bytes: &[u8], i: usize, bits: u32) -> usize {
+    let v = u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - bits)) as usize
+}
+
+/// Append a nibble-extended length: `head` already holds the saturated
+/// nibble; this emits the 255-run continuation bytes for `rest`.
+fn push_ext_len(out: &mut Vec<u8>, mut rest: usize) {
+    loop {
+        if rest >= 255 {
+            out.push(255);
+            rest -= 255;
+        } else {
+            out.push(rest as u8);
+            return;
+        }
+    }
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], match_len: usize, offset: usize) {
+    let lit_nib = literals.len().min(15);
+    let mat_nib = if match_len == 0 {
+        0
+    } else {
+        (match_len - MIN_MATCH).min(15)
+    };
+    out.push(((lit_nib as u8) << 4) | mat_nib as u8);
+    if lit_nib == 15 {
+        push_ext_len(out, literals.len() - 15);
+    }
+    out.extend_from_slice(literals);
+    if match_len > 0 {
+        out.extend_from_slice(&(offset as u16).to_le_bytes());
+        if mat_nib == 15 {
+            push_ext_len(out, match_len - MIN_MATCH - 15);
+        }
+    }
+}
+
+fn lz_compress(raw: &[u8], hash_bits: u32) -> Vec<u8> {
+    let n = raw.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n < MIN_MATCH {
+        if n > 0 {
+            emit_sequence(&mut out, raw, 0, 0);
+        }
+        return out;
+    }
+    // Single-probe hash table of the most recent position per 4-byte hash.
+    let mut table = vec![u32::MAX; 1usize << hash_bits];
+    let mut anchor = 0usize; // start of the pending literal run
+    let mut i = 0usize;
+    while i + MIN_MATCH <= n {
+        let h = hash4(raw, i, hash_bits);
+        let cand = table[h];
+        table[h] = i as u32;
+        let ok = cand != u32::MAX && {
+            let c = cand as usize;
+            i - c <= MAX_OFFSET && raw[c..c + MIN_MATCH] == raw[i..i + MIN_MATCH]
+        };
+        if ok {
+            let c = cand as usize;
+            let mut len = MIN_MATCH;
+            while i + len < n && raw[c + len] == raw[i + len] {
+                len += 1;
+            }
+            emit_sequence(&mut out, &raw[anchor..i], len, i - c);
+            // Seed the table inside the match so long repeats keep chaining.
+            let step = ((len / 16).max(1)).min(64);
+            let mut j = i + 1;
+            while j + MIN_MATCH <= n && j < i + len {
+                table[hash4(raw, j, hash_bits)] = j as u32;
+                j += step;
+            }
+            i += len;
+            anchor = i;
+        } else {
+            i += 1;
+        }
+    }
+    if anchor < n {
+        emit_sequence(&mut out, &raw[anchor..n], 0, 0);
+    }
+    out
+}
+
+fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
+    let mut out: Vec<u8> = Vec::with_capacity(raw_size);
+    let mut sp = 0usize;
+    let read_ext = |sp: &mut usize| -> Result<usize, String> {
+        let mut total = 0usize;
+        loop {
+            let b = *comp.get(*sp).ok_or("truncated length run")?;
+            *sp += 1;
+            total += b as usize;
+            if b != 255 {
+                return Ok(total);
+            }
+        }
+    };
+    while sp < comp.len() {
+        let token = comp[sp];
+        sp += 1;
+        // Literals.
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            lit += read_ext(&mut sp)?;
+        }
+        let lit_end = sp.checked_add(lit).ok_or("literal length overflow")?;
+        if lit_end > comp.len() {
+            return Err("literal run past end of basket".to_string());
+        }
+        out.extend_from_slice(&comp[sp..lit_end]);
+        sp = lit_end;
+        if sp == comp.len() {
+            break; // final literal-only sequence
+        }
+        // Match.
+        if sp + 2 > comp.len() {
+            return Err("truncated match offset".to_string());
+        }
+        let offset = u16::from_le_bytes([comp[sp], comp[sp + 1]]) as usize;
+        sp += 2;
+        let mut mlen = (token & 0x0F) as usize;
+        if mlen == 15 {
+            mlen += read_ext(&mut sp)?;
+        }
+        mlen += MIN_MATCH;
+        if offset == 0 || offset > out.len() {
+            return Err(format!(
+                "bad match offset {offset} at output position {}",
+                out.len()
+            ));
+        }
+        if out.len() + mlen > raw_size {
+            return Err("decompressed data exceeds declared raw size".to_string());
+        }
+        // Byte-by-byte copy: overlapping matches (offset < len) replicate.
+        let start = out.len() - offset;
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+    if out.len() != raw_size {
+        return Err(format!(
+            "decompressed {} bytes, expected {raw_size}",
+            out.len()
+        ));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
 
     fn sample() -> Vec<u8> {
         (0..10_000u32).flat_map(|i| (i % 251).to_le_bytes()).collect()
@@ -110,5 +278,84 @@ mod tests {
             let c = codec.compress(&[]).unwrap();
             assert_eq!(codec.decompress(&c, 0).unwrap(), Vec::<u8>::new());
         }
+    }
+
+    #[test]
+    fn roundtrip_adversarial_shapes() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![7],                         // below MIN_MATCH
+            vec![1, 2, 3],                   // exactly below MIN_MATCH
+            vec![9; 4],                      // minimal match length
+            vec![0; 100_000],                // long overlapping run
+            (0..255u8).collect(),            // incompressible ramp
+            b"abcabcabcabcabcabcabcX".to_vec(), // short-period overlap
+            {
+                // Long literal run (> 15, exercises nibble extension) then
+                // a long match (> 19, exercises match extension).
+                let mut v: Vec<u8> = (0..300u32).flat_map(|i| (i as u16).to_le_bytes()).collect();
+                let tail = v.clone();
+                v.extend_from_slice(&tail);
+                v
+            },
+        ];
+        for raw in cases {
+            for codec in [Codec::Zstd(1), Codec::Zstd(6), Codec::Flate] {
+                let c = codec.compress(&raw).unwrap();
+                let d = codec.decompress(&c, raw.len()).unwrap();
+                assert_eq!(d, raw, "codec {codec:?} len {}", raw.len());
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_buffers() {
+        let mut rng = Pcg32::new(77);
+        for case in 0..50 {
+            let n = (rng.below(5_000) as usize) + (case % 3);
+            // Mix of random and repeated regions.
+            let mut raw = Vec::with_capacity(n);
+            while raw.len() < n {
+                if rng.bool_with(0.5) || raw.is_empty() {
+                    for _ in 0..rng.below(64) + 1 {
+                        raw.push(rng.next_u32() as u8);
+                    }
+                } else {
+                    let back = (rng.below(raw.len() as u32) as usize).max(1);
+                    let len = rng.below(200) as usize + 1;
+                    let start = raw.len() - back;
+                    for k in 0..len {
+                        let b = raw[start + k.min(back - 1) % back];
+                        raw.push(b);
+                    }
+                }
+            }
+            raw.truncate(n);
+            for codec in [Codec::Zstd(3), Codec::Flate] {
+                let c = codec.compress(&raw).unwrap();
+                let d = codec.decompress(&c, raw.len()).unwrap();
+                assert_eq!(d, raw, "case {case} codec {codec:?} len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_baskets_error_not_panic() {
+        let raw = sample();
+        let codec = Codec::Zstd(3);
+        let good = codec.compress(&raw).unwrap();
+        // Truncations.
+        for cut in [1, good.len() / 2, good.len() - 1] {
+            let _ = codec.decompress(&good[..cut], raw.len());
+        }
+        // Bit flips at every byte of a small compressed buffer.
+        let small = codec.compress(&raw[..512]).unwrap();
+        for i in 0..small.len() {
+            let mut bad = small.clone();
+            bad[i] ^= 0xFF;
+            let _ = codec.decompress(&bad, 512); // must not panic
+        }
+        // Wrong declared size.
+        assert!(codec.decompress(&good, raw.len() + 1).is_err());
+        assert!(codec.decompress(&good, raw.len().saturating_sub(1)).is_err());
     }
 }

@@ -6,9 +6,12 @@
 //!
 //! The crate is the Layer-3 Rust coordinator of a three-layer stack:
 //! Pallas kernels (L1) and JAX query graphs (L2) are AOT-compiled to HLO
-//! artifacts at build time; this crate loads and executes them via PJRT and
-//! provides everything around them — columnar storage, the query language
-//! and its code transformation, and the cache-aware distributed runtime.
+//! artifacts at build time; this crate can load and execute them via PJRT
+//! (behind the off-by-default `pjrt` cargo feature) and provides everything
+//! around them — columnar storage, the query language, its code
+//! transformation and the compiled-tape execution backend
+//! (`queryir::lower` + `engine::compiled_exec`), and the cache-aware
+//! distributed runtime.
 
 pub mod columnar;
 pub mod coord;
@@ -17,6 +20,7 @@ pub mod format;
 pub mod engine;
 pub mod hist;
 pub mod queryir;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -3,6 +3,7 @@
 
 use hepq::coord::{Cluster, ClusterConfig, Policy};
 use hepq::datagen::{generate_drellyan, generate_ttbar};
+#[cfg(feature = "pjrt")]
 use hepq::engine::executor::PjrtBackend;
 use hepq::engine::{Backend, Query, QueryKind};
 use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
@@ -29,11 +30,12 @@ fn app() -> App {
                 .pos("file", "input .froot path"),
             CommandSpec::new("query", "run one query over a dataset file")
                 .opt("kind", "max_pt", "max_pt|eta_best|ptsum_pairs|mass_pairs|flat_hist")
+                .opt("src-file", "", "query-language source file (overrides --kind)")
                 .opt("list", "muons", "particle list to iterate")
                 .opt("bins", "64", "histogram bins")
                 .opt("lo", "0", "histogram lower edge")
                 .opt("hi", "128", "histogram upper edge")
-                .opt("backend", "columnar", "columnar|pjrt|heap-objects|stack-objects|framework-sim")
+                .opt("backend", "compiled", "compiled|columnar|pjrt|heap-objects|stack-objects|framework-sim")
                 .opt("artifacts", "artifacts", "AOT artifact dir (pjrt backend)")
                 .pos("file", "input .froot path"),
             CommandSpec::new("serve", "start the distributed query server")
@@ -41,13 +43,14 @@ fn app() -> App {
                 .opt("workers", "4", "worker threads")
                 .opt("policy", "cache-aware", "cache-aware|any-pull|round-robin")
                 .opt("cache-mb", "512", "per-worker cache budget (MiB)")
-                .opt("backend", "columnar", "columnar|pjrt")
+                .opt("backend", "compiled", "compiled|columnar|pjrt")
                 .opt("artifacts", "artifacts", "AOT artifact dir")
                 .opt("partition-events", "16384", "events per partition")
                 .req("data", "comma-separated name=path.froot dataset list"),
             CommandSpec::new("client", "send a query to a running server")
                 .opt("addr", "127.0.0.1:8765", "server address")
                 .opt("kind", "mass_pairs", "query kind")
+                .opt("src-file", "", "query-language source file (overrides --kind)")
                 .opt("list", "muons", "particle list")
                 .opt("bins", "64", "bins")
                 .opt("lo", "0", "lower edge")
@@ -129,32 +132,67 @@ fn cmd_inspect(m: &Matches) -> Result<(), String> {
 
 fn parse_backend(m: &Matches) -> Result<Backend, String> {
     Ok(match m.str("backend") {
+        "compiled" | "compiled-tape" => Backend::compiled(),
         "columnar" => Backend::Columnar,
         "heap-objects" => Backend::HeapObjects,
         "stack-objects" => Backend::StackObjects,
         "framework-sim" => Backend::FrameworkSim,
+        #[cfg(feature = "pjrt")]
         "pjrt" => Backend::Pjrt(PjrtBackend::new(m.str("artifacts"))),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            return Err("this build has no PJRT support (rebuild with --features pjrt)".into())
+        }
         other => return Err(format!("unknown backend '{other}'")),
     })
 }
 
 fn cmd_query(m: &Matches) -> Result<(), String> {
-    let kind = QueryKind::from_name(m.str("kind"))
-        .ok_or_else(|| format!("unknown query kind '{}'", m.str("kind")))?;
     let backend = parse_backend(m)?;
     let mut r = DatasetReader::open(Path::new(m.str("file")))?;
-    let query = Query::new(kind, "file", m.str("list")).with_binning(
+    let src_file = m.str("src-file");
+    let query = if src_file.is_empty() {
+        let kind = QueryKind::from_name(m.str("kind"))
+            .ok_or_else(|| format!("unknown query kind '{}'", m.str("kind")))?;
+        Query::new(kind, "file", m.str("list"))
+    } else {
+        let src = std::fs::read_to_string(src_file)
+            .map_err(|e| format!("read {src_file}: {e}"))?;
+        Query::from_source(src, "file")
+    }
+    .with_binning(
         m.usize("bins").map_err(|e| e.to_string())?,
         m.f64("lo").map_err(|e| e.to_string())?,
         m.f64("hi").map_err(|e| e.to_string())?,
     );
     let t0 = std::time::Instant::now();
     // Selective read: only the branches this query touches (the full
-    // framework and heap baselines deliberately read everything).
-    let leaves = query.leaf_paths();
+    // framework and heap baselines deliberately read everything). Source
+    // queries learn their branches from the transformed program.
+    let leaves = match &query.source {
+        Some(src) => {
+            let prog = hepq::queryir::compile(src, &r.header.schema)?;
+            let mut ls = prog.item_cols.clone();
+            ls.extend(prog.event_cols.iter().cloned());
+            // Selective reading keeps a list's offsets only when one of its
+            // leaves is kept; a program may use a list (len(), iteration)
+            // without loading any of its leaves — read everything then.
+            let lists_covered = prog
+                .lists
+                .iter()
+                .all(|l| ls.iter().any(|leaf| leaf.starts_with(&format!("{l}."))));
+            if lists_covered {
+                ls
+            } else {
+                Vec::new() // empty set falls through to read_full below
+            }
+        }
+        None => query.leaf_paths(),
+    };
     let leaf_refs: Vec<&str> = leaves.iter().map(|s| s.as_str()).collect();
     let data = match backend {
         Backend::FrameworkSim | Backend::HeapObjects => r.read_full()?,
+        _ if leaf_refs.is_empty() => r.read_full()?,
         _ => r.read_selective(&leaf_refs)?,
     };
     let t_read = t0.elapsed();
@@ -162,10 +200,12 @@ fn cmd_query(m: &Matches) -> Result<(), String> {
     let t1 = std::time::Instant::now();
     backend.run(&query, &data, &mut hist)?;
     let t_run = t1.elapsed();
-    println!(
-        "{}",
-        ascii::render(&hist, &format!("{} over {}", m.str("kind"), m.str("file")), 48)
-    );
+    let title = if src_file.is_empty() {
+        format!("{} over {}", m.str("kind"), m.str("file"))
+    } else {
+        format!("{} over {}", src_file, m.str("file"))
+    };
+    println!("{}", ascii::render(&hist, &title, 48));
     println!(
         "read {:.1} ms ({} B), compute {:.1} ms, {:.2e} events/s",
         t_read.as_secs_f64() * 1e3,
@@ -183,11 +223,7 @@ fn cmd_serve(m: &Matches) -> Result<(), String> {
         "round-robin" => Policy::RoundRobinPush,
         other => return Err(format!("unknown policy '{other}'")),
     };
-    let backend = match m.str("backend") {
-        "columnar" => Backend::Columnar,
-        "pjrt" => Backend::Pjrt(PjrtBackend::new(m.str("artifacts"))),
-        other => return Err(format!("unknown backend '{other}'")),
-    };
+    let backend = parse_backend(m)?;
     let cluster = Arc::new(Cluster::start(
         ClusterConfig {
             n_workers: m.usize("workers").map_err(|e| e.to_string())?,
@@ -215,9 +251,17 @@ fn cmd_serve(m: &Matches) -> Result<(), String> {
 }
 
 fn cmd_client(m: &Matches) -> Result<(), String> {
-    let kind = QueryKind::from_name(m.str("kind"))
-        .ok_or_else(|| format!("unknown query kind '{}'", m.str("kind")))?;
-    let query = Query::new(kind, m.str("dataset"), m.str("list")).with_binning(
+    let src_file = m.str("src-file");
+    let query = if src_file.is_empty() {
+        let kind = QueryKind::from_name(m.str("kind"))
+            .ok_or_else(|| format!("unknown query kind '{}'", m.str("kind")))?;
+        Query::new(kind, m.str("dataset"), m.str("list"))
+    } else {
+        let src = std::fs::read_to_string(src_file)
+            .map_err(|e| format!("read {src_file}: {e}"))?;
+        Query::from_source(src, m.str("dataset"))
+    }
+    .with_binning(
         m.usize("bins").map_err(|e| e.to_string())?,
         m.f64("lo").map_err(|e| e.to_string())?,
         m.f64("hi").map_err(|e| e.to_string())?,
@@ -233,9 +277,14 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
     let hist = H1::from_json(resp.get("hist").ok_or("no hist in response")?)?;
     println!("{}", ascii::render(&hist, &format!("{} @ {}", m.str("kind"), m.str("dataset")), 48));
     println!(
-        "latency {:.0} ms, {} events",
+        "latency {:.0} ms, {} events{}",
         resp.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        resp.get("events").and_then(|v| v.as_u64()).unwrap_or(0)
+        resp.get("events").and_then(|v| v.as_u64()).unwrap_or(0),
+        if resp.get("cached") == Some(&hepq::util::json::Json::Bool(true)) {
+            " (result cache hit)"
+        } else {
+            ""
+        }
     );
     Ok(())
 }

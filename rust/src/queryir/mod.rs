@@ -10,11 +10,13 @@ pub mod ast;
 pub mod flat;
 pub mod interp;
 pub mod lexer;
+pub mod lower;
 pub mod parser;
 pub mod tape;
 pub mod transform;
 
 pub use ast::Program;
+pub use lower::CompiledProgram;
 pub use parser::parse;
 pub use transform::{FlatProgram, Transformer};
 

@@ -3,13 +3,28 @@
 //! Line protocol: one JSON object per line.
 //!   request:  {"op":"query","kind":"mass_pairs","dataset":"dy","list":"muons",
 //!              "n_bins":64,"lo":0,"hi":128}
-//!             {"op":"datasets"} | {"op":"ping"}
-//!   response: {"ok":true,"hist":{...},"latency_ms":...,"events":...}
+//!             {"op":"query","src":"for event in dataset:\n ...","dataset":"dy"}
+//!             {"op":"datasets"} | {"op":"stats"} | {"op":"ping"}
+//!   response: {"ok":true,"hist":{...},"latency_ms":...,"events":...,
+//!              "partitions":...,"cached":bool}
 //!             progress frames: {"progress":done,"total":n} (one per merge round)
+//!
+//! Source queries (`src`) are validated — parsed and transformed against the
+//! dataset schema — *before* any subtask is advertised, so malformed physics
+//! code is a one-line error to the client, never a stuck worker.
+//!
+//! Every final result lands in a normalized result cache keyed by the
+//! canonical tape fingerprint + dataset version + binning
+//! (`server::result_cache`), so a repeated exploratory query is answered in
+//! microseconds without touching the cluster.
+
+pub mod result_cache;
 
 use crate::coord::Cluster;
 use crate::engine::Query;
+use crate::queryir;
 use crate::util::json::Json;
+use result_cache::{CachedResult, ResultCache};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,6 +33,7 @@ use std::sync::Arc;
 pub struct Server {
     cluster: Arc<Cluster>,
     shutdown: Arc<AtomicBool>,
+    results: Arc<ResultCache>,
 }
 
 impl Server {
@@ -25,6 +41,7 @@ impl Server {
         Server {
             cluster,
             shutdown: Arc::new(AtomicBool::new(false)),
+            results: Arc::new(ResultCache::new(256)),
         }
     }
 
@@ -45,8 +62,9 @@ impl Server {
                     crate::log_debug!("connection from {peer}");
                     let cluster = self.cluster.clone();
                     let shutdown = self.shutdown.clone();
+                    let results = self.results.clone();
                     conns.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &cluster, &shutdown) {
+                        if let Err(e) = handle_conn(stream, &cluster, &results, &shutdown) {
                             crate::log_debug!("connection ended: {e}");
                         }
                     }));
@@ -64,9 +82,45 @@ impl Server {
     }
 }
 
+/// Canonical cache key for a query: dataset identity (name + version),
+/// binning, and the canonical program fingerprint. For source queries the
+/// fingerprint comes from the *transformed* tape, so renames/whitespace
+/// normalize away; this call doubles as submit-time validation (it fails on
+/// unknown datasets and on source that does not compile for the schema).
+/// The full canonical string is the key — never a digest of it — so
+/// adversarial hash collisions cannot alias two queries.
+fn cache_key(cluster: &Cluster, q: &Query) -> Result<String, String> {
+    let version = cluster
+        .catalog
+        .version(&q.dataset)
+        .ok_or_else(|| format!("no dataset '{}'", q.dataset))?;
+    let prog = match &q.source {
+        Some(src) => {
+            // Registered datasets always carry their schema.
+            let schema = cluster
+                .catalog
+                .schema(&q.dataset)
+                .ok_or_else(|| format!("no dataset '{}'", q.dataset))?;
+            let flat = queryir::compile(src, &schema)?;
+            format!("tape:{}", queryir::lower::canonical(&flat))
+        }
+        None => format!("kind:{}:{}", q.kind.artifact(), q.list),
+    };
+    Ok(format!(
+        "{}|v{}|b{}|{}|{}|{}",
+        q.dataset,
+        version,
+        q.n_bins,
+        q.lo.to_bits(),
+        q.hi.to_bits(),
+        prog
+    ))
+}
+
 fn handle_conn(
     stream: TcpStream,
     cluster: &Cluster,
+    results: &ResultCache,
     shutdown: &AtomicBool,
 ) -> Result<(), String> {
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
@@ -103,12 +157,16 @@ fn handle_conn(
                         ])
                     })
                     .collect();
+                let (rc_hits, rc_misses) = results.stats();
                 send(
                     &mut out,
                     &Json::obj(vec![
                         ("ok", Json::Bool(true)),
                         ("workers", Json::Arr(workers)),
                         ("cache_hit_rate", Json::num(cluster.total_cache_hit_rate())),
+                        ("result_cache_hits", Json::num(rc_hits as f64)),
+                        ("result_cache_misses", Json::num(rc_misses as f64)),
+                        ("result_cache_entries", Json::num(results.len() as f64)),
                         (
                             "bytes_fetched",
                             Json::num(
@@ -148,10 +206,7 @@ fn handle_conn(
             }
             Some("query") => {
                 let resp = match Query::from_json(&req) {
-                    Ok(q) => match run_query(cluster, &q, &mut out) {
-                        Ok(resp) => resp,
-                        Err(e) => err_json(&e),
-                    },
+                    Ok(q) => answer_query(cluster, results, &q, &mut out),
                     Err(e) => err_json(&e),
                 };
                 send(&mut out, &resp)?;
@@ -161,7 +216,43 @@ fn handle_conn(
     }
 }
 
-fn run_query(cluster: &Cluster, q: &Query, out: &mut TcpStream) -> Result<Json, String> {
+/// Validate → result-cache lookup → (on miss) run on the cluster and fill
+/// the cache. Returns the final response object.
+fn answer_query(
+    cluster: &Cluster,
+    results: &ResultCache,
+    q: &Query,
+    out: &mut TcpStream,
+) -> Json {
+    let t0 = std::time::Instant::now();
+    let key = match cache_key(cluster, q) {
+        Ok(k) => k,
+        Err(e) => return err_json(&e),
+    };
+    if let Some(cached) = results.get(&key) {
+        return result_json(&cached, t0.elapsed(), true);
+    }
+    match run_query(cluster, q, out) {
+        Ok(res) => {
+            results.put(key, res.clone());
+            result_json(&res, t0.elapsed(), false)
+        }
+        Err(e) => err_json(&e),
+    }
+}
+
+fn result_json(res: &CachedResult, latency: std::time::Duration, cached: bool) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("hist", res.hist.to_json()),
+        ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+        ("events", Json::num(res.events as f64)),
+        ("partitions", Json::num(res.partitions as f64)),
+        ("cached", Json::Bool(cached)),
+    ])
+}
+
+fn run_query(cluster: &Cluster, q: &Query, out: &mut TcpStream) -> Result<CachedResult, String> {
     let handle = cluster.submit(q.clone())?;
     let mut last = 0usize;
     let res = cluster.wait_with_progress(&handle, q, |done, total, _| {
@@ -175,13 +266,11 @@ fn run_query(cluster: &Cluster, q: &Query, out: &mut TcpStream) -> Result<Json, 
         }
         true
     })?;
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("hist", res.hist.to_json()),
-        ("latency_ms", Json::num(res.latency.as_secs_f64() * 1e3)),
-        ("events", Json::num(res.events as f64)),
-        ("partitions", Json::num(res.partitions as f64)),
-    ]))
+    Ok(CachedResult {
+        hist: res.hist,
+        events: res.events,
+        partitions: res.partitions,
+    })
 }
 
 fn err_json(msg: &str) -> Json {
@@ -256,27 +345,53 @@ mod tests {
     use crate::engine::{Backend, QueryKind};
     use crate::hist::H1;
 
-    #[test]
-    fn server_round_trip() {
+    fn test_cluster(backend: Backend, events: usize, seed: u64) -> Arc<Cluster> {
         let cluster = Arc::new(Cluster::start(
             ClusterConfig {
                 n_workers: 2,
                 cache_bytes_per_worker: 64 << 20,
-                policy: Policy::cache_aware(),
+                policy: Policy::AnyPull,
                 fetch_delay_per_mib: std::time::Duration::ZERO,
                 claim_ttl: std::time::Duration::from_secs(10),
                 straggler: None,
             },
-            Backend::Columnar,
+            backend,
         ));
-        cluster.catalog.register("dy", generate_drellyan(10_000, 99), 2_000);
+        cluster
+            .catalog
+            .register("dy", generate_drellyan(events, seed), 1_000);
+        cluster
+    }
+
+    /// Start a server on an OS-assigned free port and connect a client.
+    fn start_server(cluster: Arc<Cluster>) -> (Client, std::thread::JoinHandle<Result<std::net::SocketAddr, String>>) {
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let server = Server::new(cluster);
+        let addr2 = addr.clone();
+        let t = std::thread::spawn(move || server.serve(&addr2));
+        let mut client = None;
+        for _ in 0..200 {
+            match Client::connect(&addr) {
+                Ok(c) => {
+                    client = Some(c);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+            }
+        }
+        (client.expect("connect to server"), t)
+    }
+
+    #[test]
+    fn server_round_trip() {
+        let cluster = test_cluster(Backend::Columnar, 10_000, 99);
         let server = Server::new(cluster.clone());
         let flag = server.shutdown_flag();
         let t = std::thread::spawn(move || server.serve("127.0.0.1:0"));
-        // Wait for bind by polling; the serve() returns addr only at end, so
-        // use a fixed retry loop against an ephemeral port via a second
-        // server... simpler: bind a known port range.
-        // Instead: try connecting to a dedicated port.
         flag.store(true, Ordering::Relaxed);
         let _ = t.join().unwrap().unwrap();
         // Direct protocol-level test without sockets: query json round trip.
@@ -289,39 +404,8 @@ mod tests {
 
     #[test]
     fn full_tcp_query() {
-        let cluster = Arc::new(Cluster::start(
-            ClusterConfig {
-                n_workers: 2,
-                cache_bytes_per_worker: 64 << 20,
-                policy: Policy::AnyPull,
-                fetch_delay_per_mib: std::time::Duration::ZERO,
-                claim_ttl: std::time::Duration::from_secs(10),
-                straggler: None,
-            },
-            Backend::Columnar,
-        ));
-        cluster.catalog.register("dy", generate_drellyan(8_000, 98), 1_000);
-        // Pick a free port by binding and dropping.
-        let port = {
-            let l = TcpListener::bind("127.0.0.1:0").unwrap();
-            l.local_addr().unwrap().port()
-        };
-        let addr = format!("127.0.0.1:{port}");
-        let server = Server::new(cluster.clone());
-        let addr2 = addr.clone();
-        let t = std::thread::spawn(move || server.serve(&addr2));
-        // Retry-connect until the server is up.
-        let mut client = None;
-        for _ in 0..100 {
-            match Client::connect(&addr) {
-                Ok(c) => {
-                    client = Some(c);
-                    break;
-                }
-                Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
-            }
-        }
-        let mut client = client.expect("connect to server");
+        let cluster = test_cluster(Backend::Columnar, 8_000, 98);
+        let (mut client, t) = start_server(cluster);
         let q = Query::new(QueryKind::MassPairs, "dy", "muons");
         let mut progress_seen = 0;
         let resp = client.query(&q, |_, _| progress_seen += 1).unwrap();
@@ -329,6 +413,81 @@ mod tests {
         let h = H1::from_json(resp.get("hist").unwrap()).unwrap();
         assert!(h.total() > 0.0);
         assert_eq!(resp.get("partitions").and_then(|p| p.as_usize()), Some(8));
+        assert_eq!(resp.get("cached"), Some(&Json::Bool(false)));
+        client.shutdown_server().unwrap();
+        let _ = t.join().unwrap();
+    }
+
+    /// The result cache: a repeated query is served from the cache
+    /// (`cached:true`, identical histogram), a re-registered dataset bumps
+    /// the version so the cache entry is dead, and a different binning is a
+    /// different key.
+    #[test]
+    fn result_cache_hit_and_invalidation() {
+        let cluster = test_cluster(Backend::compiled(), 6_000, 97);
+        let (mut client, t) = start_server(cluster.clone());
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+
+        let cold = client.query(&q, |_, _| {}).unwrap();
+        assert_eq!(cold.get("cached"), Some(&Json::Bool(false)));
+        let h_cold = H1::from_json(cold.get("hist").unwrap()).unwrap();
+
+        let warm = client.query(&q, |_, _| {}).unwrap();
+        assert_eq!(warm.get("cached"), Some(&Json::Bool(true)));
+        let h_warm = H1::from_json(warm.get("hist").unwrap()).unwrap();
+        assert_eq!(h_warm, h_cold);
+
+        // Different binning → different canonical key → cluster run.
+        let q2 = Query::new(QueryKind::MaxPt, "dy", "muons").with_binning(32, 0.0, 64.0);
+        let other = client.query(&q2, |_, _| {}).unwrap();
+        assert_eq!(other.get("cached"), Some(&Json::Bool(false)));
+
+        // Re-registering the dataset invalidates by version bump.
+        cluster
+            .catalog
+            .register("dy", generate_drellyan(3_000, 1234), 1_000);
+        let after = client.query(&q, |_, _| {}).unwrap();
+        assert_eq!(after.get("cached"), Some(&Json::Bool(false)));
+        let h_after = H1::from_json(after.get("hist").unwrap()).unwrap();
+        assert_ne!(h_after.total(), h_cold.total());
+
+        client.shutdown_server().unwrap();
+        let _ = t.join().unwrap();
+    }
+
+    /// Source queries over TCP: executed by the compiled-tape backend, and
+    /// two textually different but equivalent sources share one cache line
+    /// (canonical tape fingerprint).
+    #[test]
+    fn source_queries_over_tcp_normalize_in_cache() {
+        let cluster = test_cluster(Backend::compiled(), 5_000, 96);
+        let (mut client, t) = start_server(cluster);
+
+        let a = "for event in dataset:\n    for m in event.muons:\n        fill(m.pt)\n";
+        let qa = Query::from_source(a, "dy");
+        let ra = client.query(&qa, |_, _| {}).unwrap();
+        assert_eq!(ra.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(ra.get("cached"), Some(&Json::Bool(false)));
+        let ha = H1::from_json(ra.get("hist").unwrap()).unwrap();
+        assert!(ha.total() > 0.0);
+
+        // Same program, different variable names and spacing.
+        let b = "for ev in dataset:\n    for mu in ev.muons:\n        fill(mu.pt)\n";
+        let qb = Query::from_source(b, "dy");
+        let rb = client.query(&qb, |_, _| {}).unwrap();
+        assert_eq!(rb.get("cached"), Some(&Json::Bool(true)), "{rb}");
+        let hb = H1::from_json(rb.get("hist").unwrap()).unwrap();
+        assert_eq!(hb, ha);
+
+        // Malformed source fails fast with a helpful error, no submit.
+        let bad = Query::from_source("for event in dataset:\n    fill(bogus)\n", "dy");
+        let rbad = client.query(&bad, |_, _| {}).unwrap();
+        assert_eq!(rbad.get("ok"), Some(&Json::Bool(false)));
+        assert!(
+            rbad.get("error").and_then(|e| e.as_str()).unwrap_or("").contains("bogus"),
+            "{rbad}"
+        );
+
         client.shutdown_server().unwrap();
         let _ = t.join().unwrap();
     }

@@ -1,0 +1,145 @@
+//! Normalized-query result cache — the paper's caching story for
+//! exploratory analysis ("query results are small and highly cacheable").
+//!
+//! Keyed by a canonical query key built from the *transformed tape
+//! fingerprint* (not the source text), the dataset name + version and the
+//! histogram binning. Two textually different sources that transform to the
+//! same flat tape hit the same entry; re-registering a dataset bumps its
+//! version, so stale results can never be served. Bounded LRU.
+//!
+//! Keys are the full canonical strings, not their hashes: the server takes
+//! arbitrary query source from untrusted clients, and a 64-bit digest key
+//! would let a crafted collision poison the cache with another query's
+//! histogram.
+
+use crate::hist::H1;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A cached final result (the merged histogram and its provenance counts).
+#[derive(Clone, Debug)]
+pub struct CachedResult {
+    pub hist: H1,
+    pub events: u64,
+    pub partitions: usize,
+}
+
+struct Inner {
+    map: HashMap<String, (CachedResult, u64)>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+pub struct ResultCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<CachedResult> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = match g.map.get_mut(key) {
+            Some((res, stamp)) => {
+                *stamp = clock;
+                Some(res.clone())
+            }
+            None => None,
+        };
+        match found {
+            Some(res) => {
+                g.hits += 1;
+                Some(res)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: String, res: CachedResult) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        g.map.insert(key, (res, clock));
+        while g.map.len() > self.capacity {
+            // Evict the least-recently-used entry.
+            let oldest = g
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    g.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(total: f64) -> CachedResult {
+        let mut h = H1::new(4, 0.0, 4.0);
+        for _ in 0..total as usize {
+            h.fill(1.0);
+        }
+        CachedResult {
+            hist: h,
+            events: total as u64,
+            partitions: 1,
+        }
+    }
+
+    #[test]
+    fn hit_miss_and_stats() {
+        let c = ResultCache::new(8);
+        assert!(c.get("k1").is_none());
+        c.put("k1".to_string(), res(3.0));
+        let r = c.get("k1").unwrap();
+        assert_eq!(r.hist.total(), 3.0);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let c = ResultCache::new(2);
+        c.put("k1".to_string(), res(1.0));
+        c.put("k2".to_string(), res(2.0));
+        let _ = c.get("k1"); // freshen k1 so k2 is the LRU entry
+        c.put("k3".to_string(), res(3.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.get("k1").is_some());
+        assert!(c.get("k2").is_none());
+        assert!(c.get("k3").is_some());
+    }
+}

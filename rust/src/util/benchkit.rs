@@ -139,7 +139,8 @@ impl Bench {
         out
     }
 
-    /// Write a JSON report to `bench_out/<suite>.json`.
+    /// Write a JSON report to `bench_out/BENCH_<suite>.json` (the `BENCH_`
+    /// prefix is what CI globs for when uploading perf artifacts).
     pub fn write_report(&self) -> std::io::Result<std::path::PathBuf> {
         use crate::util::json::Json;
         std::fs::create_dir_all("bench_out")?;
@@ -162,7 +163,7 @@ impl Bench {
             ("suite", Json::str(self.suite.clone())),
             ("samples", Json::Arr(items)),
         ]);
-        let path = std::path::PathBuf::from(format!("bench_out/{}.json", self.suite));
+        let path = std::path::PathBuf::from(format!("bench_out/BENCH_{}.json", self.suite));
         std::fs::write(&path, j.to_string())?;
         Ok(path)
     }

@@ -1,0 +1,193 @@
+//! Equivalence and caching properties of the compiled-tape backend.
+//!
+//! Core guarantee: for every Table-3 query and randomized event samples,
+//! the object interpreter, the AST-walking flat evaluator, the tape VM and
+//! the compiled closure graph produce *bit-identical* histograms, and all
+//! of them agree with the hand-written columnar loops up to the documented
+//! f32-vs-f64 bin-edge tolerance.
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{columnar_exec, Backend, CompiledTapeBackend, Query, QueryKind};
+use hepq::hist::H1;
+use hepq::queryir::{self, table3};
+use hepq::util::propkit::{check, Config};
+use std::time::Duration;
+
+/// interpreter == flat == tape == compiled (bit-exact), and all ≈ columnar.
+#[test]
+fn prop_all_execution_levels_agree() {
+    let cfg = Config { cases: 10, ..Config::default() };
+    let cases: [(&str, QueryKind); 4] = [
+        (table3::MAX_PT, QueryKind::MaxPt),
+        (table3::ETA_BEST, QueryKind::EtaBest),
+        (table3::PTSUM_PAIRS, QueryKind::PtSumPairs),
+        (table3::MASS_PAIRS, QueryKind::MassPairs),
+    ];
+    check(
+        "all-execution-levels-agree",
+        &cfg,
+        |g| (1 + g.usize_to(400), g.rng.next_u64()),
+        |&(n, seed)| {
+            let cs = generate_drellyan(n, seed);
+            for (src, kind) in cases {
+                let (lo, hi) = kind.default_binning();
+                let mut h_obj = H1::new(48, lo, hi);
+                queryir::run_object_view(src, &cs, &mut h_obj)?;
+
+                let prog = queryir::compile(src, &cs.schema)?;
+                let mut h_flat = H1::new(48, lo, hi);
+                queryir::flat::run(&prog, &cs, &mut h_flat)?;
+
+                let tp = queryir::tape::compile(&prog);
+                let mut h_tape = H1::new(48, lo, hi);
+                queryir::tape::run(&tp, &cs, &mut h_tape)?;
+
+                let cp = queryir::lower::lower(&prog)?;
+                let mut h_comp = H1::new(48, lo, hi);
+                queryir::lower::run(&cp, &cs, &mut h_comp)?;
+
+                if h_obj.bins != h_flat.bins || h_obj.total() != h_flat.total() {
+                    return Err(format!("{kind:?}: interp != flat"));
+                }
+                if h_obj.bins != h_tape.bins {
+                    return Err(format!("{kind:?}: interp != tape"));
+                }
+                if h_obj.bins != h_comp.bins || h_obj.total() != h_comp.total() {
+                    return Err(format!("{kind:?}: interp != compiled"));
+                }
+
+                // Hand-written loops compute in mixed f32/f64; totals are
+                // exact, bins may migrate by an ulp at bin edges.
+                let mut h_hand = H1::new(48, lo, hi);
+                columnar_exec::run(kind, &cs, "muons", &mut h_hand)?;
+                if h_hand.total() != h_comp.total() {
+                    return Err(format!(
+                        "{kind:?}: columnar total {} != compiled total {}",
+                        h_hand.total(),
+                        h_comp.total()
+                    ));
+                }
+                let diff: f64 = h_hand
+                    .bins
+                    .iter()
+                    .zip(&h_comp.bins)
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                if diff > 4.0 {
+                    return Err(format!("{kind:?}: columnar vs compiled bins differ by {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The compiled backend through the whole engine dispatch (`Backend`),
+/// including kind→source rendering, equals the columnar backend.
+#[test]
+fn prop_backend_compiled_equals_columnar() {
+    let cfg = Config { cases: 8, ..Config::default() };
+    check(
+        "backend-compiled-equals-columnar",
+        &cfg,
+        |g| (1 + g.usize_to(600), g.rng.next_u64()),
+        |&(n, seed)| {
+            let cs = generate_drellyan(n, seed);
+            let be = Backend::compiled();
+            for kind in QueryKind::ALL {
+                let q = Query::new(kind, "dy", "muons");
+                let mut h_col = H1::new(q.n_bins, q.lo, q.hi);
+                Backend::Columnar.run(&q, &cs, &mut h_col)?;
+                let mut h_comp = H1::new(q.n_bins, q.lo, q.hi);
+                be.run(&q, &cs, &mut h_comp)?;
+                if h_col.total() != h_comp.total() {
+                    return Err(format!(
+                        "{kind:?}: totals {} vs {}",
+                        h_col.total(),
+                        h_comp.total()
+                    ));
+                }
+                let diff: f64 = h_col
+                    .bins
+                    .iter()
+                    .zip(&h_comp.bins)
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                if diff > 4.0 {
+                    return Err(format!("{kind:?}: bins differ by {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A whole cluster running `Backend::CompiledTape` matches a local columnar
+/// run, for kind queries and for free-form source queries.
+#[test]
+fn cluster_on_compiled_tape_matches_local() {
+    let cs = generate_drellyan(12_000, 81);
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_workers: 3,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::cache_aware(),
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        },
+        Backend::compiled(),
+    );
+    cluster.catalog.register("dy", cs.clone(), 1_500);
+
+    // Kind query.
+    let q = Query::new(QueryKind::MassPairs, "dy", "muons");
+    let res = cluster.run(&q).unwrap();
+    let mut local = H1::new(q.n_bins, q.lo, q.hi);
+    columnar_exec::run(q.kind, &cs, "muons", &mut local).unwrap();
+    assert_eq!(res.hist.total(), local.total());
+    assert_eq!(res.partitions, 8);
+
+    // Source query distributed across partitions and workers.
+    let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 20 and muon.eta < 1.0 and muon.eta > -1.0:
+            fill(muon.pt)
+";
+    let sq = Query::from_source(src, "dy").with_binning(64, 0.0, 128.0);
+    let sres = cluster.run(&sq).unwrap();
+    let mut slocal = H1::new(64, 0.0, 128.0);
+    queryir::run_transformed(src, &cs, &mut slocal).unwrap();
+    assert_eq!(sres.hist.bins, slocal.bins);
+    assert_eq!(sres.hist.total(), slocal.total());
+    assert!(sres.hist.total() > 0.0);
+    cluster.shutdown();
+}
+
+/// The shared compile cache: one cluster-wide backend compiles each
+/// distinct program once, no matter how many workers/partitions/queries.
+#[test]
+fn compile_cache_is_shared_across_workers() {
+    let be = CompiledTapeBackend::new();
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_workers: 4,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        },
+        Backend::CompiledTape(be.clone()),
+    );
+    cluster.catalog.register("dy", generate_drellyan(8_000, 82), 500);
+    let q = Query::new(QueryKind::PtSumPairs, "dy", "muons");
+    for _ in 0..3 {
+        cluster.run(&q).unwrap();
+    }
+    // 16 partitions x 3 runs x 4 workers, still exactly one program.
+    assert_eq!(be.compiled_count(), 1);
+    cluster.shutdown();
+}
