@@ -146,6 +146,58 @@ fn main() {
         black_box(h.total());
     });
 
+    // --- chunked-kernel + morsel-parallel rungs --------------------------
+    // Rungs 12/13: the Table-1 payload (flat jet-pt fill) through the
+    // compiled tape, closure-graph fused loop vs the chunked SIMD-friendly
+    // kernel, both single-threaded on in-memory arrays.
+    let jet_prog = queryir::compile(table3::JET_PT, &cs.schema).unwrap();
+    let jet_cp = queryir::lower::lower(&jet_prog).unwrap();
+    assert!(jet_cp.has_chunked_kernel(), "jet-pt fill should lower chunked");
+    b.run("12 jet_pt compiled fused closure loop", n, || {
+        let mut h = H1::new(64, q.lo, q.hi);
+        queryir::lower::run_scalar(&jet_cp, &cs, &mut h).unwrap();
+        black_box(h.total());
+    });
+    b.run("13 jet_pt compiled chunked kernel", n, || {
+        let mut h = H1::new(64, q.lo, q.hi);
+        queryir::lower::run(&jet_cp, &cs, &mut h).unwrap();
+        black_box(h.total());
+    });
+
+    // Rungs 14/15: morsel-driven parallel execution of the compiled tape,
+    // threads=1 (sequential) vs threads=N over 4096-event morsels — the
+    // intra-worker scaling number the ROADMAP asks for. ≥ 50k events so
+    // there is enough work to amortize the thread pool.
+    let par_threads: usize = std::env::var("HEPQ_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4));
+    let par_events = n_events.max(50_000);
+    eprintln!("table1: parallel ladder on {par_events} DY events, {par_threads} threads...");
+    let dy_par = generate_drellyan(par_events, 11);
+    let npar = par_events as f64;
+    let par_prog = queryir::compile(src, &dy_par.schema).unwrap();
+    let par_cp = queryir::lower::lower(&par_prog).unwrap();
+    let morsel = queryir::lower::ParallelCfg {
+        threads: 1,
+        morsel_events: 4096,
+    };
+    b.run("14 mass_pairs compiled tape threads=1", npar, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run_parallel(&par_cp, &dy_par, &mut h, morsel).unwrap();
+        black_box(h.total());
+    });
+    let morsel_n = queryir::lower::ParallelCfg {
+        threads: par_threads,
+        morsel_events: 4096,
+    };
+    let rung15 = format!("15 mass_pairs compiled tape threads={par_threads}");
+    b.run(&rung15, npar, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run_parallel(&par_cp, &dy_par, &mut h, morsel_n).unwrap();
+        black_box(h.total());
+    });
+
     b.finish();
 
     let interp_rate = b.get("7 mass_pairs object interpreter").unwrap().rate();
@@ -155,6 +207,22 @@ fn main() {
         "\ncompilation check: compiled-tape / object-interpreter = {speedup:.1}x on mass_pairs \
          (target >= 5x){}",
         if speedup < 5.0 { "  ** BELOW TARGET **" } else { "" }
+    );
+
+    let chunk_speedup = b.get("13 jet_pt compiled chunked kernel").unwrap().rate()
+        / b.get("12 jet_pt compiled fused closure loop").unwrap().rate();
+    eprintln!(
+        "chunked check: chunked / fused closure loop = {chunk_speedup:.2}x on jet_pt \
+         (target >= 1.0x){}",
+        if chunk_speedup < 1.0 { "  ** BELOW TARGET **" } else { "" }
+    );
+
+    let par_speedup = b.get(&rung15).unwrap().rate()
+        / b.get("14 mass_pairs compiled tape threads=1").unwrap().rate();
+    eprintln!(
+        "parallel check: threads={par_threads} / threads=1 = {par_speedup:.2}x on mass_pairs \
+         over {par_events} events (target >= 2.5x at 4 cores){}",
+        if par_threads >= 4 && par_speedup < 2.5 { "  ** BELOW TARGET **" } else { "" }
     );
 
     // Shape assertions (soft: print, don't panic, but flag).

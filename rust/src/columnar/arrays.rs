@@ -160,6 +160,28 @@ pub struct ColumnSet {
     pub leaves: BTreeMap<String, Array>,
 }
 
+/// A zero-copy event window `[ev_lo, ev_hi)` over a `ColumnSet` — the
+/// morsel primitive of the parallel executor.
+///
+/// Unlike `partition`, nothing is sliced or rebased: content arrays and
+/// offsets stay global, and consumers index them with absolute event/item
+/// indices bounded by the window (`offsets[ev_lo] .. offsets[ev_hi]` for a
+/// list's items). Constructing one is a couple of machine words, so a
+/// partition can be cut into thousands of cache-sized morsels for free.
+#[derive(Clone, Copy, Debug)]
+pub struct ColumnRange<'a> {
+    pub cs: &'a ColumnSet,
+    pub ev_lo: usize,
+    pub ev_hi: usize,
+}
+
+impl<'a> ColumnRange<'a> {
+    /// Events in the window.
+    pub fn n_events(&self) -> usize {
+        self.ev_hi - self.ev_lo
+    }
+}
+
 impl ColumnSet {
     pub fn empty(schema: Ty) -> ColumnSet {
         let layout = schema.layout();
@@ -266,6 +288,20 @@ impl ColumnSet {
             }
         }
         best.map(|s| s.to_string())
+    }
+
+    /// Zero-copy view of the event window `[ev_lo, ev_hi)`.
+    pub fn range(&self, ev_lo: usize, ev_hi: usize) -> ColumnRange<'_> {
+        assert!(
+            ev_lo <= ev_hi && ev_hi <= self.n_events,
+            "bad event range [{ev_lo}, {ev_hi}) of {}",
+            self.n_events
+        );
+        ColumnRange {
+            cs: self,
+            ev_lo,
+            ev_hi,
+        }
     }
 
     /// Split into event-range slices of at most `events_per_part` events.
@@ -452,6 +488,27 @@ mod tests {
         assert!(slim.leaf("met").is_none());
         assert_eq!(slim.offsets_of("muons").unwrap(), cs.offsets_of("muons").unwrap());
         assert!(slim.byte_size() < cs.byte_size());
+    }
+
+    #[test]
+    fn range_views_are_windows_not_copies() {
+        let cs = tiny();
+        let v = cs.range(1, 3);
+        assert_eq!(v.n_events(), 2);
+        // Absolute indexing: the view shares the parent's arrays verbatim.
+        assert!(std::ptr::eq(v.cs, &cs));
+        assert_eq!(v.cs.offsets_of("muons").unwrap()[v.ev_lo], 2);
+        assert_eq!(v.cs.offsets_of("muons").unwrap()[v.ev_hi], 3);
+        // Adjacent windows tile the full set.
+        let full = cs.range(0, cs.n_events);
+        assert_eq!(full.n_events(), cs.n_events);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event range")]
+    fn range_rejects_out_of_bounds() {
+        let cs = tiny();
+        let _ = cs.range(0, 4);
     }
 
     #[test]

@@ -146,7 +146,13 @@ fn read_value(
 }
 
 /// Read the value of `ty` at logical index `idx` within its container level.
-fn read_at(ty: &Ty, prefix: &str, list_depth: usize, cs: &ColumnSet, idx: i64) -> Result<Value, String> {
+fn read_at(
+    ty: &Ty,
+    prefix: &str,
+    list_depth: usize,
+    cs: &ColumnSet,
+    idx: i64,
+) -> Result<Value, String> {
     match ty {
         Ty::Prim(_) => {
             let arr = cs

@@ -9,7 +9,7 @@
 //! damage.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One unit of work: run one query over one partition of one dataset.
@@ -51,6 +51,10 @@ struct Inner {
 /// Zookeeper quorum, minus the network).
 pub struct TaskBoard {
     inner: Mutex<Inner>,
+    /// Signalled on `advertise`, so idle workers block here instead of
+    /// spin-polling `claim` (they previously burned a core sleeping 200µs
+    /// between scans — poison for intra-worker morsel parallelism).
+    work: Condvar,
     claim_ttl: Duration,
 }
 
@@ -65,11 +69,12 @@ impl TaskBoard {
     pub fn new(claim_ttl: Duration) -> TaskBoard {
         TaskBoard {
             inner: Mutex::new(Inner::default()),
+            work: Condvar::new(),
             claim_ttl,
         }
     }
 
-    /// Advertise a batch of subtasks.
+    /// Advertise a batch of subtasks and wake every waiting worker.
     pub fn advertise(&self, tasks: Vec<Subtask>) {
         let mut g = self.inner.lock().unwrap();
         for t in tasks {
@@ -82,6 +87,22 @@ impl TaskBoard {
                 },
             );
         }
+        drop(g);
+        self.work.notify_all();
+    }
+
+    /// Block until `advertise` signals new work or `timeout` elapses.
+    /// Spurious wakeups are allowed — callers re-run `claim` in a loop.
+    /// The timeout also bounds how long expired-claim reopening and
+    /// second-round fallbacks wait without a notification.
+    pub fn wait_for_work(&self, timeout: Duration) {
+        let g = self.inner.lock().unwrap();
+        let _unused = self.work.wait_timeout(g, timeout).unwrap();
+    }
+
+    /// Wake all waiting workers without adding work (shutdown paths).
+    pub fn wake_all(&self) {
+        self.work.notify_all();
     }
 
     /// Claim the first open subtask accepted by `pref`. Expired claims are
@@ -244,6 +265,47 @@ mod tests {
         let t = b.claim(0, |_| true).unwrap();
         assert_eq!(t.id.query_id, 2);
         assert!(b.claim(0, |_| true).is_none());
+    }
+
+    #[test]
+    fn wait_for_work_wakes_on_advertise() {
+        use std::sync::Arc;
+        let b = Arc::new(TaskBoard::new(Duration::from_secs(60)));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.advertise(vec![task(1, 0, "dy")]);
+        });
+        // The generous timeout would dominate the elapsed time if the
+        // advertise notification did not cut the wait short.
+        let t0 = Instant::now();
+        let claimed = loop {
+            if let Some(task) = b.claim(0, |_| true) {
+                break task;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "never woke up");
+            b.wait_for_work(Duration::from_secs(10));
+        };
+        assert_eq!(claimed.id.partition, 0);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wake_all_releases_waiters() {
+        use std::sync::Arc;
+        let b = Arc::new(TaskBoard::new(Duration::from_secs(60)));
+        let b2 = b.clone();
+        let t0 = Instant::now();
+        let waiter = std::thread::spawn(move || b2.wait_for_work(Duration::from_secs(10)));
+        // Keep signalling until the waiter returns, so the test cannot race
+        // the moment it enters the wait.
+        while !waiter.is_finished() && t0.elapsed() < Duration::from_secs(5) {
+            b.wake_all();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        waiter.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 
     #[test]

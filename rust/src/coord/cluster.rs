@@ -151,6 +151,11 @@ struct WorkerCtx {
     handicap: Duration,
 }
 
+/// Upper bound on one idle condvar wait: how quickly a worker re-scans the
+/// board for expired claims, and the worst-case shutdown latency if a
+/// wakeup is missed.
+const IDLE_TICK: Duration = Duration::from_millis(20);
+
 fn worker_loop(ctx: WorkerCtx) {
     let mut cache = PartitionCache::new(ctx.cache_bytes);
     let mut first_miss: Option<Instant> = None;
@@ -183,7 +188,24 @@ fn worker_loop(ctx: WorkerCtx) {
             }
         };
         let Some(task) = task else {
-            std::thread::sleep(Duration::from_micros(200));
+            // Idle: block on the board's condvar instead of burning a core
+            // polling — crucial now that busy workers may be running
+            // morsel-parallel subtasks on every other core. The timeout is
+            // the time until round-2 eligibility when that is pending,
+            // otherwise a coarse tick that bounds claim-TTL reopening and
+            // shutdown latency (both also get explicit wakeups).
+            let wait = match first_miss {
+                Some(since) => {
+                    let remaining = ctx.policy.second_round_delay().saturating_sub(since.elapsed());
+                    if remaining.is_zero() {
+                        IDLE_TICK
+                    } else {
+                        remaining.min(IDLE_TICK)
+                    }
+                }
+                None => IDLE_TICK,
+            };
+            ctx.board.wait_for_work(wait.max(Duration::from_micros(100)));
             continue;
         };
         if let Err(e) = run_subtask(&ctx, &task, &mut cache) {
@@ -443,6 +465,7 @@ impl Cluster {
 
     pub fn shutdown(mut self) -> Vec<WorkerStats> {
         self.shutdown.store(true, Ordering::Relaxed);
+        self.board.wake_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -456,6 +479,7 @@ impl Cluster {
 impl Drop for Cluster {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        self.board.wake_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -494,6 +518,32 @@ mod tests {
         assert_eq!(res.hist.bins, local.bins);
         assert_eq!(res.hist.total(), local.total());
         assert_eq!(res.partitions, 10);
+        assert_eq!(res.events, 20_000);
+        c.shutdown();
+    }
+
+    /// Workers running morsel-parallel compiled-tape subtasks (threads > 1
+    /// inside each worker) still produce bin-exact distributed results.
+    #[test]
+    fn parallel_compiled_workers_match_local() {
+        let cfg = ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::from_millis(1),
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        };
+        let c = Cluster::start(cfg, Backend::compiled_parallel(2));
+        // 10k-event partitions beat the default morsel size, so each
+        // subtask really fans out across the worker's morsel threads.
+        c.catalog.register("dy", generate_drellyan(20_000, 56), 10_000);
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        let res = c.run(&q).unwrap();
+        let cs = generate_drellyan(20_000, 56);
+        let mut local = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::compiled().run(&q, &cs, &mut local).unwrap();
+        assert_eq!(res.hist.bins, local.bins);
         assert_eq!(res.events, 20_000);
         c.shutdown();
     }

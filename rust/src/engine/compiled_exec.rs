@@ -78,14 +78,34 @@ pub fn source_for(kind: QueryKind, list: &str) -> String {
 /// Full strings as keys (not digests): query source arrives from untrusted
 /// clients, and a hash-only key would let collisions execute the wrong
 /// program.
+///
+/// `parallel` configures intra-partition morsel execution: with
+/// `threads > 1` (or 0 = all cores) every partition run is split into
+/// cache-sized morsels spread over a scoped thread pool
+/// (`lower::run_parallel`). The default stays sequential because cluster
+/// workers already parallelize across partitions; single-worker and
+/// single-partition deployments are the ones that want this.
 #[derive(Clone, Default)]
 pub struct CompiledTapeBackend {
     cache: Arc<RwLock<HashMap<String, Arc<lower::CompiledProgram>>>>,
+    parallel: lower::ParallelCfg,
 }
 
 impl CompiledTapeBackend {
     pub fn new() -> CompiledTapeBackend {
         CompiledTapeBackend::default()
+    }
+
+    /// Set the intra-partition parallelism for every run through this
+    /// backend (clones share the compile cache but keep their own config).
+    pub fn with_parallelism(mut self, parallel: lower::ParallelCfg) -> CompiledTapeBackend {
+        self.parallel = parallel;
+        self
+    }
+
+    /// The configured intra-partition parallelism.
+    pub fn parallelism(&self) -> lower::ParallelCfg {
+        self.parallel
     }
 
     /// Run a query (kind- or source-based) over one partition.
@@ -99,7 +119,7 @@ impl CompiledTapeBackend {
     /// Run query-language source over one partition, compiling on first use.
     pub fn run_source(&self, src: &str, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
         let prog = self.program_for(src, cs)?;
-        lower::run(&prog, cs, hist)
+        lower::run_parallel(&prog, cs, hist, self.parallel)
     }
 
     /// Number of distinct programs compiled so far (observability/tests).
@@ -130,7 +150,12 @@ impl CompiledTapeBackend {
 
 impl std::fmt::Debug for CompiledTapeBackend {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "CompiledTapeBackend({} programs)", self.compiled_count())
+        write!(
+            f,
+            "CompiledTapeBackend({} programs, {} threads)",
+            self.compiled_count(),
+            self.parallel.resolved_threads()
+        )
     }
 }
 
@@ -179,6 +204,25 @@ mod tests {
         let mut h_comp = H1::new(q.n_bins, q.lo, q.hi);
         be.run(&q, &cs, &mut h_comp).unwrap();
         assert_close(&h_comp, &h_hand, "jets max_pt");
+    }
+
+    #[test]
+    fn parallel_backend_matches_sequential_backend() {
+        let cs = generate_drellyan(6_000, 44);
+        let seq = CompiledTapeBackend::new();
+        let par = CompiledTapeBackend::new().with_parallelism(lower::ParallelCfg {
+            threads: 4,
+            morsel_events: 512,
+        });
+        for kind in QueryKind::ALL {
+            let q = Query::new(kind, "dy", "muons");
+            let mut h_seq = H1::new(q.n_bins, q.lo, q.hi);
+            seq.run(&q, &cs, &mut h_seq).unwrap();
+            let mut h_par = H1::new(q.n_bins, q.lo, q.hi);
+            par.run(&q, &cs, &mut h_par).unwrap();
+            assert_eq!(h_seq.bins, h_par.bins, "{}", kind.artifact());
+            assert_eq!(h_seq.count, h_par.count, "{}", kind.artifact());
+        }
     }
 
     #[test]

@@ -84,6 +84,18 @@ impl Backend {
         Backend::CompiledTape(CompiledTapeBackend::new())
     }
 
+    /// The compiled-tape backend with morsel-driven intra-partition
+    /// parallelism: every partition run uses up to `threads` cores
+    /// (0 = all available). See `queryir::lower::run_parallel`.
+    pub fn compiled_parallel(threads: usize) -> Backend {
+        Backend::CompiledTape(CompiledTapeBackend::new().with_parallelism(
+            crate::queryir::lower::ParallelCfg {
+                threads,
+                morsel_events: 0,
+            },
+        ))
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Columnar => "columnar",
@@ -184,6 +196,20 @@ mod tests {
             Backend::compiled().run(&q, &cs, &mut h).unwrap();
             assert_eq!(h.total(), base.total(), "{kind:?} compiled-tape");
         }
+    }
+
+    #[test]
+    fn parallel_compiled_backend_agrees() {
+        // 20k events = several default-size morsels, so the parallel path
+        // actually engages.
+        let cs = generate_drellyan(20_000, 7);
+        let q = Query::new(QueryKind::MassPairs, "dy", "muons");
+        let mut seq = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::compiled().run(&q, &cs, &mut seq).unwrap();
+        let mut par = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::compiled_parallel(4).run(&q, &cs, &mut par).unwrap();
+        assert_eq!(seq.bins, par.bins);
+        assert_eq!(seq.count, par.count);
     }
 
     #[test]

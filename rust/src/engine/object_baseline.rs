@@ -315,8 +315,10 @@ fn fill_from_generic(kind: QueryKind, items: &[Value], hist: &mut H1) {
         QueryKind::MassPairs => {
             for i in 0..items.len() {
                 for j in i + 1..items.len() {
-                    let (p1, e1, f1) = (attr(&items[i], "pt"), attr(&items[i], "eta"), attr(&items[i], "phi"));
-                    let (p2, e2, f2) = (attr(&items[j], "pt"), attr(&items[j], "eta"), attr(&items[j], "phi"));
+                    let a = &items[i];
+                    let b = &items[j];
+                    let (p1, e1, f1) = (attr(a, "pt"), attr(a, "eta"), attr(a, "phi"));
+                    let (p2, e2, f2) = (attr(b, "pt"), attr(b, "eta"), attr(b, "phi"));
                     let m2 = 2.0 * p1 * p2 * ((e1 - e2).cosh() - (f1 - f2).cos());
                     hist.fill(m2.max(0.0).sqrt());
                 }

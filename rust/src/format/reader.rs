@@ -278,7 +278,8 @@ mod tests {
     fn multi_basket_branches() {
         let cs = sample_columns(1000, 6);
         let path = tmpfile("baskets.froot");
-        write_dataset(&path, &cs, WriteOptions { codec: Codec::Zstd(1), basket_items: 64 }).unwrap();
+        let opts = WriteOptions { codec: Codec::Zstd(1), basket_items: 64 };
+        write_dataset(&path, &cs, opts).unwrap();
         let r = DatasetReader::open(&path).unwrap();
         let info = r.header.branch("muons.pt").unwrap();
         assert!(info.baskets.len() > 5, "expected many baskets, got {}", info.baskets.len());

@@ -141,6 +141,19 @@ impl H1 {
         Ok(())
     }
 
+    /// Merge many partials in iteration order — the reduction the morsel
+    /// scheduler applies to per-thread histograms. Merging in a fixed
+    /// (morsel-index) order keeps results reproducible run to run.
+    pub fn merge_many<'a, I>(&mut self, parts: I) -> Result<(), String>
+    where
+        I: IntoIterator<Item = &'a H1>,
+    {
+        for p in parts {
+            self.merge(p)?;
+        }
+        Ok(())
+    }
+
     /// Add raw bin contents produced by a PJRT kernel (in-range bins only;
     /// the kernels clamp out-of-range values into under/overflow slots).
     pub fn add_bins(&mut self, bins: &[f32], underflow: f64, overflow: f64) -> Result<(), String> {
@@ -259,6 +272,36 @@ mod tests {
         assert!(a.merge(&b).is_err());
         let c = H1::new(5, 0.0, 6.0);
         assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn merge_many_accumulates_under_and_overflow() {
+        let mut total = H1::new(4, 0.0, 4.0);
+        let mut parts = Vec::new();
+        for i in 0..3 {
+            let mut h = H1::new(4, 0.0, 4.0);
+            h.fill(-1.0); // underflow
+            h.fill(9.0); // overflow
+            h.fill(i as f64 + 0.5); // bins 0, 1, 2
+            parts.push(h);
+        }
+        total.merge_many(&parts).unwrap();
+        assert_eq!(total.bins, vec![1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(total.underflow, 3.0);
+        assert_eq!(total.overflow, 3.0);
+        assert_eq!(total.total(), 9.0);
+        // Merging partials is equivalent to filling sequentially.
+        let mut seq = H1::new(4, 0.0, 4.0);
+        for i in 0..3 {
+            seq.fill(-1.0);
+            seq.fill(9.0);
+            seq.fill(i as f64 + 0.5);
+        }
+        assert_eq!(total.bins, seq.bins);
+        assert_eq!(total.count, seq.count);
+        // A mismatched partial aborts with an error.
+        let bad = H1::new(5, 0.0, 4.0);
+        assert!(total.merge_many(std::iter::once(&bad)).is_err());
     }
 
     #[test]

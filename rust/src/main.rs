@@ -35,8 +35,14 @@ fn app() -> App {
                 .opt("bins", "64", "histogram bins")
                 .opt("lo", "0", "histogram lower edge")
                 .opt("hi", "128", "histogram upper edge")
-                .opt("backend", "compiled", "compiled|columnar|pjrt|heap-objects|stack-objects|framework-sim")
+                .opt(
+                    "backend",
+                    "compiled",
+                    "compiled|columnar|pjrt|heap-objects|stack-objects|framework-sim",
+                )
                 .opt("artifacts", "artifacts", "AOT artifact dir (pjrt backend)")
+                .opt("threads", "env", "morsel threads per run: N, 0=all cores, env=$HEPQ_THREADS")
+                .opt("morsel-events", "0", "events per morsel (0 = default 8192)")
                 .pos("file", "input .froot path"),
             CommandSpec::new("serve", "start the distributed query server")
                 .opt("addr", "127.0.0.1:8765", "listen address")
@@ -45,6 +51,12 @@ fn app() -> App {
                 .opt("cache-mb", "512", "per-worker cache budget (MiB)")
                 .opt("backend", "compiled", "compiled|columnar|pjrt")
                 .opt("artifacts", "artifacts", "AOT artifact dir")
+                .opt(
+                    "threads",
+                    "env",
+                    "morsel threads per worker: N, 0=all cores, env=$HEPQ_THREADS",
+                )
+                .opt("morsel-events", "0", "events per morsel (0 = default 8192)")
                 .opt("partition-events", "16384", "events per partition")
                 .req("data", "comma-separated name=path.froot dataset list"),
             CommandSpec::new("client", "send a query to a running server")
@@ -130,9 +142,33 @@ fn cmd_inspect(m: &Matches) -> Result<(), String> {
     Ok(())
 }
 
+/// Intra-partition parallelism from `--threads` / `--morsel-events`.
+/// `--threads env` (the default) reads `HEPQ_THREADS`, falling back to 1;
+/// `--threads 0` (or `HEPQ_THREADS=0`) means all available cores.
+fn parallel_cfg(m: &Matches) -> Result<hepq::queryir::lower::ParallelCfg, String> {
+    let threads = match m.str("threads") {
+        "env" => match std::env::var("HEPQ_THREADS") {
+            Ok(v) => v
+                .parse()
+                .map_err(|_| format!("bad HEPQ_THREADS '{v}' (want a thread count)"))?,
+            Err(_) => 1,
+        },
+        s => s
+            .parse()
+            .map_err(|_| format!("bad --threads '{s}' (want N, 0, or env)"))?,
+    };
+    let morsel_events = m.usize("morsel-events").map_err(|e| e.to_string())?;
+    Ok(hepq::queryir::lower::ParallelCfg {
+        threads,
+        morsel_events,
+    })
+}
+
 fn parse_backend(m: &Matches) -> Result<Backend, String> {
     Ok(match m.str("backend") {
-        "compiled" | "compiled-tape" => Backend::compiled(),
+        "compiled" | "compiled-tape" => Backend::CompiledTape(
+            hepq::engine::CompiledTapeBackend::new().with_parallelism(parallel_cfg(m)?),
+        ),
         "columnar" => Backend::Columnar,
         "heap-objects" => Backend::HeapObjects,
         "stack-objects" => Backend::StackObjects,
@@ -224,6 +260,7 @@ fn cmd_serve(m: &Matches) -> Result<(), String> {
         other => return Err(format!("unknown policy '{other}'")),
     };
     let backend = parse_backend(m)?;
+    println!("backend: {backend:?}");
     let cluster = Arc::new(Cluster::start(
         ClusterConfig {
             n_workers: m.usize("workers").map_err(|e| e.to_string())?,

@@ -31,7 +31,12 @@ pub fn run_unfused(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1) -> Result<
     run_inner(prog, cs, hist, false)
 }
 
-fn run_inner(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1, allow_fused: bool) -> Result<(), String> {
+fn run_inner(
+    prog: &FlatProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    allow_fused: bool,
+) -> Result<(), String> {
     let mut item_cols = Vec::with_capacity(prog.item_cols.len());
     for path in &prog.item_cols {
         item_cols.push(

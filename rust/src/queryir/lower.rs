@@ -14,7 +14,20 @@
 //!   * builtin calls resolve to `fn(f64) -> f64` pointers at lower time, so
 //!     `sqrt`/`cosh`/`cos` in the pair loop are direct math calls;
 //!   * the fused single-list special case runs as one flat loop over the
-//!     content arrays, exactly the shape of `engine::columnar_exec`.
+//!     content arrays, exactly the shape of `engine::columnar_exec`;
+//!   * Fill-only fused bodies additionally lower to a **chunked batch
+//!     kernel** (`BExpr`): events are processed in fixed-size batches of
+//!     `CHUNK` items through flat `f64` buffers with branch-free bin
+//!     accumulation into a scratch histogram, so rustc/LLVM can
+//!     autovectorize the arithmetic — the paper's "minimal for loop" rung
+//!     reached from compiled query source.
+//!
+//! Execution is **range-aware**: `run_range` evaluates any event window of
+//! a partition through a zero-copy `ColumnRange` view, which is what the
+//! morsel-driven scheduler (`run_parallel`) uses to spread one partition
+//! across every core: cache-sized morsels are pulled from a shared atomic
+//! counter by a scoped thread pool and the per-morsel histograms are merged
+//! in morsel order, so results are deterministic for a fixed morsel size.
 //!
 //! The execution state is a slot vector plus borrowed column slices: no
 //! allocation happens inside the event loop. This is the in-repo analogue
@@ -27,11 +40,29 @@
 //! on: two textually different sources that transform to the same tape hit
 //! the same cache line.
 
-use super::ast::BinOp;
+use super::ast::{BinOp, CmpOp};
 use super::transform::{CExpr, CStmt, FlatProgram};
-use crate::columnar::arrays::ColumnSet;
+use crate::columnar::arrays::{ColumnRange, ColumnSet};
 use crate::hist::H1;
 use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Batch width of the chunked kernel. 1024 f64 lanes = 8 KiB per buffer:
+/// big enough to amortize loop overhead and keep LLVM's vectorizer happy,
+/// small enough that expr + weight + temporaries stay L1/L2-resident.
+pub const CHUNK: usize = 1024;
+
+/// Deepest batch expression the chunked kernel will take. `beval` keeps one
+/// `CHUNK`-sized stack buffer per binary node on the recursion path, so this
+/// bounds kernel stack use (~8 KiB × depth); deeper (pathological) queries
+/// fall back to the closure-graph loop.
+const MAX_BATCH_DEPTH: usize = 24;
+
+/// Default morsel size for `run_parallel`, in events. Physics partitions
+/// run a few hundred bytes per event across the touched branches, so 8k
+/// events keeps a morsel's working set around the L2 cache while leaving
+/// plenty of morsels for work stealing.
+pub const DEFAULT_MORSEL_EVENTS: usize = 8192;
 
 /// Execution context: column views resolved once per partition, plus the
 /// mutable slot file. Expression closures only read (`&Ctx`); statement
@@ -42,6 +73,10 @@ pub struct Ctx<'a> {
     offsets: Vec<&'a [i64]>,
     slots: Vec<f64>,
     event: usize,
+    /// One past the last event of the window this context executes; the
+    /// `__list_total` builtin reads offsets at this index so fused loops
+    /// stay correct on sub-partition (morsel) views.
+    ev_hi: usize,
     /// Sticky out-of-bounds flag: loads report OOB here (returning 0.0)
     /// instead of threading `Result` through every closure call.
     oob: Cell<bool>,
@@ -49,6 +84,19 @@ pub struct Ctx<'a> {
 
 type ExprFn = Box<dyn Fn(&Ctx) -> f64 + Send + Sync>;
 type StmtFn = Box<dyn Fn(&mut Ctx, &mut H1) + Send + Sync>;
+
+/// The fused single-list loop, decomposed so it can run over any item
+/// range: `for k in offsets[list][ev_lo] .. offsets[list][ev_hi]`.
+struct FusedLoop {
+    /// Which list's offsets bound the flat loop.
+    list: usize,
+    /// Slot holding the current global item index.
+    slot: usize,
+    /// Scalar fallback: the loop body as compiled closures.
+    body: Vec<StmtFn>,
+    /// Chunked batch kernel, when the body is Fill-only and batchable.
+    chunked: Option<ChunkedFill>,
+}
 
 /// A lowered program: closure graphs for the statement tree, ready to bind
 /// to any partition with a matching schema.
@@ -58,9 +106,68 @@ pub struct CompiledProgram {
     pub lists: Vec<String>,
     pub n_slots: usize,
     body: Vec<StmtFn>,
-    fused: Option<Vec<StmtFn>>,
+    fused: Option<FusedLoop>,
     /// Canonical hash of the transformed program this was lowered from.
     pub fingerprint: u64,
+}
+
+impl CompiledProgram {
+    /// Does this program run as one fused flat loop over a single list?
+    pub fn is_fused(&self) -> bool {
+        self.fused.is_some()
+    }
+
+    /// Does the fused loop lower to the chunked SIMD-friendly kernel?
+    pub fn has_chunked_kernel(&self) -> bool {
+        self.fused.as_ref().is_some_and(|f| f.chunked.is_some())
+    }
+}
+
+/// Intra-partition parallelism: how many morsel threads one `run_parallel`
+/// call may use, and how many events each morsel spans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelCfg {
+    /// Worker threads for one partition run. 1 = sequential (the default:
+    /// cluster workers already parallelize across partitions); 0 = use all
+    /// available cores.
+    pub threads: usize,
+    /// Events per morsel; 0 = `DEFAULT_MORSEL_EVENTS`.
+    pub morsel_events: usize,
+}
+
+impl Default for ParallelCfg {
+    fn default() -> ParallelCfg {
+        ParallelCfg {
+            threads: 1,
+            morsel_events: 0,
+        }
+    }
+}
+
+impl ParallelCfg {
+    /// All cores, default morsel size.
+    pub fn auto() -> ParallelCfg {
+        ParallelCfg {
+            threads: 0,
+            morsel_events: 0,
+        }
+    }
+
+    /// The thread count after resolving 0 = all available cores.
+    pub fn resolved_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+    }
+
+    /// The morsel size after resolving 0 = default.
+    pub fn resolved_morsel_events(&self) -> usize {
+        match self.morsel_events {
+            0 => DEFAULT_MORSEL_EVENTS,
+            n => n,
+        }
+    }
 }
 
 /// FNV-1a, used for program fingerprints and cache keys.
@@ -100,15 +207,17 @@ pub fn lower(prog: &FlatProgram) -> Result<CompiledProgram, String> {
         n_slots: prog.n_slots,
         body: compile_block(&prog.body)?,
         fused: match &prog.fused {
-            Some(b) => Some(compile_block(b)?),
+            Some(b) => compile_fused(b)?,
             None => None,
         },
         fingerprint: fingerprint(prog),
     })
 }
 
-/// Run a compiled program over one partition, accumulating into `hist`.
-pub fn run(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+/// Resolve the program's column bindings against one partition and build a
+/// fresh execution context for the event window `[ev_lo, ev_hi)`.
+fn bind<'a>(prog: &CompiledProgram, view: &ColumnRange<'a>) -> Result<Ctx<'a>, String> {
+    let cs = view.cs;
     let mut item_cols = Vec::with_capacity(prog.item_cols.len());
     for path in &prog.item_cols {
         item_cols.push(
@@ -142,20 +251,72 @@ pub fn run(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), 
         }
         offsets.push(off);
     }
-    let mut ctx = Ctx {
+    Ok(Ctx {
         item_cols,
         event_cols,
         offsets,
         slots: vec![0.0; prog.n_slots],
-        event: 0,
+        event: view.ev_lo,
+        ev_hi: view.ev_hi,
         oob: Cell::new(false),
-    };
-    if let Some(fused) = &prog.fused {
-        for s in fused {
-            s(&mut ctx, hist);
+    })
+}
+
+/// Run a compiled program over one whole partition, accumulating into
+/// `hist`.
+pub fn run(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    run_range(prog, &cs.range(0, cs.n_events), hist)
+}
+
+/// Run a compiled program over an event window of a partition. This is the
+/// morsel execution primitive: the view is zero-copy, and for a fixed
+/// program the concatenation of adjacent windows produces exactly the fill
+/// sequence of one full-partition run.
+pub fn run_range(
+    prog: &CompiledProgram,
+    view: &ColumnRange<'_>,
+    hist: &mut H1,
+) -> Result<(), String> {
+    run_range_inner(prog, view, hist, true)
+}
+
+/// `run`, but with the chunked kernel disabled — the closure-graph fused
+/// loop runs instead. Exists so benches and tests can measure/verify the
+/// two lowerings against each other.
+pub fn run_scalar(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    run_range_inner(prog, &cs.range(0, cs.n_events), hist, false)
+}
+
+fn run_range_inner(
+    prog: &CompiledProgram,
+    view: &ColumnRange<'_>,
+    hist: &mut H1,
+    allow_chunked: bool,
+) -> Result<(), String> {
+    let mut ctx = bind(prog, view)?;
+    if let Some(f) = &prog.fused {
+        let off = ctx.offsets[f.list];
+        let k_lo = off[view.ev_lo] as usize;
+        let k_hi = off[view.ev_hi] as usize;
+        // The chunked kernel indexes content slices directly; confirm they
+        // cover the item range first (the scalar path bounds-checks every
+        // load and reports OOB through the sticky flag instead).
+        let in_bounds = ctx.item_cols.iter().all(|c| c.len() >= k_hi);
+        match &f.chunked {
+            Some(ck) if allow_chunked && in_bounds => {
+                run_chunked(ck, &ctx.item_cols, k_lo, k_hi, hist);
+            }
+            _ => {
+                for k in k_lo..k_hi {
+                    ctx.slots[f.slot] = k as f64;
+                    for s in &f.body {
+                        s(&mut ctx, hist);
+                    }
+                }
+            }
         }
     } else {
-        for ev in 0..cs.n_events {
+        for ev in view.ev_lo..view.ev_hi {
             ctx.event = ev;
             for s in &prog.body {
                 s(&mut ctx, hist);
@@ -167,6 +328,416 @@ pub fn run(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), 
     }
     Ok(())
 }
+
+/// Morsel-driven parallel execution of one partition: split the event range
+/// into cache-sized morsels, let a scoped thread pool pull morsel indices
+/// from a shared atomic counter (HyPer-style work stealing — fast threads
+/// take more morsels, stragglers hurt at most one morsel), and merge the
+/// per-morsel histograms **in morsel order** so the result is independent
+/// of scheduling. Bin contents and counts match the sequential run exactly;
+/// the running `sum`/`sum2` moments may differ in the last ulps because
+/// merging reassociates their additions across morsel boundaries.
+///
+/// Each morsel binds a fresh slot file. A program that reads a variable it
+/// has not assigned in the current event would observe stale state in a
+/// sequential run and zeros at a morsel (or partition) boundary — the same
+/// unspecified edge the distributed partition split already has.
+pub fn run_parallel(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    cfg: ParallelCfg,
+) -> Result<(), String> {
+    let morsel = cfg.resolved_morsel_events();
+    let n_morsels = cs.n_events.div_ceil(morsel.max(1)).max(1);
+    let threads = cfg.resolved_threads().min(n_morsels);
+    if threads <= 1 {
+        return run(prog, cs, hist);
+    }
+    let (n_bins, lo, hi) = (hist.n_bins(), hist.lo, hist.hi);
+    let next = AtomicUsize::new(0);
+    let mut results: Vec<(usize, Result<H1, String>)> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            handles.push(s.spawn(|| {
+                let mut done = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_morsels {
+                        break;
+                    }
+                    let ev_lo = i * morsel;
+                    let ev_hi = ((i + 1) * morsel).min(cs.n_events);
+                    let mut h = H1::new(n_bins, lo, hi);
+                    let r = run_range(prog, &cs.range(ev_lo, ev_hi), &mut h);
+                    done.push((i, r.map(|_| h)));
+                }
+                done
+            }));
+        }
+        let mut all = Vec::with_capacity(n_morsels);
+        for h in handles {
+            all.extend(h.join().expect("morsel thread panicked"));
+        }
+        all
+    });
+    results.sort_by_key(|(i, _)| *i);
+    let mut parts = Vec::with_capacity(results.len());
+    for (_, r) in results {
+        parts.push(r?);
+    }
+    hist.merge_many(&parts)
+}
+
+// --------------------------------------------------------- chunked kernel
+
+/// A Fill-only fused body lowered for batch evaluation: one histogram fill
+/// per item, expression (and optional weight) evaluable `CHUNK` items at a
+/// time over flat buffers.
+struct ChunkedFill {
+    expr: BExpr,
+    weight: Option<BExpr>,
+}
+
+/// Batch expression: the fused loop body re-expressed over the loop index.
+/// Every node evaluates a whole chunk into an `&mut [f64]` with simple
+/// element-wise loops that LLVM autovectorizes; there is no per-element
+/// dispatch left.
+enum BExpr {
+    Const(f64),
+    /// The global item index `k` as f64.
+    Idx,
+    /// `item_cols[col][k]` — loads are contiguous in a fused loop.
+    Load(usize),
+    Bin(BinOp, Box<BExpr>, Box<BExpr>),
+    Cmp(CmpOp, Box<BExpr>, Box<BExpr>),
+    And(Box<BExpr>, Box<BExpr>),
+    Or(Box<BExpr>, Box<BExpr>),
+    Not(Box<BExpr>),
+    Neg(Box<BExpr>),
+    Call1(fn(f64) -> f64, Box<BExpr>),
+    Call2(fn(f64, f64) -> f64, Box<BExpr>, Box<BExpr>),
+}
+
+/// Recognize the shape `try_fuse` emits — exactly one total loop over one
+/// list — and decompose it for range-aware execution. Anything else keeps
+/// the general per-event body path.
+fn compile_fused(block: &[CStmt]) -> Result<Option<FusedLoop>, String> {
+    let [CStmt::LoopRange { slot, lo, hi, body }] = block else {
+        return Ok(None);
+    };
+    if !matches!(lo, CExpr::Const(c) if *c == 0.0) {
+        return Ok(None);
+    }
+    let list = match hi {
+        CExpr::Call(name, args) if *name == "__list_total" && args.len() == 1 => {
+            match &args[0] {
+                CExpr::Const(lid) => *lid as usize,
+                _ => return Ok(None),
+            }
+        }
+        _ => return Ok(None),
+    };
+    Ok(Some(FusedLoop {
+        list,
+        slot: *slot,
+        body: compile_block(body)?,
+        chunked: compile_chunked(body, *slot),
+    }))
+}
+
+/// Try to lower a fused loop body to the chunked kernel: it must be exactly
+/// one Fill whose expression (and weight) are batch-compilable over the
+/// loop index. `fold` is applied first so the scalar and batch lowerings
+/// see identical arithmetic.
+fn compile_chunked(body: &[CStmt], slot: usize) -> Option<ChunkedFill> {
+    let [CStmt::Fill { expr, weight }] = body else {
+        return None;
+    };
+    let bexpr = batch_compile(&fold(expr), slot)?;
+    let bweight = match weight {
+        Some(w) => Some(batch_compile(&fold(w), slot)?),
+        None => None,
+    };
+    let d = depth(&bexpr).max(bweight.as_ref().map_or(0, depth));
+    if d > MAX_BATCH_DEPTH {
+        return None;
+    }
+    Some(ChunkedFill {
+        expr: bexpr,
+        weight: bweight,
+    })
+}
+
+fn batch_compile(e: &CExpr, slot: usize) -> Option<BExpr> {
+    Some(match e {
+        CExpr::Const(n) => BExpr::Const(*n),
+        CExpr::Slot(s) if *s == slot => BExpr::Idx,
+        // Any other slot would be per-event state — not fusable anyway.
+        CExpr::Slot(_) => return None,
+        CExpr::LoadItem { col, idx } => match batch_compile(idx, slot)? {
+            // Only direct loads at the loop index are contiguous; computed
+            // indices stay on the bounds-checked scalar path.
+            BExpr::Idx => BExpr::Load(*col),
+            _ => return None,
+        },
+        CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => return None,
+        CExpr::Bin(op, l, r) => BExpr::Bin(
+            *op,
+            Box::new(batch_compile(l, slot)?),
+            Box::new(batch_compile(r, slot)?),
+        ),
+        CExpr::Cmp(op, l, r) => BExpr::Cmp(
+            *op,
+            Box::new(batch_compile(l, slot)?),
+            Box::new(batch_compile(r, slot)?),
+        ),
+        CExpr::And(l, r) => BExpr::And(
+            Box::new(batch_compile(l, slot)?),
+            Box::new(batch_compile(r, slot)?),
+        ),
+        CExpr::Or(l, r) => BExpr::Or(
+            Box::new(batch_compile(l, slot)?),
+            Box::new(batch_compile(r, slot)?),
+        ),
+        CExpr::Not(x) => BExpr::Not(Box::new(batch_compile(x, slot)?)),
+        CExpr::Neg(x) => BExpr::Neg(Box::new(batch_compile(x, slot)?)),
+        CExpr::Call(name, args) => {
+            let one = |f: fn(f64) -> f64, args: &[CExpr]| -> Option<BExpr> {
+                Some(BExpr::Call1(f, Box::new(batch_compile(&args[0], slot)?)))
+            };
+            let two = |f: fn(f64, f64) -> f64, args: &[CExpr]| -> Option<BExpr> {
+                Some(BExpr::Call2(
+                    f,
+                    Box::new(batch_compile(&args[0], slot)?),
+                    Box::new(batch_compile(&args[1], slot)?),
+                ))
+            };
+            match (*name, args.len()) {
+                ("sqrt", 1) => one(f64::sqrt, args)?,
+                ("cosh", 1) => one(f64::cosh, args)?,
+                ("cos", 1) => one(f64::cos, args)?,
+                ("sinh", 1) => one(f64::sinh, args)?,
+                ("sin", 1) => one(f64::sin, args)?,
+                ("exp", 1) => one(f64::exp, args)?,
+                ("log", 1) => one(f64::ln, args)?,
+                ("abs", 1) => one(f64::abs, args)?,
+                ("min", 2) => two(f64::min, args)?,
+                ("max", 2) => two(f64::max, args)?,
+                // __list_base / __list_total and anything unknown.
+                _ => return None,
+            }
+        }
+    })
+}
+
+fn depth(e: &BExpr) -> usize {
+    1 + match e {
+        BExpr::Const(_) | BExpr::Idx | BExpr::Load(_) => 0,
+        BExpr::Bin(_, l, r)
+        | BExpr::Cmp(_, l, r)
+        | BExpr::And(l, r)
+        | BExpr::Or(l, r)
+        | BExpr::Call2(_, l, r) => depth(l).max(depth(r)),
+        BExpr::Not(x) | BExpr::Neg(x) | BExpr::Call1(_, x) => depth(x),
+    }
+}
+
+/// Evaluate a batch expression for items `[base, base + out.len())` into
+/// `out`. Each node is one tight element-wise loop; the per-element
+/// arithmetic (ops, order, f32→f64 widening, comparison encodings) is
+/// bit-identical to the closure graph so the two lowerings agree exactly.
+fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
+    let n = out.len();
+    match e {
+        BExpr::Const(c) => out.fill(*c),
+        BExpr::Idx => {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = (base + i) as f64;
+            }
+        }
+        BExpr::Load(col) => {
+            let src = &cols[*col][base..base + n];
+            for (o, &v) in out.iter_mut().zip(src) {
+                *o = v as f64;
+            }
+        }
+        BExpr::Bin(op, l, r) => {
+            let mut tb = [0.0f64; CHUNK];
+            let t = &mut tb[..n];
+            beval(l, cols, base, out);
+            beval(r, cols, base, t);
+            match op {
+                BinOp::Add => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o += v;
+                    }
+                }
+                BinOp::Sub => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o -= v;
+                    }
+                }
+                BinOp::Mul => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o *= v;
+                    }
+                }
+                BinOp::Div => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o /= v;
+                    }
+                }
+            }
+        }
+        BExpr::Cmp(op, l, r) => {
+            let mut tb = [0.0f64; CHUNK];
+            let t = &mut tb[..n];
+            beval(l, cols, base, out);
+            beval(r, cols, base, t);
+            match op {
+                CmpOp::Lt => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o = (*o < v) as i64 as f64;
+                    }
+                }
+                CmpOp::Le => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o = (*o <= v) as i64 as f64;
+                    }
+                }
+                CmpOp::Gt => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o = (*o > v) as i64 as f64;
+                    }
+                }
+                CmpOp::Ge => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o = (*o >= v) as i64 as f64;
+                    }
+                }
+                CmpOp::Eq => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o = (*o == v) as i64 as f64;
+                    }
+                }
+                CmpOp::Ne => {
+                    for (o, &v) in out.iter_mut().zip(t.iter()) {
+                        *o = (*o != v) as i64 as f64;
+                    }
+                }
+            }
+        }
+        // Fused bodies are side-effect-free, so evaluating both operands
+        // and combining is value-identical to the short-circuit closures.
+        BExpr::And(l, r) => {
+            let mut tb = [0.0f64; CHUNK];
+            let t = &mut tb[..n];
+            beval(l, cols, base, out);
+            beval(r, cols, base, t);
+            for (o, &v) in out.iter_mut().zip(t.iter()) {
+                *o = (*o != 0.0 && v != 0.0) as i64 as f64;
+            }
+        }
+        BExpr::Or(l, r) => {
+            let mut tb = [0.0f64; CHUNK];
+            let t = &mut tb[..n];
+            beval(l, cols, base, out);
+            beval(r, cols, base, t);
+            for (o, &v) in out.iter_mut().zip(t.iter()) {
+                *o = (*o != 0.0 || v != 0.0) as i64 as f64;
+            }
+        }
+        BExpr::Not(x) => {
+            beval(x, cols, base, out);
+            for o in out.iter_mut() {
+                *o = (*o == 0.0) as i64 as f64;
+            }
+        }
+        BExpr::Neg(x) => {
+            beval(x, cols, base, out);
+            for o in out.iter_mut() {
+                *o = -*o;
+            }
+        }
+        BExpr::Call1(f, x) => {
+            beval(x, cols, base, out);
+            for o in out.iter_mut() {
+                *o = f(*o);
+            }
+        }
+        BExpr::Call2(f, l, r) => {
+            let mut tb = [0.0f64; CHUNK];
+            let t = &mut tb[..n];
+            beval(l, cols, base, out);
+            beval(r, cols, base, t);
+            for (o, &v) in out.iter_mut().zip(t.iter()) {
+                *o = f(*o, v);
+            }
+        }
+    }
+}
+
+/// Run the chunked kernel for items `[k_lo, k_hi)`: evaluate value (and
+/// weight) buffers one chunk at a time, then accumulate with a branch-free
+/// select chain into a scratch histogram (`n_bins` bins + an underflow and
+/// an overflow slot). The running moments use one sequential accumulator
+/// across the whole range, so bins **and** moments are bit-identical to the
+/// scalar fused loop; NaN fills are skipped by masking instead of
+/// branching, matching `H1::fill_w`.
+fn run_chunked(ck: &ChunkedFill, cols: &[&[f32]], k_lo: usize, k_hi: usize, hist: &mut H1) {
+    let n_bins = hist.n_bins();
+    let lo = hist.lo;
+    let width = hist.hi - hist.lo;
+    let mut scratch = vec![0.0f64; n_bins + 2];
+    let (mut count, mut sum, mut sum2) = (0.0f64, 0.0f64, 0.0f64);
+    let mut xb = [0.0f64; CHUNK];
+    let mut wb = [0.0f64; CHUNK];
+    let mut base = k_lo;
+    while base < k_hi {
+        let n = CHUNK.min(k_hi - base);
+        let xs = &mut xb[..n];
+        let ws = &mut wb[..n];
+        beval(&ck.expr, cols, base, xs);
+        match &ck.weight {
+            Some(w) => beval(w, cols, base, ws),
+            None => ws.fill(1.0),
+        }
+        for i in 0..n {
+            let x = xs[i];
+            // NaN mask, as data-flow: H1 skips NaN fills entirely.
+            let ok = x == x;
+            let xv = if ok { x } else { 0.0 };
+            let wv = if ok { ws[i] } else { 0.0 };
+            // Same index arithmetic as H1::bin_index; the two selects
+            // compile to cmovs, not branches.
+            let t = (xv - lo) / width * n_bins as f64;
+            let bi = t as usize; // saturating: t >= 0 here when xv >= lo
+            let idx = if xv < lo {
+                n_bins
+            } else if bi < n_bins {
+                bi
+            } else {
+                n_bins + 1
+            };
+            scratch[idx] += wv;
+            count += wv;
+            sum += wv * xv;
+            sum2 += wv * xv * xv;
+        }
+        base += n;
+    }
+    for (b, s) in hist.bins.iter_mut().zip(&scratch) {
+        *b += s;
+    }
+    hist.underflow += scratch[n_bins];
+    hist.overflow += scratch[n_bins + 1];
+    hist.count += count;
+    hist.sum += sum;
+    hist.sum2 += sum2;
+}
+
+// ------------------------------------------------------- closure lowering
 
 fn compile_block(stmts: &[CStmt]) -> Result<Vec<StmtFn>, String> {
     stmts.iter().map(compile_stmt).collect()
@@ -350,7 +921,6 @@ fn compile_expr(e: &CExpr) -> Result<ExprFn, String> {
         CExpr::Cmp(op, l, r) => {
             let l = compile_expr(l)?;
             let r = compile_expr(r)?;
-            use super::ast::CmpOp;
             match op {
                 CmpOp::Lt => Box::new(move |c: &Ctx| (l(c) < r(c)) as i64 as f64),
                 CmpOp::Le => Box::new(move |c: &Ctx| (l(c) <= r(c)) as i64 as f64),
@@ -404,7 +974,9 @@ fn compile_expr(e: &CExpr) -> Result<ExprFn, String> {
                     return Err("__list_total: non-constant list id".to_string());
                 };
                 let lid = *lid as usize;
-                Box::new(move |c: &Ctx| *c.offsets[lid].last().unwrap() as f64)
+                // Total items of the context's event *window*, so fused
+                // loops compiled through the generic path stay range-safe.
+                Box::new(move |c: &Ctx| c.offsets[lid][c.ev_hi] as f64)
             }
             _ => {
                 let mut cargs = Vec::with_capacity(args.len());
@@ -434,7 +1006,7 @@ fn compile_expr(e: &CExpr) -> Result<ExprFn, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datagen::generate_drellyan;
+    use crate::datagen::{generate_drellyan, generate_ttbar};
     use crate::queryir::{self, flat, table3};
 
     /// The compiled closure graph must agree bin-exactly with the flat
@@ -499,11 +1071,130 @@ for event in dataset:
         let prog = queryir::compile(table3::MUON_PT, &cs.schema).unwrap();
         assert!(prog.fused.is_some());
         let cp = lower(&prog).unwrap();
+        assert!(cp.is_fused());
         let mut h_fused = H1::new(64, 0.0, 128.0);
         run(&cp, &cs, &mut h_fused).unwrap();
         let mut h_flat = H1::new(64, 0.0, 128.0);
         flat::run_unfused(&prog, &cs, &mut h_flat).unwrap();
         assert_eq!(h_fused.bins, h_flat.bins);
+    }
+
+    /// The chunked kernel must agree with the closure-graph fused loop to
+    /// the last bit — bins, under/overflow and moments — because the
+    /// element order and per-element arithmetic are identical.
+    #[test]
+    fn chunked_kernel_bit_identical_to_scalar() {
+        let cs = generate_ttbar(3000, 8, 96);
+        let prog = queryir::compile(table3::JET_PT, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(cp.has_chunked_kernel());
+        let mut h_chunk = H1::new(64, 10.0, 200.0); // nonzero lo exercises underflow
+        run(&cp, &cs, &mut h_chunk).unwrap();
+        let mut h_scalar = H1::new(64, 10.0, 200.0);
+        run_scalar(&cp, &cs, &mut h_scalar).unwrap();
+        assert_eq!(h_chunk, h_scalar);
+        assert!(h_chunk.underflow > 0.0 || h_chunk.overflow > 0.0);
+    }
+
+    /// Weighted and compound fill expressions also take the chunked path.
+    #[test]
+    fn chunked_kernel_weighted_and_compound() {
+        let cs = generate_drellyan(2500, 97);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        fill(sqrt(muon.pt * muon.pt + muon.eta), 0.25)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(cp.has_chunked_kernel());
+        let mut a = H1::new(48, 0.0, 160.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(48, 0.0, 160.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    /// A fused body with an `if` keeps the scalar loop (no chunked kernel)
+    /// and still runs correctly under morsel ranges.
+    #[test]
+    fn fused_with_condition_is_not_chunked_but_range_safe() {
+        let cs = generate_drellyan(1200, 98);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 20:
+            fill(muon.pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        assert!(prog.fused.is_some());
+        let cp = lower(&prog).unwrap();
+        assert!(cp.is_fused());
+        assert!(!cp.has_chunked_kernel());
+        let mut whole = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut whole).unwrap();
+        let mut halves = H1::new(64, 0.0, 128.0);
+        run_range(&cp, &cs.range(0, 600), &mut halves).unwrap();
+        run_range(&cp, &cs.range(600, 1200), &mut halves).unwrap();
+        assert_eq!(whole, halves);
+    }
+
+    /// Adjacent event windows tile a partition exactly: concatenating
+    /// `run_range` calls reproduces the full-partition fill sequence.
+    #[test]
+    fn run_range_windows_tile_the_partition() {
+        let cs = generate_drellyan(999, 99);
+        for src in [table3::MAX_PT, table3::MASS_PAIRS, table3::MUON_PT] {
+            let prog = queryir::compile(src, &cs.schema).unwrap();
+            let cp = lower(&prog).unwrap();
+            let mut whole = H1::new(64, 0.0, 128.0);
+            run(&cp, &cs, &mut whole).unwrap();
+            let mut tiled = H1::new(64, 0.0, 128.0);
+            let mut ev = 0;
+            while ev < cs.n_events {
+                let hi = (ev + 130).min(cs.n_events);
+                run_range(&cp, &cs.range(ev, hi), &mut tiled).unwrap();
+                ev = hi;
+            }
+            assert_eq!(whole.bins, tiled.bins);
+            assert_eq!(whole.total(), tiled.total());
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_on_pairs() {
+        let cs = generate_drellyan(4000, 100);
+        let prog = queryir::compile(table3::MASS_PAIRS, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let mut seq = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut seq).unwrap();
+        let mut par = H1::new(64, 0.0, 128.0);
+        let cfg = ParallelCfg {
+            threads: 4,
+            morsel_events: 256,
+        };
+        run_parallel(&cp, &cs, &mut par, cfg).unwrap();
+        assert_eq!(seq.bins, par.bins);
+        assert_eq!(seq.count, par.count);
+    }
+
+    #[test]
+    fn parallel_propagates_errors() {
+        let cs = generate_drellyan(300, 101);
+        let src = "\
+for event in dataset:
+    m = event.muons[999]
+    fill(m.pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let mut h = H1::new(8, 0.0, 128.0);
+        let cfg = ParallelCfg {
+            threads: 3,
+            morsel_events: 64,
+        };
+        assert!(run_parallel(&cp, &cs, &mut h, cfg).is_err());
     }
 
     #[test]

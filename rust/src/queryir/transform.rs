@@ -289,7 +289,9 @@ impl<'a> Transformer<'a> {
                             let col = self.event_col_id(attr);
                             Ok(CVal::Scalar(CExpr::LoadEvent { col }))
                         }
-                        Some(Ty::Record(_)) => err(format!("nested records ('{attr}') not supported")),
+                        Some(Ty::Record(_)) => {
+                            err(format!("nested records ('{attr}') not supported"))
+                        }
                         None => err(format!("event has no attribute '{attr}'")),
                     }
                 }
@@ -368,8 +370,9 @@ impl<'a> Transformer<'a> {
             Some(Ty::List(inner)) => match inner.as_ref() {
                 Ty::Record(fields) => {
                     if fields.iter().any(|f| f.name == attr) {
+                        use PrimType::{F32, F64, I32, I64};
                         match fields.iter().find(|f| f.name == attr).map(|f| &f.ty) {
-                            Some(Ty::Prim(PrimType::F32 | PrimType::F64 | PrimType::I32 | PrimType::I64)) => Ok(()),
+                            Some(Ty::Prim(F32 | F64 | I32 | I64)) => Ok(()),
                             _ => err(format!("attribute '{list}.{attr}' is not numeric")),
                         }
                     } else {

@@ -94,7 +94,13 @@ impl QueryExecutable {
     }
 
     /// Execute over one padded partition, adding into `hist`.
-    pub fn run(&self, part: &PaddedPartition, lo: f64, hi: f64, hist: &mut H1) -> Result<(), String> {
+    pub fn run(
+        &self,
+        part: &PaddedPartition,
+        lo: f64,
+        hi: f64,
+        hist: &mut H1,
+    ) -> Result<(), String> {
         let slots = self.run_raw(part, lo, hi)?;
         let nbins = self.shape.nbins;
         hist.add_bins(&slots[1..=nbins], slots[0] as f64, slots[nbins + 1] as f64)

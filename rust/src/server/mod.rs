@@ -167,6 +167,7 @@ fn handle_conn(
                         ("result_cache_hits", Json::num(rc_hits as f64)),
                         ("result_cache_misses", Json::num(rc_misses as f64)),
                         ("result_cache_entries", Json::num(results.len() as f64)),
+                        ("result_cache_evictions", Json::num(results.evictions() as f64)),
                         (
                             "bytes_fetched",
                             Json::num(
@@ -234,7 +235,10 @@ fn answer_query(
     }
     match run_query(cluster, q, out) {
         Ok(res) => {
-            results.put(key, res.clone());
+            // The entry's eviction weight is its recomputation cost: the
+            // wall-clock seconds the cluster just spent on it, so quadratic
+            // pair loops are preferentially retained over cheap flat fills.
+            results.put(key, res.clone(), t0.elapsed().as_secs_f64());
             result_json(&res, t0.elapsed(), false)
         }
         Err(e) => err_json(&e),
@@ -364,7 +368,9 @@ mod tests {
     }
 
     /// Start a server on an OS-assigned free port and connect a client.
-    fn start_server(cluster: Arc<Cluster>) -> (Client, std::thread::JoinHandle<Result<std::net::SocketAddr, String>>) {
+    type ServeHandle = std::thread::JoinHandle<Result<std::net::SocketAddr, String>>;
+
+    fn start_server(cluster: Arc<Cluster>) -> (Client, ServeHandle) {
         let port = {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().port()

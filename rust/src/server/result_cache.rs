@@ -5,7 +5,17 @@
 //! fingerprint* (not the source text), the dataset name + version and the
 //! histogram binning. Two textually different sources that transform to the
 //! same flat tape hit the same entry; re-registering a dataset bumps its
-//! version, so stale results can never be served. Bounded LRU.
+//! version, so stale results can never be served.
+//!
+//! Bounded, with **cost-weighted eviction** (GreedyDual): every entry
+//! carries the cost of recomputing it — the wall-clock seconds the cluster
+//! spent producing the histogram — and eviction removes the entry with the
+//! lowest `inflation + cost` priority, aging the whole cache through the
+//! `inflation` value each time something is evicted. Quadratic pair-loop
+//! results (expensive to recompute) therefore outlive cheap flat fills
+//! even when the cheap ones are more recent, while repeatedly-missed cheap
+//! entries still age out. Ties break LRU so equal-cost entries behave like
+//! the classic policy.
 //!
 //! Keys are the full canonical strings, not their hashes: the server takes
 //! arbitrary query source from untrusted clients, and a 64-bit digest key
@@ -24,11 +34,24 @@ pub struct CachedResult {
     pub partitions: usize,
 }
 
+struct Entry {
+    res: CachedResult,
+    /// Recomputation cost (seconds of cluster time, or any consistent unit).
+    cost: f64,
+    /// GreedyDual priority: `inflation_at_touch + cost`.
+    pri: f64,
+    /// Touch clock, for deterministic LRU tie-breaking.
+    stamp: u64,
+}
+
 struct Inner {
-    map: HashMap<String, (CachedResult, u64)>,
+    map: HashMap<String, Entry>,
+    /// GreedyDual aging value: the priority of the last evicted entry.
+    inflation: f64,
     clock: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 pub struct ResultCache {
@@ -41,9 +64,11 @@ impl ResultCache {
         ResultCache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
+                inflation: 0.0,
                 clock: 0,
                 hits: 0,
                 misses: 0,
+                evictions: 0,
             }),
             capacity: capacity.max(1),
         }
@@ -52,11 +77,14 @@ impl ResultCache {
     pub fn get(&self, key: &str) -> Option<CachedResult> {
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
-        let clock = g.clock;
+        let (clock, inflation) = (g.clock, g.inflation);
         let found = match g.map.get_mut(key) {
-            Some((res, stamp)) => {
-                *stamp = clock;
-                Some(res.clone())
+            Some(e) => {
+                // A hit restores the entry's full priority at the current
+                // inflation level.
+                e.pri = inflation + e.cost;
+                e.stamp = clock;
+                Some(e.res.clone())
             }
             None => None,
         };
@@ -72,21 +100,41 @@ impl ResultCache {
         }
     }
 
-    pub fn put(&self, key: String, res: CachedResult) {
+    /// Insert a result whose recomputation would cost `cost` (seconds of
+    /// cluster time). Non-finite or negative costs are clamped to 0, so an
+    /// adversarial client cannot pin an entry forever.
+    pub fn put(&self, key: String, res: CachedResult, cost: f64) {
+        let cost = if cost.is_finite() { cost.max(0.0) } else { 0.0 };
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
-        let clock = g.clock;
-        g.map.insert(key, (res, clock));
+        let (clock, inflation) = (g.clock, g.inflation);
+        g.map.insert(
+            key,
+            Entry {
+                res,
+                cost,
+                pri: inflation + cost,
+                stamp: clock,
+            },
+        );
         while g.map.len() > self.capacity {
-            // Evict the least-recently-used entry.
-            let oldest = g
+            // Evict the lowest-priority entry (oldest on ties) and raise
+            // the inflation floor to its priority.
+            let victim = g
                 .map
                 .iter()
-                .min_by_key(|(_, (_, stamp))| *stamp)
-                .map(|(k, _)| k.clone());
-            match oldest {
-                Some(k) => {
+                .min_by(|(_, a), (_, b)| {
+                    a.pri
+                        .partial_cmp(&b.pri)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.stamp.cmp(&b.stamp))
+                })
+                .map(|(k, e)| (k.clone(), e.pri));
+            match victim {
+                Some((k, pri)) => {
                     g.map.remove(&k);
+                    g.inflation = g.inflation.max(pri);
+                    g.evictions += 1;
                 }
                 None => break,
             }
@@ -97,6 +145,11 @@ impl ResultCache {
     pub fn stats(&self) -> (u64, u64) {
         let g = self.inner.lock().unwrap();
         (g.hits, g.misses)
+    }
+
+    /// Entries evicted so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
     }
 
     pub fn len(&self) -> usize {
@@ -124,22 +177,70 @@ mod tests {
     fn hit_miss_and_stats() {
         let c = ResultCache::new(8);
         assert!(c.get("k1").is_none());
-        c.put("k1".to_string(), res(3.0));
+        c.put("k1".to_string(), res(3.0), 0.1);
         let r = c.get("k1").unwrap();
         assert_eq!(r.hist.total(), 3.0);
         assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.evictions(), 0);
     }
 
     #[test]
-    fn lru_eviction_respects_capacity() {
+    fn equal_cost_eviction_degrades_to_lru() {
         let c = ResultCache::new(2);
-        c.put("k1".to_string(), res(1.0));
-        c.put("k2".to_string(), res(2.0));
+        c.put("k1".to_string(), res(1.0), 1.0);
+        c.put("k2".to_string(), res(2.0), 1.0);
         let _ = c.get("k1"); // freshen k1 so k2 is the LRU entry
-        c.put("k3".to_string(), res(3.0));
+        c.put("k3".to_string(), res(3.0), 1.0);
         assert_eq!(c.len(), 2);
         assert!(c.get("k1").is_some());
         assert!(c.get("k2").is_none());
         assert!(c.get("k3").is_some());
+    }
+
+    /// The point of cost weighting: an expensive (quadratic pair-loop)
+    /// result outlives newer cheap results under pressure.
+    #[test]
+    fn expensive_results_are_preferentially_retained() {
+        let c = ResultCache::new(2);
+        c.put("cheap-old".to_string(), res(1.0), 0.001);
+        c.put("pairs".to_string(), res(2.0), 10.0);
+        // Pressure from more cheap queries evicts cheap entries first,
+        // even though "pairs" is now the least recently touched.
+        c.put("cheap-new".to_string(), res(3.0), 0.001);
+        assert!(c.get("cheap-old").is_none());
+        assert!(c.get("pairs").is_some());
+        c.put("cheap-newer".to_string(), res(4.0), 0.001);
+        assert!(c.get("cheap-new").is_none());
+        assert!(c.get("pairs").is_some());
+        assert_eq!(c.evictions(), 2);
+    }
+
+    /// Inflation ages entries: once evictions have raised the floor above
+    /// an expensive entry's standing priority, it too can be displaced —
+    /// the cache does not ossify around one early expensive result.
+    #[test]
+    fn inflation_eventually_ages_out_expensive_entries() {
+        let c = ResultCache::new(2);
+        c.put("pairs".to_string(), res(1.0), 0.5);
+        // A stream of un-rehit mid-cost entries keeps evicting each other,
+        // raising inflation past pairs' priority (0 + 0.5).
+        for i in 0..16 {
+            c.put(format!("mid-{i}"), res(2.0), 0.2);
+        }
+        // New entries now carry pri = inflation + 0.2 > 0.5, so "pairs"
+        // (never rehit) has been evicted along the way.
+        assert!(c.get("pairs").is_none());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn hostile_costs_are_clamped() {
+        let c = ResultCache::new(1);
+        c.put("inf".to_string(), res(1.0), f64::INFINITY);
+        c.put("nan".to_string(), res(2.0), f64::NAN);
+        c.put("sane".to_string(), res(3.0), 0.1);
+        // The non-finite-cost entries did not pin the cache.
+        assert!(c.get("sane").is_some());
+        assert_eq!(c.len(), 1);
     }
 }

@@ -127,7 +127,9 @@ impl CommandSpec {
                     .args
                     .iter()
                     .find(|a| a.name == key)
-                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                    .ok_or_else(|| {
+                        CliError(format!("unknown option --{key}\n\n{}", self.usage()))
+                    })?;
                 if spec.is_flag {
                     flags.push(key);
                 } else {

@@ -1,0 +1,158 @@
+//! Equivalence properties of the morsel-driven parallel executor and the
+//! chunked kernel.
+//!
+//! The guarantees under test:
+//!   * `run_parallel` over any morsel size and thread count produces
+//!     bin-identical histograms (bins, under/overflow, count) to the
+//!     sequential `lower::run` — the `sum`/`sum2` moments are merged
+//!     across morsel boundaries and may reassociate, so they are checked
+//!     to a relative tolerance instead;
+//!   * the chunked batch kernel is **fully** bit-identical to the
+//!     closure-graph fused loop, moments included, because it preserves
+//!     element order and per-element arithmetic.
+
+use hepq::datagen::{generate_drellyan, generate_ttbar};
+use hepq::hist::H1;
+use hepq::queryir::lower::{self, ParallelCfg};
+use hepq::queryir::{self, table3};
+use hepq::util::propkit::{check, Config};
+
+/// Morsel merges reorder only the moment additions.
+fn assert_morsel_equiv(seq: &H1, par: &H1, what: &str) {
+    assert_eq!(seq.bins, par.bins, "{what}: bins");
+    assert_eq!(seq.underflow, par.underflow, "{what}: underflow");
+    assert_eq!(seq.overflow, par.overflow, "{what}: overflow");
+    assert_eq!(seq.count, par.count, "{what}: count");
+    for (name, a, b) in [("sum", seq.sum, par.sum), ("sum2", seq.sum2, par.sum2)] {
+        let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}: {name} {a} vs {b} beyond merge tolerance"
+        );
+    }
+}
+
+/// The ISSUE grid: morsel sizes {1, 7, 1024, whole-partition} × thread
+/// counts {1, 2, 8}, across a fused (chunked-kernel) query, a per-event
+/// query and a quadratic pair query.
+#[test]
+fn morsel_grid_matches_sequential() {
+    const N: usize = 5_000;
+    let cs = generate_drellyan(N, 71);
+    for (name, src) in [
+        ("muon_pt", table3::MUON_PT),
+        ("max_pt", table3::MAX_PT),
+        ("mass_pairs", table3::MASS_PAIRS),
+    ] {
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower::lower(&prog).unwrap();
+        let mut seq = H1::new(64, 0.0, 128.0);
+        lower::run(&cp, &cs, &mut seq).unwrap();
+        for morsel_events in [1usize, 7, 1024, N] {
+            for threads in [1usize, 2, 8] {
+                let mut par = H1::new(64, 0.0, 128.0);
+                let cfg = ParallelCfg {
+                    threads,
+                    morsel_events,
+                };
+                lower::run_parallel(&cp, &cs, &mut par, cfg).unwrap();
+                assert_morsel_equiv(
+                    &seq,
+                    &par,
+                    &format!("{name} morsel={morsel_events} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Randomized version: arbitrary sample sizes, seeds, morsel sizes and
+/// thread counts agree with the sequential run.
+#[test]
+fn prop_parallel_equals_sequential() {
+    let cfg = Config {
+        cases: 12,
+        ..Config::default()
+    };
+    check(
+        "parallel-equals-sequential",
+        &cfg,
+        |g| {
+            (
+                1 + g.usize_to(3_000),
+                g.rng.next_u64(),
+                1 + g.usize_to(2_048),
+                1 + g.usize_to(8),
+            )
+        },
+        |&(n, seed, morsel_events, threads)| {
+            let cs = generate_drellyan(n, seed);
+            for src in [table3::MUON_PT, table3::ETA_BEST] {
+                let prog = queryir::compile(src, &cs.schema)?;
+                let cp = lower::lower(&prog)?;
+                let mut seq = H1::new(48, -4.0, 120.0);
+                lower::run(&cp, &cs, &mut seq)?;
+                let mut par = H1::new(48, -4.0, 120.0);
+                let pcfg = ParallelCfg {
+                    threads,
+                    morsel_events,
+                };
+                lower::run_parallel(&cp, &cs, &mut par, pcfg)?;
+                if seq.bins != par.bins || seq.count != par.count {
+                    return Err(format!(
+                        "n={n} seed={seed} morsel={morsel_events} threads={threads}: \
+                         parallel bins diverge"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The chunked kernel (used on the ttbar jet-pt fill) is bit-identical to
+/// the closure-graph fused loop, including the running moments, with a
+/// binning chosen so under- and overflow are both exercised.
+#[test]
+fn chunked_kernel_is_bit_identical_across_binnings() {
+    let cs = generate_ttbar(4_000, 12, 7);
+    let prog = queryir::compile(table3::JET_PT, &cs.schema).unwrap();
+    let cp = lower::lower(&prog).unwrap();
+    assert!(cp.has_chunked_kernel(), "jet-pt fill should take the chunked kernel");
+    for (n_bins, lo, hi) in [(64, 0.0, 256.0), (17, 35.0, 90.0), (4, -50.0, -1.0)] {
+        let mut chunked = H1::new(n_bins, lo, hi);
+        lower::run(&cp, &cs, &mut chunked).unwrap();
+        let mut scalar = H1::new(n_bins, lo, hi);
+        lower::run_scalar(&cp, &cs, &mut scalar).unwrap();
+        assert_eq!(chunked, scalar, "binning {n_bins}x[{lo},{hi})");
+    }
+}
+
+/// Chunked + morsels composed: the parallel run of a fused query still
+/// matches, and a whole-partition morsel equals the plain sequential run
+/// bit-for-bit (single morsel → no merge reassociation at all).
+#[test]
+fn chunked_and_morsels_compose() {
+    let cs = generate_drellyan(9_000, 73);
+    let prog = queryir::compile(table3::MUON_PT, &cs.schema).unwrap();
+    let cp = lower::lower(&prog).unwrap();
+    assert!(cp.has_chunked_kernel());
+    let mut seq = H1::new(64, 0.0, 128.0);
+    lower::run(&cp, &cs, &mut seq).unwrap();
+
+    let mut one_morsel = H1::new(64, 0.0, 128.0);
+    let cfg = ParallelCfg {
+        threads: 8,
+        morsel_events: cs.n_events,
+    };
+    lower::run_parallel(&cp, &cs, &mut one_morsel, cfg).unwrap();
+    assert_eq!(seq, one_morsel, "single morsel must be the sequential run");
+
+    let mut many = H1::new(64, 0.0, 128.0);
+    let cfg = ParallelCfg {
+        threads: 4,
+        morsel_events: 333,
+    };
+    lower::run_parallel(&cp, &cs, &mut many, cfg).unwrap();
+    assert_morsel_equiv(&seq, &many, "chunked+morsels");
+}
