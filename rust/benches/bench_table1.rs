@@ -198,6 +198,68 @@ fn main() {
         black_box(h.total());
     });
 
+    // --- predicated (mask-and-fill) + multi-fill kernel rungs ------------
+    // Rungs 16–21: a cut body at three selectivities — the cut threshold at
+    // the 99th/50th/1st percentile of muon pt, so ~1% / ~50% / ~99% of
+    // items pass — scalar closure loop vs masked chunked kernel. Rungs
+    // 22/23: a cut + two-histogram body (the multi-Fill shared batch pass).
+    let mut pts: Vec<f32> = dy.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut masked_pairs: Vec<(String, String, String)> = Vec::new();
+    let mut rung = 16;
+    for (tag, q) in [("1pct", 0.99), ("50pct", 0.50), ("99pct", 0.01)] {
+        let thr = pts[((pts.len() - 1) as f64 * q) as usize] as f64;
+        let pass = pts.iter().filter(|&&p| p as f64 > thr).count();
+        eprintln!(
+            "table1: cut_{tag} threshold {thr:.3} GeV passes {pass}/{} items",
+            pts.len()
+        );
+        let src_cut = format!(
+            "for event in dataset:\n    for muon in event.muons:\n        \
+             if muon.pt > {thr}:\n            fill(muon.pt)\n"
+        );
+        let cut_prog = queryir::compile(&src_cut, &dy.schema).unwrap();
+        let cut_cp = queryir::lower::lower(&cut_prog).unwrap();
+        assert!(cut_cp.has_chunked_kernel(), "cut fill should lower chunked");
+        let scalar_name = format!("{rung} cut_{tag} fused closure loop");
+        b.run(&scalar_name, nd, || {
+            let mut h = H1::new(64, 0.0, 128.0);
+            queryir::lower::run_scalar(&cut_cp, &dy, &mut h).unwrap();
+            black_box(h.total());
+        });
+        let chunked_name = format!("{} cut_{tag} masked chunked kernel", rung + 1);
+        b.run(&chunked_name, nd, || {
+            let mut h = H1::new(64, 0.0, 128.0);
+            queryir::lower::run(&cut_cp, &dy, &mut h).unwrap();
+            black_box(h.total());
+        });
+        masked_pairs.push((format!("cut_{tag}"), scalar_name, chunked_name));
+        rung += 2;
+    }
+    let src_two = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 20:
+            fill(muon.pt)
+        fill(muon.eta * muon.eta, 0.5)
+";
+    let two_prog = queryir::compile(src_two, &dy.schema).unwrap();
+    let two_cp = queryir::lower::lower(&two_prog).unwrap();
+    assert!(two_cp.has_chunked_kernel(), "two-fill body should lower chunked");
+    let scalar_name = format!("{rung} two_fill fused closure loop");
+    b.run(&scalar_name, nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run_scalar(&two_cp, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    let chunked_name = format!("{} two_fill chunked kernel", rung + 1);
+    b.run(&chunked_name, nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run(&two_cp, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    masked_pairs.push(("two_fill".to_string(), scalar_name, chunked_name));
+
     b.finish();
 
     let interp_rate = b.get("7 mass_pairs object interpreter").unwrap().rate();
@@ -224,6 +286,15 @@ fn main() {
          over {par_events} events (target >= 2.5x at 4 cores){}",
         if par_threads >= 4 && par_speedup < 2.5 { "  ** BELOW TARGET **" } else { "" }
     );
+
+    for (label, scalar_name, chunked_name) in &masked_pairs {
+        let sp = b.get(chunked_name).unwrap().rate() / b.get(scalar_name).unwrap().rate();
+        eprintln!(
+            "masked-kernel check: chunked / fused closure = {sp:.2}x on {label} \
+             (target >= 1.0x){}",
+            if sp < 1.0 { "  ** BELOW TARGET **" } else { "" }
+        );
+    }
 
     // Shape assertions (soft: print, don't panic, but flag).
     let r1 = b.get("1 full framework (all branches + modules)").unwrap().rate();

@@ -58,7 +58,11 @@ mod pjrt_backend {
     }
 }
 
-/// How to execute a query over a partition.
+/// How to execute a query over a partition. One value selects the whole
+/// execution strategy for cluster workers, the TCP server, the CLI and
+/// the benches; `Backend::CompiledTape` is the production path (closure
+/// graph + chunked mask-and-fill kernels, see `docs/ARCHITECTURE.md`),
+/// the rest are reference implementations and Table-1 baselines.
 #[derive(Clone, Debug)]
 pub enum Backend {
     /// Hand-written flat loops (the transformed-code endpoint).

@@ -12,6 +12,24 @@
 //! transformation and the compiled-tape execution backend
 //! (`queryir::lower` + `engine::compiled_exec`), and the cache-aware
 //! distributed runtime.
+//!
+//! Start with `docs/ARCHITECTURE.md` for the full pipeline — source →
+//! flat tape → closure graph / chunked mask-and-fill kernels → morsel
+//! scheduler → histogram merge → result cache — with pointers to every
+//! defining file, and `docs/QUERY_LANGUAGE.md` for the query form served
+//! over TCP. The crate's entry points, by role:
+//!
+//!   * [`queryir`] — the language: parse, transform (paper §3), and the
+//!     compiled-tape lowering ([`queryir::lower`]);
+//!   * [`engine`] — per-partition execution: [`engine::Backend`] dispatch
+//!     and the production [`engine::CompiledTapeBackend`];
+//!   * [`coord`] — the distributed runtime (task board, cache-aware
+//!     scheduler, workers);
+//!   * [`server`] — the TCP query service and its normalized result
+//!     cache;
+//!   * [`columnar`] / [`format`] — exploded arrays and the femto-ROOT
+//!     on-disk format;
+//!   * [`hist`] — the `H1` result histogram and its merge semantics.
 
 pub mod columnar;
 pub mod coord;

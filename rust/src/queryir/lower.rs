@@ -15,12 +15,22 @@
 //!     `sqrt`/`cosh`/`cos` in the pair loop are direct math calls;
 //!   * the fused single-list special case runs as one flat loop over the
 //!     content arrays, exactly the shape of `engine::columnar_exec`;
-//!   * Fill-only fused bodies additionally lower to a **chunked batch
-//!     kernel** (`BExpr`): events are processed in fixed-size batches of
-//!     `CHUNK` items through flat `f64` buffers with branch-free bin
-//!     accumulation into a scratch histogram, so rustc/LLVM can
-//!     autovectorize the arithmetic — the paper's "minimal for loop" rung
-//!     reached from compiled query source.
+//!   * fused bodies additionally lower to a **chunked batch kernel**
+//!     (`BExpr`): items are processed in fixed-size batches of `CHUNK`
+//!     through flat `f64` buffers with branch-free bin accumulation into a
+//!     scratch histogram, so rustc/LLVM can autovectorize the arithmetic —
+//!     the paper's "minimal for loop" rung reached from compiled query
+//!     source. `if` cuts lower to **0/1 masks** (nested cuts conjoin,
+//!     `else` branches negate; the mask selects the fill's value and
+//!     weight instead of branching), and bodies with several `Fill`
+//!     statements run as **one shared batch pass**: every distinct
+//!     mask/value/weight expression is interned into a shared buffer table
+//!     evaluated once per chunk, so a cut or weight common to several fill
+//!     sites is computed once.
+//!
+//! The full pipeline this module sits in — and every stage's defining file
+//! — is documented in `docs/ARCHITECTURE.md`; the source language itself in
+//! `docs/QUERY_LANGUAGE.md`.
 //!
 //! Execution is **range-aware**: `run_range` evaluates any event window of
 //! a partition through a zero-copy `ColumnRange` view, which is what the
@@ -54,8 +64,10 @@ pub const CHUNK: usize = 1024;
 
 /// Deepest batch expression the chunked kernel will take. `beval` keeps one
 /// `CHUNK`-sized stack buffer per binary node on the recursion path, so this
-/// bounds kernel stack use (~8 KiB × depth); deeper (pathological) queries
-/// fall back to the closure-graph loop.
+/// bounds kernel stack use (~8 KiB × depth). Exceeding it is the **only**
+/// fused shape that still runs the scalar closure loop: cut bodies and
+/// multi-`Fill` bodies batch (mask-and-fill), so a fused body falls back
+/// only when some mask/value/weight tree is pathologically deep.
 const MAX_BATCH_DEPTH: usize = 24;
 
 /// Default morsel size for `run_parallel`, in events. Physics partitions
@@ -94,8 +106,8 @@ struct FusedLoop {
     slot: usize,
     /// Scalar fallback: the loop body as compiled closures.
     body: Vec<StmtFn>,
-    /// Chunked batch kernel, when the body is Fill-only and batchable.
-    chunked: Option<ChunkedFill>,
+    /// Chunked batch kernel, when every body expression is batchable.
+    chunked: Option<ChunkedBody>,
 }
 
 /// A lowered program: closure graphs for the statement tree, ready to bind
@@ -117,10 +129,35 @@ impl CompiledProgram {
         self.fused.is_some()
     }
 
-    /// Does the fused loop lower to the chunked SIMD-friendly kernel?
+    /// Does the fused loop lower to the chunked SIMD-friendly kernel
+    /// (the mask-and-fill batch pass)?
     pub fn has_chunked_kernel(&self) -> bool {
         self.fused.as_ref().is_some_and(|f| f.chunked.is_some())
     }
+
+    /// Shape of the chunked kernel this program lowered to, if any —
+    /// observability for tests, benches and server stats.
+    pub fn chunked_info(&self) -> Option<ChunkedInfo> {
+        let ck = self.fused.as_ref()?.chunked.as_ref()?;
+        Some(ChunkedInfo {
+            fills: ck.fills.len(),
+            masked_fills: ck.fills.iter().filter(|f| f.mask.is_some()).count(),
+            buffers: ck.bufs.len(),
+        })
+    }
+}
+
+/// Lowering report for the chunked kernel: how many fill sites batched,
+/// how many are cut-guarded, and how large the shared buffer table is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkedInfo {
+    /// Batch-lowered fill sites.
+    pub fills: usize,
+    /// Fill sites guarded by a cut mask.
+    pub masked_fills: usize,
+    /// Distinct batch buffers evaluated per chunk — the shared-subexpression
+    /// table (a mask/value/weight appearing at several sites counts once).
+    pub buffers: usize,
 }
 
 /// Intra-partition parallelism: how many morsel threads one `run_parallel`
@@ -391,12 +428,26 @@ pub fn run_parallel(
 
 // --------------------------------------------------------- chunked kernel
 
-/// A Fill-only fused body lowered for batch evaluation: one histogram fill
-/// per item, expression (and optional weight) evaluable `CHUNK` items at a
-/// time over flat buffers.
-struct ChunkedFill {
-    expr: BExpr,
-    weight: Option<BExpr>,
+/// A fused body lowered for batch evaluation: a table of distinct batch
+/// expressions (`bufs`) evaluated once per chunk into `CHUNK`-wide `f64`
+/// buffers, plus the fill sites that read them. Cut masks, fill values and
+/// fill weights all live in the same table, so an expression shared by
+/// several sites — the same cut guarding two fills, a common weight, the
+/// same value filled under different cuts — is evaluated once per chunk.
+struct ChunkedBody {
+    bufs: Vec<BExpr>,
+    fills: Vec<FillSite>,
+}
+
+/// One `Fill` of a chunked body, as indices into the shared buffer table.
+struct FillSite {
+    /// 0/1 cut mask (the conjunction of every enclosing `if`, with `else`
+    /// branches negated); `None` means the fill is unconditional.
+    mask: Option<usize>,
+    /// The fill value.
+    expr: usize,
+    /// The fill weight; `None` means weight 1.
+    weight: Option<usize>,
 }
 
 /// Batch expression: the fused loop body re-expressed over the loop index.
@@ -446,27 +497,105 @@ fn compile_fused(block: &[CStmt]) -> Result<Option<FusedLoop>, String> {
     }))
 }
 
-/// Try to lower a fused loop body to the chunked kernel: it must be exactly
-/// one Fill whose expression (and weight) are batch-compilable over the
-/// loop index. `fold` is applied first so the scalar and batch lowerings
-/// see identical arithmetic.
-fn compile_chunked(body: &[CStmt], slot: usize) -> Option<ChunkedFill> {
-    let [CStmt::Fill { expr, weight }] = body else {
-        return None;
+/// Try to lower a fused loop body to the chunked kernel. The body may be
+/// any tree of `if` cuts around `Fill` statements (`try_fuse` admits
+/// nothing else): every cut condition becomes a 0/1 mask buffer, nested
+/// cuts combine by conjunction (`else` branches by negation), and each
+/// fill site records which mask/value/weight buffers it reads. Distinct
+/// expressions are interned into one shared buffer table keyed by their
+/// folded `CExpr`, so structurally equal subexpressions across fill sites
+/// are evaluated once per chunk. `fold` is applied before interning so the
+/// scalar and batch lowerings see identical arithmetic.
+///
+/// Returns `None` — the fused loop then runs the scalar closure body —
+/// only when some expression tree exceeds `MAX_BATCH_DEPTH`.
+fn compile_chunked(body: &[CStmt], slot: usize) -> Option<ChunkedBody> {
+    let mut b = ChunkedBuilder {
+        slot,
+        keys: Vec::new(),
+        bufs: Vec::new(),
+        fills: Vec::new(),
     };
-    let bexpr = batch_compile(&fold(expr), slot)?;
-    let bweight = match weight {
-        Some(w) => Some(batch_compile(&fold(w), slot)?),
-        None => None,
-    };
-    let d = depth(&bexpr).max(bweight.as_ref().map_or(0, depth));
-    if d > MAX_BATCH_DEPTH {
+    b.block(body, None)?;
+    if b.fills.is_empty() {
         return None;
     }
-    Some(ChunkedFill {
-        expr: bexpr,
-        weight: bweight,
+    Some(ChunkedBody {
+        bufs: b.bufs,
+        fills: b.fills,
     })
+}
+
+/// Interning builder for `ChunkedBody`: batch expressions are keyed by
+/// their folded `CExpr` so equal masks, values and weights share a buffer.
+struct ChunkedBuilder {
+    slot: usize,
+    keys: Vec<CExpr>,
+    bufs: Vec<BExpr>,
+    fills: Vec<FillSite>,
+}
+
+impl ChunkedBuilder {
+    fn intern(&mut self, e: &CExpr) -> Option<usize> {
+        let folded = fold(e);
+        if let Some(i) = self.keys.iter().position(|k| *k == folded) {
+            return Some(i);
+        }
+        let batch = batch_compile(&folded, self.slot)?;
+        if depth(&batch) > MAX_BATCH_DEPTH {
+            return None;
+        }
+        self.keys.push(folded);
+        self.bufs.push(batch);
+        Some(self.bufs.len() - 1)
+    }
+
+    /// Walk a statement block under the cut mask `mask` (`None` at the top
+    /// level), flattening nested `if`s into mask conjunctions.
+    fn block(&mut self, stmts: &[CStmt], mask: Option<&CExpr>) -> Option<()> {
+        for s in stmts {
+            match s {
+                CStmt::Fill { expr, weight } => {
+                    let expr = self.intern(expr)?;
+                    let weight = match weight {
+                        Some(w) => Some(self.intern(w)?),
+                        None => None,
+                    };
+                    let mask = match mask {
+                        Some(m) => Some(self.intern(m)?),
+                        None => None,
+                    };
+                    self.fills.push(FillSite {
+                        mask,
+                        expr,
+                        weight,
+                    });
+                }
+                CStmt::If { cond, then, els } => {
+                    // Truthiness matches the scalar closure: a branch is
+                    // taken when `cond != 0.0` — NaN conditions select the
+                    // then-branch on both paths, since `NaN != 0.0` holds.
+                    self.block(then, Some(&conjoin(mask, cond)))?;
+                    if !els.is_empty() {
+                        let negated = CExpr::Not(Box::new(cond.clone()));
+                        self.block(els, Some(&conjoin(mask, &negated)))?;
+                    }
+                }
+                // `try_fuse` admits only Fill and If inside a fused body;
+                // anything else keeps the scalar loop.
+                _ => return None,
+            }
+        }
+        Some(())
+    }
+}
+
+/// The mask of a nested cut: the enclosing mask AND this condition.
+fn conjoin(mask: Option<&CExpr>, cond: &CExpr) -> CExpr {
+    match mask {
+        Some(m) => CExpr::And(Box::new(m.clone()), Box::new(cond.clone())),
+        None => cond.clone(),
+    }
 }
 
 fn batch_compile(e: &CExpr, slot: usize) -> Option<BExpr> {
@@ -678,52 +807,80 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
     }
 }
 
-/// Run the chunked kernel for items `[k_lo, k_hi)`: evaluate value (and
-/// weight) buffers one chunk at a time, then accumulate with a branch-free
-/// select chain into a scratch histogram (`n_bins` bins + an underflow and
-/// an overflow slot). The running moments use one sequential accumulator
-/// across the whole range, so bins **and** moments are bit-identical to the
-/// scalar fused loop; NaN fills are skipped by masking instead of
-/// branching, matching `H1::fill_w`.
-fn run_chunked(ck: &ChunkedFill, cols: &[&[f32]], k_lo: usize, k_hi: usize, hist: &mut H1) {
+/// Run the chunked kernel for items `[k_lo, k_hi)`: evaluate every buffer
+/// of the shared expression table one chunk at a time, then accumulate all
+/// fill sites with a branch-free select chain into a scratch histogram
+/// (`n_bins` bins + an underflow and an overflow slot).
+///
+/// Bit-identity with the scalar fused loop holds by construction:
+///   * accumulation is item-major, fill-site-minor — exactly the statement
+///     order of the scalar loop — and the running moments use one
+///     sequential accumulator across the whole range;
+///   * a masked-out (or NaN, matching `H1::fill_w`) fill contributes
+///     `+0.0` with its value selected to `0.0`, a bit-exact no-op on every
+///     accumulator this kernel can produce: accumulators start at `+0.0`
+///     and can never reach `-0.0` (the only value `+0.0` would perturb),
+///     so the mask replaces the scalar loop's branch without changing a
+///     single bit.
+fn run_chunked(ck: &ChunkedBody, cols: &[&[f32]], k_lo: usize, k_hi: usize, hist: &mut H1) {
     let n_bins = hist.n_bins();
     let lo = hist.lo;
     let width = hist.hi - hist.lo;
     let mut scratch = vec![0.0f64; n_bins + 2];
     let (mut count, mut sum, mut sum2) = (0.0f64, 0.0f64, 0.0f64);
-    let mut xb = [0.0f64; CHUNK];
-    let mut wb = [0.0f64; CHUNK];
+    // One chunk-wide buffer per distinct batch expression; allocated once
+    // per kernel run (= once per morsel), reused across chunks.
+    let mut bufs: Vec<Vec<f64>> = ck.bufs.iter().map(|_| vec![0.0f64; CHUNK]).collect();
     let mut base = k_lo;
     while base < k_hi {
         let n = CHUNK.min(k_hi - base);
-        let xs = &mut xb[..n];
-        let ws = &mut wb[..n];
-        beval(&ck.expr, cols, base, xs);
-        match &ck.weight {
-            Some(w) => beval(w, cols, base, ws),
-            None => ws.fill(1.0),
+        for (e, buf) in ck.bufs.iter().zip(bufs.iter_mut()) {
+            beval(e, cols, base, &mut buf[..n]);
         }
+        // Resolve each fill site's buffers once per chunk; the item-major
+        // loop below then replays the scalar loop's operation sequence.
+        let views: Vec<(Option<&[f64]>, &[f64], Option<&[f64]>)> = ck
+            .fills
+            .iter()
+            .map(|f| {
+                (
+                    f.mask.map(|m| &bufs[m][..n]),
+                    &bufs[f.expr][..n],
+                    f.weight.map(|w| &bufs[w][..n]),
+                )
+            })
+            .collect();
         for i in 0..n {
-            let x = xs[i];
-            // NaN mask, as data-flow: H1 skips NaN fills entirely.
-            let ok = x == x;
-            let xv = if ok { x } else { 0.0 };
-            let wv = if ok { ws[i] } else { 0.0 };
-            // Same index arithmetic as H1::bin_index; the two selects
-            // compile to cmovs, not branches.
-            let t = (xv - lo) / width * n_bins as f64;
-            let bi = t as usize; // saturating: t >= 0 here when xv >= lo
-            let idx = if xv < lo {
-                n_bins
-            } else if bi < n_bins {
-                bi
-            } else {
-                n_bins + 1
-            };
-            scratch[idx] += wv;
-            count += wv;
-            sum += wv * xv;
-            sum2 += wv * xv * xv;
+            for &(mask, xs, ws) in &views {
+                let live = match mask {
+                    Some(m) => m[i] != 0.0,
+                    None => true,
+                };
+                let x = xs[i];
+                // Cut mask and NaN-skip as data flow, not branches.
+                let ok = live && !x.is_nan();
+                let xv = if ok { x } else { 0.0 };
+                let w = match ws {
+                    Some(wb) => wb[i],
+                    None => 1.0,
+                };
+                let wv = if ok { w } else { 0.0 };
+                // Same index arithmetic as H1::bin_index; the selects
+                // compile to cmovs, not branches.
+                let t = (xv - lo) / width * n_bins as f64;
+                let bi = t as usize; // saturating: t >= 0 here when xv >= lo
+                let idx = if xv < lo {
+                    n_bins
+                } else if bi < n_bins {
+                    bi
+                } else {
+                    n_bins + 1
+                };
+                scratch[idx] += wv;
+                count += wv;
+                sum += wv * xv;
+                sum2 += wv * xv * xv;
+            }
         }
         base += n;
     }
@@ -1116,10 +1273,11 @@ for event in dataset:
         assert!(a.total() > 0.0);
     }
 
-    /// A fused body with an `if` keeps the scalar loop (no chunked kernel)
-    /// and still runs correctly under morsel ranges.
+    /// A fused body with an `if` cut lowers to the masked chunked kernel,
+    /// is bit-identical to the scalar closure loop, and stays range-safe
+    /// under morsel windows.
     #[test]
-    fn fused_with_condition_is_not_chunked_but_range_safe() {
+    fn fused_with_condition_lowers_to_masked_chunked_kernel() {
         let cs = generate_drellyan(1200, 98);
         let src = "\
 for event in dataset:
@@ -1131,13 +1289,115 @@ for event in dataset:
         assert!(prog.fused.is_some());
         let cp = lower(&prog).unwrap();
         assert!(cp.is_fused());
-        assert!(!cp.has_chunked_kernel());
+        assert!(cp.has_chunked_kernel());
+        assert_eq!(
+            cp.chunked_info(),
+            Some(ChunkedInfo {
+                fills: 1,
+                masked_fills: 1,
+                buffers: 2, // the mask and the fill value
+            })
+        );
         let mut whole = H1::new(64, 0.0, 128.0);
         run(&cp, &cs, &mut whole).unwrap();
+        let mut scalar = H1::new(64, 0.0, 128.0);
+        run_scalar(&cp, &cs, &mut scalar).unwrap();
+        assert_eq!(whole, scalar);
+        assert!(whole.total() > 0.0);
+        // Adjacent windows tile exactly for bins/count (weight-1 fills);
+        // the per-window moment accumulators reassociate sum/sum2.
         let mut halves = H1::new(64, 0.0, 128.0);
         run_range(&cp, &cs.range(0, 600), &mut halves).unwrap();
         run_range(&cp, &cs.range(600, 1200), &mut halves).unwrap();
-        assert_eq!(whole, halves);
+        assert_eq!(whole.bins, halves.bins);
+        assert_eq!(whole.count, halves.count);
+    }
+
+    /// Nested cuts (mask conjunction), `else` branches (mask negation) and
+    /// NaN-producing fill values all agree with the scalar loop to the bit.
+    #[test]
+    fn nested_and_else_cuts_bit_identical() {
+        let cs = generate_drellyan(2500, 102);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 10:
+            if muon.eta > 0:
+                fill(muon.pt, 0.5)
+            else:
+                fill(sqrt(muon.eta))
+        else:
+            fill(muon.phi, muon.pt * 0.25)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(cp.has_chunked_kernel());
+        let info = cp.chunked_info().unwrap();
+        assert_eq!(info.fills, 3);
+        assert_eq!(info.masked_fills, 3);
+        let mut a = H1::new(48, -3.0, 96.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(48, -3.0, 96.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        // sqrt(eta) is NaN for half the muons; those fills are skipped on
+        // both paths, so the total is well below one entry per muon.
+        assert!(a.total() > 0.0);
+    }
+
+    /// Several `Fill`s run as one shared batch pass: a cut and a weight
+    /// common to two fills are interned once in the buffer table.
+    #[test]
+    fn multi_fill_body_shares_buffers() {
+        let cs = generate_drellyan(1500, 103);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 10:
+            fill(muon.pt, 0.5)
+            fill(muon.eta, 0.5)
+        fill(muon.phi)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(
+            cp.chunked_info(),
+            Some(ChunkedInfo {
+                fills: 3,
+                masked_fills: 2,
+                // mask, muon.pt, 0.5, muon.eta, muon.phi — the shared cut
+                // and the shared weight count once each.
+                buffers: 5,
+            })
+        );
+        let mut a = H1::new(64, -4.0, 128.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(64, -4.0, 128.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    /// The one remaining fused fallback: an expression tree deeper than
+    /// `MAX_BATCH_DEPTH` keeps the scalar closure loop (bounded kernel
+    /// stack) and still runs correctly.
+    #[test]
+    fn pathologically_deep_expression_falls_back_to_scalar_loop() {
+        let cs = generate_drellyan(300, 104);
+        let deep = format!(
+            "{}muon.pt{}",
+            "sqrt(".repeat(MAX_BATCH_DEPTH + 4),
+            ")".repeat(MAX_BATCH_DEPTH + 4)
+        );
+        let src =
+            format!("for event in dataset:\n    for muon in event.muons:\n        fill({deep})\n");
+        let prog = queryir::compile(&src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(cp.is_fused());
+        assert!(!cp.has_chunked_kernel());
+        let mut h = H1::new(16, 0.0, 4.0);
+        run(&cp, &cs, &mut h).unwrap();
+        assert!(h.total() > 0.0);
     }
 
     /// Adjacent event windows tile a partition exactly: concatenating

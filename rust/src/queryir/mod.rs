@@ -4,7 +4,13 @@
 //! them algorithmically into flat loops over offsets/content arrays;
 //! `flat` executes the transformed program with zero materialization, and
 //! `interp` executes the *original* program over materialized objects (the
-//! baseline the transformation is measured against in Figure 1).
+//! baseline the transformation is measured against in Figure 1). `lower`
+//! compiles the transformed program to native closures and — for fused
+//! shapes, cuts and multi-`fill` bodies included — chunked batch kernels.
+//!
+//! The language reference (grammar, builtins, cut/fill semantics) lives in
+//! `docs/QUERY_LANGUAGE.md`; the stage-by-stage pipeline with its defining
+//! files in `docs/ARCHITECTURE.md`.
 
 pub mod ast;
 pub mod flat;
@@ -16,7 +22,7 @@ pub mod tape;
 pub mod transform;
 
 pub use ast::Program;
-pub use lower::CompiledProgram;
+pub use lower::{ChunkedInfo, CompiledProgram, ParallelCfg};
 pub use parser::parse;
 pub use transform::{FlatProgram, Transformer};
 

@@ -19,13 +19,13 @@ use crate::hist::H1;
 pub enum Op {
     Const(f64),
     Slot(u16),
-    /// pop idx → push item_cols[col][idx]
+    /// pop idx → push `item_cols[col][idx]`
     LoadItem(u16),
     LoadEvent(u16),
     ListLen(u16),
-    /// pop j → push offsets[list][event] + j
+    /// pop j → push `offsets[list][event] + j`
     ListBase(u16),
-    /// push offsets[list].last()
+    /// push `offsets[list].last()`
     ListTotal(u16),
     Add,
     Sub,

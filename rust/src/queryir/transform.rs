@@ -27,11 +27,11 @@ pub enum CExpr {
     Const(f64),
     /// Read a local f64 slot.
     Slot(usize),
-    /// content_cols[col][idx] — an exploded attribute load.
+    /// `content_cols[col][idx]` — an exploded attribute load.
     LoadItem { col: usize, idx: Box<CExpr> },
-    /// event_cols[col][event_index] — an event-level leaf load.
+    /// `event_cols[col][event_index]` — an event-level leaf load.
     LoadEvent { col: usize },
-    /// offsets[list][i+1] - offsets[list][i] (clamped per-event length).
+    /// `offsets[list][i+1] - offsets[list][i]` (clamped per-event length).
     ListLen { list: usize },
     Bin(BinOp, Box<CExpr>, Box<CExpr>),
     Cmp(CmpOp, Box<CExpr>, Box<CExpr>),
@@ -53,7 +53,7 @@ pub enum CStmt {
         hi: CExpr,
         body: Vec<CStmt>,
     },
-    /// for slot in offsets[list][i] .. offsets[list][i+1]
+    /// `for slot in offsets[list][i] .. offsets[list][i+1]`
     LoopList {
         list: usize,
         slot: usize,

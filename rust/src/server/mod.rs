@@ -11,7 +11,9 @@
 //!
 //! Source queries (`src`) are validated — parsed and transformed against the
 //! dataset schema — *before* any subtask is advertised, so malformed physics
-//! code is a one-line error to the client, never a stuck worker.
+//! code is a one-line error to the client, never a stuck worker. The
+//! accepted query form (grammar, builtins, cut and `fill` semantics, worked
+//! examples) is documented in `docs/QUERY_LANGUAGE.md`.
 //!
 //! Every final result lands in a normalized result cache keyed by the
 //! canonical tape fingerprint + dataset version + binning

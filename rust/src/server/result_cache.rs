@@ -29,8 +29,11 @@ use std::sync::Mutex;
 /// A cached final result (the merged histogram and its provenance counts).
 #[derive(Clone, Debug)]
 pub struct CachedResult {
+    /// The fully merged query histogram, exactly as it was served.
     pub hist: H1,
+    /// Events processed to produce it (for the client's `events` field).
     pub events: u64,
+    /// Partitions merged to produce it.
     pub partitions: usize,
 }
 
@@ -54,12 +57,15 @@ struct Inner {
     evictions: u64,
 }
 
+/// Bounded, thread-safe result cache with GreedyDual (cost-weighted)
+/// eviction. See the module doc for the keying and eviction story.
 pub struct ResultCache {
     inner: Mutex<Inner>,
     capacity: usize,
 }
 
 impl ResultCache {
+    /// A cache holding at most `capacity` results (minimum 1).
     pub fn new(capacity: usize) -> ResultCache {
         ResultCache {
             inner: Mutex::new(Inner {
@@ -74,6 +80,8 @@ impl ResultCache {
         }
     }
 
+    /// Look up a canonical query key; a hit refreshes the entry's
+    /// GreedyDual priority and LRU stamp.
     pub fn get(&self, key: &str) -> Option<CachedResult> {
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
@@ -152,6 +160,7 @@ impl ResultCache {
         self.inner.lock().unwrap().evictions
     }
 
+    /// Entries currently cached.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }

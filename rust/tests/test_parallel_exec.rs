@@ -7,15 +7,20 @@
 //!     sequential `lower::run` — the `sum`/`sum2` moments are merged
 //!     across morsel boundaries and may reassociate, so they are checked
 //!     to a relative tolerance instead;
-//!   * the chunked batch kernel is **fully** bit-identical to the
-//!     closure-graph fused loop, moments included, because it preserves
-//!     element order and per-element arithmetic.
+//!   * the chunked batch kernel — including **masked** (cut) bodies and
+//!     **multi-Fill** bodies, which lower to one shared mask-and-fill
+//!     batch pass — is **fully** bit-identical to the closure-graph fused
+//!     loop, moments included, because it preserves element order and
+//!     per-element arithmetic (randomized cut/fill program shapes below,
+//!     NaN-producing expressions and weighted fills included);
+//!   * both kernel families compose with morsel parallelism across the
+//!     grid morsel ∈ {1, 7, 1024, whole} × threads ∈ {1, 2, 8}.
 
 use hepq::datagen::{generate_drellyan, generate_ttbar};
 use hepq::hist::H1;
 use hepq::queryir::lower::{self, ParallelCfg};
 use hepq::queryir::{self, table3};
-use hepq::util::propkit::{check, Config};
+use hepq::util::propkit::{check, Config, Gen};
 
 /// Morsel merges reorder only the moment additions.
 fn assert_morsel_equiv(seq: &H1, par: &H1, what: &str) {
@@ -125,6 +130,148 @@ fn chunked_kernel_is_bit_identical_across_binnings() {
         let mut scalar = H1::new(n_bins, lo, hi);
         lower::run_scalar(&cp, &cs, &mut scalar).unwrap();
         assert_eq!(chunked, scalar, "binning {n_bins}x[{lo},{hi})");
+    }
+}
+
+/// Build a random cut/fill fused body: 1–3 fills under randomly chosen
+/// cut structures (single cut, nested cuts, if/else), with values that can
+/// go NaN (`sqrt`/`log` of a negative eta) and optional weights. Every
+/// generated shape must lower to the masked chunked kernel.
+fn random_cut_program(g: &mut Gen) -> String {
+    fn pick_fill(g: &mut Gen) -> String {
+        const VALUES: [&str; 5] = [
+            "muon.pt",
+            "sqrt(muon.eta)",
+            "log(muon.eta)",
+            "muon.pt * 0.5 + muon.eta",
+            "sqrt(muon.pt * muon.pt + muon.phi * muon.phi)",
+        ];
+        const WEIGHTS: [&str; 3] = ["", ", 0.5", ", muon.pt * 0.25"];
+        let v = VALUES[g.usize_to(VALUES.len() - 1)];
+        let w = WEIGHTS[g.usize_to(WEIGHTS.len() - 1)];
+        format!("fill({v}{w})")
+    }
+    fn pick_cond(g: &mut Gen) -> String {
+        let t = g.usize_to(40) as f64 - 2.0;
+        match g.usize_to(3) {
+            0 => format!("muon.pt > {t}"),
+            1 => format!("muon.eta < {t} and muon.pt > 5"),
+            2 => format!("not muon.phi > {t}"),
+            _ => format!("muon.pt > {t} or muon.eta > 0"),
+        }
+    }
+    let body = match g.usize_to(3) {
+        // One cut guarding two fills (shared mask).
+        0 => format!(
+            "        if {}:\n            {}\n            {}\n",
+            pick_cond(g),
+            pick_fill(g),
+            pick_fill(g)
+        ),
+        // Nested cuts (mask conjunction) plus a sibling fill.
+        1 => format!(
+            "        if {}:\n            if {}:\n                {}\n            {}\n",
+            pick_cond(g),
+            pick_cond(g),
+            pick_fill(g),
+            pick_fill(g)
+        ),
+        // If/else (mask negation).
+        2 => format!(
+            "        if {}:\n            {}\n        else:\n            {}\n",
+            pick_cond(g),
+            pick_fill(g),
+            pick_fill(g)
+        ),
+        // Top-level multi-fill with one cut fill.
+        _ => format!(
+            "        {}\n        if {}:\n            {}\n",
+            pick_fill(g),
+            pick_cond(g),
+            pick_fill(g)
+        ),
+    };
+    format!("for event in dataset:\n    for muon in event.muons:\n{body}")
+}
+
+/// Randomized cut/multi-fill bodies: every generated shape lowers to the
+/// chunked kernel and agrees with the scalar closure loop to the last bit
+/// (bins, under/overflow, count, sum, sum2) over random samples/binnings.
+#[test]
+fn prop_random_cut_bodies_chunked_bit_identical() {
+    let cfg = Config {
+        cases: 24,
+        ..Config::default()
+    };
+    check(
+        "cut-bodies-chunked-bit-identical",
+        &cfg,
+        |g| {
+            (
+                random_cut_program(g),
+                1 + g.usize_to(2_500),
+                g.rng.next_u64(),
+            )
+        },
+        |(src, n, seed)| {
+            let cs = generate_drellyan(*n, *seed);
+            let prog = queryir::compile(src, &cs.schema)?;
+            let cp = lower::lower(&prog)?;
+            if !cp.has_chunked_kernel() {
+                return Err(format!("did not lower chunked:\n{src}"));
+            }
+            for (n_bins, lo, hi) in [(64, -8.0, 120.0), (9, 3.0, 40.0)] {
+                let mut chunked = H1::new(n_bins, lo, hi);
+                lower::run(&cp, &cs, &mut chunked)?;
+                let mut scalar = H1::new(n_bins, lo, hi);
+                lower::run_scalar(&cp, &cs, &mut scalar)?;
+                if chunked != scalar {
+                    return Err(format!(
+                        "chunked != scalar on {n_bins}x[{lo},{hi}) for:\n{src}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multi-Fill + cut bodies across the full morsel grid: the masked chunked
+/// kernel composes with morsel parallelism exactly like the Fill-only one.
+/// Weights are dyadic (1 and 0.5), so bins and count are exact under any
+/// merge association.
+#[test]
+fn multi_fill_morsel_grid_matches_sequential() {
+    const N: usize = 5_000;
+    let cs = generate_drellyan(N, 74);
+    let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 20:
+            fill(muon.pt)
+        fill(muon.eta, 0.5)
+";
+    let prog = queryir::compile(src, &cs.schema).unwrap();
+    let cp = lower::lower(&prog).unwrap();
+    assert!(cp.has_chunked_kernel(), "cut + two-fill body should lower chunked");
+    let info = cp.chunked_info().unwrap();
+    assert_eq!((info.fills, info.masked_fills), (2, 1));
+    let mut seq = H1::new(64, -4.0, 128.0);
+    lower::run(&cp, &cs, &mut seq).unwrap();
+    for morsel_events in [1usize, 7, 1024, N] {
+        for threads in [1usize, 2, 8] {
+            let mut par = H1::new(64, -4.0, 128.0);
+            let cfg = ParallelCfg {
+                threads,
+                morsel_events,
+            };
+            lower::run_parallel(&cp, &cs, &mut par, cfg).unwrap();
+            assert_morsel_equiv(
+                &seq,
+                &par,
+                &format!("two_fill morsel={morsel_events} threads={threads}"),
+            );
+        }
     }
 }
 
