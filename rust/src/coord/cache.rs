@@ -3,10 +3,16 @@
 //! "An input dataset in memory on one machine is only useful if subsequent
 //! jobs requiring that input are sent to the same machine" — this cache is
 //! the thing the Figure-2 scheduler tries to hit.
+//!
+//! Entries are whole [`PartitionData`] values (columns + zone map + the
+//! dataset version they belong to). Lookups are **version-checked**: after
+//! a dataset is re-registered under the same name, a cached partition of
+//! the old version counts as a miss and is dropped — serving stale bytes
+//! would silently diverge from the catalog, and would break the coherence
+//! between a partition's data and the zone map used to skip parts of it.
 
-use crate::columnar::arrays::ColumnSet;
+use crate::coord::cluster::PartitionData;
 use std::collections::HashMap;
-use std::sync::Arc;
 
 /// (dataset, partition index) — cache key.
 pub type PartKey = (String, usize);
@@ -14,7 +20,7 @@ pub type PartKey = (String, usize);
 pub struct PartitionCache {
     budget_bytes: usize,
     used_bytes: usize,
-    entries: HashMap<PartKey, (Arc<ColumnSet>, u64)>,
+    entries: HashMap<PartKey, (PartitionData, u64)>,
     clock: u64,
     pub hits: u64,
     pub misses: u64,
@@ -32,34 +38,43 @@ impl PartitionCache {
         }
     }
 
+    /// Is the key resident (any version)? Used only as a scheduling
+    /// preference hint — real reads go through the version-checked `get`.
     pub fn contains(&self, key: &PartKey) -> bool {
         self.entries.contains_key(key)
     }
 
-    pub fn get(&mut self, key: &PartKey) -> Option<Arc<ColumnSet>> {
+    /// Version-checked lookup: a hit must match `version` exactly; a
+    /// stale-version entry is evicted and counted as a miss.
+    pub fn get(&mut self, key: &PartKey, version: u64) -> Option<PartitionData> {
         self.clock += 1;
         let clock = self.clock;
-        match self.entries.get_mut(key) {
-            Some((cs, stamp)) => {
+        let stale = match self.entries.get_mut(key) {
+            Some((p, stamp)) if p.version == version => {
                 *stamp = clock;
                 self.hits += 1;
-                Some(cs.clone())
+                return Some(p.clone());
             }
-            None => {
-                self.misses += 1;
-                None
+            Some(_) => true,
+            None => false,
+        };
+        if stale {
+            if let Some((old, _)) = self.entries.remove(key) {
+                self.used_bytes -= old.cs.byte_size();
             }
         }
+        self.misses += 1;
+        None
     }
 
     /// Insert a partition, evicting least-recently-used entries to fit.
     /// A partition larger than the whole budget is admitted alone (the
     /// cache then holds just it — matches how a worker must hold the
     /// partition it is actively processing anyway).
-    pub fn put(&mut self, key: PartKey, cs: Arc<ColumnSet>) {
-        let size = cs.byte_size();
+    pub fn put(&mut self, key: PartKey, part: PartitionData) {
+        let size = part.cs.byte_size();
         if let Some((old, _)) = self.entries.remove(&key) {
-            self.used_bytes -= old.byte_size();
+            self.used_bytes -= old.cs.byte_size();
         }
         while self.used_bytes + size > self.budget_bytes && !self.entries.is_empty() {
             // Evict LRU.
@@ -70,11 +85,11 @@ impl PartitionCache {
                 .map(|(k, _)| k.clone())
                 .unwrap();
             let (evicted, _) = self.entries.remove(&lru).unwrap();
-            self.used_bytes -= evicted.byte_size();
+            self.used_bytes -= evicted.cs.byte_size();
         }
         self.clock += 1;
         self.used_bytes += size;
-        self.entries.insert(key, (cs, self.clock));
+        self.entries.insert(key, (part, self.clock));
     }
 
     pub fn used_bytes(&self) -> usize {
@@ -108,33 +123,51 @@ impl PartitionCache {
 mod tests {
     use super::*;
     use crate::datagen::generate_drellyan;
+    use crate::index::ZoneMap;
+    use std::sync::Arc;
 
-    fn part(n: usize, seed: u64) -> Arc<ColumnSet> {
-        Arc::new(generate_drellyan(n, seed))
+    fn part(n: usize, seed: u64, version: u64) -> PartitionData {
+        let cs = Arc::new(generate_drellyan(n, seed));
+        let zones = Arc::new(ZoneMap::build(&cs));
+        PartitionData { cs, zones, version }
     }
 
     #[test]
     fn hit_and_miss_accounting() {
         let mut c = PartitionCache::new(usize::MAX);
-        let p = part(100, 1);
-        assert!(c.get(&("dy".into(), 0)).is_none());
+        let p = part(100, 1, 1);
+        assert!(c.get(&("dy".into(), 0), 1).is_none());
         c.put(("dy".into(), 0), p);
-        assert!(c.get(&("dy".into(), 0)).is_some());
+        assert!(c.get(&("dy".into(), 0), 1).is_some());
         assert_eq!(c.hits, 1);
         assert_eq!(c.misses, 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
     }
 
+    /// Re-registration coherence: a cached partition of a stale version is
+    /// a miss and gets dropped, not served.
+    #[test]
+    fn stale_version_is_a_miss() {
+        let mut c = PartitionCache::new(usize::MAX);
+        c.put(("dy".into(), 0), part(100, 1, 1));
+        assert!(c.get(&("dy".into(), 0), 2).is_none());
+        assert_eq!(c.misses, 1);
+        assert!(!c.contains(&("dy".into(), 0)), "stale entry dropped");
+        assert_eq!(c.used_bytes(), 0);
+        c.put(("dy".into(), 0), part(100, 1, 2));
+        assert!(c.get(&("dy".into(), 0), 2).is_some());
+    }
+
     #[test]
     fn lru_eviction_under_budget() {
-        let p0 = part(500, 2);
-        let unit = p0.byte_size();
+        let p0 = part(500, 2, 1);
+        let unit = p0.cs.byte_size();
         let mut c = PartitionCache::new(unit * 2 + unit / 2); // fits 2
         c.put(("dy".into(), 0), p0);
-        c.put(("dy".into(), 1), part(500, 3));
+        c.put(("dy".into(), 1), part(500, 3, 1));
         // Touch partition 0 so 1 is LRU.
-        assert!(c.get(&("dy".into(), 0)).is_some());
-        c.put(("dy".into(), 2), part(500, 4));
+        assert!(c.get(&("dy".into(), 0), 1).is_some());
+        c.put(("dy".into(), 2), part(500, 4, 1));
         assert!(c.contains(&("dy".into(), 0)), "recently used survived");
         assert!(!c.contains(&("dy".into(), 1)), "LRU evicted");
         assert!(c.contains(&("dy".into(), 2)));
@@ -144,17 +177,17 @@ mod tests {
     #[test]
     fn reinsert_same_key_replaces() {
         let mut c = PartitionCache::new(usize::MAX);
-        c.put(("dy".into(), 0), part(100, 5));
+        c.put(("dy".into(), 0), part(100, 5, 1));
         let before = c.used_bytes();
-        c.put(("dy".into(), 0), part(100, 5));
+        c.put(("dy".into(), 0), part(100, 5, 1));
         assert_eq!(c.used_bytes(), before);
         assert_eq!(c.len(), 1);
     }
 
     #[test]
     fn oversized_partition_admitted_alone() {
-        let p = part(2000, 6);
-        let mut c = PartitionCache::new(p.byte_size() / 2);
+        let p = part(2000, 6, 1);
+        let mut c = PartitionCache::new(p.cs.byte_size() / 2);
         c.put(("dy".into(), 0), p);
         assert_eq!(c.len(), 1);
     }

@@ -2,6 +2,14 @@
 //! Figure 2): femto-zookeeper task board, worker-local LRU caches, the
 //! two-round pull scheduler and its baselines, femto-mongo partial-result
 //! store, and the in-process cluster harness that ties them together.
+//!
+//! Since the zone-map index subsystem (`crate::index`) landed, a query
+//! does **not** necessarily scan every partition: `Cluster::submit`
+//! evaluates the query's cut predicate against each partition's zone map
+//! and advertises subtasks only for partitions the statistics cannot prove
+//! empty, and workers skip (or unmask) individual 1024-item chunks inside
+//! the partitions they do scan. Both prunings are bit-identical to the
+//! full scan by construction.
 
 pub mod board;
 pub mod cache;
@@ -11,6 +19,8 @@ pub mod scheduler;
 
 pub use board::{Subtask, SubtaskId, TaskBoard};
 pub use cache::PartitionCache;
-pub use cluster::{Cluster, ClusterConfig, DatasetCatalog, QueryResult, WorkerStats};
+pub use cluster::{
+    Cluster, ClusterConfig, DatasetCatalog, PartitionData, QueryResult, WorkerStats,
+};
 pub use docstore::{DocStore, PartialDoc};
 pub use scheduler::Policy;

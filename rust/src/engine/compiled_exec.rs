@@ -13,15 +13,20 @@
 //! query-language program runs at compiled-loop speed. Cut-based and
 //! multi-`fill` bodies included: fused shapes lower to the chunked
 //! mask-and-fill batch kernel (`kernel_info` reports which path a source
-//! query takes). The whole pipeline is documented in
-//! `docs/ARCHITECTURE.md`; the accepted source language in
-//! `docs/QUERY_LANGUAGE.md`.
+//! query takes). Partitions are **not** necessarily scanned in full: when
+//! a zone map is supplied (`run_indexed`), chunks the query's cut provably
+//! rejects are skipped and provably-accepted chunks run unmasked, with
+//! process-wide counters (`zone_stats`) feeding the server's `stats` op.
+//! The whole pipeline is documented in `docs/ARCHITECTURE.md`; the
+//! accepted source language in `docs/QUERY_LANGUAGE.md`.
 
 use crate::columnar::arrays::ColumnSet;
 use crate::engine::query::{Query, QueryKind};
 use crate::hist::H1;
+use crate::index::ZoneMap;
 use crate::queryir::{self, lower};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// Query-language source for a built-in query kind over an arbitrary list.
@@ -94,6 +99,37 @@ pub fn source_for(kind: QueryKind, list: &str) -> String {
 pub struct CompiledTapeBackend {
     cache: Arc<RwLock<HashMap<String, Arc<lower::CompiledProgram>>>>,
     parallel: lower::ParallelCfg,
+    /// Zone-map chunk counters, shared by every clone of this backend (one
+    /// set per process, like the compile cache) — the server's `stats` op
+    /// reports them.
+    zone_counters: Arc<ZoneCounters>,
+}
+
+/// Process-wide chunk-skipping counters (see `lower::IndexedRun` for the
+/// per-run form these accumulate).
+#[derive(Default)]
+struct ZoneCounters {
+    chunks_skipped: AtomicU64,
+    chunks_take_all: AtomicU64,
+    chunks_scanned: AtomicU64,
+}
+
+impl ZoneCounters {
+    fn absorb(&self, rep: &lower::IndexedRun) {
+        let o = Ordering::Relaxed;
+        self.chunks_skipped.fetch_add(rep.chunks_skipped, o);
+        self.chunks_take_all.fetch_add(rep.chunks_take_all, o);
+        self.chunks_scanned.fetch_add(rep.chunks_scanned, o);
+    }
+
+    fn snapshot(&self) -> lower::IndexedRun {
+        let o = Ordering::Relaxed;
+        lower::IndexedRun {
+            chunks_skipped: self.chunks_skipped.load(o),
+            chunks_take_all: self.chunks_take_all.load(o),
+            chunks_scanned: self.chunks_scanned.load(o),
+        }
+    }
 }
 
 impl CompiledTapeBackend {
@@ -115,16 +151,49 @@ impl CompiledTapeBackend {
 
     /// Run a query (kind- or source-based) over one partition.
     pub fn run(&self, query: &Query, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+        self.run_indexed(query, cs, None, hist).map(|_| ())
+    }
+
+    /// `run` with a zone map: chunks the query's cut provably rejects are
+    /// skipped, provably-accepted chunks run unmasked. Bit-identical to
+    /// the unindexed run; the report also accumulates into the shared
+    /// process-wide counters (`zone_stats`).
+    pub fn run_indexed(
+        &self,
+        query: &Query,
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hist: &mut H1,
+    ) -> Result<lower::IndexedRun, String> {
         match &query.source {
-            Some(src) => self.run_source(src, cs, hist),
-            None => self.run_source(&source_for(query.kind, &query.list), cs, hist),
+            Some(src) => self.run_source_indexed(src, cs, zm, hist),
+            None => self.run_source_indexed(&source_for(query.kind, &query.list), cs, zm, hist),
         }
     }
 
     /// Run query-language source over one partition, compiling on first use.
     pub fn run_source(&self, src: &str, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+        self.run_source_indexed(src, cs, None, hist).map(|_| ())
+    }
+
+    /// `run_source` with a zone map (see `run_indexed`).
+    pub fn run_source_indexed(
+        &self,
+        src: &str,
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hist: &mut H1,
+    ) -> Result<lower::IndexedRun, String> {
         let prog = self.program_for(src, cs)?;
-        lower::run_parallel(&prog, cs, hist, self.parallel)
+        let rep = lower::run_parallel_indexed(&prog, cs, zm, hist, self.parallel)?;
+        self.zone_counters.absorb(&rep);
+        Ok(rep)
+    }
+
+    /// Chunk-skipping counters accumulated by every clone of this backend
+    /// since process start.
+    pub fn zone_stats(&self) -> lower::IndexedRun {
+        self.zone_counters.snapshot()
     }
 
     /// Number of distinct programs compiled so far (observability/tests).

@@ -6,6 +6,8 @@ use crate::engine::compiled_exec::CompiledTapeBackend;
 use crate::engine::query::Query;
 use crate::engine::{columnar_exec, object_baseline};
 use crate::hist::H1;
+use crate::index::ZoneMap;
+use crate::queryir::lower::IndexedRun;
 
 #[cfg(feature = "pjrt")]
 pub use pjrt_backend::PjrtBackend;
@@ -109,6 +111,33 @@ impl Backend {
             Backend::FrameworkSim => "framework-sim",
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// `run` with a partition zone map: the compiled-tape backend skips
+    /// chunks the query's cut provably rejects (bit-identical results, see
+    /// `queryir::lower::run_parallel_indexed`); every other backend
+    /// ignores the map and scans. Cluster workers call this so chunk
+    /// skipping engages wherever partitions carry zone maps.
+    pub fn run_indexed(
+        &self,
+        query: &Query,
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hist: &mut H1,
+    ) -> Result<IndexedRun, String> {
+        match self {
+            Backend::CompiledTape(ct) => ct.run_indexed(query, cs, zm, hist),
+            other => other.run(query, cs, hist).map(|_| IndexedRun::default()),
+        }
+    }
+
+    /// Chunk-skipping counters, when this backend keeps them
+    /// (compiled-tape only; shared across all clones).
+    pub fn zone_counters(&self) -> Option<IndexedRun> {
+        match self {
+            Backend::CompiledTape(ct) => Some(ct.zone_stats()),
+            _ => None,
         }
     }
 

@@ -18,6 +18,7 @@
 
 use crate::columnar::schema::{PrimType, Ty};
 use crate::format::compress::Codec;
+use crate::index::ZoneMap;
 use crate::util::json::Json;
 
 pub const MAGIC: &[u8; 8] = b"FROOT1\0\0";
@@ -66,6 +67,11 @@ pub struct Header {
     pub n_events: u64,
     pub codec: Codec,
     pub branches: Vec<BranchInfo>,
+    /// Zone map of the whole file (per-column min/max/NaN statistics at
+    /// file and 1024-item-chunk granularity), written by every writer
+    /// since the index subsystem landed. `None` for files from older
+    /// writers — readers must treat that as "no statistics, scan".
+    pub zones: Option<ZoneMap>,
 }
 
 impl Header {
@@ -74,7 +80,7 @@ impl Header {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("version", Json::num(1.0)),
             ("schema", self.schema.to_json()),
             ("n_events", Json::num(self.n_events as f64)),
@@ -115,7 +121,12 @@ impl Header {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        let zones_json = self.zones.as_ref().map(|z| z.to_json());
+        if let Some(z) = zones_json {
+            pairs.push(("zonemap", z));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Header, String> {
@@ -150,11 +161,16 @@ impl Header {
             }
             branches.push(BranchInfo { name, kind, baskets });
         }
+        let zones = match j.get("zonemap") {
+            Some(z) => Some(ZoneMap::from_json(z)?),
+            None => None,
+        };
         Ok(Header {
             schema,
             n_events,
             codec,
             branches,
+            zones,
         })
     }
 }
@@ -178,11 +194,42 @@ mod tests {
                     BasketInfo { pos: 116, comp_size: 80, raw_size: 92, items: 23 },
                 ],
             }],
+            zones: None,
         };
         let j = h.to_json();
         let back = Header::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, h);
         assert_eq!(back.branch("muons.pt").unwrap().total_items(), 123);
         assert_eq!(back.branch("muons.pt").unwrap().total_raw_bytes(), 492);
+        assert!(back.zones.is_none(), "absent zonemap reads as None");
+    }
+
+    #[test]
+    fn header_json_roundtrip_with_zone_map() {
+        use crate::columnar::arrays::{Array, ColumnSet};
+        let mut cs = ColumnSet::empty(muon_event_schema());
+        cs.n_events = 1;
+        cs.offsets.insert("muons".into(), vec![0, 2]);
+        cs.leaves
+            .insert("muons.pt".into(), Array::F32(vec![50.0, 30.0]));
+        cs.leaves
+            .insert("muons.eta".into(), Array::F32(vec![0.1, f32::NAN]));
+        cs.leaves
+            .insert("muons.phi".into(), Array::F32(vec![0.0, 1.0]));
+        cs.leaves
+            .insert("muons.charge".into(), Array::I32(vec![1, -1]));
+        cs.leaves.insert("met".into(), Array::F32(vec![12.0]));
+        let h = Header {
+            schema: muon_event_schema(),
+            n_events: 1,
+            codec: Codec::None,
+            branches: vec![],
+            zones: Some(ZoneMap::build(&cs)),
+        };
+        let back = Header::from_json(&Json::parse(&h.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, h);
+        let z = back.zones.unwrap();
+        assert_eq!(z.column("muons.pt").unwrap().whole.max, 50.0);
+        assert!(z.column("muons.eta").unwrap().whole.has_nan);
     }
 }

@@ -56,6 +56,14 @@ impl DatasetReader {
         self.bytes_read.load(Ordering::Relaxed)
     }
 
+    /// The file's zone map (per-column min/max/NaN statistics), when the
+    /// writer embedded one — `hepq query` feeds this to the indexed
+    /// execution path so cut queries skip chunks without any registration
+    /// step. `None` for files written before the index subsystem.
+    pub fn zone_map(&self) -> Option<&crate::index::ZoneMap> {
+        self.header.zones.as_ref()
+    }
+
     pub fn reset_bytes_read(&self) {
         self.bytes_read.store(0, Ordering::Relaxed);
     }
@@ -255,6 +263,21 @@ mod tests {
         write_dataset(&path, &cs, WriteOptions::default()).unwrap();
         let mut r = DatasetReader::open(&path).unwrap();
         assert!(r.read_selective(&["muons.nope"]).is_err());
+    }
+
+    #[test]
+    fn zone_map_persists_in_header() {
+        let cs = sample_columns(1500, 7);
+        let path = tmpfile("zones.froot");
+        write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+        let r = DatasetReader::open(&path).unwrap();
+        let zm = r.zone_map().expect("writer embeds a zone map");
+        // The persisted map is exactly what a fresh build produces.
+        assert_eq!(*zm, crate::index::ZoneMap::build(&cs));
+        let pt = zm.column("muons.pt").unwrap();
+        assert!(pt.whole.count > 1024, "multi-chunk column");
+        assert!(pt.chunks.len() > 1);
+        assert!(pt.whole.min >= 1.0 && pt.whole.max <= 100.0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use crate::columnar::arrays::{Array, ColumnSet};
 use crate::format::compress::Codec;
 use crate::format::layout::{BasketInfo, BranchInfo, BranchKind, Header, MAGIC};
+use crate::index::ZoneMap;
 use std::fs::File;
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;
@@ -57,6 +58,9 @@ pub fn write_dataset(path: &Path, cs: &ColumnSet, opts: WriteOptions) -> Result<
         n_events: cs.n_events as u64,
         codec: opts.codec,
         branches,
+        // One statistics pass at write time buys every later query the
+        // right to skip chunks this file's data can prove empty.
+        zones: Some(ZoneMap::build(cs)),
     };
     let header_pos = f.stream_position().map_err(|e| e.to_string())?;
     let header_bytes = header.to_json().to_string().into_bytes();

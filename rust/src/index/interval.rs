@@ -1,0 +1,494 @@
+//! Conservative interval arithmetic over column statistics — the value
+//! domain of zone-map predicate evaluation.
+//!
+//! An [`Interval`] over-approximates the set of values an expression can
+//! take on the items of one zone (a partition or a 1024-item chunk): a real
+//! range `[lo, hi]` for the non-NaN values plus a `nan` flag for whether NaN
+//! is possible. `lo > hi` encodes "no non-NaN value occurs" (an empty zone,
+//! or a value that is always NaN, e.g. `sqrt` of an all-negative column).
+//!
+//! Every operation here must be an **over-approximation**: the result
+//! interval contains every value the runtime kernel could produce (the
+//! `nan` flag may be pessimistic, the range may be wider than reality, but
+//! never narrower). Anything not modelled precisely collapses to
+//! [`Interval::TOP`]. That is what makes the three-valued comparisons
+//! ([`Tri`]) sound: `Tri::True`/`Tri::False` are proofs about *every* item
+//! of the zone, which is exactly what partition/chunk skipping needs.
+//!
+//! NaN follows IEEE and the kernels in `queryir::lower`: NaN compares false
+//! under `<, <=, >, >=, ==` and true under `!=`, and a NaN *condition* is
+//! truthy (the scalar loop branches on `cond != 0.0`).
+
+/// Three-valued logic for predicate results over a zone: provably true for
+/// every item, provably false for every item, or undecidable from the
+/// statistics alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tri {
+    /// The predicate holds for every item of the zone.
+    True,
+    /// The predicate fails for every item of the zone.
+    False,
+    /// The statistics cannot decide; the zone must be scanned.
+    Unknown,
+}
+
+impl Tri {
+    /// Build from "can it be true / can it be false" evidence. A vacuous
+    /// zone (neither possible) reads as `False` — nothing fires there.
+    pub fn from_possible(possible_true: bool, possible_false: bool) -> Tri {
+        match (possible_true, possible_false) {
+            (true, false) => Tri::True,
+            (false, _) => Tri::False,
+            (true, true) => Tri::Unknown,
+        }
+    }
+
+    /// Kleene conjunction (matches the kernel's `a != 0 && b != 0`).
+    pub fn and(self, other: Tri) -> Tri {
+        match (self, other) {
+            (Tri::False, _) | (_, Tri::False) => Tri::False,
+            (Tri::True, Tri::True) => Tri::True,
+            _ => Tri::Unknown,
+        }
+    }
+
+    /// Kleene disjunction.
+    pub fn or(self, other: Tri) -> Tri {
+        match (self, other) {
+            (Tri::True, _) | (_, Tri::True) => Tri::True,
+            (Tri::False, Tri::False) => Tri::False,
+            _ => Tri::Unknown,
+        }
+    }
+
+    /// Negation (matches the kernel's `x == 0.0`; NaN is truthy on both
+    /// sides, so the flip is exact).
+    pub fn not(self) -> Tri {
+        match self {
+            Tri::True => Tri::False,
+            Tri::False => Tri::True,
+            Tri::Unknown => Tri::Unknown,
+        }
+    }
+}
+
+/// Over-approximation of an expression's values over one zone: all non-NaN
+/// values lie in `[lo, hi]`, and `nan` says whether NaN can occur.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+    pub nan: bool,
+}
+
+impl Interval {
+    /// The uninformative interval: any value, NaN included.
+    pub const TOP: Interval = Interval {
+        lo: f64::NEG_INFINITY,
+        hi: f64::INFINITY,
+        nan: true,
+    };
+
+    /// An interval with no values at all (an empty zone).
+    pub const EMPTY: Interval = Interval {
+        lo: f64::INFINITY,
+        hi: f64::NEG_INFINITY,
+        nan: false,
+    };
+
+    /// A single known value.
+    pub fn point(c: f64) -> Interval {
+        if c.is_nan() {
+            Interval::nan_only()
+        } else {
+            Interval {
+                lo: c,
+                hi: c,
+                nan: false,
+            }
+        }
+    }
+
+    /// "Always NaN": no real range, NaN possible.
+    pub fn nan_only() -> Interval {
+        Interval {
+            nan: true,
+            ..Interval::EMPTY
+        }
+    }
+
+    /// Guarded constructor: a NaN endpoint (e.g. `inf - inf` during
+    /// endpoint arithmetic) collapses to `TOP` so the result stays sound.
+    fn mk(lo: f64, hi: f64, nan: bool) -> Interval {
+        if lo.is_nan() || hi.is_nan() {
+            Interval::TOP
+        } else {
+            Interval { lo, hi, nan }
+        }
+    }
+
+    /// Does any non-NaN value occur?
+    pub fn has_values(&self) -> bool {
+        self.lo <= self.hi
+    }
+
+    fn contains_zero(&self) -> bool {
+        self.has_values() && self.lo <= 0.0 && self.hi >= 0.0
+    }
+
+    fn unbounded(&self) -> bool {
+        self.has_values() && (self.lo == f64::NEG_INFINITY || self.hi == f64::INFINITY)
+    }
+
+    /// The no-real-values result of an operation with an empty operand,
+    /// keeping the union of the NaN flags.
+    fn empty_with(nan: bool) -> Interval {
+        Interval {
+            nan,
+            ..Interval::EMPTY
+        }
+    }
+
+    pub fn neg(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        Interval::mk(-self.hi, -self.lo, self.nan)
+    }
+
+    pub fn add(self, o: Interval) -> Interval {
+        let nan = self.nan || o.nan;
+        if !self.has_values() || !o.has_values() {
+            return Interval::empty_with(nan);
+        }
+        // inf + -inf at runtime is NaN; flag it when both signs are live.
+        let nan = nan || (self.unbounded() && o.unbounded());
+        Interval::mk(self.lo + o.lo, self.hi + o.hi, nan)
+    }
+
+    pub fn sub(self, o: Interval) -> Interval {
+        self.add(o.neg())
+    }
+
+    pub fn mul(self, o: Interval) -> Interval {
+        let nan = self.nan || o.nan;
+        if !self.has_values() || !o.has_values() {
+            return Interval::empty_with(nan);
+        }
+        // 0 * inf is NaN at runtime even when no endpoint product is.
+        let nan = nan
+            || (self.contains_zero() && o.unbounded())
+            || (o.contains_zero() && self.unbounded());
+        let ps = [
+            self.lo * o.lo,
+            self.lo * o.hi,
+            self.hi * o.lo,
+            self.hi * o.hi,
+        ];
+        if ps.iter().any(|p| p.is_nan()) {
+            return Interval::TOP;
+        }
+        let lo = ps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Interval::mk(lo, hi, nan)
+    }
+
+    pub fn div(self, o: Interval) -> Interval {
+        let nan = self.nan || o.nan;
+        if !self.has_values() || !o.has_values() {
+            return Interval::empty_with(nan);
+        }
+        // A divisor range containing 0 can produce ±inf and NaN (0/0).
+        if o.contains_zero() {
+            return Interval::TOP;
+        }
+        let nan = nan || (self.unbounded() && o.unbounded());
+        let qs = [
+            self.lo / o.lo,
+            self.lo / o.hi,
+            self.hi / o.lo,
+            self.hi / o.hi,
+        ];
+        if qs.iter().any(|q| q.is_nan()) {
+            return Interval::TOP;
+        }
+        let lo = qs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = qs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Interval::mk(lo, hi, nan)
+    }
+
+    pub fn sqrt(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        if self.hi < 0.0 {
+            return Interval::nan_only();
+        }
+        Interval::mk(
+            self.lo.max(0.0).sqrt(),
+            self.hi.sqrt(),
+            self.nan || self.lo < 0.0,
+        )
+    }
+
+    pub fn ln(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        if self.hi < 0.0 {
+            return Interval::nan_only();
+        }
+        let lo = if self.lo <= 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            self.lo.ln()
+        };
+        Interval::mk(lo, self.hi.ln(), self.nan || self.lo < 0.0)
+    }
+
+    pub fn exp(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        Interval::mk(self.lo.exp(), self.hi.exp(), self.nan)
+    }
+
+    pub fn abs(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        let (lo, hi) = if self.lo >= 0.0 {
+            (self.lo, self.hi)
+        } else if self.hi <= 0.0 {
+            (-self.hi, -self.lo)
+        } else {
+            (0.0, (-self.lo).max(self.hi))
+        };
+        Interval::mk(lo, hi, self.nan)
+    }
+
+    /// `sin`/`cos`: bounded by `[-1, 1]`; NaN for infinite arguments.
+    pub fn sin_cos(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        Interval::mk(-1.0, 1.0, self.nan || self.unbounded())
+    }
+
+    pub fn sinh(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        Interval::mk(self.lo.sinh(), self.hi.sinh(), self.nan)
+    }
+
+    pub fn cosh(self) -> Interval {
+        if !self.has_values() {
+            return Interval::empty_with(self.nan);
+        }
+        let at_lo = self.lo.cosh();
+        let at_hi = self.hi.cosh();
+        let lo = if self.contains_zero() {
+            1.0
+        } else {
+            at_lo.min(at_hi)
+        };
+        Interval::mk(lo, at_lo.max(at_hi), self.nan)
+    }
+
+    /// Smallest interval containing both (used for the NaN-fallback cases
+    /// of `imin`/`imax`, where `f64::min(NaN, x) = x` widens the range).
+    fn hull(self, o: Interval) -> Interval {
+        Interval::mk(self.lo.min(o.lo), self.hi.max(o.hi), self.nan || o.nan)
+    }
+
+    /// `f64::min` semantics (a NaN operand yields the other operand).
+    pub fn imin(self, o: Interval) -> Interval {
+        if self.nan || o.nan {
+            return self.hull(o);
+        }
+        if !self.has_values() || !o.has_values() {
+            return Interval::empty_with(false);
+        }
+        Interval::mk(self.lo.min(o.lo), self.hi.min(o.hi), false)
+    }
+
+    /// `f64::max` semantics (a NaN operand yields the other operand).
+    pub fn imax(self, o: Interval) -> Interval {
+        if self.nan || o.nan {
+            return self.hull(o);
+        }
+        if !self.has_values() || !o.has_values() {
+            return Interval::empty_with(false);
+        }
+        Interval::mk(self.lo.max(o.lo), self.hi.max(o.hi), false)
+    }
+
+    /// Truthiness of a value from this interval under the kernel's rule
+    /// (`v != 0.0`; NaN is truthy).
+    pub fn truthy(self) -> Tri {
+        let nonzero_possible = self.has_values() && !(self.lo == 0.0 && self.hi == 0.0);
+        Tri::from_possible(self.nan || nonzero_possible, self.contains_zero())
+    }
+
+    pub fn lt(self, o: Interval) -> Tri {
+        let both = self.has_values() && o.has_values();
+        Tri::from_possible(
+            both && self.lo < o.hi,
+            self.nan || o.nan || (both && self.hi >= o.lo),
+        )
+    }
+
+    pub fn le(self, o: Interval) -> Tri {
+        let both = self.has_values() && o.has_values();
+        Tri::from_possible(
+            both && self.lo <= o.hi,
+            self.nan || o.nan || (both && self.hi > o.lo),
+        )
+    }
+
+    pub fn gt(self, o: Interval) -> Tri {
+        o.lt(self)
+    }
+
+    pub fn ge(self, o: Interval) -> Tri {
+        o.le(self)
+    }
+
+    pub fn eq(self, o: Interval) -> Tri {
+        let both = self.has_values() && o.has_values();
+        let single_pair = both && self.lo == self.hi && o.lo == o.hi && self.lo == o.lo;
+        Tri::from_possible(
+            both && self.lo <= o.hi && o.lo <= self.hi,
+            self.nan || o.nan || !single_pair,
+        )
+    }
+
+    pub fn ne(self, o: Interval) -> Tri {
+        let both = self.has_values() && o.has_values();
+        let single_pair = both && self.lo == self.hi && o.lo == o.hi && self.lo == o.lo;
+        Tri::from_possible(
+            self.nan || o.nan || (both && !single_pair),
+            both && self.lo <= o.hi && o.lo <= self.hi,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(lo: f64, hi: f64) -> Interval {
+        Interval { lo, hi, nan: false }
+    }
+
+    #[test]
+    fn comparisons_decide_disjoint_ranges() {
+        assert_eq!(iv(30.0, 50.0).gt(Interval::point(20.0)), Tri::True);
+        assert_eq!(iv(5.0, 10.0).gt(Interval::point(20.0)), Tri::False);
+        assert_eq!(iv(10.0, 30.0).gt(Interval::point(20.0)), Tri::Unknown);
+        assert_eq!(iv(10.0, 20.0).le(iv(20.0, 40.0)), Tri::Unknown);
+        assert_eq!(iv(10.0, 20.0).le(iv(21.0, 40.0)), Tri::True);
+        assert_eq!(iv(0.0, 1.0).lt(iv(-5.0, -1.0)), Tri::False);
+    }
+
+    #[test]
+    fn boundary_comparisons_are_exact() {
+        // hi == threshold: `> t` can still be false at the boundary value.
+        assert_eq!(iv(20.0, 30.0).gt(Interval::point(20.0)), Tri::Unknown);
+        assert_eq!(iv(20.0, 30.0).ge(Interval::point(20.0)), Tri::True);
+        assert_eq!(iv(20.0, 20.0).gt(Interval::point(20.0)), Tri::False);
+    }
+
+    #[test]
+    fn nan_blocks_always_true_but_not_always_false() {
+        let nanny = Interval {
+            nan: true,
+            ..iv(30.0, 50.0)
+        };
+        // NaN items fail the cut, so "every item passes" is unprovable...
+        assert_eq!(nanny.gt(Interval::point(20.0)), Tri::Unknown);
+        // ...but "every item fails" still holds when the range also fails.
+        let low_nan = Interval {
+            nan: true,
+            ..iv(1.0, 10.0)
+        };
+        assert_eq!(low_nan.gt(Interval::point(20.0)), Tri::False);
+        // != is true for NaN, so a NaN operand proves nothing for ==.
+        assert_eq!(nanny.ne(Interval::point(99.0)), Tri::True);
+    }
+
+    #[test]
+    fn nan_only_fails_every_ordered_comparison() {
+        let n = Interval::nan_only();
+        assert_eq!(n.gt(Interval::point(0.0)), Tri::False);
+        assert_eq!(n.le(Interval::point(0.0)), Tri::False);
+        assert_eq!(n.ne(Interval::point(0.0)), Tri::True);
+        assert_eq!(n.truthy(), Tri::True); // NaN conditions are truthy
+    }
+
+    #[test]
+    fn arithmetic_is_monotone_and_guarded() {
+        let a = iv(1.0, 2.0);
+        let b = iv(10.0, 20.0);
+        assert_eq!(a.add(b), iv(11.0, 22.0));
+        assert_eq!(b.sub(a), iv(8.0, 19.0));
+        assert_eq!(a.mul(b), iv(10.0, 40.0));
+        assert_eq!(b.div(a), iv(5.0, 20.0));
+        // Division by a range containing zero is undecidable.
+        assert_eq!(b.div(iv(-1.0, 1.0)), Interval::TOP);
+        // inf - inf collapses to TOP instead of lying.
+        let unb = iv(f64::NEG_INFINITY, f64::INFINITY);
+        assert!(unb.add(unb).nan);
+    }
+
+    #[test]
+    fn monotone_builtins() {
+        assert_eq!(iv(4.0, 9.0).sqrt(), iv(2.0, 3.0));
+        let part_neg = iv(-4.0, 9.0).sqrt();
+        assert!(part_neg.nan && part_neg.lo == 0.0 && part_neg.hi == 3.0);
+        assert_eq!(iv(-9.0, -4.0).sqrt(), Interval::nan_only());
+        assert_eq!(iv(-3.0, 2.0).abs(), iv(0.0, 3.0));
+        assert_eq!(iv(-3.0, -2.0).abs(), iv(2.0, 3.0));
+        let c = iv(-1.0, 2.0).cosh();
+        assert_eq!(c.lo, 1.0);
+        assert!((c.hi - 2.0f64.cosh()).abs() < 1e-12);
+        let s = iv(0.0, 100.0).sin_cos();
+        assert_eq!((s.lo, s.hi, s.nan), (-1.0, 1.0, false));
+    }
+
+    #[test]
+    fn min_max_with_nan_fall_back_to_hull() {
+        let a = Interval {
+            nan: true,
+            ..iv(0.0, 1.0)
+        };
+        let b = iv(10.0, 20.0);
+        // f64::min(NaN, x) = x, so the result may be anywhere in b too.
+        let m = a.imin(b);
+        assert!(m.lo <= 0.0 && m.hi >= 20.0 && m.nan);
+        let clean = iv(0.0, 1.0).imin(b);
+        assert_eq!(clean, iv(0.0, 1.0));
+        assert_eq!(iv(0.0, 1.0).imax(b), b);
+    }
+
+    #[test]
+    fn truthiness_matches_kernel_semantics() {
+        assert_eq!(iv(1.0, 5.0).truthy(), Tri::True);
+        assert_eq!(Interval::point(0.0).truthy(), Tri::False);
+        assert_eq!(iv(-1.0, 1.0).truthy(), Tri::Unknown);
+        assert_eq!(iv(-3.0, -1.0).truthy(), Tri::True);
+    }
+
+    #[test]
+    fn tri_logic_tables() {
+        use Tri::{False, True, Unknown};
+        assert_eq!(True.and(Unknown), Unknown);
+        assert_eq!(False.and(Unknown), False);
+        assert_eq!(True.or(Unknown), True);
+        assert_eq!(False.or(Unknown), Unknown);
+        assert_eq!(Unknown.not(), Unknown);
+        assert_eq!(True.not(), False);
+        assert_eq!(Tri::from_possible(false, false), False);
+    }
+}

@@ -1,0 +1,33 @@
+//! Statistics-based data skipping — the paper's *indexing* technique.
+//!
+//! The abstract names four ingredients of human-timescale queries:
+//! columnar data, caching, **indexing**, and code generation. This module
+//! is the indexing ingredient: zone maps (per-partition and per-1024-item
+//! chunk min/max/NaN/count statistics, [`zonemap`]) plus the conservative
+//! interval arithmetic ([`interval`]) that predicate analysis uses to
+//! decide, from statistics alone, whether a cut can possibly pass in a
+//! zone.
+//!
+//! How it threads through the stack:
+//!
+//!   * `format::write_dataset` embeds a [`ZoneMap`] in every femto-ROOT
+//!     header and `format::DatasetReader` hands it back;
+//!   * `coord::DatasetCatalog::register` builds one per partition;
+//!   * `queryir::predicate` extracts interval constraints from a validated
+//!     tape's `if` cuts and classifies every partition/chunk as
+//!     skip / take-all / scan;
+//!   * `queryir::lower::run_parallel_indexed` consumes the classification
+//!     (skip = no work at all, take-all = drop the cut mask and run the
+//!     unmasked batch kernel), `coord::Cluster::submit` advertises only
+//!     non-skipped partitions, and the server's `stats` op reports the
+//!     skip counters.
+//!
+//! Everything here is bit-exact by construction: a skipped zone is one
+//! where no fill can fire, so the indexed result equals the full scan to
+//! the last bit (asserted by `rust/tests/test_zonemap.rs`).
+
+pub mod interval;
+pub mod zonemap;
+
+pub use interval::{Interval, Tri};
+pub use zonemap::{ColumnStats, ColumnZones, ZoneMap, ZONE_CHUNK};

@@ -29,6 +29,8 @@
 //!     cache;
 //!   * [`columnar`] / [`format`] — exploded arrays and the femto-ROOT
 //!     on-disk format;
+//!   * [`index`] — zone maps (min/max/NaN statistics) for predicate
+//!     pushdown and partition/chunk skipping;
 //!   * [`hist`] — the `H1` result histogram and its merge semantics.
 
 pub mod columnar;
@@ -37,6 +39,7 @@ pub mod datagen;
 pub mod format;
 pub mod engine;
 pub mod hist;
+pub mod index;
 pub mod queryir;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

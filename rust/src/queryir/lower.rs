@@ -39,6 +39,16 @@
 //! counter by a scoped thread pool and the per-morsel histograms are merged
 //! in morsel order, so results are deterministic for a fixed morsel size.
 //!
+//! Execution is also **index-aware**: when a partition carries a zone map
+//! (`crate::index`), `run_parallel_indexed`/`run_indexed` evaluate the
+//! program's cut predicate (`super::predicate`) against the per-chunk
+//! statistics and classify every `CHUNK`-aligned batch as skip (provably
+//! empty — no work at all), take-all (cut provably passes everywhere — the
+//! mask buffers are dropped and the unmasked kernel runs) or scan. Both
+//! short cuts are bit-identical to the full scan: a skipped chunk's items
+//! would have contributed exact `+0.0`s, and an always-true mask selects
+//! every value unchanged. [`IndexedRun`] reports what happened.
+//!
 //! The execution state is a slot vector plus borrowed column slices: no
 //! allocation happens inside the event loop. This is the in-repo analogue
 //! of the paper handing transformed code to Numba/Clang — same semantics
@@ -51,9 +61,11 @@
 //! the same cache line.
 
 use super::ast::{BinOp, CmpOp};
+use super::predicate::{self, CutPredicate, ZoneDecision};
 use super::transform::{CExpr, CStmt, FlatProgram};
 use crate::columnar::arrays::{ColumnRange, ColumnSet};
 use crate::hist::H1;
+use crate::index::ZoneMap;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -119,6 +131,9 @@ pub struct CompiledProgram {
     pub n_slots: usize,
     body: Vec<StmtFn>,
     fused: Option<FusedLoop>,
+    /// Cut predicate of the fused body, when it has the analyzable shape —
+    /// what zone-map partition/chunk classification evaluates.
+    predicate: Option<CutPredicate>,
     /// Canonical hash of the transformed program this was lowered from.
     pub fingerprint: u64,
 }
@@ -144,6 +159,17 @@ impl CompiledProgram {
             masked_fills: ck.fills.iter().filter(|f| f.mask.is_some()).count(),
             buffers: ck.bufs.len(),
         })
+    }
+
+    /// The cut predicate zone-map pruning evaluates, if the program has
+    /// the analyzable fused shape.
+    pub fn predicate(&self) -> Option<&CutPredicate> {
+        self.predicate.as_ref()
+    }
+
+    /// Can zone maps prune for this program at all?
+    pub fn is_prunable(&self) -> bool {
+        self.predicate.is_some()
     }
 }
 
@@ -207,6 +233,56 @@ impl ParallelCfg {
     }
 }
 
+/// What zone-map pruning did during one (indexed) run: how many
+/// `CHUNK`-aligned zone chunks were skipped outright, ran unmasked because
+/// the cut was provably true, or ran the normal masked scan. Each chunk is
+/// counted once per run even when morsel windows split it (the window
+/// containing the chunk's start reports it). All zeros when no zone map
+/// was supplied or the program is not prunable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IndexedRun {
+    /// Chunks proven empty by the predicate — not touched at all.
+    pub chunks_skipped: u64,
+    /// Chunks where the cut is provably true — mask dropped.
+    pub chunks_take_all: u64,
+    /// Chunks the statistics could not decide — masked scan.
+    pub chunks_scanned: u64,
+}
+
+impl IndexedRun {
+    /// Accumulate another report (morsel merges, backend counters).
+    pub fn absorb(&mut self, o: &IndexedRun) {
+        self.chunks_skipped += o.chunks_skipped;
+        self.chunks_take_all += o.chunks_take_all;
+        self.chunks_scanned += o.chunks_scanned;
+    }
+
+    /// Chunks the index decided without a scan.
+    pub fn chunks_pruned(&self) -> u64 {
+        self.chunks_skipped + self.chunks_take_all
+    }
+}
+
+/// Per-partition chunk classification, precomputed once per run from the
+/// program's predicate and the partition's zone map.
+struct ChunkPlan {
+    /// Decision per `CHUNK`-aligned item chunk of the fused list.
+    decisions: Vec<ZoneDecision>,
+}
+
+/// Build the chunk plan for one partition, when everything lines up: the
+/// program is prunable, runs the chunked kernel, and the zone map's grid
+/// matches the kernel's batch width.
+fn chunk_plan(prog: &CompiledProgram, zm: &ZoneMap) -> Option<ChunkPlan> {
+    if zm.chunk_items != CHUNK {
+        return None;
+    }
+    let fused = prog.fused.as_ref()?;
+    fused.chunked.as_ref()?;
+    let decisions = prog.predicate.as_ref()?.classify_chunks(zm)?;
+    Some(ChunkPlan { decisions })
+}
+
 /// FNV-1a, used for program fingerprints and cache keys.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -247,6 +323,7 @@ pub fn lower(prog: &FlatProgram) -> Result<CompiledProgram, String> {
             Some(b) => compile_fused(b)?,
             None => None,
         },
+        predicate: predicate::extract(prog),
         fingerprint: fingerprint(prog),
     })
 }
@@ -305,6 +382,23 @@ pub fn run(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), 
     run_range(prog, &cs.range(0, cs.n_events), hist)
 }
 
+/// Run one whole partition with zone-map chunk skipping. Equals `run`
+/// bit-for-bit (a skipped chunk's items would have contributed exact
+/// `+0.0`s; a take-all chunk runs the same arithmetic minus the mask);
+/// returns what the index decided.
+pub fn run_indexed(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    zm: Option<&ZoneMap>,
+    hist: &mut H1,
+) -> Result<IndexedRun, String> {
+    let plan = zm.and_then(|z| chunk_plan(prog, z));
+    let mut report = IndexedRun::default();
+    let view = cs.range(0, cs.n_events);
+    run_range_inner(prog, &view, hist, true, plan.as_ref(), &mut report)?;
+    Ok(report)
+}
+
 /// Run a compiled program over an event window of a partition. This is the
 /// morsel execution primitive: the view is zero-copy, and for a fixed
 /// program the concatenation of adjacent windows produces exactly the fill
@@ -314,14 +408,15 @@ pub fn run_range(
     view: &ColumnRange<'_>,
     hist: &mut H1,
 ) -> Result<(), String> {
-    run_range_inner(prog, view, hist, true)
+    run_range_inner(prog, view, hist, true, None, &mut IndexedRun::default())
 }
 
 /// `run`, but with the chunked kernel disabled — the closure-graph fused
 /// loop runs instead. Exists so benches and tests can measure/verify the
 /// two lowerings against each other.
 pub fn run_scalar(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
-    run_range_inner(prog, &cs.range(0, cs.n_events), hist, false)
+    let view = cs.range(0, cs.n_events);
+    run_range_inner(prog, &view, hist, false, None, &mut IndexedRun::default())
 }
 
 fn run_range_inner(
@@ -329,6 +424,8 @@ fn run_range_inner(
     view: &ColumnRange<'_>,
     hist: &mut H1,
     allow_chunked: bool,
+    plan: Option<&ChunkPlan>,
+    report: &mut IndexedRun,
 ) -> Result<(), String> {
     let mut ctx = bind(prog, view)?;
     if let Some(f) = &prog.fused {
@@ -341,7 +438,7 @@ fn run_range_inner(
         let in_bounds = ctx.item_cols.iter().all(|c| c.len() >= k_hi);
         match &f.chunked {
             Some(ck) if allow_chunked && in_bounds => {
-                run_chunked(ck, &ctx.item_cols, k_lo, k_hi, hist);
+                run_chunked(ck, &ctx.item_cols, k_lo, k_hi, hist, plan, report);
             }
             _ => {
                 for k in k_lo..k_hi {
@@ -385,19 +482,42 @@ pub fn run_parallel(
     hist: &mut H1,
     cfg: ParallelCfg,
 ) -> Result<(), String> {
+    run_parallel_indexed(prog, cs, None, hist, cfg).map(|_| ())
+}
+
+/// `run_parallel` with zone-map chunk skipping: the partition's chunk
+/// classification is computed once and every morsel consults it (zone
+/// chunks are item-aligned, so a morsel window covering part of a skipped
+/// chunk still skips its part). Bins and counts match the unindexed
+/// sequential run exactly; the returned report merges all morsels'
+/// reports, with every zone chunk counted once (see [`IndexedRun`]).
+pub fn run_parallel_indexed(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    zm: Option<&ZoneMap>,
+    hist: &mut H1,
+    cfg: ParallelCfg,
+) -> Result<IndexedRun, String> {
+    let plan = zm.and_then(|z| chunk_plan(prog, z));
+    let plan = plan.as_ref();
     let morsel = cfg.resolved_morsel_events();
     let n_morsels = cs.n_events.div_ceil(morsel.max(1)).max(1);
     let threads = cfg.resolved_threads().min(n_morsels);
+    let mut report = IndexedRun::default();
     if threads <= 1 {
-        return run(prog, cs, hist);
+        let view = cs.range(0, cs.n_events);
+        run_range_inner(prog, &view, hist, true, plan, &mut report)?;
+        return Ok(report);
     }
     let (n_bins, lo, hi) = (hist.n_bins(), hist.lo, hist.hi);
     let next = AtomicUsize::new(0);
-    let mut results: Vec<(usize, Result<H1, String>)> = std::thread::scope(|s| {
+    type MorselOut = (Vec<(usize, Result<H1, String>)>, IndexedRun);
+    let outs: Vec<MorselOut> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             handles.push(s.spawn(|| {
                 let mut done = Vec::new();
+                let mut local = IndexedRun::default();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n_morsels {
@@ -406,24 +526,30 @@ pub fn run_parallel(
                     let ev_lo = i * morsel;
                     let ev_hi = ((i + 1) * morsel).min(cs.n_events);
                     let mut h = H1::new(n_bins, lo, hi);
-                    let r = run_range(prog, &cs.range(ev_lo, ev_hi), &mut h);
+                    let view = cs.range(ev_lo, ev_hi);
+                    let r = run_range_inner(prog, &view, &mut h, true, plan, &mut local);
                     done.push((i, r.map(|_| h)));
                 }
-                done
+                (done, local)
             }));
         }
-        let mut all = Vec::with_capacity(n_morsels);
-        for h in handles {
-            all.extend(h.join().expect("morsel thread panicked"));
-        }
-        all
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("morsel thread panicked"))
+            .collect()
     });
+    let mut results = Vec::with_capacity(n_morsels);
+    for (done, local) in outs {
+        results.extend(done);
+        report.absorb(&local);
+    }
     results.sort_by_key(|(i, _)| *i);
     let mut parts = Vec::with_capacity(results.len());
     for (_, r) in results {
         parts.push(r?);
     }
-    hist.merge_many(&parts)
+    hist.merge_many(&parts)?;
+    Ok(report)
 }
 
 // --------------------------------------------------------- chunked kernel
@@ -437,6 +563,10 @@ pub fn run_parallel(
 struct ChunkedBody {
     bufs: Vec<BExpr>,
     fills: Vec<FillSite>,
+    /// Buffers referenced only as cut masks — on a take-all chunk (mask
+    /// proven true everywhere by the zone map) their evaluation is skipped
+    /// along with the masks themselves.
+    mask_only: Vec<bool>,
 }
 
 /// One `Fill` of a chunked body, as indices into the shared buffer table.
@@ -520,9 +650,22 @@ fn compile_chunked(body: &[CStmt], slot: usize) -> Option<ChunkedBody> {
     if b.fills.is_empty() {
         return None;
     }
+    let mut used_value = vec![false; b.bufs.len()];
+    let mut used_mask = vec![false; b.bufs.len()];
+    for f in &b.fills {
+        used_value[f.expr] = true;
+        if let Some(w) = f.weight {
+            used_value[w] = true;
+        }
+        if let Some(m) = f.mask {
+            used_mask[m] = true;
+        }
+    }
+    let mask_only = used_mask.iter().zip(&used_value).map(|(m, v)| *m && !*v).collect();
     Some(ChunkedBody {
         bufs: b.bufs,
         fills: b.fills,
+        mask_only,
     })
 }
 
@@ -812,6 +955,13 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
 /// fill sites with a branch-free select chain into a scratch histogram
 /// (`n_bins` bins + an underflow and an overflow slot).
 ///
+/// Chunks align to absolute `CHUNK` boundaries (the first batch may be
+/// short), so each batch maps to exactly one zone-map chunk and `plan` can
+/// decide it: `Skip` does nothing, `TakeAll` drops the masks (and skips
+/// evaluating mask-only buffers), `Scan` is the normal masked pass.
+/// Boundary placement cannot change the result — accumulation is
+/// sequential and item-major across batches.
+///
 /// Bit-identity with the scalar fused loop holds by construction:
 ///   * accumulation is item-major, fill-site-minor — exactly the statement
 ///     order of the scalar loop — and the running moments use one
@@ -821,8 +971,17 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
 ///     accumulator this kernel can produce: accumulators start at `+0.0`
 ///     and can never reach `-0.0` (the only value `+0.0` would perturb),
 ///     so the mask replaces the scalar loop's branch without changing a
-///     single bit.
-fn run_chunked(ck: &ChunkedBody, cols: &[&[f32]], k_lo: usize, k_hi: usize, hist: &mut H1) {
+///     single bit. A `Skip` chunk removes only such no-op contributions; a
+///     `TakeAll` chunk's masks would have been 1 at every item.
+fn run_chunked(
+    ck: &ChunkedBody,
+    cols: &[&[f32]],
+    k_lo: usize,
+    k_hi: usize,
+    hist: &mut H1,
+    plan: Option<&ChunkPlan>,
+    report: &mut IndexedRun,
+) {
     let n_bins = hist.n_bins();
     let lo = hist.lo;
     let width = hist.hi - hist.lo;
@@ -833,8 +992,38 @@ fn run_chunked(ck: &ChunkedBody, cols: &[&[f32]], k_lo: usize, k_hi: usize, hist
     let mut bufs: Vec<Vec<f64>> = ck.bufs.iter().map(|_| vec![0.0f64; CHUNK]).collect();
     let mut base = k_lo;
     while base < k_hi {
-        let n = CHUNK.min(k_hi - base);
-        for (e, buf) in ck.bufs.iter().zip(bufs.iter_mut()) {
+        let n = (CHUNK - base % CHUNK).min(k_hi - base);
+        let decision = match plan {
+            Some(p) => match p.decisions.get(base / CHUNK) {
+                Some(d) => *d,
+                None => ZoneDecision::Scan,
+            },
+            None => ZoneDecision::Scan,
+        };
+        // Count each zone chunk once even when morsel windows split it:
+        // only the batch that starts at the chunk boundary reports it
+        // (the union of morsel windows covers every boundary exactly
+        // once, so the per-run totals stay honest chunk counts).
+        let counted = plan.is_some() && base % CHUNK == 0;
+        if decision == ZoneDecision::Skip {
+            if counted {
+                report.chunks_skipped += 1;
+            }
+            base += n;
+            continue;
+        }
+        let take_all = decision == ZoneDecision::TakeAll;
+        if counted {
+            if take_all {
+                report.chunks_take_all += 1;
+            } else {
+                report.chunks_scanned += 1;
+            }
+        }
+        for (bi, (e, buf)) in ck.bufs.iter().zip(bufs.iter_mut()).enumerate() {
+            if take_all && ck.mask_only[bi] {
+                continue;
+            }
             beval(e, cols, base, &mut buf[..n]);
         }
         // Resolve each fill site's buffers once per chunk; the item-major
@@ -843,8 +1032,9 @@ fn run_chunked(ck: &ChunkedBody, cols: &[&[f32]], k_lo: usize, k_hi: usize, hist
             .fills
             .iter()
             .map(|f| {
+                let mask = if take_all { None } else { f.mask };
                 (
-                    f.mask.map(|m| &bufs[m][..n]),
+                    mask.map(|m| &bufs[m][..n]),
                     &bufs[f.expr][..n],
                     f.weight.map(|w| &bufs[w][..n]),
                 )
@@ -1420,6 +1610,88 @@ for event in dataset:
             assert_eq!(whole.bins, tiled.bins);
             assert_eq!(whole.total(), tiled.total());
         }
+    }
+
+    /// Zone-map chunk skipping: on pt-sorted data a tight cut skips most
+    /// chunks, an always-true cut take-alls them, and both stay
+    /// bit-identical to the unindexed run.
+    #[test]
+    fn run_indexed_skips_chunks_bit_identically() {
+        let mut cs = generate_drellyan(6_000, 105);
+        let mut pts = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+        pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr = pts[pts.len() - 1 - pts.len() / 100] as f64; // ~99th pctile
+        let n_items = pts.len();
+        cs.leaves
+            .insert("muons.pt".into(), crate::columnar::arrays::Array::F32(pts));
+        let zm = crate::index::ZoneMap::build(&cs);
+        let src = format!(
+            "for event in dataset:\n    for muon in event.muons:\n        \
+             if muon.pt > {thr}:\n            fill(muon.pt)\n"
+        );
+        let prog = queryir::compile(&src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(cp.is_prunable());
+        let mut full = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut full).unwrap();
+        let mut indexed = H1::new(64, 0.0, 128.0);
+        let rep = run_indexed(&cp, &cs, Some(&zm), &mut indexed).unwrap();
+        assert_eq!(indexed, full);
+        let n_chunks = n_items.div_ceil(CHUNK) as u64;
+        assert_eq!(rep.chunks_skipped + rep.chunks_take_all + rep.chunks_scanned, n_chunks);
+        assert!(rep.chunks_skipped >= n_chunks - 2, "{rep:?}");
+
+        // An always-true cut: every chunk runs unmasked.
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > -1:
+            fill(muon.pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let mut full = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut full).unwrap();
+        let mut indexed = H1::new(64, 0.0, 128.0);
+        let rep = run_indexed(&cp, &cs, Some(&zm), &mut indexed).unwrap();
+        assert_eq!(indexed, full);
+        assert_eq!(rep.chunks_take_all, n_chunks, "{rep:?}");
+
+        // No zone map → no engagement, same histogram.
+        let mut plain = H1::new(64, 0.0, 128.0);
+        let rep = run_indexed(&cp, &cs, None, &mut plain).unwrap();
+        assert_eq!(plain, full);
+        assert_eq!(rep, IndexedRun::default());
+    }
+
+    /// Morsel windows that split zone chunks still skip their parts and
+    /// agree with the sequential run on bins and count.
+    #[test]
+    fn run_parallel_indexed_composes_with_morsels() {
+        let mut cs = generate_drellyan(4_000, 106);
+        let mut pts = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+        pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr = pts[pts.len() / 2] as f64; // interior: all 3 verdicts occur
+        cs.leaves
+            .insert("muons.pt".into(), crate::columnar::arrays::Array::F32(pts));
+        let zm = crate::index::ZoneMap::build(&cs);
+        let src = format!(
+            "for event in dataset:\n    for muon in event.muons:\n        \
+             if muon.pt > {thr}:\n            fill(muon.pt)\n"
+        );
+        let prog = queryir::compile(&src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let mut seq = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut seq).unwrap();
+        let cfg = ParallelCfg {
+            threads: 4,
+            morsel_events: 333,
+        };
+        let mut par = H1::new(64, 0.0, 128.0);
+        let rep = run_parallel_indexed(&cp, &cs, Some(&zm), &mut par, cfg).unwrap();
+        assert_eq!(seq.bins, par.bins);
+        assert_eq!(seq.count, par.count);
+        assert!(rep.chunks_skipped > 0 || rep.chunks_take_all > 0, "{rep:?}");
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! baseline the transformation is measured against in Figure 1). `lower`
 //! compiles the transformed program to native closures and — for fused
 //! shapes, cuts and multi-`fill` bodies included — chunked batch kernels.
+//! `predicate` extracts interval constraints from a tape's `if` cuts and
+//! evaluates them against zone maps (`crate::index`) so execution can skip
+//! partitions and chunks a cut can never select.
 //!
 //! The language reference (grammar, builtins, cut/fill semantics) lives in
 //! `docs/QUERY_LANGUAGE.md`; the stage-by-stage pipeline with its defining
@@ -18,12 +21,14 @@ pub mod interp;
 pub mod lexer;
 pub mod lower;
 pub mod parser;
+pub mod predicate;
 pub mod tape;
 pub mod transform;
 
 pub use ast::Program;
-pub use lower::{ChunkedInfo, CompiledProgram, ParallelCfg};
+pub use lower::{ChunkedInfo, CompiledProgram, IndexedRun, ParallelCfg};
 pub use parser::parse;
+pub use predicate::{CutPredicate, ZoneDecision};
 pub use transform::{FlatProgram, Transformer};
 
 use crate::columnar::arrays::ColumnSet;

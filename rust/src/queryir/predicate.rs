@@ -1,0 +1,480 @@
+//! Predicate analysis: extract interval constraints from a validated
+//! tape's `if` cuts and evaluate them against zone maps.
+//!
+//! The analyzable shape is the fused single-list body (`try_fuse`'s output
+//! — the shape every flat cut query takes): a tree of `if` cuts around
+//! `Fill` statements. Each fill site's effective mask is the conjunction of
+//! its enclosing cut conditions, with `else` branches contributing the
+//! negated condition — exactly the masks the chunked mask-and-fill kernel
+//! materializes at run time. Here the same masks are evaluated *symbolically*
+//! over a zone's column statistics ([`crate::index`]) instead of over
+//! items, yielding a three-valued verdict per mask and one
+//! [`ZoneDecision`] per zone:
+//!
+//!   * **Skip** — every mask is provably false for every item of the zone:
+//!     no fill can fire, the zone contributes nothing, don't touch it;
+//!   * **TakeAll** — every mask is provably true: the masks can be dropped
+//!     and the unmasked batch kernel runs (bit-identical, since a mask
+//!     that is 1 everywhere selects every value unchanged);
+//!   * **Scan** — the statistics cannot decide; run the masked kernel.
+//!
+//! Soundness rests on the interval arithmetic being an over-approximation
+//! (see `index::interval`): `Tri::True`/`Tri::False` are proofs about every
+//! item, NaN semantics included (a NaN fails every ordered comparison on
+//! both the analysis and execution sides). Programs outside the fused shape
+//! — per-event state, `len()` cuts, pair loops — simply yield no predicate
+//! and are never pruned.
+
+use super::ast::CmpOp;
+use super::transform::{CExpr, CStmt, FlatProgram};
+use crate::index::{Interval, Tri, ZoneMap};
+
+/// What zone-map evaluation decided for one zone (partition or chunk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZoneDecision {
+    /// No fill of the program can fire on any item of the zone.
+    Skip,
+    /// Every fill fires on every (non-NaN-valued) item: cut masks can be
+    /// dropped.
+    TakeAll,
+    /// Statistics cannot decide; the zone runs the masked kernel.
+    Scan,
+}
+
+/// The cut structure of a fused body, ready for zone-map evaluation: one
+/// effective mask per fill site (`None` = unconditional fill), over the
+/// item columns of the program.
+#[derive(Clone, Debug)]
+pub struct CutPredicate {
+    /// Slot holding the fused loop's item index.
+    slot: usize,
+    /// Per fill site: the conjunction of enclosing cuts (else-negated).
+    masks: Vec<Option<CExpr>>,
+    /// Leaf paths of the program's item columns, in `col` order — the
+    /// names zone-map lookups resolve against.
+    item_cols: Vec<String>,
+}
+
+/// Extract the cut predicate of a program's fused body, if it has one.
+pub fn extract(prog: &FlatProgram) -> Option<CutPredicate> {
+    let fused = prog.fused.as_ref()?;
+    let [CStmt::LoopRange { slot, body, .. }] = &fused[..] else {
+        return None;
+    };
+    let mut masks = Vec::new();
+    collect_masks(body, None, &mut masks)?;
+    if masks.is_empty() {
+        return None;
+    }
+    Some(CutPredicate {
+        slot: *slot,
+        masks,
+        item_cols: prog.item_cols.clone(),
+    })
+}
+
+/// Walk a fused statement block under an enclosing mask, recording each
+/// fill site's effective mask. Mirrors the chunked kernel's mask builder:
+/// nested `if`s conjoin, `else` branches negate.
+fn collect_masks(
+    stmts: &[CStmt],
+    mask: Option<&CExpr>,
+    out: &mut Vec<Option<CExpr>>,
+) -> Option<()> {
+    for s in stmts {
+        match s {
+            CStmt::Fill { .. } => out.push(mask.cloned()),
+            CStmt::If { cond, then, els } => {
+                collect_masks(then, Some(&conjoin(mask, cond)), out)?;
+                if !els.is_empty() {
+                    let neg = CExpr::Not(Box::new(cond.clone()));
+                    collect_masks(els, Some(&conjoin(mask, &neg)), out)?;
+                }
+            }
+            // `try_fuse` admits only Fill and If; anything else means the
+            // body is not the analyzable shape.
+            _ => return None,
+        }
+    }
+    Some(())
+}
+
+fn conjoin(mask: Option<&CExpr>, cond: &CExpr) -> CExpr {
+    match mask {
+        Some(m) => CExpr::And(Box::new(m.clone()), Box::new(cond.clone())),
+        None => cond.clone(),
+    }
+}
+
+impl CutPredicate {
+    /// Classify one zone given a value interval per item column.
+    pub fn classify_with(&self, col: &dyn Fn(usize) -> Interval) -> ZoneDecision {
+        let mut any_may_fire = false;
+        let mut all_fire = true;
+        for m in &self.masks {
+            match m {
+                None => any_may_fire = true, // unconditional fill
+                Some(e) => match truth(e, self.slot, col) {
+                    Tri::True => any_may_fire = true,
+                    Tri::False => all_fire = false,
+                    Tri::Unknown => {
+                        any_may_fire = true;
+                        all_fire = false;
+                    }
+                },
+            }
+        }
+        if !any_may_fire {
+            ZoneDecision::Skip
+        } else if all_fire {
+            ZoneDecision::TakeAll
+        } else {
+            ZoneDecision::Scan
+        }
+    }
+
+    /// Classify a whole partition against its zone map.
+    pub fn classify_partition(&self, zm: &ZoneMap) -> ZoneDecision {
+        self.classify_with(&|c| self.lookup(zm, c, None))
+    }
+
+    /// Classify every chunk of a partition. Returns `None` when the masks
+    /// reference no columns or the referenced columns disagree on the chunk
+    /// grid (inconsistent map) — callers then fall back to scanning.
+    pub fn classify_chunks(&self, zm: &ZoneMap) -> Option<Vec<ZoneDecision>> {
+        let mut cols: Vec<usize> = Vec::new();
+        for m in self.masks.iter().flatten() {
+            referenced_cols(m, &mut cols);
+        }
+        cols.sort_unstable();
+        cols.dedup();
+        let mut n_chunks: Option<usize> = None;
+        for &c in &cols {
+            let z = zm.column(self.item_cols.get(c)?)?;
+            match n_chunks {
+                Some(n) if n != z.chunks.len() => return None,
+                _ => n_chunks = Some(z.chunks.len()),
+            }
+        }
+        let n = n_chunks?;
+        let decisions = (0..n)
+            .map(|i| self.classify_with(&|c| self.lookup(zm, c, Some(i))))
+            .collect();
+        Some(decisions)
+    }
+
+    /// The interval a zone map proves for item column `c` (whole partition
+    /// or one chunk). Anything unresolvable is `TOP` — never a wrong claim.
+    fn lookup(&self, zm: &ZoneMap, c: usize, chunk: Option<usize>) -> Interval {
+        let Some(path) = self.item_cols.get(c) else {
+            return Interval::TOP;
+        };
+        let Some(z) = zm.column(path) else {
+            return Interval::TOP;
+        };
+        let stats = match chunk {
+            None => &z.whole,
+            Some(i) => match z.chunks.get(i) {
+                Some(s) => s,
+                None => return Interval::TOP,
+            },
+        };
+        stats.interval()
+    }
+}
+
+/// Item columns loaded (at the loop index) anywhere in an expression.
+fn referenced_cols(e: &CExpr, out: &mut Vec<usize>) {
+    match e {
+        CExpr::LoadItem { col, idx } => {
+            out.push(*col);
+            referenced_cols(idx, out);
+        }
+        CExpr::Bin(_, l, r) | CExpr::Cmp(_, l, r) | CExpr::And(l, r) | CExpr::Or(l, r) => {
+            referenced_cols(l, out);
+            referenced_cols(r, out);
+        }
+        CExpr::Not(x) | CExpr::Neg(x) => referenced_cols(x, out),
+        CExpr::Call(_, args) => {
+            for a in args {
+                referenced_cols(a, out);
+            }
+        }
+        CExpr::Const(_) | CExpr::Slot(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => {}
+    }
+}
+
+/// Three-valued truthiness of a condition over a zone, matching the
+/// kernel's rule (`cond != 0.0`; NaN conditions are truthy).
+fn truth(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Tri {
+    match e {
+        CExpr::Cmp(op, l, r) => {
+            let a = ival(l, slot, col);
+            let b = ival(r, slot, col);
+            match op {
+                CmpOp::Lt => a.lt(b),
+                CmpOp::Le => a.le(b),
+                CmpOp::Gt => a.gt(b),
+                CmpOp::Ge => a.ge(b),
+                CmpOp::Eq => a.eq(b),
+                CmpOp::Ne => a.ne(b),
+            }
+        }
+        CExpr::And(l, r) => truth(l, slot, col).and(truth(r, slot, col)),
+        CExpr::Or(l, r) => truth(l, slot, col).or(truth(r, slot, col)),
+        CExpr::Not(x) => truth(x, slot, col).not(),
+        other => ival(other, slot, col).truthy(),
+    }
+}
+
+/// Interval of an expression's values over a zone.
+fn ival(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Interval {
+    match e {
+        CExpr::Const(c) => Interval::point(*c),
+        // The fused loop index: a non-negative finite integer.
+        CExpr::Slot(s) if *s == slot => Interval {
+            lo: 0.0,
+            hi: f64::INFINITY,
+            nan: false,
+        },
+        // Any other slot is per-event state; fused bodies have none, but
+        // stay conservative if one ever appears.
+        CExpr::Slot(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => Interval::TOP,
+        CExpr::LoadItem { col: c, idx } => match idx.as_ref() {
+            // Only loads at the loop index are covered by the zone's
+            // statistics; a computed index may read another zone.
+            CExpr::Slot(s) if *s == slot => col(*c),
+            _ => Interval::TOP,
+        },
+        CExpr::Bin(op, l, r) => {
+            let a = ival(l, slot, col);
+            let b = ival(r, slot, col);
+            match op {
+                super::ast::BinOp::Add => a.add(b),
+                super::ast::BinOp::Sub => a.sub(b),
+                super::ast::BinOp::Mul => a.mul(b),
+                super::ast::BinOp::Div => a.div(b),
+            }
+        }
+        // Boolean-valued subexpressions produce exactly 0.0 or 1.0; refine
+        // through their three-valued truth.
+        CExpr::Cmp(..) | CExpr::And(..) | CExpr::Or(..) | CExpr::Not(..) => {
+            match truth(e, slot, col) {
+                Tri::True => Interval::point(1.0),
+                Tri::False => Interval::point(0.0),
+                Tri::Unknown => Interval {
+                    lo: 0.0,
+                    hi: 1.0,
+                    nan: false,
+                },
+            }
+        }
+        CExpr::Neg(x) => ival(x, slot, col).neg(),
+        CExpr::Call(name, args) => {
+            let one = |f: fn(Interval) -> Interval| f(ival(&args[0], slot, col));
+            match (*name, args.len()) {
+                ("sqrt", 1) => one(Interval::sqrt),
+                ("abs", 1) => one(Interval::abs),
+                ("exp", 1) => one(Interval::exp),
+                ("log", 1) => one(Interval::ln),
+                ("sin", 1) | ("cos", 1) => one(Interval::sin_cos),
+                ("sinh", 1) => one(Interval::sinh),
+                ("cosh", 1) => one(Interval::cosh),
+                ("min", 2) => ival(&args[0], slot, col).imin(ival(&args[1], slot, col)),
+                ("max", 2) => ival(&args[0], slot, col).imax(ival(&args[1], slot, col)),
+                // __list_base / __list_total and anything unknown.
+                _ => Interval::TOP,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::schema::muon_event_schema;
+    use crate::index::ColumnStats;
+    use crate::queryir;
+
+    fn pred(src: &str) -> CutPredicate {
+        let prog = queryir::compile(src, &muon_event_schema()).unwrap();
+        extract(&prog).expect("program should yield a predicate")
+    }
+
+    /// A stats lookup with fixed per-column intervals, `col 0 = muons.pt`
+    /// in the sources below.
+    fn with_pt(lo: f64, hi: f64, nan: bool) -> impl Fn(usize) -> Interval {
+        move |c| {
+            if c == 0 {
+                Interval { lo, hi, nan }
+            } else {
+                Interval::TOP
+            }
+        }
+    }
+
+    const CUT: &str = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 25:
+            fill(muon.pt)
+";
+
+    #[test]
+    fn simple_cut_classifies_all_three_ways() {
+        let p = pred(CUT);
+        assert_eq!(p.classify_with(&with_pt(1.0, 10.0, false)), ZoneDecision::Skip);
+        assert_eq!(p.classify_with(&with_pt(30.0, 90.0, false)), ZoneDecision::TakeAll);
+        assert_eq!(p.classify_with(&with_pt(10.0, 90.0, false)), ZoneDecision::Scan);
+        // The cut boundary itself is not provably passing.
+        assert_eq!(p.classify_with(&with_pt(25.0, 90.0, false)), ZoneDecision::Scan);
+    }
+
+    #[test]
+    fn nan_columns_block_take_all_but_not_skip() {
+        let p = pred(CUT);
+        // NaN items fail the cut on both analysis and execution sides.
+        assert_eq!(p.classify_with(&with_pt(1.0, 10.0, true)), ZoneDecision::Skip);
+        assert_eq!(p.classify_with(&with_pt(30.0, 90.0, true)), ZoneDecision::Scan);
+    }
+
+    #[test]
+    fn else_branch_negation_prevents_skip() {
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 25:
+            fill(muon.pt)
+        else:
+            fill(muon.eta)
+";
+        let p = pred(src);
+        // Some fill fires for every item whatever pt is, so the zone can
+        // never Skip — but it can't TakeAll either: dropping *all* masks
+        // would fire both branches on every item. One branch provably
+        // dead still leaves the other's mask load-bearing: Scan.
+        assert_eq!(p.classify_with(&with_pt(1.0, 10.0, false)), ZoneDecision::Scan);
+        assert_eq!(p.classify_with(&with_pt(30.0, 90.0, false)), ZoneDecision::Scan);
+        assert_eq!(p.classify_with(&with_pt(10.0, 90.0, false)), ZoneDecision::Scan);
+    }
+
+    #[test]
+    fn nested_cuts_conjoin_and_unconditional_fills_prevent_skip() {
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 25:
+            if muon.pt < 50:
+                fill(muon.pt)
+";
+        let p = pred(src);
+        assert_eq!(p.classify_with(&with_pt(60.0, 90.0, false)), ZoneDecision::Skip);
+        assert_eq!(p.classify_with(&with_pt(30.0, 40.0, false)), ZoneDecision::TakeAll);
+
+        let src2 = "\
+for event in dataset:
+    for muon in event.muons:
+        fill(muon.eta)
+        if muon.pt > 25:
+            fill(muon.pt)
+";
+        let p2 = pred(src2);
+        assert_eq!(p2.classify_with(&with_pt(1.0, 10.0, false)), ZoneDecision::Scan);
+        assert_eq!(p2.classify_with(&with_pt(30.0, 90.0, false)), ZoneDecision::TakeAll);
+    }
+
+    #[test]
+    fn monotone_builtins_prune() {
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if sqrt(muon.pt) > 5:
+            fill(muon.pt)
+";
+        let p = pred(src);
+        // sqrt(pt) <= 4.9 < 5 for pt <= 24.
+        assert_eq!(p.classify_with(&with_pt(1.0, 24.0, false)), ZoneDecision::Skip);
+        assert_eq!(p.classify_with(&with_pt(26.0, 99.0, false)), ZoneDecision::TakeAll);
+    }
+
+    #[test]
+    fn non_fused_programs_yield_no_predicate() {
+        let schema = muon_event_schema();
+        let max_pt = queryir::compile(queryir::table3::MAX_PT, &schema).unwrap();
+        assert!(extract(&max_pt).is_none());
+        let pairs = queryir::compile(queryir::table3::MASS_PAIRS, &schema).unwrap();
+        assert!(extract(&pairs).is_none());
+        // Unconditional flat fills do yield one (a single None mask): they
+        // can be proven TakeAll but never skipped.
+        let flat = queryir::compile(queryir::table3::MUON_PT, &schema).unwrap();
+        let p = extract(&flat).unwrap();
+        assert_eq!(p.classify_with(&|_| Interval::TOP), ZoneDecision::TakeAll);
+    }
+
+    #[test]
+    fn chunk_classification_uses_per_chunk_stats() {
+        use crate::columnar::arrays::{Array, ColumnSet};
+        let mut cs = ColumnSet::empty(muon_event_schema());
+        cs.n_events = 2;
+        cs.offsets.insert("muons".into(), vec![0, 3, 6]);
+        cs.leaves.insert(
+            "muons.pt".into(),
+            Array::F32(vec![1.0, 2.0, 3.0, 40.0, 50.0, 60.0]),
+        );
+        for path in ["muons.eta", "muons.phi"] {
+            cs.leaves.insert(path.into(), Array::F32(vec![0.0; 6]));
+        }
+        cs.leaves
+            .insert("muons.charge".into(), Array::I32(vec![1; 6]));
+        cs.leaves.insert("met".into(), Array::F32(vec![0.0; 2]));
+        let zm = crate::index::ZoneMap::build_with_chunk(&cs, 3);
+        let p = pred(CUT);
+        let d = p.classify_chunks(&zm).unwrap();
+        assert_eq!(d, vec![ZoneDecision::Skip, ZoneDecision::TakeAll]);
+        assert_eq!(p.classify_partition(&zm), ZoneDecision::Scan);
+    }
+
+    #[test]
+    fn missing_columns_degrade_to_scan() {
+        let p = pred(CUT);
+        let zm = crate::index::ZoneMap {
+            chunk_items: 4,
+            columns: Default::default(),
+        };
+        assert_eq!(p.classify_partition(&zm), ZoneDecision::Scan);
+        assert!(p.classify_chunks(&zm).is_none());
+    }
+
+    #[test]
+    fn interval_eval_covers_boolean_subexpressions() {
+        // `(pt > 10) + 1 > 1` is true exactly when the cut passes; the
+        // boolean refinement keeps it decidable.
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if not muon.pt > 10:
+            fill(muon.pt)
+";
+        let p = pred(src);
+        assert_eq!(p.classify_with(&with_pt(20.0, 30.0, false)), ZoneDecision::Skip);
+        assert_eq!(p.classify_with(&with_pt(1.0, 5.0, false)), ZoneDecision::TakeAll);
+    }
+
+    /// Stats-derived intervals plug straight in.
+    #[test]
+    fn column_stats_drive_classification() {
+        let mut s = ColumnStats::empty();
+        for v in [30.0, 40.0, 55.0] {
+            s.update(v);
+        }
+        let p = pred(CUT);
+        let d = p.classify_with(&|c| {
+            if c == 0 {
+                s.interval()
+            } else {
+                Interval::TOP
+            }
+        });
+        assert_eq!(d, ZoneDecision::TakeAll);
+    }
+}

@@ -5,9 +5,19 @@
 //!              "n_bins":64,"lo":0,"hi":128}
 //!             {"op":"query","src":"for event in dataset:\n ...","dataset":"dy"}
 //!             {"op":"datasets"} | {"op":"stats"} | {"op":"ping"}
+//!             {"op":"warm","dataset":"dy"}   (re-run top-cost cached tapes)
 //!   response: {"ok":true,"hist":{...},"latency_ms":...,"events":...,
-//!              "partitions":...,"cached":bool}
+//!              "partitions":...,"skipped":...,"cached":bool}
 //!             progress frames: {"progress":done,"total":n} (one per merge round)
+//!
+//! `stats` includes a `data_skipping` block: zone-map partition/chunk skip
+//! counters, the result-cache warm count, and per-worker partition-cache
+//! hit rates. `warm` is the result-cache warming hook: after re-registering
+//! a dataset (which bumps its version and invalidates its cached results),
+//! issue `warm` to re-run that dataset's highest-cost cached tapes —
+//! priority = stored GreedyDual cost — and repopulate the cache before
+//! physicists re-ask. Each connection runs on its own thread, so a warm
+//! does not block other clients.
 //!
 //! Source queries (`src`) are validated — parsed and transformed against the
 //! dataset schema — *before* any subtask is advertised, so malformed physics
@@ -29,13 +39,15 @@ use crate::util::json::Json;
 use result_cache::{CachedResult, ResultCache};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 pub struct Server {
     cluster: Arc<Cluster>,
     shutdown: Arc<AtomicBool>,
     results: Arc<ResultCache>,
+    /// Results re-computed by cache warming since start.
+    warms: Arc<AtomicU64>,
 }
 
 impl Server {
@@ -44,11 +56,19 @@ impl Server {
             cluster,
             shutdown: Arc::new(AtomicBool::new(false)),
             results: Arc::new(ResultCache::new(256)),
+            warms: Arc::new(AtomicU64::new(0)),
         }
     }
 
     pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
         self.shutdown.clone()
+    }
+
+    /// Re-run the highest-cost cached tapes of `dataset` against its
+    /// current version (call after re-registering it). Returns how many
+    /// results were recomputed; also reachable over TCP as `{"op":"warm"}`.
+    pub fn warm_dataset(&self, dataset: &str) -> Result<usize, String> {
+        warm_dataset(&self.cluster, &self.results, &self.warms, dataset)
     }
 
     /// Serve until the shutdown flag is set. Returns the bound address.
@@ -65,8 +85,10 @@ impl Server {
                     let cluster = self.cluster.clone();
                     let shutdown = self.shutdown.clone();
                     let results = self.results.clone();
+                    let warms = self.warms.clone();
                     conns.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &cluster, &results, &shutdown) {
+                        let r = handle_conn(stream, &cluster, &results, &warms, &shutdown);
+                        if let Err(e) = r {
                             crate::log_debug!("connection ended: {e}");
                         }
                     }));
@@ -123,6 +145,7 @@ fn handle_conn(
     stream: TcpStream,
     cluster: &Cluster,
     results: &ResultCache,
+    warms: &AtomicU64,
     shutdown: &AtomicBool,
 ) -> Result<(), String> {
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
@@ -170,6 +193,7 @@ fn handle_conn(
                         ("result_cache_misses", Json::num(rc_misses as f64)),
                         ("result_cache_entries", Json::num(results.len() as f64)),
                         ("result_cache_evictions", Json::num(results.evictions() as f64)),
+                        ("data_skipping", data_skipping_json(cluster, warms, &stats)),
                         (
                             "bytes_fetched",
                             Json::num(
@@ -207,6 +231,17 @@ fn handle_conn(
                 send(&mut out, &Json::obj(vec![("ok", Json::Bool(true))]))?;
                 return Ok(());
             }
+            Some("warm") => {
+                let name = req.get("dataset").and_then(|d| d.as_str()).unwrap_or("");
+                let resp = match warm_dataset(cluster, results, warms, name) {
+                    Ok(n) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("warmed", Json::num(n as f64)),
+                    ]),
+                    Err(e) => err_json(&e),
+                };
+                send(&mut out, &resp)?;
+            }
             Some("query") => {
                 let resp = match Query::from_json(&req) {
                     Ok(q) => answer_query(cluster, results, &q, &mut out),
@@ -235,12 +270,26 @@ fn answer_query(
     if let Some(cached) = results.get(&key) {
         return result_json(&cached, t0.elapsed(), true);
     }
-    match run_query(cluster, q, out) {
+    let mut last = 0usize;
+    let run = run_query(cluster, q, |done, total| {
+        if done != last {
+            last = done;
+            let frame = Json::obj(vec![
+                ("progress", Json::num(done as f64)),
+                ("total", Json::num(total as f64)),
+            ]);
+            let _ = send(out, &frame);
+        }
+    });
+    match run {
         Ok(res) => {
             // The entry's eviction weight is its recomputation cost: the
             // wall-clock seconds the cluster just spent on it, so quadratic
             // pair loops are preferentially retained over cheap flat fills.
-            results.put(key, res.clone(), t0.elapsed().as_secs_f64());
+            // The query rides along so warming can re-run the entry after
+            // a dataset re-registration.
+            let cost = t0.elapsed().as_secs_f64();
+            results.put_with_query(key, res.clone(), cost, Some(q.clone()));
             result_json(&res, t0.elapsed(), false)
         }
         Err(e) => err_json(&e),
@@ -254,29 +303,109 @@ fn result_json(res: &CachedResult, latency: std::time::Duration, cached: bool) -
         ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
         ("events", Json::num(res.events as f64)),
         ("partitions", Json::num(res.partitions as f64)),
+        ("skipped", Json::num(res.skipped as f64)),
         ("cached", Json::Bool(cached)),
     ])
 }
 
-fn run_query(cluster: &Cluster, q: &Query, out: &mut TcpStream) -> Result<CachedResult, String> {
+fn run_query<F: FnMut(usize, usize)>(
+    cluster: &Cluster,
+    q: &Query,
+    mut progress: F,
+) -> Result<CachedResult, String> {
     let handle = cluster.submit(q.clone())?;
-    let mut last = 0usize;
     let res = cluster.wait_with_progress(&handle, q, |done, total, _| {
-        if done != last {
-            last = done;
-            let frame = Json::obj(vec![
-                ("progress", Json::num(done as f64)),
-                ("total", Json::num(total as f64)),
-            ]);
-            let _ = send(out, &frame);
-        }
+        progress(done, total);
         true
     })?;
     Ok(CachedResult {
         hist: res.hist,
         events: res.events,
         partitions: res.partitions,
+        skipped: res.skipped,
     })
+}
+
+/// Cache warming: re-run the highest-cost cached tapes of one dataset
+/// against its current version. Skips entries that are already warm at
+/// this version (the canonical key bakes the version in, so old-version
+/// duplicates of the same tape collapse onto one re-run), and skips — not
+/// aborts on — entries that no longer run (e.g. the re-registered schema
+/// dropped a branch an old tape used), so one stale query cannot block
+/// the rest. Capped so a hostile cache cannot occupy the cluster
+/// indefinitely.
+fn warm_dataset(
+    cluster: &Cluster,
+    results: &ResultCache,
+    warms: &AtomicU64,
+    dataset: &str,
+) -> Result<usize, String> {
+    const MAX_WARM: usize = 8;
+    if cluster.catalog.version(dataset).is_none() {
+        return Err(format!("no dataset '{dataset}'"));
+    }
+    let mut warmed = 0usize;
+    for (q, _cost) in results.warm_candidates(dataset) {
+        if warmed >= MAX_WARM {
+            break;
+        }
+        let Ok(key) = cache_key(cluster, &q) else {
+            continue; // no longer compiles against the current schema
+        };
+        if results.get(&key).is_some() {
+            continue; // already warm at the current version
+        }
+        let t0 = std::time::Instant::now();
+        match run_query(cluster, &q, |_, _| {}) {
+            Ok(res) => {
+                let cost = t0.elapsed().as_secs_f64();
+                results.put_with_query(key, res, cost, Some(q));
+                warmed += 1;
+                warms.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                crate::log_warn!("warm '{dataset}': cached query failed to re-run: {e}");
+            }
+        }
+    }
+    Ok(warmed)
+}
+
+/// The `stats` op's `data_skipping` block: zone-map counters at both
+/// granularities, the warm count, and per-worker partition-cache hit
+/// rates.
+fn data_skipping_json(
+    cluster: &Cluster,
+    warms: &AtomicU64,
+    stats: &[crate::coord::WorkerStats],
+) -> Json {
+    let (p_skip, p_scan) = cluster.partition_skip_stats();
+    let chunks = cluster.zone_chunk_stats().unwrap_or_default();
+    let worker_rates: Vec<Json> = stats
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let total = s.cache_hits + s.cache_misses;
+            let rate = if total == 0 {
+                0.0
+            } else {
+                s.cache_hits as f64 / total as f64
+            };
+            Json::obj(vec![
+                ("worker", Json::num(i as f64)),
+                ("partition_cache_hit_rate", Json::num(rate)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("partitions_skipped", Json::num(p_skip as f64)),
+        ("partitions_scanned", Json::num(p_scan as f64)),
+        ("chunks_skipped", Json::num(chunks.chunks_skipped as f64)),
+        ("chunks_take_all", Json::num(chunks.chunks_take_all as f64)),
+        ("chunks_scanned", Json::num(chunks.chunks_scanned as f64)),
+        ("result_cache_warms", Json::num(warms.load(Ordering::Relaxed) as f64)),
+        ("workers", Json::Arr(worker_rates)),
+    ])
 }
 
 fn err_json(msg: &str) -> Json {
@@ -302,6 +431,26 @@ impl Client {
             reader: BufReader::new(stream.try_clone().map_err(|e| e.to_string())?),
             writer: stream,
         })
+    }
+
+    /// Send one raw op object (`stats`, `warm`, `datasets`, ...) and
+    /// return its final response, swallowing any progress frames.
+    pub fn request(&mut self, req: &Json) -> Result<Json, String> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).map_err(|e| e.to_string())?;
+        loop {
+            let mut resp = String::new();
+            let n = self.reader.read_line(&mut resp).map_err(|e| e.to_string())?;
+            if n == 0 {
+                return Err("server closed connection".into());
+            }
+            let j = Json::parse(resp.trim()).map_err(|e| e.to_string())?;
+            if j.get("progress").is_some() {
+                continue;
+            }
+            return Ok(j);
+        }
     }
 
     /// Send a query; returns the final response (progress frames are passed

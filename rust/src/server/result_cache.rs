@@ -21,7 +21,14 @@
 //! arbitrary query source from untrusted clients, and a 64-bit digest key
 //! would let a crafted collision poison the cache with another query's
 //! histogram.
+//!
+//! Entries may carry the [`Query`] that produced them (`put_with_query`),
+//! which is what **cache warming** consumes: after a dataset is
+//! re-registered, `warm_candidates` lists that dataset's cached queries by
+//! descending GreedyDual cost so the server can re-run the most expensive
+//! tapes first and repopulate the cache under the new version.
 
+use crate::engine::Query;
 use crate::hist::H1;
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -35,6 +42,8 @@ pub struct CachedResult {
     pub events: u64,
     /// Partitions merged to produce it.
     pub partitions: usize,
+    /// Partitions the zone maps skipped when it was produced.
+    pub skipped: usize,
 }
 
 struct Entry {
@@ -45,6 +54,9 @@ struct Entry {
     pri: f64,
     /// Touch clock, for deterministic LRU tie-breaking.
     stamp: u64,
+    /// The query that produced this result, when the caller wants the
+    /// entry to be re-runnable (cache warming).
+    query: Option<Query>,
 }
 
 struct Inner {
@@ -112,6 +124,12 @@ impl ResultCache {
     /// cluster time). Non-finite or negative costs are clamped to 0, so an
     /// adversarial client cannot pin an entry forever.
     pub fn put(&self, key: String, res: CachedResult, cost: f64) {
+        self.put_with_query(key, res, cost, None)
+    }
+
+    /// `put`, additionally remembering the query so the entry can be
+    /// re-run by cache warming after its dataset is re-registered.
+    pub fn put_with_query(&self, key: String, res: CachedResult, cost: f64, query: Option<Query>) {
         let cost = if cost.is_finite() { cost.max(0.0) } else { 0.0 };
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
@@ -123,6 +141,7 @@ impl ResultCache {
                 cost,
                 pri: inflation + cost,
                 stamp: clock,
+                query,
             },
         );
         while g.map.len() > self.capacity {
@@ -155,6 +174,24 @@ impl ResultCache {
         (g.hits, g.misses)
     }
 
+    /// Re-runnable cached queries for one dataset, most expensive first —
+    /// the warming priority order (stored GreedyDual cost). Entries cached
+    /// under older dataset versions appear too; the warming loop dedups
+    /// them by re-deriving the canonical key at the current version.
+    pub fn warm_candidates(&self, dataset: &str) -> Vec<(Query, f64)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(Query, f64)> = g
+            .map
+            .values()
+            .filter_map(|e| match &e.query {
+                Some(q) if q.dataset == dataset => Some((q.clone(), e.cost)),
+                _ => None,
+            })
+            .collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v
+    }
+
     /// Entries evicted so far.
     pub fn evictions(&self) -> u64 {
         self.inner.lock().unwrap().evictions
@@ -179,6 +216,7 @@ mod tests {
             hist: h,
             events: total as u64,
             partitions: 1,
+            skipped: 0,
         }
     }
 
@@ -240,6 +278,24 @@ mod tests {
         // (never rehit) has been evicted along the way.
         assert!(c.get("pairs").is_none());
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn warm_candidates_filter_by_dataset_and_sort_by_cost() {
+        use crate::engine::{Query, QueryKind};
+        let c = ResultCache::new(8);
+        let q1 = Query::new(QueryKind::MaxPt, "dy", "muons");
+        let q2 = Query::new(QueryKind::MassPairs, "dy", "muons");
+        let q3 = Query::new(QueryKind::MaxPt, "other", "muons");
+        c.put_with_query("k1".into(), res(1.0), 0.1, Some(q1.clone()));
+        c.put_with_query("k2".into(), res(2.0), 5.0, Some(q2.clone()));
+        c.put_with_query("k3".into(), res(3.0), 9.0, Some(q3));
+        c.put("k4".into(), res(4.0), 99.0); // no query: not warmable
+        let cands = c.warm_candidates("dy");
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].0, q2);
+        assert_eq!(cands[1].0, q1);
+        assert!(c.warm_candidates("nope").is_empty());
     }
 
     #[test]

@@ -1,0 +1,443 @@
+//! Zone-map index subsystem: indexed execution must equal the full scan
+//! bit-identically, and the skip counters must prove pruning engages.
+//!
+//! The guarantees under test:
+//!   * `run_indexed` (chunk skip / take-all / scan) equals the unindexed
+//!     `run` to the last bit — bins, under/overflow, count AND moments —
+//!     across randomized cut shapes (extreme and interior thresholds,
+//!     `else` branches, weighted fills) over NaN-laden columns;
+//!   * morsel parallelism composes with skipping across the
+//!     {1, 7, 1024, whole} × {1, 2, 8} grid;
+//!   * the cluster advertises only non-skipped partitions: a
+//!     1%-selectivity cut over pt-clustered data skips ≥ 90% of the board
+//!     while the merged histogram matches a local full scan bin-exactly;
+//!   * the server's `stats` op reports the skip counters and the `warm`
+//!     op repopulates the result cache after a dataset re-registration.
+
+use hepq::columnar::arrays::{Array, ColumnSet};
+use hepq::columnar::schema::muon_event_schema;
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query};
+use hepq::hist::H1;
+use hepq::index::ZoneMap;
+use hepq::queryir::{self, lower, predicate, ZoneDecision};
+use hepq::server::{Client, Server};
+use hepq::util::json::Json;
+use hepq::util::propkit::{check, Config, Gen};
+use hepq::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// A Drell-Yan-like sample whose muons.pt content array is sorted
+/// ascending — the clustered layout zone maps exploit. Other columns keep
+/// their original (unsorted) values, which is fine: the schemas stay
+/// consistent and the cut queries below only constrain pt.
+fn pt_sorted_drellyan(n_events: usize, seed: u64) -> (ColumnSet, Vec<f32>) {
+    let mut cs = generate_drellyan(n_events, seed);
+    let mut pts = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+    pts.sort_by(|a, b| a.total_cmp(b));
+    cs.leaves.insert("muons.pt".into(), Array::F32(pts.clone()));
+    (cs, pts)
+}
+
+/// A hand-built muon sample with NaN injected into pt and eta at the
+/// given rates — the hostile case for statistics-based skipping.
+fn nan_laden_dataset(n_events: usize, seed: u64, nan_rate: f64, sorted: bool) -> ColumnSet {
+    let mut rng = Pcg32::new(seed);
+    let mut offsets = vec![0i64];
+    let mut n_items = 0usize;
+    for _ in 0..n_events {
+        n_items += rng.below(5) as usize;
+        offsets.push(n_items as i64);
+    }
+    let mut pt: Vec<f32> = (0..n_items)
+        .map(|_| {
+            if rng.bool_with(nan_rate) {
+                f32::NAN
+            } else {
+                rng.uniform(0.0, 100.0) as f32
+            }
+        })
+        .collect();
+    if sorted {
+        pt.sort_by(|a, b| a.total_cmp(b));
+    }
+    let eta: Vec<f32> = (0..n_items)
+        .map(|_| {
+            if rng.bool_with(nan_rate * 2.0) {
+                f32::NAN
+            } else {
+                rng.uniform(-2.4, 2.4) as f32
+            }
+        })
+        .collect();
+    let phi: Vec<f32> = (0..n_items).map(|_| rng.uniform(-3.14, 3.14) as f32).collect();
+    let charge: Vec<i32> = (0..n_items)
+        .map(|_| if rng.bool_with(0.5) { 1 } else { -1 })
+        .collect();
+    let met: Vec<f32> = (0..n_events).map(|_| rng.exponential(20.0) as f32).collect();
+    let mut cs = ColumnSet::empty(muon_event_schema());
+    cs.n_events = n_events;
+    cs.offsets.insert("muons".into(), offsets);
+    cs.leaves.insert("muons.pt".into(), Array::F32(pt));
+    cs.leaves.insert("muons.eta".into(), Array::F32(eta));
+    cs.leaves.insert("muons.phi".into(), Array::F32(phi));
+    cs.leaves.insert("muons.charge".into(), Array::I32(charge));
+    cs.leaves.insert("met".into(), Array::F32(met));
+    cs.validate().unwrap();
+    cs
+}
+
+/// Random fused cut/fill programs: thresholds at extremes (always pass /
+/// always fail) and in the interior, nested cuts, `else` branches,
+/// NaN-producing values and weighted fills.
+fn random_cut_program(g: &mut Gen) -> String {
+    const THRESHOLDS: [&str; 6] = ["-10", "0", "25", "60", "99.5", "500"];
+    fn fill(g: &mut Gen) -> String {
+        const VALUES: [&str; 4] = [
+            "muon.pt",
+            "sqrt(muon.eta)",
+            "muon.pt * 0.5 + muon.eta",
+            "abs(muon.eta) * 40",
+        ];
+        const WEIGHTS: [&str; 3] = ["", ", 0.5", ", 0.25"];
+        let v = VALUES[g.usize_to(VALUES.len() - 1)];
+        let w = WEIGHTS[g.usize_to(WEIGHTS.len() - 1)];
+        format!("fill({v}{w})")
+    }
+    let thr = THRESHOLDS[g.usize_to(THRESHOLDS.len() - 1)];
+    let cond = match g.usize_to(3) {
+        0 => format!("muon.pt > {thr}"),
+        1 => format!("muon.pt > {thr} and muon.eta < 1.5"),
+        2 => format!("sqrt(muon.pt) > 7"),
+        _ => format!("not muon.pt > {thr}"),
+    };
+    match g.usize_to(2) {
+        0 => format!(
+            "for event in dataset:\n    for muon in event.muons:\n        \
+             if {cond}:\n            {}\n",
+            fill(g)
+        ),
+        1 => format!(
+            "for event in dataset:\n    for muon in event.muons:\n        \
+             if {cond}:\n            {}\n        else:\n            {}\n",
+            fill(g),
+            fill(g)
+        ),
+        _ => format!(
+            "for event in dataset:\n    for muon in event.muons:\n        \
+             if {cond}:\n            if muon.pt < 80:\n                {}\n        {}\n",
+            fill(g),
+            fill(g)
+        ),
+    }
+}
+
+/// The core acceptance property: indexed execution == full scan to the
+/// bit, for arbitrary cut shapes over NaN-laden (and sometimes clustered)
+/// data, at multiple binnings.
+#[test]
+fn prop_indexed_execution_equals_full_scan_bit_identically() {
+    let cfg = Config {
+        cases: 24,
+        ..Config::default()
+    };
+    check(
+        "indexed-equals-full-scan",
+        &cfg,
+        |g| {
+            (
+                random_cut_program(g),
+                1 + g.usize_to(2_000),
+                g.rng.next_u64(),
+                g.usize_to(1) == 1, // sorted?
+            )
+        },
+        |(src, n, seed, sorted)| {
+            let cs = nan_laden_dataset(*n, *seed, 0.15, *sorted);
+            let zm = ZoneMap::build(&cs);
+            let prog = queryir::compile(src, &cs.schema)?;
+            let cp = lower::lower(&prog)?;
+            for (n_bins, lo, hi) in [(64, -8.0, 120.0), (9, 3.0, 40.0)] {
+                let mut full = H1::new(n_bins, lo, hi);
+                lower::run(&cp, &cs, &mut full)?;
+                let mut indexed = H1::new(n_bins, lo, hi);
+                lower::run_indexed(&cp, &cs, Some(&zm), &mut indexed)?;
+                if indexed != full {
+                    return Err(format!(
+                        "indexed != full scan on {n_bins}x[{lo},{hi}) for:\n{src}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn assert_morsel_equiv(seq: &H1, par: &H1, what: &str) {
+    assert_eq!(seq.bins, par.bins, "{what}: bins");
+    assert_eq!(seq.underflow, par.underflow, "{what}: underflow");
+    assert_eq!(seq.overflow, par.overflow, "{what}: overflow");
+    assert_eq!(seq.count, par.count, "{what}: count");
+    for (name, a, b) in [("sum", seq.sum, par.sum), ("sum2", seq.sum2, par.sum2)] {
+        let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}: {name} {a} vs {b} beyond merge tolerance"
+        );
+    }
+}
+
+/// The ISSUE grid with skipping enabled: morsel sizes {1, 7, 1024, whole}
+/// × thread counts {1, 2, 8} over a pt-clustered sample with an interior
+/// cut (so skip, take-all and scan chunks all occur).
+#[test]
+fn morsel_grid_with_skipping_matches_sequential() {
+    const N: usize = 5_000;
+    let (cs, pts) = pt_sorted_drellyan(N, 71);
+    let thr = pts[pts.len() / 2] as f64;
+    let zm = ZoneMap::build(&cs);
+    let src = format!(
+        "for event in dataset:\n    for muon in event.muons:\n        \
+         if muon.pt > {thr}:\n            fill(muon.pt)\n        \
+         fill(muon.eta, 0.5)\n"
+    );
+    let prog = queryir::compile(&src, &cs.schema).unwrap();
+    let cp = lower::lower(&prog).unwrap();
+    let mut seq = H1::new(64, -4.0, 128.0);
+    lower::run(&cp, &cs, &mut seq).unwrap();
+    let mut total_pruned = 0u64;
+    for morsel_events in [1usize, 7, 1024, N] {
+        for threads in [1usize, 2, 8] {
+            let cfg = lower::ParallelCfg {
+                threads,
+                morsel_events,
+            };
+            let mut par = H1::new(64, -4.0, 128.0);
+            let rep = lower::run_parallel_indexed(&cp, &cs, Some(&zm), &mut par, cfg).unwrap();
+            assert_morsel_equiv(
+                &seq,
+                &par,
+                &format!("skip morsel={morsel_events} threads={threads}"),
+            );
+            total_pruned += rep.chunks_pruned();
+        }
+    }
+    // The unconditional eta fill keeps chunks from skipping entirely, but
+    // the pt cut must still prune (take-all) on the clustered layout.
+    assert!(total_pruned > 0, "no pruning engaged across the whole grid");
+}
+
+/// Cut-only bodies on clustered data skip chunks outright, morsels
+/// included, and report it.
+#[test]
+fn clustered_cut_skips_chunks_under_morsels() {
+    const N: usize = 6_000;
+    let (cs, pts) = pt_sorted_drellyan(N, 72);
+    let thr = pts[pts.len() - 1 - pts.len() / 100] as f64;
+    let zm = ZoneMap::build(&cs);
+    let src = format!(
+        "for event in dataset:\n    for muon in event.muons:\n        \
+         if muon.pt > {thr}:\n            fill(muon.pt)\n"
+    );
+    let prog = queryir::compile(&src, &cs.schema).unwrap();
+    let cp = lower::lower(&prog).unwrap();
+    let mut seq = H1::new(64, 0.0, 128.0);
+    lower::run(&cp, &cs, &mut seq).unwrap();
+    let cfg = lower::ParallelCfg {
+        threads: 4,
+        morsel_events: 512,
+    };
+    let mut par = H1::new(64, 0.0, 128.0);
+    let rep = lower::run_parallel_indexed(&cp, &cs, Some(&zm), &mut par, cfg).unwrap();
+    assert_eq!(seq.bins, par.bins);
+    assert_eq!(seq.count, par.count);
+    assert!(rep.chunks_skipped > 0, "{rep:?}");
+    assert!(
+        rep.chunks_skipped >= 4 * rep.chunks_scanned,
+        "a ~1% cut should skip most chunk work: {rep:?}"
+    );
+}
+
+fn pruning_cluster(events: usize, seed: u64, part_events: usize) -> (Cluster, ColumnSet) {
+    let (cs, _) = pt_sorted_drellyan(events, seed);
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_workers: 3,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: std::time::Duration::ZERO,
+            claim_ttl: std::time::Duration::from_secs(10),
+            straggler: None,
+        },
+        Backend::compiled(),
+    );
+    cluster.catalog.register("dy", cs.clone(), part_events);
+    (cluster, cs)
+}
+
+/// The ISSUE acceptance criterion: a 1%-selectivity cut skips ≥ 90% of
+/// partitions (counters asserted) and the merged histogram is
+/// bin-identical to a local unindexed full scan.
+#[test]
+fn cluster_skips_90pct_of_partitions_at_1pct_selectivity() {
+    let (cluster, cs) = pruning_cluster(20_000, 77, 500);
+    let n_parts = cluster.catalog.n_partitions("dy").unwrap();
+    assert_eq!(n_parts, 40);
+    let mut pts = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+    pts.sort_by(|a, b| a.total_cmp(b));
+    let thr = pts[pts.len() - 1 - pts.len() / 100] as f64;
+    let src = format!(
+        "for event in dataset:\n    for muon in event.muons:\n        \
+         if muon.pt > {thr}:\n            fill(muon.pt)\n"
+    );
+    let q = Query::from_source(src.clone(), "dy").with_binning(64, 0.0, 128.0);
+    let res = cluster.run(&q).unwrap();
+
+    // ≥ 90% of the board never existed.
+    assert!(
+        res.skipped * 10 >= n_parts * 9,
+        "skipped {}/{} partitions",
+        res.skipped,
+        n_parts
+    );
+    assert_eq!(res.skipped + res.partitions, n_parts);
+    let (skipped, scanned) = cluster.partition_skip_stats();
+    assert_eq!(skipped as usize, res.skipped);
+    assert_eq!(scanned as usize, res.partitions);
+
+    // Bit-identical to the local unindexed scan (weight-1 fills: bins and
+    // count are integers, exact under any merge order).
+    let prog = queryir::compile(&src, &cs.schema).unwrap();
+    let cp = lower::lower(&prog).unwrap();
+    let mut local = H1::new(64, 0.0, 128.0);
+    lower::run(&cp, &cs, &mut local).unwrap();
+    assert_eq!(res.hist.bins, local.bins);
+    assert_eq!(res.hist.count, local.count);
+    assert!(res.hist.total() > 0.0, "the surviving 1% still fills");
+    cluster.shutdown();
+}
+
+/// Partition pruning decisions agree with a direct predicate evaluation,
+/// and an unprunable query skips nothing.
+#[test]
+fn cluster_pruning_is_sound_and_conservative() {
+    let (cluster, cs) = pruning_cluster(8_000, 78, 500);
+    // Unprunable (per-event state): everything scans.
+    let q = Query::new(hepq::engine::QueryKind::MaxPt, "dy", "muons");
+    let res = cluster.run(&q).unwrap();
+    assert_eq!(res.skipped, 0);
+    assert_eq!(res.partitions, 16);
+    assert_eq!(res.events, 8_000);
+
+    // An always-false cut skips every partition: the result is the empty
+    // histogram, exactly like a full scan would produce.
+    let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 100000:
+            fill(muon.pt)
+";
+    let q = Query::from_source(src, "dy").with_binning(32, 0.0, 128.0);
+    let res = cluster.run(&q).unwrap();
+    assert_eq!(res.skipped, 16);
+    assert_eq!(res.partitions, 0);
+    assert_eq!(res.hist.total(), 0.0);
+
+    // The submit-time verdicts match classify_partition on the catalog's
+    // own zone maps.
+    let prog = queryir::compile(src, &cs.schema).unwrap();
+    let pred = predicate::extract(&prog).unwrap();
+    for zm in cluster.catalog.partition_zone_maps("dy").unwrap() {
+        assert_eq!(pred.classify_partition(&zm), ZoneDecision::Skip);
+    }
+    cluster.shutdown();
+}
+
+// ----------------------------------------------------------- server tests
+
+type ServeHandle = std::thread::JoinHandle<Result<std::net::SocketAddr, String>>;
+
+/// Send one raw op line and unwrap the response.
+fn op(client: &mut Client, raw: &str) -> Json {
+    client.request(&Json::parse(raw).unwrap()).unwrap()
+}
+
+fn start_server(cluster: Arc<Cluster>) -> (Client, ServeHandle) {
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = Server::new(cluster);
+    let addr2 = addr.clone();
+    let t = std::thread::spawn(move || server.serve(&addr2));
+    let mut client = None;
+    for _ in 0..200 {
+        match Client::connect(&addr) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    (client.expect("connect to server"), t)
+}
+
+/// One stats block carries the whole data-skipping story, and `warm`
+/// repopulates the result cache after a re-registration.
+#[test]
+fn server_stats_report_skipping_and_warm_repopulates_cache() {
+    let (cluster, cs) = pruning_cluster(12_000, 79, 1_000);
+    let cluster = Arc::new(cluster);
+    let (mut client, t) = start_server(cluster.clone());
+
+    let mut pts = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+    pts.sort_by(|a, b| a.total_cmp(b));
+    let thr = pts[pts.len() - 1 - pts.len() / 100] as f64;
+    let src = format!(
+        "for event in dataset:\n    for muon in event.muons:\n        \
+         if muon.pt > {thr}:\n            fill(muon.pt)\n"
+    );
+    let q = Query::from_source(src, "dy").with_binning(64, 0.0, 128.0);
+    let cold = client.query(&q, |_, _| {}).unwrap();
+    assert_eq!(cold.get("ok"), Some(&Json::Bool(true)));
+    let skipped = cold.get("skipped").and_then(|v| v.as_usize()).unwrap();
+    assert!(skipped > 0, "{cold}");
+
+    let stats = op(&mut client, r#"{"op":"stats"}"#);
+    let ds = stats.get("data_skipping").expect("data_skipping block");
+    let p_skip = ds.get("partitions_skipped").and_then(|v| v.as_usize());
+    assert_eq!(p_skip, Some(skipped), "{stats}");
+    assert!(ds.get("chunks_skipped").is_some());
+    assert!(ds.get("chunks_take_all").is_some());
+    assert_eq!(ds.get("result_cache_warms").and_then(|v| v.as_u64()), Some(0));
+    let workers = ds.get("workers").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(workers.len(), 3);
+    assert!(workers[0].get("partition_cache_hit_rate").is_some());
+
+    // Re-register (version bump kills the cache), then warm: the stored
+    // query re-runs and the next ask is a cache hit again.
+    cluster.catalog.register("dy", cs.clone(), 1_000);
+    let warm = op(&mut client, r#"{"op":"warm","dataset":"dy"}"#);
+    assert_eq!(warm.get("ok"), Some(&Json::Bool(true)), "{warm}");
+    assert_eq!(warm.get("warmed").and_then(|v| v.as_u64()), Some(1));
+
+    let hot = client.query(&q, |_, _| {}).unwrap();
+    assert_eq!(hot.get("cached"), Some(&Json::Bool(true)), "{hot}");
+    let h_cold = H1::from_json(cold.get("hist").unwrap()).unwrap();
+    let h_hot = H1::from_json(hot.get("hist").unwrap()).unwrap();
+    assert_eq!(h_hot, h_cold);
+
+    let stats = op(&mut client, r#"{"op":"stats"}"#);
+    let ds = stats.get("data_skipping").expect("data_skipping block");
+    assert_eq!(ds.get("result_cache_warms").and_then(|v| v.as_u64()), Some(1));
+
+    // Warming an unknown dataset is an error, not a crash.
+    let bad = op(&mut client, r#"{"op":"warm","dataset":"nope"}"#);
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    client.shutdown_server().unwrap();
+    let _ = t.join().unwrap();
+}
