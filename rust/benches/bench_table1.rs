@@ -312,6 +312,112 @@ for event in dataset:
         rung += 2;
     }
 
+    // --- pair-loop + event-level chunked kernels, scratch reuse ----------
+    // Rungs 30–32: the paper's headline dimuon query through the pair
+    // kernel — scalar closure nest vs materialized-pair batch pass, then
+    // the same kernel under morsel threads. Rungs 33–38: an event-level
+    // cut sweep (threshold at the 99th/50th/1st met percentile) — scalar
+    // per-event loop vs the event chunked kernel. Rungs 39–42: the
+    // scratch-reuse ablation — fresh KernelScratch per 256-event window
+    // (the old per-morsel allocation behavior) vs one reused pool.
+    let pair_prog2 = queryir::compile(src, &dy.schema).unwrap();
+    let pair_cp = queryir::lower::lower(&pair_prog2).unwrap();
+    assert_eq!(
+        pair_cp.kernel_shape(),
+        Some(queryir::KernelShape::Pairs),
+        "mass_pairs should lower to the pair kernel"
+    );
+    let scalar_pairs = format!("{rung} mass_pairs scalar closure nest");
+    b.run(&scalar_pairs, nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run_scalar(&pair_cp, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    let chunked_pairs = format!("{} mass_pairs pair-chunked kernel", rung + 1);
+    b.run(&chunked_pairs, nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        queryir::lower::run(&pair_cp, &dy, &mut h).unwrap();
+        black_box(h.total());
+    });
+    let chunked_pairs_mt =
+        format!("{} mass_pairs pair-chunked threads={par_threads}", rung + 2);
+    b.run(&chunked_pairs_mt, nd, || {
+        let mut h = H1::new(64, 0.0, 128.0);
+        let cfg = queryir::lower::ParallelCfg {
+            threads: par_threads,
+            morsel_events: 4096,
+        };
+        queryir::lower::run_parallel(&pair_cp, &dy, &mut h, cfg).unwrap();
+        black_box(h.total());
+    });
+    rung += 3;
+
+    let mut mets: Vec<f32> = dy.leaf("met").unwrap().as_f32().unwrap().to_vec();
+    mets.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut event_pairs: Vec<(String, String, String)> = Vec::new();
+    for (tag, q) in [("1pct", 0.99), ("50pct", 0.50), ("99pct", 0.01)] {
+        let thr = mets[((mets.len() - 1) as f64 * q) as usize] as f64;
+        let src_ev = format!(
+            "for event in dataset:\n    if event.met > {thr}:\n        fill(event.met)\n"
+        );
+        let ev_prog = queryir::compile(&src_ev, &dy.schema).unwrap();
+        let ev_cp = queryir::lower::lower(&ev_prog).unwrap();
+        assert_eq!(
+            ev_cp.kernel_shape(),
+            Some(queryir::KernelShape::Events),
+            "event cut should lower to the event kernel"
+        );
+        let scalar_name = format!("{rung} eventcut_{tag} scalar per-event loop");
+        b.run(&scalar_name, nd, || {
+            let mut h = H1::new(64, 0.0, 120.0);
+            queryir::lower::run_scalar(&ev_cp, &dy, &mut h).unwrap();
+            black_box(h.total());
+        });
+        let chunked_name = format!("{} eventcut_{tag} event chunked kernel", rung + 1);
+        b.run(&chunked_name, nd, || {
+            let mut h = H1::new(64, 0.0, 120.0);
+            queryir::lower::run(&ev_cp, &dy, &mut h).unwrap();
+            black_box(h.total());
+        });
+        event_pairs.push((format!("eventcut_{tag}"), scalar_name, chunked_name));
+        rung += 2;
+    }
+
+    let mu_prog = queryir::compile(table3::MUON_PT, &dy.schema).unwrap();
+    let mu_cp = queryir::lower::lower(&mu_prog).unwrap();
+    let mut scratch_pairs: Vec<(String, String, String)> = Vec::new();
+    for (tag, cp) in [("mass_pairs", &pair_cp), ("muon_pt", &mu_cp)] {
+        let fresh_name = format!("{rung} scratch_{tag} fresh per window");
+        b.run(&fresh_name, nd, || {
+            let mut h = H1::new(64, 0.0, 128.0);
+            let mut ev = 0;
+            while ev < dy.n_events {
+                let hi = (ev + 256).min(dy.n_events);
+                // Old behavior: every window allocates its own scratch
+                // histogram + buffer table (+ pair buffers).
+                queryir::lower::run_range(cp, &dy.range(ev, hi), &mut h).unwrap();
+                ev = hi;
+            }
+            black_box(h.total());
+        });
+        let reuse_name = format!("{} scratch_{tag} reused pool", rung + 1);
+        b.run(&reuse_name, nd, || {
+            let mut h = H1::new(64, 0.0, 128.0);
+            let mut scratch = queryir::KernelScratch::new();
+            let mut ev = 0;
+            while ev < dy.n_events {
+                let hi = (ev + 256).min(dy.n_events);
+                queryir::lower::run_range_scratch(cp, &dy.range(ev, hi), &mut h, &mut scratch)
+                    .unwrap();
+                ev = hi;
+            }
+            black_box(h.total());
+        });
+        scratch_pairs.push((format!("scratch_{tag}"), fresh_name, reuse_name));
+        rung += 2;
+    }
+    let _ = rung;
+
     b.finish();
 
     let interp_rate = b.get("7 mass_pairs object interpreter").unwrap().rate();
@@ -358,6 +464,35 @@ for event in dataset:
             "zone-map check: indexed / full scan = {sp:.2}x on zoneskip_{label} \
              (target >= {target:.1}x){}",
             if sp < target { "  ** BELOW TARGET **" } else { "" }
+        );
+    }
+
+    let pair_sp = b.get(&chunked_pairs).unwrap().rate() / b.get(&scalar_pairs).unwrap().rate();
+    eprintln!(
+        "pair-kernel check: pair-chunked / scalar nest = {pair_sp:.2}x on mass_pairs \
+         (target >= 1.5x){}",
+        if pair_sp < 1.5 { "  ** BELOW TARGET **" } else { "" }
+    );
+    let pair_mt =
+        b.get(&chunked_pairs_mt).unwrap().rate() / b.get(&chunked_pairs).unwrap().rate();
+    eprintln!(
+        "pair-kernel check: threads={par_threads} / threads=1 = {pair_mt:.2}x on the \
+         pair-chunked kernel"
+    );
+    for (label, scalar_name, chunked_name) in &event_pairs {
+        let sp = b.get(chunked_name).unwrap().rate() / b.get(scalar_name).unwrap().rate();
+        eprintln!(
+            "event-kernel check: chunked / scalar loop = {sp:.2}x on {label} \
+             (target >= 1.0x){}",
+            if sp < 1.0 { "  ** BELOW TARGET **" } else { "" }
+        );
+    }
+    for (label, fresh_name, reuse_name) in &scratch_pairs {
+        let sp = b.get(reuse_name).unwrap().rate() / b.get(fresh_name).unwrap().rate();
+        eprintln!(
+            "scratch-reuse check: reused / fresh-per-window = {sp:.2}x on {label} \
+             (target >= 1.0x){}",
+            if sp < 1.0 { "  ** BELOW TARGET **" } else { "" }
         );
     }
 

@@ -147,6 +147,19 @@ impl Array {
             Array::Bool(v) => Array::Bool(v[lo..hi].to_vec()),
         }
     }
+
+    /// Append `src[lo..hi]` losslessly (used by event reordering). Panics
+    /// on a type mismatch — callers copy between arrays of one leaf.
+    pub fn append_range(&mut self, src: &Array, lo: usize, hi: usize) {
+        match (self, src) {
+            (Array::F32(d), Array::F32(s)) => d.extend_from_slice(&s[lo..hi]),
+            (Array::F64(d), Array::F64(s)) => d.extend_from_slice(&s[lo..hi]),
+            (Array::I32(d), Array::I32(s)) => d.extend_from_slice(&s[lo..hi]),
+            (Array::I64(d), Array::I64(s)) => d.extend_from_slice(&s[lo..hi]),
+            (Array::Bool(d), Array::Bool(s)) => d.extend_from_slice(&s[lo..hi]),
+            (d, s) => panic!("append_range: {:?} <- {:?}", d.prim(), s.prim()),
+        }
+    }
 }
 
 /// A set of exploded columns for `n_events` events.
@@ -347,6 +360,88 @@ impl ColumnSet {
         parts
     }
 
+    /// Reorder events ascending by a physics key — the value of an
+    /// event-level leaf (`met`, a run number) or, for an item leaf
+    /// (`muons.pt`), the event's maximum of it (empty events sort first,
+    /// NaN values are ignored). Event integrity is preserved: each event's
+    /// items move together, so the result is the same physics in a
+    /// **clustered layout** that zone-map min/max statistics can actually
+    /// prune (see `docs/QUERY_LANGUAGE.md` on clustering).
+    pub fn order_events_by(&self, leaf: &str) -> Result<ColumnSet, String> {
+        let layout = self.schema.layout();
+        let arr = self
+            .leaves
+            .get(leaf)
+            .ok_or_else(|| format!("no leaf '{leaf}' to order by"))?;
+        let mut keys: Vec<f64> = Vec::with_capacity(self.n_events);
+        match self.innermost_list_of(leaf, &layout) {
+            None => {
+                for ev in 0..self.n_events {
+                    keys.push(arr.get_f64(ev));
+                }
+            }
+            Some(key_list) => {
+                let off = &self.offsets[&key_list];
+                for ev in 0..self.n_events {
+                    let mut k = f64::NEG_INFINITY;
+                    for i in off[ev] as usize..off[ev + 1] as usize {
+                        let v = arr.get_f64(i);
+                        if v > k {
+                            k = v;
+                        }
+                    }
+                    keys.push(k);
+                }
+            }
+        }
+        let mut perm: Vec<usize> = (0..self.n_events).collect();
+        perm.sort_by(|&a, &b| keys[a].total_cmp(&keys[b]));
+        Ok(self.reorder_events(&perm))
+    }
+
+    /// Rebuild the set with events in `perm` order (each event's items
+    /// stay contiguous and in their original in-event order).
+    fn reorder_events(&self, perm: &[usize]) -> ColumnSet {
+        let layout = self.schema.layout();
+        let mut offsets = BTreeMap::new();
+        for key in &layout.lists {
+            let off = &self.offsets[key];
+            let mut new_off = Vec::with_capacity(off.len());
+            new_off.push(0i64);
+            let mut acc = 0i64;
+            for &ev in perm {
+                acc += off[ev + 1] - off[ev];
+                new_off.push(acc);
+            }
+            offsets.insert(key.clone(), new_off);
+        }
+        let mut leaves = BTreeMap::new();
+        for (path, _) in &layout.leaves {
+            let src = &self.leaves[path];
+            let mut dst = Array::new(src.prim());
+            match self.innermost_list_of(path, &layout) {
+                Some(key) => {
+                    let off = &self.offsets[&key];
+                    for &ev in perm {
+                        dst.append_range(src, off[ev] as usize, off[ev + 1] as usize);
+                    }
+                }
+                None => {
+                    for &ev in perm {
+                        dst.append_range(src, ev, ev + 1);
+                    }
+                }
+            }
+            leaves.insert(path.clone(), dst);
+        }
+        ColumnSet {
+            schema: self.schema.clone(),
+            n_events: self.n_events,
+            offsets,
+            leaves,
+        }
+    }
+
     /// Keep only the named leaves (and the offsets they need) — the "slim
     /// dataset" operation of Figure 1.
     pub fn project(&self, keep_leaves: &[&str]) -> ColumnSet {
@@ -476,6 +571,27 @@ mod tests {
             &[22.0]
         );
         assert_eq!(parts[1].leaf("met").unwrap().as_f32().unwrap(), &[40.0]);
+    }
+
+    #[test]
+    fn order_events_by_clusters_without_losing_events() {
+        let cs = tiny();
+        // Max pts per event: 50, -inf (empty), 22 → ascending [ev1, ev2, ev0].
+        let by_pt = cs.order_events_by("muons.pt").unwrap();
+        by_pt.validate().unwrap();
+        assert_eq!(by_pt.offsets_of("muons").unwrap(), &[0, 0, 1, 3]);
+        assert_eq!(
+            by_pt.leaf("muons.pt").unwrap().as_f32().unwrap(),
+            &[22.0, 50.0, 30.0]
+        );
+        // Event-level leaves ride along with their event.
+        assert_eq!(by_pt.leaf("met").unwrap().as_f32().unwrap(), &[8.0, 40.0, 12.0]);
+        // Ordering by an event-level key.
+        let by_met = cs.order_events_by("met").unwrap();
+        by_met.validate().unwrap();
+        assert_eq!(by_met.leaf("met").unwrap().as_f32().unwrap(), &[8.0, 12.0, 40.0]);
+        assert_eq!(by_met.offsets_of("muons").unwrap(), &[0, 0, 2, 3]);
+        assert!(cs.order_events_by("nope").is_err());
     }
 
     #[test]

@@ -282,13 +282,15 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
         }
     };
     let mut hist = H1::new(query.n_bins, query.lo, query.hi);
-    ctx.backend
+    let chunks = ctx
+        .backend
         .run_indexed(&query, &part.cs, Some(part.zones.as_ref()), &mut hist)?;
     ctx.store.insert(PartialDoc {
         id: task.id.clone(),
         worker: ctx.id,
         hist,
         events_processed: part.cs.n_events as u64,
+        chunks,
     });
     ctx.board.complete(&task.id);
     let mut s = ctx.stats.lock().unwrap();
@@ -338,6 +340,9 @@ pub struct QueryResult {
     pub skipped: usize,
     /// Events of the scanned partitions.
     pub events: u64,
+    /// Chunk-level skipping across this query's subtasks (the per-query
+    /// face of the process-wide counters in the server's `stats` op).
+    pub chunks: crate::queryir::IndexedRun,
 }
 
 pub struct QueryHandle {
@@ -505,6 +510,7 @@ impl Cluster {
         let mut hist = H1::new(query.n_bins, query.lo, query.hi);
         let mut merged = 0usize;
         let mut events = 0u64;
+        let mut chunks = crate::queryir::IndexedRun::default();
         let deadline = Instant::now() + Duration::from_secs(600);
         while merged < handle.partitions {
             if Instant::now() > deadline {
@@ -519,6 +525,7 @@ impl Cluster {
             for d in docs {
                 hist.merge(&d.hist)?;
                 events += d.events_processed;
+                chunks.absorb(&d.chunks);
                 merged += 1;
             }
             if !progress(merged, handle.partitions, &hist) {
@@ -534,6 +541,7 @@ impl Cluster {
             partitions: merged,
             skipped: handle.skipped,
             events,
+            chunks,
         })
     }
 

@@ -18,6 +18,9 @@ pub struct PartialDoc {
     pub worker: usize,
     pub hist: H1,
     pub events_processed: u64,
+    /// What zone-map chunk skipping did while producing this partial —
+    /// rides along so the aggregator can report per-query skip counters.
+    pub chunks: crate::queryir::IndexedRun,
 }
 
 #[derive(Default)]
@@ -116,6 +119,7 @@ mod tests {
             worker: 0,
             hist: h,
             events_processed: 10,
+            chunks: Default::default(),
         }
     }
 

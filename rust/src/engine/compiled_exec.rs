@@ -11,9 +11,11 @@
 //! This closes the gap the hand-written `columnar_exec` left open: new
 //! physics queries no longer need a Rust function per query — any
 //! query-language program runs at compiled-loop speed. Cut-based and
-//! multi-`fill` bodies included: fused shapes lower to the chunked
-//! mask-and-fill batch kernel (`kernel_info` reports which path a source
-//! query takes). Partitions are **not** necessarily scanned in full: when
+//! multi-`fill` bodies included: batchable shapes — fused single-list
+//! bodies, loop-free per-event bodies, and `range(len)` pair nests —
+//! lower to the chunked mask-and-fill batch kernels (`kernel_info`
+//! reports which path, and which lane family, a source query takes).
+//! Partitions are **not** necessarily scanned in full: when
 //! a zone map is supplied (`run_indexed`), chunks the query's cut provably
 //! rejects are skipped and provably-accepted chunks run unmasked, with
 //! process-wide counters (`zone_stats`) feeding the server's `stats` op.
@@ -202,8 +204,9 @@ impl CompiledTapeBackend {
     }
 
     /// Which kernel a source query takes over this partition's schema:
-    /// `Ok(Some(info))` when the fused chunked (mask-and-fill) batch kernel
-    /// runs, `Ok(None)` when the closure-graph loop runs. Compiles — and
+    /// `Ok(Some(info))` when a chunked (mask-and-fill) batch kernel runs —
+    /// `info.shape` says whether over item, event or pair lanes —
+    /// `Ok(None)` when the closure-graph loop runs. Compiles — and
     /// caches — the program exactly as `run_source` would, so the report
     /// always matches what execution will do.
     pub fn kernel_info(

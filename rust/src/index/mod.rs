@@ -3,10 +3,12 @@
 //! The abstract names four ingredients of human-timescale queries:
 //! columnar data, caching, **indexing**, and code generation. This module
 //! is the indexing ingredient: zone maps (per-partition and per-1024-item
-//! chunk min/max/NaN/count statistics, [`zonemap`]) plus the conservative
-//! interval arithmetic ([`interval`]) that predicate analysis uses to
-//! decide, from statistics alone, whether a cut can possibly pass in a
-//! zone.
+//! chunk min/max/NaN/count statistics, [`zonemap`], including a synthetic
+//! per-list **length** column — [`len_stats_path`] — that makes
+//! `len(event.muons)` cuts decidable at event granularity) plus the
+//! conservative interval arithmetic ([`interval`]) that predicate
+//! analysis uses to decide, from statistics alone, whether a cut can
+//! possibly pass in a zone.
 //!
 //! How it threads through the stack:
 //!
@@ -30,4 +32,4 @@ pub mod interval;
 pub mod zonemap;
 
 pub use interval::{Interval, Tri};
-pub use zonemap::{ColumnStats, ColumnZones, ZoneMap, ZONE_CHUNK};
+pub use zonemap::{len_stats_path, ColumnStats, ColumnZones, ZoneMap, ZONE_CHUNK};

@@ -33,6 +33,15 @@ use std::collections::BTreeMap;
 /// (`queryir::lower::CHUNK`), so chunk skipping never splits a batch.
 pub const ZONE_CHUNK: usize = 1024;
 
+/// Zone-map key of the synthetic per-event **length** column of a list:
+/// statistics over `offsets[i+1] - offsets[i]`, on the event chunk grid.
+/// This is what makes `len(event.muons) >= 2`-style cuts decidable at
+/// event granularity. The `#` cannot appear in a schema attribute name, so
+/// the key can never collide with a real leaf.
+pub fn len_stats_path(list: &str) -> String {
+    format!("{list}#len")
+}
+
 /// Min/max/NaN/count statistics of one column over one zone.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ColumnStats {
@@ -122,6 +131,20 @@ impl ZoneMap {
             }
             let zones = ColumnZones { whole, chunks };
             columns.insert(path.clone(), zones);
+        }
+        // Synthetic per-event length statistics of every list, on the
+        // event chunk grid — what makes `len(...)` cuts decidable at
+        // event granularity (`queryir::predicate`).
+        for (path, off) in &cs.offsets {
+            let n = off.len().saturating_sub(1);
+            let mut whole = ColumnStats::empty();
+            let mut chunks = vec![ColumnStats::empty(); n.div_ceil(chunk_items)];
+            for i in 0..n {
+                let v = (off[i + 1] - off[i]) as f64;
+                whole.update(v);
+                chunks[i / chunk_items].update(v);
+            }
+            columns.insert(len_stats_path(path), ColumnZones { whole, chunks });
         }
         ZoneMap {
             chunk_items,
@@ -304,6 +327,19 @@ mod tests {
         assert!(s.has_nan && s.count == 1);
         assert!(!s.interval().has_values());
         assert!(s.interval().nan);
+    }
+
+    #[test]
+    fn synthetic_length_column_tracks_offsets() {
+        let zm = ZoneMap::build(&tiny());
+        let len = zm.column(&len_stats_path("muons")).unwrap();
+        // Events have 2, 0, 1 muons.
+        assert_eq!((len.whole.min, len.whole.max), (0.0, 2.0));
+        assert_eq!(len.whole.count, 3);
+        assert!(!len.whole.has_nan);
+        // On the event grid, not the item grid.
+        let zm2 = ZoneMap::build_with_chunk(&tiny(), 2);
+        assert_eq!(zm2.column(&len_stats_path("muons")).unwrap().chunks.len(), 2);
     }
 
     #[test]

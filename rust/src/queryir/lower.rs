@@ -28,6 +28,35 @@
 //!     evaluated once per chunk, so a cut or weight common to several fill
 //!     sites is computed once.
 //!
+//! The chunked machinery covers **three fused-shape families**, all built
+//! on the same interned mask/value/weight buffer table:
+//!
+//!   * **item kernels** — the fused single-list loop above, lanes are
+//!     `CHUNK` contiguous items;
+//!   * **event kernels** — per-event bodies over event-scalar leaves
+//!     (`event.met`), `len(...)` cuts and indexed item loads
+//!     (`event.muons[0].pt`, a bounds-checked gather), lanes are `CHUNK`
+//!     contiguous events with assignments inlined by substitution
+//!     (`transform::inline_event_body`);
+//!   * **pair kernels** — the `for i in range(n): for j in range(i+1, n)`
+//!     nest of the paper's dimuon-mass query: per-event `(i, j)` index
+//!     pairs are materialized in scalar nest order into flat pair buffers,
+//!     `CHUNK` pairs at a time, and the batch pass gathers item loads
+//!     through them — bit-identical to the scalar nest because pair order
+//!     and per-element arithmetic are preserved.
+//!
+//! The only fused shape left on the scalar closure loop is an expression
+//! tree deeper than `MAX_BATCH_DEPTH` (or a pair/event body that reads
+//! state the batch pass cannot express, e.g. a loop index used as a value).
+//!
+//! All kernel state — the scratch histogram, the batch buffer table, the
+//! pair-index buffers and the slot file — lives in a [`KernelScratch`]
+//! pool. `run_parallel` creates one per worker thread and reuses it across
+//! every morsel that thread pulls (the Leis-style per-worker state of
+//! morsel-driven execution), so the kernel hot path performs **zero
+//! per-morsel heap allocation**; columns are resolved once per partition
+//! (`BoundCols`), not once per morsel.
+//!
 //! The full pipeline this module sits in — and every stage's defining file
 //! — is documented in `docs/ARCHITECTURE.md`; the source language itself in
 //! `docs/QUERY_LANGUAGE.md`.
@@ -62,7 +91,7 @@
 
 use super::ast::{BinOp, CmpOp};
 use super::predicate::{self, CutPredicate, ZoneDecision};
-use super::transform::{CExpr, CStmt, FlatProgram};
+use super::transform::{self, CExpr, CStmt, FlatProgram};
 use crate::columnar::arrays::{ColumnRange, ColumnSet};
 use crate::hist::H1;
 use crate::index::ZoneMap;
@@ -74,12 +103,13 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// small enough that expr + weight + temporaries stay L1/L2-resident.
 pub const CHUNK: usize = 1024;
 
-/// Deepest batch expression the chunked kernel will take. `beval` keeps one
-/// `CHUNK`-sized stack buffer per binary node on the recursion path, so this
-/// bounds kernel stack use (~8 KiB × depth). Exceeding it is the **only**
-/// fused shape that still runs the scalar closure loop: cut bodies and
-/// multi-`Fill` bodies batch (mask-and-fill), so a fused body falls back
-/// only when some mask/value/weight tree is pathologically deep.
+/// Deepest batch expression the chunked kernels will take. `beval` keeps
+/// one `CHUNK`-sized stack buffer per binary node on the recursion path,
+/// so this bounds kernel stack use (~8 KiB × depth). Exceeding it is the
+/// **only** fused shape that still runs the scalar closure loop; event
+/// and pair bodies additionally fall back when they read state the batch
+/// pass cannot express (a loop index as a value, computed item indices,
+/// cross-event slot state — see `transform::inline_body`).
 const MAX_BATCH_DEPTH: usize = 24;
 
 /// Default morsel size for `run_parallel`, in events. Physics partitions
@@ -88,14 +118,25 @@ const MAX_BATCH_DEPTH: usize = 24;
 /// plenty of morsels for work stealing.
 pub const DEFAULT_MORSEL_EVENTS: usize = 8192;
 
-/// Execution context: column views resolved once per partition, plus the
-/// mutable slot file. Expression closures only read (`&Ctx`); statement
-/// closures mutate slots (`&mut Ctx`).
-pub struct Ctx<'a> {
-    item_cols: Vec<&'a [f32]>,
-    event_cols: Vec<&'a [f32]>,
+/// Column bindings of one partition, resolved once per `run_*` call and
+/// shared (immutably) by every morsel thread — resolving leaf paths per
+/// morsel would mean string lookups and three `Vec` allocations in the
+/// hot path.
+struct BoundCols<'a> {
+    items: Vec<&'a [f32]>,
+    events: Vec<&'a [f32]>,
     offsets: Vec<&'a [i64]>,
-    slots: Vec<f64>,
+}
+
+/// Execution context of the scalar closure paths: the partition's resolved
+/// columns plus the mutable slot file (pooled in [`KernelScratch`]).
+/// Expression closures only read (`&Ctx`); statement closures mutate slots
+/// (`&mut Ctx`).
+pub struct Ctx<'a> {
+    item_cols: &'a [&'a [f32]],
+    event_cols: &'a [&'a [f32]],
+    offsets: &'a [&'a [i64]],
+    slots: &'a mut [f64],
     event: usize,
     /// One past the last event of the window this context executes; the
     /// `__list_total` builtin reads offsets at this index so fused loops
@@ -131,7 +172,14 @@ pub struct CompiledProgram {
     pub n_slots: usize,
     body: Vec<StmtFn>,
     fused: Option<FusedLoop>,
-    /// Cut predicate of the fused body, when it has the analyzable shape —
+    /// Chunked per-event kernel, when the top-level body is a loop-free
+    /// `Fill`/`If` tree over event leaves, `len(...)` and indexed item
+    /// loads (assignments inlined by substitution).
+    event_kernel: Option<ChunkedBody>,
+    /// Chunked pair-loop kernel, when the body is the canonical
+    /// `range(len(l))` pair nest.
+    pair_kernel: Option<PairKernel>,
+    /// Cut predicate of the body, when it has an analyzable shape —
     /// what zone-map partition/chunk classification evaluates.
     predicate: Option<CutPredicate>,
     /// Canonical hash of the transformed program this was lowered from.
@@ -144,17 +192,31 @@ impl CompiledProgram {
         self.fused.is_some()
     }
 
-    /// Does the fused loop lower to the chunked SIMD-friendly kernel
-    /// (the mask-and-fill batch pass)?
+    /// Does this program lower to a chunked SIMD-friendly kernel (item,
+    /// event or pair shaped mask-and-fill batch pass)?
     pub fn has_chunked_kernel(&self) -> bool {
-        self.fused.as_ref().is_some_and(|f| f.chunked.is_some())
+        self.chunked_info().is_some()
+    }
+
+    /// Which chunked kernel family this program lowered to, if any.
+    pub fn kernel_shape(&self) -> Option<KernelShape> {
+        self.chunked_info().map(|i| i.shape)
     }
 
     /// Shape of the chunked kernel this program lowered to, if any —
     /// observability for tests, benches and server stats.
     pub fn chunked_info(&self) -> Option<ChunkedInfo> {
-        let ck = self.fused.as_ref()?.chunked.as_ref()?;
+        let (shape, ck) = if let Some(ck) = self.fused.as_ref().and_then(|f| f.chunked.as_ref()) {
+            (KernelShape::Items, ck)
+        } else if let Some(pk) = &self.pair_kernel {
+            (KernelShape::Pairs, &pk.body)
+        } else if let Some(ck) = &self.event_kernel {
+            (KernelShape::Events, ck)
+        } else {
+            return None;
+        };
         Some(ChunkedInfo {
+            shape,
             fills: ck.fills.len(),
             masked_fills: ck.fills.iter().filter(|f| f.mask.is_some()).count(),
             buffers: ck.bufs.len(),
@@ -162,7 +224,7 @@ impl CompiledProgram {
     }
 
     /// The cut predicate zone-map pruning evaluates, if the program has
-    /// the analyzable fused shape.
+    /// an analyzable shape.
     pub fn predicate(&self) -> Option<&CutPredicate> {
         self.predicate.as_ref()
     }
@@ -173,10 +235,34 @@ impl CompiledProgram {
     }
 }
 
-/// Lowering report for the chunked kernel: how many fill sites batched,
-/// how many are cut-guarded, and how large the shared buffer table is.
+/// Which chunked kernel family a program lowered to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelShape {
+    /// Fused single-list loop: contiguous item lanes.
+    Items,
+    /// Per-event body: contiguous event lanes (gathers for item loads).
+    Events,
+    /// `range(len(l))` pair nest: materialized `(i, j)` index-pair lanes.
+    Pairs,
+}
+
+impl std::fmt::Display for KernelShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelShape::Items => "items",
+            KernelShape::Events => "events",
+            KernelShape::Pairs => "pairs",
+        })
+    }
+}
+
+/// Lowering report for the chunked kernel: which kernel family, how many
+/// fill sites batched, how many are cut-guarded, and how large the shared
+/// buffer table is.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkedInfo {
+    /// Which kernel family (item, event or pair lanes).
+    pub shape: KernelShape,
     /// Batch-lowered fill sites.
     pub fills: usize,
     /// Fill sites guarded by a cut mask.
@@ -235,8 +321,10 @@ impl ParallelCfg {
 
 /// What zone-map pruning did during one (indexed) run: how many
 /// `CHUNK`-aligned zone chunks were skipped outright, ran unmasked because
-/// the cut was provably true, or ran the normal masked scan. Each chunk is
-/// counted once per run even when morsel windows split it (the window
+/// the cut was provably true, or ran the normal masked scan. For item
+/// kernels a chunk spans `CHUNK` items; for event kernels it spans `CHUNK`
+/// events (the grid the zone map keeps for event-level leaves). Each chunk
+/// is counted once per run even when morsel windows split it (the window
 /// containing the chunk's start reports it). All zeros when no zone map
 /// was supplied or the program is not prunable.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -266,21 +354,29 @@ impl IndexedRun {
 /// Per-partition chunk classification, precomputed once per run from the
 /// program's predicate and the partition's zone map.
 struct ChunkPlan {
-    /// Decision per `CHUNK`-aligned item chunk of the fused list.
+    /// Whether `decisions` indexes `CHUNK`-aligned **event** chunks (the
+    /// event kernel's grid) rather than item chunks (the item kernel's).
+    events: bool,
+    /// Decision per `CHUNK`-aligned chunk of the kernel's lane space.
     decisions: Vec<ZoneDecision>,
 }
 
 /// Build the chunk plan for one partition, when everything lines up: the
-/// program is prunable, runs the chunked kernel, and the zone map's grid
-/// matches the kernel's batch width.
+/// program is prunable, runs a chunked kernel of the matching granularity,
+/// and the zone map's grid matches the kernel's batch width.
 fn chunk_plan(prog: &CompiledProgram, zm: &ZoneMap) -> Option<ChunkPlan> {
     if zm.chunk_items != CHUNK {
         return None;
     }
-    let fused = prog.fused.as_ref()?;
-    fused.chunked.as_ref()?;
-    let decisions = prog.predicate.as_ref()?.classify_chunks(zm)?;
-    Some(ChunkPlan { decisions })
+    let pred = prog.predicate.as_ref()?;
+    let events = pred.is_event_level();
+    if events {
+        prog.event_kernel.as_ref()?;
+    } else {
+        prog.fused.as_ref()?.chunked.as_ref()?;
+    }
+    let decisions = pred.classify_chunks(zm)?;
+    Some(ChunkPlan { events, decisions })
 }
 
 /// FNV-1a, used for program fingerprints and cache keys.
@@ -313,37 +409,53 @@ pub fn fingerprint(prog: &FlatProgram) -> u64 {
 
 /// Lower a transformed program into a compiled closure graph.
 pub fn lower(prog: &FlatProgram) -> Result<CompiledProgram, String> {
+    let fused = match &prog.fused {
+        Some(b) => compile_fused(b)?,
+        None => None,
+    };
+    // The three chunked families are mutually exclusive by shape (a fused
+    // body is one list loop, an event body has no loops, a pair body is a
+    // range nest); only try the next family when the previous one did not
+    // apply.
+    let event_kernel = if fused.is_some() {
+        None
+    } else {
+        compile_event_kernel(&prog.body)
+    };
+    let pair_kernel = if fused.is_some() || event_kernel.is_some() {
+        None
+    } else {
+        compile_pair_kernel(&prog.body)
+    };
     Ok(CompiledProgram {
         item_cols: prog.item_cols.clone(),
         event_cols: prog.event_cols.clone(),
         lists: prog.lists.clone(),
         n_slots: prog.n_slots,
         body: compile_block(&prog.body)?,
-        fused: match &prog.fused {
-            Some(b) => compile_fused(b)?,
-            None => None,
-        },
+        fused,
+        event_kernel,
+        pair_kernel,
         predicate: predicate::extract(prog),
         fingerprint: fingerprint(prog),
     })
 }
 
-/// Resolve the program's column bindings against one partition and build a
-/// fresh execution context for the event window `[ev_lo, ev_hi)`.
-fn bind<'a>(prog: &CompiledProgram, view: &ColumnRange<'a>) -> Result<Ctx<'a>, String> {
-    let cs = view.cs;
-    let mut item_cols = Vec::with_capacity(prog.item_cols.len());
+/// Resolve the program's column bindings against one partition — once per
+/// `run_*` call, shared by every morsel.
+fn bind<'a>(prog: &CompiledProgram, cs: &'a ColumnSet) -> Result<BoundCols<'a>, String> {
+    let mut items = Vec::with_capacity(prog.item_cols.len());
     for path in &prog.item_cols {
-        item_cols.push(
+        items.push(
             cs.leaf(path)
                 .ok_or_else(|| format!("no leaf '{path}'"))?
                 .as_f32()
                 .ok_or_else(|| format!("leaf '{path}' is not f32"))?,
         );
     }
-    let mut event_cols = Vec::with_capacity(prog.event_cols.len());
+    let mut events = Vec::with_capacity(prog.event_cols.len());
     for path in &prog.event_cols {
-        event_cols.push(
+        events.push(
             cs.leaf(path)
                 .ok_or_else(|| format!("no leaf '{path}'"))?
                 .as_f32()
@@ -365,14 +477,10 @@ fn bind<'a>(prog: &CompiledProgram, view: &ColumnRange<'a>) -> Result<Ctx<'a>, S
         }
         offsets.push(off);
     }
-    Ok(Ctx {
-        item_cols,
-        event_cols,
+    Ok(BoundCols {
+        items,
+        events,
         offsets,
-        slots: vec![0.0; prog.n_slots],
-        event: view.ev_lo,
-        ev_hi: view.ev_hi,
-        oob: Cell::new(false),
     })
 }
 
@@ -393,9 +501,20 @@ pub fn run_indexed(
     hist: &mut H1,
 ) -> Result<IndexedRun, String> {
     let plan = zm.and_then(|z| chunk_plan(prog, z));
+    let cols = bind(prog, cs)?;
     let mut report = IndexedRun::default();
-    let view = cs.range(0, cs.n_events);
-    run_range_inner(prog, &view, hist, true, plan.as_ref(), &mut report)?;
+    let mut scratch = KernelScratch::new();
+    run_range_inner(
+        prog,
+        &cols,
+        0,
+        cs.n_events,
+        hist,
+        true,
+        plan.as_ref(),
+        &mut report,
+        &mut scratch,
+    )?;
     Ok(report)
 }
 
@@ -408,59 +527,134 @@ pub fn run_range(
     view: &ColumnRange<'_>,
     hist: &mut H1,
 ) -> Result<(), String> {
-    run_range_inner(prog, view, hist, true, None, &mut IndexedRun::default())
+    run_range_scratch(prog, view, hist, &mut KernelScratch::new())
 }
 
-/// `run`, but with the chunked kernel disabled — the closure-graph fused
-/// loop runs instead. Exists so benches and tests can measure/verify the
-/// two lowerings against each other.
-pub fn run_scalar(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
-    let view = cs.range(0, cs.n_events);
-    run_range_inner(prog, &view, hist, false, None, &mut IndexedRun::default())
-}
-
-fn run_range_inner(
+/// `run_range` with a caller-owned [`KernelScratch`]: the scratch
+/// histogram, batch buffer table, pair-index buffers and slot file are
+/// taken from (and returned to) the pool instead of being allocated per
+/// call, so driving many windows through one scratch performs no heap
+/// allocation in the kernel after the first window warms the pool. This is
+/// what `run_parallel` does per worker thread; it is public so embedders
+/// (and the scratch-reuse bench ablation) can do the same.
+pub fn run_range_scratch(
     prog: &CompiledProgram,
     view: &ColumnRange<'_>,
+    hist: &mut H1,
+    scratch: &mut KernelScratch,
+) -> Result<(), String> {
+    let cols = bind(prog, view.cs)?;
+    run_range_inner(
+        prog,
+        &cols,
+        view.ev_lo,
+        view.ev_hi,
+        hist,
+        true,
+        None,
+        &mut IndexedRun::default(),
+        scratch,
+    )
+}
+
+/// `run`, but with every chunked kernel disabled — the closure-graph
+/// scalar loop runs instead. Exists so benches and tests can measure and
+/// verify the two lowerings against each other.
+pub fn run_scalar(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    let cols = bind(prog, cs)?;
+    run_range_inner(
+        prog,
+        &cols,
+        0,
+        cs.n_events,
+        hist,
+        false,
+        None,
+        &mut IndexedRun::default(),
+        &mut KernelScratch::new(),
+    )
+}
+
+fn oob_check(oob: bool) -> Result<(), String> {
+    if oob {
+        Err("compiled query read out of bounds (index past list end?)".to_string())
+    } else {
+        Ok(())
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_range_inner(
+    prog: &CompiledProgram,
+    cols: &BoundCols<'_>,
+    ev_lo: usize,
+    ev_hi: usize,
     hist: &mut H1,
     allow_chunked: bool,
     plan: Option<&ChunkPlan>,
     report: &mut IndexedRun,
+    scratch: &mut KernelScratch,
 ) -> Result<(), String> {
-    let mut ctx = bind(prog, view)?;
     if let Some(f) = &prog.fused {
-        let off = ctx.offsets[f.list];
-        let k_lo = off[view.ev_lo] as usize;
-        let k_hi = off[view.ev_hi] as usize;
+        let off = cols.offsets[f.list];
+        let k_lo = off[ev_lo] as usize;
+        let k_hi = off[ev_hi] as usize;
         // The chunked kernel indexes content slices directly; confirm they
         // cover the item range first (the scalar path bounds-checks every
         // load and reports OOB through the sticky flag instead).
-        let in_bounds = ctx.item_cols.iter().all(|c| c.len() >= k_hi);
-        match &f.chunked {
-            Some(ck) if allow_chunked && in_bounds => {
-                run_chunked(ck, &ctx.item_cols, k_lo, k_hi, hist, plan, report);
-            }
-            _ => {
-                for k in k_lo..k_hi {
-                    ctx.slots[f.slot] = k as f64;
-                    for s in &f.body {
-                        s(&mut ctx, hist);
-                    }
-                }
+        let in_bounds = cols.items.iter().all(|c| c.len() >= k_hi);
+        if let Some(ck) = &f.chunked {
+            if allow_chunked && in_bounds {
+                run_chunked_items(ck, cols, k_lo, k_hi, hist, plan, report, scratch);
+                return Ok(());
             }
         }
-    } else {
-        for ev in view.ev_lo..view.ev_hi {
-            ctx.event = ev;
-            for s in &prog.body {
+        let mut ctx = Ctx {
+            item_cols: &cols.items,
+            event_cols: &cols.events,
+            offsets: &cols.offsets,
+            slots: scratch.slot_file(prog.n_slots),
+            event: ev_lo,
+            ev_hi,
+            oob: Cell::new(false),
+        };
+        for k in k_lo..k_hi {
+            ctx.slots[f.slot] = k as f64;
+            for s in &f.body {
                 s(&mut ctx, hist);
             }
         }
+        return oob_check(ctx.oob.get());
     }
-    if ctx.oob.get() {
-        return Err("compiled query read out of bounds (index past list end?)".to_string());
+    if allow_chunked {
+        if let Some(pk) = &prog.pair_kernel {
+            if pair_window_safe(pk, cols, ev_lo, ev_hi) {
+                run_chunked_pairs(pk, cols, ev_lo, ev_hi, hist, scratch);
+                return Ok(());
+            }
+        } else if let Some(ek) = &prog.event_kernel {
+            if event_window_safe(ek, cols, ev_lo, ev_hi) {
+                run_chunked_events(ek, cols, ev_lo, ev_hi, hist, plan, report, scratch);
+                return Ok(());
+            }
+        }
     }
-    Ok(())
+    let mut ctx = Ctx {
+        item_cols: &cols.items,
+        event_cols: &cols.events,
+        offsets: &cols.offsets,
+        slots: scratch.slot_file(prog.n_slots),
+        event: ev_lo,
+        ev_hi,
+        oob: Cell::new(false),
+    };
+    for ev in ev_lo..ev_hi {
+        ctx.event = ev;
+        for s in &prog.body {
+            s(&mut ctx, hist);
+        }
+    }
+    oob_check(ctx.oob.get())
 }
 
 /// Morsel-driven parallel execution of one partition: split the event range
@@ -487,10 +681,12 @@ pub fn run_parallel(
 
 /// `run_parallel` with zone-map chunk skipping: the partition's chunk
 /// classification is computed once and every morsel consults it (zone
-/// chunks are item-aligned, so a morsel window covering part of a skipped
-/// chunk still skips its part). Bins and counts match the unindexed
-/// sequential run exactly; the returned report merges all morsels'
-/// reports, with every zone chunk counted once (see [`IndexedRun`]).
+/// chunks align to the kernel's lane grid — items for item kernels,
+/// events for event kernels — so a morsel window covering part of a
+/// skipped chunk still skips its part). Bins and counts match the
+/// unindexed sequential run exactly; the returned report merges all
+/// morsels' reports, with every zone chunk counted once (see
+/// [`IndexedRun`]).
 pub fn run_parallel_indexed(
     prog: &CompiledProgram,
     cs: &ColumnSet,
@@ -500,13 +696,16 @@ pub fn run_parallel_indexed(
 ) -> Result<IndexedRun, String> {
     let plan = zm.and_then(|z| chunk_plan(prog, z));
     let plan = plan.as_ref();
+    // Resolve columns once; every morsel thread shares the bindings.
+    let cols = bind(prog, cs)?;
+    let cols = &cols;
     let morsel = cfg.resolved_morsel_events();
     let n_morsels = cs.n_events.div_ceil(morsel.max(1)).max(1);
     let threads = cfg.resolved_threads().min(n_morsels);
     let mut report = IndexedRun::default();
     if threads <= 1 {
-        let view = cs.range(0, cs.n_events);
-        run_range_inner(prog, &view, hist, true, plan, &mut report)?;
+        let mut scratch = KernelScratch::new();
+        run_range_inner(prog, cols, 0, cs.n_events, hist, true, plan, &mut report, &mut scratch)?;
         return Ok(report);
     }
     let (n_bins, lo, hi) = (hist.n_bins(), hist.lo, hist.hi);
@@ -516,6 +715,10 @@ pub fn run_parallel_indexed(
         let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             handles.push(s.spawn(|| {
+                // Per-worker kernel state, created once and reused across
+                // every morsel this thread pulls: after the first morsel
+                // warms the pool, the kernel hot path allocates nothing.
+                let mut scratch = KernelScratch::new();
                 let mut done = Vec::new();
                 let mut local = IndexedRun::default();
                 loop {
@@ -526,8 +729,17 @@ pub fn run_parallel_indexed(
                     let ev_lo = i * morsel;
                     let ev_hi = ((i + 1) * morsel).min(cs.n_events);
                     let mut h = H1::new(n_bins, lo, hi);
-                    let view = cs.range(ev_lo, ev_hi);
-                    let r = run_range_inner(prog, &view, &mut h, true, plan, &mut local);
+                    let r = run_range_inner(
+                        prog,
+                        cols,
+                        ev_lo,
+                        ev_hi,
+                        &mut h,
+                        true,
+                        plan,
+                        &mut local,
+                        &mut scratch,
+                    );
                     done.push((i, r.map(|_| h)));
                 }
                 (done, local)
@@ -552,6 +764,118 @@ pub fn run_parallel_indexed(
     Ok(report)
 }
 
+// --------------------------------------------------------- kernel scratch
+
+/// Pooled kernel state: the scratch histogram, the batch buffer table, the
+/// pair-index buffers and the scalar paths' slot file. Everything execution
+/// needs beyond the borrowed columns lives here, so a pool created once per
+/// worker thread (`run_parallel`) makes the per-morsel hot path
+/// allocation-free: pools only ever grow, and stabilize after the first
+/// morsel of the largest program/binning they serve.
+pub struct KernelScratch {
+    /// Scratch histogram: `n_bins` bins + underflow + overflow lanes.
+    bins: Vec<f64>,
+    /// One `CHUNK`-wide buffer per interned batch expression.
+    bufs: Vec<Vec<f64>>,
+    /// Materialized global item indices of the pair kernel's `i` lanes.
+    pair_a: Vec<usize>,
+    /// ... and its `j` lanes.
+    pair_b: Vec<usize>,
+    /// Slot file of the scalar closure paths.
+    slots: Vec<f64>,
+    /// Pool-growth events (see [`KernelScratch::allocation_events`]).
+    grows: u64,
+}
+
+impl Default for KernelScratch {
+    fn default() -> KernelScratch {
+        KernelScratch::new()
+    }
+}
+
+impl KernelScratch {
+    /// An empty pool; buffers are grown on first use.
+    pub fn new() -> KernelScratch {
+        KernelScratch {
+            bins: Vec::new(),
+            bufs: Vec::new(),
+            pair_a: Vec::new(),
+            pair_b: Vec::new(),
+            slots: Vec::new(),
+            grows: 0,
+        }
+    }
+
+    /// How many times the pool grew a buffer since creation. Reusing a
+    /// scratch across morsels of one program keeps this constant after the
+    /// first use — the regression guard for the zero-allocation hot path.
+    pub fn allocation_events(&self) -> u64 {
+        self.grows
+    }
+
+    /// A zeroed slot file of length `n`.
+    fn slot_file(&mut self, n: usize) -> &mut [f64] {
+        if self.slots.len() < n {
+            self.grows += 1;
+            self.slots.resize(n, 0.0);
+        }
+        let s = &mut self.slots[..n];
+        s.fill(0.0);
+        s
+    }
+
+    fn ensure(&mut self, bins: usize, n_bufs: usize, pairs: bool) {
+        if self.bins.len() < bins {
+            self.grows += 1;
+            self.bins.resize(bins, 0.0);
+        }
+        self.bins[..bins].fill(0.0);
+        while self.bufs.len() < n_bufs {
+            self.grows += 1;
+            self.bufs.push(vec![0.0f64; CHUNK]);
+        }
+        if pairs && self.pair_a.len() < CHUNK {
+            self.grows += 1;
+            self.pair_a.resize(CHUNK, 0);
+        }
+        if pairs && self.pair_b.len() < CHUNK {
+            self.grows += 1;
+            self.pair_b.resize(CHUNK, 0);
+        }
+    }
+
+    /// Zeroed scratch histogram (`bins` lanes) + buffer table for `n_bufs`
+    /// batch expressions.
+    fn kernel(&mut self, bins: usize, n_bufs: usize) -> (&mut [f64], &mut [Vec<f64>]) {
+        self.ensure(bins, n_bufs, false);
+        let KernelScratch { bins: b, bufs, .. } = self;
+        (&mut b[..bins], &mut bufs[..n_bufs])
+    }
+
+    /// `kernel` plus the two pair-index buffers.
+    #[allow(clippy::type_complexity)]
+    fn pair_kernel(
+        &mut self,
+        bins: usize,
+        n_bufs: usize,
+    ) -> (&mut [f64], &mut [Vec<f64>], &mut [usize], &mut [usize]) {
+        self.ensure(bins, n_bufs, true);
+        let KernelScratch {
+            bins: b,
+            bufs,
+            pair_a,
+            pair_b,
+            ..
+        } = self;
+        (
+            &mut b[..bins],
+            &mut bufs[..n_bufs],
+            &mut pair_a[..CHUNK],
+            &mut pair_b[..CHUNK],
+        )
+    }
+}
+
 // --------------------------------------------------------- chunked kernel
 
 /// A fused body lowered for batch evaluation: a table of distinct batch
@@ -567,6 +891,11 @@ struct ChunkedBody {
     /// proven true everywhere by the zone map) their evaluation is skipped
     /// along with the masks themselves.
     mask_only: Vec<bool>,
+    /// Every `Gather` leaf of the buffer table (event kernels only):
+    /// `(list, col, j)` triples `event_window_safe` bounds-checks per
+    /// window before the kernel may run — sorted so one list's gathers
+    /// are adjacent and its offsets are scanned once per window.
+    gathers: Vec<(usize, usize, f64)>,
 }
 
 /// One `Fill` of a chunked body, as indices into the shared buffer table.
@@ -580,16 +909,32 @@ struct FillSite {
     weight: Option<usize>,
 }
 
-/// Batch expression: the fused loop body re-expressed over the loop index.
+/// Batch expression: a loop body re-expressed over the kernel's lanes.
 /// Every node evaluates a whole chunk into an `&mut [f64]` with simple
 /// element-wise loops that LLVM autovectorizes; there is no per-element
-/// dispatch left.
+/// dispatch left. The leaf set depends on the kernel family ([`LaneKind`]):
+/// item kernels use `Idx`/`Load`, event kernels `EvLoad`/`EvLen`/`Gather`,
+/// pair kernels `LoadA`/`LoadB` — construction (`batch_compile`)
+/// guarantees a kernel only contains its own leaves.
 enum BExpr {
     Const(f64),
-    /// The global item index `k` as f64.
+    /// Item lanes: the global item index `k` as f64.
     Idx,
-    /// `item_cols[col][k]` — loads are contiguous in a fused loop.
+    /// Item lanes: `item_cols[col][k]` — loads are contiguous.
     Load(usize),
+    /// Event lanes: `event_cols[col][ev]` — loads are contiguous.
+    EvLoad(usize),
+    /// Event lanes: `offsets[list][ev+1] - offsets[list][ev]` as f64.
+    EvLen(usize),
+    /// Event lanes: `item_cols[col][(offsets[list][ev] as f64 + j) as
+    /// usize]` — an indexed item load (`event.muons[0].pt`) at a constant
+    /// in-event index. `event_window_safe` proves every lane in bounds
+    /// before the kernel runs, so the gather needs no per-lane check.
+    Gather { col: usize, list: usize, j: f64 },
+    /// Pair lanes: item load at the pair's first (`i`) global index.
+    LoadA(usize),
+    /// Pair lanes: item load at the pair's second (`j`) global index.
+    LoadB(usize),
     Bin(BinOp, Box<BExpr>, Box<BExpr>),
     Cmp(CmpOp, Box<BExpr>, Box<BExpr>),
     And(Box<BExpr>, Box<BExpr>),
@@ -623,25 +968,50 @@ fn compile_fused(block: &[CStmt]) -> Result<Option<FusedLoop>, String> {
         list,
         slot: *slot,
         body: compile_block(body)?,
-        chunked: compile_chunked(body, *slot),
+        chunked: compile_chunked(body, BatchMode::Items { slot: *slot }),
     }))
 }
 
-/// Try to lower a fused loop body to the chunked kernel. The body may be
-/// any tree of `if` cuts around `Fill` statements (`try_fuse` admits
-/// nothing else): every cut condition becomes a 0/1 mask buffer, nested
-/// cuts combine by conjunction (`else` branches by negation), and each
-/// fill site records which mask/value/weight buffers it reads. Distinct
-/// expressions are interned into one shared buffer table keyed by their
-/// folded `CExpr`, so structurally equal subexpressions across fill sites
-/// are evaluated once per chunk. `fold` is applied before interning so the
-/// scalar and batch lowerings see identical arithmetic.
+/// Try to lower a loop-free per-event body to the event-level chunked
+/// kernel: assignments inline by substitution
+/// (`transform::inline_event_body`), then the `Fill`/`If` tree batches
+/// with the same mask machinery as the item kernel — over event lanes.
+fn compile_event_kernel(body: &[CStmt]) -> Option<ChunkedBody> {
+    let norm = transform::inline_event_body(body)?;
+    compile_chunked(&norm, BatchMode::Events)
+}
+
+/// Which lane family `batch_compile` targets, and the loop-slot context it
+/// needs to recognize that family's leaves.
+#[derive(Clone, Copy)]
+enum BatchMode {
+    /// Fused single-list loop: `slot` holds the global item index.
+    Items { slot: usize },
+    /// Loop-free per-event body (assignments already inlined).
+    Events,
+    /// `range(len(l))` pair nest: item loads at `__list_base(list, i|j)`.
+    Pairs {
+        list: usize,
+        slot_i: usize,
+        slot_j: usize,
+    },
+}
+
+/// Try to lower a `Fill`/`If` statement tree to a chunked kernel body:
+/// every cut condition becomes a 0/1 mask buffer, nested cuts combine by
+/// conjunction (`else` branches by negation), and each fill site records
+/// which mask/value/weight buffers it reads. Distinct expressions are
+/// interned into one shared buffer table keyed by their folded `CExpr`, so
+/// structurally equal subexpressions across fill sites are evaluated once
+/// per chunk. `fold` is applied before interning so the scalar and batch
+/// lowerings see identical arithmetic.
 ///
-/// Returns `None` — the fused loop then runs the scalar closure body —
-/// only when some expression tree exceeds `MAX_BATCH_DEPTH`.
-fn compile_chunked(body: &[CStmt], slot: usize) -> Option<ChunkedBody> {
+/// Returns `None` — the program then runs the scalar closure body — when
+/// some expression tree exceeds `MAX_BATCH_DEPTH` or reads state the lane
+/// family cannot express (see `batch_compile`).
+fn compile_chunked(body: &[CStmt], mode: BatchMode) -> Option<ChunkedBody> {
     let mut b = ChunkedBuilder {
-        slot,
+        mode,
         keys: Vec::new(),
         bufs: Vec::new(),
         fills: Vec::new(),
@@ -662,17 +1032,47 @@ fn compile_chunked(body: &[CStmt], slot: usize) -> Option<ChunkedBody> {
         }
     }
     let mask_only = used_mask.iter().zip(&used_value).map(|(m, v)| *m && !*v).collect();
+    let mut gathers = Vec::new();
+    for e in &b.bufs {
+        collect_gathers(e, &mut gathers);
+    }
+    gathers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    gathers.dedup();
     Some(ChunkedBody {
         bufs: b.bufs,
         fills: b.fills,
         mask_only,
+        gathers,
     })
+}
+
+/// Collect every `Gather` leaf of a batch expression as `(list, col, j)`.
+fn collect_gathers(e: &BExpr, out: &mut Vec<(usize, usize, f64)>) {
+    match e {
+        BExpr::Gather { col, list, j } => out.push((*list, *col, *j)),
+        BExpr::Const(_)
+        | BExpr::Idx
+        | BExpr::Load(_)
+        | BExpr::EvLoad(_)
+        | BExpr::EvLen(_)
+        | BExpr::LoadA(_)
+        | BExpr::LoadB(_) => {}
+        BExpr::Bin(_, l, r)
+        | BExpr::Cmp(_, l, r)
+        | BExpr::And(l, r)
+        | BExpr::Or(l, r)
+        | BExpr::Call2(_, l, r) => {
+            collect_gathers(l, out);
+            collect_gathers(r, out);
+        }
+        BExpr::Not(x) | BExpr::Neg(x) | BExpr::Call1(_, x) => collect_gathers(x, out),
+    }
 }
 
 /// Interning builder for `ChunkedBody`: batch expressions are keyed by
 /// their folded `CExpr` so equal masks, values and weights share a buffer.
 struct ChunkedBuilder {
-    slot: usize,
+    mode: BatchMode,
     keys: Vec<CExpr>,
     bufs: Vec<BExpr>,
     fills: Vec<FillSite>,
@@ -684,7 +1084,7 @@ impl ChunkedBuilder {
         if let Some(i) = self.keys.iter().position(|k| *k == folded) {
             return Some(i);
         }
-        let batch = batch_compile(&folded, self.slot)?;
+        let batch = batch_compile(&folded, self.mode)?;
         if depth(&batch) > MAX_BATCH_DEPTH {
             return None;
         }
@@ -741,48 +1141,104 @@ fn conjoin(mask: Option<&CExpr>, cond: &CExpr) -> CExpr {
     }
 }
 
-fn batch_compile(e: &CExpr, slot: usize) -> Option<BExpr> {
+fn batch_compile(e: &CExpr, mode: BatchMode) -> Option<BExpr> {
     Some(match e {
         CExpr::Const(n) => BExpr::Const(*n),
-        CExpr::Slot(s) if *s == slot => BExpr::Idx,
-        // Any other slot would be per-event state — not fusable anyway.
-        CExpr::Slot(_) => return None,
-        CExpr::LoadItem { col, idx } => match batch_compile(idx, slot)? {
-            // Only direct loads at the loop index are contiguous; computed
-            // indices stay on the bounds-checked scalar path.
-            BExpr::Idx => BExpr::Load(*col),
+        CExpr::Slot(s) => match mode {
+            // The fused loop index is the lane number; any other slot is
+            // per-event state the batch pass cannot read.
+            BatchMode::Items { slot } if *s == slot => BExpr::Idx,
             _ => return None,
         },
-        CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => return None,
+        CExpr::LoadItem { col, idx } => match mode {
+            BatchMode::Items { .. } => match batch_compile(idx, mode)? {
+                // Only direct loads at the loop index are contiguous;
+                // computed indices stay on the bounds-checked scalar path.
+                BExpr::Idx => BExpr::Load(*col),
+                _ => return None,
+            },
+            // Event bodies index items at constant in-event positions
+            // (`event.muons[0].pt` → `__list_base(list, 0)`): a gather
+            // whose window bounds are provable up front. Computed indices
+            // stay on the bounds-checked scalar path.
+            BatchMode::Events => match idx.as_ref() {
+                CExpr::Call(name, args) if *name == "__list_base" && args.len() == 2 => {
+                    let (CExpr::Const(lid), CExpr::Const(j)) = (&args[0], &args[1]) else {
+                        return None;
+                    };
+                    if !(*j >= 0.0 && j.fract() == 0.0) {
+                        return None;
+                    }
+                    BExpr::Gather {
+                        col: *col,
+                        list: *lid as usize,
+                        j: *j,
+                    }
+                }
+                _ => return None,
+            },
+            // Pair bodies load exactly at `__list_base(list, i)` or
+            // `__list_base(list, j)` — the materialized pair lanes.
+            BatchMode::Pairs {
+                list,
+                slot_i,
+                slot_j,
+            } => match idx.as_ref() {
+                CExpr::Call(name, args) if *name == "__list_base" && args.len() == 2 => {
+                    let (CExpr::Const(lid), CExpr::Slot(s)) = (&args[0], &args[1]) else {
+                        return None;
+                    };
+                    if *lid as usize != list {
+                        return None;
+                    }
+                    if *s == slot_i {
+                        BExpr::LoadA(*col)
+                    } else if *s == slot_j {
+                        BExpr::LoadB(*col)
+                    } else {
+                        return None;
+                    }
+                }
+                _ => return None,
+            },
+        },
+        CExpr::LoadEvent { col } => match mode {
+            BatchMode::Events => BExpr::EvLoad(*col),
+            _ => return None,
+        },
+        CExpr::ListLen { list } => match mode {
+            BatchMode::Events => BExpr::EvLen(*list),
+            _ => return None,
+        },
         CExpr::Bin(op, l, r) => BExpr::Bin(
             *op,
-            Box::new(batch_compile(l, slot)?),
-            Box::new(batch_compile(r, slot)?),
+            Box::new(batch_compile(l, mode)?),
+            Box::new(batch_compile(r, mode)?),
         ),
         CExpr::Cmp(op, l, r) => BExpr::Cmp(
             *op,
-            Box::new(batch_compile(l, slot)?),
-            Box::new(batch_compile(r, slot)?),
+            Box::new(batch_compile(l, mode)?),
+            Box::new(batch_compile(r, mode)?),
         ),
         CExpr::And(l, r) => BExpr::And(
-            Box::new(batch_compile(l, slot)?),
-            Box::new(batch_compile(r, slot)?),
+            Box::new(batch_compile(l, mode)?),
+            Box::new(batch_compile(r, mode)?),
         ),
         CExpr::Or(l, r) => BExpr::Or(
-            Box::new(batch_compile(l, slot)?),
-            Box::new(batch_compile(r, slot)?),
+            Box::new(batch_compile(l, mode)?),
+            Box::new(batch_compile(r, mode)?),
         ),
-        CExpr::Not(x) => BExpr::Not(Box::new(batch_compile(x, slot)?)),
-        CExpr::Neg(x) => BExpr::Neg(Box::new(batch_compile(x, slot)?)),
+        CExpr::Not(x) => BExpr::Not(Box::new(batch_compile(x, mode)?)),
+        CExpr::Neg(x) => BExpr::Neg(Box::new(batch_compile(x, mode)?)),
         CExpr::Call(name, args) => {
             let one = |f: fn(f64) -> f64, args: &[CExpr]| -> Option<BExpr> {
-                Some(BExpr::Call1(f, Box::new(batch_compile(&args[0], slot)?)))
+                Some(BExpr::Call1(f, Box::new(batch_compile(&args[0], mode)?)))
             };
             let two = |f: fn(f64, f64) -> f64, args: &[CExpr]| -> Option<BExpr> {
                 Some(BExpr::Call2(
                     f,
-                    Box::new(batch_compile(&args[0], slot)?),
-                    Box::new(batch_compile(&args[1], slot)?),
+                    Box::new(batch_compile(&args[0], mode)?),
+                    Box::new(batch_compile(&args[1], mode)?),
                 ))
             };
             match (*name, args.len()) {
@@ -796,7 +1252,7 @@ fn batch_compile(e: &CExpr, slot: usize) -> Option<BExpr> {
                 ("abs", 1) => one(f64::abs, args)?,
                 ("min", 2) => two(f64::min, args)?,
                 ("max", 2) => two(f64::max, args)?,
-                // __list_base / __list_total and anything unknown.
+                // Bare __list_base / __list_total and anything unknown.
                 _ => return None,
             }
         }
@@ -805,7 +1261,14 @@ fn batch_compile(e: &CExpr, slot: usize) -> Option<BExpr> {
 
 fn depth(e: &BExpr) -> usize {
     1 + match e {
-        BExpr::Const(_) | BExpr::Idx | BExpr::Load(_) => 0,
+        BExpr::Const(_)
+        | BExpr::Idx
+        | BExpr::Load(_)
+        | BExpr::EvLoad(_)
+        | BExpr::EvLen(_)
+        | BExpr::Gather { .. }
+        | BExpr::LoadA(_)
+        | BExpr::LoadB(_) => 0,
         BExpr::Bin(_, l, r)
         | BExpr::Cmp(_, l, r)
         | BExpr::And(l, r)
@@ -815,30 +1278,107 @@ fn depth(e: &BExpr) -> usize {
     }
 }
 
-/// Evaluate a batch expression for items `[base, base + out.len())` into
-/// `out`. Each node is one tight element-wise loop; the per-element
-/// arithmetic (ops, order, f32→f64 widening, comparison encodings) is
-/// bit-identical to the closure graph so the two lowerings agree exactly.
-fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
+/// What the lanes of one batch mean: a run of contiguous items, a run of
+/// contiguous events, or materialized pair-index buffers.
+#[derive(Clone, Copy)]
+enum LaneKind<'a> {
+    /// Lane `i` is item `base + i`.
+    Items { base: usize },
+    /// Lane `i` is event `base + i`.
+    Events { base: usize },
+    /// Lane `i` is the item pair `(a[i], b[i])` (global content indices).
+    Pairs { a: &'a [usize], b: &'a [usize] },
+}
+
+/// Evaluation context of one batch: the partition's columns plus the lane
+/// mapping.
+struct Lanes<'a> {
+    cols: &'a BoundCols<'a>,
+    kind: LaneKind<'a>,
+}
+
+/// Evaluate a batch expression over `out.len()` lanes into `out`. Each
+/// node is one tight element-wise loop; the per-element arithmetic (ops,
+/// order, f32→f64 widening, comparison encodings) is bit-identical to the
+/// closure graph so the two lowerings agree exactly. Leaf/lane mismatches
+/// are unreachable by construction (`batch_compile` emits only the lane
+/// family's own leaves).
+fn beval(e: &BExpr, lanes: &Lanes<'_>, out: &mut [f64]) {
     let n = out.len();
     match e {
         BExpr::Const(c) => out.fill(*c),
         BExpr::Idx => {
+            let LaneKind::Items { base } = lanes.kind else {
+                unreachable!("Idx outside item lanes")
+            };
             for (i, o) in out.iter_mut().enumerate() {
                 *o = (base + i) as f64;
             }
         }
         BExpr::Load(col) => {
-            let src = &cols[*col][base..base + n];
+            let LaneKind::Items { base } = lanes.kind else {
+                unreachable!("Load outside item lanes")
+            };
+            let src = &lanes.cols.items[*col][base..base + n];
             for (o, &v) in out.iter_mut().zip(src) {
                 *o = v as f64;
+            }
+        }
+        BExpr::EvLoad(col) => {
+            let LaneKind::Events { base } = lanes.kind else {
+                unreachable!("EvLoad outside event lanes")
+            };
+            let src = &lanes.cols.events[*col][base..base + n];
+            for (o, &v) in out.iter_mut().zip(src) {
+                *o = v as f64;
+            }
+        }
+        BExpr::EvLen(list) => {
+            let LaneKind::Events { base } = lanes.kind else {
+                unreachable!("EvLen outside event lanes")
+            };
+            let off = lanes.cols.offsets[*list];
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = (off[base + i + 1] - off[base + i]) as f64;
+            }
+        }
+        BExpr::Gather { col, list, j } => {
+            let LaneKind::Events { base } = lanes.kind else {
+                unreachable!("Gather outside event lanes")
+            };
+            let off = lanes.cols.offsets[*list];
+            let src = lanes.cols.items[*col];
+            for (i, o) in out.iter_mut().enumerate() {
+                // Same float arithmetic and saturating cast as the scalar
+                // closure pair (`__list_base` then the indexed load);
+                // `event_window_safe` proved the index in bounds.
+                let k = (off[base + i] as f64 + *j) as usize;
+                *o = src[k] as f64;
+            }
+        }
+        BExpr::LoadA(col) => {
+            let LaneKind::Pairs { a, .. } = lanes.kind else {
+                unreachable!("LoadA outside pair lanes")
+            };
+            let src = lanes.cols.items[*col];
+            for (o, &k) in out.iter_mut().zip(a) {
+                *o = src[k] as f64;
+            }
+        }
+        BExpr::LoadB(col) => {
+            let LaneKind::Pairs { b, .. } = lanes.kind else {
+                unreachable!("LoadB outside pair lanes")
+            };
+            let src = lanes.cols.items[*col];
+            for (o, &k) in out.iter_mut().zip(b) {
+                *o = src[k] as f64;
             }
         }
         BExpr::Bin(op, l, r) => {
             let mut tb = [0.0f64; CHUNK];
             let t = &mut tb[..n];
-            beval(l, cols, base, out);
-            beval(r, cols, base, t);
+            beval(l, lanes, out);
+            beval(r, lanes, t);
             match op {
                 BinOp::Add => {
                     for (o, &v) in out.iter_mut().zip(t.iter()) {
@@ -865,8 +1405,8 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
         BExpr::Cmp(op, l, r) => {
             let mut tb = [0.0f64; CHUNK];
             let t = &mut tb[..n];
-            beval(l, cols, base, out);
-            beval(r, cols, base, t);
+            beval(l, lanes, out);
+            beval(r, lanes, t);
             match op {
                 CmpOp::Lt => {
                     for (o, &v) in out.iter_mut().zip(t.iter()) {
@@ -900,13 +1440,13 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
                 }
             }
         }
-        // Fused bodies are side-effect-free, so evaluating both operands
+        // Chunked bodies are side-effect-free, so evaluating both operands
         // and combining is value-identical to the short-circuit closures.
         BExpr::And(l, r) => {
             let mut tb = [0.0f64; CHUNK];
             let t = &mut tb[..n];
-            beval(l, cols, base, out);
-            beval(r, cols, base, t);
+            beval(l, lanes, out);
+            beval(r, lanes, t);
             for (o, &v) in out.iter_mut().zip(t.iter()) {
                 *o = (*o != 0.0 && v != 0.0) as i64 as f64;
             }
@@ -914,26 +1454,26 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
         BExpr::Or(l, r) => {
             let mut tb = [0.0f64; CHUNK];
             let t = &mut tb[..n];
-            beval(l, cols, base, out);
-            beval(r, cols, base, t);
+            beval(l, lanes, out);
+            beval(r, lanes, t);
             for (o, &v) in out.iter_mut().zip(t.iter()) {
                 *o = (*o != 0.0 || v != 0.0) as i64 as f64;
             }
         }
         BExpr::Not(x) => {
-            beval(x, cols, base, out);
+            beval(x, lanes, out);
             for o in out.iter_mut() {
                 *o = (*o == 0.0) as i64 as f64;
             }
         }
         BExpr::Neg(x) => {
-            beval(x, cols, base, out);
+            beval(x, lanes, out);
             for o in out.iter_mut() {
                 *o = -*o;
             }
         }
         BExpr::Call1(f, x) => {
-            beval(x, cols, base, out);
+            beval(x, lanes, out);
             for o in out.iter_mut() {
                 *o = f(*o);
             }
@@ -941,8 +1481,8 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
         BExpr::Call2(f, l, r) => {
             let mut tb = [0.0f64; CHUNK];
             let t = &mut tb[..n];
-            beval(l, cols, base, out);
-            beval(r, cols, base, t);
+            beval(l, lanes, out);
+            beval(r, lanes, t);
             for (o, &v) in out.iter_mut().zip(t.iter()) {
                 *o = f(*o, v);
             }
@@ -950,10 +1490,139 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
     }
 }
 
-/// Run the chunked kernel for items `[k_lo, k_hi)`: evaluate every buffer
-/// of the shared expression table one chunk at a time, then accumulate all
-/// fill sites with a branch-free select chain into a scratch histogram
-/// (`n_bins` bins + an underflow and an overflow slot).
+/// Sequential kernel accumulator: the scratch histogram plus the running
+/// moments, carried across every chunk of one kernel run and flushed into
+/// the caller's `H1` once at the end — so the addition sequence is exactly
+/// the scalar loop's.
+struct Acc<'a> {
+    /// `n_bins` bins + underflow + overflow lanes (from the scratch pool).
+    bins: &'a mut [f64],
+    n_bins: usize,
+    lo: f64,
+    width: f64,
+    count: f64,
+    sum: f64,
+    sum2: f64,
+}
+
+impl<'a> Acc<'a> {
+    fn new(bins: &'a mut [f64], hist: &H1) -> Acc<'a> {
+        Acc {
+            bins,
+            n_bins: hist.n_bins(),
+            lo: hist.lo,
+            width: hist.hi - hist.lo,
+            count: 0.0,
+            sum: 0.0,
+            sum2: 0.0,
+        }
+    }
+
+    /// One fill: cut mask and NaN-skip as data flow, not branches. Same
+    /// index arithmetic as `H1::bin_index`; the selects compile to cmovs.
+    #[inline(always)]
+    fn fill(&mut self, live: bool, x: f64, w: f64) {
+        let ok = live && !x.is_nan();
+        let xv = if ok { x } else { 0.0 };
+        let wv = if ok { w } else { 0.0 };
+        let t = (xv - self.lo) / self.width * self.n_bins as f64;
+        let bi = t as usize; // saturating: t >= 0 here when xv >= lo
+        let idx = if xv < self.lo {
+            self.n_bins
+        } else if bi < self.n_bins {
+            bi
+        } else {
+            self.n_bins + 1
+        };
+        self.bins[idx] += wv;
+        self.count += wv;
+        self.sum += wv * xv;
+        self.sum2 += wv * xv * xv;
+    }
+
+    fn flush(self, hist: &mut H1) {
+        for (b, s) in hist.bins.iter_mut().zip(self.bins.iter()) {
+            *b += s;
+        }
+        hist.underflow += self.bins[self.n_bins];
+        hist.overflow += self.bins[self.n_bins + 1];
+        hist.count += self.count;
+        hist.sum += self.sum;
+        hist.sum2 += self.sum2;
+    }
+}
+
+/// Evaluate the shared buffer table for one chunk of `n` lanes (skipping
+/// mask-only buffers on a take-all chunk).
+fn eval_bufs(ck: &ChunkedBody, lanes: &Lanes<'_>, n: usize, take_all: bool, bufs: &mut [Vec<f64>]) {
+    for (bi, (e, buf)) in ck.bufs.iter().zip(bufs.iter_mut()).enumerate() {
+        if take_all && ck.mask_only[bi] {
+            continue;
+        }
+        beval(e, lanes, &mut buf[..n]);
+    }
+}
+
+/// Accumulate every fill site over one evaluated chunk, lane-major and
+/// fill-site-minor — exactly the statement order of the scalar loop. The
+/// single-fill case (by far the most common) hoists its buffer views out
+/// of the lane loop.
+fn accumulate(fills: &[FillSite], bufs: &[Vec<f64>], n: usize, take_all: bool, acc: &mut Acc<'_>) {
+    if let [f] = fills {
+        let mask = match f.mask {
+            Some(m) if !take_all => Some(&bufs[m][..n]),
+            _ => None,
+        };
+        let xs = &bufs[f.expr][..n];
+        let ws = f.weight.map(|w| &bufs[w][..n]);
+        for i in 0..n {
+            let live = match mask {
+                Some(m) => m[i] != 0.0,
+                None => true,
+            };
+            let w = match ws {
+                Some(wb) => wb[i],
+                None => 1.0,
+            };
+            acc.fill(live, xs[i], w);
+        }
+    } else {
+        for i in 0..n {
+            for f in fills {
+                let live = match f.mask {
+                    Some(m) if !take_all => bufs[m][i] != 0.0,
+                    _ => true,
+                };
+                let w = match f.weight {
+                    Some(wb) => bufs[wb][i],
+                    None => 1.0,
+                };
+                acc.fill(live, bufs[f.expr][i], w);
+            }
+        }
+    }
+}
+
+/// Look up the zone decision and whether this batch reports its chunk.
+/// Each zone chunk is counted once even when morsel windows split it:
+/// only the batch that starts at the chunk boundary reports it (the union
+/// of morsel windows covers every boundary exactly once, so the per-run
+/// totals stay honest chunk counts).
+fn chunk_decision(plan: Option<&ChunkPlan>, base: usize) -> (ZoneDecision, bool) {
+    let decision = match plan {
+        Some(p) => match p.decisions.get(base / CHUNK) {
+            Some(d) => *d,
+            None => ZoneDecision::Scan,
+        },
+        None => ZoneDecision::Scan,
+    };
+    (decision, plan.is_some() && base % CHUNK == 0)
+}
+
+/// Run the item-lane chunked kernel for items `[k_lo, k_hi)`: evaluate
+/// every buffer of the shared expression table one chunk at a time, then
+/// accumulate all fill sites with a branch-free select chain into the
+/// pool's scratch histogram.
 ///
 /// Chunks align to absolute `CHUNK` boundaries (the first batch may be
 /// short), so each batch maps to exactly one zone-map chunk and `plan` can
@@ -973,38 +1642,60 @@ fn beval(e: &BExpr, cols: &[&[f32]], base: usize, out: &mut [f64]) {
 ///     so the mask replaces the scalar loop's branch without changing a
 ///     single bit. A `Skip` chunk removes only such no-op contributions; a
 ///     `TakeAll` chunk's masks would have been 1 at every item.
-fn run_chunked(
+#[allow(clippy::too_many_arguments)]
+fn run_chunked_items(
     ck: &ChunkedBody,
-    cols: &[&[f32]],
+    cols: &BoundCols<'_>,
     k_lo: usize,
     k_hi: usize,
     hist: &mut H1,
     plan: Option<&ChunkPlan>,
     report: &mut IndexedRun,
+    scratch: &mut KernelScratch,
 ) {
-    let n_bins = hist.n_bins();
-    let lo = hist.lo;
-    let width = hist.hi - hist.lo;
-    let mut scratch = vec![0.0f64; n_bins + 2];
-    let (mut count, mut sum, mut sum2) = (0.0f64, 0.0f64, 0.0f64);
-    // One chunk-wide buffer per distinct batch expression; allocated once
-    // per kernel run (= once per morsel), reused across chunks.
-    let mut bufs: Vec<Vec<f64>> = ck.bufs.iter().map(|_| vec![0.0f64; CHUNK]).collect();
-    let mut base = k_lo;
-    while base < k_hi {
-        let n = (CHUNK - base % CHUNK).min(k_hi - base);
-        let decision = match plan {
-            Some(p) => match p.decisions.get(base / CHUNK) {
-                Some(d) => *d,
-                None => ZoneDecision::Scan,
-            },
-            None => ZoneDecision::Scan,
-        };
-        // Count each zone chunk once even when morsel windows split it:
-        // only the batch that starts at the chunk boundary reports it
-        // (the union of morsel windows covers every boundary exactly
-        // once, so the per-run totals stay honest chunk counts).
-        let counted = plan.is_some() && base % CHUNK == 0;
+    run_chunked_linear(ck, cols, k_lo, k_hi, false, hist, plan, report, scratch);
+}
+
+/// Run the event-lane chunked kernel for events `[ev_lo, ev_hi)`. Same
+/// structure and bit-identity argument as `run_chunked_items` with events
+/// as lanes; `plan` decisions index the zone map's **event** chunk grid
+/// (the per-event statistics of event leaves and list lengths). The
+/// caller proved every load in bounds (`event_window_safe`).
+#[allow(clippy::too_many_arguments)]
+fn run_chunked_events(
+    ck: &ChunkedBody,
+    cols: &BoundCols<'_>,
+    ev_lo: usize,
+    ev_hi: usize,
+    hist: &mut H1,
+    plan: Option<&ChunkPlan>,
+    report: &mut IndexedRun,
+    scratch: &mut KernelScratch,
+) {
+    run_chunked_linear(ck, cols, ev_lo, ev_hi, true, hist, plan, report, scratch);
+}
+
+/// The shared chunk loop of the two linear-lane kernels (`events` picks
+/// the lane family and which plan granularity applies).
+#[allow(clippy::too_many_arguments)]
+fn run_chunked_linear(
+    ck: &ChunkedBody,
+    cols: &BoundCols<'_>,
+    lane_lo: usize,
+    lane_hi: usize,
+    events: bool,
+    hist: &mut H1,
+    plan: Option<&ChunkPlan>,
+    report: &mut IndexedRun,
+    scratch: &mut KernelScratch,
+) {
+    let plan = plan.filter(|p| p.events == events);
+    let (bins, bufs) = scratch.kernel(hist.n_bins() + 2, ck.bufs.len());
+    let mut acc = Acc::new(bins, hist);
+    let mut base = lane_lo;
+    while base < lane_hi {
+        let n = (CHUNK - base % CHUNK).min(lane_hi - base);
+        let (decision, counted) = chunk_decision(plan, base);
         if decision == ZoneDecision::Skip {
             if counted {
                 report.chunks_skipped += 1;
@@ -1020,68 +1711,265 @@ fn run_chunked(
                 report.chunks_scanned += 1;
             }
         }
-        for (bi, (e, buf)) in ck.bufs.iter().zip(bufs.iter_mut()).enumerate() {
-            if take_all && ck.mask_only[bi] {
-                continue;
-            }
-            beval(e, cols, base, &mut buf[..n]);
-        }
-        // Resolve each fill site's buffers once per chunk; the item-major
-        // loop below then replays the scalar loop's operation sequence.
-        let views: Vec<(Option<&[f64]>, &[f64], Option<&[f64]>)> = ck
-            .fills
-            .iter()
-            .map(|f| {
-                let mask = if take_all { None } else { f.mask };
-                (
-                    mask.map(|m| &bufs[m][..n]),
-                    &bufs[f.expr][..n],
-                    f.weight.map(|w| &bufs[w][..n]),
-                )
-            })
-            .collect();
-        for i in 0..n {
-            for &(mask, xs, ws) in &views {
-                let live = match mask {
-                    Some(m) => m[i] != 0.0,
-                    None => true,
-                };
-                let x = xs[i];
-                // Cut mask and NaN-skip as data flow, not branches.
-                let ok = live && !x.is_nan();
-                let xv = if ok { x } else { 0.0 };
-                let w = match ws {
-                    Some(wb) => wb[i],
-                    None => 1.0,
-                };
-                let wv = if ok { w } else { 0.0 };
-                // Same index arithmetic as H1::bin_index; the selects
-                // compile to cmovs, not branches.
-                let t = (xv - lo) / width * n_bins as f64;
-                let bi = t as usize; // saturating: t >= 0 here when xv >= lo
-                let idx = if xv < lo {
-                    n_bins
-                } else if bi < n_bins {
-                    bi
-                } else {
-                    n_bins + 1
-                };
-                scratch[idx] += wv;
-                count += wv;
-                sum += wv * xv;
-                sum2 += wv * xv * xv;
-            }
-        }
+        let kind = if events {
+            LaneKind::Events { base }
+        } else {
+            LaneKind::Items { base }
+        };
+        let lanes = Lanes { cols, kind };
+        eval_bufs(ck, &lanes, n, take_all, bufs);
+        accumulate(&ck.fills, bufs, n, take_all, &mut acc);
         base += n;
     }
-    for (b, s) in hist.bins.iter_mut().zip(&scratch) {
-        *b += s;
+    acc.flush(hist);
+}
+
+// ------------------------------------------------------------ pair kernel
+
+/// The lowered `range(len(l))` pair nest: which list, where each loop
+/// starts, and the batch body over pair lanes.
+struct PairKernel {
+    /// The list both loops range over.
+    list: usize,
+    /// First outer index `i` (0 for `range(n)`).
+    i_lo: i64,
+    /// Where the inner index `j` starts for a given `i`.
+    j_start: PairStart,
+    body: ChunkedBody,
+}
+
+/// Inner-loop start: `range(i + c, n)` or `range(c, n)`.
+#[derive(Clone, Copy)]
+enum PairStart {
+    /// `j` starts at `i + c` (the canonical unordered-pair nest has c=1).
+    Rel(i64),
+    /// `j` starts at the constant `c` (ordered pairs / full cross product).
+    Abs(i64),
+}
+
+/// A constant, integral, non-negative index bound.
+fn const_index(e: &CExpr) -> Option<i64> {
+    match e {
+        CExpr::Const(c) if *c >= 0.0 && c.fract() == 0.0 && *c <= (1i64 << 52) as f64 => {
+            Some(*c as i64)
+        }
+        _ => None,
     }
-    hist.underflow += scratch[n_bins];
-    hist.overflow += scratch[n_bins + 1];
-    hist.count += count;
-    hist.sum += sum;
-    hist.sum2 += sum2;
+}
+
+/// Recognize the inner loop's start expression.
+fn pair_start(e: &CExpr, slot_i: usize) -> Option<PairStart> {
+    if let Some(c) = const_index(e) {
+        return Some(PairStart::Abs(c));
+    }
+    match e {
+        CExpr::Bin(BinOp::Add, l, r) => match (l.as_ref(), r.as_ref()) {
+            (CExpr::Slot(s), other) | (other, CExpr::Slot(s)) if *s == slot_i => {
+                Some(PairStart::Rel(const_index(other)?))
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Try to lower a per-event body of the shape
+///
+/// ```text
+/// n = len(event.l)                  (any leading assigns)
+/// for i in range(n):                (or range(c0, n))
+///     for j in range(i + 1, n):     (or range(c, n))
+///         ... assigns + fills/ifs over event.l[i] / event.l[j] ...
+/// ```
+///
+/// to the pair kernel. Assignments at every level inline by substitution;
+/// both loop bounds must resolve to the same `len(l)`; the body's item
+/// loads must sit exactly at `__list_base(l, i)` / `__list_base(l, j)`
+/// (anything else — the indices used as values, event leaves, other lists
+/// — refuses, and the scalar closure nest runs instead).
+fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
+    let mut env = transform::SlotEnv::new();
+    // Top level: leading assigns fold into the env, then exactly one
+    // LoopRange and nothing after it.
+    let mut it = body.iter();
+    let (slot_i, outer_lo, outer_hi, outer_body) = loop {
+        match it.next()? {
+            CStmt::Assign { slot, expr } => {
+                let e = env.subst(expr)?;
+                env.bind(*slot, e)?;
+            }
+            CStmt::LoopRange { slot, lo, hi, body } => break (*slot, lo, hi, body),
+            _ => return None,
+        }
+    };
+    if it.next().is_some() {
+        return None;
+    }
+    let i_lo = const_index(&fold(&env.subst(outer_lo)?))?;
+    let CExpr::ListLen { list } = env.subst(outer_hi)? else {
+        return None;
+    };
+    // The loop variable stands for itself inside the nest.
+    env.bind_loop_var(slot_i);
+    // Outer body: assigns (they may reference `i`), then the inner loop.
+    let mut it = outer_body.iter();
+    let (slot_j, inner_lo, inner_hi, inner_body) = loop {
+        match it.next()? {
+            CStmt::Assign { slot, expr } => {
+                let e = env.subst(expr)?;
+                env.bind(*slot, e)?;
+            }
+            CStmt::LoopRange { slot, lo, hi, body } => break (*slot, lo, hi, body),
+            _ => return None,
+        }
+    };
+    if it.next().is_some() {
+        return None;
+    }
+    // Both loops must scan the same list.
+    match env.subst(inner_hi)? {
+        CExpr::ListLen { list: l2 } if l2 == list => {}
+        _ => return None,
+    }
+    let j_start = pair_start(&fold(&env.subst(inner_lo)?), slot_i)?;
+    env.bind_loop_var(slot_j);
+    let norm = transform::inline_body(inner_body, &mut env)?;
+    env.finish()?;
+    if norm.is_empty() {
+        return None;
+    }
+    let body = compile_chunked(
+        &norm,
+        BatchMode::Pairs {
+            list,
+            slot_i,
+            slot_j,
+        },
+    )?;
+    Some(PairKernel {
+        list,
+        i_lo,
+        j_start,
+        body,
+    })
+}
+
+/// Can the event kernel index this window directly? Event leaves must
+/// cover the window, and for every gather the offsets must be
+/// non-negative and monotone with the *last* event's index in bounds —
+/// monotonicity makes it the window maximum, so every lane's load is
+/// proven in bounds up front. Anything off falls back to the scalar
+/// closure loop, whose loads are bounds-checked per read (preserving the
+/// scalar path's exact out-of-bounds behavior).
+fn event_window_safe(ck: &ChunkedBody, cols: &BoundCols<'_>, ev_lo: usize, ev_hi: usize) -> bool {
+    if ev_lo >= ev_hi {
+        return true;
+    }
+    if cols.events.iter().any(|c| c.len() < ev_hi) {
+        return false;
+    }
+    // Gathers are sorted by list, so each list's offsets are validated
+    // once per window however many columns gather through them.
+    let mut checked_list = None;
+    for &(list, col, j) in &ck.gathers {
+        let off = cols.offsets[list];
+        if checked_list != Some(list) {
+            if off[ev_lo] < 0 || off[ev_lo..ev_hi].windows(2).any(|w| w[1] < w[0]) {
+                return false;
+            }
+            checked_list = Some(list);
+        }
+        // Same float arithmetic as the gather itself, at the window's
+        // maximum offset.
+        let k_max = (off[ev_hi - 1] as f64 + j) as usize;
+        if k_max >= cols.items[col].len() {
+            return false;
+        }
+    }
+    true
+}
+
+/// Can the pair kernel index this window directly? Offsets must be
+/// non-negative and monotone over the window and every item column must
+/// cover the window's items — then every materialized pair index is in
+/// bounds by construction (`off[ev] + i < off[ev+1] <= off[ev_hi]`).
+/// Anything off falls back to the bounds-checked scalar nest.
+fn pair_window_safe(pk: &PairKernel, cols: &BoundCols<'_>, ev_lo: usize, ev_hi: usize) -> bool {
+    let off = cols.offsets[pk.list];
+    if off[ev_lo] < 0 {
+        return false;
+    }
+    if off[ev_lo..=ev_hi].windows(2).any(|w| w[1] < w[0]) {
+        return false;
+    }
+    let k_hi = off[ev_hi] as usize;
+    cols.items.iter().all(|c| c.len() >= k_hi)
+}
+
+/// Run the pair-lane chunked kernel for events `[ev_lo, ev_hi)`: walk the
+/// scalar nest's `(event, i, j)` order, materializing the global index
+/// pairs into the pool's flat pair buffers, and flush the interned batch
+/// pass every `CHUNK` pairs. Pair order is exactly the scalar nest's and
+/// the accumulator runs sequentially across flushes, so the result is
+/// bit-identical to the closure-graph loop (same argument as the item
+/// kernel — the lanes just enumerate pairs instead of items).
+fn run_chunked_pairs(
+    pk: &PairKernel,
+    cols: &BoundCols<'_>,
+    ev_lo: usize,
+    ev_hi: usize,
+    hist: &mut H1,
+    scratch: &mut KernelScratch,
+) {
+    let ck = &pk.body;
+    let (bins, bufs, pa, pb) = scratch.pair_kernel(hist.n_bins() + 2, ck.bufs.len());
+    let mut acc = Acc::new(bins, hist);
+    let off = cols.offsets[pk.list];
+    let mut t = 0usize;
+    for ev in ev_lo..ev_hi {
+        let base = off[ev] as usize;
+        // Same i64 arithmetic as the scalar loop bounds (`lo as i64 ..
+        // hi as i64`); `pair_window_safe` guarantees n >= 0.
+        let n = off[ev + 1] - off[ev];
+        let mut i = pk.i_lo;
+        while i < n {
+            let mut j = match pk.j_start {
+                PairStart::Rel(c) => i + c,
+                PairStart::Abs(c) => c,
+            };
+            while j < n {
+                pa[t] = base + i as usize;
+                pb[t] = base + j as usize;
+                t += 1;
+                if t == CHUNK {
+                    let lanes = Lanes {
+                        cols,
+                        kind: LaneKind::Pairs {
+                            a: &pa[..t],
+                            b: &pb[..t],
+                        },
+                    };
+                    eval_bufs(ck, &lanes, t, false, bufs);
+                    accumulate(&ck.fills, bufs, t, false, &mut acc);
+                    t = 0;
+                }
+                j += 1;
+            }
+            i += 1;
+        }
+    }
+    if t > 0 {
+        let lanes = Lanes {
+            cols,
+            kind: LaneKind::Pairs {
+                a: &pa[..t],
+                b: &pb[..t],
+            },
+        };
+        eval_bufs(ck, &lanes, t, false, bufs);
+        accumulate(&ck.fills, bufs, t, false, &mut acc);
+    }
+    acc.flush(hist);
 }
 
 // ------------------------------------------------------- closure lowering
@@ -1483,6 +2371,7 @@ for event in dataset:
         assert_eq!(
             cp.chunked_info(),
             Some(ChunkedInfo {
+                shape: KernelShape::Items,
                 fills: 1,
                 masked_fills: 1,
                 buffers: 2, // the mask and the fill value
@@ -1553,6 +2442,7 @@ for event in dataset:
         assert_eq!(
             cp.chunked_info(),
             Some(ChunkedInfo {
+                shape: KernelShape::Items,
                 fills: 3,
                 masked_fills: 2,
                 // mask, muon.pt, 0.5, muon.eta, muon.phi — the shared cut
@@ -1789,5 +2679,209 @@ for ev in dataset:
         let fc = fingerprint(&queryir::compile(c, &cs.schema).unwrap());
         assert_eq!(fa, fb, "renaming/whitespace must not change the tape hash");
         assert_ne!(fa, fc, "different programs must hash differently");
+    }
+
+    /// Event-level bodies — event leaves, `len()` cuts, assignments —
+    /// lower to the event chunked kernel, bit-identical to the scalar
+    /// closure loop.
+    #[test]
+    fn event_body_lowers_to_event_kernel() {
+        let cs = generate_drellyan(3_000, 107);
+        let src = "\
+for event in dataset:
+    if event.met > 20 and len(event.muons) >= 2:
+        fill(event.met, 0.5)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(!cp.is_fused());
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Events));
+        let mut a = H1::new(48, 5.0, 80.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(48, 5.0, 80.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    /// Assignments inline into the event kernel by substitution, with
+    /// results identical to the stateful scalar execution.
+    #[test]
+    fn event_assignments_inline_into_event_kernel() {
+        let cs = generate_drellyan(700, 108);
+        let src = "\
+for event in dataset:
+    m = event.met
+    x = m * 2 + 1
+    fill(x, 0.25)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Events));
+        let mut a = H1::new(32, 0.0, 200.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(32, 0.0, 200.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.total(), 0.25 * 700.0);
+    }
+
+    /// Mixed event/item bodies — a leading-object load at a constant index
+    /// — gather through the event kernel when the window proves in bounds,
+    /// and still agree with the scalar loop to the bit.
+    #[test]
+    fn leading_object_load_gathers_in_event_kernel() {
+        let cs = generate_drellyan(2_000, 109);
+        let src = "\
+for event in dataset:
+    m = event.muons[0]
+    if len(event.muons) > 0:
+        fill(m.pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Events));
+        let mut a = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(64, 0.0, 128.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    /// The paper's pair queries lower to the pair kernel and agree with
+    /// the scalar closure nest to the last bit, moments included.
+    #[test]
+    fn pair_loop_lowers_to_pair_kernel() {
+        let cs = generate_drellyan(2_500, 110);
+        for src in [table3::MASS_PAIRS, table3::PTSUM_PAIRS] {
+            let prog = queryir::compile(src, &cs.schema).unwrap();
+            let cp = lower(&prog).unwrap();
+            assert!(!cp.is_fused());
+            assert_eq!(cp.kernel_shape(), Some(KernelShape::Pairs));
+            let mut a = H1::new(64, 0.0, 128.0);
+            run(&cp, &cs, &mut a).unwrap();
+            let mut b = H1::new(64, 0.0, 128.0);
+            run_scalar(&cp, &cs, &mut b).unwrap();
+            assert_eq!(a, b, "{src}");
+            assert!(a.total() > 0.0, "{src}");
+        }
+    }
+
+    /// A cut inside the pair nest batches through the mask machinery.
+    #[test]
+    fn pair_loop_with_cut_is_bit_identical() {
+        let cs = generate_drellyan(2_000, 111);
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            a = event.muons[i]
+            b = event.muons[j]
+            if a.eta * b.eta < 0:
+                fill(a.pt + b.pt, 0.5)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Pairs));
+        let info = cp.chunked_info().unwrap();
+        assert_eq!((info.fills, info.masked_fills), (1, 1));
+        let mut a = H1::new(64, 0.0, 192.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(64, 0.0, 192.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    /// An ordered pair nest (`range(n)` inside `range(n)`) also lowers.
+    #[test]
+    fn full_cross_product_pairs_lower() {
+        let cs = generate_drellyan(900, 112);
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(n):
+            fill(event.muons[i].pt - event.muons[j].pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Pairs));
+        let mut a = H1::new(64, -64.0, 64.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(64, -64.0, 64.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    /// A pair body reading state the batch pass cannot express (the loop
+    /// index as a value) refuses the kernel and still runs correctly.
+    #[test]
+    fn pair_body_outside_the_shape_falls_back_to_scalar() {
+        let cs = generate_drellyan(400, 113);
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            fill(event.muons[i].pt, n)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(!cp.has_chunked_kernel());
+        let mut h = H1::new(32, 0.0, 128.0);
+        run(&cp, &cs, &mut h).unwrap();
+        assert!(h.total() > 0.0);
+    }
+
+    /// `run_range_scratch` reuses the pool across windows: after the first
+    /// window warms it, no further pool growth happens — the
+    /// zero-allocation-per-morsel regression guard.
+    #[test]
+    fn kernel_scratch_reuse_stops_allocating() {
+        let cs = generate_drellyan(4_000, 114);
+        for src in [table3::MUON_PT, table3::MASS_PAIRS, table3::MAX_PT] {
+            let prog = queryir::compile(src, &cs.schema).unwrap();
+            let cp = lower(&prog).unwrap();
+            let mut whole = H1::new(64, 0.0, 128.0);
+            run(&cp, &cs, &mut whole).unwrap();
+            let mut scratch = KernelScratch::new();
+            let mut tiled = H1::new(64, 0.0, 128.0);
+            run_range_scratch(&cp, &cs.range(0, 500), &mut tiled, &mut scratch).unwrap();
+            let warmed = scratch.allocation_events();
+            let mut ev = 500;
+            while ev < cs.n_events {
+                let hi = (ev + 500).min(cs.n_events);
+                run_range_scratch(&cp, &cs.range(ev, hi), &mut tiled, &mut scratch).unwrap();
+                ev = hi;
+            }
+            assert_eq!(
+                scratch.allocation_events(),
+                warmed,
+                "{src}: pool grew after the first morsel"
+            );
+            assert_eq!(whole.bins, tiled.bins, "{src}");
+            assert_eq!(whole.count, tiled.count, "{src}");
+        }
+    }
+
+    /// One scratch serves different programs and binnings back to back
+    /// (pools only grow — a larger program later is fine).
+    #[test]
+    fn kernel_scratch_is_shareable_across_programs() {
+        let cs = generate_drellyan(1_200, 115);
+        let mut scratch = KernelScratch::new();
+        for (src, bins) in [(table3::MUON_PT, 16), (table3::MASS_PAIRS, 128)] {
+            let prog = queryir::compile(src, &cs.schema).unwrap();
+            let cp = lower(&prog).unwrap();
+            let mut pooled = H1::new(bins, 0.0, 128.0);
+            run_range_scratch(&cp, &cs.range(0, cs.n_events), &mut pooled, &mut scratch).unwrap();
+            let mut fresh = H1::new(bins, 0.0, 128.0);
+            run(&cp, &cs, &mut fresh).unwrap();
+            assert_eq!(pooled, fresh, "{src}");
+        }
     }
 }

@@ -26,7 +26,9 @@ pub mod tape;
 pub mod transform;
 
 pub use ast::Program;
-pub use lower::{ChunkedInfo, CompiledProgram, IndexedRun, ParallelCfg};
+pub use lower::{
+    ChunkedInfo, CompiledProgram, IndexedRun, KernelScratch, KernelShape, ParallelCfg,
+};
 pub use parser::parse;
 pub use predicate::{CutPredicate, ZoneDecision};
 pub use transform::{FlatProgram, Transformer};

@@ -18,16 +18,29 @@
 //!     that is 1 everywhere selects every value unchanged);
 //!   * **Scan** — the statistics cannot decide; run the masked kernel.
 //!
+//! Two granularities are analyzable:
+//!
+//!   * **item-level** — the fused single-list body (`try_fuse`'s output):
+//!     masks range over item columns, zones are item chunks;
+//!   * **event-level** — loop-free per-event bodies (assignments inlined
+//!     by `transform::inline_event_body`): masks range over event leaves
+//!     (`event.met`) and list lengths (`len(event.muons)`), and zones are
+//!     **event** chunks — evaluated against the per-event statistics the
+//!     zone maps store for event columns and the synthetic per-list
+//!     length column ([`crate::index::len_stats_path`]).
+//!
 //! Soundness rests on the interval arithmetic being an over-approximation
 //! (see `index::interval`): `Tri::True`/`Tri::False` are proofs about every
 //! item, NaN semantics included (a NaN fails every ordered comparison on
-//! both the analysis and execution sides). Programs outside the fused shape
-//! — per-event state, `len()` cuts, pair loops — simply yield no predicate
-//! and are never pruned.
+//! both the analysis and execution sides). Programs outside both shapes —
+//! per-event accumulation loops, pair loops — simply yield no predicate
+//! and are never pruned, and an unresolvable leaf (an indexed item load in
+//! an event cut, a column missing from the map) degrades to `TOP`, never a
+//! wrong claim.
 
 use super::ast::CmpOp;
-use super::transform::{CExpr, CStmt, FlatProgram};
-use crate::index::{Interval, Tri, ZoneMap};
+use super::transform::{self, CExpr, CStmt, FlatProgram};
+use crate::index::{len_stats_path, Interval, Tri, ZoneMap};
 
 /// What zone-map evaluation decided for one zone (partition or chunk).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,35 +54,96 @@ pub enum ZoneDecision {
     Scan,
 }
 
-/// The cut structure of a fused body, ready for zone-map evaluation: one
-/// effective mask per fill site (`None` = unconditional fill), over the
-/// item columns of the program.
+/// Which zones the predicate's masks range over.
+#[derive(Clone, Copy, Debug)]
+enum Gran {
+    /// Fused single-list body; `slot` holds the loop's item index.
+    Items { slot: usize },
+    /// Loop-free per-event body (assignments inlined).
+    Events,
+}
+
+/// A statistics leaf a mask refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum ColRef {
+    /// Item column (by `item_cols` index).
+    Item(usize),
+    /// Event-level column (by `event_cols` index).
+    Event(usize),
+    /// Per-event length of a list (by `lists` index).
+    Len(usize),
+}
+
+/// The cut structure of an analyzable body, ready for zone-map evaluation:
+/// one effective mask per fill site (`None` = unconditional fill), over
+/// the item columns (item granularity) or the event leaves and list
+/// lengths (event granularity).
 #[derive(Clone, Debug)]
 pub struct CutPredicate {
-    /// Slot holding the fused loop's item index.
-    slot: usize,
+    gran: Gran,
     /// Per fill site: the conjunction of enclosing cuts (else-negated).
     masks: Vec<Option<CExpr>>,
     /// Leaf paths of the program's item columns, in `col` order — the
     /// names zone-map lookups resolve against.
     item_cols: Vec<String>,
+    /// Leaf paths of the program's event columns, in `col` order.
+    event_cols: Vec<String>,
+    /// List paths, in list-id order (length statistics resolve through
+    /// [`len_stats_path`]).
+    lists: Vec<String>,
 }
 
-/// Extract the cut predicate of a program's fused body, if it has one.
+/// Extract the cut predicate of a program, if it has an analyzable shape:
+/// the fused single-list body (item granularity) or a loop-free per-event
+/// body (event granularity).
 pub fn extract(prog: &FlatProgram) -> Option<CutPredicate> {
-    let fused = prog.fused.as_ref()?;
-    let [CStmt::LoopRange { slot, body, .. }] = &fused[..] else {
-        return None;
+    let (gran, masks) = if let Some(fused) = prog.fused.as_ref() {
+        let [CStmt::LoopRange { slot, body, .. }] = &fused[..] else {
+            return None;
+        };
+        let mut masks = Vec::new();
+        collect_masks(body, None, &mut masks)?;
+        (Gran::Items { slot: *slot }, masks)
+    } else {
+        let body = transform::inline_event_body(&prog.body)?;
+        // Indexed item loads anywhere in the body refuse event pruning: a
+        // Skip verdict would suppress loads the unindexed scalar scan
+        // performs even when every cut is false (an inlined assignment's
+        // load), changing out-of-bounds *error* behavior between indexed
+        // and unindexed runs. Pure `event.*`/`len()` bodies — the shapes
+        // event pruning exists for — are unaffected.
+        if event_body_loads_items(&body) {
+            return None;
+        }
+        let mut masks = Vec::new();
+        collect_masks(&body, None, &mut masks)?;
+        (Gran::Events, masks)
     };
-    let mut masks = Vec::new();
-    collect_masks(body, None, &mut masks)?;
     if masks.is_empty() {
         return None;
     }
     Some(CutPredicate {
-        slot: *slot,
+        gran,
         masks,
         item_cols: prog.item_cols.clone(),
+        event_cols: prog.event_cols.clone(),
+        lists: prog.lists.clone(),
+    })
+}
+
+/// Does any expression of an inlined event body load an item column?
+fn event_body_loads_items(stmts: &[CStmt]) -> bool {
+    stmts.iter().any(|s| match s {
+        CStmt::Fill { expr, weight } => {
+            transform::contains_item_load(expr)
+                || weight.as_ref().is_some_and(transform::contains_item_load)
+        }
+        CStmt::If { cond, then, els } => {
+            transform::contains_item_load(cond)
+                || event_body_loads_items(then)
+                || event_body_loads_items(els)
+        }
+        _ => false,
     })
 }
 
@@ -107,14 +181,19 @@ fn conjoin(mask: Option<&CExpr>, cond: &CExpr) -> CExpr {
 }
 
 impl CutPredicate {
-    /// Classify one zone given a value interval per item column.
-    pub fn classify_with(&self, col: &dyn Fn(usize) -> Interval) -> ZoneDecision {
+    /// Is this an event-granularity predicate (zones = event chunks)?
+    pub fn is_event_level(&self) -> bool {
+        matches!(self.gran, Gran::Events)
+    }
+
+    /// Classify one zone given a value interval per statistics leaf.
+    fn classify_ref(&self, col: &dyn Fn(ColRef) -> Interval) -> ZoneDecision {
         let mut any_may_fire = false;
         let mut all_fire = true;
         for m in &self.masks {
             match m {
                 None => any_may_fire = true, // unconditional fill
-                Some(e) => match truth(e, self.slot, col) {
+                Some(e) => match truth(e, self.gran, col) {
                     Tri::True => any_may_fire = true,
                     Tri::False => all_fire = false,
                     Tri::Unknown => {
@@ -133,84 +212,121 @@ impl CutPredicate {
         }
     }
 
-    /// Classify a whole partition against its zone map.
-    pub fn classify_partition(&self, zm: &ZoneMap) -> ZoneDecision {
-        self.classify_with(&|c| self.lookup(zm, c, None))
+    /// Classify one zone given a value interval per **item** column (the
+    /// item-granularity entry point tests and embedders use; event and
+    /// length leaves come out `TOP`).
+    pub fn classify_with(&self, col: &dyn Fn(usize) -> Interval) -> ZoneDecision {
+        self.classify_ref(&|r| match r {
+            ColRef::Item(c) => col(c),
+            ColRef::Event(_) | ColRef::Len(_) => Interval::TOP,
+        })
     }
 
-    /// Classify every chunk of a partition. Returns `None` when the masks
-    /// reference no columns or the referenced columns disagree on the chunk
-    /// grid (inconsistent map) — callers then fall back to scanning.
+    /// Classify a whole partition against its zone map.
+    pub fn classify_partition(&self, zm: &ZoneMap) -> ZoneDecision {
+        self.classify_ref(&|r| self.lookup(zm, r))
+    }
+
+    /// Classify every chunk of a partition — item chunks for item
+    /// granularity, event chunks for event granularity. Returns `None`
+    /// when the masks reference no statistics or the referenced columns
+    /// disagree on the chunk grid (inconsistent map) — callers then fall
+    /// back to scanning.
     pub fn classify_chunks(&self, zm: &ZoneMap) -> Option<Vec<ZoneDecision>> {
-        let mut cols: Vec<usize> = Vec::new();
+        let mut refs: Vec<ColRef> = Vec::new();
         for m in self.masks.iter().flatten() {
-            referenced_cols(m, &mut cols);
+            referenced_refs(m, self.gran, &mut refs);
         }
-        cols.sort_unstable();
-        cols.dedup();
+        refs.sort_unstable();
+        refs.dedup();
+        // Resolve every referenced leaf's statistics once; the per-chunk
+        // pass below then indexes the resolved zones directly instead of
+        // re-deriving string keys and map lookups per (chunk, leaf) pair.
+        let mut zones: Vec<(ColRef, &crate::index::ColumnZones)> = Vec::with_capacity(refs.len());
         let mut n_chunks: Option<usize> = None;
-        for &c in &cols {
-            let z = zm.column(self.item_cols.get(c)?)?;
+        for &r in &refs {
+            let z = zm.column(&self.ref_path(r)?)?;
             match n_chunks {
                 Some(n) if n != z.chunks.len() => return None,
                 _ => n_chunks = Some(z.chunks.len()),
             }
+            zones.push((r, z));
         }
         let n = n_chunks?;
         let decisions = (0..n)
-            .map(|i| self.classify_with(&|c| self.lookup(zm, c, Some(i))))
+            .map(|i| {
+                self.classify_ref(&|r| match zones.iter().find(|(rr, _)| *rr == r) {
+                    Some((_, z)) => z.chunks[i].interval(),
+                    None => Interval::TOP,
+                })
+            })
             .collect();
         Some(decisions)
     }
 
-    /// The interval a zone map proves for item column `c` (whole partition
-    /// or one chunk). Anything unresolvable is `TOP` — never a wrong claim.
-    fn lookup(&self, zm: &ZoneMap, c: usize, chunk: Option<usize>) -> Interval {
-        let Some(path) = self.item_cols.get(c) else {
+    /// The zone-map key a statistics leaf resolves to.
+    fn ref_path(&self, r: ColRef) -> Option<String> {
+        match r {
+            ColRef::Item(c) => self.item_cols.get(c).cloned(),
+            ColRef::Event(c) => self.event_cols.get(c).cloned(),
+            ColRef::Len(l) => self.lists.get(l).map(|p| len_stats_path(p)),
+        }
+    }
+
+    /// The interval a zone map proves for one statistics leaf over the
+    /// whole partition. Anything unresolvable is `TOP` — never a wrong
+    /// claim.
+    fn lookup(&self, zm: &ZoneMap, r: ColRef) -> Interval {
+        let Some(path) = self.ref_path(r) else {
             return Interval::TOP;
         };
-        let Some(z) = zm.column(path) else {
+        let Some(z) = zm.column(&path) else {
             return Interval::TOP;
         };
-        let stats = match chunk {
-            None => &z.whole,
-            Some(i) => match z.chunks.get(i) {
-                Some(s) => s,
-                None => return Interval::TOP,
-            },
-        };
-        stats.interval()
+        z.whole.interval()
     }
 }
 
-/// Item columns loaded (at the loop index) anywhere in an expression.
-fn referenced_cols(e: &CExpr, out: &mut Vec<usize>) {
+/// Statistics leaves referenced anywhere in a mask, at this granularity.
+fn referenced_refs(e: &CExpr, gran: Gran, out: &mut Vec<ColRef>) {
     match e {
         CExpr::LoadItem { col, idx } => {
-            out.push(*col);
-            referenced_cols(idx, out);
+            if let Gran::Items { .. } = gran {
+                out.push(ColRef::Item(*col));
+            }
+            referenced_refs(idx, gran, out);
         }
-        CExpr::Bin(_, l, r) | CExpr::Cmp(_, l, r) | CExpr::And(l, r) | CExpr::Or(l, r) => {
-            referenced_cols(l, out);
-            referenced_cols(r, out);
-        }
-        CExpr::Not(x) | CExpr::Neg(x) => referenced_cols(x, out),
-        CExpr::Call(_, args) => {
-            for a in args {
-                referenced_cols(a, out);
+        CExpr::LoadEvent { col } => {
+            if let Gran::Events = gran {
+                out.push(ColRef::Event(*col));
             }
         }
-        CExpr::Const(_) | CExpr::Slot(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => {}
+        CExpr::ListLen { list } => {
+            if let Gran::Events = gran {
+                out.push(ColRef::Len(*list));
+            }
+        }
+        CExpr::Bin(_, l, r) | CExpr::Cmp(_, l, r) | CExpr::And(l, r) | CExpr::Or(l, r) => {
+            referenced_refs(l, gran, out);
+            referenced_refs(r, gran, out);
+        }
+        CExpr::Not(x) | CExpr::Neg(x) => referenced_refs(x, gran, out),
+        CExpr::Call(_, args) => {
+            for a in args {
+                referenced_refs(a, gran, out);
+            }
+        }
+        CExpr::Const(_) | CExpr::Slot(_) => {}
     }
 }
 
 /// Three-valued truthiness of a condition over a zone, matching the
 /// kernel's rule (`cond != 0.0`; NaN conditions are truthy).
-fn truth(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Tri {
+fn truth(e: &CExpr, gran: Gran, col: &dyn Fn(ColRef) -> Interval) -> Tri {
     match e {
         CExpr::Cmp(op, l, r) => {
-            let a = ival(l, slot, col);
-            let b = ival(r, slot, col);
+            let a = ival(l, gran, col);
+            let b = ival(r, gran, col);
             match op {
                 CmpOp::Lt => a.lt(b),
                 CmpOp::Le => a.le(b),
@@ -220,35 +336,51 @@ fn truth(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Tri {
                 CmpOp::Ne => a.ne(b),
             }
         }
-        CExpr::And(l, r) => truth(l, slot, col).and(truth(r, slot, col)),
-        CExpr::Or(l, r) => truth(l, slot, col).or(truth(r, slot, col)),
-        CExpr::Not(x) => truth(x, slot, col).not(),
-        other => ival(other, slot, col).truthy(),
+        CExpr::And(l, r) => truth(l, gran, col).and(truth(r, gran, col)),
+        CExpr::Or(l, r) => truth(l, gran, col).or(truth(r, gran, col)),
+        CExpr::Not(x) => truth(x, gran, col).not(),
+        other => ival(other, gran, col).truthy(),
     }
 }
 
 /// Interval of an expression's values over a zone.
-fn ival(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Interval {
+fn ival(e: &CExpr, gran: Gran, col: &dyn Fn(ColRef) -> Interval) -> Interval {
     match e {
         CExpr::Const(c) => Interval::point(*c),
-        // The fused loop index: a non-negative finite integer.
-        CExpr::Slot(s) if *s == slot => Interval {
-            lo: 0.0,
-            hi: f64::INFINITY,
-            nan: false,
+        // The fused loop index: a non-negative finite integer. (Event
+        // masks are slot-free after inlining; stay conservative if a slot
+        // ever appears.)
+        CExpr::Slot(s) => match gran {
+            Gran::Items { slot } if *s == slot => Interval {
+                lo: 0.0,
+                hi: f64::INFINITY,
+                nan: false,
+            },
+            _ => Interval::TOP,
         },
-        // Any other slot is per-event state; fused bodies have none, but
-        // stay conservative if one ever appears.
-        CExpr::Slot(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => Interval::TOP,
-        CExpr::LoadItem { col: c, idx } => match idx.as_ref() {
+        CExpr::LoadEvent { col: c } => match gran {
+            // Event zones carry per-event statistics of event leaves.
+            Gran::Events => col(ColRef::Event(*c)),
+            // An event leaf inside a fused body cannot occur (`try_fuse`
+            // refuses), but stay conservative.
+            Gran::Items { .. } => Interval::TOP,
+        },
+        CExpr::ListLen { list } => match gran {
+            // Event zones carry per-event length statistics (the
+            // synthetic `len_stats_path` column).
+            Gran::Events => col(ColRef::Len(*list)),
+            Gran::Items { .. } => Interval::TOP,
+        },
+        CExpr::LoadItem { col: c, idx } => match (gran, idx.as_ref()) {
             // Only loads at the loop index are covered by the zone's
-            // statistics; a computed index may read another zone.
-            CExpr::Slot(s) if *s == slot => col(*c),
+            // statistics; a computed index may read another zone (and an
+            // indexed load in an event mask reads across the event grid).
+            (Gran::Items { slot }, CExpr::Slot(s)) if *s == slot => col(ColRef::Item(*c)),
             _ => Interval::TOP,
         },
         CExpr::Bin(op, l, r) => {
-            let a = ival(l, slot, col);
-            let b = ival(r, slot, col);
+            let a = ival(l, gran, col);
+            let b = ival(r, gran, col);
             match op {
                 super::ast::BinOp::Add => a.add(b),
                 super::ast::BinOp::Sub => a.sub(b),
@@ -259,7 +391,7 @@ fn ival(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Interval {
         // Boolean-valued subexpressions produce exactly 0.0 or 1.0; refine
         // through their three-valued truth.
         CExpr::Cmp(..) | CExpr::And(..) | CExpr::Or(..) | CExpr::Not(..) => {
-            match truth(e, slot, col) {
+            match truth(e, gran, col) {
                 Tri::True => Interval::point(1.0),
                 Tri::False => Interval::point(0.0),
                 Tri::Unknown => Interval {
@@ -269,9 +401,9 @@ fn ival(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Interval {
                 },
             }
         }
-        CExpr::Neg(x) => ival(x, slot, col).neg(),
+        CExpr::Neg(x) => ival(x, gran, col).neg(),
         CExpr::Call(name, args) => {
-            let one = |f: fn(Interval) -> Interval| f(ival(&args[0], slot, col));
+            let one = |f: fn(Interval) -> Interval| f(ival(&args[0], gran, col));
             match (*name, args.len()) {
                 ("sqrt", 1) => one(Interval::sqrt),
                 ("abs", 1) => one(Interval::abs),
@@ -280,8 +412,8 @@ fn ival(e: &CExpr, slot: usize, col: &dyn Fn(usize) -> Interval) -> Interval {
                 ("sin", 1) | ("cos", 1) => one(Interval::sin_cos),
                 ("sinh", 1) => one(Interval::sinh),
                 ("cosh", 1) => one(Interval::cosh),
-                ("min", 2) => ival(&args[0], slot, col).imin(ival(&args[1], slot, col)),
-                ("max", 2) => ival(&args[0], slot, col).imax(ival(&args[1], slot, col)),
+                ("min", 2) => ival(&args[0], gran, col).imin(ival(&args[1], gran, col)),
+                ("max", 2) => ival(&args[0], gran, col).imax(ival(&args[1], gran, col)),
                 // __list_base / __list_total and anything unknown.
                 _ => Interval::TOP,
             }
@@ -458,6 +590,106 @@ for event in dataset:
         let p = pred(src);
         assert_eq!(p.classify_with(&with_pt(20.0, 30.0, false)), ZoneDecision::Skip);
         assert_eq!(p.classify_with(&with_pt(1.0, 5.0, false)), ZoneDecision::TakeAll);
+    }
+
+    fn stats(lo: f64, hi: f64) -> ColumnStats {
+        ColumnStats {
+            min: lo,
+            max: hi,
+            has_nan: false,
+            count: 4,
+        }
+    }
+
+    /// A zone map with one chunk of event-granularity statistics.
+    fn event_zone(met: (f64, f64), len: (f64, f64)) -> ZoneMap {
+        let mut columns = std::collections::BTreeMap::new();
+        columns.insert(
+            "met".to_string(),
+            crate::index::ColumnZones {
+                whole: stats(met.0, met.1),
+                chunks: vec![stats(met.0, met.1)],
+            },
+        );
+        columns.insert(
+            len_stats_path("muons"),
+            crate::index::ColumnZones {
+                whole: stats(len.0, len.1),
+                chunks: vec![stats(len.0, len.1)],
+            },
+        );
+        ZoneMap {
+            chunk_items: 1024,
+            columns,
+        }
+    }
+
+    /// Event-level cuts — `event.met` and `len()` — extract an
+    /// event-granularity predicate and classify against the event zones.
+    #[test]
+    fn event_level_cuts_classify_against_event_zones() {
+        let src = "\
+for event in dataset:
+    if event.met > 25 and len(event.muons) >= 2:
+        fill(event.met)
+";
+        let prog = queryir::compile(src, &muon_event_schema()).unwrap();
+        let p = extract(&prog).unwrap();
+        assert!(p.is_event_level());
+        assert_eq!(
+            p.classify_partition(&event_zone((0.0, 10.0), (0.0, 8.0))),
+            ZoneDecision::Skip,
+            "met too small everywhere"
+        );
+        assert_eq!(
+            p.classify_partition(&event_zone((30.0, 90.0), (0.0, 8.0))),
+            ZoneDecision::Scan,
+            "some events may have < 2 muons"
+        );
+        assert_eq!(
+            p.classify_partition(&event_zone((30.0, 90.0), (2.0, 8.0))),
+            ZoneDecision::TakeAll
+        );
+        assert_eq!(
+            p.classify_partition(&event_zone((30.0, 90.0), (0.0, 1.0))),
+            ZoneDecision::Skip,
+            "no event has 2 muons"
+        );
+        assert_eq!(
+            p.classify_chunks(&event_zone((30.0, 90.0), (2.0, 8.0))).unwrap(),
+            vec![ZoneDecision::TakeAll]
+        );
+    }
+
+    /// Assignments inline into event predicates; bodies that load item
+    /// columns yield no event predicate at all — a Skip verdict could
+    /// suppress a load (and its out-of-bounds error) the unindexed scan
+    /// performs unconditionally.
+    #[test]
+    fn event_predicate_assignments_and_item_loads() {
+        let schema = muon_event_schema();
+        let src = "\
+for event in dataset:
+    m = event.met
+    if m > 25:
+        fill(m)
+";
+        let p = extract(&queryir::compile(src, &schema).unwrap()).unwrap();
+        assert!(p.is_event_level());
+        assert_eq!(
+            p.classify_partition(&event_zone((0.0, 10.0), (0.0, 8.0))),
+            ZoneDecision::Skip
+        );
+        for src2 in [
+            "for event in dataset:\n    if event.muons[0].pt > 10:\n        fill(event.met)\n",
+            "for event in dataset:\n    x = event.muons[0].pt\n    \
+             if event.met > 10:\n        fill(x)\n",
+        ] {
+            assert!(
+                extract(&queryir::compile(src2, &schema).unwrap()).is_none(),
+                "item-loading event bodies must not prune:\n{src2}"
+            );
+        }
     }
 
     /// Stats-derived intervals plug straight in.

@@ -440,6 +440,187 @@ impl<'a> Transformer<'a> {
     }
 }
 
+/// Slot bindings during body inlining: each slot maps to its (already
+/// substituted) defining expression plus a read flag.
+///
+/// Substitution replaces a stored value with a re-evaluation of its
+/// defining expression. For the side-effect-free, deterministic expression
+/// language this is bit-identical: the same float operation tree over the
+/// same inputs produces the same bits no matter how many times it runs.
+/// The read flags guard the one case where dropping an assignment *would*
+/// change semantics: a never-read assignment whose expression performs an
+/// item load. The scalar path executes that load (and reports an
+/// out-of-bounds index through it); inlining would silently delete it, so
+/// such bodies are refused instead.
+pub struct SlotEnv {
+    map: HashMap<usize, (CExpr, std::cell::Cell<bool>)>,
+}
+
+impl Default for SlotEnv {
+    fn default() -> SlotEnv {
+        SlotEnv::new()
+    }
+}
+
+impl SlotEnv {
+    pub fn new() -> SlotEnv {
+        SlotEnv {
+            map: HashMap::new(),
+        }
+    }
+
+    /// Bind `slot` to `expr`. `None` when this would drop a never-read
+    /// binding that contains an item load (see the type doc).
+    pub fn bind(&mut self, slot: usize, expr: CExpr) -> Option<()> {
+        if let Some((e, used)) = self.map.get(&slot) {
+            if !used.get() && contains_item_load(e) {
+                return None;
+            }
+        }
+        self.map.insert(slot, (expr, std::cell::Cell::new(false)));
+        Some(())
+    }
+
+    /// Bind a loop variable to itself: inside the loop nest the slot
+    /// stands for the lane index, not for a substitutable expression.
+    pub fn bind_loop_var(&mut self, slot: usize) {
+        self.map
+            .insert(slot, (CExpr::Slot(slot), std::cell::Cell::new(true)));
+    }
+
+    /// Final liveness check: every binding was read, or is free of item
+    /// loads (dead arithmetic is droppable; a dead load is not).
+    pub fn finish(&self) -> Option<()> {
+        for (e, used) in self.map.values() {
+            if !used.get() && contains_item_load(e) {
+                return None;
+            }
+        }
+        Some(())
+    }
+
+    /// Substitute every `Slot` read in `e` with its binding, returning
+    /// `None` when a slot has no binding — reading a slot that was never
+    /// assigned in the current event observes cross-event state (stale
+    /// values from the previous event, zeros at a morsel boundary), which
+    /// no batch lowering can reproduce, so such programs stay on the
+    /// scalar path.
+    pub fn subst(&self, e: &CExpr) -> Option<CExpr> {
+        Some(match e {
+            CExpr::Slot(s) => {
+                let (b, used) = self.map.get(s)?;
+                used.set(true);
+                b.clone()
+            }
+            CExpr::Const(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => e.clone(),
+            CExpr::LoadItem { col, idx } => CExpr::LoadItem {
+                col: *col,
+                idx: Box::new(self.subst(idx)?),
+            },
+            CExpr::Bin(op, l, r) => {
+                CExpr::Bin(*op, Box::new(self.subst(l)?), Box::new(self.subst(r)?))
+            }
+            CExpr::Cmp(op, l, r) => {
+                CExpr::Cmp(*op, Box::new(self.subst(l)?), Box::new(self.subst(r)?))
+            }
+            CExpr::And(l, r) => CExpr::And(Box::new(self.subst(l)?), Box::new(self.subst(r)?)),
+            CExpr::Or(l, r) => CExpr::Or(Box::new(self.subst(l)?), Box::new(self.subst(r)?)),
+            CExpr::Not(x) => CExpr::Not(Box::new(self.subst(x)?)),
+            CExpr::Neg(x) => CExpr::Neg(Box::new(self.subst(x)?)),
+            CExpr::Call(name, args) => CExpr::Call(
+                *name,
+                args.iter()
+                    .map(|a| self.subst(a))
+                    .collect::<Option<Vec<_>>>()?,
+            ),
+        })
+    }
+}
+
+/// Does the expression perform an item (content-array) load anywhere?
+pub(crate) fn contains_item_load(e: &CExpr) -> bool {
+    match e {
+        CExpr::LoadItem { .. } => true,
+        CExpr::Const(_) | CExpr::Slot(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => false,
+        CExpr::Bin(_, l, r) | CExpr::Cmp(_, l, r) | CExpr::And(l, r) | CExpr::Or(l, r) => {
+            contains_item_load(l) || contains_item_load(r)
+        }
+        CExpr::Not(x) | CExpr::Neg(x) => contains_item_load(x),
+        CExpr::Call(_, args) => args.iter().any(contains_item_load),
+    }
+}
+
+/// Inline a statement block into a `Fill`/`If`-only tree: top-level
+/// `Assign`s fold into `env` (in statement order, so re-assignment works)
+/// and every expression is slot-substituted. Returns `None` when the block
+/// contains a loop, an assignment inside an `if` branch (a state merge the
+/// mask machinery cannot express), a read of an unassigned slot, or a
+/// dropped dead item load (see [`SlotEnv`]).
+pub fn inline_body(stmts: &[CStmt], env: &mut SlotEnv) -> Option<Vec<CStmt>> {
+    let mut out = Vec::new();
+    for s in stmts {
+        match s {
+            CStmt::Assign { slot, expr } => {
+                let e = env.subst(expr)?;
+                env.bind(*slot, e)?;
+            }
+            CStmt::Fill { expr, weight } => out.push(CStmt::Fill {
+                expr: env.subst(expr)?,
+                weight: match weight {
+                    Some(w) => Some(env.subst(w)?),
+                    None => None,
+                },
+            }),
+            CStmt::If { cond, then, els } => out.push(CStmt::If {
+                cond: env.subst(cond)?,
+                then: inline_branch(then, env)?,
+                els: inline_branch(els, env)?,
+            }),
+            CStmt::LoopRange { .. } | CStmt::LoopList { .. } => return None,
+        }
+    }
+    Some(out)
+}
+
+/// `inline_body` for `if` branches: assignments are refused (their effect
+/// would depend on the branch taken) but nested cuts and fills inline.
+fn inline_branch(stmts: &[CStmt], env: &SlotEnv) -> Option<Vec<CStmt>> {
+    let mut out = Vec::new();
+    for s in stmts {
+        match s {
+            CStmt::Fill { expr, weight } => out.push(CStmt::Fill {
+                expr: env.subst(expr)?,
+                weight: match weight {
+                    Some(w) => Some(env.subst(w)?),
+                    None => None,
+                },
+            }),
+            CStmt::If { cond, then, els } => out.push(CStmt::If {
+                cond: env.subst(cond)?,
+                then: inline_branch(then, env)?,
+                els: inline_branch(els, env)?,
+            }),
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+/// Normalize a program's top-level per-event body into a `Fill`/`If`-only
+/// tree with every assignment inlined — the shape the event-level chunked
+/// kernel and the event-granularity predicate both consume. `None` when
+/// the body loops over items, keeps per-event state across an `if`, drops
+/// a dead item load, or has no fill at all.
+pub fn inline_event_body(body: &[CStmt]) -> Option<Vec<CStmt>> {
+    let mut env = SlotEnv::new();
+    let out = inline_body(body, &mut env)?;
+    env.finish()?;
+    if out.is_empty() {
+        return None;
+    }
+    Some(out)
+}
+
 fn restore(vars: &mut HashMap<String, Binding>, name: &str, saved: Option<Binding>) {
     match saved {
         Some(b) => {

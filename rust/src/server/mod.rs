@@ -7,8 +7,14 @@
 //!             {"op":"datasets"} | {"op":"stats"} | {"op":"ping"}
 //!             {"op":"warm","dataset":"dy"}   (re-run top-cost cached tapes)
 //!   response: {"ok":true,"hist":{...},"latency_ms":...,"events":...,
-//!              "partitions":...,"skipped":...,"cached":bool}
+//!              "partitions":...,"skipped":...,"chunks_skipped":...,
+//!              "chunks_take_all":...,"chunks_scanned":...,"cached":bool}
 //!             progress frames: {"progress":done,"total":n} (one per merge round)
+//!
+//! `skipped` counts partitions the zone maps pruned at submit;
+//! `chunks_skipped`/`chunks_take_all`/`chunks_scanned` are the same
+//! query's chunk-level counters from the workers' indexed runs (cached
+//! results serve the counters recorded when they were produced).
 //!
 //! `stats` includes a `data_skipping` block: zone-map partition/chunk skip
 //! counters, the result-cache warm count, and per-worker partition-cache
@@ -304,6 +310,9 @@ fn result_json(res: &CachedResult, latency: std::time::Duration, cached: bool) -
         ("events", Json::num(res.events as f64)),
         ("partitions", Json::num(res.partitions as f64)),
         ("skipped", Json::num(res.skipped as f64)),
+        ("chunks_skipped", Json::num(res.chunks.chunks_skipped as f64)),
+        ("chunks_take_all", Json::num(res.chunks.chunks_take_all as f64)),
+        ("chunks_scanned", Json::num(res.chunks.chunks_scanned as f64)),
         ("cached", Json::Bool(cached)),
     ])
 }
@@ -323,6 +332,7 @@ fn run_query<F: FnMut(usize, usize)>(
         events: res.events,
         partitions: res.partitions,
         skipped: res.skipped,
+        chunks: res.chunks,
     })
 }
 
@@ -571,6 +581,10 @@ mod tests {
         assert!(h.total() > 0.0);
         assert_eq!(resp.get("partitions").and_then(|p| p.as_usize()), Some(8));
         assert_eq!(resp.get("cached"), Some(&Json::Bool(false)));
+        // Per-query chunk skip counters ride every response (zeros here:
+        // the columnar backend never consults zone maps).
+        assert_eq!(resp.get("chunks_skipped").and_then(|v| v.as_u64()), Some(0));
+        assert!(resp.get("chunks_scanned").is_some());
         client.shutdown_server().unwrap();
         let _ = t.join().unwrap();
     }

@@ -44,6 +44,9 @@ pub struct CachedResult {
     pub partitions: usize,
     /// Partitions the zone maps skipped when it was produced.
     pub skipped: usize,
+    /// Chunk-level skipping while it was produced (per-query counters —
+    /// served back with the cached result so the client always sees them).
+    pub chunks: crate::queryir::IndexedRun,
 }
 
 struct Entry {
@@ -217,6 +220,7 @@ mod tests {
             events: total as u64,
             partitions: 1,
             skipped: 0,
+            chunks: Default::default(),
         }
     }
 

@@ -1,0 +1,300 @@
+//! Equivalence properties of the event-level and pair-loop chunked
+//! kernels (PR 5) and the zero-allocation scratch pool.
+//!
+//! The guarantees under test:
+//!   * **event kernels** — loop-free per-event bodies over `event.met`,
+//!     `len(...)` cuts, inlined assignments and leading-object loads — are
+//!     bit-identical to the scalar closure loop (bins, under/overflow,
+//!     count, sum, sum2) across randomized program shapes, NaN-producing
+//!     expressions, weighted fills and binnings;
+//!   * **pair kernels** — `range(len(l))` nests, the paper's dimuon-mass
+//!     shape — are bit-identical to the scalar closure nest, cuts and
+//!     weights included, with empty/singleton lists handled by the same
+//!     enumeration;
+//!   * both compose with morsel-driven parallelism across the grid
+//!     morsel ∈ {1, 7, 1024, whole} × threads ∈ {1, 2, 8};
+//!   * a reused [`KernelScratch`] stops allocating after the first morsel
+//!     warms it — the zero-allocation-per-morsel regression guard.
+
+use hepq::datagen::generate_drellyan;
+use hepq::hist::H1;
+use hepq::queryir::lower::{self, KernelScratch, ParallelCfg};
+use hepq::queryir::{self, table3, KernelShape};
+use hepq::util::propkit::{check, Config, Gen};
+
+/// Morsel merges reorder only the moment additions.
+fn assert_morsel_equiv(seq: &H1, par: &H1, what: &str) {
+    assert_eq!(seq.bins, par.bins, "{what}: bins");
+    assert_eq!(seq.underflow, par.underflow, "{what}: underflow");
+    assert_eq!(seq.overflow, par.overflow, "{what}: overflow");
+    assert_eq!(seq.count, par.count, "{what}: count");
+    for (name, a, b) in [("sum", seq.sum, par.sum), ("sum2", seq.sum2, par.sum2)] {
+        let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}: {name} {a} vs {b} beyond merge tolerance"
+        );
+    }
+}
+
+/// Random loop-free per-event body: event leaves, `len()` cuts, inlined
+/// assignments, leading-object loads, NaN-producing values, weights.
+fn random_event_program(g: &mut Gen) -> String {
+    let t = g.usize_to(60) as f64 - 5.0;
+    let k = g.usize_to(3);
+    let w = ["", ", 0.5", ", event.met * 0.25"][g.usize_to(2)];
+    match g.usize_to(6) {
+        0 => format!("for event in dataset:\n    fill(event.met{w})\n"),
+        1 => format!(
+            "for event in dataset:\n    if event.met > {t}:\n        fill(event.met{w})\n"
+        ),
+        2 => format!(
+            "for event in dataset:\n    if len(event.muons) >= {k}:\n        \
+             fill(event.met{w})\n    else:\n        fill(len(event.muons))\n"
+        ),
+        3 => format!(
+            "for event in dataset:\n    x = event.met * 0.5 + 1\n    \
+             if x > {t} and len(event.muons) > 0:\n        fill(x{w})\n"
+        ),
+        // NaN-producing fill values (sqrt/log of negatives) are skipped
+        // identically on both paths.
+        4 => format!("for event in dataset:\n    fill(sqrt(event.met - {t}){w})\n"),
+        5 => format!(
+            "for event in dataset:\n    m = event.muons[0]\n    \
+             if len(event.muons) > 0:\n        fill(m.pt{w})\n"
+        ),
+        _ => format!(
+            "for event in dataset:\n    if not event.met > {t}:\n        \
+             fill(log(event.met - 10))\n    fill(event.met, 0.5)\n"
+        ),
+    }
+}
+
+/// Random `range(len)` pair body: the canonical `(i, i+1)` nest or the
+/// full cross product, with cuts, weights and NaN-able values.
+fn random_pair_program(g: &mut Gen) -> String {
+    let t = g.usize_to(80) as f64;
+    let inner = match g.usize_to(4) {
+        0 => "mass = sqrt(2 * a.pt * b.pt * (cosh(a.eta - b.eta) - cos(a.phi - b.phi)))\n\
+              \x20           fill(mass)"
+            .to_string(),
+        1 => format!(
+            "if a.pt + b.pt > {t}:\n                fill(a.pt + b.pt, 0.5)"
+        ),
+        2 => "fill(sqrt(a.eta - b.eta))".to_string(), // NaN for half the pairs
+        3 => "if a.eta * b.eta < 0:\n                fill(a.pt + b.pt)\n\
+              \x20           else:\n                fill(a.pt - b.pt, 0.25)"
+            .to_string(),
+        _ => "fill(log(a.eta * b.eta), a.pt * 0.125)".to_string(),
+    };
+    let j_range = if g.usize_to(3) == 0 { "range(n)" } else { "range(i + 1, n)" };
+    format!(
+        "for event in dataset:\n    n = len(event.muons)\n    for i in range(n):\n        \
+         for j in {j_range}:\n            a = event.muons[i]\n            \
+         b = event.muons[j]\n            {inner}\n"
+    )
+}
+
+/// Randomized event bodies: every generated shape lowers to the event
+/// kernel and agrees with the scalar closure loop to the last bit over
+/// random samples and binnings (empty and singleton muon lists occur
+/// naturally in the generated events).
+#[test]
+fn prop_random_event_bodies_chunked_bit_identical() {
+    let cfg = Config {
+        cases: 24,
+        ..Config::default()
+    };
+    check(
+        "event-bodies-chunked-bit-identical",
+        &cfg,
+        |g| {
+            (
+                random_event_program(g),
+                1 + g.usize_to(2_500),
+                g.rng.next_u64(),
+            )
+        },
+        |(src, n, seed)| {
+            let cs = generate_drellyan(*n, *seed);
+            let prog = queryir::compile(src, &cs.schema)?;
+            let cp = lower::lower(&prog)?;
+            if cp.kernel_shape() != Some(KernelShape::Events) {
+                return Err(format!("did not lower to the event kernel:\n{src}"));
+            }
+            for (n_bins, lo, hi) in [(64, -8.0, 120.0), (9, 3.0, 40.0)] {
+                let mut chunked = H1::new(n_bins, lo, hi);
+                lower::run(&cp, &cs, &mut chunked)?;
+                let mut scalar = H1::new(n_bins, lo, hi);
+                lower::run_scalar(&cp, &cs, &mut scalar)?;
+                if chunked != scalar {
+                    return Err(format!(
+                        "event kernel != scalar on {n_bins}x[{lo},{hi}) for:\n{src}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Randomized pair bodies: every generated shape lowers to the pair
+/// kernel and agrees with the scalar closure nest to the last bit —
+/// pair order, cuts, weights and NaN semantics included.
+#[test]
+fn prop_random_pair_bodies_chunked_bit_identical() {
+    let cfg = Config {
+        cases: 18,
+        ..Config::default()
+    };
+    check(
+        "pair-bodies-chunked-bit-identical",
+        &cfg,
+        |g| {
+            (
+                random_pair_program(g),
+                1 + g.usize_to(1_200),
+                g.rng.next_u64(),
+            )
+        },
+        |(src, n, seed)| {
+            let cs = generate_drellyan(*n, *seed);
+            let prog = queryir::compile(src, &cs.schema)?;
+            let cp = lower::lower(&prog)?;
+            if cp.kernel_shape() != Some(KernelShape::Pairs) {
+                return Err(format!("did not lower to the pair kernel:\n{src}"));
+            }
+            for (n_bins, lo, hi) in [(64, -8.0, 160.0), (11, 20.0, 90.0)] {
+                let mut chunked = H1::new(n_bins, lo, hi);
+                lower::run(&cp, &cs, &mut chunked)?;
+                let mut scalar = H1::new(n_bins, lo, hi);
+                lower::run_scalar(&cp, &cs, &mut scalar)?;
+                if chunked != scalar {
+                    return Err(format!(
+                        "pair kernel != scalar on {n_bins}x[{lo},{hi}) for:\n{src}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The ISSUE grid — morsel ∈ {1, 7, 1024, whole} × threads ∈ {1, 2, 8} —
+/// over one body per new kernel family (dyadic weights, so bins and count
+/// are exact under any merge association).
+#[test]
+fn event_and_pair_morsel_grid_matches_sequential() {
+    const N: usize = 5_000;
+    let cs = generate_drellyan(N, 171);
+    let event_cut = "\
+for event in dataset:
+    if event.met > 15 and len(event.muons) >= 2:
+        fill(event.met, 0.5)
+";
+    let leading = "\
+for event in dataset:
+    m = event.muons[0]
+    if len(event.muons) > 0:
+        fill(m.pt)
+";
+    let pair_cut = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            a = event.muons[i]
+            b = event.muons[j]
+            if a.eta * b.eta < 0:
+                fill(a.pt + b.pt, 0.5)
+";
+    for (name, src, shape) in [
+        ("event_cut", event_cut, KernelShape::Events),
+        ("leading", leading, KernelShape::Events),
+        ("mass_pairs", table3::MASS_PAIRS, KernelShape::Pairs),
+        ("pair_cut", pair_cut, KernelShape::Pairs),
+    ] {
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower::lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(shape), "{name}");
+        let mut seq = H1::new(64, 0.0, 128.0);
+        lower::run(&cp, &cs, &mut seq).unwrap();
+        for morsel_events in [1usize, 7, 1024, N] {
+            for threads in [1usize, 2, 8] {
+                let mut par = H1::new(64, 0.0, 128.0);
+                let cfg = ParallelCfg {
+                    threads,
+                    morsel_events,
+                };
+                lower::run_parallel(&cp, &cs, &mut par, cfg).unwrap();
+                assert_morsel_equiv(
+                    &seq,
+                    &par,
+                    &format!("{name} morsel={morsel_events} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Reusing one [`KernelScratch`] across every morsel of a partition run
+/// performs no pool growth after the first morsel — for all three kernel
+/// families and the scalar fallback — while staying exact on bins/count.
+#[test]
+fn scratch_reuse_is_allocation_free_after_warmup() {
+    let cs = generate_drellyan(6_000, 172);
+    let event_src = "\
+for event in dataset:
+    if event.met > 15:
+        fill(event.met)
+";
+    for (name, src) in [
+        ("items", table3::MUON_PT),
+        ("events", event_src),
+        ("pairs", table3::MASS_PAIRS),
+        ("scalar", table3::MAX_PT),
+    ] {
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower::lower(&prog).unwrap();
+        let mut whole = H1::new(64, 0.0, 128.0);
+        lower::run(&cp, &cs, &mut whole).unwrap();
+        let mut scratch = KernelScratch::new();
+        let mut tiled = H1::new(64, 0.0, 128.0);
+        lower::run_range_scratch(&cp, &cs.range(0, 750), &mut tiled, &mut scratch).unwrap();
+        let warmed = scratch.allocation_events();
+        assert!(warmed > 0, "{name}: first morsel should warm the pool");
+        let mut ev = 750;
+        while ev < cs.n_events {
+            let hi = (ev + 750).min(cs.n_events);
+            lower::run_range_scratch(&cp, &cs.range(ev, hi), &mut tiled, &mut scratch).unwrap();
+            ev = hi;
+        }
+        assert_eq!(
+            scratch.allocation_events(),
+            warmed,
+            "{name}: kernel scratch grew after the first morsel"
+        );
+        assert_eq!(whole.bins, tiled.bins, "{name}");
+        assert_eq!(whole.count, tiled.count, "{name}");
+    }
+}
+
+/// Tiny partitions — empty lists, singleton lists, fewer events than one
+/// chunk — go through the same kernels and stay bit-identical.
+#[test]
+fn tiny_partitions_and_empty_lists_are_exact() {
+    for n in [1usize, 2, 3, 17] {
+        for seed in [1u64, 9, 33] {
+            let cs = generate_drellyan(n, seed);
+            for src in [table3::MASS_PAIRS, table3::MUON_PT] {
+                let prog = queryir::compile(src, &cs.schema).unwrap();
+                let cp = lower::lower(&prog).unwrap();
+                let mut a = H1::new(16, 0.0, 128.0);
+                lower::run(&cp, &cs, &mut a).unwrap();
+                let mut b = H1::new(16, 0.0, 128.0);
+                lower::run_scalar(&cp, &cs, &mut b).unwrap();
+                assert_eq!(a, b, "n={n} seed={seed} {src}");
+            }
+        }
+    }
+}

@@ -56,9 +56,16 @@ fn straggler_duplicate_is_dropped() {
         worker: 1,
         hist: h.clone(),
         events_processed: 10,
+        chunks: Default::default(),
     }));
     // The straggler finishes the same subtask later.
-    assert!(!store.insert(PartialDoc { id, worker: 0, hist: h, events_processed: 10 }));
+    assert!(!store.insert(PartialDoc {
+        id,
+        worker: 0,
+        hist: h,
+        events_processed: 10,
+        chunks: Default::default(),
+    }));
     let docs = store.drain(1);
     assert_eq!(docs.len(), 1);
     assert_eq!(docs[0].worker, 1);

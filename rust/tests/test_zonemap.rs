@@ -305,6 +305,13 @@ fn cluster_skips_90pct_of_partitions_at_1pct_selectivity() {
     let (skipped, scanned) = cluster.partition_skip_stats();
     assert_eq!(skipped as usize, res.skipped);
     assert_eq!(scanned as usize, res.partitions);
+    // The per-query chunk counters aggregated from the workers' indexed
+    // runs cover the surviving partitions' chunks.
+    let c = &res.chunks;
+    assert!(
+        c.chunks_skipped + c.chunks_take_all + c.chunks_scanned > 0,
+        "per-query chunk counters should be populated: {c:?}"
+    );
 
     // Bit-identical to the local unindexed scan (weight-1 fills: bins and
     // count are integers, exact under any merge order).
