@@ -14,12 +14,17 @@
 //! magnitude end to end, with the big cliffs at selective reading and at
 //! de-materialization.
 
+use hepq::coord::{Cluster, ClusterConfig, Policy};
 use hepq::datagen::{generate_drellyan, generate_ttbar};
-use hepq::engine::{columnar_exec, object_baseline, Query, QueryKind};
+use hepq::engine::{columnar_exec, object_baseline, Backend, Query, QueryKind};
 use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
 use hepq::hist::H1;
 use hepq::queryir::{self, table3};
-use hepq::util::benchkit::{black_box, Bench};
+use hepq::server::{Client, Server, ServerConfig};
+use hepq::util::benchkit::{black_box, Bench, Sample};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 fn main() {
     let n_events: usize = std::env::var("HEPQ_BENCH_EVENTS")
@@ -416,6 +421,93 @@ for event in dataset:
         scratch_pairs.push((format!("scratch_{tag}"), fresh_name, reuse_name));
         rung += 2;
     }
+    // --- concurrent serving rungs ----------------------------------------
+    // Rungs 43+: a real TCP server under 1/10/100/1000 concurrent clients
+    // (override the ladder with HEPQ_BENCH_CLIENTS=1,4,...), each issuing a
+    // mixed workload — an always-cached flat fill, a cut-source variant and
+    // a quadratic pair-loop variant with per-variant binnings — with
+    // shared-scan fusion off (--batch-window-ms 0) vs on. Each storm reports
+    // client-side p50/p99 latency plus aggregate throughput, and every
+    // served histogram is checked against a solo cluster run outside the
+    // timers (bins and counts are integer-exact, so the comparison is
+    // bitwise). NOTE: the 1000-client rung needs `ulimit -n` ≳ 4096.
+    let client_ladder: Vec<usize> = std::env::var("HEPQ_BENCH_CLIENTS")
+        .unwrap_or_else(|_| "1,10,100,1000".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    const NV: usize = 8;
+    let hot = Query::new(QueryKind::FlatHist, "dy", "muons");
+    let cuts: Vec<Query> = (0..NV)
+        .map(|v| {
+            Query::from_source(
+                format!(
+                    "for event in dataset:\n    for muon in event.muons:\n        \
+                     if muon.pt > {}:\n            fill(muon.pt)\n",
+                    28 + 4 * v
+                ),
+                "dy",
+            )
+        })
+        .collect();
+    let pair_mix: Vec<Query> = (0..NV)
+        .map(|v| Query::new(QueryKind::MassPairs, "dy", "muons").with_binning(64 + v, 0.0, 128.0))
+        .collect();
+    let serve_cluster = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: 4,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::cache_aware(),
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        },
+        Backend::compiled(),
+    ));
+    serve_cluster.catalog.register("dy", dy.clone(), 2_000);
+    // Solo reference results (also warms the worker partition caches, so
+    // the storms measure serving, not first-touch fetches).
+    let mut solo_hists: Vec<H1> = Vec::new();
+    for q in std::iter::once(&hot).chain(&cuts).chain(&pair_mix) {
+        solo_hists.push(serve_cluster.run(q).unwrap().hist);
+    }
+    let solo_hists = Arc::new(solo_hists);
+    let mut serve_rates: std::collections::HashMap<(usize, bool), f64> =
+        std::collections::HashMap::new();
+    for &n_clients in &client_ladder {
+        for (mode, window_ms) in [("off", 0u64), ("on", 2u64)] {
+            let out = serve_storm(
+                &serve_cluster,
+                window_ms,
+                n_clients,
+                &hot,
+                &cuts,
+                &pair_mix,
+                &solo_hists,
+            );
+            let total_q = out.lats_ms.len() as f64;
+            let qps = total_q / out.wall.as_secs_f64();
+            let mut lat = out.lats_ms.clone();
+            let p50 = percentile(&mut lat, 0.50);
+            let p99 = percentile(&mut lat, 0.99);
+            eprintln!(
+                "  serve clients={n_clients} fusion={mode}: {qps:.0} q/s aggregate, \
+                 p50 {p50:.2} ms, p99 {p99:.2} ms"
+            );
+            let wall_ns = out.wall.as_nanos() as f64;
+            b.samples.push(Sample {
+                name: format!("{rung} serve clients={n_clients} fusion={mode}"),
+                ns_per_iter: wall_ns,
+                median_ns: wall_ns,
+                mad_ns: 0.0,
+                iters: 1,
+                items_per_iter: total_q,
+            });
+            serve_rates.insert((n_clients, window_ms > 0), qps);
+            rung += 1;
+        }
+    }
+    serve_cluster.shutdown();
     let _ = rung;
 
     b.finish();
@@ -496,6 +588,23 @@ for event in dataset:
         );
     }
 
+    // Fused vs. unfused aggregate throughput on the same-dataset mix. The
+    // target is pinned at 100 clients; smaller CI ladders print the ratio
+    // at their largest rung without enforcing it.
+    if let Some(&c_check) = client_ladder
+        .iter()
+        .filter(|c| serve_rates.contains_key(&(**c, true)) && serve_rates.contains_key(&(**c, false)))
+        .max()
+    {
+        let sp = serve_rates[&(c_check, true)] / serve_rates[&(c_check, false)];
+        let enforced = c_check >= 100;
+        eprintln!(
+            "fusion check: fused / unfused aggregate throughput at {c_check} clients = {sp:.2}x \
+             (target >= 1.5x at 100 clients){}",
+            if enforced && sp < 1.5 { "  ** BELOW TARGET **" } else { "" }
+        );
+    }
+
     // Shape assertions (soft: print, don't panic, but flag).
     let r1 = b.get("1 full framework (all branches + modules)").unwrap().rate();
     let r3 = b.get("3 load jet pt branch only + fill").unwrap().rate();
@@ -506,4 +615,134 @@ for event in dataset:
         r3 / r1
     );
     eprintln!("total jets histogrammed per pass: {total_jets}");
+}
+
+struct StormOut {
+    /// Wall-clock from the synchronized start to the last client finishing.
+    wall: Duration,
+    /// Client-observed per-query latencies, milliseconds (retries included).
+    lats_ms: Vec<f64>,
+}
+
+/// Start a fresh server over `cluster` with the given fusion window, storm
+/// it with `n_clients` concurrent connections issuing the mixed workload,
+/// and verify every response against the solo reference histograms after
+/// the timers stop. Each client issues: the hot (pre-warmed, cached) query,
+/// one cut variant, one pair-loop variant, then the hot query again.
+fn serve_storm(
+    cluster: &Arc<Cluster>,
+    window_ms: u64,
+    n_clients: usize,
+    hot: &Query,
+    cuts: &[Query],
+    pair_mix: &[Query],
+    solo_hists: &Arc<Vec<H1>>,
+) -> StormOut {
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = Server::with_config(
+        cluster.clone(),
+        ServerConfig {
+            batch_window_ms: window_ms,
+            max_queue_depth: 4096,
+            max_conns: 4096,
+            executors: 4,
+        },
+    );
+    let flag = server.shutdown_flag();
+    let addr2 = addr.clone();
+    let serve_thread = std::thread::spawn(move || server.serve(&addr2).unwrap());
+    // Outside the timers: wait for the listener and pre-warm the hot query
+    // so its storm appearances are result-cache hits.
+    let mut warm_conn = connect_retry(&addr);
+    query_retry(&mut warm_conn, hot);
+
+    let nv = cuts.len();
+    let barrier = Arc::new(Barrier::new(n_clients + 1));
+    let mut handles = Vec::with_capacity(n_clients);
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let barrier = barrier.clone();
+        // (solo-reference index, query) — index 0 is the hot query.
+        let todo = vec![
+            (0usize, hot.clone()),
+            (1 + c % nv, cuts[c % nv].clone()),
+            (1 + nv + c % nv, pair_mix[c % nv].clone()),
+            (0usize, hot.clone()),
+        ];
+        handles.push(std::thread::spawn(move || {
+            let mut conn = connect_retry(&addr);
+            barrier.wait();
+            let mut lats = Vec::with_capacity(todo.len());
+            let mut resps = Vec::with_capacity(todo.len());
+            for (ei, q) in todo {
+                let t0 = Instant::now();
+                let resp = query_retry(&mut conn, &q);
+                lats.push(t0.elapsed().as_secs_f64() * 1e3);
+                resps.push((ei, resp));
+            }
+            (lats, resps)
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut lats: Vec<f64> = Vec::new();
+    let mut resps: Vec<(usize, hepq::util::json::Json)> = Vec::new();
+    for h in handles {
+        let (l, r) = h.join().unwrap();
+        lats.extend(l);
+        resps.extend(r);
+    }
+    let wall = t0.elapsed();
+    flag.store(true, Ordering::Relaxed);
+    serve_thread.join().unwrap();
+    // Bit-identity vs. solo execution, checked outside the timers. Bins and
+    // counts are integer-exact (unweighted fills), so cross-worker merge
+    // order cannot perturb them.
+    for (ei, resp) in &resps {
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "storm query failed: {resp}"
+        );
+        let h = H1::from_json(resp.get("hist").expect("hist in response")).unwrap();
+        assert_eq!(h.bins, solo_hists[*ei].bins, "served bins differ from solo run");
+        assert_eq!(h.count, solo_hists[*ei].count, "served count differs from solo run");
+    }
+    StormOut { wall, lats_ms: lats }
+}
+
+fn connect_retry(addr: &str) -> Client {
+    for _ in 0..500 {
+        if let Ok(c) = Client::connect(addr) {
+            return c;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("could not connect to bench server at {addr}");
+}
+
+/// Issue one query, honoring the server's structured overload response by
+/// sleeping `retry_after_ms` and resubmitting.
+fn query_retry(conn: &mut Client, q: &Query) -> hepq::util::json::Json {
+    loop {
+        let resp = conn.query(q, |_, _| {}).unwrap();
+        if resp.get("error").and_then(|e| e.as_str()) != Some("overloaded") {
+            return resp;
+        }
+        let ms = resp.get("retry_after_ms").and_then(|v| v.as_u64()).unwrap_or(50);
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+fn percentile(sorted_into: &mut [f64], p: f64) -> f64 {
+    if sorted_into.is_empty() {
+        return 0.0;
+    }
+    sorted_into.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted_into.len() - 1) as f64 * p).round() as usize;
+    sorted_into[idx]
 }

@@ -26,6 +26,11 @@ pub struct Subtask {
     /// For push schedulers: the worker this subtask is assigned to
     /// (None = any worker may pull it).
     pub assigned_to: Option<usize>,
+    /// Shared-scan fusion: other queries riding this subtask's partition
+    /// scan. The claiming worker runs all of `[id.query_id] + co_queries`
+    /// over the partition in one fused pass and publishes one partial
+    /// document per member query (empty = ordinary solo subtask).
+    pub co_queries: Vec<u64>,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -200,6 +205,7 @@ mod tests {
             id: SubtaskId { query_id: q, partition: p },
             dataset: ds.to_string(),
             assigned_to: None,
+            co_queries: Vec::new(),
         }
     }
 

@@ -262,13 +262,24 @@ fn worker_loop(ctx: WorkerCtx) {
 
 fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> Result<(), String> {
     let t0 = Instant::now();
-    let query = ctx
-        .queries
-        .read()
-        .unwrap()
-        .get(&task.id.query_id)
-        .cloned()
-        .ok_or_else(|| format!("unknown query {}", task.id.query_id))?;
+    // All member queries of this subtask: the primary plus any co-queries
+    // fused onto the same partition scan (usually none). A co-query that
+    // was cancelled meanwhile simply drops out of the scan; a missing
+    // primary is an error, as before.
+    let members: Vec<(u64, Query)> = {
+        let g = ctx.queries.read().unwrap();
+        let primary = g
+            .get(&task.id.query_id)
+            .cloned()
+            .ok_or_else(|| format!("unknown query {}", task.id.query_id))?;
+        let mut m = vec![(task.id.query_id, primary)];
+        m.extend(
+            task.co_queries
+                .iter()
+                .filter_map(|qid| g.get(qid).cloned().map(|q| (*qid, q))),
+        );
+        m
+    };
     let key = (task.dataset.clone(), task.id.partition);
     // Version-checked cache read: a re-registered dataset must re-fetch
     // (stale bytes would also desynchronize data and zone map).
@@ -281,17 +292,35 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
             p
         }
     };
-    let mut hist = H1::new(query.n_bins, query.lo, query.hi);
-    let chunks = ctx
-        .backend
-        .run_indexed(&query, &part.cs, Some(part.zones.as_ref()), &mut hist)?;
-    ctx.store.insert(PartialDoc {
-        id: task.id.clone(),
-        worker: ctx.id,
-        hist,
-        events_processed: part.cs.n_events as u64,
-        chunks,
-    });
+    let mut hists: Vec<H1> = members
+        .iter()
+        .map(|(_, q)| H1::new(q.n_bins, q.lo, q.hi))
+        .collect();
+    let reps = if members.len() == 1 {
+        // Solo subtask: the ordinary (morsel-parallel) path.
+        vec![ctx.backend.run_indexed(
+            &members[0].1,
+            &part.cs,
+            Some(part.zones.as_ref()),
+            &mut hists[0],
+        )?]
+    } else {
+        // Fused subtask: every member's kernel streams through the same
+        // scan while the partition is hot (`Backend::run_fused`); each
+        // member's result is bit-identical to a solo run.
+        let refs: Vec<&Query> = members.iter().map(|(_, q)| q).collect();
+        ctx.backend
+            .run_fused(&refs, &part.cs, Some(part.zones.as_ref()), &mut hists)?
+    };
+    for (((qid, _), hist), chunks) in members.iter().zip(hists).zip(reps) {
+        ctx.store.insert(PartialDoc {
+            id: SubtaskId { query_id: *qid, partition: task.id.partition },
+            worker: ctx.id,
+            hist,
+            events_processed: part.cs.n_events as u64,
+            chunks,
+        });
+    }
     ctx.board.complete(&task.id);
     let mut s = ctx.stats.lock().unwrap();
     s.tasks_done += 1;
@@ -477,6 +506,7 @@ impl Cluster {
                 id: SubtaskId { query_id, partition: p },
                 dataset: query.dataset.clone(),
                 assigned_to: None,
+                co_queries: Vec::new(),
             })
             .collect();
         let advertised = tasks.len();
@@ -493,6 +523,83 @@ impl Cluster {
             skipped,
             submitted: Instant::now(),
         })
+    }
+
+    /// Submit several queries over the *same dataset* as one fused group:
+    /// each partition that at least one member must scan is advertised
+    /// once, with the remaining members riding that subtask as
+    /// `co_queries`. The claiming worker evaluates every member per chunk
+    /// while the partition is hot in cache (`Backend::run_fused`), so N
+    /// co-arriving queries cost one scan instead of N. Per-query zone-map
+    /// pruning stays independent — a member that can prove a partition
+    /// empty simply does not join that partition's scan. Returns one
+    /// handle per query, in input order; every result is bit-identical to
+    /// a separate `submit`.
+    pub fn submit_fused(&self, queries: &[Query]) -> Result<Vec<QueryHandle>, String> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        if queries.len() == 1 {
+            // A group of one gains nothing from fusion; keep the solo
+            // (morsel-parallel) execution path.
+            return Ok(vec![self.submit(queries[0].clone())?]);
+        }
+        let dataset = &queries[0].dataset;
+        if queries.iter().any(|q| &q.dataset != dataset) {
+            return Err("submit_fused: queries target different datasets".into());
+        }
+        let partitions = self
+            .catalog
+            .n_partitions(dataset)
+            .ok_or_else(|| format!("no dataset '{dataset}'"))?;
+        let skips: Vec<Vec<bool>> = queries
+            .iter()
+            .map(|q| self.partition_skips(q, partitions))
+            .collect();
+        let mut ids = Vec::with_capacity(queries.len());
+        {
+            let mut g = self.queries.write().unwrap();
+            for q in queries {
+                let qid = self.next_query.fetch_add(1, Ordering::Relaxed);
+                g.insert(qid, q.clone());
+                ids.push(qid);
+            }
+        }
+        let mut advertised = vec![0usize; queries.len()];
+        let mut tasks: Vec<Subtask> = Vec::new();
+        for p in 0..partitions {
+            let members: Vec<usize> = (0..queries.len()).filter(|i| !skips[*i][p]).collect();
+            let Some(&first) = members.first() else {
+                continue;
+            };
+            for &i in &members {
+                advertised[i] += 1;
+            }
+            tasks.push(Subtask {
+                id: SubtaskId { query_id: ids[first], partition: p },
+                dataset: dataset.clone(),
+                assigned_to: None,
+                co_queries: members[1..].iter().map(|&i| ids[i]).collect(),
+            });
+        }
+        for &adv in &advertised {
+            self.partitions_scanned.fetch_add(adv as u64, Ordering::Relaxed);
+            self.partitions_skipped
+                .fetch_add((partitions - adv) as u64, Ordering::Relaxed);
+        }
+        self.config.policy.assign(&mut tasks, self.config.n_workers);
+        self.board.advertise(tasks);
+        let now = Instant::now();
+        Ok(ids
+            .into_iter()
+            .zip(advertised)
+            .map(|(query_id, adv)| QueryHandle {
+                query_id,
+                partitions: adv,
+                skipped: partitions - adv,
+                submitted: now,
+            })
+            .collect())
     }
 
     /// Wait for a query, merging partials incrementally. `progress` is
@@ -714,6 +821,45 @@ mod tests {
         // Cluster still works after a cancellation.
         let res2 = c.run(&q).unwrap();
         assert_eq!(res2.partitions, 10);
+        c.shutdown();
+    }
+
+    /// A fused submission returns the same per-query results as separate
+    /// submits. Bin-exact: unweighted fills are integer-valued, so partial
+    /// merge order cannot perturb bins or count.
+    #[test]
+    fn fused_submit_matches_solo_submits() {
+        let cfg = ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::from_millis(1),
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        };
+        let c = Cluster::start(cfg, Backend::compiled());
+        c.catalog.register("dy", generate_drellyan(12_000, 57), 2_000);
+        let queries = [
+            Query::new(QueryKind::FlatHist, "dy", "muons"),
+            Query::new(QueryKind::MassPairs, "dy", "muons"),
+            Query::new(QueryKind::MaxPt, "dy", "muons"),
+        ];
+        let handles = c.submit_fused(&queries).unwrap();
+        assert_eq!(handles.len(), queries.len());
+        // Every member scans every partition here (no cuts), so the whole
+        // group rides 6 shared subtasks instead of 18 solo ones.
+        let fused: Vec<QueryResult> = handles
+            .iter()
+            .zip(&queries)
+            .map(|(h, q)| c.wait(h, q).unwrap())
+            .collect();
+        for (res, q) in fused.iter().zip(&queries) {
+            let solo = c.run(q).unwrap();
+            assert_eq!(res.hist.bins, solo.hist.bins, "{}", q.kind.artifact());
+            assert_eq!(res.hist.count, solo.hist.count, "{}", q.kind.artifact());
+            assert_eq!(res.partitions, solo.partitions, "{}", q.kind.artifact());
+            assert_eq!(res.events, solo.events);
+        }
         c.shutdown();
     }
 

@@ -91,6 +91,7 @@ mod tests {
             id: SubtaskId { query_id: 1, partition: p },
             dataset: "dy".into(),
             assigned_to: None,
+            co_queries: Vec::new(),
         }
     }
 

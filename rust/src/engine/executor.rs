@@ -132,6 +132,39 @@ impl Backend {
         }
     }
 
+    /// Run several queries over one partition in a single shared scan.
+    /// The compiled-tape backend streams every query's kernel through the
+    /// same event windows so the partition's columns are read once
+    /// (`CompiledTapeBackend::run_fused_indexed`); the result in
+    /// `hists[i]` is bit-identical to `run_indexed` for query `i` alone.
+    /// Other backends fall back to running the queries back-to-back —
+    /// still one partition fetch, just no cache sharing.
+    pub fn run_fused(
+        &self,
+        queries: &[&Query],
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hists: &mut [H1],
+    ) -> Result<Vec<IndexedRun>, String> {
+        if queries.len() != hists.len() {
+            return Err(format!(
+                "run_fused: {} queries but {} histograms",
+                queries.len(),
+                hists.len()
+            ));
+        }
+        match self {
+            Backend::CompiledTape(ct) => ct.run_fused_indexed(queries, cs, zm, hists),
+            other => {
+                let mut reps = Vec::with_capacity(queries.len());
+                for (q, h) in queries.iter().zip(hists.iter_mut()) {
+                    reps.push(other.run_indexed(q, cs, zm, h)?);
+                }
+                Ok(reps)
+            }
+        }
+    }
+
     /// Chunk-skipping counters, when this backend keeps them
     /// (compiled-tape only; shared across all clones).
     pub fn zone_counters(&self) -> Option<IndexedRun> {

@@ -8,7 +8,7 @@ use hepq::engine::executor::PjrtBackend;
 use hepq::engine::{Backend, Query, QueryKind};
 use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
 use hepq::hist::{ascii, H1};
-use hepq::server::{Client, Server};
+use hepq::server::{Client, Server, ServerConfig};
 use hepq::util::cli::{App, CommandSpec, Matches};
 use std::path::Path;
 use std::sync::Arc;
@@ -68,6 +68,14 @@ fn app() -> App {
                     "",
                     "cluster events by a leaf at registration so zone maps prune",
                 )
+                .opt(
+                    "batch-window-ms",
+                    "2",
+                    "shared-scan fusion window in ms (0 disables fusion)",
+                )
+                .opt("max-queue-depth", "256", "queued queries before shedding load")
+                .opt("max-conns", "4096", "simultaneous client connections")
+                .opt("executors", "2", "query executor threads")
                 .req("data", "comma-separated name=path.froot dataset list"),
             CommandSpec::new("client", "send a query to a running server")
                 .opt("addr", "127.0.0.1:8765", "server address")
@@ -315,7 +323,13 @@ fn cmd_serve(m: &Matches) -> Result<(), String> {
         println!("loaded dataset '{name}': {} events from {path}", cs.n_events);
         cluster.catalog.register(name, cs, part_events);
     }
-    let server = Server::new(cluster);
+    let config = ServerConfig {
+        batch_window_ms: m.u64("batch-window-ms").map_err(|e| e.to_string())?,
+        max_queue_depth: m.usize("max-queue-depth").map_err(|e| e.to_string())?,
+        max_conns: m.usize("max-conns").map_err(|e| e.to_string())?,
+        executors: m.usize("executors").map_err(|e| e.to_string())?,
+    };
+    let server = Server::with_config(cluster, config);
     server.serve(m.str("addr"))?;
     Ok(())
 }

@@ -1689,9 +1689,35 @@ fn run_chunked_linear(
     report: &mut IndexedRun,
     scratch: &mut KernelScratch,
 ) {
-    let plan = plan.filter(|p| p.events == events);
     let (bins, bufs) = scratch.kernel(hist.n_bins() + 2, ck.bufs.len());
     let mut acc = Acc::new(bins, hist);
+    chunk_span(ck, cols, lane_lo, lane_hi, events, plan, report, &mut acc, bufs);
+    acc.flush(hist);
+}
+
+/// Drive one lane window `[lane_lo, lane_hi)` through the linear-lane
+/// chunk loop with a caller-held accumulator and buffer table. This is the
+/// streaming core shared by `run_chunked_linear` (one window, flush at the
+/// end) and the shared-scan fusion path (`run_fused_indexed`), where each
+/// query's accumulator persists across adjacent windows so the addition
+/// sequence — and therefore every bit of bins, count *and* moments — is
+/// identical to one solo full-range run. Batches align to absolute `CHUNK`
+/// boundaries, so window placement only splits batches, never reorders
+/// lanes, and each node of `beval` is element-wise (no cross-lane flow):
+/// a split batch computes the same per-lane values.
+#[allow(clippy::too_many_arguments)]
+fn chunk_span(
+    ck: &ChunkedBody,
+    cols: &BoundCols<'_>,
+    lane_lo: usize,
+    lane_hi: usize,
+    events: bool,
+    plan: Option<&ChunkPlan>,
+    report: &mut IndexedRun,
+    acc: &mut Acc<'_>,
+    bufs: &mut [Vec<f64>],
+) {
+    let plan = plan.filter(|p| p.events == events);
     let mut base = lane_lo;
     while base < lane_hi {
         let n = (CHUNK - base % CHUNK).min(lane_hi - base);
@@ -1718,10 +1744,9 @@ fn run_chunked_linear(
         };
         let lanes = Lanes { cols, kind };
         eval_bufs(ck, &lanes, n, take_all, bufs);
-        accumulate(&ck.fills, bufs, n, take_all, &mut acc);
+        accumulate(&ck.fills, bufs, n, take_all, acc);
         base += n;
     }
-    acc.flush(hist);
 }
 
 // ------------------------------------------------------------ pair kernel
@@ -1924,8 +1949,59 @@ fn run_chunked_pairs(
     let ck = &pk.body;
     let (bins, bufs, pa, pb) = scratch.pair_kernel(hist.n_bins() + 2, ck.bufs.len());
     let mut acc = Acc::new(bins, hist);
-    let off = cols.offsets[pk.list];
     let mut t = 0usize;
+    pair_span(pk, cols, ev_lo, ev_hi, &mut acc, bufs, pa, pb, &mut t);
+    pair_flush(ck, cols, &mut acc, bufs, pa, pb, &mut t);
+    acc.flush(hist);
+}
+
+/// Evaluate and accumulate the `t` pairs currently materialized in the
+/// pair buffers, then reset `t`. A no-op when the buffers are empty.
+fn pair_flush(
+    ck: &ChunkedBody,
+    cols: &BoundCols<'_>,
+    acc: &mut Acc<'_>,
+    bufs: &mut [Vec<f64>],
+    pa: &mut [usize],
+    pb: &mut [usize],
+    t: &mut usize,
+) {
+    if *t == 0 {
+        return;
+    }
+    let lanes = Lanes {
+        cols,
+        kind: LaneKind::Pairs {
+            a: &pa[..*t],
+            b: &pb[..*t],
+        },
+    };
+    eval_bufs(ck, &lanes, *t, false, bufs);
+    accumulate(&ck.fills, bufs, *t, false, acc);
+    *t = 0;
+}
+
+/// Materialize the pair nests of events `[ev_lo, ev_hi)` into the pair
+/// buffers, batching through `pair_flush` every `CHUNK` pairs. The fill
+/// count `t` is caller-held so partial batches **carry across adjacent
+/// event windows**: the shared-scan fusion path streams a partition window
+/// by window through one persistent `(acc, t)` pair per query, producing
+/// exactly the flush boundaries — and so exactly the addition sequence —
+/// of one solo full-range run. The caller flushes the final tail.
+#[allow(clippy::too_many_arguments)]
+fn pair_span(
+    pk: &PairKernel,
+    cols: &BoundCols<'_>,
+    ev_lo: usize,
+    ev_hi: usize,
+    acc: &mut Acc<'_>,
+    bufs: &mut [Vec<f64>],
+    pa: &mut [usize],
+    pb: &mut [usize],
+    t: &mut usize,
+) {
+    let ck = &pk.body;
+    let off = cols.offsets[pk.list];
     for ev in ev_lo..ev_hi {
         let base = off[ev] as usize;
         // Same i64 arithmetic as the scalar loop bounds (`lo as i64 ..
@@ -1938,38 +2014,294 @@ fn run_chunked_pairs(
                 PairStart::Abs(c) => c,
             };
             while j < n {
-                pa[t] = base + i as usize;
-                pb[t] = base + j as usize;
-                t += 1;
-                if t == CHUNK {
-                    let lanes = Lanes {
-                        cols,
-                        kind: LaneKind::Pairs {
-                            a: &pa[..t],
-                            b: &pb[..t],
-                        },
-                    };
-                    eval_bufs(ck, &lanes, t, false, bufs);
-                    accumulate(&ck.fills, bufs, t, false, &mut acc);
-                    t = 0;
+                pa[*t] = base + i as usize;
+                pb[*t] = base + j as usize;
+                *t += 1;
+                if *t == CHUNK {
+                    pair_flush(ck, cols, acc, bufs, pa, pb, t);
                 }
                 j += 1;
             }
             i += 1;
         }
     }
-    if t > 0 {
-        let lanes = Lanes {
-            cols,
-            kind: LaneKind::Pairs {
-                a: &pa[..t],
-                b: &pb[..t],
-            },
+}
+
+// ------------------------------------------------------ shared-scan fusion
+
+/// Which execution path one fused stream takes, decided **once** over the
+/// whole partition (exactly the decision `run_range_inner` would make for
+/// the full range) so every window of the stream runs the same kernel.
+enum StreamPath {
+    /// Item-lane chunked kernel of a fused single-list loop.
+    Items,
+    /// Pair-lane chunked kernel of a `range(len(l))` nest.
+    Pairs,
+    /// Event-lane chunked kernel of a loop-free per-event body.
+    Events,
+    /// No streaming-safe kernel: the program runs the ordinary solo path
+    /// once over the whole partition at `finish` (still one fetch — the
+    /// partition is resident for the whole fused scan).
+    Whole,
+}
+
+/// One query's private execution state inside a shared scan: its column
+/// bindings, chunk plan, kernel buffers and — crucially — a **persistent
+/// accumulator** (scratch bins + running count/sum/sum2) that survives
+/// across event windows. Flushing per window would reassociate the moment
+/// additions; carrying the accumulator keeps the arithmetic sequence
+/// identical to a solo run, so fused results are bit-identical including
+/// `sum`/`sum2`.
+struct FusedStream<'a> {
+    prog: &'a CompiledProgram,
+    cols: BoundCols<'a>,
+    plan: Option<ChunkPlan>,
+    path: StreamPath,
+    report: IndexedRun,
+    n_events: usize,
+    // Persistent accumulator state (an `Acc` is re-materialized over these
+    // fields for each window).
+    bins: Vec<f64>,
+    count: f64,
+    sum: f64,
+    sum2: f64,
+    n_bins: usize,
+    lo: f64,
+    width: f64,
+    // Private kernel buffers — streams run interleaved, so they cannot
+    // share one `KernelScratch`.
+    bufs: Vec<Vec<f64>>,
+    pair_a: Vec<usize>,
+    pair_b: Vec<usize>,
+    pair_t: usize,
+}
+
+impl<'a> FusedStream<'a> {
+    fn new(
+        prog: &'a CompiledProgram,
+        cs: &'a ColumnSet,
+        zm: Option<&ZoneMap>,
+        hist: &H1,
+    ) -> Result<FusedStream<'a>, String> {
+        let plan = zm.and_then(|z| chunk_plan(prog, z));
+        let cols = bind(prog, cs)?;
+        let n_events = cs.n_events;
+        // Decide the kernel path once over the full range — the same
+        // checks `run_range_inner` performs, so a program that would take
+        // (or refuse) a kernel solo does exactly the same fused.
+        let path = if let Some(f) = &prog.fused {
+            let k_hi = cols.offsets[f.list][n_events] as usize;
+            let in_bounds = cols.items.iter().all(|c| c.len() >= k_hi);
+            if f.chunked.is_some() && in_bounds {
+                StreamPath::Items
+            } else {
+                StreamPath::Whole
+            }
+        } else if let Some(pk) = &prog.pair_kernel {
+            if pair_window_safe(pk, &cols, 0, n_events) {
+                StreamPath::Pairs
+            } else {
+                StreamPath::Whole
+            }
+        } else if let Some(ek) = &prog.event_kernel {
+            if event_window_safe(ek, &cols, 0, n_events) {
+                StreamPath::Events
+            } else {
+                StreamPath::Whole
+            }
+        } else {
+            StreamPath::Whole
         };
-        eval_bufs(ck, &lanes, t, false, bufs);
-        accumulate(&ck.fills, bufs, t, false, &mut acc);
+        let n_bufs = match path {
+            StreamPath::Items => prog.fused.as_ref().unwrap().chunked.as_ref().unwrap().bufs.len(),
+            StreamPath::Pairs => prog.pair_kernel.as_ref().unwrap().body.bufs.len(),
+            StreamPath::Events => prog.event_kernel.as_ref().unwrap().bufs.len(),
+            StreamPath::Whole => 0,
+        };
+        let pairs = matches!(path, StreamPath::Pairs);
+        Ok(FusedStream {
+            prog,
+            cols,
+            plan,
+            path,
+            report: IndexedRun::default(),
+            n_events,
+            bins: vec![0.0; hist.n_bins() + 2],
+            count: 0.0,
+            sum: 0.0,
+            sum2: 0.0,
+            n_bins: hist.n_bins(),
+            lo: hist.lo,
+            width: hist.hi - hist.lo,
+            bufs: vec![vec![0.0f64; CHUNK]; n_bufs],
+            pair_a: vec![0; if pairs { CHUNK } else { 0 }],
+            pair_b: vec![0; if pairs { CHUNK } else { 0 }],
+            pair_t: 0,
+        })
     }
-    acc.flush(hist);
+
+    /// Process events `[ev_lo, ev_hi)` of the shared scan through this
+    /// stream's kernel, accumulating into its persistent state.
+    fn advance(&mut self, ev_lo: usize, ev_hi: usize) {
+        let mut acc = Acc {
+            bins: &mut self.bins[..],
+            n_bins: self.n_bins,
+            lo: self.lo,
+            width: self.width,
+            count: self.count,
+            sum: self.sum,
+            sum2: self.sum2,
+        };
+        match self.path {
+            StreamPath::Items => {
+                let f = self.prog.fused.as_ref().expect("items path");
+                let ck = f.chunked.as_ref().expect("items path");
+                let off = self.cols.offsets[f.list];
+                let (k_lo, k_hi) = (off[ev_lo] as usize, off[ev_hi] as usize);
+                chunk_span(
+                    ck,
+                    &self.cols,
+                    k_lo,
+                    k_hi,
+                    false,
+                    self.plan.as_ref(),
+                    &mut self.report,
+                    &mut acc,
+                    &mut self.bufs,
+                );
+            }
+            StreamPath::Events => {
+                let ck = self.prog.event_kernel.as_ref().expect("events path");
+                chunk_span(
+                    ck,
+                    &self.cols,
+                    ev_lo,
+                    ev_hi,
+                    true,
+                    self.plan.as_ref(),
+                    &mut self.report,
+                    &mut acc,
+                    &mut self.bufs,
+                );
+            }
+            StreamPath::Pairs => {
+                let pk = self.prog.pair_kernel.as_ref().expect("pairs path");
+                pair_span(
+                    pk,
+                    &self.cols,
+                    ev_lo,
+                    ev_hi,
+                    &mut acc,
+                    &mut self.bufs,
+                    &mut self.pair_a,
+                    &mut self.pair_b,
+                    &mut self.pair_t,
+                );
+            }
+            StreamPath::Whole => {}
+        }
+        self.count = acc.count;
+        self.sum = acc.sum;
+        self.sum2 = acc.sum2;
+    }
+
+    /// Flush this stream's accumulated state into its query's histogram
+    /// (running the whole solo path now for `Whole` streams).
+    fn finish(mut self, hist: &mut H1) -> Result<IndexedRun, String> {
+        if matches!(self.path, StreamPath::Whole) {
+            let mut scratch = KernelScratch::new();
+            run_range_inner(
+                self.prog,
+                &self.cols,
+                0,
+                self.n_events,
+                hist,
+                true,
+                self.plan.as_ref(),
+                &mut self.report,
+                &mut scratch,
+            )?;
+            return Ok(self.report);
+        }
+        let mut acc = Acc {
+            bins: &mut self.bins[..],
+            n_bins: self.n_bins,
+            lo: self.lo,
+            width: self.width,
+            count: self.count,
+            sum: self.sum,
+            sum2: self.sum2,
+        };
+        if let StreamPath::Pairs = self.path {
+            let pk = self.prog.pair_kernel.as_ref().expect("pairs path");
+            pair_flush(
+                &pk.body,
+                &self.cols,
+                &mut acc,
+                &mut self.bufs,
+                &mut self.pair_a,
+                &mut self.pair_b,
+                &mut self.pair_t,
+            );
+        }
+        acc.flush(hist);
+        Ok(self.report)
+    }
+}
+
+/// **Shared-scan fusion**: run several compiled programs over one
+/// partition in a single streaming pass. Adjacent event windows of
+/// `window_events` events (0 = [`DEFAULT_MORSEL_EVENTS`]) move through
+/// every program in turn, so each window's columns are evaluated by all
+/// queries while they are hot in cache — the cooperative-scan answer to
+/// many concurrent clients reading the same dataset.
+///
+/// Every program keeps its own histogram, zone-map chunk plan and
+/// [`IndexedRun`] report; `hists[i]` receives program `i`'s result.
+/// **Bit-identity with solo execution** (`run_indexed` per program) holds
+/// because each stream decides its kernel path once over the full range
+/// (the same decision solo execution makes), batches align to absolute
+/// `CHUNK` boundaries (window placement can split a batch but `beval` is
+/// element-wise, so per-lane values are unchanged), pair batches carry
+/// partial fills across windows, and each stream's accumulator — bins and
+/// running count/sum/sum2 — persists across the whole scan, reproducing
+/// the solo addition sequence exactly. Programs without a streaming-safe
+/// kernel run their ordinary solo path over the still-resident partition.
+pub fn run_fused_indexed<'a>(
+    progs: &[&'a CompiledProgram],
+    cs: &'a ColumnSet,
+    zm: Option<&ZoneMap>,
+    hists: &mut [H1],
+    window_events: usize,
+) -> Result<Vec<IndexedRun>, String> {
+    if progs.len() != hists.len() {
+        return Err(format!(
+            "run_fused_indexed: {} programs but {} histograms",
+            progs.len(),
+            hists.len()
+        ));
+    }
+    let mut streams = Vec::with_capacity(progs.len());
+    for (prog, hist) in progs.iter().zip(hists.iter()) {
+        streams.push(FusedStream::new(prog, cs, zm, hist)?);
+    }
+    let step = match window_events {
+        0 => DEFAULT_MORSEL_EVENTS,
+        n => n,
+    };
+    let mut ev = 0usize;
+    while ev < cs.n_events {
+        let hi = (ev + step).min(cs.n_events);
+        for s in &mut streams {
+            s.advance(ev, hi);
+        }
+        ev = hi;
+    }
+    let mut out = Vec::with_capacity(progs.len());
+    for (s, hist) in streams.into_iter().zip(hists.iter_mut()) {
+        out.push(s.finish(hist)?);
+    }
+    Ok(out)
 }
 
 // ------------------------------------------------------- closure lowering
@@ -2883,5 +3215,92 @@ for event in dataset:
             run(&cp, &cs, &mut fresh).unwrap();
             assert_eq!(pooled, fresh, "{src}");
         }
+    }
+
+    /// Shared-scan fusion: heterogeneous programs streamed through one
+    /// partition in a single pass produce exactly the histograms of solo
+    /// `run_indexed` runs — bins, under/overflow **and moments** — across
+    /// all three kernel families plus both whole-path fallbacks (no kernel
+    /// at all, and a fused body too deep to batch), at several window
+    /// sizes including ones that split chunks and pair batches.
+    #[test]
+    fn fused_scan_bit_identical_to_solo() {
+        let cs = generate_drellyan(5_000, 116);
+        let deep = format!(
+            "{}muon.pt{}",
+            "sqrt(".repeat(MAX_BATCH_DEPTH + 4),
+            ")".repeat(MAX_BATCH_DEPTH + 4)
+        );
+        let fallback =
+            format!("for event in dataset:\n    for muon in event.muons:\n        fill({deep})\n");
+        // In order: item kernel, pair kernel, event kernel, no kernel at
+        // all (whole-path stream), fused body too deep to batch (ditto).
+        let srcs = [
+            table3::MUON_PT,
+            table3::MASS_PAIRS,
+            "for event in dataset:\n    fill(event.met)\n",
+            table3::MAX_PT,
+            fallback.as_str(),
+        ];
+        let progs: Vec<CompiledProgram> = srcs
+            .iter()
+            .map(|s| lower(&queryir::compile(s, &cs.schema).unwrap()).unwrap())
+            .collect();
+        let refs: Vec<&CompiledProgram> = progs.iter().collect();
+        for window in [257, 1024, 0] {
+            let mut fused: Vec<H1> = (0..refs.len()).map(|_| H1::new(64, 0.0, 128.0)).collect();
+            let reps = run_fused_indexed(&refs, &cs, None, &mut fused, window).unwrap();
+            for (i, prog) in refs.iter().enumerate() {
+                let mut solo = H1::new(64, 0.0, 128.0);
+                let rep = run_indexed(prog, &cs, None, &mut solo).unwrap();
+                assert_eq!(fused[i], solo, "query {i} window {window}");
+                assert_eq!(reps[i], rep, "query {i} window {window}");
+            }
+        }
+    }
+
+    /// Fusion composes with zone-map pruning: each fused query keeps its
+    /// own chunk plan and skip report, identical to its solo indexed run.
+    #[test]
+    fn fused_scan_composes_with_zone_maps() {
+        let mut cs = generate_drellyan(6_000, 117);
+        let mut pts = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+        pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr_hi = pts[pts.len() - 1 - pts.len() / 100] as f64; // ~1% pass
+        let thr_mid = pts[pts.len() / 2] as f64; // ~50% pass
+        cs.leaves
+            .insert("muons.pt".into(), crate::columnar::arrays::Array::F32(pts));
+        let zm = crate::index::ZoneMap::build(&cs);
+        let cut = |thr: f64| {
+            format!(
+                "for event in dataset:\n    for muon in event.muons:\n        \
+                 if muon.pt > {thr}:\n            fill(muon.pt)\n"
+            )
+        };
+        let srcs = [cut(thr_hi), cut(thr_mid), table3::MUON_PT.to_string()];
+        let progs: Vec<CompiledProgram> = srcs
+            .iter()
+            .map(|s| lower(&queryir::compile(s, &cs.schema).unwrap()).unwrap())
+            .collect();
+        let refs: Vec<&CompiledProgram> = progs.iter().collect();
+        let mut fused: Vec<H1> = (0..refs.len()).map(|_| H1::new(64, 0.0, 128.0)).collect();
+        let reps = run_fused_indexed(&refs, &cs, Some(&zm), &mut fused, 777).unwrap();
+        for (i, prog) in refs.iter().enumerate() {
+            let mut solo = H1::new(64, 0.0, 128.0);
+            let rep = run_indexed(prog, &cs, Some(&zm), &mut solo).unwrap();
+            assert_eq!(fused[i], solo, "query {i}");
+            assert_eq!(reps[i], rep, "query {i}");
+        }
+        // The tight cut actually pruned inside the fused scan.
+        assert!(reps[0].chunks_skipped > 0, "{:?}", reps[0]);
+    }
+
+    #[test]
+    fn fused_scan_rejects_mismatched_histograms() {
+        let cs = generate_drellyan(100, 118);
+        let prog = queryir::compile(table3::MUON_PT, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let mut hists = vec![H1::new(8, 0.0, 128.0); 2];
+        assert!(run_fused_indexed(&[&cp], &cs, None, &mut hists, 0).is_err());
     }
 }

@@ -1,0 +1,280 @@
+//! Bounded, client-fair submission queue for the server's executors.
+//!
+//! Admission control and fairness in one structure: every client gets its
+//! own FIFO, executors pop **round-robin across clients**, and at most one
+//! item per client is in flight at a time — so a client firing queries in
+//! a tight loop cannot starve anyone, and responses on one connection
+//! always come back in request order. A global depth cap bounds memory and
+//! tail latency: past it, `push` refuses and the server sheds load with a
+//! structured `overloaded` response instead of hanging the client.
+//!
+//! The queue is deliberately generic over the item type so it can be
+//! tested without sockets or a cluster.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct FairQueue<T> {
+    inner: Mutex<Inner<T>>,
+    /// Signalled on `push` and `complete`, so idle executors block here.
+    work: Condvar,
+    max_depth: usize,
+}
+
+struct Inner<T> {
+    /// Per-client FIFO of pending items.
+    queues: HashMap<u64, VecDeque<T>>,
+    /// Clients with pending items, in round-robin order (each appears at
+    /// most once; popped clients with remaining items rotate to the back).
+    rr: VecDeque<u64>,
+    /// Clients whose previous item is still executing.
+    in_flight: HashSet<u64>,
+    depth: usize,
+    accepted: u64,
+    shed: u64,
+}
+
+impl<T> Default for Inner<T> {
+    fn default() -> Self {
+        Inner {
+            queues: HashMap::new(),
+            rr: VecDeque::new(),
+            in_flight: HashSet::new(),
+            depth: 0,
+            accepted: 0,
+            shed: 0,
+        }
+    }
+}
+
+impl<T> FairQueue<T> {
+    pub fn new(max_depth: usize) -> FairQueue<T> {
+        FairQueue {
+            inner: Mutex::new(Inner::default()),
+            work: Condvar::new(),
+            max_depth: max_depth.max(1),
+        }
+    }
+
+    /// Enqueue an item for `client`. `Err(depth)` means the global cap is
+    /// hit and the item was refused (the caller sheds load).
+    pub fn push(&self, client: u64, item: T) -> Result<(), usize> {
+        let mut g = self.inner.lock().unwrap();
+        if g.depth >= self.max_depth {
+            g.shed += 1;
+            return Err(g.depth);
+        }
+        let fresh = !g.queues.contains_key(&client);
+        g.queues.entry(client).or_default().push_back(item);
+        if fresh {
+            g.rr.push_back(client);
+        }
+        g.depth += 1;
+        g.accepted += 1;
+        drop(g);
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next item round-robin, skipping clients with an item in
+    /// flight and items `eligible` rejects; the winning client is marked
+    /// in flight (call `complete` when done). Blocks up to `timeout`.
+    pub fn pop_where<F>(&self, timeout: Duration, eligible: F) -> Option<(u64, T)>
+    where
+        F: Fn(&T) -> bool,
+    {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(hit) = Self::try_pop(&mut g, &eligible) {
+                return Some(hit);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (guard, _timeout) = self.work.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+    }
+
+    /// `pop_where` accepting anything.
+    pub fn pop(&self, timeout: Duration) -> Option<(u64, T)> {
+        self.pop_where(timeout, |_| true)
+    }
+
+    /// Non-blocking: pop up to `max` more items (round-robin, in-flight
+    /// gating as in `pop`) — the batching-window scoop that feeds
+    /// shared-scan fusion.
+    pub fn pop_extra<F>(&self, max: usize, eligible: F) -> Vec<(u64, T)>
+    where
+        F: Fn(&T) -> bool,
+    {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < max {
+            match Self::try_pop(&mut g, &eligible) {
+                Some(hit) => out.push(hit),
+                None => break,
+            }
+        }
+        out
+    }
+
+    fn try_pop<F>(g: &mut Inner<T>, eligible: &F) -> Option<(u64, T)>
+    where
+        F: Fn(&T) -> bool,
+    {
+        for _ in 0..g.rr.len() {
+            let client = g.rr.pop_front().unwrap();
+            let front_eligible = match g.queues.get(&client).and_then(|q| q.front()) {
+                Some(t) => eligible(t),
+                None => false,
+            };
+            if g.in_flight.contains(&client) || !front_eligible {
+                g.rr.push_back(client);
+                continue;
+            }
+            let q = g.queues.get_mut(&client).unwrap();
+            let item = q.pop_front().unwrap();
+            if q.is_empty() {
+                g.queues.remove(&client);
+            } else {
+                g.rr.push_back(client);
+            }
+            g.depth -= 1;
+            g.in_flight.insert(client);
+            return Some((client, item));
+        }
+        None
+    }
+
+    /// The client's in-flight item finished; its next queued item (if any)
+    /// becomes poppable.
+    pub fn complete(&self, client: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight.remove(&client);
+        drop(g);
+        self.work.notify_all();
+    }
+
+    /// Does the client have anything queued or in flight? (The reactor's
+    /// inline fast path must not overtake it.)
+    pub fn busy(&self, client: u64) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.in_flight.contains(&client) || g.queues.contains_key(&client)
+    }
+
+    /// Drop a disconnected client's queued items (its in-flight item, if
+    /// any, finishes on its own; the result is discarded downstream).
+    pub fn forget(&self, client: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(q) = g.queues.remove(&client) {
+            g.depth -= q.len();
+        }
+        g.rr.retain(|c| *c != client);
+    }
+
+    /// Queued (not yet popped) items right now.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().depth
+    }
+
+    /// Items refused by the depth cap since start.
+    pub fn shed_count(&self) -> u64 {
+        self.inner.lock().unwrap().shed
+    }
+
+    /// Items accepted since start.
+    pub fn accepted_count(&self) -> u64 {
+        self.inner.lock().unwrap().accepted
+    }
+
+    /// Wake every blocked `pop` (shutdown path).
+    pub fn wake_all(&self) {
+        self.work.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_across_clients() {
+        let q: FairQueue<u32> = FairQueue::new(16);
+        // Client 1 floods; client 2 sends one item.
+        for i in 0..4 {
+            q.push(1, i).unwrap();
+        }
+        q.push(2, 100).unwrap();
+        let (c1, _) = q.pop(Duration::ZERO).unwrap();
+        assert_eq!(c1, 1);
+        // Client 1 is in flight; the next pop must serve client 2 even
+        // though client 1 queued first.
+        let (c2, v2) = q.pop(Duration::ZERO).unwrap();
+        assert_eq!((c2, v2), (2, 100));
+        // Both in flight now: nothing poppable until a completion.
+        assert!(q.pop(Duration::ZERO).is_none());
+        q.complete(1);
+        let (c3, v3) = q.pop(Duration::ZERO).unwrap();
+        assert_eq!((c3, v3), (1, 1));
+    }
+
+    #[test]
+    fn depth_cap_sheds() {
+        let q: FairQueue<u32> = FairQueue::new(2);
+        q.push(1, 0).unwrap();
+        q.push(2, 1).unwrap();
+        assert_eq!(q.push(3, 2), Err(2));
+        assert_eq!(q.shed_count(), 1);
+        assert_eq!(q.depth(), 2);
+        // Popping frees capacity again.
+        let _ = q.pop(Duration::ZERO).unwrap();
+        q.push(3, 2).unwrap();
+        assert_eq!(q.accepted_count(), 3);
+    }
+
+    #[test]
+    fn forget_drops_queued_work() {
+        let q: FairQueue<u32> = FairQueue::new(16);
+        q.push(1, 0).unwrap();
+        q.push(1, 1).unwrap();
+        q.push(2, 2).unwrap();
+        q.forget(1);
+        assert_eq!(q.depth(), 1);
+        let (c, _) = q.pop(Duration::ZERO).unwrap();
+        assert_eq!(c, 2);
+        assert!(q.pop(Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn pop_where_filters_and_scoops() {
+        let q: FairQueue<u32> = FairQueue::new(16);
+        q.push(1, 7).unwrap();
+        q.push(2, 8).unwrap();
+        q.push(3, 9).unwrap();
+        // Only odd items are eligible this round.
+        let (c, v) = q.pop_where(Duration::ZERO, |t| t % 2 == 1).unwrap();
+        assert_eq!((c, v), (1, 7));
+        let extra = q.pop_extra(8, |t| *t % 2 == 1);
+        assert_eq!(extra, vec![(3, 9)]);
+        assert!(q.busy(3));
+        assert_eq!(q.depth(), 1); // client 2's even item still queued
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        use std::sync::Arc;
+        let q: Arc<FairQueue<u32>> = Arc::new(FairQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        q.push(1, 5).unwrap();
+        let got = t.join().unwrap();
+        assert_eq!(got, Some((1, 5)));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -1,29 +1,35 @@
-//! TCP query server + client — the centralized service face of the system.
+//! TCP query server + client — the centralized, multi-tenant service face
+//! of the system.
 //!
-//! Line protocol: one JSON object per line.
+//! Line protocol: one JSON object per line. The complete wire reference —
+//! every op, every request/response field, error shapes, and a worked
+//! netcat session — is `docs/SERVER_PROTOCOL.md`; the short form:
 //!   request:  {"op":"query","kind":"mass_pairs","dataset":"dy","list":"muons",
 //!              "n_bins":64,"lo":0,"hi":128}
 //!             {"op":"query","src":"for event in dataset:\n ...","dataset":"dy"}
 //!             {"op":"datasets"} | {"op":"stats"} | {"op":"ping"}
 //!             {"op":"warm","dataset":"dy"}   (re-run top-cost cached tapes)
-//!   response: {"ok":true,"hist":{...},"latency_ms":...,"events":...,
-//!              "partitions":...,"skipped":...,"chunks_skipped":...,
-//!              "chunks_take_all":...,"chunks_scanned":...,"cached":bool}
+//!   response: {"ok":true,"hist":{...},"latency_ms":...,"queue_ms":...,
+//!              "exec_ms":...,"fused_with":...,"events":...,"partitions":...,
+//!              "skipped":...,"chunks_skipped":...,"chunks_take_all":...,
+//!              "chunks_scanned":...,"cached":bool}
 //!             progress frames: {"progress":done,"total":n} (one per merge round)
+//!             overload: {"ok":false,"error":"overloaded","retry_after_ms":..}
 //!
-//! `skipped` counts partitions the zone maps pruned at submit;
-//! `chunks_skipped`/`chunks_take_all`/`chunks_scanned` are the same
-//! query's chunk-level counters from the workers' indexed runs (cached
-//! results serve the counters recorded when they were produced).
-//!
-//! `stats` includes a `data_skipping` block: zone-map partition/chunk skip
-//! counters, the result-cache warm count, and per-worker partition-cache
-//! hit rates. `warm` is the result-cache warming hook: after re-registering
-//! a dataset (which bumps its version and invalidates its cached results),
-//! issue `warm` to re-run that dataset's highest-cost cached tapes —
-//! priority = stored GreedyDual cost — and repopulate the cache before
-//! physicists re-ask. Each connection runs on its own thread, so a warm
-//! does not block other clients.
+//! Serving model: one **reactor** thread owns every socket — nonblocking
+//! accept plus read/write polling — so a connection costs a buffer, not a
+//! thread, and thousands of idle clients cost ~nothing. Cheap ops
+//! (`ping`/`stats`/`datasets`) and result-cache hits are answered inline
+//! by the reactor; cache-missing queries and `warm` go onto a bounded
+//! **fair queue** (`server::fair_queue`): per-client FIFO, round-robin
+//! across clients, one item in flight per client, and a depth cap that
+//! sheds load with a structured `overloaded` response instead of hanging.
+//! Executor threads pop that queue; queries arriving within the batching
+//! window that target the same dataset fuse into **one shared scan**
+//! (`server::scan_fusion` → `Cluster::submit_fused`), each keeping its own
+//! histogram — bit-identical to solo execution. Per-connection read/write
+//! stall timeouts bound half-dead peers; `ServerConfig` holds the knobs
+//! (`--batch-window-ms`, `--max-queue-depth`, `--max-conns` on the CLI).
 //!
 //! Source queries (`src`) are validated — parsed and transformed against the
 //! dataset schema — *before* any subtask is advertised, so malformed physics
@@ -36,17 +42,138 @@
 //! (`server::result_cache`), so a repeated exploratory query is answered in
 //! microseconds without touching the cluster.
 
+pub mod fair_queue;
 pub mod result_cache;
+pub mod scan_fusion;
 
 use crate::coord::Cluster;
 use crate::engine::Query;
 use crate::queryir;
 use crate::util::json::Json;
+use fair_queue::FairQueue;
 use result_cache::{CachedResult, ResultCache};
-use std::io::{BufRead, BufReader, Write};
+use scan_fusion::{FusionStats, Job};
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Reactor idle tick: the latency floor when no socket has traffic.
+const IDLE_TICK: Duration = Duration::from_millis(1);
+/// Executor queue-pop timeout (bounds shutdown latency).
+const EXEC_TICK: Duration = Duration::from_millis(20);
+/// Per-connection stall timeout: a half-sent request line, or a peer that
+/// stopped reading its responses, is disconnected after this long.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Longest accepted request line (the reactor buffers at most this much
+/// un-newlined input per connection).
+const MAX_LINE_BYTES: usize = 1 << 20;
+/// Most queries fused into one shared-scan group.
+const MAX_FUSE: usize = 32;
+
+/// Serving knobs (CLI: `--batch-window-ms`, `--max-queue-depth`,
+/// `--max-conns`; see README "Serving knobs" and `docs/SERVER_PROTOCOL.md`).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// How long the first query of a batch waits for co-arriving queries
+    /// before executing (milliseconds). 0 disables shared-scan fusion.
+    pub batch_window_ms: u64,
+    /// Cap on queued queries across all clients; past it the server sheds
+    /// load with `{"error":"overloaded","retry_after_ms":..}`.
+    pub max_queue_depth: usize,
+    /// Cap on simultaneously connected clients.
+    pub max_conns: usize,
+    /// Executor threads popping the fair queue.
+    pub executors: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_window_ms: 2,
+            max_queue_depth: 256,
+            max_conns: 4096,
+            executors: 2,
+        }
+    }
+}
+
+/// Process-wide serving counters (reported in the `stats` op's `serving`
+/// block, alongside the fair queue's own depth/shed counters).
+#[derive(Default)]
+struct ServingStats {
+    /// Final (non-error) query responses sent, cache hits included.
+    queries: AtomicU64,
+    /// Summed queue wait of executed queries, microseconds.
+    queue_us: AtomicU64,
+    /// Summed execution time of executed queries, microseconds.
+    exec_us: AtomicU64,
+    active_conns: AtomicU64,
+    conns_accepted: AtomicU64,
+}
+
+/// Per-connection outgoing lines, filled by executors (and the reactor's
+/// inline fast paths) and drained into socket write buffers by the
+/// reactor. Slots exist only for live connections — a push to a
+/// disconnected client is dropped — so connection churn cannot accumulate
+/// garbage.
+#[derive(Default)]
+struct Outbox {
+    inner: Mutex<OutboxInner>,
+}
+
+#[derive(Default)]
+struct OutboxInner {
+    live: HashSet<u64>,
+    lines: HashMap<u64, String>,
+}
+
+impl Outbox {
+    fn open(&self, client: u64) {
+        self.inner.lock().unwrap().live.insert(client);
+    }
+
+    fn close(&self, client: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.live.remove(&client);
+        g.lines.remove(&client);
+    }
+
+    fn is_live(&self, client: u64) -> bool {
+        self.inner.lock().unwrap().live.contains(&client)
+    }
+
+    fn push(&self, client: u64, j: &Json) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.live.contains(&client) {
+            return;
+        }
+        let buf = g.lines.entry(client).or_default();
+        buf.push_str(&j.to_string());
+        buf.push('\n');
+    }
+
+    fn drain(&self, client: u64) -> Option<String> {
+        self.inner.lock().unwrap().lines.remove(&client)
+    }
+
+    /// Live slots right now (observability for the churn regression test).
+    fn live_count(&self) -> usize {
+        self.inner.lock().unwrap().live.len()
+    }
+}
+
+/// Work items on the fair queue.
+enum Work {
+    Query {
+        query: Query,
+        key: String,
+        enqueued: Instant,
+    },
+    Warm { dataset: String },
+}
 
 pub struct Server {
     cluster: Arc<Cluster>,
@@ -54,15 +181,30 @@ pub struct Server {
     results: Arc<ResultCache>,
     /// Results re-computed by cache warming since start.
     warms: Arc<AtomicU64>,
+    config: ServerConfig,
+    queue: Arc<FairQueue<Work>>,
+    outbox: Arc<Outbox>,
+    serving: Arc<ServingStats>,
+    fusion: Arc<FusionStats>,
 }
 
 impl Server {
     pub fn new(cluster: Arc<Cluster>) -> Server {
+        Server::with_config(cluster, ServerConfig::default())
+    }
+
+    pub fn with_config(cluster: Arc<Cluster>, config: ServerConfig) -> Server {
+        let queue = Arc::new(FairQueue::new(config.max_queue_depth));
         Server {
             cluster,
             shutdown: Arc::new(AtomicBool::new(false)),
             results: Arc::new(ResultCache::new(256)),
             warms: Arc::new(AtomicU64::new(0)),
+            config,
+            queue,
+            outbox: Arc::new(Outbox::default()),
+            serving: Arc::new(ServingStats::default()),
+            fusion: Arc::new(FusionStats::default()),
         }
     }
 
@@ -77,39 +219,513 @@ impl Server {
         warm_dataset(&self.cluster, &self.results, &self.warms, dataset)
     }
 
-    /// Serve until the shutdown flag is set. Returns the bound address.
+    /// Serve until the shutdown flag is set. Runs the reactor on the
+    /// calling thread and `config.executors` executor threads; returns the
+    /// bound address after everything is joined.
     pub fn serve(&self, addr: &str) -> Result<std::net::SocketAddr, String> {
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener.local_addr().map_err(|e| e.to_string())?;
         listener.set_nonblocking(true).map_err(|e| e.to_string())?;
-        crate::log_info!("serving on {local}");
-        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        crate::log_info!("serving on {local} ({:?})", self.config);
+        let mut executors = Vec::new();
+        for i in 0..self.config.executors.max(1) {
+            let ctx = self.exec_ctx();
+            let t = std::thread::Builder::new()
+                .name(format!("hepq-exec-{i}"))
+                .spawn(move || executor_loop(ctx))
+                .map_err(|e| format!("spawn executor: {e}"))?;
+            executors.push(t);
+        }
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_id: u64 = 1;
         while !self.shutdown.load(Ordering::Relaxed) {
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    crate::log_debug!("connection from {peer}");
-                    let cluster = self.cluster.clone();
-                    let shutdown = self.shutdown.clone();
-                    let results = self.results.clone();
-                    let warms = self.warms.clone();
-                    conns.push(std::thread::spawn(move || {
-                        let r = handle_conn(stream, &cluster, &results, &warms, &shutdown);
-                        if let Err(e) = r {
-                            crate::log_debug!("connection ended: {e}");
+            let mut active = false;
+            // Accept everything pending.
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        active = true;
+                        if conns.len() >= self.config.max_conns {
+                            // Best-effort structured refusal; the stream
+                            // drops (and closes) either way.
+                            let mut s = stream;
+                            let _ = send(&mut s, &overloaded_json(1_000));
+                            continue;
                         }
-                    }));
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let id = next_id;
+                        next_id += 1;
+                        self.outbox.open(id);
+                        self.serving.active_conns.fetch_add(1, Ordering::Relaxed);
+                        self.serving.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                        conns.insert(id, Conn::new(stream));
+                        crate::log_debug!("connection {id} from {peer}");
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(format!("accept: {e}")),
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            // Service every connection; collect the ones that ended.
+            let mut dead: Vec<u64> = Vec::new();
+            for (&id, conn) in conns.iter_mut() {
+                match self.service_conn(id, conn) {
+                    Ok(worked) => active |= worked,
+                    Err(()) => dead.push(id),
                 }
-                Err(e) => return Err(format!("accept: {e}")),
+            }
+            for id in dead {
+                conns.remove(&id);
+                self.outbox.close(id);
+                self.queue.forget(id);
+                self.serving.active_conns.fetch_sub(1, Ordering::Relaxed);
+                crate::log_debug!("connection {id} closed");
+            }
+            if !active {
+                std::thread::sleep(IDLE_TICK);
             }
         }
-        for c in conns {
-            let _ = c.join();
+        // Shutdown: drop the sockets, wake and join the executors.
+        for &id in conns.keys() {
+            self.outbox.close(id);
+            self.serving.active_conns.fetch_sub(1, Ordering::Relaxed);
+        }
+        drop(conns);
+        self.queue.wake_all();
+        for h in executors {
+            let _ = h.join();
         }
         Ok(local)
     }
+
+    fn exec_ctx(&self) -> ExecCtx {
+        ExecCtx {
+            cluster: self.cluster.clone(),
+            results: self.results.clone(),
+            warms: self.warms.clone(),
+            shutdown: self.shutdown.clone(),
+            queue: self.queue.clone(),
+            outbox: self.outbox.clone(),
+            serving: self.serving.clone(),
+            fusion: self.fusion.clone(),
+            batch_window_ms: self.config.batch_window_ms,
+        }
+    }
+
+    /// One reactor pass over one connection: read, dispatch complete
+    /// lines, drain the outbox, write, enforce stall timeouts.
+    /// `Err(())` means the connection is finished (EOF, error, timeout).
+    fn service_conn(&self, id: u64, conn: &mut Conn) -> Result<bool, ()> {
+        let mut worked = false;
+        let mut buf = [0u8; 4096];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => return Err(()), // peer closed
+                Ok(n) => {
+                    conn.inbuf.extend_from_slice(&buf[..n]);
+                    worked = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        while let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line[..pos]).into_owned();
+            self.handle_request(id, line.trim());
+            worked = true;
+        }
+        if conn.inbuf.len() > MAX_LINE_BYTES {
+            self.outbox.push(id, &err_json("request line too long"));
+            // Flush the error best-effort before dropping the connection.
+            if let Some(lines) = self.outbox.drain(id) {
+                let _ = conn.stream.write_all(lines.as_bytes());
+            }
+            return Err(());
+        }
+        conn.read_started = match (conn.inbuf.is_empty(), conn.read_started) {
+            (true, _) => None,
+            (false, since) => Some(since.unwrap_or_else(Instant::now)),
+        };
+        if let Some(lines) = self.outbox.drain(id) {
+            conn.outbuf.extend_from_slice(lines.as_bytes());
+        }
+        while !conn.outbuf.is_empty() {
+            match conn.stream.write(&conn.outbuf) {
+                Ok(0) => return Err(()),
+                Ok(n) => {
+                    conn.outbuf.drain(..n);
+                    conn.write_started = None;
+                    worked = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    conn.write_started.get_or_insert_with(Instant::now);
+                    break;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        let stuck = |t: Option<Instant>| t.is_some_and(|s| s.elapsed() > IO_TIMEOUT);
+        if stuck(conn.read_started) || stuck(conn.write_started) {
+            return Err(());
+        }
+        Ok(worked)
+    }
+
+    /// Dispatch one request line. Cheap ops answer inline (into the
+    /// outbox); queries and warms go through admission control.
+    fn handle_request(&self, client: u64, line: &str) {
+        if line.is_empty() {
+            return;
+        }
+        let req = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.outbox.push(client, &err_json(&format!("bad json: {e}")));
+                return;
+            }
+        };
+        match req.get("op").and_then(|o| o.as_str()) {
+            Some("ping") => {
+                self.outbox.push(client, &Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            Some("stats") => {
+                let j = self.stats_json();
+                self.outbox.push(client, &j);
+            }
+            Some("datasets") => {
+                let ds: Vec<Json> = self
+                    .cluster
+                    .catalog
+                    .list()
+                    .into_iter()
+                    .map(|(name, parts, events, bytes)| {
+                        Json::obj(vec![
+                            ("name", Json::str(name)),
+                            ("partitions", Json::num(parts as f64)),
+                            ("events", Json::num(events as f64)),
+                            ("bytes", Json::num(bytes as f64)),
+                        ])
+                    })
+                    .collect();
+                let resp =
+                    Json::obj(vec![("ok", Json::Bool(true)), ("datasets", Json::Arr(ds))]);
+                self.outbox.push(client, &resp);
+            }
+            Some("shutdown") => {
+                self.shutdown.store(true, Ordering::Relaxed);
+                self.outbox.push(client, &Json::obj(vec![("ok", Json::Bool(true))]));
+            }
+            Some("warm") => {
+                let name = req.get("dataset").and_then(|d| d.as_str()).unwrap_or("").to_string();
+                self.enqueue(client, Work::Warm { dataset: name });
+            }
+            Some("query") => match Query::from_json(&req) {
+                Ok(q) => self.handle_query(client, q),
+                Err(e) => self.outbox.push(client, &err_json(&e)),
+            },
+            _ => self.outbox.push(client, &err_json("unknown op")),
+        }
+    }
+
+    fn handle_query(&self, client: u64, q: Query) {
+        let t0 = Instant::now();
+        // Doubles as validation: fails on unknown datasets and on source
+        // that does not compile against the schema.
+        let key = match cache_key(&self.cluster, &q) {
+            Ok(k) => k,
+            Err(e) => {
+                self.outbox.push(client, &err_json(&e));
+                return;
+            }
+        };
+        // Inline fast path: a result-cache hit costs the reactor
+        // microseconds — but only when this client has nothing queued or
+        // running, so responses on one connection keep request order.
+        if !self.queue.busy(client) {
+            if let Some(cached) = self.results.get(&key) {
+                self.serving.queries.fetch_add(1, Ordering::Relaxed);
+                let j = result_json(&cached, t0.elapsed(), true, Timing::default());
+                self.outbox.push(client, &j);
+                return;
+            }
+        }
+        self.enqueue(
+            client,
+            Work::Query {
+                query: q,
+                key,
+                enqueued: t0,
+            },
+        );
+    }
+
+    /// Admission control: refuse with a structured overload response when
+    /// the fair queue is at its depth cap.
+    fn enqueue(&self, client: u64, work: Work) {
+        if let Err(depth) = self.queue.push(client, work) {
+            let retry = retry_after_ms(depth, self.config.executors);
+            self.outbox.push(client, &overloaded_json(retry));
+        }
+    }
+
+    fn stats_json(&self) -> Json {
+        let stats = self.cluster.stats();
+        let workers: Vec<Json> = stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Json::obj(vec![
+                    ("worker", Json::num(i as f64)),
+                    ("tasks_done", Json::num(s.tasks_done as f64)),
+                    ("cache_hits", Json::num(s.cache_hits as f64)),
+                    ("cache_misses", Json::num(s.cache_misses as f64)),
+                    ("events", Json::num(s.events_processed as f64)),
+                    ("busy_s", Json::num(s.busy.as_secs_f64())),
+                ])
+            })
+            .collect();
+        let (rc_hits, rc_misses) = self.results.stats();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("workers", Json::Arr(workers)),
+            ("cache_hit_rate", Json::num(self.cluster.total_cache_hit_rate())),
+            ("result_cache_hits", Json::num(rc_hits as f64)),
+            ("result_cache_misses", Json::num(rc_misses as f64)),
+            ("result_cache_entries", Json::num(self.results.len() as f64)),
+            ("result_cache_evictions", Json::num(self.results.evictions() as f64)),
+            ("data_skipping", data_skipping_json(&self.cluster, &self.warms, &stats)),
+            ("serving", self.serving_json()),
+            (
+                "bytes_fetched",
+                Json::num(self.cluster.catalog.bytes_fetched.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
+    /// The `stats` op's `serving` block: connection, queue, timing and
+    /// shared-scan-fusion counters.
+    fn serving_json(&self) -> Json {
+        let o = Ordering::Relaxed;
+        let queries = self.serving.queries.load(o);
+        let avg = |total_us: u64| {
+            if queries == 0 {
+                0.0
+            } else {
+                total_us as f64 / queries as f64 / 1e3
+            }
+        };
+        Json::obj(vec![
+            ("active_conns", Json::num(self.serving.active_conns.load(o) as f64)),
+            ("conns_accepted", Json::num(self.serving.conns_accepted.load(o) as f64)),
+            ("queue_depth", Json::num(self.queue.depth() as f64)),
+            ("queue_shed", Json::num(self.queue.shed_count() as f64)),
+            ("queries_executed", Json::num(queries as f64)),
+            ("avg_queue_ms", Json::num(avg(self.serving.queue_us.load(o)))),
+            ("avg_exec_ms", Json::num(avg(self.serving.exec_us.load(o)))),
+            ("fused_groups", Json::num(self.fusion.groups.load(o) as f64)),
+            ("fused_queries", Json::num(self.fusion.fused_queries.load(o) as f64)),
+            ("scans_saved", Json::num(self.fusion.scans_saved.load(o) as f64)),
+        ])
+    }
+
+    /// Live outbox slots (observability hook for the churn regression
+    /// test: must track connections, not grow with history).
+    pub fn live_slots(&self) -> usize {
+        self.outbox.live_count()
+    }
+}
+
+/// One reactor-owned connection: the nonblocking socket plus its read and
+/// write buffers and stall clocks.
+struct Conn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    /// Set while a partial (un-newlined) request line is pending.
+    read_started: Option<Instant>,
+    /// Set while response bytes are stuck (peer not reading).
+    write_started: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            read_started: None,
+            write_started: None,
+        }
+    }
+}
+
+/// Everything an executor thread needs, cloned out of the server.
+#[derive(Clone)]
+struct ExecCtx {
+    cluster: Arc<Cluster>,
+    results: Arc<ResultCache>,
+    warms: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    queue: Arc<FairQueue<Work>>,
+    outbox: Arc<Outbox>,
+    serving: Arc<ServingStats>,
+    fusion: Arc<FusionStats>,
+    batch_window_ms: u64,
+}
+
+/// Executor: pop the fair queue; queries open a batching window and scoop
+/// co-arriving queries into shared-scan groups, warms run solo.
+fn executor_loop(ctx: ExecCtx) {
+    while !ctx.shutdown.load(Ordering::Relaxed) {
+        let Some((client, work)) = ctx.queue.pop(EXEC_TICK) else {
+            continue;
+        };
+        match work {
+            Work::Warm { dataset } => {
+                let resp = match warm_dataset(&ctx.cluster, &ctx.results, &ctx.warms, &dataset) {
+                    Ok(n) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("warmed", Json::num(n as f64)),
+                    ]),
+                    Err(e) => err_json(&e),
+                };
+                ctx.outbox.push(client, &resp);
+                ctx.queue.complete(client);
+            }
+            Work::Query {
+                query,
+                key,
+                enqueued,
+            } => {
+                let mut jobs = vec![Job {
+                    client,
+                    query,
+                    key,
+                    enqueued,
+                }];
+                if ctx.batch_window_ms > 0 {
+                    // The batching window: let co-arriving queries pile up,
+                    // then scoop every queued query (warms stay queued —
+                    // they cannot fuse).
+                    std::thread::sleep(Duration::from_millis(ctx.batch_window_ms));
+                    let only_queries = |w: &Work| matches!(w, Work::Query { .. });
+                    let extra = ctx.queue.pop_extra(MAX_FUSE - 1, only_queries);
+                    for (c, w) in extra {
+                        if let Work::Query {
+                            query,
+                            key,
+                            enqueued,
+                        } = w
+                        {
+                            jobs.push(Job {
+                                client: c,
+                                query,
+                                key,
+                                enqueued,
+                            });
+                        }
+                    }
+                }
+                run_jobs(&ctx, jobs);
+            }
+        }
+    }
+}
+
+/// Execute a scooped batch: serve late cache hits instantly, group the
+/// rest by dataset, run each group (fused when >1), respond, and release
+/// every member's fair-queue slot.
+fn run_jobs(ctx: &ExecCtx, jobs: Vec<Job>) {
+    let mut to_run: Vec<Job> = Vec::new();
+    for j in jobs {
+        // An identical query may have been answered while this one sat in
+        // the queue; serve it from the cache without touching the cluster.
+        if let Some(cached) = ctx.results.get(&j.key) {
+            let timing = Timing {
+                queue_ms: ms_since(j.enqueued),
+                exec_ms: 0.0,
+                fused_with: 0,
+            };
+            record_timing(ctx, &timing);
+            ctx.outbox
+                .push(j.client, &result_json(&cached, j.enqueued.elapsed(), true, timing));
+            ctx.queue.complete(j.client);
+        } else {
+            to_run.push(j);
+        }
+    }
+    for group in scan_fusion::group_by_dataset(to_run) {
+        let t_exec = Instant::now();
+        let mut last = vec![0usize; group.len()];
+        let results = scan_fusion::run_group(&ctx.cluster, &group, &ctx.fusion, |i, done, total| {
+            if done != last[i] {
+                last[i] = done;
+                let frame = Json::obj(vec![
+                    ("progress", Json::num(done as f64)),
+                    ("total", Json::num(total as f64)),
+                ]);
+                ctx.outbox.push(group[i].client, &frame);
+            }
+            // Solo runs cancel when their client disconnected; fused
+            // members never cancel (co-members share their subtasks).
+            ctx.outbox.is_live(group[i].client)
+        });
+        let exec = t_exec.elapsed();
+        let fused_with = group.len() - 1;
+        for (j, r) in group.iter().zip(results) {
+            match r {
+                Ok(res) => {
+                    // The entry's eviction weight is its recomputation
+                    // cost (wall-clock seconds), so quadratic pair loops
+                    // are preferentially retained over cheap flat fills.
+                    // The query rides along so warming can re-run the
+                    // entry after a dataset re-registration.
+                    ctx.results.put_with_query(
+                        j.key.clone(),
+                        res.clone(),
+                        exec.as_secs_f64(),
+                        Some(j.query.clone()),
+                    );
+                    let timing = Timing {
+                        queue_ms: ms_between(j.enqueued, t_exec),
+                        exec_ms: exec.as_secs_f64() * 1e3,
+                        fused_with,
+                    };
+                    record_timing(ctx, &timing);
+                    ctx.outbox
+                        .push(j.client, &result_json(&res, j.enqueued.elapsed(), false, timing));
+                }
+                Err(e) => ctx.outbox.push(j.client, &err_json(&e)),
+            }
+            ctx.queue.complete(j.client);
+        }
+    }
+}
+
+fn record_timing(ctx: &ExecCtx, t: &Timing) {
+    let o = Ordering::Relaxed;
+    ctx.serving.queries.fetch_add(1, o);
+    ctx.serving.queue_us.fetch_add((t.queue_ms * 1e3) as u64, o);
+    ctx.serving.exec_us.fetch_add((t.exec_ms * 1e3) as u64, o);
+}
+
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+fn ms_between(from: Instant, to: Instant) -> f64 {
+    to.saturating_duration_since(from).as_secs_f64() * 1e3
+}
+
+/// Crude drain-time estimate for the overload response: ~25ms of queue
+/// per item per executor, clamped to something a client can sanely sleep.
+fn retry_after_ms(depth: usize, executors: usize) -> u64 {
+    (25 * depth as u64 / executors.max(1) as u64).clamp(10, 2_000)
 }
 
 /// Canonical cache key for a query: dataset identity (name + version),
@@ -147,166 +763,23 @@ fn cache_key(cluster: &Cluster, q: &Query) -> Result<String, String> {
     ))
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    cluster: &Cluster,
-    results: &ResultCache,
-    warms: &AtomicU64,
-    shutdown: &AtomicBool,
-) -> Result<(), String> {
-    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
-    let mut out = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
-        if n == 0 {
-            return Ok(()); // client closed
-        }
-        let req = match Json::parse(line.trim()) {
-            Ok(j) => j,
-            Err(e) => {
-                send(&mut out, &err_json(&format!("bad json: {e}")))?;
-                continue;
-            }
-        };
-        match req.get("op").and_then(|o| o.as_str()) {
-            Some("ping") => send(&mut out, &Json::obj(vec![("ok", Json::Bool(true))]))?,
-            Some("stats") => {
-                let stats = cluster.stats();
-                let workers: Vec<Json> = stats
-                    .iter()
-                    .enumerate()
-                    .map(|(i, s)| {
-                        Json::obj(vec![
-                            ("worker", Json::num(i as f64)),
-                            ("tasks_done", Json::num(s.tasks_done as f64)),
-                            ("cache_hits", Json::num(s.cache_hits as f64)),
-                            ("cache_misses", Json::num(s.cache_misses as f64)),
-                            ("events", Json::num(s.events_processed as f64)),
-                            ("busy_s", Json::num(s.busy.as_secs_f64())),
-                        ])
-                    })
-                    .collect();
-                let (rc_hits, rc_misses) = results.stats();
-                send(
-                    &mut out,
-                    &Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("workers", Json::Arr(workers)),
-                        ("cache_hit_rate", Json::num(cluster.total_cache_hit_rate())),
-                        ("result_cache_hits", Json::num(rc_hits as f64)),
-                        ("result_cache_misses", Json::num(rc_misses as f64)),
-                        ("result_cache_entries", Json::num(results.len() as f64)),
-                        ("result_cache_evictions", Json::num(results.evictions() as f64)),
-                        ("data_skipping", data_skipping_json(cluster, warms, &stats)),
-                        (
-                            "bytes_fetched",
-                            Json::num(
-                                cluster
-                                    .catalog
-                                    .bytes_fetched
-                                    .load(std::sync::atomic::Ordering::Relaxed)
-                                    as f64,
-                            ),
-                        ),
-                    ]),
-                )?
-            }
-            Some("datasets") => {
-                let ds: Vec<Json> = cluster
-                    .catalog
-                    .list()
-                    .into_iter()
-                    .map(|(name, parts, events, bytes)| {
-                        Json::obj(vec![
-                            ("name", Json::str(name)),
-                            ("partitions", Json::num(parts as f64)),
-                            ("events", Json::num(events as f64)),
-                            ("bytes", Json::num(bytes as f64)),
-                        ])
-                    })
-                    .collect();
-                send(
-                    &mut out,
-                    &Json::obj(vec![("ok", Json::Bool(true)), ("datasets", Json::Arr(ds))]),
-                )?
-            }
-            Some("shutdown") => {
-                shutdown.store(true, Ordering::Relaxed);
-                send(&mut out, &Json::obj(vec![("ok", Json::Bool(true))]))?;
-                return Ok(());
-            }
-            Some("warm") => {
-                let name = req.get("dataset").and_then(|d| d.as_str()).unwrap_or("");
-                let resp = match warm_dataset(cluster, results, warms, name) {
-                    Ok(n) => Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("warmed", Json::num(n as f64)),
-                    ]),
-                    Err(e) => err_json(&e),
-                };
-                send(&mut out, &resp)?;
-            }
-            Some("query") => {
-                let resp = match Query::from_json(&req) {
-                    Ok(q) => answer_query(cluster, results, &q, &mut out),
-                    Err(e) => err_json(&e),
-                };
-                send(&mut out, &resp)?;
-            }
-            _ => send(&mut out, &err_json("unknown op"))?,
-        }
-    }
+/// Per-response timing block (zeros for inline cache hits).
+#[derive(Clone, Copy, Default)]
+struct Timing {
+    queue_ms: f64,
+    exec_ms: f64,
+    /// How many other queries shared this query's scan group.
+    fused_with: usize,
 }
 
-/// Validate → result-cache lookup → (on miss) run on the cluster and fill
-/// the cache. Returns the final response object.
-fn answer_query(
-    cluster: &Cluster,
-    results: &ResultCache,
-    q: &Query,
-    out: &mut TcpStream,
-) -> Json {
-    let t0 = std::time::Instant::now();
-    let key = match cache_key(cluster, q) {
-        Ok(k) => k,
-        Err(e) => return err_json(&e),
-    };
-    if let Some(cached) = results.get(&key) {
-        return result_json(&cached, t0.elapsed(), true);
-    }
-    let mut last = 0usize;
-    let run = run_query(cluster, q, |done, total| {
-        if done != last {
-            last = done;
-            let frame = Json::obj(vec![
-                ("progress", Json::num(done as f64)),
-                ("total", Json::num(total as f64)),
-            ]);
-            let _ = send(out, &frame);
-        }
-    });
-    match run {
-        Ok(res) => {
-            // The entry's eviction weight is its recomputation cost: the
-            // wall-clock seconds the cluster just spent on it, so quadratic
-            // pair loops are preferentially retained over cheap flat fills.
-            // The query rides along so warming can re-run the entry after
-            // a dataset re-registration.
-            let cost = t0.elapsed().as_secs_f64();
-            results.put_with_query(key, res.clone(), cost, Some(q.clone()));
-            result_json(&res, t0.elapsed(), false)
-        }
-        Err(e) => err_json(&e),
-    }
-}
-
-fn result_json(res: &CachedResult, latency: std::time::Duration, cached: bool) -> Json {
+fn result_json(res: &CachedResult, latency: Duration, cached: bool, t: Timing) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("hist", res.hist.to_json()),
         ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+        ("queue_ms", Json::num(t.queue_ms)),
+        ("exec_ms", Json::num(t.exec_ms)),
+        ("fused_with", Json::num(t.fused_with as f64)),
         ("events", Json::num(res.events as f64)),
         ("partitions", Json::num(res.partitions as f64)),
         ("skipped", Json::num(res.skipped as f64)),
@@ -343,7 +816,8 @@ fn run_query<F: FnMut(usize, usize)>(
 /// aborts on — entries that no longer run (e.g. the re-registered schema
 /// dropped a branch an old tape used), so one stale query cannot block
 /// the rest. Capped so a hostile cache cannot occupy the cluster
-/// indefinitely.
+/// indefinitely. Runs on an executor thread (fair-queued like any query),
+/// so a warm never blocks the reactor or other clients.
 fn warm_dataset(
     cluster: &Cluster,
     results: &ResultCache,
@@ -365,7 +839,7 @@ fn warm_dataset(
         if results.get(&key).is_some() {
             continue; // already warm at the current version
         }
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         match run_query(cluster, &q, |_, _| {}) {
             Ok(res) => {
                 let cost = t0.elapsed().as_secs_f64();
@@ -420,6 +894,16 @@ fn data_skipping_json(
 
 fn err_json(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+/// The structured load-shedding response: clients should back off for
+/// `retry_after_ms` and resubmit.
+fn overloaded_json(retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str("overloaded")),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
+    ])
 }
 
 fn send(out: &mut TcpStream, j: &Json) -> Result<(), String> {
@@ -532,12 +1016,16 @@ mod tests {
     type ServeHandle = std::thread::JoinHandle<Result<std::net::SocketAddr, String>>;
 
     fn start_server(cluster: Arc<Cluster>) -> (Client, ServeHandle) {
+        start_server_with(cluster, ServerConfig::default())
+    }
+
+    fn start_server_with(cluster: Arc<Cluster>, cfg: ServerConfig) -> (Client, ServeHandle) {
         let port = {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().port()
         };
         let addr = format!("127.0.0.1:{port}");
-        let server = Server::new(cluster);
+        let server = Server::with_config(cluster, cfg);
         let addr2 = addr.clone();
         let t = std::thread::spawn(move || server.serve(&addr2));
         let mut client = None;
@@ -585,6 +1073,10 @@ mod tests {
         // the columnar backend never consults zone maps).
         assert_eq!(resp.get("chunks_skipped").and_then(|v| v.as_u64()), Some(0));
         assert!(resp.get("chunks_scanned").is_some());
+        // Timing fields ride every query response.
+        assert!(resp.get("queue_ms").is_some());
+        assert!(resp.get("exec_ms").is_some());
+        assert_eq!(resp.get("fused_with").and_then(|v| v.as_u64()), Some(0));
         client.shutdown_server().unwrap();
         let _ = t.join().unwrap();
     }
@@ -659,6 +1151,27 @@ mod tests {
             "{rbad}"
         );
 
+        client.shutdown_server().unwrap();
+        let _ = t.join().unwrap();
+    }
+
+    /// The `stats` op carries the new `serving` block with queue, timing
+    /// and fusion counters.
+    #[test]
+    fn stats_reports_serving_block() {
+        let cluster = test_cluster(Backend::compiled(), 3_000, 95);
+        let (mut client, t) = start_server(cluster);
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        client.query(&q, |_, _| {}).unwrap();
+        let req = Json::obj(vec![("op", Json::str("stats"))]);
+        let stats = client.request(&req).unwrap();
+        let serving = stats.get("serving").expect("serving block");
+        assert_eq!(serving.get("active_conns").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(serving.get("queries_executed").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(serving.get("queue_shed").and_then(|v| v.as_u64()), Some(0));
+        assert!(serving.get("avg_exec_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert!(serving.get("fused_groups").is_some());
+        assert!(serving.get("scans_saved").is_some());
         client.shutdown_server().unwrap();
         let _ = t.join().unwrap();
     }

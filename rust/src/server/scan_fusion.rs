@@ -1,0 +1,189 @@
+//! Shared-scan fusion for the server: co-arriving queries over the same
+//! dataset run as **one** scan pass instead of N.
+//!
+//! The executor scoops whatever the fair queue holds after the batching
+//! window, groups it by dataset here, and submits each multi-query group
+//! through `Cluster::submit_fused`: every partition the group touches is
+//! advertised once, and the claiming worker evaluates all members' kernels
+//! per chunk while the partition is hot in cache
+//! (`queryir::lower::run_fused_indexed`). Each member keeps its own `H1`
+//! scratch, so every histogram is bit-identical to a solo run — fusion
+//! changes *when* the columns are read, never what is computed from them.
+
+use crate::coord::{Cluster, QueryResult};
+use crate::engine::Query;
+use crate::server::result_cache::CachedResult;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One queued query on its way to execution.
+pub struct Job {
+    /// Reactor connection id (where the response goes).
+    pub client: u64,
+    pub query: Query,
+    /// Canonical result-cache key (already validated).
+    pub key: String,
+    /// When the query entered the fair queue (queue-wait reporting).
+    pub enqueued: Instant,
+}
+
+/// Process-wide fusion counters (the `serving` block of the `stats` op).
+#[derive(Default)]
+pub struct FusionStats {
+    /// Multi-query groups executed.
+    pub groups: AtomicU64,
+    /// Queries that rode a fused group.
+    pub fused_queries: AtomicU64,
+    /// Partition scans avoided vs. running every member solo. Computed
+    /// from the members' per-query partition counts (exact when the
+    /// members' zone-map skip sets nest, which includes the common
+    /// no-cut case; an under-count otherwise).
+    pub scans_saved: AtomicU64,
+}
+
+/// Split a scooped batch into same-dataset groups, preserving arrival
+/// order within each group. (Version is implied: submission pins the
+/// dataset's current version for every member alike.)
+pub fn group_by_dataset(jobs: Vec<Job>) -> Vec<Vec<Job>> {
+    let mut groups: Vec<Vec<Job>> = Vec::new();
+    for j in jobs {
+        match groups.iter_mut().find(|g| g[0].query.dataset == j.query.dataset) {
+            Some(g) => g.push(j),
+            None => groups.push(vec![j]),
+        }
+    }
+    groups
+}
+
+/// Execute one same-dataset group; returns one result per job, in order.
+///
+/// A group of one takes the ordinary solo path (morsel-parallel, and
+/// cancellable: `progress` returning false aborts it). Larger groups are
+/// submitted fused; `progress` is informational there — cancelling one
+/// member would orphan co-members sharing its subtasks.
+pub fn run_group<F>(
+    cluster: &Cluster,
+    group: &[Job],
+    stats: &FusionStats,
+    mut progress: F,
+) -> Vec<Result<CachedResult, String>>
+where
+    F: FnMut(usize, usize, usize) -> bool,
+{
+    if group.len() == 1 {
+        let q = &group[0].query;
+        let res = cluster.submit(q.clone()).and_then(|h| {
+            cluster.wait_with_progress(&h, q, |done, total, _| progress(0, done, total))
+        });
+        return vec![res.map(to_cached)];
+    }
+    let queries: Vec<Query> = group.iter().map(|j| j.query.clone()).collect();
+    let handles = match cluster.submit_fused(&queries) {
+        Ok(h) => h,
+        Err(e) => return group.iter().map(|_| Err(e.clone())).collect(),
+    };
+    let solo_scans: u64 = handles.iter().map(|h| h.partitions as u64).sum();
+    let shared_scans = handles.iter().map(|h| h.partitions as u64).max().unwrap_or(0);
+    stats.groups.fetch_add(1, Ordering::Relaxed);
+    stats.fused_queries.fetch_add(group.len() as u64, Ordering::Relaxed);
+    stats
+        .scans_saved
+        .fetch_add(solo_scans.saturating_sub(shared_scans), Ordering::Relaxed);
+    handles
+        .iter()
+        .zip(&queries)
+        .enumerate()
+        .map(|(i, (h, q))| {
+            cluster
+                .wait_with_progress(h, q, |done, total, _| {
+                    progress(i, done, total);
+                    true
+                })
+                .map(to_cached)
+        })
+        .collect()
+}
+
+fn to_cached(res: QueryResult) -> CachedResult {
+    CachedResult {
+        hist: res.hist,
+        events: res.events,
+        partitions: res.partitions,
+        skipped: res.skipped,
+        chunks: res.chunks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coord::{ClusterConfig, Policy};
+    use crate::datagen::generate_drellyan;
+    use crate::engine::{Backend, QueryKind};
+    use std::time::Duration;
+
+    fn jobs(queries: &[Query]) -> Vec<Job> {
+        queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| Job {
+                client: i as u64,
+                query: q.clone(),
+                key: format!("k{i}"),
+                enqueued: Instant::now(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grouping_is_by_dataset_and_order_preserving() {
+        let qs = [
+            Query::new(QueryKind::MaxPt, "dy", "muons"),
+            Query::new(QueryKind::MaxPt, "tt", "jets"),
+            Query::new(QueryKind::MassPairs, "dy", "muons"),
+        ];
+        let groups = group_by_dataset(jobs(&qs));
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].len(), 2);
+        assert_eq!(groups[0][0].client, 0);
+        assert_eq!(groups[0][1].client, 2);
+        assert_eq!(groups[1][0].query.dataset, "tt");
+    }
+
+    #[test]
+    fn fused_group_matches_solo_and_counts_saved_scans() {
+        let c = Cluster::start(
+            ClusterConfig {
+                n_workers: 2,
+                cache_bytes_per_worker: 64 << 20,
+                policy: Policy::AnyPull,
+                fetch_delay_per_mib: Duration::ZERO,
+                claim_ttl: Duration::from_secs(10),
+                straggler: None,
+            },
+            Backend::compiled(),
+        );
+        c.catalog.register("dy", generate_drellyan(8_000, 58), 2_000);
+        let qs = [
+            Query::new(QueryKind::FlatHist, "dy", "muons"),
+            Query::new(QueryKind::MaxPt, "dy", "muons"),
+        ];
+        let stats = FusionStats::default();
+        let res = run_group(&c, &jobs(&qs), &stats, |_, _, _| true);
+        assert_eq!(res.len(), 2);
+        for (r, q) in res.iter().zip(&qs) {
+            let solo = c.run(q).unwrap();
+            let r = r.as_ref().unwrap();
+            // Bins and count are integer-exact, so partial-merge arrival
+            // order (which varies run to run) cannot perturb them.
+            assert_eq!(r.hist.bins, solo.hist.bins, "{}", q.kind.artifact());
+            assert_eq!(r.hist.count, solo.hist.count, "{}", q.kind.artifact());
+            assert_eq!(r.partitions, solo.partitions);
+        }
+        assert_eq!(stats.groups.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.fused_queries.load(Ordering::Relaxed), 2);
+        // 2 queries × 4 partitions sharing every scan ⇒ 4 scans saved.
+        assert_eq!(stats.scans_saved.load(Ordering::Relaxed), 4);
+        c.shutdown();
+    }
+}

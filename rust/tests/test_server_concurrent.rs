@@ -1,0 +1,273 @@
+//! Concurrent serving end-to-end: many TCP clients issuing heterogeneous
+//! queries at once must each get responses bit-identical to solo cluster
+//! runs, shared-scan fusion counters must add up, the admission-control
+//! path must shed and recover under a tiny queue cap, and connection churn
+//! must not leak server-side state (the old thread-per-connection server
+//! accumulated one JoinHandle per connection forever).
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::hist::H1;
+use hepq::server::{Client, Server, ServerConfig};
+use hepq::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn cluster(events: usize, seed: u64, part_events: usize) -> Arc<Cluster> {
+    let c = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            straggler: None,
+        },
+        Backend::compiled(),
+    ));
+    c.catalog.register("dy", generate_drellyan(events, seed), part_events);
+    c
+}
+
+type ServeThread = std::thread::JoinHandle<()>;
+
+/// Start a server on a free port; returns (addr, serve thread, server).
+/// The server stays reachable through the Arc so tests can inspect
+/// internal state (live outbox slots) after the storm.
+fn start(cluster: Arc<Cluster>, cfg: ServerConfig) -> (String, ServeThread, Arc<Server>) {
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = Arc::new(Server::with_config(cluster, cfg));
+    let s2 = server.clone();
+    let a2 = addr.clone();
+    let t = std::thread::spawn(move || {
+        s2.serve(&a2).unwrap();
+    });
+    for _ in 0..300 {
+        if Client::connect(&addr).is_ok() {
+            return (addr, t, server);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server did not come up on {addr}");
+}
+
+fn stop(server: &Server, t: ServeThread) {
+    server.shutdown_flag().store(true, Ordering::Relaxed);
+    t.join().unwrap();
+}
+
+/// N concurrent clients, heterogeneous cache-missing queries (distinct
+/// binnings and cut thresholds per client), fusion forced on with one
+/// executor and a wide batching window so co-arriving queries are
+/// guaranteed to share scans. Every response must be bit-identical to a
+/// solo cluster run, and the stats op's serving counters must add up.
+#[test]
+fn concurrent_clients_bit_identical_and_fused() {
+    const N: usize = 8;
+    let c = cluster(8_000, 71, 1_000);
+    let (addr, t, server) = start(
+        c.clone(),
+        ServerConfig {
+            batch_window_ms: 50,
+            max_queue_depth: 256,
+            max_conns: 64,
+            executors: 1,
+        },
+    );
+
+    // Per-client query mixes: an unweighted flat fill, a quadratic pair
+    // loop (distinct binning each), and a cut source query (distinct
+    // threshold each) — all result-cache misses.
+    let mixes: Vec<Vec<Query>> = (0..N)
+        .map(|i| {
+            let src = format!(
+                "for event in dataset:\n    for muon in event.muons:\n        \
+                 if muon.pt > {}:\n            fill(muon.pt)\n",
+                20 + 2 * i
+            );
+            vec![
+                Query::new(QueryKind::FlatHist, "dy", "muons").with_binning(64 + i, 0.0, 128.0),
+                Query::new(QueryKind::MassPairs, "dy", "muons").with_binning(48 + i, 0.0, 128.0),
+                Query::from_source(src, "dy"),
+            ]
+        })
+        .collect();
+    let solo: Vec<Vec<H1>> = mixes
+        .iter()
+        .map(|mix| mix.iter().map(|q| c.run(q).unwrap().hist).collect())
+        .collect();
+
+    let barrier = Arc::new(Barrier::new(N));
+    let handles: Vec<_> = mixes
+        .iter()
+        .enumerate()
+        .map(|(i, mix)| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            let mix = mix.clone();
+            std::thread::spawn(move || {
+                let mut conn = Client::connect(&addr).unwrap();
+                barrier.wait();
+                let mut out = Vec::new();
+                for q in &mix {
+                    let resp = conn.query(q, |_, _| {}).unwrap();
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "client {i}: {resp}");
+                    out.push(resp);
+                }
+                out
+            })
+        })
+        .collect();
+    let responses: Vec<Vec<Json>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Bit-identity: bins and counts are integer-exact for unweighted
+    // fills, so cross-worker merge order cannot perturb them.
+    for (i, resps) in responses.iter().enumerate() {
+        for (j, resp) in resps.iter().enumerate() {
+            let h = H1::from_json(resp.get("hist").unwrap()).unwrap();
+            assert_eq!(h.bins, solo[i][j].bins, "client {i} query {j} bins differ from solo");
+            assert_eq!(h.count, solo[i][j].count, "client {i} query {j} count differs");
+            assert!(resp.get("queue_ms").is_some());
+            assert!(resp.get("exec_ms").is_some());
+        }
+    }
+
+    // Fusion counters: with one executor and a 50 ms window, the 8
+    // simultaneously-submitted first-round queries must have shared scans.
+    let mut stats_conn = Client::connect(&addr).unwrap();
+    let req = Json::obj(vec![("op", Json::str("stats"))]);
+    let stats = stats_conn.request(&req).unwrap();
+    let serving = stats.get("serving").expect("serving block in stats");
+    let get = |k: &str| serving.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    assert_eq!(get("queries_executed"), (N * 3) as u64);
+    let groups = get("fused_groups");
+    let fused = get("fused_queries");
+    assert!(groups >= 1, "no fused groups formed: {serving}");
+    // Every fused group has at least two members, and the first all-miss
+    // round shares full-partition scans, so savings must be visible.
+    assert!(fused >= 2 * groups, "fused_queries {fused} < 2 * groups {groups}");
+    assert!(get("scans_saved") >= 1);
+    assert_eq!(get("queue_shed"), 0);
+    assert!(responses.iter().flatten().any(|r| {
+        r.get("fused_with").and_then(|v| v.as_u64()).unwrap_or(0) >= 1
+    }));
+
+    stop(&server, t);
+}
+
+/// Under a queue cap of 1 with a single executor, a burst of pipelined
+/// queries on one connection must shed with the structured overload
+/// response — and the connection must keep working afterwards.
+#[test]
+fn overload_sheds_and_recovers() {
+    let (addr, t, server) = start(
+        cluster(3_000, 72, 1_000),
+        ServerConfig {
+            batch_window_ms: 0,
+            max_queue_depth: 1,
+            max_conns: 64,
+            executors: 1,
+        },
+    );
+
+    let q = Query::new(QueryKind::MassPairs, "dy", "muons");
+    let mut req = q.to_json();
+    if let Json::Obj(map) = &mut req {
+        map.insert("op".into(), Json::str("query"));
+    }
+    let line = format!("{req}\n");
+
+    // Pipeline 4 copies without reading: the first is admitted (and at
+    // most one more queues behind it); the rest overflow the depth-1 cap.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    for _ in 0..4 {
+        stream.write_all(line.as_bytes()).unwrap();
+    }
+    let mut rd = BufReader::new(stream.try_clone().unwrap());
+    let (mut ok, mut shed) = (0, 0);
+    let mut finals = 0;
+    while finals < 4 {
+        let mut l = String::new();
+        assert!(rd.read_line(&mut l).unwrap() > 0, "server closed early");
+        let j = Json::parse(l.trim()).unwrap();
+        if j.get("progress").is_some() {
+            continue;
+        }
+        finals += 1;
+        if j.get("error").and_then(|e| e.as_str()) == Some("overloaded") {
+            let retry = j.get("retry_after_ms").and_then(|v| v.as_u64()).unwrap();
+            assert!(retry >= 10, "retry_after_ms too small: {retry}");
+            shed += 1;
+        } else {
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j}");
+            ok += 1;
+        }
+    }
+    assert!(ok >= 1, "no query survived the burst");
+    assert!(shed >= 1, "depth-1 cap never shed");
+
+    // Recovery: the same connection serves the query fine after backoff.
+    std::thread::sleep(Duration::from_millis(50));
+    stream.write_all(line.as_bytes()).unwrap();
+    loop {
+        let mut l = String::new();
+        assert!(rd.read_line(&mut l).unwrap() > 0);
+        let j = Json::parse(l.trim()).unwrap();
+        if j.get("progress").is_some() {
+            continue;
+        }
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "did not recover: {j}");
+        break;
+    }
+
+    let mut stats_conn = Client::connect(&addr).unwrap();
+    let req = Json::obj(vec![("op", Json::str("stats"))]);
+    let stats = stats_conn.request(&req).unwrap();
+    let serving = stats.get("serving").unwrap();
+    assert!(serving.get("queue_shed").and_then(|v| v.as_u64()).unwrap() >= 1);
+
+    stop(&server, t);
+}
+
+/// Regression for the old serve-loop JoinHandle leak: 1 000 sequential
+/// connect/ping/disconnect cycles must not accumulate per-connection
+/// server state. The reactor owns no per-connection threads; its live
+/// outbox slots and the active_conns gauge must track only the
+/// connections that still exist.
+#[test]
+fn connection_churn_leaves_no_state_behind() {
+    const CHURN: usize = 1_000;
+    let (addr, t, server) = start(cluster(2_000, 73, 1_000), ServerConfig::default());
+
+    let ping = Json::obj(vec![("op", Json::str("ping"))]);
+    for i in 0..CHURN {
+        let mut conn = Client::connect(&addr).unwrap_or_else(|e| panic!("connect {i}: {e}"));
+        let resp = conn.request(&ping).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        // conn drops here: the reactor must reap it on its next pass.
+    }
+    // Let the reactor process the last FINs.
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(server.live_slots(), 0, "outbox slots leaked after churn");
+
+    let mut conn = Client::connect(&addr).unwrap();
+    let req = Json::obj(vec![("op", Json::str("stats"))]);
+    let stats = conn.request(&req).unwrap();
+    let serving = stats.get("serving").unwrap();
+    let get = |k: &str| serving.get(k).and_then(|v| v.as_u64()).unwrap_or(u64::MAX);
+    assert_eq!(get("active_conns"), 1, "gauge out of sync: {serving}");
+    // + 2: the is-it-up probe in start() and this stats connection.
+    assert_eq!(get("conns_accepted"), (CHURN + 2) as u64);
+    assert_eq!(get("queue_depth"), 0);
+    assert_eq!(server.live_slots(), 1);
+
+    stop(&server, t);
+}

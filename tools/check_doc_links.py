@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Docs link checker (stdlib only; CI runs it on every push).
+
+Two invariants, both cheap and both high-value for a repo whose docs are
+the operator manual:
+
+1. Every relative markdown link in README.md and docs/*.md resolves to a
+   real file (so `docs/SERVER_PROTOCOL.md` can never silently 404).
+2. Every `rust/src/...`, `rust/tests/...`, `rust/benches/...` or
+   `python/...` path *named* in those documents exists — module docs move,
+   files get renamed, and stale path references are the classic way a
+   protocol manual rots.
+
+Exit status: 0 clean, 1 with a per-problem report on stderr.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# Relative markdown links: [text](target). Skips http(s), mailto, and
+# pure intra-page anchors.
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+# Repo paths named in prose or code spans. A path ends before a character
+# that cannot be part of one (backtick, quote, space, paren...). Trailing
+# `::item` qualifiers on rust paths are stripped.
+REPO_PATH = re.compile(
+    r"\b((?:rust/(?:src|tests|benches|vendor)|python|tools|docs|\.github)"
+    r"/[A-Za-z0-9_./-]+)"
+)
+
+
+def doc_files():
+    yield ROOT / "README.md"
+    yield from sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_file(doc: Path):
+    problems = []
+    text = doc.read_text(encoding="utf-8")
+    rel = doc.relative_to(ROOT)
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        # Badge links like ../../actions/... point outside the repo into
+        # the forge UI; not a file to check.
+        if target.startswith("../"):
+            continue
+        resolved = (doc.parent / target).resolve()
+        if not resolved.exists():
+            problems.append(f"{rel}: broken link -> {target}")
+
+    for m in REPO_PATH.finditer(text):
+        path = m.group(1).rstrip(".,;:")
+        # `rust/src/server/` style directory references end with /.
+        candidate = ROOT / path
+        if candidate.exists():
+            continue
+        # Prose sometimes names a file without its extension-bearing
+        # suffix being a real path (e.g. "rust/src/queryir/lower.rs
+        # (canonical/fingerprint)") — the regex already stops at the
+        # space, so anything left unresolved is a genuine stale path.
+        problems.append(f"{rel}: stale repo path -> {path}")
+
+    return problems
+
+
+def main() -> int:
+    all_problems = []
+    for doc in doc_files():
+        if not doc.exists():
+            all_problems.append(f"missing expected doc: {doc.relative_to(ROOT)}")
+            continue
+        all_problems.extend(check_file(doc))
+    if all_problems:
+        print("doc link check FAILED:", file=sys.stderr)
+        for p in all_problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    n = len(list(doc_files()))
+    print(f"doc link check OK ({n} documents)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
