@@ -60,7 +60,7 @@ fn main() -> Result<(), String> {
             policy: Policy::cache_aware(),
             fetch_delay_per_mib: Duration::from_millis(5),
             claim_ttl: Duration::from_secs(60),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         backend,
     );

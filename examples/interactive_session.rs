@@ -36,7 +36,7 @@ fn main() -> Result<(), String> {
             policy: Policy::cache_aware(),
             fetch_delay_per_mib: Duration::from_millis(10),
             claim_ttl: Duration::from_secs(30),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         // Compiled-tape backend: every distinct query compiles once per
         // process and is shared by all workers.

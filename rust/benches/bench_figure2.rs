@@ -43,6 +43,7 @@ fn run_trace(policy: Policy, n_workers: usize, queries: &[(String, QueryKind)]) 
         fetch_delay_per_mib: Duration::from_millis(100),
         claim_ttl: Duration::from_secs(20),
         straggler: Some((0, Duration::from_millis(30))),
+        ..ClusterConfig::default()
     };
     let cluster = Cluster::start(cfg, Backend::Columnar);
     for d in 0..n_datasets {

@@ -460,7 +460,7 @@ for event in dataset:
             policy: Policy::cache_aware(),
             fetch_delay_per_mib: Duration::ZERO,
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         Backend::compiled(),
     ));
@@ -508,6 +508,93 @@ for event in dataset:
         }
     }
     serve_cluster.shutdown();
+
+    // --- placement & failure-recovery rungs -------------------------------
+    // Cold vs affinity-warm repeat queries: with an expensive simulated
+    // remote store, the first run pays the fetches; repeats land on the
+    // rendezvous owners whose caches are warm, so the speedup measures the
+    // affinity design, not kernel speed.
+    let place_events = 60_000.min(n_events * 3);
+    let place_dy = generate_drellyan(place_events, 2031);
+    let make_place_cluster = || {
+        let c = Cluster::start(
+            ClusterConfig {
+                n_workers: 8,
+                cache_bytes_per_worker: 256 << 20,
+                policy: Policy::cache_aware(),
+                // ~60 ms/MiB: a shared filesystem; partitions are ~0.2 MiB.
+                fetch_delay_per_mib: Duration::from_millis(60),
+                claim_ttl: Duration::from_secs(30),
+                heartbeat_timeout: Duration::from_millis(250),
+                ..ClusterConfig::default()
+            },
+            Backend::compiled(),
+        );
+        c.catalog.register("dy", place_dy.clone(), 2_000);
+        c
+    };
+    let place_q = Query::new(QueryKind::MassPairs, "dy", "muons");
+    let place_cluster = make_place_cluster();
+    let t0 = Instant::now();
+    let cold_res = place_cluster.run(&place_q).unwrap();
+    let cold = t0.elapsed();
+    let mut warm = Duration::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let warm_res = place_cluster.run(&place_q).unwrap();
+        warm = warm.min(t0.elapsed());
+        assert_eq!(warm_res.hist, cold_res.hist, "warm repeat must be bit-exact");
+    }
+    for (name, d, iters) in [("cold first query", cold, 1u64), ("affinity-warm repeat", warm, 5)] {
+        let ns = d.as_nanos() as f64;
+        b.samples.push(Sample {
+            name: format!("{rung} placement {name}"),
+            ns_per_iter: ns,
+            median_ns: ns,
+            mad_ns: 0.0,
+            iters,
+            items_per_iter: place_events as f64,
+        });
+        rung += 1;
+    }
+    let affinity_speedup = cold.as_secs_f64() / warm.as_secs_f64();
+    place_cluster.shutdown();
+
+    // Completion time with 0/1/2 workers killed mid-query: heartbeats (250
+    // ms timeout) fail claims over to replicas well before the 30 s claim
+    // TTL, so even the double-kill rung finishes in ~query time, not TTL
+    // time. Results are checked bit-exact against the unfailed rung.
+    let mut kill_times: Vec<(usize, Duration)> = Vec::new();
+    let mut kill_ref: Option<H1> = None;
+    for kills in [0usize, 1, 2] {
+        let c = make_place_cluster();
+        // Warm pass outside the timer: the rung measures recovery, not
+        // first-touch fetches.
+        c.run(&place_q).unwrap();
+        let t0 = Instant::now();
+        let h = c.submit(place_q.clone()).unwrap();
+        for w in 0..kills {
+            c.kill_worker(w);
+        }
+        let res = c.wait(&h, &place_q).unwrap();
+        let d = t0.elapsed();
+        match &kill_ref {
+            None => kill_ref = Some(res.hist.clone()),
+            Some(want) => assert_eq!(&res.hist, want, "bit-exact under {kills} kills"),
+        }
+        let ns = d.as_nanos() as f64;
+        b.samples.push(Sample {
+            name: format!("{rung} failover kills={kills} mid-query"),
+            ns_per_iter: ns,
+            median_ns: ns,
+            mad_ns: 0.0,
+            iters: 1,
+            items_per_iter: place_events as f64,
+        });
+        kill_times.push((kills, d));
+        rung += 1;
+        c.shutdown();
+    }
     let _ = rung;
 
     b.finish();
@@ -602,6 +689,26 @@ for event in dataset:
             "fusion check: fused / unfused aggregate throughput at {c_check} clients = {sp:.2}x \
              (target >= 1.5x at 100 clients){}",
             if enforced && sp < 1.5 { "  ** BELOW TARGET **" } else { "" }
+        );
+    }
+
+    eprintln!(
+        "placement check: cold first query / affinity-warm repeat = {affinity_speedup:.2}x \
+         (target >= 1.5x){}",
+        if affinity_speedup < 1.5 { "  ** BELOW TARGET **" } else { "" }
+    );
+    // Recovery must come from heartbeat failover, not claim-TTL expiry: if
+    // any killed rung takes a TTL-scale pause (>= 10 s against the 30 s
+    // TTL), the replicas aren't picking up the dead workers' claims.
+    let unfailed = kill_times[0].1;
+    for &(kills, d) in &kill_times {
+        let ttl_stall = d >= Duration::from_secs(10);
+        eprintln!(
+            "failover check: kills={kills} mid-query completed in {:.0} ms \
+             ({:.2}x the unfailed run){}",
+            d.as_secs_f64() * 1e3,
+            d.as_secs_f64() / unfailed.as_secs_f64().max(1e-9),
+            if ttl_stall { "  ** TTL-SCALE STALL **" } else { "" }
         );
     }
 

@@ -7,6 +7,19 @@
 //! expired claim makes the subtask claimable again (the Zookeeper ephemeral
 //! znode that vanishes when a worker dies), which is what bounds straggler
 //! damage.
+//!
+//! Placement is deliberate, not luck: a subtask may carry an ordered
+//! `affinity` owner list (rendezvous-hashed by the scheduler). For a short
+//! **grace window** after advertisement only those owners may claim it —
+//! first half of the window the primary alone, second half any live owner —
+//! after which anyone may. Dead owners (per the caller-supplied liveness
+//! check) waive their priority instantly, so the window never stalls work
+//! behind a corpse. On top of TTL expiry the board supports *eager*
+//! failure recovery ([`TaskBoard::reap_dead`] reopens a dead worker's
+//! claims immediately) and straggler speculation
+//! ([`TaskBoard::reopen_stragglers`] re-advertises claims held far beyond
+//! the running latency estimate; the document store's per-subtask dedup
+//! keeps aggregation exactly-once whichever copy finishes first).
 
 use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
@@ -31,18 +44,40 @@ pub struct Subtask {
     /// over the partition in one fused pass and publishes one partial
     /// document per member query (empty = ordinary solo subtask).
     pub co_queries: Vec<u64>,
+    /// Rendezvous affinity owners of this subtask's partition, best first
+    /// (empty = no placement preference). Owners get first dibs during the
+    /// board's grace window, and `affinity[1..]` are the warm-standby
+    /// replicas a failover lands on.
+    pub affinity: Vec<usize>,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 enum State {
     Open,
-    Claimed { worker: usize, deadline: Instant },
+    Claimed {
+        worker: usize,
+        /// TTL expiry — renewed by heartbeats.
+        deadline: Instant,
+        /// When the current claim was taken (never renewed — the age the
+        /// straggler-speculation threshold compares against).
+        since: Instant,
+    },
     Done,
 }
 
 struct Entry {
     task: Subtask,
     state: State,
+    /// When this entry (re-)entered `Open` — the grace window's epoch.
+    advertised: Instant,
+    /// Set when the previous claim ended in failure (death or TTL expiry);
+    /// the next claimant is recorded as having rescued a failover.
+    failover: bool,
+    /// Set once `reopen_stragglers` re-advertises this entry; remembers the
+    /// original claimant so the eventual completion can be attributed
+    /// (speculative copy won vs. original finished after all). Also caps
+    /// speculation at one extra copy per subtask.
+    speculated_from: Option<usize>,
 }
 
 #[derive(Default)]
@@ -50,6 +85,9 @@ struct Inner {
     entries: HashMap<SubtaskId, Entry>,
     /// Insertion order for fair scanning.
     order: Vec<SubtaskId>,
+    failovers: u64,
+    speculative_reopens: u64,
+    speculative_wins: u64,
 }
 
 /// The board. All operations are linearizable (single mutex — the paper's
@@ -61,6 +99,9 @@ pub struct TaskBoard {
     /// between scans — poison for intra-worker morsel parallelism).
     work: Condvar,
     claim_ttl: Duration,
+    /// Affinity grace window: how long an `Open` subtask with owners is
+    /// reserved for them before anyone may take it.
+    grace: Duration,
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -70,17 +111,44 @@ pub struct BoardStats {
     pub done: usize,
 }
 
+/// Board-level placement/recovery counters (cluster lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlacementCounters {
+    /// Claims reopened because the holder died or its TTL expired.
+    pub failovers: u64,
+    /// Claims speculatively re-advertised past the straggler threshold.
+    pub speculative_reopens: u64,
+    /// Speculative copies that finished before the original claimant.
+    pub speculative_wins: u64,
+}
+
+/// A successful claim plus how it was placed — what the worker feeds its
+/// affinity/failover telemetry.
+#[derive(Clone, Debug)]
+pub struct ClaimGrant {
+    pub task: Subtask,
+    /// The previous claim on this subtask failed (death/TTL) and this
+    /// worker is the rescue.
+    pub failover: bool,
+}
+
 impl TaskBoard {
     pub fn new(claim_ttl: Duration) -> TaskBoard {
+        TaskBoard::with_grace(claim_ttl, Duration::from_millis(20))
+    }
+
+    pub fn with_grace(claim_ttl: Duration, grace: Duration) -> TaskBoard {
         TaskBoard {
             inner: Mutex::new(Inner::default()),
             work: Condvar::new(),
             claim_ttl,
+            grace,
         }
     }
 
     /// Advertise a batch of subtasks and wake every waiting worker.
     pub fn advertise(&self, tasks: Vec<Subtask>) {
+        let now = Instant::now();
         let mut g = self.inner.lock().unwrap();
         for t in tasks {
             g.order.push(t.id.clone());
@@ -89,6 +157,9 @@ impl TaskBoard {
                 Entry {
                     task: t,
                     state: State::Open,
+                    advertised: now,
+                    failover: false,
+                    speculated_from: None,
                 },
             );
         }
@@ -110,10 +181,23 @@ impl TaskBoard {
         self.work.notify_all();
     }
 
-    /// Claim the first open subtask accepted by `pref`. Expired claims are
-    /// re-opened during the scan. Returns the claimed subtask.
-    pub fn claim<F>(&self, worker: usize, mut pref: F) -> Option<Subtask>
+    /// Claim the first open subtask accepted by `pref`, ignoring affinity
+    /// grace (every worker counts as alive). Kept for callers without a
+    /// health registry; equivalent to the pre-affinity board.
+    pub fn claim<F>(&self, worker: usize, pref: F) -> Option<Subtask>
     where
+        F: FnMut(&Subtask) -> bool,
+    {
+        self.claim_filtered(worker, |_| true, pref).map(|g| g.task)
+    }
+
+    /// Claim the first open subtask that (a) `pref` accepts and (b) the
+    /// affinity grace window allows this worker to take, judging owner
+    /// liveness with `alive`. Expired claims are re-opened (and flagged as
+    /// failovers) during the scan.
+    pub fn claim_filtered<A, F>(&self, worker: usize, alive: A, mut pref: F) -> Option<ClaimGrant>
+    where
+        A: Fn(usize) -> bool,
         F: FnMut(&Subtask) -> bool,
     {
         let now = Instant::now();
@@ -121,25 +205,98 @@ impl TaskBoard {
         let g = &mut *g;
         for id in &g.order {
             let entry = g.entries.get_mut(id).unwrap();
-            // Ephemeral-claim expiry (dead/straggling worker).
+            // Ephemeral-claim expiry (dead/straggling worker): reopen and
+            // restart the grace window so a live replica owner gets first
+            // dibs on the rescue.
             if let State::Claimed { deadline, .. } = entry.state {
                 if now > deadline {
                     entry.state = State::Open;
+                    entry.advertised = now;
+                    entry.failover = true;
+                    g.failovers += 1;
                 }
             }
-            if entry.state == State::Open && pref(&entry.task) {
+            if entry.state == State::Open
+                && grace_allows(&entry.task.affinity, worker, entry.advertised, self.grace, &alive, now)
+                && pref(&entry.task)
+            {
                 entry.state = State::Claimed {
                     worker,
                     deadline: now + self.claim_ttl,
+                    since: now,
                 };
-                return Some(entry.task.clone());
+                let failover = entry.failover;
+                entry.failover = false;
+                return Some(ClaimGrant {
+                    task: entry.task.clone(),
+                    failover,
+                });
             }
         }
         None
     }
 
+    /// Immediately reopen every claim held by a worker in `dead` — the
+    /// heartbeat failure path, which rescues subtasks without waiting out
+    /// the claim TTL. Returns how many claims were reopened.
+    pub fn reap_dead(&self, dead: &[usize]) -> usize {
+        if dead.is_empty() {
+            return 0;
+        }
+        let now = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        let mut reopened = 0usize;
+        for e in g.entries.values_mut() {
+            if let State::Claimed { worker, .. } = e.state {
+                if dead.contains(&worker) {
+                    e.state = State::Open;
+                    e.advertised = now;
+                    e.failover = true;
+                    reopened += 1;
+                }
+            }
+        }
+        g.failovers += reopened as u64;
+        drop(g);
+        if reopened > 0 {
+            self.work.notify_all();
+        }
+        reopened
+    }
+
+    /// Speculation: re-advertise claims held longer than `threshold`
+    /// (straggler suspicion), at most once per subtask. The original
+    /// claimant keeps running — whichever copy completes first wins, and
+    /// the loser's document is deduplicated downstream. Returns how many
+    /// claims were reopened.
+    pub fn reopen_stragglers(&self, threshold: Duration) -> usize {
+        let now = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        let mut reopened = 0usize;
+        for e in g.entries.values_mut() {
+            if e.speculated_from.is_some() {
+                continue; // one speculative copy per subtask
+            }
+            if let State::Claimed { worker, since, .. } = e.state {
+                if now.saturating_duration_since(since) > threshold {
+                    e.state = State::Open;
+                    e.advertised = now;
+                    e.speculated_from = Some(worker);
+                    reopened += 1;
+                }
+            }
+        }
+        g.speculative_reopens += reopened as u64;
+        drop(g);
+        if reopened > 0 {
+            self.work.notify_all();
+        }
+        reopened
+    }
+
     /// Mark a subtask done (idempotent; late duplicate completions from a
-    /// reclaimed straggler are ignored by the aggregator via doc versioning).
+    /// reclaimed straggler are ignored by the aggregator via doc
+    /// versioning). Unattributed variant of [`TaskBoard::complete_by`].
     pub fn complete(&self, id: &SubtaskId) {
         let mut g = self.inner.lock().unwrap();
         if let Some(e) = g.entries.get_mut(id) {
@@ -147,15 +304,35 @@ impl TaskBoard {
         }
     }
 
+    /// Mark a subtask done, attributing the completion to `worker`. The
+    /// first completion wins; returns whether this was it, and whether it
+    /// was a speculative copy beating the original claimant.
+    pub fn complete_by(&self, id: &SubtaskId, worker: usize) -> (bool, bool) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.entries.get_mut(id) else {
+            return (false, false);
+        };
+        if e.state == State::Done {
+            return (false, false);
+        }
+        e.state = State::Done;
+        let win = e.speculated_from.is_some_and(|orig| orig != worker);
+        if win {
+            g.speculative_wins += 1;
+        }
+        (true, win)
+    }
+
     /// Renew a claim (long-running subtask heartbeat).
     pub fn heartbeat(&self, id: &SubtaskId, worker: usize) -> bool {
         let mut g = self.inner.lock().unwrap();
         if let Some(e) = g.entries.get_mut(id) {
-            if let State::Claimed { worker: w, .. } = e.state {
+            if let State::Claimed { worker: w, since, .. } = e.state {
                 if w == worker {
                     e.state = State::Claimed {
                         worker,
                         deadline: Instant::now() + self.claim_ttl,
+                        since,
                     };
                     return true;
                 }
@@ -179,6 +356,22 @@ impl TaskBoard {
         s
     }
 
+    /// Live backlog (open + claimed, not done) — the admission-control
+    /// signal `Cluster::submit` compares against its cap.
+    pub fn backlog(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.entries.values().filter(|e| e.state != State::Done).count()
+    }
+
+    pub fn placement(&self) -> PlacementCounters {
+        let g = self.inner.lock().unwrap();
+        PlacementCounters {
+            failovers: g.failovers,
+            speculative_reopens: g.speculative_reopens,
+            speculative_wins: g.speculative_wins,
+        }
+    }
+
     /// All work finished?
     pub fn all_done(&self, query_id: u64) -> bool {
         let g = self.inner.lock().unwrap();
@@ -188,12 +381,59 @@ impl TaskBoard {
             .all(|e| e.state == State::Done)
     }
 
-    /// Drop a query's subtasks (cancellation).
+    /// Subtasks a query is still waiting on — entries not `Done` that the
+    /// query keys or rides as a fused co-query. What a structured timeout
+    /// error reports.
+    pub fn outstanding_for(&self, query_id: u64) -> Vec<SubtaskId> {
+        let g = self.inner.lock().unwrap();
+        g.order
+            .iter()
+            .filter_map(|id| {
+                let e = g.entries.get(id)?;
+                let mine =
+                    id.query_id == query_id || e.task.co_queries.contains(&query_id);
+                (mine && e.state != State::Done).then(|| id.clone())
+            })
+            .collect()
+    }
+
+    /// Drop a query's subtasks (cancellation, or completed-query cleanup —
+    /// without this the board grows one `Done` entry per partition per
+    /// query forever).
     pub fn cancel(&self, query_id: u64) {
         let mut g = self.inner.lock().unwrap();
         g.order.retain(|id| id.query_id != query_id);
         g.entries.retain(|id, _| id.query_id != query_id);
     }
+}
+
+/// May `worker` claim an open subtask with owner list `aff`, `age` into
+/// its grace window? Phase 1 (first half): live primary only. Phase 2
+/// (second half): any live owner. After the window, or when every owner is
+/// dead: anyone.
+fn grace_allows<A: Fn(usize) -> bool>(
+    aff: &[usize],
+    worker: usize,
+    advertised: Instant,
+    grace: Duration,
+    alive: &A,
+    now: Instant,
+) -> bool {
+    if aff.is_empty() || grace.is_zero() {
+        return true;
+    }
+    let live: Vec<usize> = aff.iter().copied().filter(|&w| alive(w)).collect();
+    if live.is_empty() {
+        return true; // all owners dead — open to anyone immediately
+    }
+    let age = now.saturating_duration_since(advertised);
+    if age >= grace {
+        return true;
+    }
+    if age * 2 >= grace {
+        return live.contains(&worker);
+    }
+    live[0] == worker
 }
 
 #[cfg(test)]
@@ -206,6 +446,14 @@ mod tests {
             dataset: ds.to_string(),
             assigned_to: None,
             co_queries: Vec::new(),
+            affinity: Vec::new(),
+        }
+    }
+
+    fn task_aff(q: u64, p: usize, aff: Vec<usize>) -> Subtask {
+        Subtask {
+            affinity: aff,
+            ..task(q, p, "dy")
         }
     }
 
@@ -234,8 +482,11 @@ mod tests {
         let _ = b.claim(0, |_| true).unwrap();
         assert!(b.claim(1, |_| true).is_none());
         std::thread::sleep(Duration::from_millis(20));
-        // The straggler's claim expired; another worker picks it up.
-        assert!(b.claim(1, |_| true).is_some());
+        // The straggler's claim expired; another worker picks it up, and
+        // the rescue is recorded as a failover.
+        let g = b.claim_filtered(1, |_| true, |_| true).unwrap();
+        assert!(g.failover);
+        assert_eq!(b.placement().failovers, 1);
     }
 
     #[test]
@@ -337,5 +588,108 @@ mod tests {
         let mut got = claimed.lock().unwrap().clone();
         got.sort_unstable();
         assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+
+    // ---- affinity grace window ----
+
+    #[test]
+    fn grace_reserves_for_primary_then_replica_then_anyone() {
+        let b = TaskBoard::with_grace(Duration::from_secs(60), Duration::from_millis(400));
+        b.advertise(vec![task_aff(1, 0, vec![3, 5])]);
+        let alive = |_w: usize| true;
+        // Phase 1: replica and stranger blocked, primary allowed.
+        assert!(b.claim_filtered(5, alive, |_| true).is_none());
+        assert!(b.claim_filtered(0, alive, |_| true).is_none());
+        let g = b.claim_filtered(3, alive, |_| true).unwrap();
+        assert_eq!(g.task.id.partition, 0);
+        // Phase 2 (second half of the window): replica allowed, stranger not.
+        b.advertise(vec![task_aff(1, 1, vec![3, 5])]);
+        std::thread::sleep(Duration::from_millis(220));
+        assert!(b.claim_filtered(0, alive, |_| true).is_none());
+        let g = b.claim_filtered(5, alive, |_| true).unwrap();
+        assert_eq!(g.task.id.partition, 1);
+        // After the window anyone may take a fresh task.
+        b.advertise(vec![task_aff(1, 2, vec![3, 5])]);
+        std::thread::sleep(Duration::from_millis(420));
+        assert!(b.claim_filtered(0, alive, |_| true).is_some());
+    }
+
+    #[test]
+    fn dead_owners_waive_grace() {
+        let b = TaskBoard::with_grace(Duration::from_secs(60), Duration::from_secs(60));
+        b.advertise(vec![task_aff(1, 0, vec![3, 5]), task_aff(1, 1, vec![3, 5])]);
+        // Primary dead: the replica is promoted to first-dibs immediately.
+        let only5 = |w: usize| w == 5;
+        assert!(b.claim_filtered(5, only5, |_| true).is_some());
+        // Both owners dead: a stranger claims with no wait at all.
+        let none = |_w: usize| false;
+        assert!(b.claim_filtered(0, none, |_| true).is_some());
+    }
+
+    #[test]
+    fn reap_dead_reopens_without_ttl_wait() {
+        let b = TaskBoard::new(Duration::from_secs(600));
+        b.advertise(vec![task(1, 0, "dy"), task(1, 1, "dy")]);
+        let t0 = b.claim(7, |_| true).unwrap();
+        let _t1 = b.claim(8, |_| true).unwrap();
+        assert_eq!(b.reap_dead(&[7]), 1);
+        // Worker 7's claim is open again despite the 600 s TTL; worker 8's
+        // claim is untouched.
+        let g = b.claim_filtered(2, |_| true, |_| true).unwrap();
+        assert_eq!(g.task.id, t0.id);
+        assert!(g.failover);
+        assert!(b.claim(3, |_| true).is_none());
+        assert_eq!(b.placement().failovers, 1);
+    }
+
+    #[test]
+    fn speculation_reopens_once_and_attributes_win() {
+        let b = TaskBoard::new(Duration::from_secs(600));
+        b.advertise(vec![task(1, 0, "dy")]);
+        let t = b.claim(4, |_| true).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(b.reopen_stragglers(Duration::from_millis(5)), 1);
+        // Only one speculative copy per subtask, ever.
+        let spec = b.claim(9, |_| true).unwrap();
+        assert_eq!(spec.id, t.id);
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(b.reopen_stragglers(Duration::from_millis(5)), 0);
+        // The speculative runner finishes first: that's a win. The
+        // original's later completion is not.
+        let (first, win) = b.complete_by(&t.id, 9);
+        assert!(first && win);
+        let (late, _) = b.complete_by(&t.id, 4);
+        assert!(!late);
+        let p = b.placement();
+        assert_eq!(p.speculative_reopens, 1);
+        assert_eq!(p.speculative_wins, 1);
+    }
+
+    #[test]
+    fn original_finishing_first_is_not_a_speculative_win() {
+        let b = TaskBoard::new(Duration::from_secs(600));
+        b.advertise(vec![task(1, 0, "dy")]);
+        let t = b.claim(4, |_| true).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(b.reopen_stragglers(Duration::from_millis(2)), 1);
+        let (first, win) = b.complete_by(&t.id, 4);
+        assert!(first && !win);
+        assert_eq!(b.placement().speculative_wins, 0);
+    }
+
+    #[test]
+    fn backlog_and_outstanding() {
+        let b = TaskBoard::new(Duration::from_secs(60));
+        let mut rider = task(3, 1, "dy");
+        rider.co_queries = vec![4];
+        b.advertise(vec![task(3, 0, "dy"), rider]);
+        assert_eq!(b.backlog(), 2);
+        let t = b.claim(0, |_| true).unwrap();
+        b.complete(&t.id);
+        assert_eq!(b.backlog(), 1);
+        // Query 4 rides partition 1 as a co-query: it appears in 4's
+        // outstanding list even though the subtask is keyed by query 3.
+        assert_eq!(b.outstanding_for(4).len(), 1);
+        assert_eq!(b.outstanding_for(3).len(), 1);
     }
 }

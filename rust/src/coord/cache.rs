@@ -24,6 +24,9 @@ pub struct PartitionCache {
     clock: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Entries evicted to make room (capacity pressure — a worker whose
+    /// affinity-owned partitions no longer fit its budget).
+    pub evictions: u64,
 }
 
 impl PartitionCache {
@@ -35,6 +38,7 @@ impl PartitionCache {
             clock: 0,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -86,6 +90,7 @@ impl PartitionCache {
                 .unwrap();
             let (evicted, _) = self.entries.remove(&lru).unwrap();
             self.used_bytes -= evicted.cs.byte_size();
+            self.evictions += 1;
         }
         self.clock += 1;
         self.used_bytes += size;

@@ -6,21 +6,112 @@
 //! (standing in for disk/network on the paper's testbed). Everything else —
 //! task board, document store, caches — is the real algorithm, not a
 //! simulation.
+//!
+//! Placement and failure are first-class here:
+//!
+//! * **Affinity** — every advertised subtask carries its rendezvous-hashed
+//!   owner list ([`crate::coord::scheduler::affinity_owners`], `k =`
+//!   [`ClusterConfig::replication`]); the board reserves it for those
+//!   owners during a grace window, so repeat queries land on warm caches
+//!   by construction.
+//! * **Failover** — workers heartbeat a [`WorkerHealth`] registry; the
+//!   query waiter reaps dead workers' claims every aggregation round
+//!   (no waiting out the claim TTL) and the replica owner rescues them.
+//! * **Speculation** — claims held far beyond the running per-subtask
+//!   latency estimate are re-advertised once; the document store's dedup
+//!   keeps aggregation exactly-once whichever copy finishes.
+//! * **Bounded waiting** — [`Cluster::wait_with_progress`] enforces
+//!   [`ClusterConfig::query_deadline`] and returns a structured
+//!   [`ClusterError::Timeout`] listing the outstanding subtasks;
+//!   [`Cluster::submit`] sheds load with [`ClusterError::Overloaded`]
+//!   when the board backlog exceeds [`ClusterConfig::max_backlog`].
+//!
+//! The churn API (`kill_worker` / `spawn_worker` / `set_handicap` /
+//! `inject_abandon`) exists so tests and benches can drive all of the
+//! above deterministically, in-process, at 100+ worker scale.
 
 use crate::columnar::arrays::ColumnSet;
-use crate::coord::board::{Subtask, SubtaskId, TaskBoard};
+use crate::coord::board::{PlacementCounters, Subtask, SubtaskId, TaskBoard};
 use crate::coord::cache::PartitionCache;
 use crate::coord::docstore::{DocStore, PartialDoc};
-use crate::coord::scheduler::Policy;
+use crate::coord::health::WorkerHealth;
+use crate::coord::scheduler::{affinity_owners, Policy};
 use crate::engine::compiled_exec::source_for;
 use crate::engine::{Backend, Query};
 use crate::hist::H1;
 use crate::index::ZoneMap;
 use crate::queryir::{self, predicate, ZoneDecision};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+// ----------------------------------------------------------------- errors
+
+/// Structured cluster errors. Converts into `String` (via `Display`) so
+/// pre-existing `Result<_, String>` call sites keep composing with `?`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterError {
+    /// Admission control: the board backlog exceeded
+    /// [`ClusterConfig::max_backlog`] at submit. Back off and resubmit.
+    Overloaded { backlog: usize },
+    /// [`ClusterConfig::query_deadline`] expired. Reports exactly which
+    /// subtasks were still outstanding — never a silent stall.
+    Timeout {
+        query_id: u64,
+        merged: usize,
+        total: usize,
+        outstanding: Vec<SubtaskId>,
+    },
+    /// The progress callback requested cancellation.
+    Cancelled,
+    Other(String),
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::Overloaded { backlog } => {
+                write!(f, "overloaded: board backlog {backlog} over cap")
+            }
+            ClusterError::Timeout { query_id, merged, total, outstanding } => {
+                let parts: Vec<String> = outstanding
+                    .iter()
+                    .map(|id| format!("{}:{}", id.query_id, id.partition))
+                    .collect();
+                write!(
+                    f,
+                    "query {query_id} timed out with {merged}/{total} partitions \
+                     (outstanding subtasks: [{}])",
+                    parts.join(", ")
+                )
+            }
+            ClusterError::Cancelled => f.write_str("cancelled"),
+            ClusterError::Other(s) => f.write_str(s),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl From<String> for ClusterError {
+    fn from(s: String) -> ClusterError {
+        ClusterError::Other(s)
+    }
+}
+
+impl From<&str> for ClusterError {
+    fn from(s: &str) -> ClusterError {
+        ClusterError::Other(s.to_string())
+    }
+}
+
+impl From<ClusterError> for String {
+    fn from(e: ClusterError) -> String {
+        e.to_string()
+    }
+}
 
 // ---------------------------------------------------------------- catalog
 
@@ -164,6 +255,45 @@ impl DatasetCatalog {
     }
 }
 
+// ------------------------------------------------------------ latency est
+
+/// Running per-subtask latency estimate (EWMA, lock-free) — the baseline
+/// the straggler-speculation threshold multiplies. Races between workers
+/// only blur the estimate, never correctness.
+struct LatencyEst {
+    ewma_us: AtomicU64,
+    samples: AtomicU64,
+}
+
+impl LatencyEst {
+    fn new() -> LatencyEst {
+        LatencyEst {
+            ewma_us: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, d: Duration) {
+        let us = (d.as_micros().min(u64::MAX as u128) as u64).max(1);
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { (old * 7 + us) / 8 };
+        self.ewma_us.store(new.max(1), Ordering::Relaxed);
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// None until enough samples exist to speculate on (a cold estimate
+    /// would re-advertise everything).
+    fn estimate(&self) -> Option<Duration> {
+        if self.samples.load(Ordering::Relaxed) < 3 {
+            return None;
+        }
+        match self.ewma_us.load(Ordering::Relaxed) {
+            0 => None,
+            us => Some(Duration::from_micros(us)),
+        }
+    }
+}
+
 // ----------------------------------------------------------------- worker
 
 #[derive(Clone, Debug, Default)]
@@ -171,8 +301,18 @@ pub struct WorkerStats {
     pub tasks_done: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub cache_evictions: u64,
     pub events_processed: u64,
     pub busy: Duration,
+    /// Claims of subtasks whose affinity list included this worker.
+    pub affinity_hits: u64,
+    /// Claims of subtasks that had owners — and this worker wasn't one
+    /// (post-grace steal, or every owner was dead/busy).
+    pub affinity_misses: u64,
+    /// Claims that rescued a failed claim (holder died or TTL expired).
+    pub failovers: u64,
+    /// Speculative copies run by this worker that beat the original.
+    pub speculative_wins: u64,
 }
 
 struct WorkerCtx {
@@ -185,47 +325,60 @@ struct WorkerCtx {
     backend: Backend,
     cache_bytes: usize,
     shutdown: Arc<AtomicBool>,
+    /// Per-worker kill switch (crash simulation: the thread just exits).
+    kill: Arc<AtomicBool>,
+    /// Claim-then-die injections outstanding (deterministic "worker dies
+    /// holding a claim" — the hardest failure mode to rescue).
+    abandon: Arc<AtomicU64>,
+    /// Simulated background load in µs per subtask, slept while holding
+    /// the claim (dynamic, so tests can straggle a worker mid-run).
+    handicap_us: Arc<AtomicU64>,
     stats: Arc<Mutex<WorkerStats>>,
-    handicap: Duration,
+    health: Arc<WorkerHealth>,
+    latency: Arc<LatencyEst>,
 }
 
 /// Upper bound on one idle condvar wait: how quickly a worker re-scans the
-/// board for expired claims, and the worst-case shutdown latency if a
-/// wakeup is missed.
+/// board for expired claims and grace-window transitions, and the
+/// worst-case shutdown latency if a wakeup is missed.
 const IDLE_TICK: Duration = Duration::from_millis(20);
 
 fn worker_loop(ctx: WorkerCtx) {
     let mut cache = PartitionCache::new(ctx.cache_bytes);
     let mut first_miss: Option<Instant> = None;
-    while !ctx.shutdown.load(Ordering::Relaxed) {
-        // Round 1: preferred work (cache-local / own assignment).
-        let claimed = ctx.board.claim(ctx.id, |t| {
+    while !ctx.shutdown.load(Ordering::Relaxed) && !ctx.kill.load(Ordering::Relaxed) {
+        ctx.health.beat(ctx.id);
+        let alive = |w: usize| ctx.health.is_alive(w);
+        // Round 1: preferred work (cache-local / affinity-owned / own
+        // assignment).
+        let claimed = ctx.board.claim_filtered(ctx.id, alive, |t| {
             let key = (t.dataset.clone(), t.id.partition);
             ctx.policy.first_round_ok(ctx.id, t, cache.contains(&key))
         });
-        let task = match claimed {
-            Some(t) => {
+        let grant = match claimed {
+            Some(g) => {
                 first_miss = None;
-                Some(t)
+                Some(g)
             }
             None => {
-                // Round 2 after the sub-second delay: take anything.
+                // Round 2 after the sub-second delay: take anything (the
+                // board's grace window still shields fresh subtasks).
                 let delay = ctx.policy.second_round_delay();
                 let since = first_miss.get_or_insert_with(Instant::now);
                 if since.elapsed() >= delay {
-                    let t = ctx
+                    let g = ctx
                         .board
-                        .claim(ctx.id, |t| ctx.policy.second_round_ok(ctx.id, t));
-                    if t.is_some() {
+                        .claim_filtered(ctx.id, alive, |t| ctx.policy.second_round_ok(ctx.id, t));
+                    if g.is_some() {
                         first_miss = None;
                     }
-                    t
+                    g
                 } else {
                     None
                 }
             }
         };
-        let Some(task) = task else {
+        let Some(grant) = grant else {
             // Idle: block on the board's condvar instead of burning a core
             // polling — crucial now that busy workers may be running
             // morsel-parallel subtasks on every other core. The timeout is
@@ -246,40 +399,56 @@ fn worker_loop(ctx: WorkerCtx) {
             ctx.board.wait_for_work(wait.max(Duration::from_micros(100)));
             continue;
         };
-        if let Err(e) = run_subtask(&ctx, &task, &mut cache) {
-            crate::log_warn!("worker {}: subtask {:?} failed: {e}", ctx.id, task.id);
-            // Leave the claim to expire so another worker retries.
+        // Deterministic crash injection: die *holding* the claim — the
+        // exact failure the heartbeat reaper + replica owner must rescue.
+        if ctx.abandon.load(Ordering::Relaxed) > 0 {
+            ctx.abandon.fetch_sub(1, Ordering::Relaxed);
+            ctx.kill.store(true, Ordering::Relaxed);
+            break;
         }
-        if !ctx.handicap.is_zero() {
-            std::thread::sleep(ctx.handicap); // simulated background load
+        {
+            let mut s = ctx.stats.lock().unwrap();
+            if !grant.task.affinity.is_empty() {
+                if grant.task.affinity.contains(&ctx.id) {
+                    s.affinity_hits += 1;
+                } else {
+                    s.affinity_misses += 1;
+                }
+            }
+            if grant.failover {
+                s.failovers += 1;
+            }
+        }
+        if let Err(e) = run_subtask(&ctx, &grant.task, &mut cache) {
+            crate::log_warn!("worker {}: subtask {:?} failed: {e}", ctx.id, grant.task.id);
+            // Leave the claim to expire so another worker retries.
         }
     }
     // Final stats flush.
     let mut s = ctx.stats.lock().unwrap();
     s.cache_hits = cache.hits;
     s.cache_misses = cache.misses;
+    s.cache_evictions = cache.evictions;
 }
 
 fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> Result<(), String> {
     let t0 = Instant::now();
     // All member queries of this subtask: the primary plus any co-queries
-    // fused onto the same partition scan (usually none). A co-query that
-    // was cancelled meanwhile simply drops out of the scan; a missing
-    // primary is an error, as before.
+    // fused onto the same partition scan (usually none). Members that were
+    // cancelled (or already finished via a faster duplicate) meanwhile
+    // simply drop out of the scan; if nobody is left, the subtask is
+    // trivially complete.
     let members: Vec<(u64, Query)> = {
         let g = ctx.queries.read().unwrap();
-        let primary = g
-            .get(&task.id.query_id)
-            .cloned()
-            .ok_or_else(|| format!("unknown query {}", task.id.query_id))?;
-        let mut m = vec![(task.id.query_id, primary)];
-        m.extend(
-            task.co_queries
-                .iter()
-                .filter_map(|qid| g.get(qid).cloned().map(|q| (*qid, q))),
-        );
-        m
+        std::iter::once(task.id.query_id)
+            .chain(task.co_queries.iter().copied())
+            .filter_map(|qid| g.get(&qid).cloned().map(|q| (qid, q)))
+            .collect()
     };
+    if members.is_empty() {
+        ctx.board.complete_by(&task.id, ctx.id);
+        return Ok(());
+    }
     let key = (task.dataset.clone(), task.id.partition);
     // Version-checked cache read: a re-registered dataset must re-fetch
     // (stale bytes would also desynchronize data and zone map).
@@ -312,6 +481,14 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
         ctx.backend
             .run_fused(&refs, &part.cs, Some(part.zones.as_ref()), &mut hists)?
     };
+    // Simulated background load: slept while *holding* the claim, so a
+    // handicapped worker looks exactly like a straggling node — its claim
+    // ages past the speculation threshold and its documents arrive late
+    // (deduplicated if a speculative copy won meanwhile).
+    let handicap = ctx.handicap_us.load(Ordering::Relaxed);
+    if handicap > 0 {
+        std::thread::sleep(Duration::from_micros(handicap));
+    }
     for (((qid, _), hist), chunks) in members.iter().zip(hists).zip(reps) {
         ctx.store.insert(PartialDoc {
             id: SubtaskId { query_id: *qid, partition: task.id.partition },
@@ -321,14 +498,19 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
             chunks,
         });
     }
-    ctx.board.complete(&task.id);
+    let (_, spec_win) = ctx.board.complete_by(&task.id, ctx.id);
+    ctx.latency.observe(t0.elapsed());
     let mut s = ctx.stats.lock().unwrap();
     s.tasks_done += 1;
     s.events_processed += part.cs.n_events as u64;
     s.busy += t0.elapsed();
+    if spec_win {
+        s.speculative_wins += 1;
+    }
     // Mirror cache counters continuously so live monitoring sees them.
     s.cache_hits = cache.hits;
     s.cache_misses = cache.misses;
+    s.cache_evictions = cache.evictions;
     Ok(())
 }
 
@@ -344,6 +526,30 @@ pub struct ClusterConfig {
     /// Simulated background load: (worker id, extra time per subtask).
     /// Models the straggler node whose effect pull-scheduling bounds.
     pub straggler: Option<(usize, Duration)>,
+    /// Affinity owners per partition (k of rendezvous hashing). 0 disables
+    /// affinity; 2 gives every partition a warm-standby failover replica.
+    pub replication: usize,
+    /// How long an advertised subtask is reserved for its affinity owners
+    /// before any worker may claim it.
+    pub affinity_grace: Duration,
+    /// Missed-heartbeat window after which a worker counts as dead and its
+    /// claims fail over immediately. Should exceed the typical subtask
+    /// duration — a false positive is safe (dedup) but wastes work.
+    pub heartbeat_timeout: Duration,
+    /// Hard per-query deadline enforced by `wait_with_progress`; expiry
+    /// returns [`ClusterError::Timeout`] with the outstanding subtasks.
+    pub query_deadline: Duration,
+    /// Admission control: `submit` returns [`ClusterError::Overloaded`]
+    /// when the board backlog (open + claimed subtasks) would exceed this.
+    /// 0 disables the cap.
+    pub max_backlog: usize,
+    /// Straggler speculation: re-advertise a claim held longer than
+    /// `max(speculation_factor × EWMA latency, speculation_min)`.
+    /// A factor of 0 disables speculation.
+    pub speculation_factor: f64,
+    /// Floor under the speculation threshold, so a burst of fast subtasks
+    /// cannot make the cluster speculate on merely-average ones.
+    pub speculation_min: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -355,6 +561,13 @@ impl Default for ClusterConfig {
             fetch_delay_per_mib: Duration::from_millis(20),
             claim_ttl: Duration::from_secs(30),
             straggler: None,
+            replication: 2,
+            affinity_grace: Duration::from_millis(20),
+            heartbeat_timeout: Duration::from_secs(1),
+            query_deadline: Duration::from_secs(600),
+            max_backlog: 100_000,
+            speculation_factor: 4.0,
+            speculation_min: Duration::from_millis(250),
         }
     }
 }
@@ -383,14 +596,47 @@ pub struct QueryHandle {
     submitted: Instant,
 }
 
+/// One worker slot. Slots are never reused: a killed worker's slot stays
+/// (its stats remain readable), and `spawn_worker` appends a fresh id —
+/// exactly like node names in a real cluster.
+struct WorkerSlot {
+    handle: Option<std::thread::JoinHandle<()>>,
+    kill: Arc<AtomicBool>,
+    abandon: Arc<AtomicU64>,
+    handicap_us: Arc<AtomicU64>,
+    stats: Arc<Mutex<WorkerStats>>,
+}
+
+/// Cluster-lifetime placement / failure-recovery telemetry — the scale-out
+/// face of the per-worker counters in [`WorkerStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlacementStats {
+    /// Claims reopened because the holder died or its TTL expired.
+    pub failovers: u64,
+    /// Claims speculatively re-advertised past the straggler threshold.
+    pub speculative_reopens: u64,
+    /// Speculative copies that finished before the original claimant.
+    pub speculative_wins: u64,
+    /// Queries that hit `query_deadline` and returned a structured error.
+    pub query_timeouts: u64,
+    /// Submits rejected by backlog admission control.
+    pub submits_rejected: u64,
+    /// Partial documents dropped as duplicates (straggler/speculative
+    /// copies losing the race) — the exactly-once mechanism firing.
+    pub duplicate_docs: u64,
+    /// Documents dropped because their query's waiter had already left.
+    pub stale_docs: u64,
+}
+
 pub struct Cluster {
     pub catalog: Arc<DatasetCatalog>,
     board: Arc<TaskBoard>,
     store: Arc<DocStore>,
     queries: Arc<RwLock<HashMap<u64, Query>>>,
     shutdown: Arc<AtomicBool>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    worker_stats: Vec<Arc<Mutex<WorkerStats>>>,
+    workers: Mutex<Vec<WorkerSlot>>,
+    health: Arc<WorkerHealth>,
+    latency: Arc<LatencyEst>,
     next_query: AtomicU64,
     config: ClusterConfig,
     /// The backend workers run (kept for its process-wide zone counters).
@@ -398,57 +644,146 @@ pub struct Cluster {
     /// Submit-time partition pruning counters.
     partitions_skipped: AtomicU64,
     partitions_scanned: AtomicU64,
+    query_timeouts: AtomicU64,
+    submits_rejected: AtomicU64,
 }
 
 impl Cluster {
     pub fn start(config: ClusterConfig, backend: Backend) -> Cluster {
-        let catalog = Arc::new(DatasetCatalog::new(config.fetch_delay_per_mib));
-        let board = Arc::new(TaskBoard::new(config.claim_ttl));
-        let store = Arc::new(DocStore::new());
-        let queries = Arc::new(RwLock::new(HashMap::new()));
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let mut workers = Vec::new();
-        let mut worker_stats = Vec::new();
-        for id in 0..config.n_workers {
-            let stats = Arc::new(Mutex::new(WorkerStats::default()));
-            worker_stats.push(stats.clone());
-            let ctx = WorkerCtx {
-                id,
-                board: board.clone(),
-                store: store.clone(),
-                catalog: catalog.clone(),
-                queries: queries.clone(),
-                policy: config.policy,
-                backend: backend.clone(),
-                cache_bytes: config.cache_bytes_per_worker,
-                shutdown: shutdown.clone(),
-                stats,
-                handicap: match config.straggler {
-                    Some((w, d)) if w == id => d,
-                    _ => Duration::ZERO,
-                },
-            };
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("hepq-worker-{id}"))
-                    .spawn(move || worker_loop(ctx))
-                    .expect("spawn worker"),
-            );
-        }
-        Cluster {
-            catalog,
-            board,
-            store,
-            queries,
-            shutdown,
-            workers,
-            worker_stats,
+        let cluster = Cluster {
+            catalog: Arc::new(DatasetCatalog::new(config.fetch_delay_per_mib)),
+            board: Arc::new(TaskBoard::with_grace(config.claim_ttl, config.affinity_grace)),
+            store: Arc::new(DocStore::new()),
+            queries: Arc::new(RwLock::new(HashMap::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            workers: Mutex::new(Vec::new()),
+            health: Arc::new(WorkerHealth::new(config.heartbeat_timeout)),
+            latency: Arc::new(LatencyEst::new()),
             next_query: AtomicU64::new(1),
-            config,
+            config: config.clone(),
             backend,
             partitions_skipped: AtomicU64::new(0),
             partitions_scanned: AtomicU64::new(0),
+            query_timeouts: AtomicU64::new(0),
+            submits_rejected: AtomicU64::new(0),
+        };
+        for _ in 0..config.n_workers {
+            cluster.spawn_worker();
         }
+        if let Some((w, d)) = config.straggler {
+            cluster.set_handicap(w, d);
+        }
+        cluster
+    }
+
+    /// Add a worker to the cluster (join churn). Returns its id. New
+    /// submits immediately include it in the rendezvous owner set; running
+    /// queries reach it through round-2 work stealing.
+    pub fn spawn_worker(&self) -> usize {
+        let mut slots = self.workers.lock().unwrap();
+        let id = slots.len();
+        let kill = Arc::new(AtomicBool::new(false));
+        let abandon = Arc::new(AtomicU64::new(0));
+        let handicap_us = Arc::new(AtomicU64::new(0));
+        let stats = Arc::new(Mutex::new(WorkerStats::default()));
+        // Register before the thread runs, so the worker is never judged
+        // dead (or absent) between spawn and its first loop iteration.
+        self.health.beat(id);
+        let ctx = WorkerCtx {
+            id,
+            board: self.board.clone(),
+            store: self.store.clone(),
+            catalog: self.catalog.clone(),
+            queries: self.queries.clone(),
+            policy: self.config.policy,
+            backend: self.backend.clone(),
+            cache_bytes: self.config.cache_bytes_per_worker,
+            shutdown: self.shutdown.clone(),
+            kill: kill.clone(),
+            abandon: abandon.clone(),
+            handicap_us: handicap_us.clone(),
+            stats: stats.clone(),
+            health: self.health.clone(),
+            latency: self.latency.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("hepq-worker-{id}"))
+            .spawn(move || worker_loop(ctx))
+            .expect("spawn worker");
+        slots.push(WorkerSlot {
+            handle: Some(handle),
+            kill,
+            abandon,
+            handicap_us,
+            stats,
+        });
+        id
+    }
+
+    /// Kill a worker (crash churn): it stops heartbeating and exits after
+    /// at most its current subtask. Claims it never completes are reaped
+    /// by the heartbeat failure detector — not the full claim TTL.
+    pub fn kill_worker(&self, id: usize) -> bool {
+        let slots = self.workers.lock().unwrap();
+        let Some(slot) = slots.get(id) else {
+            return false;
+        };
+        slot.kill.store(true, Ordering::Relaxed);
+        drop(slots);
+        self.board.wake_all();
+        true
+    }
+
+    /// Arrange for worker `id` to claim `n` more subtasks and die holding
+    /// each claim *without* completing it — the deterministic
+    /// "kill after claim" schedule of the failure-injection grid.
+    pub fn inject_abandon(&self, id: usize, n: u64) -> bool {
+        let slots = self.workers.lock().unwrap();
+        match slots.get(id) {
+            Some(slot) => {
+                slot.abandon.fetch_add(n, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Set a worker's simulated background load (straggle churn; zero
+    /// clears it). Takes effect from its next subtask.
+    pub fn set_handicap(&self, id: usize, d: Duration) -> bool {
+        let slots = self.workers.lock().unwrap();
+        match slots.get(id) {
+            Some(slot) => {
+                slot.handicap_us
+                    .store(d.as_micros().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Ids of workers not killed (what submit hashes partitions over).
+    pub fn live_worker_ids(&self) -> Vec<usize> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.kill.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The rendezvous affinity owners a submit would compute right now for
+    /// one partition (best first). Exposed so tests can target failures at
+    /// exactly the owners (e.g. kill both replicas of one partition).
+    pub fn partition_affinity(&self, dataset: &str, partition: usize) -> Vec<usize> {
+        affinity_owners(
+            dataset,
+            partition,
+            &self.live_worker_ids(),
+            self.config.replication,
+        )
     }
 
     /// Which partitions can this query provably skip? Evaluates the
@@ -488,18 +823,42 @@ impl Cluster {
             .collect()
     }
 
+    /// Backpressure check shared by `submit` and `submit_fused`.
+    fn admit(&self, new_tasks: usize) -> Result<(), ClusterError> {
+        if self.config.max_backlog == 0 {
+            return Ok(());
+        }
+        let backlog = self.board.backlog();
+        if backlog + new_tasks > self.config.max_backlog {
+            self.submits_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ClusterError::Overloaded {
+                backlog: backlog + new_tasks,
+            });
+        }
+        Ok(())
+    }
+
+    /// Rendezvous owners for every partition of one dataset under the
+    /// current live worker set (empty lists when the policy pushes).
+    fn affinity_for(&self, dataset: &str, partition: usize, live: &[usize]) -> Vec<usize> {
+        if !self.config.policy.wants_affinity() {
+            return Vec::new();
+        }
+        affinity_owners(dataset, partition, live, self.config.replication)
+    }
+
     /// Submit a query: advertises one subtask per partition the zone maps
     /// cannot prove empty — a 1%-selectivity cut over clustered data puts
     /// a fraction of the board in front of the Figure-2 scheduler, which
     /// is the paper's "indexing" multiplier on top of fast kernels.
-    pub fn submit(&self, query: Query) -> Result<QueryHandle, String> {
+    pub fn submit(&self, query: Query) -> Result<QueryHandle, ClusterError> {
         let partitions = self
             .catalog
             .n_partitions(&query.dataset)
-            .ok_or_else(|| format!("no dataset '{}'", query.dataset))?;
+            .ok_or_else(|| ClusterError::Other(format!("no dataset '{}'", query.dataset)))?;
         let skips = self.partition_skips(&query, partitions);
         let query_id = self.next_query.fetch_add(1, Ordering::Relaxed);
-        self.queries.write().unwrap().insert(query_id, query.clone());
+        let live = self.live_worker_ids();
         let mut tasks: Vec<Subtask> = (0..partitions)
             .filter(|p| !skips[*p])
             .map(|p| Subtask {
@@ -507,15 +866,18 @@ impl Cluster {
                 dataset: query.dataset.clone(),
                 assigned_to: None,
                 co_queries: Vec::new(),
+                affinity: self.affinity_for(&query.dataset, p, &live),
             })
             .collect();
+        self.admit(tasks.len())?;
+        self.queries.write().unwrap().insert(query_id, query.clone());
         let advertised = tasks.len();
         let skipped = partitions - advertised;
         self.partitions_skipped
             .fetch_add(skipped as u64, Ordering::Relaxed);
         self.partitions_scanned
             .fetch_add(advertised as u64, Ordering::Relaxed);
-        self.config.policy.assign(&mut tasks, self.config.n_workers);
+        self.config.policy.assign_to(&mut tasks, &live);
         self.board.advertise(tasks);
         Ok(QueryHandle {
             query_id,
@@ -535,7 +897,7 @@ impl Cluster {
     /// empty simply does not join that partition's scan. Returns one
     /// handle per query, in input order; every result is bit-identical to
     /// a separate `submit`.
-    pub fn submit_fused(&self, queries: &[Query]) -> Result<Vec<QueryHandle>, String> {
+    pub fn submit_fused(&self, queries: &[Query]) -> Result<Vec<QueryHandle>, ClusterError> {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
@@ -551,11 +913,12 @@ impl Cluster {
         let partitions = self
             .catalog
             .n_partitions(dataset)
-            .ok_or_else(|| format!("no dataset '{dataset}'"))?;
+            .ok_or_else(|| ClusterError::Other(format!("no dataset '{dataset}'")))?;
         let skips: Vec<Vec<bool>> = queries
             .iter()
             .map(|q| self.partition_skips(q, partitions))
             .collect();
+        let live = self.live_worker_ids();
         let mut ids = Vec::with_capacity(queries.len());
         {
             let mut g = self.queries.write().unwrap();
@@ -580,14 +943,23 @@ impl Cluster {
                 dataset: dataset.clone(),
                 assigned_to: None,
                 co_queries: members[1..].iter().map(|&i| ids[i]).collect(),
+                affinity: self.affinity_for(dataset, p, &live),
             });
+        }
+        if let Err(e) = self.admit(tasks.len()) {
+            // Roll the member queries back out before rejecting.
+            let mut g = self.queries.write().unwrap();
+            for qid in &ids {
+                g.remove(qid);
+            }
+            return Err(e);
         }
         for &adv in &advertised {
             self.partitions_scanned.fetch_add(adv as u64, Ordering::Relaxed);
             self.partitions_skipped
                 .fetch_add((partitions - adv) as u64, Ordering::Relaxed);
         }
-        self.config.policy.assign(&mut tasks, self.config.n_workers);
+        self.config.policy.assign_to(&mut tasks, &live);
         self.board.advertise(tasks);
         let now = Instant::now();
         Ok(ids
@@ -602,46 +974,88 @@ impl Cluster {
             .collect())
     }
 
+    /// Close out a query whichever way its wait ended: subtasks off the
+    /// board (so `Done` entries don't accumulate forever), query out of
+    /// the registry, documents tombstoned (so straggling duplicates are
+    /// dropped on arrival instead of pending forever).
+    fn finish_query(&self, query_id: u64) {
+        self.board.cancel(query_id);
+        self.queries.write().unwrap().remove(&query_id);
+        self.store.forget(query_id);
+    }
+
     /// Wait for a query, merging partials incrementally. `progress` is
     /// invoked after every merge round with (merged_partitions, total,
     /// current histogram); returning false cancels the query.
+    ///
+    /// The returned histogram is reduced **in partition order** from the
+    /// retained partials, so it is bit-identical (including `sum`/`sum2`)
+    /// run to run — no matter which workers produced the partials, in what
+    /// order they arrived, or which failure/speculation schedule played
+    /// out. The incremental histogram passed to `progress` is merged in
+    /// arrival order (it is a preview, not the result).
+    ///
+    /// Each aggregation round also drives failure recovery: dead workers'
+    /// claims are reaped (heartbeat detector) and straggling claims are
+    /// speculatively re-advertised.
     pub fn wait_with_progress<F>(
         &self,
         handle: &QueryHandle,
         query: &Query,
         mut progress: F,
-    ) -> Result<QueryResult, String>
+    ) -> Result<QueryResult, ClusterError>
     where
         F: FnMut(usize, usize, &H1) -> bool,
     {
-        let mut hist = H1::new(query.n_bins, query.lo, query.hi);
-        let mut merged = 0usize;
+        let mut preview = H1::new(query.n_bins, query.lo, query.hi);
+        let mut parts: BTreeMap<usize, H1> = BTreeMap::new();
         let mut events = 0u64;
         let mut chunks = crate::queryir::IndexedRun::default();
-        let deadline = Instant::now() + Duration::from_secs(600);
-        while merged < handle.partitions {
-            if Instant::now() > deadline {
-                return Err(format!(
-                    "query {} timed out with {merged}/{} partitions",
-                    handle.query_id, handle.partitions
-                ));
+        while parts.len() < handle.partitions {
+            if handle.submitted.elapsed() > self.config.query_deadline {
+                let outstanding = self.board.outstanding_for(handle.query_id);
+                self.query_timeouts.fetch_add(1, Ordering::Relaxed);
+                self.finish_query(handle.query_id);
+                return Err(ClusterError::Timeout {
+                    query_id: handle.query_id,
+                    merged: parts.len(),
+                    total: handle.partitions,
+                    outstanding,
+                });
+            }
+            // Failure recovery + straggler speculation ride the wait loop:
+            // reap claims of workers that stopped heartbeating, and
+            // re-advertise claims held far past the latency estimate.
+            let dead = self.health.dead_workers();
+            if !dead.is_empty() {
+                self.board.reap_dead(&dead);
+            }
+            if self.config.speculation_factor > 0.0 {
+                if let Some(est) = self.latency.estimate() {
+                    let threshold = est
+                        .mul_f64(self.config.speculation_factor)
+                        .max(self.config.speculation_min);
+                    self.board.reopen_stragglers(threshold);
+                }
             }
             let docs = self
                 .store
                 .drain_wait(handle.query_id, Duration::from_millis(50));
             for d in docs {
-                hist.merge(&d.hist)?;
+                preview.merge(&d.hist)?;
                 events += d.events_processed;
                 chunks.absorb(&d.chunks);
-                merged += 1;
+                parts.insert(d.id.partition, d.hist);
             }
-            if !progress(merged, handle.partitions, &hist) {
-                self.board.cancel(handle.query_id);
-                self.queries.write().unwrap().remove(&handle.query_id);
-                return Err("cancelled".into());
+            if !progress(parts.len(), handle.partitions, &preview) {
+                self.finish_query(handle.query_id);
+                return Err(ClusterError::Cancelled);
             }
         }
-        self.queries.write().unwrap().remove(&handle.query_id);
+        let merged = parts.len();
+        self.finish_query(handle.query_id);
+        let mut hist = H1::new(query.n_bins, query.lo, query.hi);
+        hist.merge_many(parts.values())?;
         Ok(QueryResult {
             hist,
             latency: handle.submitted.elapsed(),
@@ -652,21 +1066,48 @@ impl Cluster {
         })
     }
 
-    pub fn wait(&self, handle: &QueryHandle, query: &Query) -> Result<QueryResult, String> {
+    pub fn wait(&self, handle: &QueryHandle, query: &Query) -> Result<QueryResult, ClusterError> {
         self.wait_with_progress(handle, query, |_, _, _| true)
     }
 
     /// Convenience: submit + wait.
-    pub fn run(&self, query: &Query) -> Result<QueryResult, String> {
+    pub fn run(&self, query: &Query) -> Result<QueryResult, ClusterError> {
         let h = self.submit(query.clone())?;
         self.wait(&h, query)
     }
 
     pub fn stats(&self) -> Vec<WorkerStats> {
-        self.worker_stats
+        self.workers
+            .lock()
+            .unwrap()
             .iter()
-            .map(|s| s.lock().unwrap().clone())
+            .map(|s| s.stats.lock().unwrap().clone())
             .collect()
+    }
+
+    /// Cluster-lifetime placement / failure-recovery counters.
+    pub fn placement_stats(&self) -> PlacementStats {
+        let p: PlacementCounters = self.board.placement();
+        PlacementStats {
+            failovers: p.failovers,
+            speculative_reopens: p.speculative_reopens,
+            speculative_wins: p.speculative_wins,
+            query_timeouts: self.query_timeouts.load(Ordering::Relaxed),
+            submits_rejected: self.submits_rejected.load(Ordering::Relaxed),
+            duplicate_docs: self.store.duplicates(),
+            stale_docs: self.store.stale(),
+        }
+    }
+
+    /// Partial documents sitting in the store right now (leak canary: must
+    /// return to zero when no query is in flight).
+    pub fn pending_docs(&self) -> usize {
+        self.store.pending_docs()
+    }
+
+    /// Current board backlog (open + claimed subtasks).
+    pub fn board_backlog(&self) -> usize {
+        self.board.backlog()
     }
 
     pub fn total_cache_hit_rate(&self) -> f64 {
@@ -682,8 +1123,9 @@ impl Cluster {
         }
     }
 
+    /// Live (not killed) workers.
     pub fn n_workers(&self) -> usize {
-        self.config.n_workers
+        self.live_worker_ids().len()
     }
 
     /// (partitions skipped, partitions advertised) across every submit so
@@ -701,16 +1143,16 @@ impl Cluster {
         self.backend.zone_counters()
     }
 
-    pub fn shutdown(mut self) -> Vec<WorkerStats> {
+    pub fn shutdown(self) -> Vec<WorkerStats> {
         self.shutdown.store(true, Ordering::Relaxed);
         self.board.wake_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        let mut slots = self.workers.lock().unwrap();
+        for w in slots.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
         }
-        self.worker_stats
-            .iter()
-            .map(|s| s.lock().unwrap().clone())
-            .collect()
+        slots.iter().map(|s| s.stats.lock().unwrap().clone()).collect()
     }
 }
 
@@ -718,8 +1160,11 @@ impl Drop for Cluster {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         self.board.wake_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        let mut slots = self.workers.lock().unwrap();
+        for w in slots.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -737,7 +1182,7 @@ mod tests {
             policy,
             fetch_delay_per_mib: Duration::from_millis(1),
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         };
         let c = Cluster::start(cfg, Backend::Columnar);
         c.catalog.register("dy", generate_drellyan(20_000, 55), 2_000);
@@ -770,7 +1215,7 @@ mod tests {
             policy: Policy::AnyPull,
             fetch_delay_per_mib: Duration::from_millis(1),
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         };
         let c = Cluster::start(cfg, Backend::compiled_parallel(2));
         // 10k-event partitions beat the default morsel size, so each
@@ -811,16 +1256,53 @@ mod tests {
         c.shutdown();
     }
 
+    /// With affinity placement, repeat queries are not merely cache hits
+    /// *somewhere* — claims land on owners, so the per-worker hit counters
+    /// show deliberate placement.
+    #[test]
+    fn affinity_placement_records_hits() {
+        let c = small_cluster(Policy::cache_aware());
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        for _ in 0..3 {
+            c.run(&q).unwrap();
+        }
+        let stats = c.stats();
+        let hits: u64 = stats.iter().map(|s| s.affinity_hits).sum();
+        let misses: u64 = stats.iter().map(|s| s.affinity_misses).sum();
+        assert!(hits > 0, "no affinity-owned claims at all");
+        // Owners should win well over half the claims on a quiet cluster.
+        assert!(
+            hits * 2 > misses,
+            "affinity hits {hits} vs misses {misses}: placement is luck, not design"
+        );
+        c.shutdown();
+    }
+
     #[test]
     fn progress_and_cancellation() {
         let c = small_cluster(Policy::AnyPull);
         let q = Query::new(QueryKind::MaxPt, "dy", "muons");
         let h = c.submit(q.clone()).unwrap();
         let res = c.wait_with_progress(&h, &q, |done, _total, _| done == 0);
-        assert!(matches!(res, Err(e) if e == "cancelled"));
+        assert!(matches!(res, Err(ClusterError::Cancelled)));
         // Cluster still works after a cancellation.
         let res2 = c.run(&q).unwrap();
         assert_eq!(res2.partitions, 10);
+        c.shutdown();
+    }
+
+    /// The board and doc store must not grow with query history: `Done`
+    /// entries and drained documents are cleaned up when each wait ends.
+    #[test]
+    fn completed_queries_leave_no_residue() {
+        let c = small_cluster(Policy::AnyPull);
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        for _ in 0..5 {
+            c.run(&q).unwrap();
+        }
+        assert_eq!(c.board_backlog(), 0);
+        assert_eq!(c.board.stats().done, 0, "done entries must be removed");
+        assert_eq!(c.pending_docs(), 0);
         c.shutdown();
     }
 
@@ -835,7 +1317,7 @@ mod tests {
             policy: Policy::AnyPull,
             fetch_delay_per_mib: Duration::from_millis(1),
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         };
         let c = Cluster::start(cfg, Backend::compiled());
         c.catalog.register("dy", generate_drellyan(12_000, 57), 2_000);
@@ -863,6 +1345,20 @@ mod tests {
         c.shutdown();
     }
 
+    /// With the partition-ordered final reduction, even float-weighted
+    /// sums are bit-identical between fused and solo execution.
+    #[test]
+    fn final_reduction_is_partition_ordered_bit_exact() {
+        let c = small_cluster(Policy::AnyPull);
+        let q = Query::new(QueryKind::MassPairs, "dy", "muons");
+        let first = c.run(&q).unwrap();
+        for _ in 0..3 {
+            let again = c.run(&q).unwrap();
+            assert_eq!(again.hist, first.hist, "full H1 equality incl. sum/sum2");
+        }
+        c.shutdown();
+    }
+
     #[test]
     fn unknown_dataset_rejected() {
         let c = small_cluster(Policy::AnyPull);
@@ -881,5 +1377,69 @@ mod tests {
         assert_eq!(total_tasks, 10);
         let total_events: u64 = stats.iter().map(|s| s.events_processed).sum();
         assert_eq!(total_events, 20_000);
+    }
+
+    #[test]
+    fn submit_backpressure_sheds_load() {
+        let cfg = ClusterConfig {
+            n_workers: 1,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            max_backlog: 4,
+            ..ClusterConfig::default()
+        };
+        let c = Cluster::start(cfg, Backend::Columnar);
+        c.catalog.register("dy", generate_drellyan(5_000, 58), 500);
+        // 10 partitions > max_backlog 4: rejected at admission, with the
+        // offending backlog in the error.
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        match c.submit(q.clone()) {
+            Err(ClusterError::Overloaded { backlog }) => assert!(backlog > 4),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(c.placement_stats().submits_rejected, 1);
+        // The queries map must not leak the rejected query.
+        assert_eq!(c.queries.read().unwrap().len(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn query_deadline_returns_structured_timeout() {
+        let cfg = ClusterConfig {
+            n_workers: 1,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(30),
+            query_deadline: Duration::from_millis(200),
+            ..ClusterConfig::default()
+        };
+        let c = Cluster::start(cfg, Backend::Columnar);
+        c.catalog.register("dy", generate_drellyan(4_000, 59), 500);
+        // Kill the only worker: the query cannot finish and must time out
+        // with the outstanding subtasks listed — not stall for 600 s.
+        c.kill_worker(0);
+        std::thread::sleep(Duration::from_millis(30));
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        let h = c.submit(q.clone()).unwrap();
+        let qid = h.query_id;
+        match c.wait(&h, &q) {
+            Err(ClusterError::Timeout { query_id, merged, total, outstanding }) => {
+                assert_eq!(query_id, qid);
+                assert_eq!(merged, 0);
+                assert_eq!(total, 8);
+                assert_eq!(outstanding.len(), 8);
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert_eq!(c.placement_stats().query_timeouts, 1);
+        // A joining worker restores service for the next query.
+        let id = c.spawn_worker();
+        assert_eq!(id, 1);
+        let res = c.run(&q).unwrap();
+        assert_eq!(res.partitions, 8);
+        c.shutdown();
     }
 }

@@ -7,6 +7,11 @@
 //! documents for the same subtask (a reclaimed straggler finishing twice)
 //! are deduplicated by key.
 
+//! A query that finishes (or is cancelled / timed out) is `forget`-ten:
+//! its documents are dropped and its id is tombstoned, so a straggling or
+//! speculative worker finishing *after* the waiter left cannot leak a
+//! pending document that nobody will ever drain.
+
 use crate::coord::board::SubtaskId;
 use crate::hist::H1;
 use std::collections::{HashMap, HashSet};
@@ -29,8 +34,12 @@ struct Inner {
     pending: HashMap<SubtaskId, PartialDoc>,
     /// Subtasks ever inserted (duplicate suppression across drains).
     seen: HashSet<SubtaskId>,
+    /// Queries whose waiter has left (completed/cancelled/timed out):
+    /// late documents for them are dropped on arrival.
+    closed: HashSet<u64>,
     inserted: u64,
     duplicates: u64,
+    stale: u64,
 }
 
 pub struct DocStore {
@@ -56,6 +65,10 @@ impl DocStore {
     /// document (late straggler duplicate — dropped).
     pub fn insert(&self, doc: PartialDoc) -> bool {
         let mut g = self.inner.lock().unwrap();
+        if g.closed.contains(&doc.id.query_id) {
+            g.stale += 1;
+            return false;
+        }
         if !g.seen.insert(doc.id.clone()) {
             g.duplicates += 1;
             return false;
@@ -98,12 +111,33 @@ impl DocStore {
         keys.iter().map(|k| g.pending.remove(k).unwrap()).collect()
     }
 
+    /// Close a query: drop its pending/seen state and tombstone the id so
+    /// late documents (straggler or speculative copies finishing after the
+    /// waiter left) are dropped instead of pending forever.
+    pub fn forget(&self, query_id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.pending.retain(|k, _| k.query_id != query_id);
+        g.seen.retain(|k| k.query_id != query_id);
+        g.closed.insert(query_id);
+    }
+
+    /// Documents currently pending (observability: must trend to zero when
+    /// no query is in flight — the leak the soak test guards against).
+    pub fn pending_docs(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
     pub fn inserted(&self) -> u64 {
         self.inner.lock().unwrap().inserted
     }
 
     pub fn duplicates(&self) -> u64 {
         self.inner.lock().unwrap().duplicates
+    }
+
+    /// Documents dropped because their query was already closed.
+    pub fn stale(&self) -> u64 {
+        self.inner.lock().unwrap().stale
     }
 }
 
@@ -163,5 +197,20 @@ mod tests {
         let s = DocStore::new();
         let got = s.drain_wait(9, std::time::Duration::from_millis(10));
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn forget_tombstones_late_documents() {
+        let s = DocStore::new();
+        assert!(s.insert(doc(1, 0)));
+        s.forget(1);
+        assert_eq!(s.pending_docs(), 0, "pending dropped");
+        // A straggler finishing after the waiter left: dropped, not leaked.
+        assert!(!s.insert(doc(1, 1)));
+        assert_eq!(s.stale(), 1);
+        assert_eq!(s.pending_docs(), 0);
+        // Other queries are unaffected.
+        assert!(s.insert(doc(2, 0)));
+        assert_eq!(s.drain(2).len(), 1);
     }
 }

@@ -1,0 +1,108 @@
+//! Worker liveness via heartbeats — the fast failure detector.
+//!
+//! Claim TTLs (the femto-zookeeper ephemeral nodes) already bound how long
+//! a dead worker can wedge a subtask, but the TTL must be generous enough
+//! for legitimate long subtasks, so waiting it out costs seconds. The
+//! heartbeat registry detects death in a few missed beats instead: every
+//! worker stamps its id each scheduling iteration, the query waiter asks
+//! for `dead_workers()` each aggregation round, and the board immediately
+//! reopens a dead worker's claims for the replica affinity owner
+//! (`TaskBoard::reap_dead`). A false positive — a live worker stalled in a
+//! long subtask past the timeout — is safe: its eventual completion is
+//! deduplicated by the document store, so the cost is duplicated work,
+//! never a wrong histogram.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub struct WorkerHealth {
+    beats: Mutex<HashMap<usize, Instant>>,
+    timeout: Duration,
+}
+
+impl WorkerHealth {
+    pub fn new(timeout: Duration) -> WorkerHealth {
+        WorkerHealth {
+            beats: Mutex::new(HashMap::new()),
+            timeout,
+        }
+    }
+
+    /// How long without a beat before a worker counts as dead.
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Record a heartbeat (also registers a brand-new worker).
+    pub fn beat(&self, worker: usize) {
+        self.beats.lock().unwrap().insert(worker, Instant::now());
+    }
+
+    /// Has this worker beaten within the timeout? Unknown workers are not
+    /// alive — registration happens at spawn, so unknown means gone.
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.beats
+            .lock()
+            .unwrap()
+            .get(&worker)
+            .is_some_and(|t| t.elapsed() <= self.timeout)
+    }
+
+    /// Every registered worker whose last beat is older than the timeout.
+    pub fn dead_workers(&self) -> Vec<usize> {
+        let g = self.beats.lock().unwrap();
+        let mut dead: Vec<usize> = g
+            .iter()
+            .filter(|(_, t)| t.elapsed() > self.timeout)
+            .map(|(w, _)| *w)
+            .collect();
+        dead.sort_unstable();
+        dead
+    }
+
+    /// Drop a worker from the registry (clean deregistration at shutdown —
+    /// distinct from death, which leaves a stale beat behind).
+    pub fn forget(&self, worker: usize) {
+        self.beats.lock().unwrap().remove(&worker);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beat_keeps_worker_alive() {
+        let h = WorkerHealth::new(Duration::from_millis(50));
+        assert!(!h.is_alive(0), "never-registered worker is not alive");
+        h.beat(0);
+        assert!(h.is_alive(0));
+        assert!(h.dead_workers().is_empty());
+    }
+
+    #[test]
+    fn missed_beats_mean_death() {
+        let h = WorkerHealth::new(Duration::from_millis(20));
+        h.beat(0);
+        h.beat(1);
+        std::thread::sleep(Duration::from_millis(35));
+        h.beat(1); // worker 1 keeps beating
+        assert_eq!(h.dead_workers(), vec![0]);
+        assert!(!h.is_alive(0));
+        assert!(h.is_alive(1));
+        // Resurrection: a late beat revives the worker (it was only slow).
+        h.beat(0);
+        assert!(h.is_alive(0));
+        assert!(h.dead_workers().is_empty());
+    }
+
+    #[test]
+    fn forget_removes_cleanly() {
+        let h = WorkerHealth::new(Duration::from_millis(5));
+        h.beat(0);
+        h.forget(0);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(h.dead_workers().is_empty(), "deregistered != dead");
+    }
+}

@@ -15,12 +15,15 @@ pub mod board;
 pub mod cache;
 pub mod cluster;
 pub mod docstore;
+pub mod health;
 pub mod scheduler;
 
-pub use board::{Subtask, SubtaskId, TaskBoard};
+pub use board::{ClaimGrant, PlacementCounters, Subtask, SubtaskId, TaskBoard};
 pub use cache::PartitionCache;
 pub use cluster::{
-    Cluster, ClusterConfig, DatasetCatalog, PartitionData, QueryResult, WorkerStats,
+    Cluster, ClusterConfig, ClusterError, DatasetCatalog, PartitionData, PlacementStats,
+    QueryResult, WorkerStats,
 };
 pub use docstore::{DocStore, PartialDoc};
-pub use scheduler::Policy;
+pub use health::WorkerHealth;
+pub use scheduler::{affinity_owners, Policy};

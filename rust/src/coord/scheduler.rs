@@ -9,9 +9,58 @@
 //!   node" strategy: whichever worker is free takes the next subtask).
 //! * `RoundRobinPush` — the classic baseline: the leader statically assigns
 //!   subtasks round-robin at submit time.
+//!
+//! On top of the pull policies sits **partition affinity**: every
+//! (dataset, partition) deterministically maps to `k` preferred workers via
+//! rendezvous (highest-random-weight) hashing — see [`affinity_owners`].
+//! The board gives those owners first dibs during a short grace window, so
+//! repeat queries land on warm caches by design rather than luck, and the
+//! `k - 1` replica owners give every partition a warm-standby failover
+//! target when the primary dies.
 
 use crate::coord::board::Subtask;
 use std::time::Duration;
+
+/// SplitMix64 finalizer — a cheap, well-mixed 64-bit permutation. Used to
+/// turn (partition key ⊕ worker id) into a rendezvous score.
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the dataset name, mixed with the partition index — the
+/// stable identity of one partition across queries and cluster restarts.
+fn partition_key(dataset: &str, partition: usize) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in dataset.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ (partition as u64).wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+/// Rendezvous-hash the `k` affinity owners of a partition out of the live
+/// worker set, best first. Every caller that agrees on `workers` computes
+/// the same owners with no shared state, and when one worker joins or
+/// leaves only the partitions it actually won or loses move — the property
+/// that keeps caches warm through churn (consistent hashing without the
+/// ring). Returns fewer than `k` owners when fewer workers exist.
+pub fn affinity_owners(dataset: &str, partition: usize, workers: &[usize], k: usize) -> Vec<usize> {
+    if workers.is_empty() || k == 0 {
+        return Vec::new();
+    }
+    let pkey = partition_key(dataset, partition);
+    let mut scored: Vec<(u64, usize)> = workers
+        .iter()
+        .map(|&w| (mix64(pkey ^ (w as u64).wrapping_mul(0xd1342543de82ef95)), w))
+        .collect();
+    // Highest score wins; worker id breaks the (astronomically unlikely) tie.
+    scored.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.truncate(k);
+    scored.into_iter().map(|(_, w)| w).collect()
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -47,18 +96,38 @@ impl Policy {
 
     /// Assign `assigned_to` for push policies at advertise time.
     pub fn assign(&self, tasks: &mut [Subtask], n_workers: usize) {
+        let ids: Vec<usize> = (0..n_workers).collect();
+        self.assign_to(tasks, &ids);
+    }
+
+    /// Like [`Policy::assign`], but over an explicit live-worker id list —
+    /// with churn the live ids are not necessarily `0..n`.
+    pub fn assign_to(&self, tasks: &mut [Subtask], workers: &[usize]) {
         if let Policy::RoundRobinPush = self {
+            if workers.is_empty() {
+                return;
+            }
             for (i, t) in tasks.iter_mut().enumerate() {
-                t.assigned_to = Some(i % n_workers);
+                t.assigned_to = Some(workers[i % workers.len()]);
             }
         }
     }
 
+    /// Do subtasks advertised under this policy carry affinity owners?
+    /// Push assignments are fixed at submit, so affinity gating would only
+    /// fight the assignment.
+    pub fn wants_affinity(&self) -> bool {
+        !matches!(self, Policy::RoundRobinPush)
+    }
+
     /// May `worker` take `task` in the first (preferred) round?
     /// `in_cache` reports whether the worker holds the input partition.
+    /// Affinity owners also qualify even when cold: the whole point of the
+    /// deterministic mapping is that the owner warms its own partitions, so
+    /// the *next* query finds them hot.
     pub fn first_round_ok(&self, worker: usize, task: &Subtask, in_cache: bool) -> bool {
         match self {
-            Policy::CacheAwarePull { .. } => in_cache,
+            Policy::CacheAwarePull { .. } => in_cache || task.affinity.contains(&worker),
             Policy::AnyPull => true,
             Policy::RoundRobinPush => task.assigned_to == Some(worker),
         }
@@ -92,6 +161,7 @@ mod tests {
             dataset: "dy".into(),
             assigned_to: None,
             co_queries: Vec::new(),
+            affinity: Vec::new(),
         }
     }
 
@@ -124,5 +194,80 @@ mod tests {
         let t = task(0);
         assert!(Policy::AnyPull.first_round_ok(3, &t, false));
         assert_eq!(Policy::AnyPull.second_round_delay(), Duration::ZERO);
+    }
+
+    #[test]
+    fn affinity_owner_qualifies_for_first_round_cold() {
+        let p = Policy::cache_aware();
+        let mut t = task(0);
+        t.affinity = vec![2, 5];
+        assert!(p.first_round_ok(2, &t, false), "cold owner still preferred");
+        assert!(p.first_round_ok(5, &t, false));
+        assert!(!p.first_round_ok(3, &t, false));
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_distinct() {
+        let workers: Vec<usize> = (0..16).collect();
+        for part in 0..64 {
+            let a = affinity_owners("dy", part, &workers, 2);
+            let b = affinity_owners("dy", part, &workers, 2);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 2);
+            assert_ne!(a[0], a[1], "replica owners must be distinct");
+        }
+        // Different datasets land differently (not all identical maps).
+        let x: Vec<_> = (0..64).map(|p| affinity_owners("dy", p, &workers, 1)).collect();
+        let y: Vec<_> = (0..64).map(|p| affinity_owners("tt", p, &workers, 1)).collect();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn rendezvous_spreads_load() {
+        let workers: Vec<usize> = (0..10).collect();
+        let mut counts = vec![0usize; 10];
+        for part in 0..1000 {
+            counts[affinity_owners("dy", part, &workers, 1)[0]] += 1;
+        }
+        // Expect ~100 per worker; a grossly skewed hash would fail this.
+        assert!(counts.iter().all(|&c| c > 40 && c < 220), "{counts:?}");
+    }
+
+    #[test]
+    fn rendezvous_minimal_disruption_on_leave() {
+        let full: Vec<usize> = (0..12).collect();
+        let without3: Vec<usize> = full.iter().copied().filter(|&w| w != 3).collect();
+        for part in 0..200 {
+            let before = affinity_owners("dy", part, &full, 2);
+            let after = affinity_owners("dy", part, &without3, 2);
+            if !before.contains(&3) {
+                // Worker 3 wasn't an owner: ownership must not move at all.
+                assert_eq!(before, after, "partition {part} moved needlessly");
+            } else {
+                // Exactly the dead owner is replaced; the survivor stays.
+                for w in &before {
+                    if *w != 3 {
+                        assert!(after.contains(w), "survivor evicted at {part}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_workers_than_replicas() {
+        assert_eq!(affinity_owners("dy", 0, &[7], 2), vec![7]);
+        assert!(affinity_owners("dy", 0, &[], 2).is_empty());
+        assert!(affinity_owners("dy", 0, &[1, 2], 0).is_empty());
+    }
+
+    #[test]
+    fn assign_to_uses_live_ids() {
+        let mut tasks: Vec<Subtask> = (0..6).map(task).collect();
+        Policy::RoundRobinPush.assign_to(&mut tasks, &[4, 9]);
+        assert!(tasks.iter().all(|t| t.assigned_to == Some(4) || t.assigned_to == Some(9)));
+        assert!(!Policy::RoundRobinPush.wants_affinity());
+        assert!(Policy::cache_aware().wants_affinity());
+        assert!(Policy::AnyPull.wants_affinity());
     }
 }

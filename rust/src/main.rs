@@ -76,6 +76,20 @@ fn app() -> App {
                 .opt("max-queue-depth", "256", "queued queries before shedding load")
                 .opt("max-conns", "4096", "simultaneous client connections")
                 .opt("executors", "2", "query executor threads")
+                .opt("claim-ttl", "60", "subtask claim TTL in seconds (failover backstop)")
+                .opt("query-deadline", "600", "per-query deadline in seconds")
+                .opt("replication", "2", "affinity owners per partition (0 disables)")
+                .opt(
+                    "heartbeat-timeout-ms",
+                    "1000",
+                    "missed-heartbeat window before a worker counts as dead",
+                )
+                .opt(
+                    "affinity-grace-ms",
+                    "20",
+                    "how long subtasks are reserved for their affinity owners",
+                )
+                .opt("max-backlog", "100000", "board backlog before shedding submits (0 = off)")
                 .req("data", "comma-separated name=path.froot dataset list"),
             CommandSpec::new("client", "send a query to a running server")
                 .opt("addr", "127.0.0.1:8765", "server address")
@@ -301,8 +315,19 @@ fn cmd_serve(m: &Matches) -> Result<(), String> {
             cache_bytes_per_worker: m.usize("cache-mb").map_err(|e| e.to_string())? << 20,
             policy,
             fetch_delay_per_mib: Duration::from_millis(5),
-            claim_ttl: Duration::from_secs(60),
-            straggler: None,
+            claim_ttl: Duration::from_secs(m.u64("claim-ttl").map_err(|e| e.to_string())?),
+            query_deadline: Duration::from_secs(
+                m.u64("query-deadline").map_err(|e| e.to_string())?,
+            ),
+            replication: m.usize("replication").map_err(|e| e.to_string())?,
+            heartbeat_timeout: Duration::from_millis(
+                m.u64("heartbeat-timeout-ms").map_err(|e| e.to_string())?,
+            ),
+            affinity_grace: Duration::from_millis(
+                m.u64("affinity-grace-ms").map_err(|e| e.to_string())?,
+            ),
+            max_backlog: m.usize("max-backlog").map_err(|e| e.to_string())?,
+            ..ClusterConfig::default()
         },
         backend,
     ));
@@ -351,7 +376,10 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
         m.f64("hi").map_err(|e| e.to_string())?,
     );
     let mut client = Client::connect(m.str("addr"))?;
-    let resp = client.query(&query, |done, total| {
+    // Honor the server's structured overload shedding: back off for the
+    // suggested interval (jittered) and resubmit, a few times, before
+    // surfacing the error to the user.
+    let resp = client.query_with_retry(&query, 6, |done, total| {
         eprint!("\r{done}/{total} partitions...");
     })?;
     eprintln!();

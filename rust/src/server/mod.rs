@@ -486,6 +486,10 @@ impl Server {
                     ("cache_misses", Json::num(s.cache_misses as f64)),
                     ("events", Json::num(s.events_processed as f64)),
                     ("busy_s", Json::num(s.busy.as_secs_f64())),
+                    ("affinity_hits", Json::num(s.affinity_hits as f64)),
+                    ("affinity_misses", Json::num(s.affinity_misses as f64)),
+                    ("failovers", Json::num(s.failovers as f64)),
+                    ("speculative_wins", Json::num(s.speculative_wins as f64)),
                 ])
             })
             .collect();
@@ -493,6 +497,7 @@ impl Server {
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("workers", Json::Arr(workers)),
+            ("placement", placement_json(&self.cluster)),
             ("cache_hit_rate", Json::num(self.cluster.total_cache_hit_rate())),
             ("result_cache_hits", Json::num(rc_hits as f64)),
             ("result_cache_misses", Json::num(rc_misses as f64)),
@@ -700,6 +705,13 @@ fn run_jobs(ctx: &ExecCtx, jobs: Vec<Job>) {
                     ctx.outbox
                         .push(j.client, &result_json(&res, j.enqueued.elapsed(), false, timing));
                 }
+                // Cluster-level admission control (`max_backlog`) surfaces
+                // as the same structured shed as a full fair queue, so the
+                // client's overload retry covers both layers.
+                Err(e) if e.starts_with("overloaded") => {
+                    let retry = retry_after_ms(ctx.queue.depth().max(1), 1);
+                    ctx.outbox.push(j.client, &overloaded_json(retry));
+                }
                 Err(e) => ctx.outbox.push(j.client, &err_json(&e)),
             }
             ctx.queue.complete(j.client);
@@ -892,6 +904,25 @@ fn data_skipping_json(
     ])
 }
 
+/// The `stats` op's `placement` block: cluster-lifetime scheduling and
+/// failure-recovery counters (affinity failovers, speculation, timeouts,
+/// exactly-once dedup) — the scale-out health dashboard.
+fn placement_json(cluster: &Cluster) -> Json {
+    let p = cluster.placement_stats();
+    Json::obj(vec![
+        ("failovers", Json::num(p.failovers as f64)),
+        ("speculative_reopens", Json::num(p.speculative_reopens as f64)),
+        ("speculative_wins", Json::num(p.speculative_wins as f64)),
+        ("query_timeouts", Json::num(p.query_timeouts as f64)),
+        ("submits_rejected", Json::num(p.submits_rejected as f64)),
+        ("duplicate_docs", Json::num(p.duplicate_docs as f64)),
+        ("stale_docs", Json::num(p.stale_docs as f64)),
+        ("live_workers", Json::num(cluster.n_workers() as f64)),
+        ("board_backlog", Json::num(cluster.board_backlog() as f64)),
+        ("pending_docs", Json::num(cluster.pending_docs() as f64)),
+    ])
+}
+
 fn err_json(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
 }
@@ -979,11 +1010,58 @@ impl Client {
         }
     }
 
+    /// Like [`Client::query`], but honors the server's structured
+    /// `{"error":"overloaded","retry_after_ms":..}` shedding response:
+    /// sleeps the suggested interval (jittered, capped) and resubmits, up
+    /// to `max_attempts`. Any other response — success or error — returns
+    /// immediately.
+    pub fn query_with_retry<F: FnMut(usize, usize)>(
+        &mut self,
+        q: &Query,
+        max_attempts: u32,
+        mut on_progress: F,
+    ) -> Result<Json, String> {
+        let mut attempt = 0u32;
+        loop {
+            let resp = self.query(q, &mut on_progress)?;
+            let overloaded = resp
+                .get("error")
+                .and_then(|e| e.as_str())
+                .is_some_and(|e| e == "overloaded");
+            if !overloaded || attempt + 1 >= max_attempts {
+                return Ok(resp);
+            }
+            let suggested = resp
+                .get("retry_after_ms")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(100) as u64;
+            let jitter = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos() as u64)
+                .unwrap_or(0);
+            std::thread::sleep(Duration::from_millis(retry_backoff_ms(
+                suggested, attempt, jitter,
+            )));
+            attempt += 1;
+        }
+    }
+
     pub fn shutdown_server(&mut self) -> Result<(), String> {
         self.writer
             .write_all(b"{\"op\":\"shutdown\"}\n")
             .map_err(|e| e.to_string())
     }
+}
+
+/// Client-side backoff for overload retries: the server's suggestion,
+/// doubled per attempt, plus up to 25% deterministic-from-`jitter` spread
+/// (so a burst of shed clients does not resubmit in lockstep), capped at
+/// 2 s per sleep.
+fn retry_backoff_ms(suggested_ms: u64, attempt: u32, jitter: u64) -> u64 {
+    let base = suggested_ms.max(10).saturating_mul(1u64 << attempt.min(6));
+    let spread = base / 4;
+    let j = if spread == 0 { 0 } else { jitter % (spread + 1) };
+    (base + j).min(2_000)
 }
 
 #[cfg(test)]
@@ -1002,7 +1080,7 @@ mod tests {
                 policy: Policy::AnyPull,
                 fetch_delay_per_mib: std::time::Duration::ZERO,
                 claim_ttl: std::time::Duration::from_secs(10),
-                straggler: None,
+                ..ClusterConfig::default()
             },
             backend,
         ));
@@ -1174,5 +1252,47 @@ mod tests {
         assert!(serving.get("scans_saved").is_some());
         client.shutdown_server().unwrap();
         let _ = t.join().unwrap();
+    }
+
+    /// The `stats` op carries the `placement` block (failure-recovery
+    /// telemetry) and per-worker affinity counters.
+    #[test]
+    fn stats_reports_placement_block() {
+        let cluster = test_cluster(Backend::compiled(), 3_000, 96);
+        let (mut client, t) = start_server(cluster);
+        let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+        client.query(&q, |_, _| {}).unwrap();
+        let req = Json::obj(vec![("op", Json::str("stats"))]);
+        let stats = client.request(&req).unwrap();
+        let placement = stats.get("placement").expect("placement block");
+        assert_eq!(placement.get("failovers").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(placement.get("query_timeouts").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(placement.get("live_workers").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(placement.get("board_backlog").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(placement.get("pending_docs").and_then(|v| v.as_u64()), Some(0));
+        let workers = stats.get("workers").and_then(|w| w.as_arr()).unwrap();
+        for w in workers {
+            assert!(w.get("affinity_hits").is_some());
+            assert!(w.get("failovers").is_some());
+            assert!(w.get("speculative_wins").is_some());
+        }
+        client.shutdown_server().unwrap();
+        let _ = t.join().unwrap();
+    }
+
+    /// Overload backoff: server suggestion honored, doubled per attempt,
+    /// jitter-spread, hard-capped at 2 s.
+    #[test]
+    fn retry_backoff_grows_and_caps() {
+        assert_eq!(retry_backoff_ms(100, 0, 0), 100);
+        assert_eq!(retry_backoff_ms(100, 1, 0), 200);
+        assert_eq!(retry_backoff_ms(100, 0, 25), 125); // max jitter = base/4
+        assert!(retry_backoff_ms(100, 10, 0) <= 2_000, "capped");
+        assert!(retry_backoff_ms(0, 0, 0) >= 10, "floor under suggestion 0");
+        for attempt in 0..8 {
+            let lo = retry_backoff_ms(50, attempt, 0);
+            let hi = retry_backoff_ms(50, attempt, u64::MAX);
+            assert!(lo <= hi && hi <= 2_000);
+        }
     }
 }

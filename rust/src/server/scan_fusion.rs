@@ -75,12 +75,14 @@ where
         let res = cluster.submit(q.clone()).and_then(|h| {
             cluster.wait_with_progress(&h, q, |done, total, _| progress(0, done, total))
         });
-        return vec![res.map(to_cached)];
+        return vec![res.map(to_cached).map_err(String::from)];
     }
     let queries: Vec<Query> = group.iter().map(|j| j.query.clone()).collect();
     let handles = match cluster.submit_fused(&queries) {
         Ok(h) => h,
-        Err(e) => return group.iter().map(|_| Err(e.clone())).collect(),
+        Err(e) => {
+            return group.iter().map(|_| Err(String::from(e.clone()))).collect();
+        }
     };
     let solo_scans: u64 = handles.iter().map(|h| h.partitions as u64).sum();
     let shared_scans = handles.iter().map(|h| h.partitions as u64).max().unwrap_or(0);
@@ -100,6 +102,7 @@ where
                     true
                 })
                 .map(to_cached)
+                .map_err(String::from)
         })
         .collect()
 }
@@ -159,7 +162,7 @@ mod tests {
                 policy: Policy::AnyPull,
                 fetch_delay_per_mib: Duration::ZERO,
                 claim_ttl: Duration::from_secs(10),
-                straggler: None,
+                ..ClusterConfig::default()
             },
             Backend::compiled(),
         );

@@ -135,7 +135,7 @@ fn cluster_on_compiled_tape_matches_local() {
             policy: Policy::cache_aware(),
             fetch_delay_per_mib: Duration::ZERO,
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         Backend::compiled(),
     );
@@ -178,7 +178,7 @@ fn compile_cache_is_shared_across_workers() {
             policy: Policy::AnyPull,
             fetch_delay_per_mib: Duration::ZERO,
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         Backend::CompiledTape(be.clone()),
     );

@@ -190,7 +190,7 @@ fn prop_cluster_equals_local() {
                     policy,
                     fetch_delay_per_mib: Duration::ZERO,
                     claim_ttl: Duration::from_secs(10),
-                    straggler: None,
+                    ..ClusterConfig::default()
                 },
                 Backend::Columnar,
             );

@@ -25,7 +25,7 @@ fn cluster(events: usize, seed: u64, part_events: usize) -> Arc<Cluster> {
             policy: Policy::AnyPull,
             fetch_delay_per_mib: Duration::ZERO,
             claim_ttl: Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         Backend::compiled(),
     ));

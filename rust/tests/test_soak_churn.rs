@@ -1,0 +1,285 @@
+//! Churn soak: the scale-out scheduler under a seeded random failure
+//! schedule — workers killed, joined, straggled and crashed mid-claim
+//! while solo and fused queries stream through — with **bit-exact**
+//! results asserted against an unfailed reference after every query.
+//!
+//! The schedule is driven by a pinned PCG32 seed (`HEPQ_SOAK_SEED`
+//! overrides it), so a CI failure replays exactly. Two tiers:
+//!
+//! * [`soak_moderate_churn`] — always on: 16 workers, 40 partitions,
+//!   8 churn rounds (a few seconds).
+//! * [`soak_100_workers_heavy_churn`] — `#[ignore]`d from plain
+//!   `cargo test`; CI's `soak` job runs it explicitly: 100+ workers,
+//!   heavier kill/join/straggle mix.
+//!
+//! Invariants checked throughout: every histogram equals the clean-run
+//! reference (full `H1` equality including `sum`/`sum2` — the
+//! partition-ordered reduction guarantee), and at the end no partial
+//! documents or board entries leak, the cluster still answers, and
+//! placement telemetry shows affinity actually steered claims.
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::hist::H1;
+use std::collections::HashMap;
+use std::time::Duration;
+
+// ------------------------------------------------------------------ rng
+
+/// PCG32 (Melissa O'Neill's minimal variant): tiny, seedable, and good
+/// enough to generate adversarial schedules reproducibly without deps.
+struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    fn new(seed: u64) -> Pcg32 {
+        let mut r = Pcg32 { state: 0, inc: (seed << 1) | 1 };
+        r.next_u32();
+        r.state = r.state.wrapping_add(seed);
+        r.next_u32();
+        r
+    }
+
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform in `0..n` (modulo bias is irrelevant for schedule-mixing).
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u32() as usize) % n.max(1)
+    }
+
+    fn chance(&mut self, percent: u32) -> bool {
+        self.next_u32() % 100 < percent
+    }
+}
+
+fn soak_seed() -> u64 {
+    std::env::var("HEPQ_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+// ---------------------------------------------------------------- harness
+
+const KINDS: [QueryKind; 4] = [
+    QueryKind::MaxPt,
+    QueryKind::MassPairs,
+    QueryKind::FlatHist,
+    QueryKind::EtaBest,
+];
+
+struct SoakParams {
+    n_workers: usize,
+    events: usize,
+    part_events: usize,
+    rounds: usize,
+    /// Never kill below this many live workers.
+    min_live: usize,
+    /// Cap on join churn (total worker slots ever created).
+    max_spawns: usize,
+}
+
+fn datasets() -> Vec<(&'static str, u64)> {
+    vec![("dy_a", 4101), ("dy_b", 4102)]
+}
+
+fn churn_config(n_workers: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_workers,
+        cache_bytes_per_worker: 32 << 20,
+        policy: Policy::cache_aware(),
+        fetch_delay_per_mib: Duration::from_millis(5),
+        claim_ttl: Duration::from_secs(30),
+        heartbeat_timeout: Duration::from_millis(150),
+        affinity_grace: Duration::from_millis(10),
+        query_deadline: Duration::from_secs(60),
+        speculation_factor: 3.0,
+        speculation_min: Duration::from_millis(100),
+        ..ClusterConfig::default()
+    }
+}
+
+/// Clean-run reference histograms for every (dataset, kind) pair, computed
+/// on an unfailed two-worker cluster over identical registrations. The
+/// partition-ordered reduction makes these bit-equal to any churn run.
+fn references(p: &SoakParams) -> HashMap<(String, &'static str), H1> {
+    let c = Cluster::start(
+        ClusterConfig {
+            fetch_delay_per_mib: Duration::ZERO,
+            ..churn_config(2)
+        },
+        Backend::Columnar,
+    );
+    for (name, seed) in datasets() {
+        c.catalog.register(name, generate_drellyan(p.events, seed), p.part_events);
+    }
+    let mut refs = HashMap::new();
+    for (name, _) in datasets() {
+        for kind in KINDS {
+            let q = Query::new(kind, name, "muons");
+            let hist = c.run(&q).expect("reference run").hist;
+            refs.insert((name.to_string(), kind.artifact()), hist);
+        }
+    }
+    c.shutdown();
+    refs
+}
+
+fn run_soak(p: SoakParams) {
+    let seed = soak_seed();
+    let mut rng = Pcg32::new(seed);
+    let refs = references(&p);
+    let c = Cluster::start(churn_config(p.n_workers), Backend::Columnar);
+    for (name, dseed) in datasets() {
+        c.catalog.register(name, generate_drellyan(p.events, dseed), p.part_events);
+    }
+    let mut spawned = p.n_workers;
+    let mut queries_checked = 0usize;
+    let mut kills = 0usize;
+
+    for round in 0..p.rounds {
+        // Pre-submit churn: join a worker, straggle one, or clear load.
+        let live = c.live_worker_ids();
+        match rng.below(4) {
+            0 if spawned < p.max_spawns => {
+                c.spawn_worker();
+                spawned += 1;
+            }
+            1 => {
+                let w = live[rng.below(live.len())];
+                c.set_handicap(w, Duration::from_millis(50 + rng.below(150) as u64));
+            }
+            2 => {
+                let w = live[rng.below(live.len())];
+                c.set_handicap(w, Duration::ZERO);
+            }
+            _ => {}
+        }
+
+        // Submit: a fused group or a burst of solo queries, one dataset.
+        let (ds, _) = datasets()[rng.below(datasets().len())];
+        let n_queries = 1 + rng.below(3);
+        let queries: Vec<Query> = (0..n_queries)
+            .map(|_| Query::new(KINDS[rng.below(KINDS.len())], ds, "muons"))
+            .collect();
+        let fused = n_queries > 1 && rng.chance(50);
+        let handles = if fused {
+            c.submit_fused(&queries).expect("fused submit")
+        } else {
+            queries
+                .iter()
+                .map(|q| c.submit(q.clone()).expect("submit"))
+                .collect()
+        };
+
+        // Mid-query churn: kill or crash-mid-claim a live worker (keeping
+        // a quorum alive so every query can still finish).
+        let live = c.live_worker_ids();
+        if live.len() > p.min_live {
+            match rng.below(3) {
+                0 => {
+                    let w = live[rng.below(live.len())];
+                    c.kill_worker(w);
+                    kills += 1;
+                }
+                1 => {
+                    let w = live[rng.below(live.len())];
+                    c.inject_abandon(w, 1);
+                    kills += 1;
+                }
+                _ => {}
+            }
+        }
+
+        for (h, q) in handles.iter().zip(&queries) {
+            let res = c.wait(h, q).expect("query under churn");
+            let want = &refs[&(q.dataset.clone(), q.kind.artifact())];
+            assert_eq!(
+                &res.hist, want,
+                "round {round} (seed {seed:#x}): {} on {} diverged from the \
+                 unfailed reference",
+                q.kind.artifact(),
+                q.dataset
+            );
+            queries_checked += 1;
+        }
+
+        // Between rounds the cluster must be fully quiescent: every
+        // document drained or tombstoned, every board entry cleaned up.
+        assert_eq!(c.board_backlog(), 0, "round {round}: board leaked entries");
+        assert_eq!(c.pending_docs(), 0, "round {round}: documents leaked");
+    }
+
+    // Stable phase: no churn, repeat one query; placement telemetry must
+    // show the affinity design working (owners claiming their partitions)
+    // and the caches actually being reused.
+    for w in c.live_worker_ids() {
+        c.set_handicap(w, Duration::ZERO);
+    }
+    let (ds, _) = datasets()[0];
+    let q = Query::new(QueryKind::MaxPt, ds, "muons");
+    for _ in 0..3 {
+        let res = c.run(&q).expect("stable-phase query");
+        assert_eq!(&res.hist, &refs[&(ds.to_string(), q.kind.artifact())]);
+    }
+    let stats = c.stats();
+    let affinity_hits: u64 = stats.iter().map(|s| s.affinity_hits).sum();
+    assert!(affinity_hits > 0, "affinity never steered a single claim");
+    assert!(
+        c.total_cache_hit_rate() > 0.2,
+        "cache hit rate {:.2} — placement is not reusing warm workers",
+        c.total_cache_hit_rate()
+    );
+    let placement = c.placement_stats();
+    assert_eq!(placement.query_timeouts, 0, "soak queries must never time out");
+    // Kills that land while the victim holds a claim surface as failovers;
+    // kills of idle workers don't — so recovery counters are reported, not
+    // asserted (the bit-exactness above is the real guarantee).
+    println!(
+        "soak ok (seed {seed:#x}): {queries_checked} queries bit-exact under churn; \
+         {kills} kills, {} live of {spawned} spawned; failovers {} specs {} dups {}",
+        c.live_worker_ids().len(),
+        placement.failovers,
+        placement.speculative_reopens,
+        placement.duplicate_docs,
+    );
+    c.shutdown();
+}
+
+/// Always-on tier: moderate churn, a few seconds of wall clock.
+#[test]
+fn soak_moderate_churn() {
+    run_soak(SoakParams {
+        n_workers: 16,
+        events: 40_000,
+        part_events: 1_000,
+        rounds: 8,
+        min_live: 4,
+        max_spawns: 24,
+    });
+}
+
+/// The 100+-worker churn soak the ISSUE demands. Ignored under plain
+/// `cargo test` (tens of seconds); CI's `soak` job runs it with
+/// `-- --ignored` and a pinned `HEPQ_SOAK_SEED`.
+#[test]
+#[ignore = "heavy: run explicitly (CI soak job) with --ignored"]
+fn soak_100_workers_heavy_churn() {
+    run_soak(SoakParams {
+        n_workers: 100,
+        events: 120_000,
+        part_events: 1_000,
+        rounds: 25,
+        min_live: 8,
+        max_spawns: 140,
+    });
+}

@@ -268,7 +268,7 @@ fn pruning_cluster(events: usize, seed: u64, part_events: usize) -> (Cluster, Co
             policy: Policy::AnyPull,
             fetch_delay_per_mib: std::time::Duration::ZERO,
             claim_ttl: std::time::Duration::from_secs(10),
-            straggler: None,
+            ..ClusterConfig::default()
         },
         Backend::compiled(),
     );
