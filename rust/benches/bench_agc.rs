@@ -1,0 +1,429 @@
+//! AGC-style many-histogram workload: one tt̄ analysis pass filling 21
+//! histograms (2-D maps, profiles and two 4-point systematic-variation
+//! batches included, plus the cross-list muon×jet pair spectrum) through
+//! every execution tier:
+//!
+//!   interp    — object interpreter over materialized events (baseline)
+//!   flat      — transformed flat-loop walker
+//!   chunked   — compiled closures + chunked batch kernels
+//!   parallel  — morsel-parallel chunked execution, all cores
+//!   cluster   — partitioned cluster run (compiled backend)
+//!   server    — concurrent TCP clients through the fused shared scan
+//!
+//! Correctness is asserted outside the timed sections: the sequential
+//! tiers must agree bit-for-bit (histograms and aux sinks), the split
+//! tiers must agree on every bin content, weight count and overflow
+//! pocket (weights are dyadic, so those sums are exactly associative; the
+//! running Σw·x moments legitimately reassociate across morsel/partition
+//! boundaries), a repeated cluster run must be bit-identical to the first
+//! (deterministic partition-ordered merge), and every server response
+//! must be bit-identical to its solo cluster run.
+//!
+//! `HEPQ_BENCH_EVENTS` overrides the event count (CI smoke uses a small
+//! one). Rates land in `bench_out/BENCH_agc.json`.
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_ttbar;
+use hepq::engine::{Backend, Query};
+use hepq::hist::{Hist, Sink, H1};
+use hepq::queryir::{self, flat, interp, lower, parse, ParallelCfg};
+use hepq::server::{Client, Server, ServerConfig};
+use hepq::util::json::Json;
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// One member of the query group: source, name, x binning, y binning.
+struct Spec {
+    name: &'static str,
+    src: &'static str,
+    x: (usize, f64, f64),
+    y: (usize, f64, f64),
+}
+
+/// The tt̄ group: 6 queries, 21 histograms (6 primary + 15 aux), two
+/// 4-point variation batches, one cross-list pair spectrum.
+fn group() -> Vec<Spec> {
+    vec![
+        Spec {
+            name: "jet_kin",
+            src: "\
+for event in dataset:
+    for jet in event.jets:
+        if jet.pt > 25:
+            fill(jet.pt)
+            fill2(jet.pt, jet.eta)
+            profile(jet.pt, jet.mass)
+",
+            x: (96, 0.0, 384.0),
+            y: (48, -4.8, 4.8),
+        },
+        Spec {
+            name: "muon_kin_vars",
+            src: "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 20:
+            fill(muon.pt)
+            fill2(muon.pt, muon.phi)
+            fill_vars(muon.pt, 0.5, 0.75, 1.0, 1.25)
+",
+            x: (64, 0.0, 128.0),
+            y: (48, -3.2, 3.2),
+        },
+        Spec {
+            name: "muon_jet_pairs",
+            src: "\
+for event in dataset:
+    nm = len(event.muons)
+    nj = len(event.jets)
+    for i in range(nm):
+        for j in range(nj):
+            m = event.muons[i]
+            jet = event.jets[j]
+            fill(m.pt + jet.pt)
+            fill2(m.pt + jet.pt, jet.pt)
+",
+            x: (64, 0.0, 512.0),
+            y: (32, 0.0, 384.0),
+        },
+        Spec {
+            name: "last_muon_gather",
+            src: "\
+for event in dataset:
+    n = len(event.muons)
+    if n > 0:
+        fill(event.muons[n - 1].pt)
+        fill2(event.muons[0].pt, event.muons[n - 1].pt)
+        profile(event.muons[0].pt, event.muons[n - 1].pt)
+",
+            x: (64, 0.0, 128.0),
+            y: (32, 0.0, 128.0),
+        },
+        Spec {
+            name: "ht_vars",
+            src: "\
+for event in dataset:
+    ht = 0.0
+    nj = 0
+    for jet in event.jets:
+        if jet.pt > 30:
+            ht = ht + jet.pt
+            nj = nj + 1
+    if nj > 0:
+        fill(ht)
+        profile(ht, nj)
+        fill_vars(ht, 0.5, 0.75, 1.0, 1.25)
+",
+            x: (80, 0.0, 1200.0),
+            y: (16, 0.0, 16.0),
+        },
+        Spec {
+            name: "dimuon_mass",
+            src: "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            m1 = event.muons[i]
+            m2 = event.muons[j]
+            fill(sqrt(2 * m1.pt * m2.pt * (cosh(m1.eta - m2.eta) - cos(m1.phi - m2.phi))))
+",
+            x: (64, 0.0, 128.0),
+            y: (16, 0.0, 1.0),
+        },
+    ]
+}
+
+/// A full group result: one (primary, aux sinks) pair per query.
+type GroupResult = Vec<(H1, Vec<Sink>)>;
+
+/// Exactly-associative parts of an H1: bin contents, weight count and
+/// the under/overflow pockets (dyadic-weight sums).
+fn assert_stable_h1(a: &H1, b: &H1, what: &str) {
+    assert_eq!(a.bins, b.bins, "{what}: bins");
+    assert_eq!(a.count, b.count, "{what}: count");
+    assert_eq!(a.underflow, b.underflow, "{what}: underflow");
+    assert_eq!(a.overflow, b.overflow, "{what}: overflow");
+}
+
+fn assert_stable_aux(a: &[Sink], b: &[Sink], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: sink count");
+    for (sa, sb) in a.iter().zip(b) {
+        assert_eq!(sa.label, sb.label, "{what}: labels");
+        let w = format!("{what}/{}", sa.label);
+        match (&sa.hist, &sb.hist) {
+            (Hist::H1(x), Hist::H1(y)) => assert_stable_h1(x, y, &w),
+            (Hist::H2(x), Hist::H2(y)) => {
+                assert_eq!(x.bins, y.bins, "{w}: bins");
+                assert_eq!(x.out, y.out, "{w}: out");
+                assert_eq!(x.count, y.count, "{w}: count");
+            }
+            (Hist::Profile(x), Hist::Profile(y)) => {
+                assert_eq!(x.count, y.count, "{w}: counts");
+                assert_eq!(x.under, y.under, "{w}: under");
+                assert_eq!(x.over, y.over, "{w}: over");
+                assert_eq!(x.total, y.total, "{w}: total");
+            }
+            _ => panic!("{w}: sink shape mismatch"),
+        }
+    }
+}
+
+fn assert_stable_group(a: &GroupResult, b: &GroupResult, what: &str) {
+    for (i, ((ha, aa), (hb, ab))) in a.iter().zip(b).enumerate() {
+        assert_stable_h1(ha, hb, &format!("{what} q{i}"));
+        assert_stable_aux(aa, ab, &format!("{what} q{i}"));
+    }
+}
+
+fn assert_bitident_group(a: &GroupResult, b: &GroupResult, what: &str) {
+    for (i, ((ha, aa), (hb, ab))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ha, hb, "{what} q{i}: primary");
+        assert_eq!(aa, ab, "{what} q{i}: aux");
+    }
+}
+
+struct TierResult {
+    tier: &'static str,
+    wall: Duration,
+    events_per_s: f64,
+}
+
+fn tier(name: &'static str, events: usize, n_queries: usize, wall: Duration) -> TierResult {
+    let rate = (events * n_queries) as f64 / wall.as_secs_f64();
+    eprintln!("  {name:<9} {:.3}s  ({:.2} Mevt/s aggregate)", wall.as_secs_f64(), rate / 1e6);
+    TierResult { tier: name, wall, events_per_s: rate }
+}
+
+fn main() {
+    let events: usize = std::env::var("HEPQ_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40_000);
+    let n_attrs = 8;
+    let seed = 4242;
+    let part_events = (events / 8).max(500);
+    let specs = group();
+    let cs = generate_ttbar(events, n_attrs, seed);
+
+    // Compile every member once, up front (compilation is not timed).
+    let parsed: Vec<_> = specs.iter().map(|s| parse(s.src).expect(s.name)).collect();
+    let progs: Vec<_> = specs
+        .iter()
+        .map(|s| queryir::compile(s.src, &cs.schema).expect(s.name))
+        .collect();
+    let compiled: Vec<_> = progs.iter().map(|p| lower::lower(p).expect("lower")).collect();
+
+    // The workload shape the issue pins: ≥20 histograms, ≥4 weight
+    // variations, at least one cross-list pair spectrum (pair-lane kernel).
+    let n_hists: usize = specs
+        .iter()
+        .zip(&compiled)
+        .map(|(s, cp)| 1 + cp.make_aux(s.x, s.y).len())
+        .sum();
+    let max_vars = specs
+        .iter()
+        .zip(&compiled)
+        .map(|(s, cp)| {
+            cp.make_aux(s.x, s.y).iter().filter(|s| s.label.starts_with("var#")).count()
+        })
+        .max()
+        .unwrap();
+    assert!(n_hists >= 20, "group fills only {n_hists} histograms");
+    assert!(max_vars >= 4, "largest variation batch is {max_vars}");
+    assert!(
+        compiled[2].kernel_shape() == Some(queryir::KernelShape::Pairs),
+        "cross-list pair query should take the pair-lane kernel"
+    );
+    eprintln!(
+        "agc: {events} tt̄ events, {} queries, {n_hists} histograms, {max_vars} variations",
+        specs.len()
+    );
+
+    let run_seq = |f: &dyn Fn(usize, &mut H1, &mut [Sink])| -> (GroupResult, Duration) {
+        let mut out = Vec::new();
+        let t0 = Instant::now();
+        for (i, s) in specs.iter().enumerate() {
+            let mut h = H1::new(s.x.0, s.x.1, s.x.2);
+            let mut aux = compiled[i].make_aux(s.x, s.y);
+            f(i, &mut h, &mut aux);
+            out.push((h, aux));
+        }
+        (out, t0.elapsed())
+    };
+
+    let mut tiers = Vec::new();
+
+    // Tier 1: object interpreter (the transformation baseline).
+    let (r_interp, wall) =
+        run_seq(&|i, h, aux| interp::run_group(&parsed[i], &cs, h, aux).unwrap());
+    tiers.push(tier("interp", events, specs.len(), wall));
+
+    // Tier 2: transformed flat-loop walker — the bit-identity reference.
+    let (r_flat, wall) = run_seq(&|i, h, aux| flat::run_group(&progs[i], &cs, h, aux).unwrap());
+    tiers.push(tier("flat", events, specs.len(), wall));
+    assert_bitident_group(&r_interp, &r_flat, "interp vs flat");
+
+    // Tier 3: compiled closures + chunked kernels (sequential).
+    let (r_chunk, wall) =
+        run_seq(&|i, h, aux| lower::run_group(&compiled[i], &cs, h, aux).unwrap());
+    tiers.push(tier("chunked", events, specs.len(), wall));
+    assert_bitident_group(&r_chunk, &r_flat, "chunked vs flat");
+
+    // Tier 4: morsel-parallel on all cores.
+    let (r_par, wall) = run_seq(&|i, h, aux| {
+        lower::run_parallel_group(&compiled[i], &cs, h, aux, ParallelCfg::auto()).unwrap()
+    });
+    tiers.push(tier("parallel", events, specs.len(), wall));
+    assert_stable_group(&r_par, &r_flat, "parallel vs flat");
+
+    // Tier 5: partitioned cluster, compiled backend.
+    let cluster = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(30),
+            ..ClusterConfig::default()
+        },
+        Backend::compiled(),
+    ));
+    cluster.catalog.register("ttbar", generate_ttbar(events, n_attrs, seed), part_events);
+    let queries: Vec<Query> = specs
+        .iter()
+        .map(|s| {
+            Query::from_source(s.src, "ttbar")
+                .with_binning(s.x.0, s.x.1, s.x.2)
+                .with_y_binning(s.y.0, s.y.1, s.y.2)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let r_cluster: GroupResult = queries
+        .iter()
+        .map(|q| {
+            let r = cluster.run(q).expect("cluster run");
+            (r.hist, r.aux)
+        })
+        .collect();
+    tiers.push(tier("cluster", events, specs.len(), t0.elapsed()));
+    assert_stable_group(&r_cluster, &r_flat, "cluster vs flat");
+    // Determinism: a repeat run must be bit-identical (partition-ordered
+    // merge), not merely equal on the associative parts.
+    let r_again: GroupResult = queries
+        .iter()
+        .map(|q| {
+            let r = cluster.run(q).expect("cluster rerun");
+            (r.hist, r.aux)
+        })
+        .collect();
+    assert_bitident_group(&r_again, &r_cluster, "cluster repeat");
+
+    // Tier 6: concurrent TCP clients through the fused shared scan. One
+    // executor and a wide batch window so the barrier-released queries
+    // co-arrive and fuse into one scan per partition.
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = Arc::new(Server::with_config(
+        cluster.clone(),
+        ServerConfig { batch_window_ms: 40, max_queue_depth: 256, max_conns: 64, executors: 1 },
+    ));
+    let s2 = server.clone();
+    let a2 = addr.clone();
+    let serve_thread = std::thread::spawn(move || s2.serve(&a2).unwrap());
+    for _ in 0..300 {
+        if Client::connect(&addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let barrier = Arc::new(Barrier::new(queries.len() + 1));
+    let handles: Vec<_> = queries
+        .iter()
+        .map(|q| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut conn = Client::connect(&addr).unwrap();
+                barrier.wait();
+                conn.query(&q, |_, _| {}).unwrap()
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    let responses: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    tiers.push(tier("server", events, specs.len(), t0.elapsed()));
+
+    // Every response bit-identical to its solo cluster run — fusion only
+    // changes when columns are read, never what is computed from them.
+    let mut fused_with = 0;
+    for (resp, (hist, aux)) in responses.iter().zip(&r_cluster) {
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let h = H1::from_json(resp.get("hist").unwrap()).unwrap();
+        assert_eq!(&h, hist, "server vs cluster: primary");
+        let wire_aux: Vec<Sink> = match resp.get("hists") {
+            Some(j) => j
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| Sink::from_json(s).unwrap())
+                .collect(),
+            None => Vec::new(),
+        };
+        assert_eq!(&wire_aux, aux, "server vs cluster: aux");
+        fused_with += resp.get("fused_with").and_then(|v| v.as_u64()).unwrap_or(0);
+    }
+    let mut stats_conn = Client::connect(&addr).unwrap();
+    let stats = stats_conn.request(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    let scans_saved = stats
+        .get("serving")
+        .and_then(|s| s.get("scans_saved"))
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0);
+    eprintln!("  server fusion: fused_with total {fused_with}, scans saved {scans_saved}");
+    server.shutdown_flag().store(true, Ordering::Relaxed);
+    serve_thread.join().unwrap();
+    cluster.shutdown();
+
+    // Report.
+    println!("\n## AGC group — {} queries, {n_hists} histograms, {events} events\n", specs.len());
+    println!("| tier | wall (s) | aggregate rate (Mevt/s) |");
+    println!("|---|---:|---:|");
+    for t in &tiers {
+        println!("| {} | {:.3} | {:.2} |", t.tier, t.wall.as_secs_f64(), t.events_per_s / 1e6);
+    }
+
+    std::fs::create_dir_all("bench_out").ok();
+    let j = Json::obj(vec![
+        ("events", Json::num(events as f64)),
+        ("queries", Json::num(specs.len() as f64)),
+        ("histograms", Json::num(n_hists as f64)),
+        ("variations", Json::num(max_vars as f64)),
+        ("fused_with", Json::num(fused_with as f64)),
+        ("scans_saved", Json::num(scans_saved as f64)),
+        (
+            "tiers",
+            Json::Arr(
+                tiers
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("tier", Json::str(t.tier)),
+                            ("wall_s", Json::num(t.wall.as_secs_f64())),
+                            ("events_per_s", Json::num(t.events_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("bench_out/BENCH_agc.json", j.to_string()).ok();
+    eprintln!("\nwrote bench_out/BENCH_agc.json");
+}

@@ -8,4 +8,4 @@ pub mod schema;
 
 pub use arrays::{Array, ColumnSet};
 pub use explode::{explode, materialize, materialize_all, Value};
-pub use schema::{muon_event_schema, jet_event_schema, Field, Layout, PrimType, Ty};
+pub use schema::{muon_event_schema, jet_event_schema, ttbar_event_schema, Field, Layout, PrimType, Ty};

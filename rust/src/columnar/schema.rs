@@ -267,6 +267,25 @@ pub fn jet_event_schema(n_attrs: usize) -> Ty {
     }])
 }
 
+/// The AGC-style tt̄ event schema: Table 1's jet list (`n_attrs` branches)
+/// plus a small muon list, so cross-list queries (muon × jet pairs,
+/// lepton-indexed gathers) have two real collections to range over.
+pub fn ttbar_event_schema(n_attrs: usize) -> Ty {
+    let Ty::Record(mut fields) = jet_event_schema(n_attrs) else {
+        unreachable!("jet_event_schema returns a record")
+    };
+    fields.push(Field {
+        name: "muons".to_string(),
+        ty: Ty::List(Box::new(Ty::Record(
+            ["pt", "eta", "phi"]
+                .iter()
+                .map(|name| Field { name: name.to_string(), ty: Ty::Prim(PrimType::F32) })
+                .collect(),
+        ))),
+    });
+    Ty::Record(fields)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -38,7 +38,7 @@ use crate::coord::health::WorkerHealth;
 use crate::coord::scheduler::{affinity_owners, Policy};
 use crate::engine::compiled_exec::source_for;
 use crate::engine::{Backend, Query};
-use crate::hist::H1;
+use crate::hist::{merge_aux, Sink, H1};
 use crate::index::ZoneMap;
 use crate::queryir::{self, predicate, ZoneDecision};
 use std::collections::{BTreeMap, HashMap};
@@ -465,21 +465,26 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
         .iter()
         .map(|(_, q)| H1::new(q.n_bins, q.lo, q.hi))
         .collect();
-    let reps = if members.len() == 1 {
-        // Solo subtask: the ordinary (morsel-parallel) path.
-        vec![ctx.backend.run_indexed(
+    let (auxes, reps) = if members.len() == 1 {
+        // Solo subtask: the ordinary (morsel-parallel) path. The group
+        // entry point also fills any aux sinks (`fill2` / `profile` /
+        // `fill_vars`) the program carries; classic queries get an empty
+        // vector back.
+        let (aux, rep) = ctx.backend.run_group_indexed(
             &members[0].1,
             &part.cs,
             Some(part.zones.as_ref()),
             &mut hists[0],
-        )?]
+        )?;
+        (vec![aux], vec![rep])
     } else {
-        // Fused subtask: every member's kernel streams through the same
-        // scan while the partition is hot (`Backend::run_fused`); each
-        // member's result is bit-identical to a solo run.
+        // Fused subtask: every member's kernels stream through the same
+        // scan while the partition is hot (`Backend::run_fused_group`);
+        // each member's result — primary and aux — is bit-identical to a
+        // solo run.
         let refs: Vec<&Query> = members.iter().map(|(_, q)| q).collect();
         ctx.backend
-            .run_fused(&refs, &part.cs, Some(part.zones.as_ref()), &mut hists)?
+            .run_fused_group(&refs, &part.cs, Some(part.zones.as_ref()), &mut hists)?
     };
     // Simulated background load: slept while *holding* the claim, so a
     // handicapped worker looks exactly like a straggling node — its claim
@@ -489,11 +494,12 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
     if handicap > 0 {
         std::thread::sleep(Duration::from_micros(handicap));
     }
-    for (((qid, _), hist), chunks) in members.iter().zip(hists).zip(reps) {
+    for ((((qid, _), hist), aux), chunks) in members.iter().zip(hists).zip(auxes).zip(reps) {
         ctx.store.insert(PartialDoc {
             id: SubtaskId { query_id: *qid, partition: task.id.partition },
             worker: ctx.id,
             hist,
+            aux,
             events_processed: part.cs.n_events as u64,
             chunks,
         });
@@ -574,6 +580,10 @@ impl Default for ClusterConfig {
 
 pub struct QueryResult {
     pub hist: H1,
+    /// Aux sinks (`fill2`/`profile`/`fill_vars` reducers) in fill-site
+    /// order, merged partition-ordered exactly like `hist`; empty for
+    /// classic single-histogram queries.
+    pub aux: Vec<Sink>,
     pub latency: Duration,
     /// Partitions actually scanned (zone-map-skipped ones excluded).
     pub partitions: usize,
@@ -1008,7 +1018,7 @@ impl Cluster {
         F: FnMut(usize, usize, &H1) -> bool,
     {
         let mut preview = H1::new(query.n_bins, query.lo, query.hi);
-        let mut parts: BTreeMap<usize, H1> = BTreeMap::new();
+        let mut parts: BTreeMap<usize, (H1, Vec<Sink>)> = BTreeMap::new();
         let mut events = 0u64;
         let mut chunks = crate::queryir::IndexedRun::default();
         while parts.len() < handle.partitions {
@@ -1045,7 +1055,7 @@ impl Cluster {
                 preview.merge(&d.hist)?;
                 events += d.events_processed;
                 chunks.absorb(&d.chunks);
-                parts.insert(d.id.partition, d.hist);
+                parts.insert(d.id.partition, (d.hist, d.aux));
             }
             if !progress(parts.len(), handle.partitions, &preview) {
                 self.finish_query(handle.query_id);
@@ -1055,9 +1065,20 @@ impl Cluster {
         let merged = parts.len();
         self.finish_query(handle.query_id);
         let mut hist = H1::new(query.n_bins, query.lo, query.hi);
-        hist.merge_many(parts.values())?;
+        hist.merge_many(parts.values().map(|(h, _)| h))?;
+        // Aux sinks reduce exactly like the primary: fresh copies of the
+        // first partial's shape, then partition-ordered merges — so the
+        // result is bit-identical run to run regardless of scheduling.
+        let mut aux: Vec<Sink> = Vec::new();
+        for (i, (_, a)) in parts.iter().enumerate() {
+            if i == 0 {
+                aux = a.iter().map(Sink::fresh).collect();
+            }
+            merge_aux(&mut aux, a)?;
+        }
         Ok(QueryResult {
             hist,
+            aux,
             latency: handle.submitted.elapsed(),
             partitions: merged,
             skipped: handle.skipped,
@@ -1355,6 +1376,76 @@ mod tests {
         for _ in 0..3 {
             let again = c.run(&q).unwrap();
             assert_eq!(again.hist, first.hist, "full H1 equality incl. sum/sum2");
+        }
+        c.shutdown();
+    }
+
+    /// An AGC-style query (`fill` + `fill2` + `profile` + `fill_vars`)
+    /// runs through the whole distributed machine: aux sinks ride the
+    /// document store and reduce partition-ordered, so repeat runs are
+    /// bit-identical and the exactly-representable pieces (primary/H2/
+    /// variation bins, profile per-bin counts) match a local group run.
+    #[test]
+    fn aux_sinks_survive_the_distributed_path() {
+        use crate::hist::Hist;
+        let cfg = ClusterConfig {
+            n_workers: 3,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::from_millis(1),
+            claim_ttl: Duration::from_secs(10),
+            ..ClusterConfig::default()
+        };
+        let c = Cluster::start(cfg, Backend::compiled());
+        c.catalog.register("dy", generate_drellyan(12_000, 61), 2_000);
+        let src = "for event in dataset:\n\
+                   \x20   for muon in event.muons:\n\
+                   \x20       if muon.pt > 20:\n\
+                   \x20           fill(muon.pt)\n\
+                   \x20           fill2(muon.pt, muon.eta)\n\
+                   \x20           profile(muon.pt, muon.eta * muon.eta + 1)\n\
+                   \x20           fill_vars(muon.pt, 0.5, 1.0, 2.0)\n";
+        let q = Query::from_source(src, "dy")
+            .with_binning(64, 0.0, 128.0)
+            .with_y_binning(32, -4.0, 4.0);
+        let r1 = c.run(&q).unwrap();
+        assert_eq!(r1.aux.len(), 5, "h2 + profile + 3 variations");
+        assert!(r1.aux[0].label.starts_with("h2#"));
+        assert!(r1.aux[1].label.starts_with("prof#"));
+        assert!(r1.aux[2].label.starts_with("var#"));
+        for s in &r1.aux {
+            assert!(s.hist.total() > 0.0, "{} never filled", s.label);
+        }
+        // Partition-ordered aux reduction: repeat runs are bit-identical
+        // down to the profile's float sums.
+        let r2 = c.run(&q).unwrap();
+        assert_eq!(r2.hist, r1.hist);
+        assert_eq!(r2.aux, r1.aux);
+        // Local single-scan reference (same backend, no partitioning).
+        let cs = generate_drellyan(12_000, 61);
+        let be = Backend::compiled();
+        let mut local = H1::new(q.n_bins, q.lo, q.hi);
+        let (laux, _) = be.run_group_indexed(&q, &cs, None, &mut local).unwrap();
+        assert_eq!(r1.hist.bins, local.bins, "unit-weight fills are exact");
+        match (&r1.aux[0].hist, &laux[0].hist) {
+            (Hist::H2(a), Hist::H2(b)) => {
+                assert_eq!(a.bins, b.bins);
+                assert_eq!(a.count, b.count);
+            }
+            other => panic!("expected H2 pair, got {other:?}"),
+        }
+        match (&r1.aux[1].hist, &laux[1].hist) {
+            // Per-bin Σw is integer-valued here; Σw·y association differs
+            // across the partition split, so only the counts are exact.
+            (Hist::Profile(a), Hist::Profile(b)) => assert_eq!(a.count, b.count),
+            other => panic!("expected Profile pair, got {other:?}"),
+        }
+        for (dist, loc) in r1.aux[2..].iter().zip(&laux[2..]) {
+            match (&dist.hist, &loc.hist) {
+                // Dyadic variation weights keep bin sums exact.
+                (Hist::H1(a), Hist::H1(b)) => assert_eq!(a.bins, b.bins, "{}", dist.label),
+                other => panic!("expected H1 pair, got {other:?}"),
+            }
         }
         c.shutdown();
     }

@@ -13,7 +13,7 @@
 //! pending document that nobody will ever drain.
 
 use crate::coord::board::SubtaskId;
-use crate::hist::H1;
+use crate::hist::{Sink, H1};
 use std::collections::{HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
 
@@ -22,6 +22,11 @@ pub struct PartialDoc {
     pub id: SubtaskId,
     pub worker: usize,
     pub hist: H1,
+    /// Partial aux sinks (`fill2`/`profile`/`fill_vars` reducers) for this
+    /// partition, in the program's fill-site order; empty for classic
+    /// single-histogram queries. Merged partition-ordered by the waiter,
+    /// exactly like `hist`.
+    pub aux: Vec<Sink>,
     pub events_processed: u64,
     /// What zone-map chunk skipping did while producing this partial —
     /// rides along so the aggregator can report per-query skip counters.
@@ -152,6 +157,7 @@ mod tests {
             id: SubtaskId { query_id: q, partition: p },
             worker: 0,
             hist: h,
+            aux: Vec::new(),
             events_processed: 10,
             chunks: Default::default(),
         }

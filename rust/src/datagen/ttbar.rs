@@ -7,27 +7,46 @@
 //! falling pT spectra, and 91 auxiliary per-jet attributes (b-tag
 //! discriminants, constituent counts, energy fractions... here: generic
 //! floats) for a total of 95 per-jet branches.
+//!
+//! Events additionally carry a small muon list (semileptonic tt̄: usually
+//! 0–2 leptons, *empty for many events*) drawn from an RNG stream
+//! independent of the jet stream, so adding muons left every jet array
+//! bit-identical to earlier seeds. The second list is what AGC-style
+//! cross-list queries (muon × jet pairs, `muons[n-1]`-style gathers over
+//! possibly-empty lists) exercise.
 
 use crate::columnar::arrays::{Array, ColumnSet};
-use crate::columnar::schema::jet_event_schema;
+use crate::columnar::schema::ttbar_event_schema;
 use crate::util::rng::Pcg32;
 use std::collections::BTreeMap;
 use std::f64::consts::PI;
 
 pub const N_JET_ATTRS: usize = 95;
 pub const MAX_JETS: usize = 20;
+pub const MAX_MUONS: usize = 6;
+
+/// XOR'd into the seed for the muon stream so it never correlates with —
+/// or perturbs — the jet stream.
+const MUON_STREAM: u64 = 0x9e37_79b9_7f4a_7c15;
 
 /// Generate `n_events` tt̄-like events with `n_attrs` per-jet branches.
 pub fn generate_ttbar(n_events: usize, n_attrs: usize, seed: u64) -> ColumnSet {
     assert!(n_attrs >= 4, "need at least pt/eta/phi/mass");
     let mut rng = Pcg32::new(seed);
-    let schema = jet_event_schema(n_attrs);
+    let mut mrng = Pcg32::new(seed ^ MUON_STREAM);
+    let schema = ttbar_event_schema(n_attrs);
     let layout = schema.layout();
 
     let mut offsets: Vec<i64> = Vec::with_capacity(n_events + 1);
     offsets.push(0);
     let cap = n_events * 6 + 16;
     let mut cols: Vec<Vec<f32>> = (0..n_attrs).map(|_| Vec::with_capacity(cap)).collect();
+
+    let mut moffsets: Vec<i64> = Vec::with_capacity(n_events + 1);
+    moffsets.push(0);
+    let mut mu_pt: Vec<f32> = Vec::with_capacity(n_events * 2);
+    let mut mu_eta: Vec<f32> = Vec::with_capacity(n_events * 2);
+    let mut mu_phi: Vec<f32> = Vec::with_capacity(n_events * 2);
 
     let mut jet_pts: Vec<f64> = Vec::with_capacity(MAX_JETS);
     for _ in 0..n_events {
@@ -50,14 +69,29 @@ pub fn generate_ttbar(n_events: usize, n_attrs: usize, seed: u64) -> ColumnSet {
             }
         }
         offsets.push(cols[0].len() as i64);
+
+        // Semileptonic tt̄: ~1 lepton on average, frequently none.
+        let n_muons = (mrng.poisson(1.1) as usize).min(MAX_MUONS);
+        for _ in 0..n_muons {
+            mu_pt.push((15.0 + mrng.exponential(28.0)) as f32);
+            mu_eta.push(mrng.gauss(0.0, 1.2).clamp(-2.4, 2.4) as f32);
+            mu_phi.push(mrng.uniform(-PI, PI) as f32);
+        }
+        moffsets.push(mu_pt.len() as i64);
     }
 
     let mut leaves = BTreeMap::new();
+    // The first `n_attrs` layout leaves are the jet branches (schema field
+    // order puts `jets` before `muons`); the muon leaves go in by name.
     for ((path, _), col) in layout.leaves.iter().zip(cols.into_iter()) {
         leaves.insert(path.clone(), Array::F32(col));
     }
+    leaves.insert("muons.pt".to_string(), Array::F32(mu_pt));
+    leaves.insert("muons.eta".to_string(), Array::F32(mu_eta));
+    leaves.insert("muons.phi".to_string(), Array::F32(mu_phi));
     let mut off = BTreeMap::new();
     off.insert("jets".to_string(), offsets);
+    off.insert("muons".to_string(), moffsets);
 
     let cs = ColumnSet {
         schema,
@@ -74,12 +108,36 @@ mod tests {
     use super::*;
 
     #[test]
-    fn has_95_branches() {
+    fn has_95_jet_branches_plus_muons() {
         let cs = generate_ttbar(100, N_JET_ATTRS, 1);
         cs.validate().unwrap();
-        assert_eq!(cs.leaves.len(), 95);
+        assert_eq!(cs.leaves.len(), 98); // 95 jet branches + muon pt/eta/phi
         assert!(cs.leaf("jets.pt").is_some());
         assert!(cs.leaf("jets.attr94").is_some());
+        assert!(cs.leaf("muons.pt").is_some());
+    }
+
+    /// The muon stream is independent of the jet stream: jet arrays are
+    /// bit-identical to what the pre-muon generator produced, and the muon
+    /// list is often empty (the lane family cross-list tests rely on).
+    #[test]
+    fn muons_ride_an_independent_stream() {
+        let cs = generate_ttbar(2000, 5, 9);
+        let off = cs.offsets_of("muons").unwrap();
+        let mut empty = 0;
+        for w in off.windows(2) {
+            let n = (w[1] - w[0]) as usize;
+            assert!(n <= MAX_MUONS);
+            if n == 0 {
+                empty += 1;
+            }
+        }
+        assert!(empty > 100, "expected many 0-muon events, got {empty}");
+        let avg = cs.leaf("muons.pt").unwrap().len() as f64 / cs.n_events as f64;
+        assert!((0.5..2.0).contains(&avg), "avg muons/event {avg}");
+        for &pt in cs.leaf("muons.pt").unwrap().as_f32().unwrap() {
+            assert!(pt >= 15.0);
+        }
     }
 
     #[test]

@@ -12,9 +12,13 @@
 //! physics queries no longer need a Rust function per query — any
 //! query-language program runs at compiled-loop speed. Cut-based and
 //! multi-`fill` bodies included: batchable shapes — fused single-list
-//! bodies, loop-free per-event bodies, and `range(len)` pair nests —
-//! lower to the chunked mask-and-fill batch kernels (`kernel_info`
-//! reports which path, and which lane family, a source query takes).
+//! bodies, loop-free per-event bodies (dynamic `muons[n-1]`-style gathers
+//! included), and `range(len)` pair nests over one list *or two different
+//! lists* — lower to the chunked mask-and-fill batch kernels
+//! (`kernel_info` reports which path, and which lane family, a source
+//! query takes). AGC-style bodies with `fill2`/`profile`/`fill_vars`
+//! statements run through the `*_group` entry points, which build and
+//! return the query's aux sinks alongside the primary histogram.
 //! Partitions are **not** necessarily scanned in full: when
 //! a zone map is supplied (`run_indexed`), chunks the query's cut provably
 //! rejects are skipped and provably-accepted chunks run unmasked, with
@@ -24,7 +28,7 @@
 
 use crate::columnar::arrays::ColumnSet;
 use crate::engine::query::{Query, QueryKind};
-use crate::hist::H1;
+use crate::hist::{Sink, H1};
 use crate::index::ZoneMap;
 use crate::queryir::{self, lower};
 use std::collections::HashMap;
@@ -221,6 +225,60 @@ impl CompiledTapeBackend {
         Ok(reps)
     }
 
+    /// `run_indexed` for the full statement set: builds the query's aux
+    /// sinks (an H2 per `fill2`, a profile per `profile`, an H1 per
+    /// `fill_vars` variation) from its binnings, fills them in the same
+    /// pass as the primary and returns them. Aux-free programs return an
+    /// empty vector, so callers can use this unconditionally.
+    pub fn run_group_indexed(
+        &self,
+        query: &Query,
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hist: &mut H1,
+    ) -> Result<(Vec<Sink>, lower::IndexedRun), String> {
+        let src = match &query.source {
+            Some(s) => s.clone(),
+            None => source_for(query.kind, &query.list),
+        };
+        let prog = self.program_for(&src, cs)?;
+        let (x, y) = query.binnings();
+        let mut aux = prog.make_aux(x, y);
+        let rep = lower::run_parallel_group_indexed(&prog, cs, zm, hist, &mut aux, self.parallel)?;
+        self.zone_counters.absorb(&rep);
+        Ok((aux, rep))
+    }
+
+    /// `run_fused_indexed` for the full statement set: every query's aux
+    /// sinks fill directly from the shared scan and come back per query
+    /// (empty vectors for aux-free programs).
+    pub fn run_fused_group_indexed(
+        &self,
+        queries: &[&Query],
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hists: &mut [H1],
+    ) -> Result<(Vec<Vec<Sink>>, Vec<lower::IndexedRun>), String> {
+        let mut progs = Vec::with_capacity(queries.len());
+        let mut auxes: Vec<Vec<Sink>> = Vec::with_capacity(queries.len());
+        for q in queries {
+            let src = match &q.source {
+                Some(s) => s.clone(),
+                None => source_for(q.kind, &q.list),
+            };
+            let prog = self.program_for(&src, cs)?;
+            let (x, y) = q.binnings();
+            auxes.push(prog.make_aux(x, y));
+            progs.push(prog);
+        }
+        let refs: Vec<&lower::CompiledProgram> = progs.iter().map(|p| p.as_ref()).collect();
+        let reps = lower::run_fused_group_indexed(&refs, cs, zm, hists, &mut auxes, 0)?;
+        for rep in &reps {
+            self.zone_counters.absorb(rep);
+        }
+        Ok((auxes, reps))
+    }
+
     /// Chunk-skipping counters accumulated by every clone of this backend
     /// since process start.
     pub fn zone_stats(&self) -> lower::IndexedRun {
@@ -398,6 +456,44 @@ for event in dataset:
             CompiledTapeBackend::new().run(q, &cs, &mut solo).unwrap();
             assert_eq!(*h, solo, "{}", q.kind.artifact());
         }
+    }
+
+    /// AGC-style statement set through the backend group APIs: aux sinks
+    /// come back filled, bit-identically from the solo and fused paths,
+    /// while the H1-only paths refuse the program.
+    #[test]
+    fn group_apis_return_filled_aux_sinks() {
+        let cs = generate_drellyan(3_000, 47);
+        let be = CompiledTapeBackend::new();
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        fill(muon.pt)
+        fill2(muon.pt, muon.eta)
+        fill_vars(muon.pt, 0.5, 1.0, 2.0)
+";
+        let q = Query::from_source(src, "dy").with_y_binning(16, -4.0, 4.0);
+        let mut h = H1::new(q.n_bins, q.lo, q.hi);
+        let (aux, _rep) = be.run_group_indexed(&q, &cs, None, &mut h).unwrap();
+        assert_eq!(aux.len(), 4); // h2 + 3 weight variations
+        assert!(aux.iter().all(|s| s.hist.total() > 0.0));
+        // The H1-only path refuses rather than dropping aux fills.
+        let mut h1 = H1::new(q.n_bins, q.lo, q.hi);
+        assert!(be.run_indexed(&q, &cs, None, &mut h1).is_err());
+        // The fused group path matches the solo group run bit-for-bit.
+        let plain = Query::new(QueryKind::FlatHist, "dy", "muons");
+        let refs = [&q, &plain];
+        let mut hists = vec![
+            H1::new(q.n_bins, q.lo, q.hi),
+            H1::new(plain.n_bins, plain.lo, plain.hi),
+        ];
+        let (auxes, reps) = be
+            .run_fused_group_indexed(&refs, &cs, None, &mut hists)
+            .unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(hists[0], h);
+        assert_eq!(auxes[0], aux);
+        assert!(auxes[1].is_empty());
     }
 
     #[test]

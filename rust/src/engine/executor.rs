@@ -5,7 +5,7 @@ use crate::columnar::arrays::ColumnSet;
 use crate::engine::compiled_exec::CompiledTapeBackend;
 use crate::engine::query::Query;
 use crate::engine::{columnar_exec, object_baseline};
-use crate::hist::H1;
+use crate::hist::{Sink, H1};
 use crate::index::ZoneMap;
 use crate::queryir::lower::IndexedRun;
 
@@ -161,6 +161,59 @@ impl Backend {
                     reps.push(other.run_indexed(q, cs, zm, h)?);
                 }
                 Ok(reps)
+            }
+        }
+    }
+
+    /// `run_indexed` for the full statement set: aux sinks
+    /// (`fill2`/`profile`/`fill_vars`) fill in the same pass and come back
+    /// alongside the report. Only the compiled-tape backend executes
+    /// aux-bearing programs; the others return an empty vector for
+    /// aux-free queries and surface their tier's group-API error
+    /// otherwise.
+    pub fn run_group_indexed(
+        &self,
+        query: &Query,
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hist: &mut H1,
+    ) -> Result<(Vec<Sink>, IndexedRun), String> {
+        match self {
+            Backend::CompiledTape(ct) => ct.run_group_indexed(query, cs, zm, hist),
+            other => other
+                .run_indexed(query, cs, zm, hist)
+                .map(|rep| (Vec::new(), rep)),
+        }
+    }
+
+    /// `run_fused` for the full statement set: per-query aux sinks fill
+    /// from the shared scan (compiled-tape) or from back-to-back group
+    /// runs (other backends).
+    pub fn run_fused_group(
+        &self,
+        queries: &[&Query],
+        cs: &ColumnSet,
+        zm: Option<&ZoneMap>,
+        hists: &mut [H1],
+    ) -> Result<(Vec<Vec<Sink>>, Vec<IndexedRun>), String> {
+        if queries.len() != hists.len() {
+            return Err(format!(
+                "run_fused_group: {} queries but {} histograms",
+                queries.len(),
+                hists.len()
+            ));
+        }
+        match self {
+            Backend::CompiledTape(ct) => ct.run_fused_group_indexed(queries, cs, zm, hists),
+            other => {
+                let mut auxes = Vec::with_capacity(queries.len());
+                let mut reps = Vec::with_capacity(queries.len());
+                for (q, h) in queries.iter().zip(hists.iter_mut()) {
+                    let (aux, rep) = other.run_group_indexed(q, cs, zm, h)?;
+                    auxes.push(aux);
+                    reps.push(rep);
+                }
+                Ok((auxes, reps))
             }
         }
     }

@@ -95,6 +95,10 @@ pub struct Query {
     pub n_bins: usize,
     pub lo: f64,
     pub hi: f64,
+    /// Y binning for `fill2` H2 sinks (harmless for queries without one).
+    pub y_bins: usize,
+    pub y_lo: f64,
+    pub y_hi: f64,
 }
 
 impl Query {
@@ -108,6 +112,9 @@ impl Query {
             n_bins: 64,
             lo,
             hi,
+            y_bins: 32,
+            y_lo: 0.0,
+            y_hi: 128.0,
         }
     }
 
@@ -121,6 +128,9 @@ impl Query {
             n_bins: 64,
             lo: 0.0,
             hi: 128.0,
+            y_bins: 32,
+            y_lo: 0.0,
+            y_hi: 128.0,
         }
     }
 
@@ -129,6 +139,22 @@ impl Query {
         self.lo = lo;
         self.hi = hi;
         self
+    }
+
+    /// Y binning for the H2 sinks of `fill2` sites.
+    pub fn with_y_binning(mut self, y_bins: usize, y_lo: f64, y_hi: f64) -> Query {
+        self.y_bins = y_bins;
+        self.y_lo = y_lo;
+        self.y_hi = y_hi;
+        self
+    }
+
+    /// The two binning tuples `make_aux` takes.
+    pub fn binnings(&self) -> ((usize, f64, f64), (usize, f64, f64)) {
+        (
+            (self.n_bins, self.lo, self.hi),
+            (self.y_bins, self.y_lo, self.y_hi),
+        )
     }
 
     pub fn leaf_paths(&self) -> Vec<String> {
@@ -146,6 +172,13 @@ impl Query {
         ];
         if let Some(src) = &self.source {
             pairs.push(("src", Json::str(src.clone())));
+        }
+        // Only serialized when non-default, so classic requests (and their
+        // cache keys / goldens) are byte-identical to earlier versions.
+        if (self.y_bins, self.y_lo, self.y_hi) != (32, 0.0, 128.0) {
+            pairs.push(("y_bins", Json::num(self.y_bins as f64)));
+            pairs.push(("y_lo", Json::num(self.y_lo)));
+            pairs.push(("y_hi", Json::num(self.y_hi)));
         }
         Json::obj(pairs)
     }
@@ -170,6 +203,9 @@ impl Query {
             n_bins: j.get("n_bins").and_then(|v| v.as_usize()).unwrap_or(64),
             lo: j.get("lo").and_then(|v| v.as_f64()).unwrap_or(0.0),
             hi: j.get("hi").and_then(|v| v.as_f64()).unwrap_or(128.0),
+            y_bins: j.get("y_bins").and_then(|v| v.as_usize()).unwrap_or(32),
+            y_lo: j.get("y_lo").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            y_hi: j.get("y_hi").and_then(|v| v.as_f64()).unwrap_or(128.0),
         })
     }
 }
@@ -198,6 +234,19 @@ mod tests {
         let q = Query::new(QueryKind::MassPairs, "dy", "muons").with_binning(64, 0.0, 128.0);
         let j = Json::parse(&q.to_json().to_string()).unwrap();
         assert_eq!(Query::from_json(&j).unwrap(), q);
+    }
+
+    #[test]
+    fn y_binning_roundtrips_and_defaults_stay_compact() {
+        let q = Query::from_source("for event in dataset:\n    fill(event.met)\n", "dy")
+            .with_y_binning(16, -4.0, 4.0);
+        let j = Json::parse(&q.to_json().to_string()).unwrap();
+        assert_eq!(Query::from_json(&j).unwrap(), q);
+        // Default y binning stays off the wire (stable cache keys).
+        let d = Query::new(QueryKind::MaxPt, "dy", "muons");
+        assert!(d.to_json().get("y_bins").is_none());
+        let j = Json::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(Query::from_json(&j).unwrap(), d);
     }
 
     #[test]

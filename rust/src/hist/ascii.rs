@@ -2,6 +2,9 @@
 //! physicist sees within the latency budget.
 
 use super::h1::H1;
+use super::h2::H2;
+use super::profile::Profile;
+use super::sink::{Hist, Sink};
 
 /// Render a horizontal-bar ASCII histogram.
 pub fn render(h: &H1, title: &str, width: usize) -> String {
@@ -29,6 +32,66 @@ pub fn render(h: &H1, title: &str, width: usize) -> String {
     out
 }
 
+/// Render an `H2` as a character-density heatmap (one row per y bin,
+/// top row = highest y) plus the moment header.
+pub fn render_h2(h: &H2, title: &str) -> String {
+    const SHADES: [char; 5] = [' ', '.', 'o', 'O', '@'];
+    let max = h.bins.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{title}\n  entries={:.0}  mean_x={:.3}  mean_y={:.3}  out={:.0}\n",
+        h.total(),
+        h.mean_x(),
+        h.mean_y(),
+        h.out
+    ));
+    for yi in (0..h.ny).rev() {
+        let yc = h.ylo + (yi as f64 + 0.5) * (h.yhi - h.ylo) / h.ny as f64;
+        out.push_str(&format!("  {yc:>10.3} |"));
+        for xi in 0..h.nx {
+            let frac = h.bins[yi * h.nx + xi] / max;
+            let s = ((frac * (SHADES.len() - 1) as f64).round() as usize).min(SHADES.len() - 1);
+            out.push(SHADES[s]);
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("  {:>10} +{}\n", "", "-".repeat(h.nx)));
+    out.push_str(&format!("  {:>10}  x: [{}, {})\n", "", h.xlo, h.xhi));
+    out
+}
+
+/// Render a profile: per-x-bin mean of y with its spread.
+pub fn render_profile(p: &Profile, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{title}\n  entries={:.0}  under={:.0} over={:.0}\n",
+        p.total, p.under, p.over
+    ));
+    for i in 0..p.n_bins() {
+        if p.count[i] > 0.0 {
+            out.push_str(&format!(
+                "  {:>10.3} | mean_y={:<12.4} stddev_y={:<12.4} n={:.0}\n",
+                p.bin_center(i),
+                p.mean_y(i),
+                p.stddev_y(i),
+                p.count[i]
+            ));
+        } else {
+            out.push_str(&format!("  {:>10.3} | (empty)\n", p.bin_center(i)));
+        }
+    }
+    out
+}
+
+/// Render any labeled sink with the renderer its shape calls for.
+pub fn render_sink(s: &Sink, width: usize) -> String {
+    match &s.hist {
+        Hist::H1(h) => render(h, &s.label, width),
+        Hist::H2(h) => render_h2(h, &s.label),
+        Hist::Profile(p) => render_profile(p, &s.label),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -51,5 +114,22 @@ mod tests {
         let h = H1::new(3, 0.0, 1.0);
         let s = render(&h, "empty", 10);
         assert!(s.contains("entries=0"));
+    }
+
+    #[test]
+    fn h2_and_profile_render() {
+        let mut h2 = H2::new(4, 0.0, 4.0, 3, 0.0, 3.0);
+        h2.fill(1.5, 1.5);
+        h2.fill(1.5, 1.6);
+        let s = render_h2(&h2, "map");
+        assert!(s.contains("entries=2"));
+        assert_eq!(s.lines().count(), 2 + 3 + 2);
+        let mut p = Profile::new(2, 0.0, 2.0);
+        p.fill(0.5, 10.0);
+        let s = render_profile(&p, "prof");
+        assert!(s.contains("mean_y=10"));
+        assert!(s.contains("(empty)"));
+        let sink = Sink { label: "var#0.1".into(), hist: Hist::H1(H1::new(2, 0.0, 2.0)) };
+        assert!(render_sink(&sink, 10).contains("var#0.1"));
     }
 }

@@ -1,0 +1,258 @@
+//! Fixed-binning 2-D histogram — the `fill2(x, y[, w])` result type.
+//!
+//! Same contract as `H1`: NaN coordinates are skipped, running moments are
+//! accumulated for every non-NaN fill (in or out of range), and `merge` is
+//! element-wise so partition-ordered reduction is bit-reproducible.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct H2 {
+    pub nx: usize,
+    pub xlo: f64,
+    pub xhi: f64,
+    pub ny: usize,
+    pub ylo: f64,
+    pub yhi: f64,
+    /// Row-major contents: `bins[yi * nx + xi]`.
+    pub bins: Vec<f64>,
+    /// Weight falling outside either axis range (single pocket; 1-D style
+    /// under/overflow does not decompose cleanly in 2-D).
+    pub out: f64,
+    /// Weighted count and per-axis Σw·v, Σw·v² for means/stddevs.
+    pub count: f64,
+    pub sumx: f64,
+    pub sumx2: f64,
+    pub sumy: f64,
+    pub sumy2: f64,
+}
+
+impl H2 {
+    pub fn new(nx: usize, xlo: f64, xhi: f64, ny: usize, ylo: f64, yhi: f64) -> H2 {
+        assert!(nx > 0 && xhi > xlo, "bad x binning {nx} [{xlo}, {xhi})");
+        assert!(ny > 0 && yhi > ylo, "bad y binning {ny} [{ylo}, {yhi})");
+        H2 {
+            nx,
+            xlo,
+            xhi,
+            ny,
+            ylo,
+            yhi,
+            bins: vec![0.0; nx * ny],
+            out: 0.0,
+            count: 0.0,
+            sumx: 0.0,
+            sumx2: 0.0,
+            sumy: 0.0,
+            sumy2: 0.0,
+        }
+    }
+
+    #[inline]
+    fn axis_index(v: f64, lo: f64, hi: f64, n: usize) -> Option<usize> {
+        if v < lo {
+            return None;
+        }
+        let i = ((v - lo) / (hi - lo) * n as f64) as usize;
+        if i < n {
+            Some(i)
+        } else {
+            None // v >= hi (right-open, as in H1)
+        }
+    }
+
+    #[inline]
+    pub fn fill(&mut self, x: f64, y: f64) {
+        self.fill_w(x, y, 1.0);
+    }
+
+    #[inline]
+    pub fn fill_w(&mut self, x: f64, y: f64, w: f64) {
+        if x.is_nan() || y.is_nan() {
+            return;
+        }
+        match (
+            Self::axis_index(x, self.xlo, self.xhi, self.nx),
+            Self::axis_index(y, self.ylo, self.yhi, self.ny),
+        ) {
+            (Some(xi), Some(yi)) => self.bins[yi * self.nx + xi] += w,
+            _ => self.out += w,
+        }
+        self.count += w;
+        self.sumx += w * x;
+        self.sumx2 += w * x * x;
+        self.sumy += w * y;
+        self.sumy2 += w * y * y;
+    }
+
+    pub fn total(&self) -> f64 {
+        self.count
+    }
+
+    pub fn mean_x(&self) -> f64 {
+        if self.count > 0.0 {
+            self.sumx / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn mean_y(&self) -> f64 {
+        if self.count > 0.0 {
+            self.sumy / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Project onto x: per-column totals (for ASCII rendering).
+    pub fn x_projection(&self) -> Vec<f64> {
+        let mut cols = vec![0.0; self.nx];
+        for yi in 0..self.ny {
+            for xi in 0..self.nx {
+                cols[xi] += self.bins[yi * self.nx + xi];
+            }
+        }
+        cols
+    }
+
+    fn same_binning(&self, other: &H2) -> bool {
+        self.nx == other.nx
+            && self.ny == other.ny
+            && self.xlo == other.xlo
+            && self.xhi == other.xhi
+            && self.ylo == other.ylo
+            && self.yhi == other.yhi
+    }
+
+    /// Merge a partial histogram (must have identical binning).
+    pub fn merge(&mut self, other: &H2) -> Result<(), String> {
+        if !self.same_binning(other) {
+            return Err(format!(
+                "H2 binning mismatch: {}x{} vs {}x{}",
+                self.nx, self.ny, other.nx, other.ny
+            ));
+        }
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.out += other.out;
+        self.count += other.count;
+        self.sumx += other.sumx;
+        self.sumx2 += other.sumx2;
+        self.sumy += other.sumy;
+        self.sumy2 += other.sumy2;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nx", Json::num(self.nx as f64)),
+            ("xlo", Json::num(self.xlo)),
+            ("xhi", Json::num(self.xhi)),
+            ("ny", Json::num(self.ny as f64)),
+            ("ylo", Json::num(self.ylo)),
+            ("yhi", Json::num(self.yhi)),
+            ("bins", Json::Arr(self.bins.iter().map(|&b| Json::num(b)).collect())),
+            ("out", Json::num(self.out)),
+            ("count", Json::num(self.count)),
+            ("sumx", Json::num(self.sumx)),
+            ("sumx2", Json::num(self.sumx2)),
+            ("sumy", Json::num(self.sumy)),
+            ("sumy2", Json::num(self.sumy2)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<H2, String> {
+        let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("missing {k}"));
+        let nx = num("nx")? as usize;
+        let ny = num("ny")? as usize;
+        let bins: Vec<f64> = j
+            .get("bins")
+            .and_then(|b| b.as_arr())
+            .ok_or("missing bins")?
+            .iter()
+            .map(|b| b.as_f64().unwrap_or(0.0))
+            .collect();
+        if nx == 0 || ny == 0 || bins.len() != nx * ny {
+            return Err(format!("H2 shape mismatch: {} bins for {nx}x{ny}", bins.len()));
+        }
+        Ok(H2 {
+            nx,
+            xlo: num("xlo")?,
+            xhi: num("xhi")?,
+            ny,
+            ylo: num("ylo")?,
+            yhi: num("yhi")?,
+            bins,
+            out: num("out").unwrap_or(0.0),
+            count: num("count").unwrap_or(0.0),
+            sumx: num("sumx").unwrap_or(0.0),
+            sumx2: num("sumx2").unwrap_or(0.0),
+            sumy: num("sumy").unwrap_or(0.0),
+            sumy2: num("sumy2").unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_places_and_pockets() {
+        let mut h = H2::new(4, 0.0, 4.0, 2, 0.0, 2.0);
+        h.fill(0.5, 0.5); // (0, 0)
+        h.fill(3.9, 1.9); // (3, 1)
+        h.fill(4.0, 1.0); // x overflow → out
+        h.fill(1.0, -0.1); // y underflow → out
+        assert_eq!(h.bins[0], 1.0);
+        assert_eq!(h.bins[1 * 4 + 3], 1.0);
+        assert_eq!(h.out, 2.0);
+        assert_eq!(h.total(), 4.0);
+    }
+
+    #[test]
+    fn nan_in_either_coordinate_skips() {
+        let mut h = H2::new(2, 0.0, 2.0, 2, 0.0, 2.0);
+        h.fill(f64::NAN, 1.0);
+        h.fill(1.0, f64::NAN);
+        assert_eq!(h.total(), 0.0);
+    }
+
+    #[test]
+    fn moments_match_both_axes() {
+        let mut h = H2::new(10, 0.0, 10.0, 10, 0.0, 10.0);
+        h.fill_w(2.0, 4.0, 2.0);
+        h.fill_w(6.0, 1.0, 1.0);
+        assert_eq!(h.count, 3.0);
+        assert_eq!(h.sumx, 10.0);
+        assert_eq!(h.sumy, 9.0);
+        assert!((h.mean_x() - 10.0 / 3.0).abs() < 1e-12);
+        assert!((h.mean_y() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_checks_binning() {
+        let mut a = H2::new(3, 0.0, 3.0, 2, 0.0, 2.0);
+        let mut b = a.clone();
+        a.fill(1.5, 0.5);
+        b.fill(1.5, 0.5);
+        b.fill(9.0, 9.0);
+        a.merge(&b).unwrap();
+        assert_eq!(a.bins[1], 2.0);
+        assert_eq!(a.out, 1.0);
+        assert_eq!(a.total(), 3.0);
+        assert!(a.merge(&H2::new(3, 0.0, 3.0, 4, 0.0, 2.0)).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut h = H2::new(3, -1.0, 2.0, 4, 0.0, 8.0);
+        for i in 0..50 {
+            h.fill_w(i as f64 * 0.07 - 1.2, i as f64 * 0.2, 1.0 + (i % 2) as f64);
+        }
+        let j = Json::parse(&h.to_json().to_string()).unwrap();
+        assert_eq!(H2::from_json(&j).unwrap(), h);
+    }
+}

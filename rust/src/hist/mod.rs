@@ -3,6 +3,12 @@
 pub mod aggregator;
 pub mod ascii;
 pub mod h1;
+pub mod h2;
+pub mod profile;
+pub mod sink;
 
 pub use aggregator::Agg;
 pub use h1::H1;
+pub use h2::H2;
+pub use profile::Profile;
+pub use sink::{merge_aux, Hist, Sink, SinkSet};

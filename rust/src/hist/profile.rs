@@ -1,0 +1,232 @@
+//! Profile reducer — the `profile(x, y[, w])` result type.
+//!
+//! Bins by x with H1's right-open convention and keeps per-bin Σw, Σw·y,
+//! Σw·y² so the mean and spread of y as a function of x come out of one
+//! pass (the classic TProfile). NaN in either coordinate skips the fill;
+//! merge is element-wise so partition-ordered reduction is bit-exact.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Profile {
+    pub lo: f64,
+    pub hi: f64,
+    /// Per-bin Σw.
+    pub count: Vec<f64>,
+    /// Per-bin Σw·y.
+    pub sumy: Vec<f64>,
+    /// Per-bin Σw·y².
+    pub sumy2: Vec<f64>,
+    /// Σw with x below/above range (y moments are not tracked there).
+    pub under: f64,
+    pub over: f64,
+    /// Σw over all non-NaN fills, in or out of range.
+    pub total: f64,
+}
+
+impl Profile {
+    pub fn new(n_bins: usize, lo: f64, hi: f64) -> Profile {
+        assert!(n_bins > 0 && hi > lo, "bad binning {n_bins} [{lo}, {hi})");
+        Profile {
+            lo,
+            hi,
+            count: vec![0.0; n_bins],
+            sumy: vec![0.0; n_bins],
+            sumy2: vec![0.0; n_bins],
+            under: 0.0,
+            over: 0.0,
+            total: 0.0,
+        }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.count.len()
+    }
+
+    #[inline]
+    fn bin_index(&self, x: f64) -> Option<usize> {
+        if x < self.lo {
+            return None;
+        }
+        let n = self.count.len();
+        let i = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+        if i < n {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn fill(&mut self, x: f64, y: f64) {
+        self.fill_w(x, y, 1.0);
+    }
+
+    #[inline]
+    pub fn fill_w(&mut self, x: f64, y: f64, w: f64) {
+        if x.is_nan() || y.is_nan() {
+            return;
+        }
+        match self.bin_index(x) {
+            Some(i) => {
+                self.count[i] += w;
+                self.sumy[i] += w * y;
+                self.sumy2[i] += w * y * y;
+            }
+            None if x < self.lo => self.under += w,
+            None => self.over += w,
+        }
+        self.total += w;
+    }
+
+    /// Mean of y in bin `i` (NaN when the bin is empty).
+    pub fn mean_y(&self, i: usize) -> f64 {
+        if self.count[i] > 0.0 {
+            self.sumy[i] / self.count[i]
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Spread of y in bin `i` (NaN when the bin is empty).
+    pub fn stddev_y(&self, i: usize) -> f64 {
+        if self.count[i] > 0.0 {
+            let m = self.mean_y(i);
+            (self.sumy2[i] / self.count[i] - m * m).max(0.0).sqrt()
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.count.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Merge a partial profile (must have identical binning).
+    pub fn merge(&mut self, other: &Profile) -> Result<(), String> {
+        if other.n_bins() != self.n_bins() || other.lo != self.lo || other.hi != self.hi {
+            return Err(format!(
+                "profile binning mismatch: {}x[{},{}) vs {}x[{},{})",
+                self.n_bins(),
+                self.lo,
+                self.hi,
+                other.n_bins(),
+                other.lo,
+                other.hi
+            ));
+        }
+        for (a, b) in self.count.iter_mut().zip(&other.count) {
+            *a += b;
+        }
+        for (a, b) in self.sumy.iter_mut().zip(&other.sumy) {
+            *a += b;
+        }
+        for (a, b) in self.sumy2.iter_mut().zip(&other.sumy2) {
+            *a += b;
+        }
+        self.under += other.under;
+        self.over += other.over;
+        self.total += other.total;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr = |v: &[f64]| Json::Arr(v.iter().map(|&b| Json::num(b)).collect());
+        Json::obj(vec![
+            ("lo", Json::num(self.lo)),
+            ("hi", Json::num(self.hi)),
+            ("count", arr(&self.count)),
+            ("sumy", arr(&self.sumy)),
+            ("sumy2", arr(&self.sumy2)),
+            ("under", Json::num(self.under)),
+            ("over", Json::num(self.over)),
+            ("total", Json::num(self.total)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Profile, String> {
+        let arr = |k: &str| -> Result<Vec<f64>, String> {
+            Ok(j.get(k)
+                .and_then(|b| b.as_arr())
+                .ok_or_else(|| format!("missing {k}"))?
+                .iter()
+                .map(|b| b.as_f64().unwrap_or(0.0))
+                .collect())
+        };
+        let count = arr("count")?;
+        let sumy = arr("sumy")?;
+        let sumy2 = arr("sumy2")?;
+        if count.is_empty() || sumy.len() != count.len() || sumy2.len() != count.len() {
+            return Err("profile array shape mismatch".into());
+        }
+        Ok(Profile {
+            lo: j.get("lo").and_then(|v| v.as_f64()).ok_or("lo")?,
+            hi: j.get("hi").and_then(|v| v.as_f64()).ok_or("hi")?,
+            count,
+            sumy,
+            sumy2,
+            under: j.get("under").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            over: j.get("over").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            total: j.get("total").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_bin_mean_and_spread() {
+        let mut p = Profile::new(2, 0.0, 2.0);
+        p.fill(0.5, 10.0);
+        p.fill(0.5, 14.0);
+        p.fill(1.5, 3.0);
+        assert_eq!(p.count, vec![2.0, 1.0]);
+        assert!((p.mean_y(0) - 12.0).abs() < 1e-12);
+        assert!((p.stddev_y(0) - 2.0).abs() < 1e-12);
+        assert_eq!(p.mean_y(1), 3.0);
+        assert_eq!(p.total, 3.0);
+    }
+
+    #[test]
+    fn out_of_range_and_nan() {
+        let mut p = Profile::new(2, 0.0, 2.0);
+        p.fill(-1.0, 5.0);
+        p.fill(2.0, 5.0); // right-open: x == hi overflows
+        p.fill(f64::NAN, 5.0);
+        p.fill(1.0, f64::NAN);
+        assert_eq!(p.under, 1.0);
+        assert_eq!(p.over, 1.0);
+        assert_eq!(p.total, 2.0);
+        assert!(p.mean_y(0).is_nan());
+    }
+
+    #[test]
+    fn merge_matches_sequential_fills() {
+        let mut a = Profile::new(3, 0.0, 3.0);
+        let mut b = Profile::new(3, 0.0, 3.0);
+        let mut seq = Profile::new(3, 0.0, 3.0);
+        for (i, (x, y)) in [(0.5, 1.0), (1.5, 2.0), (2.5, 4.0), (0.6, 8.0)].iter().enumerate() {
+            if i % 2 == 0 { a.fill(*x, *y) } else { b.fill(*x, *y) }
+        }
+        for (x, y) in [(0.5, 1.0), (2.5, 4.0), (1.5, 2.0), (0.6, 8.0)] {
+            seq.fill(x, y);
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.count, seq.count);
+        assert_eq!(a.sumy, seq.sumy);
+        assert!(a.merge(&Profile::new(4, 0.0, 3.0)).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut p = Profile::new(5, -2.0, 3.0);
+        for i in 0..40 {
+            p.fill_w(i as f64 * 0.2 - 2.5, (i as f64).sin() * 10.0, 1.0 + (i % 3) as f64);
+        }
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(Profile::from_json(&j).unwrap(), p);
+    }
+}

@@ -1,0 +1,223 @@
+//! Histogram sinks: the per-query *group* of reducers an AGC-style query
+//! fills in one pass.
+//!
+//! Every query still has one primary `H1` (all plain `fill` statements
+//! share it — the wire protocol's `hist` field). Queries using the wider
+//! statement forms additionally carry *aux sinks*, one per fill site in
+//! source order: an `H2` per `fill2`, a `Profile` per `profile`, and one
+//! `H1` per weight variation of a `fill_vars`. Labels are generated
+//! deterministically from the site ordinal so every tier, the docstore
+//! reduction, and the wire protocol agree on identity without carrying
+//! source text around.
+
+use super::h1::H1;
+use super::h2::H2;
+use super::profile::Profile;
+use crate::util::json::Json;
+
+/// One auxiliary reducer (tagged union over the three shapes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Hist {
+    H1(H1),
+    H2(H2),
+    Profile(Profile),
+}
+
+impl Hist {
+    /// Merge a same-shaped partial (element-wise, order-preserving).
+    pub fn merge(&mut self, other: &Hist) -> Result<(), String> {
+        match (self, other) {
+            (Hist::H1(a), Hist::H1(b)) => a.merge(b),
+            (Hist::H2(a), Hist::H2(b)) => a.merge(b),
+            (Hist::Profile(a), Hist::Profile(b)) => a.merge(b),
+            _ => Err("sink shape mismatch in merge".into()),
+        }
+    }
+
+    /// Total filled weight (for quick sanity checks and rendering).
+    pub fn total(&self) -> f64 {
+        match self {
+            Hist::H1(h) => h.total(),
+            Hist::H2(h) => h.total(),
+            Hist::Profile(p) => p.total,
+        }
+    }
+
+    /// A same-shaped, zeroed copy — the fresh accumulator a morsel worker
+    /// or fused stream fills before the deterministic ordered merge.
+    pub fn fresh(&self) -> Hist {
+        match self {
+            Hist::H1(h) => Hist::H1(H1::new(h.n_bins(), h.lo, h.hi)),
+            Hist::H2(h) => Hist::H2(H2::new(h.nx, h.xlo, h.xhi, h.ny, h.ylo, h.yhi)),
+            Hist::Profile(p) => Hist::Profile(Profile::new(p.count.len(), p.lo, p.hi)),
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Hist::H1(_) => "h1",
+            Hist::H2(_) => "h2",
+            Hist::Profile(_) => "profile",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (tag, mut body) = match self {
+            Hist::H1(h) => ("h1", h.to_json()),
+            Hist::H2(h) => ("h2", h.to_json()),
+            Hist::Profile(p) => ("profile", p.to_json()),
+        };
+        if let Json::Obj(map) = &mut body {
+            map.insert("type".into(), Json::str(tag));
+        }
+        body
+    }
+
+    pub fn from_json(j: &Json) -> Result<Hist, String> {
+        match j.get("type").and_then(|t| t.as_str()) {
+            Some("h1") | None => Ok(Hist::H1(H1::from_json(j)?)),
+            Some("h2") => Ok(Hist::H2(H2::from_json(j)?)),
+            Some("profile") => Ok(Hist::Profile(Profile::from_json(j)?)),
+            Some(other) => Err(format!("unknown hist type '{other}'")),
+        }
+    }
+}
+
+/// A labeled aux sink — the unit the docstore reduction and the wire
+/// protocol's `hists` array carry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sink {
+    pub label: String,
+    pub hist: Hist,
+}
+
+impl Sink {
+    /// A same-shaped, zeroed copy carrying the same label.
+    pub fn fresh(&self) -> Sink {
+        Sink {
+            label: self.label.clone(),
+            hist: self.hist.fresh(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut body = self.hist.to_json();
+        if let Json::Obj(map) = &mut body {
+            map.insert("label".into(), Json::str(&self.label));
+        }
+        body
+    }
+
+    pub fn from_json(j: &Json) -> Result<Sink, String> {
+        Ok(Sink {
+            label: j.get("label").and_then(|l| l.as_str()).unwrap_or("").to_string(),
+            hist: Hist::from_json(j)?,
+        })
+    }
+}
+
+/// The mutable fill targets of one executing query: the primary `H1`
+/// every plain `fill` shares, plus the program's aux sinks. Executors
+/// thread one of these through statement dispatch so all fill forms hit
+/// the right reducer without each tier re-deriving sink shapes.
+pub struct SinkSet<'a> {
+    pub primary: &'a mut H1,
+    pub aux: &'a mut [Sink],
+}
+
+impl<'a> SinkSet<'a> {
+    pub fn fill2(&mut self, sink: usize, x: f64, y: f64, w: f64) -> Result<(), String> {
+        match self.aux.get_mut(sink).map(|s| &mut s.hist) {
+            Some(Hist::H2(h)) => {
+                h.fill_w(x, y, w);
+                Ok(())
+            }
+            _ => Err(format!("aux sink {sink} is not an H2")),
+        }
+    }
+
+    pub fn fill_prof(&mut self, sink: usize, x: f64, y: f64, w: f64) -> Result<(), String> {
+        match self.aux.get_mut(sink).map(|s| &mut s.hist) {
+            Some(Hist::Profile(p)) => {
+                p.fill_w(x, y, w);
+                Ok(())
+            }
+            _ => Err(format!("aux sink {sink} is not a profile")),
+        }
+    }
+
+    pub fn fill_var(&mut self, sink: usize, x: f64, w: f64) -> Result<(), String> {
+        match self.aux.get_mut(sink).map(|s| &mut s.hist) {
+            Some(Hist::H1(h)) => {
+                h.fill_w(x, w);
+                Ok(())
+            }
+            _ => Err(format!("aux sink {sink} is not an H1")),
+        }
+    }
+}
+
+/// Merge two aux-sink sets in order (labels and shapes must line up) —
+/// the group analogue of `H1::merge`, applied in the same deterministic
+/// partition/morsel order as the primary so results stay bit-exact.
+pub fn merge_aux(into: &mut [Sink], part: &[Sink]) -> Result<(), String> {
+    if into.len() != part.len() {
+        return Err(format!("aux sink count mismatch: {} vs {}", into.len(), part.len()));
+    }
+    for (a, b) in into.iter_mut().zip(part) {
+        if a.label != b.label {
+            return Err(format!("aux sink label mismatch: '{}' vs '{}'", a.label, b.label));
+        }
+        a.hist.merge(&b.hist)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tagged_json_roundtrip() {
+        let mut h2 = H2::new(2, 0.0, 2.0, 2, 0.0, 2.0);
+        h2.fill(0.5, 1.5);
+        let mut p = Profile::new(2, 0.0, 2.0);
+        p.fill(0.5, 7.0);
+        let mut h1 = H1::new(4, 0.0, 4.0);
+        h1.fill(1.0);
+        for (label, hist) in [
+            ("h2#0", Hist::H2(h2)),
+            ("prof#1", Hist::Profile(p)),
+            ("var#2.0", Hist::H1(h1)),
+        ] {
+            let s = Sink { label: label.into(), hist };
+            let j = Json::parse(&s.to_json().to_string()).unwrap();
+            assert_eq!(Sink::from_json(&j).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn untagged_json_is_h1_back_compat() {
+        let mut h1 = H1::new(4, 0.0, 4.0);
+        h1.fill(2.0);
+        let j = Json::parse(&h1.to_json().to_string()).unwrap();
+        assert_eq!(Hist::from_json(&j).unwrap(), Hist::H1(h1));
+    }
+
+    #[test]
+    fn merge_aux_checks_alignment() {
+        let s = |label: &str| Sink { label: label.into(), hist: Hist::H1(H1::new(2, 0.0, 2.0)) };
+        let mut a = vec![s("x"), s("y")];
+        let b = vec![s("x"), s("y")];
+        merge_aux(&mut a, &b).unwrap();
+        let c = vec![s("x"), s("z")];
+        assert!(merge_aux(&mut a, &c).is_err());
+        let d = vec![s("x")];
+        assert!(merge_aux(&mut a, &d).is_err());
+        let shape = vec![
+            s("x"),
+            Sink { label: "y".into(), hist: Hist::H2(H2::new(2, 0.0, 2.0, 2, 0.0, 2.0)) },
+        ];
+        assert!(merge_aux(&mut a, &shape).is_err());
+    }
+}

@@ -7,7 +7,7 @@ use hepq::datagen::{generate_drellyan, generate_ttbar};
 use hepq::engine::executor::PjrtBackend;
 use hepq::engine::{Backend, Query, QueryKind};
 use hepq::format::{write_dataset, Codec, DatasetReader, WriteOptions};
-use hepq::hist::{ascii, H1};
+use hepq::hist::{ascii, Sink, H1};
 use hepq::server::{Client, Server, ServerConfig};
 use hepq::util::cli::{App, CommandSpec, Matches};
 use std::path::Path;
@@ -40,6 +40,9 @@ fn app() -> App {
                 .opt("bins", "64", "histogram bins")
                 .opt("lo", "0", "histogram lower edge")
                 .opt("hi", "128", "histogram upper edge")
+                .opt("y-bins", "32", "y bins for fill2 H2 sinks")
+                .opt("y-lo", "0", "y lower edge for fill2 H2 sinks")
+                .opt("y-hi", "128", "y upper edge for fill2 H2 sinks")
                 .opt(
                     "backend",
                     "compiled",
@@ -99,6 +102,9 @@ fn app() -> App {
                 .opt("bins", "64", "bins")
                 .opt("lo", "0", "lower edge")
                 .opt("hi", "128", "upper edge")
+                .opt("y-bins", "32", "y bins for fill2 H2 sinks")
+                .opt("y-lo", "0", "y lower edge for fill2 H2 sinks")
+                .opt("y-hi", "128", "y upper edge for fill2 H2 sinks")
                 .pos("dataset", "dataset name on the server"),
         ],
     }
@@ -239,6 +245,11 @@ fn cmd_query(m: &Matches) -> Result<(), String> {
         m.usize("bins").map_err(|e| e.to_string())?,
         m.f64("lo").map_err(|e| e.to_string())?,
         m.f64("hi").map_err(|e| e.to_string())?,
+    )
+    .with_y_binning(
+        m.usize("y-bins").map_err(|e| e.to_string())?,
+        m.f64("y-lo").map_err(|e| e.to_string())?,
+        m.f64("y-hi").map_err(|e| e.to_string())?,
     );
     let t0 = std::time::Instant::now();
     // Selective read: only the branches this query touches (the full
@@ -276,7 +287,8 @@ fn cmd_query(m: &Matches) -> Result<(), String> {
     let zones = r.header.zones.clone();
     let mut hist = H1::new(query.n_bins, query.lo, query.hi);
     let t1 = std::time::Instant::now();
-    let zone_report = backend.run_indexed(&query, &data, zones.as_ref(), &mut hist)?;
+    let (aux, zone_report) =
+        backend.run_group_indexed(&query, &data, zones.as_ref(), &mut hist)?;
     let t_run = t1.elapsed();
     let title = if src_file.is_empty() {
         format!("{} over {}", m.str("kind"), m.str("file"))
@@ -284,6 +296,11 @@ fn cmd_query(m: &Matches) -> Result<(), String> {
         format!("{} over {}", src_file, m.str("file"))
     };
     println!("{}", ascii::render(&hist, &title, 48));
+    // AGC-style queries: every fill2/profile/fill_vars sink, labeled by
+    // fill site, rendered with the shape's own renderer.
+    for s in &aux {
+        println!("{}", ascii::render_sink(s, 48));
+    }
     println!(
         "read {:.1} ms ({} B), compute {:.1} ms, {:.2e} events/s",
         t_read.as_secs_f64() * 1e3,
@@ -374,6 +391,11 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
         m.usize("bins").map_err(|e| e.to_string())?,
         m.f64("lo").map_err(|e| e.to_string())?,
         m.f64("hi").map_err(|e| e.to_string())?,
+    )
+    .with_y_binning(
+        m.usize("y-bins").map_err(|e| e.to_string())?,
+        m.f64("y-lo").map_err(|e| e.to_string())?,
+        m.f64("y-hi").map_err(|e| e.to_string())?,
     );
     let mut client = Client::connect(m.str("addr"))?;
     // Honor the server's structured overload shedding: back off for the
@@ -388,6 +410,12 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
     }
     let hist = H1::from_json(resp.get("hist").ok_or("no hist in response")?)?;
     println!("{}", ascii::render(&hist, &format!("{} @ {}", m.str("kind"), m.str("dataset")), 48));
+    // AGC-style responses carry a labeled `hists` array of aux sinks.
+    if let Some(hists) = resp.get("hists").and_then(|h| h.as_arr()) {
+        for j in hists {
+            println!("{}", ascii::render_sink(&Sink::from_json(j)?, 48));
+        }
+    }
     println!(
         "latency {:.0} ms, {} events{}",
         resp.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),

@@ -85,6 +85,16 @@ pub enum Stmt {
     },
     /// `fill(expr)` / `fill(expr, weight)` — histogram fill.
     Fill(Expr, Option<Expr>),
+    /// `fill2(x, y)` / `fill2(x, y, weight)` — 2-D histogram fill into
+    /// this site's own `H2` aux sink.
+    Fill2(Expr, Expr, Option<Expr>),
+    /// `profile(x, y)` / `profile(x, y, weight)` — profile fill into this
+    /// site's own `Profile` aux sink (mean/spread of y binned by x).
+    FillProf(Expr, Expr, Option<Expr>),
+    /// `fill_vars(x, w0, w1, ...)` — systematic-variation batch: one
+    /// weighted fill of x per weight expression, each into its own `H1`
+    /// aux sink, all evaluated in a single pass.
+    FillVars(Expr, Vec<Expr>),
 }
 
 /// A parsed program: the statements of the top-level `for event in dataset:`

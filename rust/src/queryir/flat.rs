@@ -10,7 +10,7 @@
 use super::ast::{apply_builtin, BinOp, CmpOp};
 use super::transform::{CExpr, CStmt, FlatProgram};
 use crate::columnar::arrays::ColumnSet;
-use crate::hist::H1;
+use crate::hist::{Sink, SinkSet, H1};
 
 /// Column views resolved once per partition.
 struct Ctx<'a> {
@@ -23,20 +23,55 @@ struct Ctx<'a> {
 }
 
 pub fn run(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
-    run_inner(prog, cs, hist, true)
+    require_no_aux(prog)?;
+    run_inner(prog, cs, hist, &mut [], true)
 }
 
 /// Run without the fusion optimization (for the ablation bench).
 pub fn run_unfused(prog: &FlatProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
-    run_inner(prog, cs, hist, false)
+    require_no_aux(prog)?;
+    run_inner(prog, cs, hist, &mut [], false)
+}
+
+/// Run a program with aux sinks (`fill2`/`profile`/`fill_vars`): the
+/// primary `H1` and one pre-built sink per `prog.aux` entry (see
+/// `FlatProgram::make_aux`).
+pub fn run_group(
+    prog: &FlatProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<(), String> {
+    run_inner(prog, cs, hist, aux, true)
+}
+
+/// An H1-only entry point refuses programs with aux sinks rather than
+/// silently dropping their fills.
+pub(crate) fn require_no_aux(prog: &FlatProgram) -> Result<(), String> {
+    if prog.aux.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "query has {} aux sink(s) (fill2/profile/fill_vars); use the group API",
+            prog.aux.len()
+        ))
+    }
 }
 
 fn run_inner(
     prog: &FlatProgram,
     cs: &ColumnSet,
     hist: &mut H1,
+    aux: &mut [Sink],
     allow_fused: bool,
 ) -> Result<(), String> {
+    if aux.len() != prog.aux.len() {
+        return Err(format!(
+            "aux sink count mismatch: program declares {}, caller passed {}",
+            prog.aux.len(),
+            aux.len()
+        ));
+    }
     let mut item_cols = Vec::with_capacity(prog.item_cols.len());
     for path in &prog.item_cols {
         item_cols.push(
@@ -69,24 +104,25 @@ fn run_inner(
         slots: vec![0.0; prog.n_slots],
         event: 0,
     };
+    let mut sinks = SinkSet { primary: hist, aux };
     if let (true, Some(fused)) = (allow_fused, prog.fused.as_ref()) {
         // Single fused loop: `for k in 0..total` — no event iteration.
         ctx.event = 0;
         for s in fused {
-            exec(s, &mut ctx, hist)?;
+            exec(s, &mut ctx, &mut sinks)?;
         }
         return Ok(());
     }
     for ev in 0..cs.n_events {
         ctx.event = ev;
         for s in &prog.body {
-            exec(s, &mut ctx, hist)?;
+            exec(s, &mut ctx, &mut sinks)?;
         }
     }
     Ok(())
 }
 
-fn exec(s: &CStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
+fn exec(s: &CStmt, ctx: &mut Ctx, sinks: &mut SinkSet) -> Result<(), String> {
     match s {
         CStmt::Assign { slot, expr } => {
             ctx.slots[*slot] = eval(expr, ctx)?;
@@ -98,7 +134,7 @@ fn exec(s: &CStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
             for k in lo..hi {
                 ctx.slots[*slot] = k as f64;
                 for s in body {
-                    exec(s, ctx, hist)?;
+                    exec(s, ctx, sinks)?;
                 }
             }
             Ok(())
@@ -109,7 +145,7 @@ fn exec(s: &CStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
             for k in lo..hi {
                 ctx.slots[*slot] = k as f64;
                 for s in body {
-                    exec(s, ctx, hist)?;
+                    exec(s, ctx, sinks)?;
                 }
             }
             Ok(())
@@ -117,7 +153,7 @@ fn exec(s: &CStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
         CStmt::If { cond, then, els } => {
             let branch = if eval(cond, ctx)? != 0.0 { then } else { els };
             for s in branch {
-                exec(s, ctx, hist)?;
+                exec(s, ctx, sinks)?;
             }
             Ok(())
         }
@@ -127,7 +163,33 @@ fn exec(s: &CStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
                 Some(w) => eval(w, ctx)?,
                 None => 1.0,
             };
-            hist.fill_w(x, w);
+            sinks.primary.fill_w(x, w);
+            Ok(())
+        }
+        CStmt::Fill2 { sink, x, y, weight } => {
+            let xv = eval(x, ctx)?;
+            let yv = eval(y, ctx)?;
+            let w = match weight {
+                Some(w) => eval(w, ctx)?,
+                None => 1.0,
+            };
+            sinks.fill2(*sink, xv, yv, w)
+        }
+        CStmt::FillProf { sink, x, y, weight } => {
+            let xv = eval(x, ctx)?;
+            let yv = eval(y, ctx)?;
+            let w = match weight {
+                Some(w) => eval(w, ctx)?,
+                None => 1.0,
+            };
+            sinks.fill_prof(*sink, xv, yv, w)
+        }
+        CStmt::FillVars { sink, x, weights } => {
+            let xv = eval(x, ctx)?;
+            for (k, w) in weights.iter().enumerate() {
+                let wv = eval(w, ctx)?;
+                sinks.fill_var(*sink + k, xv, wv)?;
+            }
             Ok(())
         }
     }

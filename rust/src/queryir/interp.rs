@@ -8,7 +8,7 @@
 use super::ast::{apply_builtin, BinOp, CmpOp, Expr, Iter, Program, Stmt};
 use crate::columnar::arrays::ColumnSet;
 use crate::columnar::explode::{materialize, Value};
-use crate::hist::H1;
+use crate::hist::{Sink, SinkSet, H1};
 use std::collections::HashMap;
 use std::rc::Rc;
 
@@ -18,13 +18,78 @@ enum RtVal {
     Node(Rc<Value>),
 }
 
+/// Statement-pointer → base aux-sink index, assigned in source order
+/// (`then` before `els`) so the numbering matches `Transformer`'s.
+struct AuxMap {
+    sinks: Vec<(*const Stmt, usize)>,
+    n_sinks: usize,
+}
+
+impl AuxMap {
+    fn build(prog: &Program) -> AuxMap {
+        let mut m = AuxMap { sinks: Vec::new(), n_sinks: 0 };
+        m.scan(&prog.body);
+        m
+    }
+
+    fn scan(&mut self, body: &[Stmt]) {
+        for s in body {
+            match s {
+                Stmt::Fill2(..) | Stmt::FillProf(..) => {
+                    self.sinks.push((s as *const Stmt, self.n_sinks));
+                    self.n_sinks += 1;
+                }
+                Stmt::FillVars(_, ws) => {
+                    self.sinks.push((s as *const Stmt, self.n_sinks));
+                    self.n_sinks += ws.len();
+                }
+                Stmt::For { body, .. } => self.scan(body),
+                Stmt::If { then, els, .. } => {
+                    self.scan(then);
+                    self.scan(els);
+                }
+                Stmt::Assign(..) | Stmt::Fill(..) => {}
+            }
+        }
+    }
+
+    fn sink_of(&self, s: &Stmt) -> usize {
+        let p = s as *const Stmt;
+        self.sinks
+            .iter()
+            .find(|(q, _)| *q == p)
+            .map(|(_, i)| *i)
+            .expect("aux statement not indexed")
+    }
+}
+
 pub fn run(prog: &Program, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    run_group(prog, cs, hist, &mut [])
+}
+
+/// Run with aux sinks (`fill2`/`profile`/`fill_vars`): caller passes one
+/// pre-built sink per aux declaration (`FlatProgram::make_aux` shapes).
+pub fn run_group(
+    prog: &Program,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<(), String> {
+    let map = AuxMap::build(prog);
+    if map.n_sinks != aux.len() {
+        return Err(format!(
+            "query has {} aux sink(s), caller passed {} (use the group API)",
+            map.n_sinks,
+            aux.len()
+        ));
+    }
+    let mut sinks = SinkSet { primary: hist, aux };
     let mut env: HashMap<String, RtVal> = HashMap::new();
     for i in 0..cs.n_events {
         let event = Rc::new(materialize(cs, i)?);
         env.insert(prog.event_var.clone(), RtVal::Node(event));
         for s in &prog.body {
-            exec(s, &mut env, hist)?;
+            exec(s, &mut env, &mut sinks, &map)?;
         }
     }
     Ok(())
@@ -33,17 +98,27 @@ pub fn run(prog: &Program, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> 
 /// Run over pre-materialized events (to time the analysis loop separately
 /// from materialization).
 pub fn run_materialized(prog: &Program, events: &[Value], hist: &mut H1) -> Result<(), String> {
+    let map = AuxMap::build(prog);
+    if map.n_sinks != 0 {
+        return Err("program has aux sinks; use run_group".into());
+    }
+    let mut sinks = SinkSet { primary: hist, aux: &mut [] };
     let mut env: HashMap<String, RtVal> = HashMap::new();
     for ev in events {
         env.insert(prog.event_var.clone(), RtVal::Node(Rc::new(ev.clone())));
         for s in &prog.body {
-            exec(s, &mut env, hist)?;
+            exec(s, &mut env, &mut sinks, &map)?;
         }
     }
     Ok(())
 }
 
-fn exec(s: &Stmt, env: &mut HashMap<String, RtVal>, hist: &mut H1) -> Result<(), String> {
+fn exec(
+    s: &Stmt,
+    env: &mut HashMap<String, RtVal>,
+    sinks: &mut SinkSet,
+    map: &AuxMap,
+) -> Result<(), String> {
     match s {
         Stmt::Assign(name, e) => {
             let v = eval(e, env)?;
@@ -62,7 +137,7 @@ fn exec(s: &Stmt, env: &mut HashMap<String, RtVal>, hist: &mut H1) -> Result<(),
                     for k in lo..hi {
                         env.insert(var.clone(), RtVal::Num(k as f64));
                         for s in body {
-                            exec(s, env, hist)?;
+                            exec(s, env, sinks, map)?;
                         }
                     }
                 }
@@ -75,7 +150,7 @@ fn exec(s: &Stmt, env: &mut HashMap<String, RtVal>, hist: &mut H1) -> Result<(),
                     for item in items {
                         env.insert(var.clone(), RtVal::Node(Rc::new(item)));
                         for s in body {
-                            exec(s, env, hist)?;
+                            exec(s, env, sinks, map)?;
                         }
                     }
                 }
@@ -86,7 +161,7 @@ fn exec(s: &Stmt, env: &mut HashMap<String, RtVal>, hist: &mut H1) -> Result<(),
             let c = as_num(&eval(cond, env)?)?;
             let branch = if c != 0.0 { then } else { els };
             for s in branch {
-                exec(s, env, hist)?;
+                exec(s, env, sinks, map)?;
             }
             Ok(())
         }
@@ -96,7 +171,34 @@ fn exec(s: &Stmt, env: &mut HashMap<String, RtVal>, hist: &mut H1) -> Result<(),
                 Some(w) => as_num(&eval(w, env)?)?,
                 None => 1.0,
             };
-            hist.fill_w(x, w);
+            sinks.primary.fill_w(x, w);
+            Ok(())
+        }
+        Stmt::Fill2(x, y, w) => {
+            let xv = as_num(&eval(x, env)?)?;
+            let yv = as_num(&eval(y, env)?)?;
+            let wv = match w {
+                Some(w) => as_num(&eval(w, env)?)?,
+                None => 1.0,
+            };
+            sinks.fill2(map.sink_of(s), xv, yv, wv)
+        }
+        Stmt::FillProf(x, y, w) => {
+            let xv = as_num(&eval(x, env)?)?;
+            let yv = as_num(&eval(y, env)?)?;
+            let wv = match w {
+                Some(w) => as_num(&eval(w, env)?)?,
+                None => 1.0,
+            };
+            sinks.fill_prof(map.sink_of(s), xv, yv, wv)
+        }
+        Stmt::FillVars(x, ws) => {
+            let xv = as_num(&eval(x, env)?)?;
+            let base = map.sink_of(s);
+            for (k, w) in ws.iter().enumerate() {
+                let wv = as_num(&eval(w, env)?)?;
+                sinks.fill_var(base + k, xv, wv)?;
+            }
             Ok(())
         }
     }

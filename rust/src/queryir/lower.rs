@@ -34,16 +34,29 @@
 //!   * **item kernels** — the fused single-list loop above, lanes are
 //!     `CHUNK` contiguous items;
 //!   * **event kernels** — per-event bodies over event-scalar leaves
-//!     (`event.met`), `len(...)` cuts and indexed item loads
-//!     (`event.muons[0].pt`, a bounds-checked gather), lanes are `CHUNK`
+//!     (`event.met`), `len(...)` cuts and indexed item loads: constant
+//!     in-event indices (`event.muons[0].pt`) become window-proven
+//!     gathers, **dynamic** indices (`event.muons[n - 1].pt`) become
+//!     per-lane bounds-masked gathers that report out-of-bounds through
+//!     the same sticky flag as the scalar closures; lanes are `CHUNK`
 //!     contiguous events with assignments inlined by substitution
 //!     (`transform::inline_event_body`);
 //!   * **pair kernels** — the `for i in range(n): for j in range(i+1, n)`
-//!     nest of the paper's dimuon-mass query: per-event `(i, j)` index
-//!     pairs are materialized in scalar nest order into flat pair buffers,
-//!     `CHUNK` pairs at a time, and the batch pass gathers item loads
-//!     through them — bit-identical to the scalar nest because pair order
-//!     and per-element arithmetic are preserved.
+//!     nest of the paper's dimuon-mass query, and the **cross-list**
+//!     variant `for i in range(len(event.muons)): for j in
+//!     range(len(event.jets))`: per-event `(i, j)` index pairs are
+//!     materialized in scalar nest order into flat pair buffers, `CHUNK`
+//!     pairs at a time, and the batch pass gathers each side's item loads
+//!     through its own list — bit-identical to the scalar nest because
+//!     pair order and per-element arithmetic are preserved.
+//!
+//! Beyond the primary `H1`, every kernel family fills a query's **aux
+//! sinks** (`fill2` H2s, `profile` profiles, `fill_vars` variation H1s —
+//! see `crate::hist::sink`) in the same pass: aux fill sites ride the same
+//! interned mask/value/weight buffer table and dispatch straight into the
+//! sink's own `fill_w`, so an AGC-style many-histogram query costs one
+//! scan. Programs with aux sinks must run through the `*_group` entry
+//! points; the single-histogram APIs refuse them.
 //!
 //! The only fused shape left on the scalar closure loop is an expression
 //! tree deeper than `MAX_BATCH_DEPTH` (or a pair/event body that reads
@@ -91,9 +104,9 @@
 
 use super::ast::{BinOp, CmpOp};
 use super::predicate::{self, CutPredicate, ZoneDecision};
-use super::transform::{self, CExpr, CStmt, FlatProgram};
+use super::transform::{self, AuxKind, AuxSpec, CExpr, CStmt, FlatProgram};
 use crate::columnar::arrays::{ColumnRange, ColumnSet};
-use crate::hist::H1;
+use crate::hist::{merge_aux, Hist, Sink, SinkSet, H1};
 use crate::index::ZoneMap;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -108,8 +121,9 @@ pub const CHUNK: usize = 1024;
 /// so this bounds kernel stack use (~8 KiB × depth). Exceeding it is the
 /// **only** fused shape that still runs the scalar closure loop; event
 /// and pair bodies additionally fall back when they read state the batch
-/// pass cannot express (a loop index as a value, computed item indices,
-/// cross-event slot state — see `transform::inline_body`).
+/// pass cannot express (a loop index as a value, cross-event slot state,
+/// a gather whose index expression itself loads items — see
+/// `transform::inline_body` and `batch_compile`).
 const MAX_BATCH_DEPTH: usize = 24;
 
 /// Default morsel size for `run_parallel`, in events. Physics partitions
@@ -145,10 +159,14 @@ pub struct Ctx<'a> {
     /// Sticky out-of-bounds flag: loads report OOB here (returning 0.0)
     /// instead of threading `Result` through every closure call.
     oob: Cell<bool>,
+    /// Sticky sink-shape error flag: aux fills whose sink has the wrong
+    /// shape report here. Entry points validate shapes up front
+    /// (`check_aux`), so this only fires on a caller bypassing them.
+    sink_err: Cell<bool>,
 }
 
 type ExprFn = Box<dyn Fn(&Ctx) -> f64 + Send + Sync>;
-type StmtFn = Box<dyn Fn(&mut Ctx, &mut H1) + Send + Sync>;
+type StmtFn = Box<dyn Fn(&mut Ctx, &mut SinkSet) + Send + Sync>;
 
 /// The fused single-list loop, decomposed so it can run over any item
 /// range: `for k in offsets[list][ev_lo] .. offsets[list][ev_hi]`.
@@ -182,6 +200,9 @@ pub struct CompiledProgram {
     /// Cut predicate of the body, when it has an analyzable shape —
     /// what zone-map partition/chunk classification evaluates.
     predicate: Option<CutPredicate>,
+    /// Aux sinks (H2 / profile / variation H1s) this program fills, in
+    /// fill-site order; empty for classic single-histogram programs.
+    pub aux: Vec<AuxSpec>,
     /// Canonical hash of the transformed program this was lowered from.
     pub fingerprint: u64,
 }
@@ -233,6 +254,68 @@ impl CompiledProgram {
     pub fn is_prunable(&self) -> bool {
         self.predicate.is_some()
     }
+
+    /// Does this program declare aux sinks (and so require the `*_group`
+    /// entry points)?
+    pub fn has_aux(&self) -> bool {
+        !self.aux.is_empty()
+    }
+
+    /// Materialize this program's aux sinks — same shapes and labels as
+    /// `FlatProgram::make_aux`. `x` is the primary binning
+    /// `(n_bins, lo, hi)`, `y` the H2 y binning.
+    pub fn make_aux(&self, x: (usize, f64, f64), y: (usize, f64, f64)) -> Vec<Sink> {
+        transform::make_aux_sinks(&self.aux, x, y)
+    }
+}
+
+/// An H1-only entry point refuses programs with aux sinks rather than
+/// silently dropping their fills.
+fn require_no_aux(prog: &CompiledProgram) -> Result<(), String> {
+    if prog.aux.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "query has {} aux sink(s) (fill2/profile/fill_vars); use the group API",
+            prog.aux.len()
+        ))
+    }
+}
+
+/// Validate a caller's sink vector against the program's declarations:
+/// count, label and shape must line up, so the kernels can dispatch fills
+/// without per-fill error paths.
+fn check_aux(prog: &CompiledProgram, aux: &[Sink]) -> Result<(), String> {
+    if aux.len() != prog.aux.len() {
+        return Err(format!(
+            "aux sink count mismatch: program declares {}, caller passed {}",
+            prog.aux.len(),
+            aux.len()
+        ));
+    }
+    for (spec, s) in prog.aux.iter().zip(aux) {
+        if spec.label != s.label {
+            return Err(format!(
+                "aux sink label mismatch: program declares '{}', caller passed '{}'",
+                spec.label, s.label
+            ));
+        }
+        let ok = matches!(
+            (spec.kind, &s.hist),
+            (AuxKind::H2, Hist::H2(_))
+                | (AuxKind::Profile, Hist::Profile(_))
+                | (AuxKind::Weight, Hist::H1(_))
+        );
+        if !ok {
+            return Err(format!(
+                "aux sink '{}' has shape {}, program expects {:?}",
+                s.label,
+                s.hist.type_name(),
+                spec.kind
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Which chunked kernel family a program lowered to.
@@ -437,6 +520,7 @@ pub fn lower(prog: &FlatProgram) -> Result<CompiledProgram, String> {
         event_kernel,
         pair_kernel,
         predicate: predicate::extract(prog),
+        aux: prog.aux.clone(),
         fingerprint: fingerprint(prog),
     })
 }
@@ -485,9 +569,67 @@ fn bind<'a>(prog: &CompiledProgram, cs: &'a ColumnSet) -> Result<BoundCols<'a>, 
 }
 
 /// Run a compiled program over one whole partition, accumulating into
-/// `hist`.
+/// `hist`. Refuses programs with aux sinks — use [`run_group`].
 pub fn run(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    require_no_aux(prog)?;
     run_range(prog, &cs.range(0, cs.n_events), hist)
+}
+
+/// `run` for programs with aux sinks (`fill2`/`profile`/`fill_vars`):
+/// caller passes one pre-built sink per aux declaration, in source order
+/// (shapes from [`CompiledProgram::make_aux`]). Also accepts aux-free
+/// programs with an empty slice.
+pub fn run_group(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<(), String> {
+    check_aux(prog, aux)?;
+    let cols = bind(prog, cs)?;
+    run_range_inner(
+        prog,
+        &cols,
+        0,
+        cs.n_events,
+        hist,
+        aux,
+        true,
+        None,
+        &mut IndexedRun::default(),
+        &mut KernelScratch::new(),
+    )
+}
+
+/// [`run_group`] with zone-map chunk skipping (the group analogue of
+/// [`run_indexed`]). Aux-bearing programs are never prunable (their fill
+/// statements defeat predicate extraction), so the plan is typically
+/// `None` — the entry point exists so group callers share one code path.
+pub fn run_group_indexed(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    zm: Option<&ZoneMap>,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<IndexedRun, String> {
+    check_aux(prog, aux)?;
+    let plan = zm.and_then(|z| chunk_plan(prog, z));
+    let cols = bind(prog, cs)?;
+    let mut report = IndexedRun::default();
+    let mut scratch = KernelScratch::new();
+    run_range_inner(
+        prog,
+        &cols,
+        0,
+        cs.n_events,
+        hist,
+        aux,
+        true,
+        plan.as_ref(),
+        &mut report,
+        &mut scratch,
+    )?;
+    Ok(report)
 }
 
 /// Run one whole partition with zone-map chunk skipping. Equals `run`
@@ -500,22 +642,8 @@ pub fn run_indexed(
     zm: Option<&ZoneMap>,
     hist: &mut H1,
 ) -> Result<IndexedRun, String> {
-    let plan = zm.and_then(|z| chunk_plan(prog, z));
-    let cols = bind(prog, cs)?;
-    let mut report = IndexedRun::default();
-    let mut scratch = KernelScratch::new();
-    run_range_inner(
-        prog,
-        &cols,
-        0,
-        cs.n_events,
-        hist,
-        true,
-        plan.as_ref(),
-        &mut report,
-        &mut scratch,
-    )?;
-    Ok(report)
+    require_no_aux(prog)?;
+    run_group_indexed(prog, cs, zm, hist, &mut [])
 }
 
 /// Run a compiled program over an event window of a partition. This is the
@@ -527,7 +655,32 @@ pub fn run_range(
     view: &ColumnRange<'_>,
     hist: &mut H1,
 ) -> Result<(), String> {
+    require_no_aux(prog)?;
     run_range_scratch(prog, view, hist, &mut KernelScratch::new())
+}
+
+/// `run_range` with aux sinks — the group morsel primitive the cluster
+/// worker and parallel driver use.
+pub fn run_range_group(
+    prog: &CompiledProgram,
+    view: &ColumnRange<'_>,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<(), String> {
+    check_aux(prog, aux)?;
+    let cols = bind(prog, view.cs)?;
+    run_range_inner(
+        prog,
+        &cols,
+        view.ev_lo,
+        view.ev_hi,
+        hist,
+        aux,
+        true,
+        None,
+        &mut IndexedRun::default(),
+        &mut KernelScratch::new(),
+    )
 }
 
 /// `run_range` with a caller-owned [`KernelScratch`]: the scratch
@@ -543,6 +696,7 @@ pub fn run_range_scratch(
     hist: &mut H1,
     scratch: &mut KernelScratch,
 ) -> Result<(), String> {
+    require_no_aux(prog)?;
     let cols = bind(prog, view.cs)?;
     run_range_inner(
         prog,
@@ -550,6 +704,7 @@ pub fn run_range_scratch(
         view.ev_lo,
         view.ev_hi,
         hist,
+        &mut [],
         true,
         None,
         &mut IndexedRun::default(),
@@ -561,6 +716,19 @@ pub fn run_range_scratch(
 /// scalar loop runs instead. Exists so benches and tests can measure and
 /// verify the two lowerings against each other.
 pub fn run_scalar(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    require_no_aux(prog)?;
+    run_scalar_group(prog, cs, hist, &mut [])
+}
+
+/// [`run_scalar`] with aux sinks — the bit-identity reference the property
+/// suite compares every chunked/parallel/cluster group run against.
+pub fn run_scalar_group(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<(), String> {
+    check_aux(prog, aux)?;
     let cols = bind(prog, cs)?;
     run_range_inner(
         prog,
@@ -568,6 +736,7 @@ pub fn run_scalar(prog: &CompiledProgram, cs: &ColumnSet, hist: &mut H1) -> Resu
         0,
         cs.n_events,
         hist,
+        aux,
         false,
         None,
         &mut IndexedRun::default(),
@@ -583,6 +752,13 @@ fn oob_check(oob: bool) -> Result<(), String> {
     }
 }
 
+fn ctx_check(ctx: &Ctx<'_>) -> Result<(), String> {
+    if ctx.sink_err.get() {
+        return Err("fill statement hit a mismatched aux sink shape".to_string());
+    }
+    oob_check(ctx.oob.get())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_range_inner(
     prog: &CompiledProgram,
@@ -590,6 +766,7 @@ fn run_range_inner(
     ev_lo: usize,
     ev_hi: usize,
     hist: &mut H1,
+    aux: &mut [Sink],
     allow_chunked: bool,
     plan: Option<&ChunkPlan>,
     report: &mut IndexedRun,
@@ -605,8 +782,7 @@ fn run_range_inner(
         let in_bounds = cols.items.iter().all(|c| c.len() >= k_hi);
         if let Some(ck) = &f.chunked {
             if allow_chunked && in_bounds {
-                run_chunked_items(ck, cols, k_lo, k_hi, hist, plan, report, scratch);
-                return Ok(());
+                return run_chunked_items(ck, cols, k_lo, k_hi, hist, aux, plan, report, scratch);
             }
         }
         let mut ctx = Ctx {
@@ -617,25 +793,25 @@ fn run_range_inner(
             event: ev_lo,
             ev_hi,
             oob: Cell::new(false),
+            sink_err: Cell::new(false),
         };
+        let mut sinks = SinkSet { primary: hist, aux };
         for k in k_lo..k_hi {
             ctx.slots[f.slot] = k as f64;
             for s in &f.body {
-                s(&mut ctx, hist);
+                s(&mut ctx, &mut sinks);
             }
         }
-        return oob_check(ctx.oob.get());
+        return ctx_check(&ctx);
     }
     if allow_chunked {
         if let Some(pk) = &prog.pair_kernel {
             if pair_window_safe(pk, cols, ev_lo, ev_hi) {
-                run_chunked_pairs(pk, cols, ev_lo, ev_hi, hist, scratch);
-                return Ok(());
+                return run_chunked_pairs(pk, cols, ev_lo, ev_hi, hist, aux, scratch);
             }
         } else if let Some(ek) = &prog.event_kernel {
             if event_window_safe(ek, cols, ev_lo, ev_hi) {
-                run_chunked_events(ek, cols, ev_lo, ev_hi, hist, plan, report, scratch);
-                return Ok(());
+                return run_chunked_events(ek, cols, ev_lo, ev_hi, hist, aux, plan, report, scratch);
             }
         }
     }
@@ -647,14 +823,16 @@ fn run_range_inner(
         event: ev_lo,
         ev_hi,
         oob: Cell::new(false),
+        sink_err: Cell::new(false),
     };
+    let mut sinks = SinkSet { primary: hist, aux };
     for ev in ev_lo..ev_hi {
         ctx.event = ev;
         for s in &prog.body {
-            s(&mut ctx, hist);
+            s(&mut ctx, &mut sinks);
         }
     }
-    oob_check(ctx.oob.get())
+    ctx_check(&ctx)
 }
 
 /// Morsel-driven parallel execution of one partition: split the event range
@@ -676,7 +854,22 @@ pub fn run_parallel(
     hist: &mut H1,
     cfg: ParallelCfg,
 ) -> Result<(), String> {
+    require_no_aux(prog)?;
     run_parallel_indexed(prog, cs, None, hist, cfg).map(|_| ())
+}
+
+/// Morsel-parallel group execution: every worker fills a fresh copy of the
+/// aux-sink set per morsel, and the per-morsel `(H1, Vec<Sink>)` partials
+/// are merged **in morsel order** (primary via `merge_many`, aux via
+/// [`merge_aux`]) so the result is independent of scheduling.
+pub fn run_parallel_group(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    aux: &mut [Sink],
+    cfg: ParallelCfg,
+) -> Result<(), String> {
+    run_parallel_group_indexed(prog, cs, None, hist, aux, cfg).map(|_| ())
 }
 
 /// `run_parallel` with zone-map chunk skipping: the partition's chunk
@@ -694,6 +887,22 @@ pub fn run_parallel_indexed(
     hist: &mut H1,
     cfg: ParallelCfg,
 ) -> Result<IndexedRun, String> {
+    require_no_aux(prog)?;
+    run_parallel_group_indexed(prog, cs, zm, hist, &mut [], cfg)
+}
+
+/// [`run_parallel_group`] with zone-map chunk skipping — the full group
+/// parallel driver (aux-free programs pass an empty slice and get exactly
+/// the old `run_parallel_indexed` behavior).
+pub fn run_parallel_group_indexed(
+    prog: &CompiledProgram,
+    cs: &ColumnSet,
+    zm: Option<&ZoneMap>,
+    hist: &mut H1,
+    aux: &mut [Sink],
+    cfg: ParallelCfg,
+) -> Result<IndexedRun, String> {
+    check_aux(prog, aux)?;
     let plan = zm.and_then(|z| chunk_plan(prog, z));
     let plan = plan.as_ref();
     // Resolve columns once; every morsel thread shares the bindings.
@@ -705,19 +914,40 @@ pub fn run_parallel_indexed(
     let mut report = IndexedRun::default();
     if threads <= 1 {
         let mut scratch = KernelScratch::new();
-        run_range_inner(prog, cols, 0, cs.n_events, hist, true, plan, &mut report, &mut scratch)?;
+        run_range_inner(
+            prog,
+            cols,
+            0,
+            cs.n_events,
+            hist,
+            aux,
+            true,
+            plan,
+            &mut report,
+            &mut scratch,
+        )?;
         return Ok(report);
     }
     let (n_bins, lo, hi) = (hist.n_bins(), hist.lo, hist.hi);
+    // Shape template the workers clone fresh per-morsel aux sets from
+    // (taken before the scope so the threads only borrow it immutably).
+    let template: Vec<Sink> = aux.iter().map(Sink::fresh).collect();
+    let template = &template;
     let next = AtomicUsize::new(0);
-    type MorselOut = (Vec<(usize, Result<H1, String>)>, IndexedRun);
+    type MorselOut = (
+        Vec<(usize, Result<(H1, Vec<Sink>), String>)>,
+        IndexedRun,
+    );
     let outs: Vec<MorselOut> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             handles.push(s.spawn(|| {
                 // Per-worker kernel state, created once and reused across
                 // every morsel this thread pulls: after the first morsel
-                // warms the pool, the kernel hot path allocates nothing.
+                // warms the pool, the kernel hot path allocates nothing
+                // (aux-bearing programs additionally allocate one fresh
+                // sink set per morsel — aux bins can't be pooled without
+                // breaking the ordered merge).
                 let mut scratch = KernelScratch::new();
                 let mut done = Vec::new();
                 let mut local = IndexedRun::default();
@@ -729,18 +959,20 @@ pub fn run_parallel_indexed(
                     let ev_lo = i * morsel;
                     let ev_hi = ((i + 1) * morsel).min(cs.n_events);
                     let mut h = H1::new(n_bins, lo, hi);
+                    let mut a: Vec<Sink> = template.iter().map(Sink::fresh).collect();
                     let r = run_range_inner(
                         prog,
                         cols,
                         ev_lo,
                         ev_hi,
                         &mut h,
+                        &mut a,
                         true,
                         plan,
                         &mut local,
                         &mut scratch,
                     );
-                    done.push((i, r.map(|_| h)));
+                    done.push((i, r.map(|_| (h, a))));
                 }
                 (done, local)
             }));
@@ -757,10 +989,16 @@ pub fn run_parallel_indexed(
     }
     results.sort_by_key(|(i, _)| *i);
     let mut parts = Vec::with_capacity(results.len());
+    let mut aux_parts = Vec::with_capacity(results.len());
     for (_, r) in results {
-        parts.push(r?);
+        let (h, a) = r?;
+        parts.push(h);
+        aux_parts.push(a);
     }
     hist.merge_many(&parts)?;
+    for a in &aux_parts {
+        merge_aux(aux, a)?;
+    }
     Ok(report)
 }
 
@@ -898,15 +1136,29 @@ struct ChunkedBody {
     gathers: Vec<(usize, usize, f64)>,
 }
 
-/// One `Fill` of a chunked body, as indices into the shared buffer table.
+/// Which reducer one chunked fill site targets.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum FillTarget {
+    /// The query's primary `H1` (through the branch-free [`Acc`]).
+    Primary,
+    /// Aux sink `k` (`fill2`/`profile`/one `fill_vars` variation).
+    Aux(usize),
+}
+
+/// One fill statement of a chunked body, as indices into the shared
+/// buffer table.
 struct FillSite {
     /// 0/1 cut mask (the conjunction of every enclosing `if`, with `else`
     /// branches negated); `None` means the fill is unconditional.
     mask: Option<usize>,
-    /// The fill value.
+    /// The fill value (the x axis).
     expr: usize,
+    /// The y value of a `fill2`/`profile` site; `None` for `H1` targets.
+    y: Option<usize>,
     /// The fill weight; `None` means weight 1.
     weight: Option<usize>,
+    /// Where the fill lands.
+    target: FillTarget,
 }
 
 /// Batch expression: a loop body re-expressed over the kernel's lanes.
@@ -931,6 +1183,19 @@ enum BExpr {
     /// in-event index. `event_window_safe` proves every lane in bounds
     /// before the kernel runs, so the gather needs no per-lane check.
     Gather { col: usize, list: usize, j: f64 },
+    /// Event lanes: an indexed item load at a **computed** in-event index
+    /// (`event.muons[n-1].pt`) — `idx` evaluates per lane, the load is
+    /// bounds-checked per lane (an out-of-range read sets the sticky
+    /// [`KernelFlags::oob`] and yields `0.0`, exactly the scalar closure's
+    /// behavior), and `guard` (the fill site's conjoined cut mask, when
+    /// the site is nested) suppresses both the read *and* the OOB report
+    /// on dead lanes so short-circuited scalar branches stay bit-exact.
+    GatherDyn {
+        col: usize,
+        list: usize,
+        idx: Box<BExpr>,
+        guard: Option<Box<BExpr>>,
+    },
     /// Pair lanes: item load at the pair's first (`i`) global index.
     LoadA(usize),
     /// Pair lanes: item load at the pair's second (`j`) global index.
@@ -989,9 +1254,12 @@ enum BatchMode {
     Items { slot: usize },
     /// Loop-free per-event body (assignments already inlined).
     Events,
-    /// `range(len(l))` pair nest: item loads at `__list_base(list, i|j)`.
+    /// `range(len(a))` × `range(len(b))` pair nest (same-list or
+    /// cross-list): item loads at `__list_base(list_a, i)` /
+    /// `__list_base(list_b, j)`.
     Pairs {
-        list: usize,
+        list_a: usize,
+        list_b: usize,
         slot_i: usize,
         slot_j: usize,
     },
@@ -1024,6 +1292,9 @@ fn compile_chunked(body: &[CStmt], mode: BatchMode) -> Option<ChunkedBody> {
     let mut used_mask = vec![false; b.bufs.len()];
     for f in &b.fills {
         used_value[f.expr] = true;
+        if let Some(y) = f.y {
+            used_value[y] = true;
+        }
         if let Some(w) = f.weight {
             used_value[w] = true;
         }
@@ -1046,10 +1317,19 @@ fn compile_chunked(body: &[CStmt], mode: BatchMode) -> Option<ChunkedBody> {
     })
 }
 
-/// Collect every `Gather` leaf of a batch expression as `(list, col, j)`.
+/// Collect every **static** `Gather` leaf of a batch expression as
+/// `(list, col, j)`. Dynamic gathers are deliberately not collected: they
+/// bounds-check per lane instead of relying on `event_window_safe`'s
+/// window proof, so only their subexpressions are scanned.
 fn collect_gathers(e: &BExpr, out: &mut Vec<(usize, usize, f64)>) {
     match e {
         BExpr::Gather { col, list, j } => out.push((*list, *col, *j)),
+        BExpr::GatherDyn { idx, guard, .. } => {
+            collect_gathers(idx, out);
+            if let Some(g) = guard {
+                collect_gathers(g, out);
+            }
+        }
         BExpr::Const(_)
         | BExpr::Idx
         | BExpr::Load(_)
@@ -1069,26 +1349,73 @@ fn collect_gathers(e: &BExpr, out: &mut Vec<(usize, usize, f64)>) {
     }
 }
 
+/// Is `idx` the static in-event index shape (`__list_base(Const list,
+/// Const j)` with `j` a non-negative integer) that batches to a window
+/// proven [`BExpr::Gather`]?
+fn static_gather_index(idx: &CExpr) -> bool {
+    match idx {
+        CExpr::Call(name, args) if *name == "__list_base" && args.len() == 2 => {
+            matches!(&args[0], CExpr::Const(_))
+                && matches!(&args[1], CExpr::Const(j) if *j >= 0.0 && j.fract() == 0.0)
+        }
+        _ => false,
+    }
+}
+
+/// Does this scalar expression contain an item load at a **computed**
+/// in-event index — one that would batch to a per-lane bounds-checked
+/// [`BExpr::GatherDyn`]?
+fn contains_dyn_gather(e: &CExpr) -> bool {
+    match e {
+        CExpr::LoadItem { idx, .. } => !static_gather_index(idx),
+        CExpr::Const(_) | CExpr::Slot(_) | CExpr::LoadEvent { .. } | CExpr::ListLen { .. } => false,
+        CExpr::Bin(_, l, r) | CExpr::Cmp(_, l, r) | CExpr::And(l, r) | CExpr::Or(l, r) => {
+            contains_dyn_gather(l) || contains_dyn_gather(r)
+        }
+        CExpr::Not(x) | CExpr::Neg(x) => contains_dyn_gather(x),
+        CExpr::Call(_, args) => args.iter().any(contains_dyn_gather),
+    }
+}
+
 /// Interning builder for `ChunkedBody`: batch expressions are keyed by
-/// their folded `CExpr` so equal masks, values and weights share a buffer.
+/// their folded `CExpr` **plus their effective guard** so equal masks,
+/// values and weights share a buffer — but a guarded dynamic gather never
+/// aliases the same expression under a different cut.
 struct ChunkedBuilder {
     mode: BatchMode,
-    keys: Vec<CExpr>,
+    keys: Vec<(CExpr, Option<CExpr>)>,
     bufs: Vec<BExpr>,
     fills: Vec<FillSite>,
 }
 
 impl ChunkedBuilder {
-    fn intern(&mut self, e: &CExpr) -> Option<usize> {
+    /// Does evaluating `e` on a dead lane risk a side effect the scalar
+    /// path would not have — i.e. must its dynamic gathers be guarded by
+    /// the fill site's mask?
+    fn needs_guard(&self, e: &CExpr) -> bool {
+        matches!(self.mode, BatchMode::Events) && contains_dyn_gather(e)
+    }
+
+    /// Intern `e` under the fill site's cut `guard` (`None` for masks and
+    /// unconditional sites). The guard only participates — in the key and
+    /// in compilation — when the expression actually contains a dynamic
+    /// gather; everything else is guard-independent and shares one buffer
+    /// across sites.
+    fn intern(&mut self, e: &CExpr, guard: Option<&CExpr>) -> Option<usize> {
         let folded = fold(e);
-        if let Some(i) = self.keys.iter().position(|k| *k == folded) {
+        let gkey = if self.needs_guard(&folded) {
+            guard.map(fold)
+        } else {
+            None
+        };
+        if let Some(i) = self.keys.iter().position(|k| k.0 == folded && k.1 == gkey) {
             return Some(i);
         }
-        let batch = batch_compile(&folded, self.mode)?;
+        let batch = batch_compile(&folded, self.mode, gkey.as_ref())?;
         if depth(&batch) > MAX_BATCH_DEPTH {
             return None;
         }
-        self.keys.push(folded);
+        self.keys.push((folded, gkey));
         self.bufs.push(batch);
         Some(self.bufs.len() - 1)
     }
@@ -1099,33 +1426,83 @@ impl ChunkedBuilder {
         for s in stmts {
             match s {
                 CStmt::Fill { expr, weight } => {
-                    let expr = self.intern(expr)?;
+                    let expr = self.intern(expr, mask)?;
                     let weight = match weight {
-                        Some(w) => Some(self.intern(w)?),
+                        Some(w) => Some(self.intern(w, mask)?),
                         None => None,
                     };
                     let mask = match mask {
-                        Some(m) => Some(self.intern(m)?),
+                        Some(m) => Some(self.intern(m, None)?),
                         None => None,
                     };
                     self.fills.push(FillSite {
                         mask,
                         expr,
+                        y: None,
                         weight,
+                        target: FillTarget::Primary,
                     });
+                }
+                CStmt::Fill2 { sink, x, y, weight } | CStmt::FillProf { sink, x, y, weight } => {
+                    let expr = self.intern(x, mask)?;
+                    let y = self.intern(y, mask)?;
+                    let weight = match weight {
+                        Some(w) => Some(self.intern(w, mask)?),
+                        None => None,
+                    };
+                    let mask = match mask {
+                        Some(m) => Some(self.intern(m, None)?),
+                        None => None,
+                    };
+                    self.fills.push(FillSite {
+                        mask,
+                        expr,
+                        y: Some(y),
+                        weight,
+                        target: FillTarget::Aux(*sink),
+                    });
+                }
+                CStmt::FillVars { sink, x, weights } => {
+                    let expr = self.intern(x, mask)?;
+                    let ws = weights
+                        .iter()
+                        .map(|w| self.intern(w, mask))
+                        .collect::<Option<Vec<_>>>()?;
+                    let mask = match mask {
+                        Some(m) => Some(self.intern(m, None)?),
+                        None => None,
+                    };
+                    for (k, w) in ws.into_iter().enumerate() {
+                        self.fills.push(FillSite {
+                            mask,
+                            expr,
+                            y: None,
+                            weight: Some(w),
+                            target: FillTarget::Aux(sink + k),
+                        });
+                    }
                 }
                 CStmt::If { cond, then, els } => {
                     // Truthiness matches the scalar closure: a branch is
                     // taken when `cond != 0.0` — NaN conditions select the
                     // then-branch on both paths, since `NaN != 0.0` holds.
+                    //
+                    // A *nested* condition containing a dynamic gather
+                    // refuses: the scalar path short-circuits it on events
+                    // failing the outer cut (so its OOB never fires), but
+                    // the batched mask would evaluate it everywhere. The
+                    // program keeps the bounds-checked scalar loop.
+                    if mask.is_some() && self.needs_guard(cond) {
+                        return None;
+                    }
                     self.block(then, Some(&conjoin(mask, cond)))?;
                     if !els.is_empty() {
                         let negated = CExpr::Not(Box::new(cond.clone()));
                         self.block(els, Some(&conjoin(mask, &negated)))?;
                     }
                 }
-                // `try_fuse` admits only Fill and If inside a fused body;
-                // anything else keeps the scalar loop.
+                // `try_fuse` admits only fills and `if`s inside a fused
+                // body; anything else keeps the scalar loop.
                 _ => return None,
             }
         }
@@ -1141,7 +1518,12 @@ fn conjoin(mask: Option<&CExpr>, cond: &CExpr) -> CExpr {
     }
 }
 
-fn batch_compile(e: &CExpr, mode: BatchMode) -> Option<BExpr> {
+/// Re-express a folded scalar expression over the lane family `mode`.
+/// `guard` is the fill site's cut mask (already folded), consumed only by
+/// dynamic gather leaves — it suppresses their loads on masked-out lanes
+/// so the kernel's sticky OOB report matches the short-circuiting scalar
+/// path exactly.
+fn batch_compile(e: &CExpr, mode: BatchMode, guard: Option<&CExpr>) -> Option<BExpr> {
     Some(match e {
         CExpr::Const(n) => BExpr::Const(*n),
         CExpr::Slot(s) => match mode {
@@ -1151,36 +1533,53 @@ fn batch_compile(e: &CExpr, mode: BatchMode) -> Option<BExpr> {
             _ => return None,
         },
         CExpr::LoadItem { col, idx } => match mode {
-            BatchMode::Items { .. } => match batch_compile(idx, mode)? {
+            BatchMode::Items { .. } => match batch_compile(idx, mode, None)? {
                 // Only direct loads at the loop index are contiguous;
                 // computed indices stay on the bounds-checked scalar path.
                 BExpr::Idx => BExpr::Load(*col),
                 _ => return None,
             },
-            // Event bodies index items at constant in-event positions
-            // (`event.muons[0].pt` → `__list_base(list, 0)`): a gather
-            // whose window bounds are provable up front. Computed indices
-            // stay on the bounds-checked scalar path.
+            // Event bodies index items at in-event positions
+            // (`event.muons[j].pt` → `__list_base(list, j)`): a constant
+            // `j` becomes a window proven gather; a computed `j` becomes a
+            // per-lane bounds-checked dynamic gather, provided the index
+            // expression itself reads no items (a nested gather would read
+            // out of bounds on dead lanes before the guard applies).
             BatchMode::Events => match idx.as_ref() {
                 CExpr::Call(name, args) if *name == "__list_base" && args.len() == 2 => {
-                    let (CExpr::Const(lid), CExpr::Const(j)) = (&args[0], &args[1]) else {
+                    let CExpr::Const(lid) = &args[0] else {
                         return None;
                     };
-                    if !(*j >= 0.0 && j.fract() == 0.0) {
-                        return None;
-                    }
-                    BExpr::Gather {
-                        col: *col,
-                        list: *lid as usize,
-                        j: *j,
+                    match &args[1] {
+                        CExpr::Const(j) if *j >= 0.0 && j.fract() == 0.0 => BExpr::Gather {
+                            col: *col,
+                            list: *lid as usize,
+                            j: *j,
+                        },
+                        jexpr => {
+                            if transform::contains_item_load(jexpr) {
+                                return None;
+                            }
+                            BExpr::GatherDyn {
+                                col: *col,
+                                list: *lid as usize,
+                                idx: Box::new(batch_compile(jexpr, mode, None)?),
+                                guard: match guard {
+                                    Some(g) => Some(Box::new(batch_compile(g, mode, None)?)),
+                                    None => None,
+                                },
+                            }
+                        }
                     }
                 }
                 _ => return None,
             },
-            // Pair bodies load exactly at `__list_base(list, i)` or
-            // `__list_base(list, j)` — the materialized pair lanes.
+            // Pair bodies load exactly at `__list_base(list_a, i)` or
+            // `__list_base(list_b, j)` — the materialized pair lanes
+            // (each loop index only reads its own list).
             BatchMode::Pairs {
-                list,
+                list_a,
+                list_b,
                 slot_i,
                 slot_j,
             } => match idx.as_ref() {
@@ -1188,12 +1587,9 @@ fn batch_compile(e: &CExpr, mode: BatchMode) -> Option<BExpr> {
                     let (CExpr::Const(lid), CExpr::Slot(s)) = (&args[0], &args[1]) else {
                         return None;
                     };
-                    if *lid as usize != list {
-                        return None;
-                    }
-                    if *s == slot_i {
+                    if *s == slot_i && *lid as usize == list_a {
                         BExpr::LoadA(*col)
-                    } else if *s == slot_j {
+                    } else if *s == slot_j && *lid as usize == list_b {
                         BExpr::LoadB(*col)
                     } else {
                         return None;
@@ -1212,33 +1608,33 @@ fn batch_compile(e: &CExpr, mode: BatchMode) -> Option<BExpr> {
         },
         CExpr::Bin(op, l, r) => BExpr::Bin(
             *op,
-            Box::new(batch_compile(l, mode)?),
-            Box::new(batch_compile(r, mode)?),
+            Box::new(batch_compile(l, mode, guard)?),
+            Box::new(batch_compile(r, mode, guard)?),
         ),
         CExpr::Cmp(op, l, r) => BExpr::Cmp(
             *op,
-            Box::new(batch_compile(l, mode)?),
-            Box::new(batch_compile(r, mode)?),
+            Box::new(batch_compile(l, mode, guard)?),
+            Box::new(batch_compile(r, mode, guard)?),
         ),
         CExpr::And(l, r) => BExpr::And(
-            Box::new(batch_compile(l, mode)?),
-            Box::new(batch_compile(r, mode)?),
+            Box::new(batch_compile(l, mode, guard)?),
+            Box::new(batch_compile(r, mode, guard)?),
         ),
         CExpr::Or(l, r) => BExpr::Or(
-            Box::new(batch_compile(l, mode)?),
-            Box::new(batch_compile(r, mode)?),
+            Box::new(batch_compile(l, mode, guard)?),
+            Box::new(batch_compile(r, mode, guard)?),
         ),
-        CExpr::Not(x) => BExpr::Not(Box::new(batch_compile(x, mode)?)),
-        CExpr::Neg(x) => BExpr::Neg(Box::new(batch_compile(x, mode)?)),
+        CExpr::Not(x) => BExpr::Not(Box::new(batch_compile(x, mode, guard)?)),
+        CExpr::Neg(x) => BExpr::Neg(Box::new(batch_compile(x, mode, guard)?)),
         CExpr::Call(name, args) => {
             let one = |f: fn(f64) -> f64, args: &[CExpr]| -> Option<BExpr> {
-                Some(BExpr::Call1(f, Box::new(batch_compile(&args[0], mode)?)))
+                Some(BExpr::Call1(f, Box::new(batch_compile(&args[0], mode, guard)?)))
             };
             let two = |f: fn(f64, f64) -> f64, args: &[CExpr]| -> Option<BExpr> {
                 Some(BExpr::Call2(
                     f,
-                    Box::new(batch_compile(&args[0], mode)?),
-                    Box::new(batch_compile(&args[1], mode)?),
+                    Box::new(batch_compile(&args[0], mode, guard)?),
+                    Box::new(batch_compile(&args[1], mode, guard)?),
                 ))
             };
             match (*name, args.len()) {
@@ -1269,6 +1665,9 @@ fn depth(e: &BExpr) -> usize {
         | BExpr::Gather { .. }
         | BExpr::LoadA(_)
         | BExpr::LoadB(_) => 0,
+        BExpr::GatherDyn { idx, guard, .. } => {
+            depth(idx).max(guard.as_ref().map_or(0, |g| depth(g)))
+        }
         BExpr::Bin(_, l, r)
         | BExpr::Cmp(_, l, r)
         | BExpr::And(l, r)
@@ -1290,11 +1689,38 @@ enum LaneKind<'a> {
     Pairs { a: &'a [usize], b: &'a [usize] },
 }
 
+/// Sticky error flags of one kernel run, shared by every chunk through
+/// [`Lanes`]: `oob` mirrors the scalar paths' sticky out-of-bounds cell
+/// (set by dynamic gathers whose live lanes index past their list), `err`
+/// records an aux-sink shape mismatch hit during accumulation. Checked
+/// once when the run finishes, so the hot loops stay branch-light.
+struct KernelFlags {
+    oob: Cell<bool>,
+    err: Cell<bool>,
+}
+
+impl KernelFlags {
+    fn new() -> KernelFlags {
+        KernelFlags {
+            oob: Cell::new(false),
+            err: Cell::new(false),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.err.get() {
+            return Err("fill statement hit a mismatched aux sink shape".to_string());
+        }
+        oob_check(self.oob.get())
+    }
+}
+
 /// Evaluation context of one batch: the partition's columns plus the lane
-/// mapping.
+/// mapping and the run's sticky error flags.
 struct Lanes<'a> {
     cols: &'a BoundCols<'a>,
     kind: LaneKind<'a>,
+    flags: &'a KernelFlags,
 }
 
 /// Evaluate a batch expression over `out.len()` lanes into `out`. Each
@@ -1354,6 +1780,41 @@ fn beval(e: &BExpr, lanes: &Lanes<'_>, out: &mut [f64]) {
                 // `event_window_safe` proved the index in bounds.
                 let k = (off[base + i] as f64 + *j) as usize;
                 *o = src[k] as f64;
+            }
+        }
+        BExpr::GatherDyn { col, list, idx, guard } => {
+            let LaneKind::Events { base } = lanes.kind else {
+                unreachable!("GatherDyn outside event lanes")
+            };
+            let mut ib = [0.0f64; CHUNK];
+            let it = &mut ib[..n];
+            beval(idx, lanes, it);
+            let mut gb = [1.0f64; CHUNK];
+            let gt = &mut gb[..n];
+            if let Some(g) = guard {
+                beval(g, lanes, gt);
+            }
+            let off = lanes.cols.offsets[*list];
+            let src = lanes.cols.items[*col];
+            for (i, o) in out.iter_mut().enumerate() {
+                // A masked-out lane performs no read at all — the scalar
+                // closure short-circuited this load, so reporting its OOB
+                // (or touching memory for it) would diverge.
+                if gt[i] == 0.0 {
+                    *o = 0.0;
+                    continue;
+                }
+                // Same float arithmetic and saturating cast as the scalar
+                // closure pair (`__list_base` then the indexed load),
+                // including the same sticky OOB on a past-the-end index.
+                let k = (off[base + i] as f64 + it[i]) as usize;
+                *o = match src.get(k) {
+                    Some(&v) => v as f64,
+                    None => {
+                        lanes.flags.oob.set(true);
+                        0.0
+                    }
+                };
             }
         }
         BExpr::LoadA(col) => {
@@ -1565,39 +2026,67 @@ fn eval_bufs(ck: &ChunkedBody, lanes: &Lanes<'_>, n: usize, take_all: bool, bufs
 
 /// Accumulate every fill site over one evaluated chunk, lane-major and
 /// fill-site-minor — exactly the statement order of the scalar loop. The
-/// single-fill case (by far the most common) hoists its buffer views out
-/// of the lane loop.
-fn accumulate(fills: &[FillSite], bufs: &[Vec<f64>], n: usize, take_all: bool, acc: &mut Acc<'_>) {
-    if let [f] = fills {
-        let mask = match f.mask {
-            Some(m) if !take_all => Some(&bufs[m][..n]),
-            _ => None,
-        };
-        let xs = &bufs[f.expr][..n];
-        let ws = f.weight.map(|w| &bufs[w][..n]);
-        for i in 0..n {
-            let live = match mask {
-                Some(m) => m[i] != 0.0,
-                None => true,
+/// single-primary-fill case (by far the most common) hoists its buffer
+/// views out of the lane loop. Aux targets fill their sink directly (same
+/// `fill_w` the scalar `SinkSet` dispatch calls, so NaN and range handling
+/// agree bit-for-bit); a masked-out aux lane performs no call at all,
+/// matching the scalar branch skip.
+#[allow(clippy::too_many_arguments)]
+fn accumulate(
+    fills: &[FillSite],
+    bufs: &[Vec<f64>],
+    n: usize,
+    take_all: bool,
+    acc: &mut Acc<'_>,
+    aux: &mut [Sink],
+    flags: &KernelFlags,
+) {
+    match fills {
+        [f] if f.target == FillTarget::Primary => {
+            let mask = match f.mask {
+                Some(m) if !take_all => Some(&bufs[m][..n]),
+                _ => None,
             };
-            let w = match ws {
-                Some(wb) => wb[i],
-                None => 1.0,
-            };
-            acc.fill(live, xs[i], w);
-        }
-    } else {
-        for i in 0..n {
-            for f in fills {
-                let live = match f.mask {
-                    Some(m) if !take_all => bufs[m][i] != 0.0,
-                    _ => true,
+            let xs = &bufs[f.expr][..n];
+            let ws = f.weight.map(|w| &bufs[w][..n]);
+            for i in 0..n {
+                let live = match mask {
+                    Some(m) => m[i] != 0.0,
+                    None => true,
                 };
-                let w = match f.weight {
-                    Some(wb) => bufs[wb][i],
+                let w = match ws {
+                    Some(wb) => wb[i],
                     None => 1.0,
                 };
-                acc.fill(live, bufs[f.expr][i], w);
+                acc.fill(live, xs[i], w);
+            }
+        }
+        _ => {
+            for i in 0..n {
+                for f in fills {
+                    let live = match f.mask {
+                        Some(m) if !take_all => bufs[m][i] != 0.0,
+                        _ => true,
+                    };
+                    let w = match f.weight {
+                        Some(wb) => bufs[wb][i],
+                        None => 1.0,
+                    };
+                    let x = bufs[f.expr][i];
+                    match f.target {
+                        FillTarget::Primary => acc.fill(live, x, w),
+                        FillTarget::Aux(k) => {
+                            if live {
+                                match (&mut aux[k].hist, f.y) {
+                                    (Hist::H1(h), None) => h.fill_w(x, w),
+                                    (Hist::H2(h), Some(yb)) => h.fill_w(x, bufs[yb][i], w),
+                                    (Hist::Profile(p), Some(yb)) => p.fill_w(x, bufs[yb][i], w),
+                                    _ => flags.err.set(true),
+                                }
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -1649,11 +2138,12 @@ fn run_chunked_items(
     k_lo: usize,
     k_hi: usize,
     hist: &mut H1,
+    aux: &mut [Sink],
     plan: Option<&ChunkPlan>,
     report: &mut IndexedRun,
     scratch: &mut KernelScratch,
-) {
-    run_chunked_linear(ck, cols, k_lo, k_hi, false, hist, plan, report, scratch);
+) -> Result<(), String> {
+    run_chunked_linear(ck, cols, k_lo, k_hi, false, hist, aux, plan, report, scratch)
 }
 
 /// Run the event-lane chunked kernel for events `[ev_lo, ev_hi)`. Same
@@ -1668,11 +2158,12 @@ fn run_chunked_events(
     ev_lo: usize,
     ev_hi: usize,
     hist: &mut H1,
+    aux: &mut [Sink],
     plan: Option<&ChunkPlan>,
     report: &mut IndexedRun,
     scratch: &mut KernelScratch,
-) {
-    run_chunked_linear(ck, cols, ev_lo, ev_hi, true, hist, plan, report, scratch);
+) -> Result<(), String> {
+    run_chunked_linear(ck, cols, ev_lo, ev_hi, true, hist, aux, plan, report, scratch)
 }
 
 /// The shared chunk loop of the two linear-lane kernels (`events` picks
@@ -1685,14 +2176,19 @@ fn run_chunked_linear(
     lane_hi: usize,
     events: bool,
     hist: &mut H1,
+    aux: &mut [Sink],
     plan: Option<&ChunkPlan>,
     report: &mut IndexedRun,
     scratch: &mut KernelScratch,
-) {
+) -> Result<(), String> {
     let (bins, bufs) = scratch.kernel(hist.n_bins() + 2, ck.bufs.len());
     let mut acc = Acc::new(bins, hist);
-    chunk_span(ck, cols, lane_lo, lane_hi, events, plan, report, &mut acc, bufs);
+    let flags = KernelFlags::new();
+    chunk_span(
+        ck, cols, lane_lo, lane_hi, events, plan, report, &mut acc, bufs, aux, &flags,
+    );
     acc.flush(hist);
+    flags.check()
 }
 
 /// Drive one lane window `[lane_lo, lane_hi)` through the linear-lane
@@ -1716,6 +2212,8 @@ fn chunk_span(
     report: &mut IndexedRun,
     acc: &mut Acc<'_>,
     bufs: &mut [Vec<f64>],
+    aux: &mut [Sink],
+    flags: &KernelFlags,
 ) {
     let plan = plan.filter(|p| p.events == events);
     let mut base = lane_lo;
@@ -1742,24 +2240,33 @@ fn chunk_span(
         } else {
             LaneKind::Items { base }
         };
-        let lanes = Lanes { cols, kind };
+        let lanes = Lanes { cols, kind, flags };
         eval_bufs(ck, &lanes, n, take_all, bufs);
-        accumulate(&ck.fills, bufs, n, take_all, acc);
+        accumulate(&ck.fills, bufs, n, take_all, acc, aux, flags);
         base += n;
     }
 }
 
 // ------------------------------------------------------------ pair kernel
 
-/// The lowered `range(len(l))` pair nest: which list, where each loop
-/// starts, and the batch body over pair lanes.
+/// The lowered `range(len(a))` × `range(len(b))` pair nest: which lists
+/// the loops range over, where each loop starts, which item columns the
+/// body reads per side, and the batch body over pair lanes.
 struct PairKernel {
-    /// The list both loops range over.
-    list: usize,
+    /// The outer loop's list (`i` ranges over its per-event length).
+    list_a: usize,
+    /// The inner loop's list — equal to `list_a` for the classic
+    /// same-list `i<j` nest, any other list for cross-list pairs.
+    list_b: usize,
     /// First outer index `i` (0 for `range(n)`).
     i_lo: i64,
     /// Where the inner index `j` starts for a given `i`.
     j_start: PairStart,
+    /// Item columns loaded at `i` lanes (`pair_window_safe` checks each
+    /// side against its own list's offsets).
+    cols_a: Vec<usize>,
+    /// Item columns loaded at `j` lanes.
+    cols_b: Vec<usize>,
     body: ChunkedBody,
 }
 
@@ -1798,20 +2305,59 @@ fn pair_start(e: &CExpr, slot_i: usize) -> Option<PairStart> {
     }
 }
 
+/// Collect the item columns a pair body loads per side (`LoadA` → outer
+/// list lanes, `LoadB` → inner list lanes), sorted and deduplicated.
+fn collect_pair_cols(e: &BExpr, cols_a: &mut Vec<usize>, cols_b: &mut Vec<usize>) {
+    match e {
+        BExpr::LoadA(c) => cols_a.push(*c),
+        BExpr::LoadB(c) => cols_b.push(*c),
+        BExpr::Const(_)
+        | BExpr::Idx
+        | BExpr::Load(_)
+        | BExpr::EvLoad(_)
+        | BExpr::EvLen(_)
+        | BExpr::Gather { .. } => {}
+        BExpr::GatherDyn { idx, guard, .. } => {
+            collect_pair_cols(idx, cols_a, cols_b);
+            if let Some(g) = guard {
+                collect_pair_cols(g, cols_a, cols_b);
+            }
+        }
+        BExpr::Bin(_, l, r)
+        | BExpr::Cmp(_, l, r)
+        | BExpr::And(l, r)
+        | BExpr::Or(l, r)
+        | BExpr::Call2(_, l, r) => {
+            collect_pair_cols(l, cols_a, cols_b);
+            collect_pair_cols(r, cols_a, cols_b);
+        }
+        BExpr::Not(x) | BExpr::Neg(x) | BExpr::Call1(_, x) => collect_pair_cols(x, cols_a, cols_b),
+    }
+}
+
 /// Try to lower a per-event body of the shape
 ///
 /// ```text
-/// n = len(event.l)                  (any leading assigns)
+/// n = len(event.a)                  (any leading assigns)
 /// for i in range(n):                (or range(c0, n))
-///     for j in range(i + 1, n):     (or range(c, n))
-///         ... assigns + fills/ifs over event.l[i] / event.l[j] ...
+///     for j in range(i + 1, n):     (same-list i<j nest)
+///         ...
+/// ```
+///
+/// or the cross-list variant
+///
+/// ```text
+/// for i in range(len(event.a)):
+///     for j in range(len(event.b)):   (inner start must be a constant)
+///         ... fills/ifs over event.a[i] / event.b[j] ...
 /// ```
 ///
 /// to the pair kernel. Assignments at every level inline by substitution;
-/// both loop bounds must resolve to the same `len(l)`; the body's item
-/// loads must sit exactly at `__list_base(l, i)` / `__list_base(l, j)`
-/// (anything else — the indices used as values, event leaves, other lists
-/// — refuses, and the scalar closure nest runs instead).
+/// the body's item loads must sit exactly at `__list_base(a, i)` /
+/// `__list_base(b, j)` (anything else — the indices used as values, event
+/// leaves, third lists — refuses, and the scalar closure nest runs
+/// instead). A relative inner start (`range(i + c, …)`) only makes sense
+/// when both loops scan the same list.
 fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
     let mut env = transform::SlotEnv::new();
     // Top level: leading assigns fold into the env, then exactly one
@@ -1831,7 +2377,7 @@ fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
         return None;
     }
     let i_lo = const_index(&fold(&env.subst(outer_lo)?))?;
-    let CExpr::ListLen { list } = env.subst(outer_hi)? else {
+    let CExpr::ListLen { list: list_a } = env.subst(outer_hi)? else {
         return None;
     };
     // The loop variable stands for itself inside the nest.
@@ -1851,12 +2397,17 @@ fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
     if it.next().is_some() {
         return None;
     }
-    // Both loops must scan the same list.
-    match env.subst(inner_hi)? {
-        CExpr::ListLen { list: l2 } if l2 == list => {}
-        _ => return None,
-    }
+    // The inner loop may scan the same list (classic i<j nests) or a
+    // different one (cross-list pairs).
+    let CExpr::ListLen { list: list_b } = env.subst(inner_hi)? else {
+        return None;
+    };
     let j_start = pair_start(&fold(&env.subst(inner_lo)?), slot_i)?;
+    // `range(i + c, len(b))` couples the two indices; that only has its
+    // intended triangular meaning when both loops scan one list.
+    if list_b != list_a && !matches!(j_start, PairStart::Abs(_)) {
+        return None;
+    }
     env.bind_loop_var(slot_j);
     let norm = transform::inline_body(inner_body, &mut env)?;
     env.finish()?;
@@ -1866,15 +2417,27 @@ fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
     let body = compile_chunked(
         &norm,
         BatchMode::Pairs {
-            list,
+            list_a,
+            list_b,
             slot_i,
             slot_j,
         },
     )?;
+    let (mut cols_a, mut cols_b) = (Vec::new(), Vec::new());
+    for e in &body.bufs {
+        collect_pair_cols(e, &mut cols_a, &mut cols_b);
+    }
+    cols_a.sort_unstable();
+    cols_a.dedup();
+    cols_b.sort_unstable();
+    cols_b.dedup();
     Some(PairKernel {
-        list,
+        list_a,
+        list_b,
         i_lo,
         j_start,
+        cols_a,
+        cols_b,
         body,
     })
 }
@@ -1914,21 +2477,27 @@ fn event_window_safe(ck: &ChunkedBody, cols: &BoundCols<'_>, ev_lo: usize, ev_hi
     true
 }
 
-/// Can the pair kernel index this window directly? Offsets must be
-/// non-negative and monotone over the window and every item column must
-/// cover the window's items — then every materialized pair index is in
-/// bounds by construction (`off[ev] + i < off[ev+1] <= off[ev_hi]`).
-/// Anything off falls back to the bounds-checked scalar nest.
+/// Can the pair kernel index this window directly? Per side, offsets must
+/// be non-negative and monotone over the window and that side's item
+/// columns must cover the window's items — then every materialized pair
+/// index is in bounds by construction
+/// (`off[ev] + i < off[ev+1] <= off[ev_hi]`). Anything off falls back to
+/// the bounds-checked scalar nest.
 fn pair_window_safe(pk: &PairKernel, cols: &BoundCols<'_>, ev_lo: usize, ev_hi: usize) -> bool {
-    let off = cols.offsets[pk.list];
-    if off[ev_lo] < 0 {
-        return false;
+    for (list, side_cols) in [(pk.list_a, &pk.cols_a), (pk.list_b, &pk.cols_b)] {
+        let off = cols.offsets[list];
+        if off[ev_lo] < 0 {
+            return false;
+        }
+        if off[ev_lo..=ev_hi].windows(2).any(|w| w[1] < w[0]) {
+            return false;
+        }
+        let k_hi = off[ev_hi] as usize;
+        if side_cols.iter().any(|&c| cols.items[c].len() < k_hi) {
+            return false;
+        }
     }
-    if off[ev_lo..=ev_hi].windows(2).any(|w| w[1] < w[0]) {
-        return false;
-    }
-    let k_hi = off[ev_hi] as usize;
-    cols.items.iter().all(|c| c.len() >= k_hi)
+    true
 }
 
 /// Run the pair-lane chunked kernel for events `[ev_lo, ev_hi)`: walk the
@@ -1944,19 +2513,23 @@ fn run_chunked_pairs(
     ev_lo: usize,
     ev_hi: usize,
     hist: &mut H1,
+    aux: &mut [Sink],
     scratch: &mut KernelScratch,
-) {
+) -> Result<(), String> {
     let ck = &pk.body;
     let (bins, bufs, pa, pb) = scratch.pair_kernel(hist.n_bins() + 2, ck.bufs.len());
     let mut acc = Acc::new(bins, hist);
+    let flags = KernelFlags::new();
     let mut t = 0usize;
-    pair_span(pk, cols, ev_lo, ev_hi, &mut acc, bufs, pa, pb, &mut t);
-    pair_flush(ck, cols, &mut acc, bufs, pa, pb, &mut t);
+    pair_span(pk, cols, ev_lo, ev_hi, &mut acc, bufs, pa, pb, &mut t, aux, &flags);
+    pair_flush(ck, cols, &mut acc, bufs, pa, pb, &mut t, aux, &flags);
     acc.flush(hist);
+    flags.check()
 }
 
 /// Evaluate and accumulate the `t` pairs currently materialized in the
 /// pair buffers, then reset `t`. A no-op when the buffers are empty.
+#[allow(clippy::too_many_arguments)]
 fn pair_flush(
     ck: &ChunkedBody,
     cols: &BoundCols<'_>,
@@ -1965,6 +2538,8 @@ fn pair_flush(
     pa: &mut [usize],
     pb: &mut [usize],
     t: &mut usize,
+    aux: &mut [Sink],
+    flags: &KernelFlags,
 ) {
     if *t == 0 {
         return;
@@ -1975,9 +2550,10 @@ fn pair_flush(
             a: &pa[..*t],
             b: &pb[..*t],
         },
+        flags,
     };
     eval_bufs(ck, &lanes, *t, false, bufs);
-    accumulate(&ck.fills, bufs, *t, false, acc);
+    accumulate(&ck.fills, bufs, *t, false, acc, aux, flags);
     *t = 0;
 }
 
@@ -1999,26 +2575,31 @@ fn pair_span(
     pa: &mut [usize],
     pb: &mut [usize],
     t: &mut usize,
+    aux: &mut [Sink],
+    flags: &KernelFlags,
 ) {
     let ck = &pk.body;
-    let off = cols.offsets[pk.list];
+    let off_a = cols.offsets[pk.list_a];
+    let off_b = cols.offsets[pk.list_b];
     for ev in ev_lo..ev_hi {
-        let base = off[ev] as usize;
+        let base_a = off_a[ev] as usize;
+        let base_b = off_b[ev] as usize;
         // Same i64 arithmetic as the scalar loop bounds (`lo as i64 ..
-        // hi as i64`); `pair_window_safe` guarantees n >= 0.
-        let n = off[ev + 1] - off[ev];
+        // hi as i64`); `pair_window_safe` guarantees n >= 0 per side.
+        let n_a = off_a[ev + 1] - off_a[ev];
+        let n_b = off_b[ev + 1] - off_b[ev];
         let mut i = pk.i_lo;
-        while i < n {
+        while i < n_a {
             let mut j = match pk.j_start {
                 PairStart::Rel(c) => i + c,
                 PairStart::Abs(c) => c,
             };
-            while j < n {
-                pa[*t] = base + i as usize;
-                pb[*t] = base + j as usize;
+            while j < n_b {
+                pa[*t] = base_a + i as usize;
+                pb[*t] = base_b + j as usize;
                 *t += 1;
                 if *t == CHUNK {
-                    pair_flush(ck, cols, acc, bufs, pa, pb, t);
+                    pair_flush(ck, cols, acc, bufs, pa, pb, t, aux, flags);
                 }
                 j += 1;
             }
@@ -2074,6 +2655,8 @@ struct FusedStream<'a> {
     pair_a: Vec<usize>,
     pair_b: Vec<usize>,
     pair_t: usize,
+    /// Sticky error flags carried across every window of this stream.
+    flags: KernelFlags,
 }
 
 impl<'a> FusedStream<'a> {
@@ -2137,12 +2720,16 @@ impl<'a> FusedStream<'a> {
             pair_a: vec![0; if pairs { CHUNK } else { 0 }],
             pair_b: vec![0; if pairs { CHUNK } else { 0 }],
             pair_t: 0,
+            flags: KernelFlags::new(),
         })
     }
 
     /// Process events `[ev_lo, ev_hi)` of the shared scan through this
-    /// stream's kernel, accumulating into its persistent state.
-    fn advance(&mut self, ev_lo: usize, ev_hi: usize) {
+    /// stream's kernel, accumulating into its persistent state. Aux fills
+    /// land **directly** in the caller's sinks — the call sequence is
+    /// exactly a solo run's, so no group merge (with its reassociation
+    /// caveats) is ever needed.
+    fn advance(&mut self, ev_lo: usize, ev_hi: usize, aux: &mut [Sink]) {
         let mut acc = Acc {
             bins: &mut self.bins[..],
             n_bins: self.n_bins,
@@ -2168,6 +2755,8 @@ impl<'a> FusedStream<'a> {
                     &mut self.report,
                     &mut acc,
                     &mut self.bufs,
+                    aux,
+                    &self.flags,
                 );
             }
             StreamPath::Events => {
@@ -2182,6 +2771,8 @@ impl<'a> FusedStream<'a> {
                     &mut self.report,
                     &mut acc,
                     &mut self.bufs,
+                    aux,
+                    &self.flags,
                 );
             }
             StreamPath::Pairs => {
@@ -2196,6 +2787,8 @@ impl<'a> FusedStream<'a> {
                     &mut self.pair_a,
                     &mut self.pair_b,
                     &mut self.pair_t,
+                    aux,
+                    &self.flags,
                 );
             }
             StreamPath::Whole => {}
@@ -2207,7 +2800,7 @@ impl<'a> FusedStream<'a> {
 
     /// Flush this stream's accumulated state into its query's histogram
     /// (running the whole solo path now for `Whole` streams).
-    fn finish(mut self, hist: &mut H1) -> Result<IndexedRun, String> {
+    fn finish(mut self, hist: &mut H1, aux: &mut [Sink]) -> Result<IndexedRun, String> {
         if matches!(self.path, StreamPath::Whole) {
             let mut scratch = KernelScratch::new();
             run_range_inner(
@@ -2216,6 +2809,7 @@ impl<'a> FusedStream<'a> {
                 0,
                 self.n_events,
                 hist,
+                aux,
                 true,
                 self.plan.as_ref(),
                 &mut self.report,
@@ -2242,9 +2836,12 @@ impl<'a> FusedStream<'a> {
                 &mut self.pair_a,
                 &mut self.pair_b,
                 &mut self.pair_t,
+                aux,
+                &self.flags,
             );
         }
         acc.flush(hist);
+        self.flags.check()?;
         Ok(self.report)
     }
 }
@@ -2274,12 +2871,36 @@ pub fn run_fused_indexed<'a>(
     hists: &mut [H1],
     window_events: usize,
 ) -> Result<Vec<IndexedRun>, String> {
-    if progs.len() != hists.len() {
+    for prog in progs {
+        require_no_aux(prog)?;
+    }
+    let mut empty: Vec<Vec<Sink>> = vec![Vec::new(); progs.len()];
+    run_fused_group_indexed(progs, cs, zm, hists, &mut empty, window_events)
+}
+
+/// [`run_fused_indexed`] for query groups with aux sinks: `auxes[i]` is
+/// program `i`'s sink set (empty for aux-free programs). Aux fills stream
+/// directly into the caller's sinks window by window — the exact call
+/// sequence of a solo [`run_group`] — so fused aux results are
+/// bit-identical to solo execution with no merge step.
+pub fn run_fused_group_indexed<'a>(
+    progs: &[&'a CompiledProgram],
+    cs: &'a ColumnSet,
+    zm: Option<&ZoneMap>,
+    hists: &mut [H1],
+    auxes: &mut [Vec<Sink>],
+    window_events: usize,
+) -> Result<Vec<IndexedRun>, String> {
+    if progs.len() != hists.len() || progs.len() != auxes.len() {
         return Err(format!(
-            "run_fused_indexed: {} programs but {} histograms",
+            "run_fused_group_indexed: {} programs but {} histograms and {} aux sets",
             progs.len(),
-            hists.len()
+            hists.len(),
+            auxes.len()
         ));
+    }
+    for (prog, aux) in progs.iter().zip(auxes.iter()) {
+        check_aux(prog, aux)?;
     }
     let mut streams = Vec::with_capacity(progs.len());
     for (prog, hist) in progs.iter().zip(hists.iter()) {
@@ -2292,14 +2913,14 @@ pub fn run_fused_indexed<'a>(
     let mut ev = 0usize;
     while ev < cs.n_events {
         let hi = (ev + step).min(cs.n_events);
-        for s in &mut streams {
-            s.advance(ev, hi);
+        for (s, aux) in streams.iter_mut().zip(auxes.iter_mut()) {
+            s.advance(ev, hi, aux);
         }
         ev = hi;
     }
     let mut out = Vec::with_capacity(progs.len());
-    for (s, hist) in streams.into_iter().zip(hists.iter_mut()) {
-        out.push(s.finish(hist)?);
+    for ((s, hist), aux) in streams.into_iter().zip(hists.iter_mut()).zip(auxes.iter_mut()) {
+        out.push(s.finish(hist, aux)?);
     }
     Ok(out)
 }
@@ -2315,7 +2936,7 @@ fn compile_stmt(s: &CStmt) -> Result<StmtFn, String> {
         CStmt::Assign { slot, expr } => {
             let slot = *slot;
             let e = compile_expr(&fold(expr))?;
-            Box::new(move |c: &mut Ctx, _h: &mut H1| {
+            Box::new(move |c: &mut Ctx, _sk: &mut SinkSet| {
                 let v = e(c);
                 c.slots[slot] = v;
             })
@@ -2325,13 +2946,13 @@ fn compile_stmt(s: &CStmt) -> Result<StmtFn, String> {
             let lo = compile_expr(&fold(lo))?;
             let hi = compile_expr(&fold(hi))?;
             let body = compile_block(body)?;
-            Box::new(move |c: &mut Ctx, h: &mut H1| {
+            Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
                 let l = lo(c) as i64;
                 let u = hi(c) as i64;
                 for k in l..u {
                     c.slots[slot] = k as f64;
                     for s in &body {
-                        s(c, h);
+                        s(c, sk);
                     }
                 }
             })
@@ -2340,13 +2961,13 @@ fn compile_stmt(s: &CStmt) -> Result<StmtFn, String> {
             let list = *list;
             let slot = *slot;
             let body = compile_block(body)?;
-            Box::new(move |c: &mut Ctx, h: &mut H1| {
+            Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
                 let off = c.offsets[list];
                 let (l, u) = (off[c.event], off[c.event + 1]);
                 for k in l..u {
                     c.slots[slot] = k as f64;
                     for s in &body {
-                        s(c, h);
+                        s(c, sk);
                     }
                 }
             })
@@ -2355,29 +2976,74 @@ fn compile_stmt(s: &CStmt) -> Result<StmtFn, String> {
             let cond = compile_expr(&fold(cond))?;
             let then = compile_block(then)?;
             let els = compile_block(els)?;
-            Box::new(move |c: &mut Ctx, h: &mut H1| {
+            Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
                 let branch = if cond(c) != 0.0 { &then } else { &els };
                 for s in branch {
-                    s(c, h);
+                    s(c, sk);
                 }
             })
         }
         CStmt::Fill { expr, weight } => {
             let e = compile_expr(&fold(expr))?;
             match weight {
-                None => Box::new(move |c: &mut Ctx, h: &mut H1| {
+                None => Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
                     let x = e(c);
-                    h.fill(x);
+                    sk.primary.fill(x);
                 }),
                 Some(w) => {
                     let w = compile_expr(&fold(w))?;
-                    Box::new(move |c: &mut Ctx, h: &mut H1| {
+                    Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
                         let x = e(c);
                         let wt = w(c);
-                        h.fill_w(x, wt);
+                        sk.primary.fill_w(x, wt);
                     })
                 }
             }
+        }
+        CStmt::Fill2 { sink, x, y, weight } => {
+            let sink = *sink;
+            let x = compile_expr(&fold(x))?;
+            let y = compile_expr(&fold(y))?;
+            let w = weight.as_ref().map(|w| compile_expr(&fold(w))).transpose()?;
+            Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
+                let xv = x(c);
+                let yv = y(c);
+                let wv = w.as_ref().map_or(1.0, |w| w(c));
+                if sk.fill2(sink, xv, yv, wv).is_err() {
+                    c.sink_err.set(true);
+                }
+            })
+        }
+        CStmt::FillProf { sink, x, y, weight } => {
+            let sink = *sink;
+            let x = compile_expr(&fold(x))?;
+            let y = compile_expr(&fold(y))?;
+            let w = weight.as_ref().map(|w| compile_expr(&fold(w))).transpose()?;
+            Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
+                let xv = x(c);
+                let yv = y(c);
+                let wv = w.as_ref().map_or(1.0, |w| w(c));
+                if sk.fill_prof(sink, xv, yv, wv).is_err() {
+                    c.sink_err.set(true);
+                }
+            })
+        }
+        CStmt::FillVars { sink, x, weights } => {
+            let sink = *sink;
+            let x = compile_expr(&fold(x))?;
+            let ws = weights
+                .iter()
+                .map(|w| compile_expr(&fold(w)))
+                .collect::<Result<Vec<_>, _>>()?;
+            Box::new(move |c: &mut Ctx, sk: &mut SinkSet| {
+                let xv = x(c);
+                for (k, w) in ws.iter().enumerate() {
+                    let wv = w(c);
+                    if sk.fill_var(sink + k, xv, wv).is_err() {
+                        c.sink_err.set(true);
+                    }
+                }
+            })
         }
     })
 }
@@ -3302,5 +3968,310 @@ for event in dataset:
         let cp = lower(&prog).unwrap();
         let mut hists = vec![H1::new(8, 0.0, 128.0); 2];
         assert!(run_fused_indexed(&[&cp], &cs, None, &mut hists, 0).is_err());
+    }
+
+    /// A muon × jet cross-list nest lowers to the pair kernel and stays
+    /// bit-identical to the scalar closure nest, the flat evaluator and
+    /// the morsel-parallel driver.
+    #[test]
+    fn cross_list_pairs_lower_to_pair_kernel() {
+        let cs = generate_ttbar(2_000, 5, 201);
+        let src = "\
+for event in dataset:
+    nm = len(event.muons)
+    nj = len(event.jets)
+    for i in range(nm):
+        for j in range(nj):
+            m = event.muons[i]
+            jet = event.jets[j]
+            fill(m.pt + jet.pt, 0.5)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Pairs));
+        let mut a = H1::new(64, 0.0, 256.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(64, 0.0, 256.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        let mut f = H1::new(64, 0.0, 256.0);
+        flat::run(&prog, &cs, &mut f).unwrap();
+        assert_eq!(a, f);
+        let mut p = H1::new(64, 0.0, 256.0);
+        let cfg = ParallelCfg { threads: 4, morsel_events: 311 };
+        run_parallel(&cp, &cs, &mut p, cfg).unwrap();
+        assert_eq!(a, p);
+        assert!(a.total() > 0.0);
+    }
+
+    /// A *triangular* nest over two different lists (`range(i + 1, nj)`)
+    /// is meaningless as a pair batch — the kernel is refused and the
+    /// scalar nest still answers correctly.
+    #[test]
+    fn cross_list_triangular_nest_falls_back_to_scalar() {
+        let cs = generate_ttbar(600, 5, 202);
+        let src = "\
+for event in dataset:
+    nm = len(event.muons)
+    nj = len(event.jets)
+    for i in range(nm):
+        for j in range(i + 1, nj):
+            fill(event.muons[i].pt + event.jets[j].pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_ne!(cp.kernel_shape(), Some(KernelShape::Pairs));
+        let mut a = H1::new(64, 0.0, 256.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut f = H1::new(64, 0.0, 256.0);
+        flat::run(&prog, &cs, &mut f).unwrap();
+        assert_eq!(a, f);
+        assert!(a.total() > 0.0);
+    }
+
+    /// `muons[n - 1].pt` under an `if n > 0` cut: the dynamic gather is
+    /// guarded by the site mask, so empty-muon events (ttbar has many)
+    /// never read, never fault, and the chunked kernel matches the
+    /// scalar closures bit-for-bit.
+    #[test]
+    fn guarded_dynamic_gather_matches_scalar_on_empty_lists() {
+        let cs = generate_ttbar(3_000, 5, 203);
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    if n > 0:
+        fill(event.muons[n - 1].pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Events));
+        let mut a = H1::new(64, 0.0, 128.0);
+        run(&cp, &cs, &mut a).unwrap();
+        let mut b = H1::new(64, 0.0, 128.0);
+        run_scalar(&cp, &cs, &mut b).unwrap();
+        assert_eq!(a, b);
+        let mut f = H1::new(64, 0.0, 128.0);
+        flat::run(&prog, &cs, &mut f).unwrap();
+        assert_eq!(a, f);
+        assert!(a.total() > 0.0);
+    }
+
+    /// An unguarded gather that runs past the end of the content array
+    /// reports the same sticky out-of-bounds error from the scalar
+    /// closures and the chunked kernel (`muons[n]` on the last event
+    /// reads past the global array end).
+    #[test]
+    fn out_of_bounds_dynamic_gather_errors_in_both_paths() {
+        let cs = generate_ttbar(500, 5, 204);
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    fill(event.muons[n].pt)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let err = run(&cp, &cs, &mut H1::new(8, 0.0, 128.0)).unwrap_err();
+        assert!(err.contains("out of bounds"), "{err}");
+        let err = run_scalar(&cp, &cs, &mut H1::new(8, 0.0, 128.0)).unwrap_err();
+        assert!(err.contains("out of bounds"), "{err}");
+    }
+
+    /// The full AGC statement set — plain fill, `fill2`, `profile` and a
+    /// variation batch in one body — through the chunked kernel, the
+    /// scalar closures and the flat evaluator, all bit-identical; the
+    /// H1-only entry points refuse the program instead of dropping fills.
+    #[test]
+    fn aux_group_chunked_matches_scalar_and_flat() {
+        let cs = generate_drellyan(2_500, 205);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        fill(muon.pt)
+        fill2(muon.pt, muon.eta)
+        profile(muon.pt, muon.eta)
+        fill_vars(muon.pt, 0.5, 1.0, 2.0)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert!(cp.has_aux());
+        assert!(cp.has_chunked_kernel());
+        let err = run(&cp, &cs, &mut H1::new(8, 0.0, 128.0)).unwrap_err();
+        assert!(err.contains("group API"), "{err}");
+
+        let x = (64, 0.0, 128.0);
+        let y = (32, -4.0, 4.0);
+        let mut ha = H1::new(64, 0.0, 128.0);
+        let mut aa = cp.make_aux(x, y);
+        run_group(&cp, &cs, &mut ha, &mut aa).unwrap();
+        let mut hb = H1::new(64, 0.0, 128.0);
+        let mut ab = cp.make_aux(x, y);
+        run_scalar_group(&cp, &cs, &mut hb, &mut ab).unwrap();
+        assert_eq!(ha, hb);
+        assert_eq!(aa, ab);
+        let mut hf = H1::new(64, 0.0, 128.0);
+        let mut af = prog.make_aux(x, y);
+        flat::run_group(&prog, &cs, &mut hf, &mut af).unwrap();
+        assert_eq!(ha, hf);
+        assert_eq!(aa, af);
+
+        assert_eq!(aa.len(), 5); // h2 + profile + 3 weight variations
+        assert!(aa[0].label.starts_with("h2#"), "{}", aa[0].label);
+        assert!(aa[1].label.starts_with("prof#"), "{}", aa[1].label);
+        assert!(aa[2].label.starts_with("var#"), "{}", aa[2].label);
+        assert!(aa.iter().all(|s| s.hist.total() > 0.0));
+    }
+
+    /// Exactly-associative parts of a sink set: bin contents and weight
+    /// counts are sums of dyadic weights, so morsel/partition merge order
+    /// cannot perturb them; the running Σw·v moments may reassociate.
+    fn assert_aux_stable(a: &[Sink], b: &[Sink], what: &str) {
+        use crate::hist::Hist;
+        assert_eq!(a.len(), b.len(), "{what}: sink count");
+        for (sa, sb) in a.iter().zip(b) {
+            assert_eq!(sa.label, sb.label, "{what}");
+            match (&sa.hist, &sb.hist) {
+                (Hist::H1(x), Hist::H1(y)) => {
+                    assert_eq!(x.bins, y.bins, "{what} {}", sa.label);
+                    assert_eq!(x.count, y.count, "{what} {}", sa.label);
+                }
+                (Hist::H2(x), Hist::H2(y)) => {
+                    assert_eq!(x.bins, y.bins, "{what} {}", sa.label);
+                    assert_eq!(x.out, y.out, "{what} {}", sa.label);
+                    assert_eq!(x.count, y.count, "{what} {}", sa.label);
+                }
+                (Hist::Profile(x), Hist::Profile(y)) => {
+                    assert_eq!(x.count, y.count, "{what} {}", sa.label);
+                    assert_eq!(x.under, y.under, "{what} {}", sa.label);
+                    assert_eq!(x.over, y.over, "{what} {}", sa.label);
+                    assert_eq!(x.total, y.total, "{what} {}", sa.label);
+                }
+                _ => panic!("{what} {}: sink shape mismatch", sa.label),
+            }
+        }
+    }
+
+    /// Aux sinks through the morsel-parallel driver (ordered partial
+    /// merges) and the fused shared scan (direct fills), against the
+    /// sequential group run.
+    #[test]
+    fn aux_group_parallel_and_fused_match_sequential() {
+        let cs = generate_drellyan(4_000, 206);
+        let src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 25:
+            fill(muon.pt)
+        fill2(muon.pt, muon.eta)
+        profile(muon.pt, muon.eta * muon.eta + 1)
+        fill_vars(muon.pt, 0.5, 1.0, 1.5, 2.0)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        let x = (64, 0.0, 128.0);
+        let y = (16, -4.0, 4.0);
+        let mut hs = H1::new(64, 0.0, 128.0);
+        let mut as_ = cp.make_aux(x, y);
+        run_group(&cp, &cs, &mut hs, &mut as_).unwrap();
+
+        // threads ≤ 1 takes the sequential fast path: bit-identical
+        // wholesale, running moments included.
+        let mut hp1 = H1::new(64, 0.0, 128.0);
+        let mut ap1 = cp.make_aux(x, y);
+        let cfg1 = ParallelCfg { threads: 1, morsel_events: 257 };
+        run_parallel_group(&cp, &cs, &mut hp1, &mut ap1, cfg1).unwrap();
+        assert_eq!(hs, hp1);
+        assert_eq!(as_, ap1);
+
+        // Multi-threaded runs merge per-morsel partials in morsel order:
+        // bins and counts match the sequential run exactly (dyadic-weight
+        // sums are associative), the running Σw·v moments may reassociate
+        // across morsel boundaries (the driver's documented contract) —
+        // but the morsel grid fixes the association, so different thread
+        // counts over the same grid must agree bit-for-bit wholesale.
+        let mut grid = Vec::new();
+        for threads in [2, 8] {
+            let mut hp = H1::new(64, 0.0, 128.0);
+            let mut ap = cp.make_aux(x, y);
+            let cfg = ParallelCfg { threads, morsel_events: 257 };
+            run_parallel_group(&cp, &cs, &mut hp, &mut ap, cfg).unwrap();
+            assert_eq!(hs.bins, hp.bins, "threads {threads}");
+            assert_eq!(hs.count, hp.count, "threads {threads}");
+            assert_eq!(hs.underflow, hp.underflow, "threads {threads}");
+            assert_eq!(hs.overflow, hp.overflow, "threads {threads}");
+            assert_aux_stable(&as_, &ap, &format!("threads {threads}"));
+            grid.push((hp, ap));
+        }
+        assert_eq!(grid[0], grid[1], "same morsel grid, different thread count");
+
+        let plain = lower(&queryir::compile(table3::MUON_PT, &cs.schema).unwrap()).unwrap();
+        let refs = [&cp, &plain];
+        for window in [513, 0] {
+            let mut hists = vec![H1::new(64, 0.0, 128.0); 2];
+            let mut auxes = vec![cp.make_aux(x, y), Vec::new()];
+            run_fused_group_indexed(&refs, &cs, None, &mut hists, &mut auxes, window).unwrap();
+            assert_eq!(hists[0], hs, "window {window}");
+            assert_eq!(auxes[0], as_, "window {window}");
+            let mut solo = H1::new(64, 0.0, 128.0);
+            run(&plain, &cs, &mut solo).unwrap();
+            assert_eq!(hists[1], solo, "window {window}");
+        }
+        // The H1-only fused path refuses aux-bearing programs.
+        let mut hists = vec![H1::new(64, 0.0, 128.0); 2];
+        assert!(run_fused_indexed(&refs, &cs, None, &mut hists, 0).is_err());
+    }
+
+    /// `fill2` inside a same-list pair nest rides the pair kernel too.
+    #[test]
+    fn aux_fills_inside_pair_nest_match_scalar() {
+        let cs = generate_drellyan(1_500, 207);
+        let src = "\
+for event in dataset:
+    n = len(event.muons)
+    for i in range(n):
+        for j in range(i + 1, n):
+            m1 = event.muons[i]
+            m2 = event.muons[j]
+            fill(m1.pt + m2.pt)
+            fill2(m1.pt + m2.pt, m1.eta - m2.eta)
+";
+        let prog = queryir::compile(src, &cs.schema).unwrap();
+        let cp = lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Pairs));
+        let x = (64, 0.0, 256.0);
+        let y = (16, -8.0, 8.0);
+        let mut ha = H1::new(64, 0.0, 256.0);
+        let mut aa = cp.make_aux(x, y);
+        run_group(&cp, &cs, &mut ha, &mut aa).unwrap();
+        let mut hb = H1::new(64, 0.0, 256.0);
+        let mut ab = cp.make_aux(x, y);
+        run_scalar_group(&cp, &cs, &mut hb, &mut ab).unwrap();
+        assert_eq!(ha, hb);
+        assert_eq!(aa, ab);
+        assert!(aa[0].hist.total() > 0.0);
+    }
+
+    /// Zone-map pruning must stay off for aux-bearing and dyn-gather
+    /// programs: skipping a chunk would drop aux fills the cut does not
+    /// dominate, or suppress an out-of-bounds error the scalar semantics
+    /// require. (`predicate.rs` refuses both shapes; this pins it.)
+    #[test]
+    fn aux_and_dyn_gather_programs_are_not_prunable() {
+        let cs = generate_ttbar(200, 5, 208);
+        let aux_src = "\
+for event in dataset:
+    for jet in event.jets:
+        if jet.pt > 50:
+            fill2(jet.pt, jet.eta)
+";
+        let cp = lower(&queryir::compile(aux_src, &cs.schema).unwrap()).unwrap();
+        assert!(!cp.is_prunable());
+        let gather_src = "\
+for event in dataset:
+    n = len(event.muons)
+    if n > 0:
+        fill(event.muons[n - 1].pt)
+";
+        let cp = lower(&queryir::compile(gather_src, &cs.schema).unwrap()).unwrap();
+        assert!(!cp.is_prunable());
     }
 }

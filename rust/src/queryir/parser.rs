@@ -106,7 +106,8 @@ impl Parser {
                 self.if_tail()
             }
             Tok::Ident(name) => {
-                // `fill(expr)` or assignment.
+                // `fill(...)` / `fill2(...)` / `profile(...)` /
+                // `fill_vars(...)` or assignment.
                 if name == "fill" {
                     self.pos += 1;
                     self.expect(&Tok::LParen)?;
@@ -120,6 +121,42 @@ impl Parser {
                     self.expect(&Tok::RParen)?;
                     self.expect(&Tok::Newline)?;
                     Ok(Stmt::Fill(e, w))
+                } else if name == "fill2" || name == "profile" {
+                    self.pos += 1;
+                    self.expect(&Tok::LParen)?;
+                    let x = self.expr()?;
+                    self.expect(&Tok::Comma)?;
+                    let y = self.expr()?;
+                    let w = if self.peek() == &Tok::Comma {
+                        self.pos += 1;
+                        Some(self.expr()?)
+                    } else {
+                        None
+                    };
+                    self.expect(&Tok::RParen)?;
+                    self.expect(&Tok::Newline)?;
+                    if name == "fill2" {
+                        Ok(Stmt::Fill2(x, y, w))
+                    } else {
+                        Ok(Stmt::FillProf(x, y, w))
+                    }
+                } else if name == "fill_vars" {
+                    self.pos += 1;
+                    self.expect(&Tok::LParen)?;
+                    let x = self.expr()?;
+                    let mut weights = Vec::new();
+                    while self.peek() == &Tok::Comma {
+                        self.pos += 1;
+                        weights.push(self.expr()?);
+                    }
+                    self.expect(&Tok::RParen)?;
+                    self.expect(&Tok::Newline)?;
+                    if weights.is_empty() {
+                        return Err(ParseError(
+                            "fill_vars needs at least one weight variation".into(),
+                        ));
+                    }
+                    Ok(Stmt::FillVars(x, weights))
                 } else {
                     self.pos += 1;
                     self.expect(&Tok::Assign)?;
@@ -424,5 +461,22 @@ for e in dataset:
     fn weighted_fill() {
         let p = parse("for e in dataset:\n    fill(e.met, 2.0)\n").unwrap();
         assert!(matches!(&p.body[0], Stmt::Fill(_, Some(_))));
+    }
+
+    #[test]
+    fn agc_fill_forms() {
+        let p = parse(
+            "for e in dataset:\n    fill2(e.met, e.ht)\n    profile(e.met, e.ht, 2.0)\n    \
+             fill_vars(e.met, 1.0, 0.9, 1.1)\n",
+        )
+        .unwrap();
+        assert!(matches!(&p.body[0], Stmt::Fill2(_, _, None)));
+        assert!(matches!(&p.body[1], Stmt::FillProf(_, _, Some(_))));
+        match &p.body[2] {
+            Stmt::FillVars(_, ws) => assert_eq!(ws.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse("for e in dataset:\n    fill_vars(e.met)\n").is_err());
+        assert!(parse("for e in dataset:\n    fill2(e.met)\n").is_err());
     }
 }

@@ -11,9 +11,9 @@
 //! substantially less interpretive overhead.
 
 use super::ast::{apply_builtin, BinOp, CmpOp};
-use super::transform::{CExpr, CStmt, FlatProgram};
+use super::transform::{AuxSpec, CExpr, CStmt, FlatProgram};
 use crate::columnar::arrays::ColumnSet;
-use crate::hist::H1;
+use crate::hist::{Sink, SinkSet, H1};
 
 #[derive(Clone, Debug)]
 pub enum Op {
@@ -64,6 +64,9 @@ pub enum TStmt {
     LoopList { list: usize, slot: usize, body: Vec<TStmt> },
     If { cond: Tape, then: Vec<TStmt>, els: Vec<TStmt> },
     Fill { tape: Tape, weight: Option<Tape> },
+    Fill2 { sink: usize, x: Tape, y: Tape, weight: Option<Tape> },
+    FillProf { sink: usize, x: Tape, y: Tape, weight: Option<Tape> },
+    FillVars { sink: usize, x: Tape, weights: Vec<Tape> },
 }
 
 /// Tape-compiled whole program.
@@ -74,6 +77,8 @@ pub struct TapeProgram {
     pub lists: Vec<String>,
     pub n_slots: usize,
     pub body: Vec<TStmt>,
+    /// Aux sink declarations, copied from the flat program.
+    pub aux: Vec<AuxSpec>,
     pub fused: Option<Vec<TStmt>>,
 }
 
@@ -84,6 +89,7 @@ pub fn compile(prog: &FlatProgram) -> TapeProgram {
         lists: prog.lists.clone(),
         n_slots: prog.n_slots,
         body: prog.body.iter().map(stmt).collect(),
+        aux: prog.aux.clone(),
         fused: prog.fused.as_ref().map(|b| b.iter().map(stmt).collect()),
     }
 }
@@ -110,6 +116,23 @@ fn stmt(s: &CStmt) -> TStmt {
         CStmt::Fill { expr, weight } => TStmt::Fill {
             tape: tape_of(expr),
             weight: weight.as_ref().map(tape_of),
+        },
+        CStmt::Fill2 { sink, x, y, weight } => TStmt::Fill2 {
+            sink: *sink,
+            x: tape_of(x),
+            y: tape_of(y),
+            weight: weight.as_ref().map(tape_of),
+        },
+        CStmt::FillProf { sink, x, y, weight } => TStmt::FillProf {
+            sink: *sink,
+            x: tape_of(x),
+            y: tape_of(y),
+            weight: weight.as_ref().map(tape_of),
+        },
+        CStmt::FillVars { sink, x, weights } => TStmt::FillVars {
+            sink: *sink,
+            x: tape_of(x),
+            weights: weights.iter().map(tape_of).collect(),
         },
     }
 }
@@ -223,6 +246,29 @@ struct Ctx<'a> {
 }
 
 pub fn run(prog: &TapeProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), String> {
+    if !prog.aux.is_empty() {
+        return Err(format!(
+            "query has {} aux sink(s) (fill2/profile/fill_vars); use run_group",
+            prog.aux.len()
+        ));
+    }
+    run_group(prog, cs, hist, &mut [])
+}
+
+/// Run with aux sinks (one pre-built `Sink` per `prog.aux` entry).
+pub fn run_group(
+    prog: &TapeProgram,
+    cs: &ColumnSet,
+    hist: &mut H1,
+    aux: &mut [Sink],
+) -> Result<(), String> {
+    if aux.len() != prog.aux.len() {
+        return Err(format!(
+            "aux sink count mismatch: program declares {}, caller passed {}",
+            prog.aux.len(),
+            aux.len()
+        ));
+    }
     let mut item_cols = Vec::with_capacity(prog.item_cols.len());
     for path in &prog.item_cols {
         item_cols.push(
@@ -253,22 +299,23 @@ pub fn run(prog: &TapeProgram, cs: &ColumnSet, hist: &mut H1) -> Result<(), Stri
         stack: Vec::with_capacity(16),
         event: 0,
     };
+    let mut sinks = SinkSet { primary: hist, aux };
     if let Some(fused) = prog.fused.as_ref() {
         for s in fused {
-            exec(s, &mut ctx, hist)?;
+            exec(s, &mut ctx, &mut sinks)?;
         }
         return Ok(());
     }
     for ev in 0..cs.n_events {
         ctx.event = ev;
         for s in &prog.body {
-            exec(s, &mut ctx, hist)?;
+            exec(s, &mut ctx, &mut sinks)?;
         }
     }
     Ok(())
 }
 
-fn exec(s: &TStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
+fn exec(s: &TStmt, ctx: &mut Ctx, sinks: &mut SinkSet) -> Result<(), String> {
     match s {
         TStmt::Assign { slot, tape } => {
             ctx.slots[*slot] = eval(tape, ctx)?;
@@ -280,7 +327,7 @@ fn exec(s: &TStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
             for k in lo..hi {
                 ctx.slots[*slot] = k as f64;
                 for s in body {
-                    exec(s, ctx, hist)?;
+                    exec(s, ctx, sinks)?;
                 }
             }
             Ok(())
@@ -291,7 +338,7 @@ fn exec(s: &TStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
             for k in lo..hi {
                 ctx.slots[*slot] = k as f64;
                 for s in body {
-                    exec(s, ctx, hist)?;
+                    exec(s, ctx, sinks)?;
                 }
             }
             Ok(())
@@ -299,7 +346,7 @@ fn exec(s: &TStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
         TStmt::If { cond, then, els } => {
             let branch = if eval(cond, ctx)? != 0.0 { then } else { els };
             for s in branch {
-                exec(s, ctx, hist)?;
+                exec(s, ctx, sinks)?;
             }
             Ok(())
         }
@@ -309,7 +356,33 @@ fn exec(s: &TStmt, ctx: &mut Ctx, hist: &mut H1) -> Result<(), String> {
                 Some(w) => eval(w, ctx)?,
                 None => 1.0,
             };
-            hist.fill_w(x, w);
+            sinks.primary.fill_w(x, w);
+            Ok(())
+        }
+        TStmt::Fill2 { sink, x, y, weight } => {
+            let xv = eval(x, ctx)?;
+            let yv = eval(y, ctx)?;
+            let w = match weight {
+                Some(w) => eval(w, ctx)?,
+                None => 1.0,
+            };
+            sinks.fill2(*sink, xv, yv, w)
+        }
+        TStmt::FillProf { sink, x, y, weight } => {
+            let xv = eval(x, ctx)?;
+            let yv = eval(y, ctx)?;
+            let w = match weight {
+                Some(w) => eval(w, ctx)?,
+                None => 1.0,
+            };
+            sinks.fill_prof(*sink, xv, yv, w)
+        }
+        TStmt::FillVars { sink, x, weights } => {
+            let xv = eval(x, ctx)?;
+            for (k, w) in weights.iter().enumerate() {
+                let wv = eval(w, ctx)?;
+                sinks.fill_var(*sink + k, xv, wv)?;
+            }
             Ok(())
         }
     }

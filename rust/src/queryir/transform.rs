@@ -65,6 +65,31 @@ pub enum CStmt {
         els: Vec<CStmt>,
     },
     Fill { expr: CExpr, weight: Option<CExpr> },
+    /// `fill2(x, y[, w])` into aux sink `sink` (an `H2`).
+    Fill2 { sink: usize, x: CExpr, y: CExpr, weight: Option<CExpr> },
+    /// `profile(x, y[, w])` into aux sink `sink` (a `Profile`).
+    FillProf { sink: usize, x: CExpr, y: CExpr, weight: Option<CExpr> },
+    /// `fill_vars(x, w0, w1, ...)` — variation `k` fills aux sink
+    /// `sink + k` (an `H1` per variation), all in one pass.
+    FillVars { sink: usize, x: CExpr, weights: Vec<CExpr> },
+}
+
+/// Shape of one auxiliary sink (beyond the query's primary `H1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AuxKind {
+    H2,
+    Profile,
+    /// One systematic-variation `H1`.
+    Weight,
+}
+
+/// One aux sink declared by the program, in fill-site order. The label is
+/// generated from the site ordinal so every execution tier, the docstore
+/// reduction, and the wire protocol agree on sink identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AuxSpec {
+    pub label: String,
+    pub kind: AuxKind,
 }
 
 /// The transformed program + its array bindings.
@@ -78,9 +103,43 @@ pub struct FlatProgram {
     pub lists: Vec<String>,
     pub n_slots: usize,
     pub body: Vec<CStmt>,
+    /// Aux sinks (H2 / profile / variation H1s) in fill-site order; empty
+    /// for classic single-histogram programs.
+    pub aux: Vec<AuxSpec>,
     /// Set when the whole program is a single total loop over one list with
     /// no per-event state — the paper's fusable special case.
     pub fused: Option<Vec<CStmt>>,
+}
+
+impl FlatProgram {
+    /// Materialize this program's aux sinks. `x` is the query's primary
+    /// binning `(n_bins, lo, hi)` (shared by variation H1s, profile x-axes
+    /// and H2 x-axes); `y` is the query's y binning (H2 y-axes).
+    pub fn make_aux(&self, x: (usize, f64, f64), y: (usize, f64, f64)) -> Vec<crate::hist::Sink> {
+        make_aux_sinks(&self.aux, x, y)
+    }
+}
+
+/// Materialize a sink vector from aux declarations — shared by the
+/// transformed-program and compiled-program entry points so every tier
+/// builds identically shaped, identically labeled sinks.
+pub fn make_aux_sinks(
+    specs: &[AuxSpec],
+    x: (usize, f64, f64),
+    y: (usize, f64, f64),
+) -> Vec<crate::hist::Sink> {
+    use crate::hist::{Hist, Sink, H1, H2, Profile};
+    specs
+        .iter()
+        .map(|spec| Sink {
+            label: spec.label.clone(),
+            hist: match spec.kind {
+                AuxKind::H2 => Hist::H2(H2::new(x.0, x.1, x.2, y.0, y.1, y.2)),
+                AuxKind::Profile => Hist::Profile(Profile::new(x.0, x.1, x.2)),
+                AuxKind::Weight => Hist::H1(H1::new(x.0, x.1, x.2)),
+            },
+        })
+        .collect()
 }
 
 #[derive(Clone, Debug)]
@@ -100,6 +159,9 @@ pub struct Transformer<'a> {
     event_cols: Vec<String>,
     lists: Vec<String>,
     n_slots: usize,
+    aux: Vec<AuxSpec>,
+    /// Aux fill sites seen so far (one `fill_vars` is one site).
+    n_aux_sites: usize,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -136,6 +198,8 @@ impl<'a> Transformer<'a> {
             event_cols: Vec::new(),
             lists: Vec::new(),
             n_slots: 0,
+            aux: Vec::new(),
+            n_aux_sites: 0,
         };
         t.vars.insert(program.event_var.clone(), Binding::Event);
         let body = t.block(&program.body)?;
@@ -146,6 +210,7 @@ impl<'a> Transformer<'a> {
             lists: t.lists,
             n_slots: t.n_slots,
             body,
+            aux: t.aux,
             fused,
         })
     }
@@ -258,6 +323,47 @@ impl<'a> Transformer<'a> {
                 expr: self.scalar(e)?,
                 weight: w.as_ref().map(|w| self.scalar(w)).transpose()?,
             }),
+            Stmt::Fill2(x, y, w) => {
+                let site = self.n_aux_sites;
+                self.n_aux_sites += 1;
+                let sink = self.aux.len();
+                self.aux.push(AuxSpec { label: format!("h2#{site}"), kind: AuxKind::H2 });
+                Ok(CStmt::Fill2 {
+                    sink,
+                    x: self.scalar(x)?,
+                    y: self.scalar(y)?,
+                    weight: w.as_ref().map(|w| self.scalar(w)).transpose()?,
+                })
+            }
+            Stmt::FillProf(x, y, w) => {
+                let site = self.n_aux_sites;
+                self.n_aux_sites += 1;
+                let sink = self.aux.len();
+                self.aux
+                    .push(AuxSpec { label: format!("prof#{site}"), kind: AuxKind::Profile });
+                Ok(CStmt::FillProf {
+                    sink,
+                    x: self.scalar(x)?,
+                    y: self.scalar(y)?,
+                    weight: w.as_ref().map(|w| self.scalar(w)).transpose()?,
+                })
+            }
+            Stmt::FillVars(x, ws) => {
+                let site = self.n_aux_sites;
+                self.n_aux_sites += 1;
+                let sink = self.aux.len();
+                for k in 0..ws.len() {
+                    self.aux.push(AuxSpec {
+                        label: format!("var#{site}.{k}"),
+                        kind: AuxKind::Weight,
+                    });
+                }
+                Ok(CStmt::FillVars {
+                    sink,
+                    x: self.scalar(x)?,
+                    weights: ws.iter().map(|w| self.scalar(w)).collect::<TResult<Vec<_>>>()?,
+                })
+            }
         }
     }
 
@@ -419,6 +525,14 @@ impl<'a> Transformer<'a> {
                     expr_ok(expr, slot)
                         && weight.as_ref().map(|w| expr_ok(w, slot)).unwrap_or(true)
                 }
+                CStmt::Fill2 { x, y, weight, .. } | CStmt::FillProf { x, y, weight, .. } => {
+                    expr_ok(x, slot)
+                        && expr_ok(y, slot)
+                        && weight.as_ref().map(|w| expr_ok(w, slot)).unwrap_or(true)
+                }
+                CStmt::FillVars { x, weights, .. } => {
+                    expr_ok(x, slot) && weights.iter().all(|w| expr_ok(w, slot))
+                }
                 CStmt::If { cond, then, els } => {
                     expr_ok(cond, slot)
                         && then.iter().all(|s| stmt_ok(s, slot))
@@ -571,6 +685,29 @@ pub fn inline_body(stmts: &[CStmt], env: &mut SlotEnv) -> Option<Vec<CStmt>> {
                     None => None,
                 },
             }),
+            CStmt::Fill2 { sink, x, y, weight } => out.push(CStmt::Fill2 {
+                sink: *sink,
+                x: env.subst(x)?,
+                y: env.subst(y)?,
+                weight: match weight {
+                    Some(w) => Some(env.subst(w)?),
+                    None => None,
+                },
+            }),
+            CStmt::FillProf { sink, x, y, weight } => out.push(CStmt::FillProf {
+                sink: *sink,
+                x: env.subst(x)?,
+                y: env.subst(y)?,
+                weight: match weight {
+                    Some(w) => Some(env.subst(w)?),
+                    None => None,
+                },
+            }),
+            CStmt::FillVars { sink, x, weights } => out.push(CStmt::FillVars {
+                sink: *sink,
+                x: env.subst(x)?,
+                weights: weights.iter().map(|w| env.subst(w)).collect::<Option<Vec<_>>>()?,
+            }),
             CStmt::If { cond, then, els } => out.push(CStmt::If {
                 cond: env.subst(cond)?,
                 then: inline_branch(then, env)?,
@@ -594,6 +731,29 @@ fn inline_branch(stmts: &[CStmt], env: &SlotEnv) -> Option<Vec<CStmt>> {
                     Some(w) => Some(env.subst(w)?),
                     None => None,
                 },
+            }),
+            CStmt::Fill2 { sink, x, y, weight } => out.push(CStmt::Fill2 {
+                sink: *sink,
+                x: env.subst(x)?,
+                y: env.subst(y)?,
+                weight: match weight {
+                    Some(w) => Some(env.subst(w)?),
+                    None => None,
+                },
+            }),
+            CStmt::FillProf { sink, x, y, weight } => out.push(CStmt::FillProf {
+                sink: *sink,
+                x: env.subst(x)?,
+                y: env.subst(y)?,
+                weight: match weight {
+                    Some(w) => Some(env.subst(w)?),
+                    None => None,
+                },
+            }),
+            CStmt::FillVars { sink, x, weights } => out.push(CStmt::FillVars {
+                sink: *sink,
+                x: env.subst(x)?,
+                weights: weights.iter().map(|w| env.subst(w)).collect::<Option<Vec<_>>>()?,
             }),
             CStmt::If { cond, then, els } => out.push(CStmt::If {
                 cond: env.subst(cond)?,

@@ -13,6 +13,9 @@
 //!              "exec_ms":...,"fused_with":...,"events":...,"partitions":...,
 //!              "skipped":...,"chunks_skipped":...,"chunks_take_all":...,
 //!              "chunks_scanned":...,"cached":bool}
+//!             queries with `fill2`/`profile`/`fill_vars` statements add a
+//!             labeled `"hists":[{"label":"h2#0","type":"h2",...},...]`
+//!             array alongside `hist` (absent otherwise)
 //!             progress frames: {"progress":done,"total":n} (one per merge round)
 //!             overload: {"ok":false,"error":"overloaded","retry_after_ms":..}
 //!
@@ -764,13 +767,21 @@ fn cache_key(cluster: &Cluster, q: &Query) -> Result<String, String> {
         }
         None => format!("kind:{}:{}", q.kind.artifact(), q.list),
     };
+    // Y binning (for `fill2` H2 sinks) joins the key only when non-default,
+    // so classic queries keep byte-identical keys across versions.
+    let ykey = if (q.y_bins, q.y_lo, q.y_hi) != (32, 0.0, 128.0) {
+        format!("|y{}|{}|{}", q.y_bins, q.y_lo.to_bits(), q.y_hi.to_bits())
+    } else {
+        String::new()
+    };
     Ok(format!(
-        "{}|v{}|b{}|{}|{}|{}",
+        "{}|v{}|b{}|{}|{}{}|{}",
         q.dataset,
         version,
         q.n_bins,
         q.lo.to_bits(),
         q.hi.to_bits(),
+        ykey,
         prog
     ))
 }
@@ -785,9 +796,19 @@ struct Timing {
 }
 
 fn result_json(res: &CachedResult, latency: Duration, cached: bool, t: Timing) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("hist", res.hist.to_json()),
+    ];
+    // Aux sinks (`fill2`/`profile`/`fill_vars`) ride a labeled `hists`
+    // array; classic responses stay byte-identical (no empty array).
+    if !res.aux.is_empty() {
+        pairs.push((
+            "hists",
+            Json::Arr(res.aux.iter().map(|s| s.to_json()).collect()),
+        ));
+    }
+    pairs.extend([
         ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
         ("queue_ms", Json::num(t.queue_ms)),
         ("exec_ms", Json::num(t.exec_ms)),
@@ -799,7 +820,8 @@ fn result_json(res: &CachedResult, latency: Duration, cached: bool, t: Timing) -
         ("chunks_take_all", Json::num(res.chunks.chunks_take_all as f64)),
         ("chunks_scanned", Json::num(res.chunks.chunks_scanned as f64)),
         ("cached", Json::Bool(cached)),
-    ])
+    ]);
+    Json::obj(pairs)
 }
 
 fn run_query<F: FnMut(usize, usize)>(
@@ -814,6 +836,7 @@ fn run_query<F: FnMut(usize, usize)>(
     })?;
     Ok(CachedResult {
         hist: res.hist,
+        aux: res.aux,
         events: res.events,
         partitions: res.partitions,
         skipped: res.skipped,
@@ -1228,6 +1251,52 @@ mod tests {
             rbad.get("error").and_then(|e| e.as_str()).unwrap_or("").contains("bogus"),
             "{rbad}"
         );
+
+        client.shutdown_server().unwrap();
+        let _ = t.join().unwrap();
+    }
+
+    /// An AGC-style source query (`fill2`/`profile`/`fill_vars`) over TCP:
+    /// the response carries the labeled `hists` array alongside `hist`,
+    /// the result cache serves it back bit-identically, and a different
+    /// y-binning is a different cache key. Classic queries never grow the
+    /// field.
+    #[test]
+    fn aux_hists_ride_the_wire_and_the_cache() {
+        use crate::hist::Sink;
+        let cluster = test_cluster(Backend::compiled(), 6_000, 94);
+        let (mut client, t) = start_server(cluster);
+        let src = "for event in dataset:\n\
+                   \x20   for m in event.muons:\n\
+                   \x20       fill(m.pt)\n\
+                   \x20       fill2(m.pt, m.eta)\n\
+                   \x20       fill_vars(m.pt, 0.5, 1.0)\n";
+        let q = Query::from_source(src, "dy").with_y_binning(16, -4.0, 4.0);
+        let cold = client.query(&q, |_, _| {}).unwrap();
+        assert_eq!(cold.get("ok"), Some(&Json::Bool(true)), "{cold}");
+        assert_eq!(cold.get("cached"), Some(&Json::Bool(false)));
+        let hists = cold.get("hists").and_then(|h| h.as_arr()).expect("hists array");
+        assert_eq!(hists.len(), 3, "h2 + 2 variations");
+        let sinks: Vec<Sink> = hists.iter().map(|j| Sink::from_json(j).unwrap()).collect();
+        assert!(sinks[0].label.starts_with("h2#"));
+        assert!(sinks[1].label.starts_with("var#"));
+        assert!(sinks.iter().all(|s| s.hist.total() > 0.0));
+
+        // The cache round-trips the aux sinks bit-identically.
+        let warm = client.query(&q, |_, _| {}).unwrap();
+        assert_eq!(warm.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(warm.get("hists"), cold.get("hists"));
+
+        // Another y-binning is a different canonical key → fresh run.
+        let q2 = Query::from_source(src, "dy").with_y_binning(8, -2.0, 2.0);
+        let other = client.query(&q2, |_, _| {}).unwrap();
+        assert_eq!(other.get("cached"), Some(&Json::Bool(false)), "{other}");
+
+        // Classic queries stay aux-free on the wire.
+        let classic = client
+            .query(&Query::new(QueryKind::MaxPt, "dy", "muons"), |_, _| {})
+            .unwrap();
+        assert!(classic.get("hists").is_none());
 
         client.shutdown_server().unwrap();
         let _ = t.join().unwrap();

@@ -29,7 +29,7 @@
 //! tapes first and repopulate the cache under the new version.
 
 use crate::engine::Query;
-use crate::hist::H1;
+use crate::hist::{Sink, H1};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -38,6 +38,10 @@ use std::sync::Mutex;
 pub struct CachedResult {
     /// The fully merged query histogram, exactly as it was served.
     pub hist: H1,
+    /// Aux sinks (`fill2`/`profile`/`fill_vars`) in fill-site order —
+    /// cached and served back exactly like `hist`; empty for classic
+    /// single-histogram queries.
+    pub aux: Vec<Sink>,
     /// Events processed to produce it (for the client's `events` field).
     pub events: u64,
     /// Partitions merged to produce it.
@@ -217,6 +221,7 @@ mod tests {
         }
         CachedResult {
             hist: h,
+            aux: Vec::new(),
             events: total as u64,
             partitions: 1,
             skipped: 0,

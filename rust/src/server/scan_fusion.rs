@@ -110,6 +110,7 @@ where
 fn to_cached(res: QueryResult) -> CachedResult {
     CachedResult {
         hist: res.hist,
+        aux: res.aux,
         events: res.events,
         partitions: res.partitions,
         skipped: res.skipped,

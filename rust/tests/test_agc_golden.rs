@@ -1,0 +1,225 @@
+//! Golden-file lockdown for the AGC statement set: fixed queries over a
+//! fixed tt̄ dataset, every output float pinned by its exact `f64::to_bits`
+//! pattern in `rust/tests/golden/agc_*.json`.
+//!
+//! Workflow:
+//! - Normal runs compare the freshly computed result against the checked-in
+//!   golden file, bit for bit, and name the first drifted line on failure.
+//! - `HEPQ_BLESS=1 cargo test --test test_agc_golden` regenerates the
+//!   files after an *intentional* numeric change (review the diff!).
+//! - A missing file bootstraps itself: the result is computed twice from
+//!   scratch (reproducibility check), written, and the test passes — so a
+//!   fresh platform can mint its baseline before locking against it.
+//!
+//! The golden queries stick to `+ - * / sqrt` and comparisons — IEEE-754
+//! exactly-rounded operations — so the bit patterns are portable across
+//! conforming platforms. `cos`/`cosh` (libm, implementation-defined last
+//! ulps) are deliberately absent here; tier-equivalence tests cover them.
+
+use hepq::columnar::ColumnSet;
+use hepq::datagen::generate_ttbar;
+use hepq::hist::{Hist, Sink, H1};
+use hepq::queryir::{self, flat, lower};
+use hepq::util::json::Json;
+use std::path::Path;
+
+struct Case {
+    name: &'static str,
+    src: &'static str,
+    x: (usize, f64, f64),
+    y: (usize, f64, f64),
+}
+
+fn cases() -> Vec<Case> {
+    vec![
+        Case {
+            name: "pairs",
+            src: "\
+for event in dataset:
+    nm = len(event.muons)
+    nj = len(event.jets)
+    for i in range(nm):
+        for j in range(nj):
+            m = event.muons[i]
+            jet = event.jets[j]
+            if jet.pt > 30:
+                fill(m.pt + jet.pt)
+                fill2(m.pt, jet.pt)
+",
+            x: (48, 0.0, 512.0),
+            y: (24, 0.0, 384.0),
+        },
+        Case {
+            name: "gather",
+            src: "\
+for event in dataset:
+    n = len(event.muons)
+    if n > 0:
+        fill(event.muons[n - 1].pt)
+        fill2(event.muons[0].pt, event.muons[n - 1].pt)
+        profile(event.muons[0].pt, n)
+",
+            x: (64, 0.0, 128.0),
+            y: (32, 0.0, 128.0),
+        },
+        Case {
+            name: "vars",
+            src: "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 24:
+            fill(muon.pt)
+            fill_vars(muon.pt, 0.5, 0.25, 1.0, 2.0, 0.75, 1.5, 4.0, 1.25)
+",
+            x: (64, 0.0, 128.0),
+            y: (8, 0.0, 1.0),
+        },
+        Case {
+            name: "ht",
+            src: "\
+for event in dataset:
+    ht = 0.0
+    nj = 0
+    for jet in event.jets:
+        if jet.pt > 35:
+            ht = ht + jet.pt
+            nj = nj + 1
+    if nj > 1:
+        fill(ht)
+        profile(ht, nj)
+        fill2(ht, nj)
+",
+            x: (60, 0.0, 1200.0),
+            y: (10, 0.0, 10.0),
+        },
+    ]
+}
+
+fn hex(v: f64) -> Json {
+    Json::str(format!("{:016x}", v.to_bits()))
+}
+
+fn hex_arr(vs: &[f64]) -> Json {
+    Json::Arr(vs.iter().map(|v| hex(*v)).collect())
+}
+
+fn enc_h1(h: &H1) -> Json {
+    Json::obj(vec![
+        ("lo", hex(h.lo)),
+        ("hi", hex(h.hi)),
+        ("bins", hex_arr(&h.bins)),
+        ("underflow", hex(h.underflow)),
+        ("overflow", hex(h.overflow)),
+        ("count", hex(h.count)),
+        ("sum", hex(h.sum)),
+        ("sum2", hex(h.sum2)),
+    ])
+}
+
+fn enc_sink(s: &Sink) -> Json {
+    let body = match &s.hist {
+        Hist::H1(h) => enc_h1(h),
+        Hist::H2(h) => Json::obj(vec![
+            ("nx", Json::num(h.nx as f64)),
+            ("xlo", hex(h.xlo)),
+            ("xhi", hex(h.xhi)),
+            ("ny", Json::num(h.ny as f64)),
+            ("ylo", hex(h.ylo)),
+            ("yhi", hex(h.yhi)),
+            ("bins", hex_arr(&h.bins)),
+            ("out", hex(h.out)),
+            ("count", hex(h.count)),
+            ("sumx", hex(h.sumx)),
+            ("sumx2", hex(h.sumx2)),
+            ("sumy", hex(h.sumy)),
+            ("sumy2", hex(h.sumy2)),
+        ]),
+        Hist::Profile(p) => Json::obj(vec![
+            ("lo", hex(p.lo)),
+            ("hi", hex(p.hi)),
+            ("count", hex_arr(&p.count)),
+            ("sumy", hex_arr(&p.sumy)),
+            ("sumy2", hex_arr(&p.sumy2)),
+            ("under", hex(p.under)),
+            ("over", hex(p.over)),
+            ("total", hex(p.total)),
+        ]),
+    };
+    Json::obj(vec![
+        ("label", Json::str(s.label.clone())),
+        ("type", Json::str(s.hist.type_name())),
+        ("hist", body),
+    ])
+}
+
+/// Compute one case through the flat walker AND the chunked kernels
+/// (bit-identity cross-check), then render the canonical golden text.
+fn compute(case: &Case, cs: &ColumnSet) -> String {
+    let prog = queryir::compile(case.src, &cs.schema).expect(case.name);
+    let (x, y) = (case.x, case.y);
+    let mut hf = H1::new(x.0, x.1, x.2);
+    let mut af = prog.make_aux(x, y);
+    flat::run_group(&prog, cs, &mut hf, &mut af).expect(case.name);
+
+    let cp = lower::lower(&prog).expect(case.name);
+    let mut hc = H1::new(x.0, x.1, x.2);
+    let mut ac = cp.make_aux(x, y);
+    lower::run_group(&cp, cs, &mut hc, &mut ac).expect(case.name);
+    assert_eq!(hf, hc, "{}: chunked kernels drifted from the flat walker", case.name);
+    assert_eq!(af, ac, "{}: chunked aux drifted from the flat walker", case.name);
+
+    let j = Json::obj(vec![
+        ("case", Json::str(case.name)),
+        ("events", Json::num(EVENTS as f64)),
+        ("seed", Json::num(SEED as f64)),
+        ("source", Json::str(case.src)),
+        ("primary", enc_h1(&hf)),
+        ("aux", Json::Arr(af.iter().map(enc_sink).collect())),
+    ]);
+    format!("{j}\n")
+}
+
+/// Name the first divergence instead of dumping two full JSON blobs.
+fn first_diff(got: &str, want: &str) -> String {
+    let (g, w) = (got.as_bytes(), want.as_bytes());
+    let at = g.iter().zip(w).take_while(|(a, b)| a == b).count();
+    let lo = at.saturating_sub(40);
+    let ctx = |s: &[u8]| String::from_utf8_lossy(&s[lo..(at + 40).min(s.len())]).into_owned();
+    format!("first divergence at byte {at}:\n  got  …{}…\n  want …{}…", ctx(g), ctx(w))
+}
+
+const EVENTS: usize = 3_000;
+const SEED: u64 = 77;
+
+#[test]
+fn golden_files_lock_down_agc_results() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bless = std::env::var("HEPQ_BLESS").map(|v| v == "1").unwrap_or(false);
+    let cs = generate_ttbar(EVENTS, 6, SEED);
+    for case in cases() {
+        let got = compute(&case, &cs);
+        // Run-to-run reproducibility from a fresh compile, before anything
+        // is compared or written: a nondeterministic result must never
+        // become a baseline.
+        let again = compute(&case, &cs);
+        assert_eq!(got, again, "case {}: result is not run-to-run reproducible", case.name);
+
+        let path = dir.join(format!("agc_{}.json", case.name));
+        if bless || !path.exists() {
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("blessed {}", path.display());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            got == want,
+            "case {}: output drifted from {}\n{}\nIf the change is intentional, \
+             regenerate with `HEPQ_BLESS=1 cargo test --test test_agc_golden` \
+             and review the diff.",
+            case.name,
+            path.display(),
+            first_diff(&got, &want)
+        );
+    }
+}

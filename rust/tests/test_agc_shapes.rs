@@ -1,0 +1,368 @@
+//! Randomized AGC shape properties: cross-list pair nests, gathers at
+//! non-constant indices (guaranteed-OOB and empty-list lanes included),
+//! NaN fills and 1–8-point systematic-variation batches — bit-identical
+//! across the scalar closures, the chunked kernels, the morsel-parallel
+//! driver and the cluster.
+//!
+//! Comparison discipline (the drivers' documented contracts):
+//! - sequential tiers (flat walker, scalar closures, chunked kernels,
+//!   thread-1 parallel) agree **wholesale**, running Σw·v moments included
+//!   — their accumulators associate additions identically;
+//! - split tiers (multi-threaded morsels, cluster partitions) agree on
+//!   every bin content, weight count and overflow pocket (dyadic-weight
+//!   sums are exactly associative), and any two runs over the *same* split
+//!   grid agree wholesale (deterministic ordered merges).
+
+use hepq::columnar::ColumnSet;
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_ttbar;
+use hepq::engine::{Backend, Query};
+use hepq::hist::{Hist, Sink, H1};
+use hepq::queryir::{self, flat, lower, KernelShape, ParallelCfg};
+use hepq::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+type Bin3 = (usize, f64, f64);
+type GroupOut = (H1, Vec<Sink>);
+
+/// Dyadic weights: their sums (and products with integer fill counts) are
+/// exact in f64, so bin contents survive any merge order bit-for-bit.
+const WEIGHTS: [f64; 8] = [0.5, 0.25, 1.0, 2.0, 0.75, 1.5, 4.0, 1.25];
+
+fn weight_list(k: usize) -> String {
+    WEIGHTS[..k].iter().map(|w| format!("{w:?}")).collect::<Vec<_>>().join(", ")
+}
+
+fn run_flat(src: &str, cs: &ColumnSet, x: Bin3, y: Bin3) -> GroupOut {
+    let prog = queryir::compile(src, &cs.schema).expect("compile");
+    let mut h = H1::new(x.0, x.1, x.2);
+    let mut aux = prog.make_aux(x, y);
+    flat::run_group(&prog, cs, &mut h, &mut aux).expect("flat");
+    (h, aux)
+}
+
+fn run_compiled(
+    src: &str,
+    cs: &ColumnSet,
+    x: Bin3,
+    y: Bin3,
+    cfg: Option<ParallelCfg>,
+    scalar: bool,
+) -> GroupOut {
+    let prog = queryir::compile(src, &cs.schema).expect("compile");
+    let cp = lower::lower(&prog).expect("lower");
+    let mut h = H1::new(x.0, x.1, x.2);
+    let mut aux = cp.make_aux(x, y);
+    match (scalar, cfg) {
+        (true, _) => lower::run_scalar_group(&cp, cs, &mut h, &mut aux).expect("scalar"),
+        (false, None) => lower::run_group(&cp, cs, &mut h, &mut aux).expect("chunked"),
+        (false, Some(c)) => {
+            lower::run_parallel_group(&cp, cs, &mut h, &mut aux, c).expect("parallel")
+        }
+    }
+    (h, aux)
+}
+
+fn assert_bitident(a: &GroupOut, b: &GroupOut, what: &str) {
+    assert_eq!(a.0, b.0, "{what}: primary");
+    assert_eq!(a.1, b.1, "{what}: aux");
+}
+
+fn assert_stable_h1(a: &H1, b: &H1, what: &str) {
+    assert_eq!(a.bins, b.bins, "{what}: bins");
+    assert_eq!(a.count, b.count, "{what}: count");
+    assert_eq!(a.underflow, b.underflow, "{what}: underflow");
+    assert_eq!(a.overflow, b.overflow, "{what}: overflow");
+}
+
+fn assert_stable(a: &GroupOut, b: &GroupOut, what: &str) {
+    assert_stable_h1(&a.0, &b.0, what);
+    assert_eq!(a.1.len(), b.1.len(), "{what}: sink count");
+    for (sa, sb) in a.1.iter().zip(&b.1) {
+        assert_eq!(sa.label, sb.label, "{what}");
+        let w = format!("{what}/{}", sa.label);
+        match (&sa.hist, &sb.hist) {
+            (Hist::H1(p), Hist::H1(q)) => assert_stable_h1(p, q, &w),
+            (Hist::H2(p), Hist::H2(q)) => {
+                assert_eq!(p.bins, q.bins, "{w}: bins");
+                assert_eq!(p.out, q.out, "{w}: out");
+                assert_eq!(p.count, q.count, "{w}: count");
+            }
+            (Hist::Profile(p), Hist::Profile(q)) => {
+                assert_eq!(p.count, q.count, "{w}: counts");
+                assert_eq!(p.under, q.under, "{w}: under");
+                assert_eq!(p.over, q.over, "{w}: over");
+                assert_eq!(p.total, q.total, "{w}: total");
+            }
+            _ => panic!("{w}: sink shape mismatch"),
+        }
+    }
+}
+
+/// Cross-list muon×jet pair nests with a randomized cut, an H2 map and a
+/// randomized 1–8-point variation batch, swept over the morsel grid.
+#[test]
+fn cross_list_pairs_survive_every_tier_and_morsel_grid() {
+    for trial in 0u64..3 {
+        let mut rng = Pcg32::new(0xA6C0 + trial);
+        let cut = 20 + rng.below(30);
+        let k = 1 + rng.below(8) as usize;
+        let src = format!(
+            "\
+for event in dataset:
+    nm = len(event.muons)
+    nj = len(event.jets)
+    for i in range(nm):
+        for j in range(nj):
+            m = event.muons[i]
+            jet = event.jets[j]
+            if jet.pt > {cut}:
+                fill(m.pt + jet.pt)
+                fill2(m.pt + jet.pt, jet.eta)
+                fill_vars(m.pt + jet.pt, {})
+",
+            weight_list(k)
+        );
+        let events = 1_500 + 500 * trial as usize;
+        let cs = generate_ttbar(events, 6, 9_000 + trial);
+        let x: Bin3 = (48 + trial as usize, 0.0, 512.0);
+        let y: Bin3 = (24, -4.8, 4.8);
+
+        let prog = queryir::compile(&src, &cs.schema).unwrap();
+        let cp = lower::lower(&prog).unwrap();
+        assert_eq!(cp.kernel_shape(), Some(KernelShape::Pairs), "trial {trial}");
+        assert_eq!(cp.make_aux(x, y).len(), 1 + k, "trial {trial}");
+
+        let reference = run_flat(&src, &cs, x, y);
+        assert!(reference.0.total() > 0.0, "trial {trial}: cut ate everything");
+        let chunked = run_compiled(&src, &cs, x, y, None, false);
+        assert_bitident(&chunked, &reference, "chunked vs flat");
+        let scalar = run_compiled(&src, &cs, x, y, None, true);
+        assert_bitident(&scalar, &reference, "scalar vs flat");
+
+        for morsel in [1usize, 7, 1024, 0] {
+            let mut per_grid: Vec<GroupOut> = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let cfg = ParallelCfg { threads, morsel_events: morsel };
+                let out = run_compiled(&src, &cs, x, y, Some(cfg), false);
+                let what = format!("trial {trial} morsel {morsel} threads {threads}");
+                if threads == 1 {
+                    assert_bitident(&out, &reference, &what);
+                } else {
+                    assert_stable(&out, &reference, &what);
+                    per_grid.push(out);
+                }
+            }
+            // Same morsel grid ⇒ same association ⇒ wholesale identity
+            // regardless of how many threads pulled the morsels.
+            assert_bitident(
+                &per_grid[0],
+                &per_grid[1],
+                &format!("trial {trial} morsel {morsel} thread counts"),
+            );
+        }
+    }
+}
+
+/// Gathers at non-constant indices: empty-list lanes fall out of the
+/// guard, guarded last/first-element reads agree across tiers, and the
+/// unguarded read one past the end errors in every compiled tier with
+/// the scalar error text.
+#[test]
+fn dynamic_gathers_handle_empty_lists_and_oob() {
+    for trial in 0u64..3 {
+        let mut rng = Pcg32::new(0xD9A + trial);
+        let guard = rng.below(2); // n > 0 or n > 1
+        let src = format!(
+            "\
+for event in dataset:
+    n = len(event.muons)
+    if n > {guard}:
+        fill(event.muons[n - 1].pt)
+        fill2(event.muons[n - 1].pt, event.muons[0].eta)
+"
+        );
+        let events = 2_000 + 300 * trial as usize;
+        let cs = generate_ttbar(events, 5, 7_700 + trial);
+        let x: Bin3 = (64, 0.0, 128.0);
+        let y: Bin3 = (16, -4.0, 4.0);
+
+        let reference = run_flat(&src, &cs, x, y);
+        // poisson(1.1) muons: a third of events have an empty list, so the
+        // guard must really be dropping lanes.
+        assert!(reference.0.total() > 0.0, "trial {trial}");
+        assert!(reference.0.total() < events as f64, "trial {trial}: no empty lanes?");
+
+        let chunked = run_compiled(&src, &cs, x, y, None, false);
+        assert_bitident(&chunked, &reference, "chunked vs flat");
+        let scalar = run_compiled(&src, &cs, x, y, None, true);
+        assert_bitident(&scalar, &reference, "scalar vs flat");
+        let cfg = ParallelCfg { threads: 4, morsel_events: 311 };
+        let par = run_compiled(&src, &cs, x, y, Some(cfg), false);
+        assert_stable(&par, &reference, "parallel vs flat");
+
+        // Guaranteed out-of-bounds: `muons[n]` on the last event reads past
+        // the global content array in every compiled tier.
+        let oob = "\
+for event in dataset:
+    n = len(event.muons)
+    fill(event.muons[n].pt)
+";
+        let prog = queryir::compile(oob, &cs.schema).unwrap();
+        let cp = lower::lower(&prog).unwrap();
+        let mut h = H1::new(8, 0.0, 128.0);
+        let e = lower::run_group(&cp, &cs, &mut h, &mut []).unwrap_err();
+        assert!(e.contains("out of bounds"), "chunked: {e}");
+        let mut h = H1::new(8, 0.0, 128.0);
+        let e = lower::run_scalar_group(&cp, &cs, &mut h, &mut []).unwrap_err();
+        assert!(e.contains("out of bounds"), "scalar: {e}");
+        let mut h = H1::new(8, 0.0, 128.0);
+        let e = lower::run_parallel_group(&cp, &cs, &mut h, &mut [], cfg).unwrap_err();
+        assert!(e.contains("out of bounds"), "parallel: {e}");
+        let mut h = H1::new(8, 0.0, 128.0);
+        let e = flat::run_group(&prog, &cs, &mut h, &mut []).unwrap_err();
+        assert!(e.contains("out of bounds"), "flat: {e}");
+    }
+}
+
+/// NaN fill values (sqrt of a negative) are skipped by every sink shape,
+/// identically in every tier.
+#[test]
+fn nan_lanes_are_skipped_identically() {
+    let src = "\
+for event in dataset:
+    for muon in event.muons:
+        fill(sqrt(muon.eta) * 32)
+        fill2(sqrt(muon.eta) * 32, muon.pt)
+        fill_vars(sqrt(muon.eta) * 32, 0.5, 1.0, 2.0)
+";
+    let cs = generate_ttbar(2_500, 5, 515);
+    let x: Bin3 = (32, 0.0, 64.0);
+    let y: Bin3 = (16, 0.0, 128.0);
+
+    let reference = run_flat(src, &cs, x, y);
+    // Roughly half the etas are negative: NaN lanes must exist and be
+    // dropped, not binned somewhere.
+    assert!(reference.0.total() > 0.0);
+    let mut plain = H1::new(32, 0.0, 64.0);
+    queryir::run_transformed(
+        "for event in dataset:\n    for muon in event.muons:\n        fill(muon.pt)\n",
+        &cs,
+        &mut plain,
+    )
+    .unwrap();
+    assert!(reference.0.total() < plain.total(), "no NaN lanes were dropped");
+    for s in &reference.1 {
+        assert_eq!(s.hist.total(), reference.0.total() * weight_of(&s.label), "{}", s.label);
+    }
+
+    let chunked = run_compiled(src, &cs, x, y, None, false);
+    assert_bitident(&chunked, &reference, "chunked vs flat");
+    let scalar = run_compiled(src, &cs, x, y, None, true);
+    assert_bitident(&scalar, &reference, "scalar vs flat");
+    let cfg = ParallelCfg { threads: 3, morsel_events: 129 };
+    let par = run_compiled(src, &cs, x, y, Some(cfg), false);
+    assert_stable(&par, &reference, "parallel vs flat");
+}
+
+/// Sink totals in `nan_lanes_are_skipped_identically`: the H2 sees weight
+/// 1 per surviving lane; the variations see their batch weight.
+fn weight_of(label: &str) -> f64 {
+    match label.rsplit('.').next().and_then(|k| k.parse::<usize>().ok()) {
+        Some(0) if label.starts_with("var#") => 0.5,
+        Some(1) if label.starts_with("var#") => 1.0,
+        Some(2) if label.starts_with("var#") => 2.0,
+        _ => 1.0,
+    }
+}
+
+/// Variation batches from 1 to 8 points: one sink per weight, labeled by
+/// site and ordinal, each total exactly `w × (primary total)`.
+#[test]
+fn variation_batches_scale_exactly_1_to_8() {
+    let cs = generate_ttbar(2_000, 5, 616);
+    let x: Bin3 = (64, 0.0, 128.0);
+    let y: Bin3 = (16, 0.0, 1.0);
+    for k in 1..=8usize {
+        let src = format!(
+            "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 22:
+            fill(muon.pt)
+            fill_vars(muon.pt, {})
+",
+            weight_list(k)
+        );
+        let reference = run_flat(&src, &cs, x, y);
+        assert_eq!(reference.1.len(), k, "k={k}");
+        let n = reference.0.total();
+        assert!(n > 0.0, "k={k}");
+        for (i, s) in reference.1.iter().enumerate() {
+            assert!(s.label.starts_with("var#"), "k={k}: {}", s.label);
+            assert!(s.label.ends_with(&format!(".{i}")), "k={k}: {}", s.label);
+            // Dyadic weight × integer fill count: exact in f64.
+            assert_eq!(s.hist.total(), WEIGHTS[i] * n, "k={k} var {i}");
+        }
+        let chunked = run_compiled(&src, &cs, x, y, None, false);
+        assert_bitident(&chunked, &reference, "chunked vs flat");
+        let cfg = ParallelCfg { threads: 2, morsel_events: 513 };
+        let par = run_compiled(&src, &cs, x, y, Some(cfg), false);
+        assert_stable(&par, &reference, "parallel vs flat");
+    }
+}
+
+/// The distributed tier: the same aux-rich query over two different
+/// partition grids agrees on the associative parts with the single-scan
+/// reference, and each grid is wholesale-reproducible run to run.
+#[test]
+fn cluster_splits_agree_and_reproduce() {
+    let src = "\
+for event in dataset:
+    n = len(event.muons)
+    if n > 0:
+        fill(event.muons[n - 1].pt)
+        fill2(event.muons[n - 1].pt, event.muons[0].eta)
+        profile(event.muons[n - 1].pt, n)
+        fill_vars(event.muons[n - 1].pt, 0.5, 1.0, 2.0)
+";
+    let events = 6_000;
+    let seed = 717;
+    let cs = generate_ttbar(events, 5, seed);
+    let x: Bin3 = (64, 0.0, 128.0);
+    let y: Bin3 = (16, -4.0, 4.0);
+    let reference = run_flat(src, &cs, x, y);
+
+    let cluster = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: 3,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            ..ClusterConfig::default()
+        },
+        Backend::compiled(),
+    ));
+    cluster.catalog.register("tt_a", generate_ttbar(events, 5, seed), 397);
+    cluster.catalog.register("tt_b", generate_ttbar(events, 5, seed), 1_500);
+
+    for ds in ["tt_a", "tt_b"] {
+        let q = Query::from_source(src, ds)
+            .with_binning(x.0, x.1, x.2)
+            .with_y_binning(y.0, y.1, y.2);
+        let r1 = cluster.run(&q).unwrap();
+        assert_stable(&(r1.hist.clone(), r1.aux.clone()), &reference, ds);
+        let labels: Vec<&str> = r1.aux.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels.len(), 5, "{ds}");
+        assert!(labels[0].starts_with("h2#"), "{ds}: {labels:?}");
+        assert!(labels[1].starts_with("prof#"), "{ds}: {labels:?}");
+        assert!(labels[2].starts_with("var#"), "{ds}: {labels:?}");
+        // Same partition grid ⇒ same ordered merge ⇒ wholesale identity.
+        let r2 = cluster.run(&q).unwrap();
+        assert_eq!(r2.hist, r1.hist, "{ds}: repeat primary");
+        assert_eq!(r2.aux, r1.aux, "{ds}: repeat aux");
+    }
+    cluster.shutdown();
+}

@@ -128,13 +128,14 @@ fn concurrent_clients_bit_identical_and_fused() {
         .collect();
     let responses: Vec<Vec<Json>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
 
-    // Bit-identity: bins and counts are integer-exact for unweighted
-    // fills, so cross-worker merge order cannot perturb them.
+    // Bit-identity — the full histogram, running Σw·x moments included:
+    // the waiter merges partition partials in partition order (BTreeMap),
+    // so a fused or concurrent run associates every addition exactly like
+    // the solo run, no matter which worker finished first.
     for (i, resps) in responses.iter().enumerate() {
         for (j, resp) in resps.iter().enumerate() {
             let h = H1::from_json(resp.get("hist").unwrap()).unwrap();
-            assert_eq!(h.bins, solo[i][j].bins, "client {i} query {j} bins differ from solo");
-            assert_eq!(h.count, solo[i][j].count, "client {i} query {j} count differs");
+            assert_eq!(h, solo[i][j], "client {i} query {j} differs from solo");
             assert!(resp.get("queue_ms").is_some());
             assert!(resp.get("exec_ms").is_some());
         }
@@ -161,6 +162,68 @@ fn concurrent_clients_bit_identical_and_fused() {
     }));
 
     stop(&server, t);
+}
+
+/// Cross-run reproducibility of fused groups: two identically-seeded,
+/// identically-partitioned server stacks serve the same co-arriving mix
+/// (an aux-bearing AGC source query included) with wholesale bit-identical
+/// responses. Whether and how queries fuse may differ between the runs;
+/// the histograms — primary and the `hists` aux array — must not.
+#[test]
+fn fused_groups_reproduce_across_runs() {
+    let aux_src = "\
+for event in dataset:
+    for muon in event.muons:
+        if muon.pt > 21:
+            fill(muon.pt)
+            fill2(muon.pt, muon.eta)
+            fill_vars(muon.pt, 0.5, 1.0, 2.0)
+";
+    let mix: Vec<Query> = vec![
+        Query::from_source(aux_src, "dy").with_y_binning(16, -4.0, 4.0),
+        Query::new(QueryKind::MassPairs, "dy", "muons"),
+        Query::new(QueryKind::MaxPt, "dy", "muons").with_binning(48, 0.0, 96.0),
+        Query::new(QueryKind::FlatHist, "dy", "muons"),
+    ];
+    let run_once = |mix: &[Query]| -> Vec<Json> {
+        let c = cluster(6_000, 74, 1_000);
+        let (addr, t, server) = start(
+            c,
+            ServerConfig {
+                batch_window_ms: 50,
+                max_queue_depth: 256,
+                max_conns: 64,
+                executors: 1,
+            },
+        );
+        let barrier = Arc::new(Barrier::new(mix.len()));
+        let handles: Vec<_> = mix
+            .iter()
+            .map(|q| {
+                let addr = addr.clone();
+                let barrier = barrier.clone();
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut conn = Client::connect(&addr).unwrap();
+                    barrier.wait();
+                    conn.query(&q, |_, _| {}).unwrap()
+                })
+            })
+            .collect();
+        let out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        stop(&server, t);
+        out
+    };
+    let a = run_once(&mix);
+    let b = run_once(&mix);
+    for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(ra.get("ok"), Some(&Json::Bool(true)), "query {i}: {ra}");
+        assert_eq!(ra.get("hist"), rb.get("hist"), "query {i}: primary drifted across runs");
+        assert_eq!(ra.get("hists"), rb.get("hists"), "query {i}: aux drifted across runs");
+    }
+    // The aux-bearing member really carried its sinks over the wire.
+    let aux = a[0].get("hists").expect("aux query carries hists").as_arr().unwrap();
+    assert_eq!(aux.len(), 4, "h2 + 3 weight variations");
 }
 
 /// Under a queue cap of 1 with a single executor, a burst of pipelined
