@@ -345,14 +345,18 @@ fn main() {
     let barrier = Arc::new(Barrier::new(queries.len() + 1));
     let handles: Vec<_> = queries
         .iter()
-        .map(|q| {
+        .enumerate()
+        .map(|(i, q)| {
             let addr = addr.clone();
             let barrier = barrier.clone();
             let q = q.clone();
+            // One member of the fused group asks for a span trace; its
+            // Chrome export lands in bench_out/ as a CI artifact.
+            let trace = i == 0;
             std::thread::spawn(move || {
                 let mut conn = Client::connect(&addr).unwrap();
                 barrier.wait();
-                conn.query(&q, |_, _| {}).unwrap()
+                conn.query_opts(&q, trace, |_, _| {}).unwrap()
             })
         })
         .collect();
@@ -379,6 +383,26 @@ fn main() {
         };
         assert_eq!(&wire_aux, aux, "server vs cluster: aux");
         fused_with += resp.get("fused_with").and_then(|v| v.as_u64()).unwrap_or(0);
+    }
+    // Pull the traced member's span tree as a Chrome trace_event artifact.
+    // The response ships before the root span closes, so give the server a
+    // beat to finish the tree before asking for it.
+    if let Some(tid) = responses[0].get("trace_id").and_then(|v| v.as_u64()) {
+        std::thread::sleep(Duration::from_millis(200));
+        let mut tconn = Client::connect(&addr).unwrap();
+        let treq = Json::obj(vec![
+            ("op", Json::str("trace")),
+            ("id", Json::num(tid as f64)),
+            ("chrome", Json::Bool(true)),
+        ]);
+        let tresp = tconn.request(&treq).unwrap();
+        assert_eq!(tresp.get("ok"), Some(&Json::Bool(true)), "{tresp}");
+        let events_json = tresp.get("chrome").cloned().unwrap_or_else(|| Json::Arr(Vec::new()));
+        let n_spans = tresp.get("spans").and_then(|v| v.as_u64()).unwrap_or(0);
+        std::fs::create_dir_all("bench_out").ok();
+        let chrome = Json::obj(vec![("traceEvents", events_json)]);
+        std::fs::write("bench_out/TRACE_agc_fused.json", chrome.to_string()).ok();
+        eprintln!("  wrote bench_out/TRACE_agc_fused.json (trace {tid}, {n_spans} spans)");
     }
     let mut stats_conn = Client::connect(&addr).unwrap();
     let stats = stats_conn.request(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();

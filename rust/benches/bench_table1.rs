@@ -509,6 +509,42 @@ for event in dataset:
     }
     serve_cluster.shutdown();
 
+    // --- tracing-overhead rungs -------------------------------------------
+    // Query-lifecycle tracing must cost nothing observable when a query is
+    // untraced (every would-be span is one relaxed atomic branch) and stay
+    // cheap when a full span tree is recorded. Same warmed cluster, same
+    // query, direct cluster submits (no result cache), untraced vs traced.
+    let trace_cluster = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 256 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            ..ClusterConfig::default()
+        },
+        Backend::compiled(),
+    ));
+    trace_cluster.catalog.register("dy", dy.clone(), 2_000);
+    let tq = Query::new(QueryKind::MassPairs, "dy", "muons");
+    trace_cluster.run(&tq).unwrap(); // warm the partition caches
+    let trace_off_name = format!("{rung} cluster query tracing off");
+    b.run(&trace_off_name, nd, || {
+        let res = trace_cluster.run(&tq).unwrap();
+        black_box(res.hist.total());
+    });
+    let tracer = hepq::obs::trace::Tracer::new(true);
+    let trace_on_name = format!("{} cluster query tracing on (full span tree)", rung + 1);
+    b.run(&trace_on_name, nd, || {
+        let span = tracer.start("query", None, true);
+        let h = trace_cluster.submit_traced(tq.clone(), &span).unwrap();
+        let res = trace_cluster.wait_with_progress(&h, &tq, |_, _, _| true).unwrap();
+        span.end();
+        black_box(res.hist.total());
+    });
+    rung += 2;
+    trace_cluster.shutdown();
+
     // --- placement & failure-recovery rungs -------------------------------
     // Cold vs affinity-warm repeat queries: with an expensive simulated
     // remote store, the first run pays the fetches; repeats land on the
@@ -691,6 +727,18 @@ for event in dataset:
             if enforced && sp < 1.5 { "  ** BELOW TARGET **" } else { "" }
         );
     }
+
+    // Tracing overhead: the untraced rung carries the full observability
+    // plumbing with its tracer off, so the on/off gap bounds what the span
+    // machinery costs a query that records a complete tree.
+    let off_rate = b.get(&trace_off_name).unwrap().rate();
+    let on_rate = b.get(&trace_on_name).unwrap().rate();
+    let trace_overhead_pct = (off_rate / on_rate - 1.0) * 100.0;
+    eprintln!(
+        "tracing check: traced / untraced query slowdown = {trace_overhead_pct:.1}% \
+         (target <= 3%){}",
+        if trace_overhead_pct > 3.0 { "  ** BELOW TARGET **" } else { "" }
+    );
 
     eprintln!(
         "placement check: cold first query / affinity-warm repeat = {affinity_speedup:.2}x \

@@ -40,6 +40,7 @@ use crate::engine::compiled_exec::source_for;
 use crate::engine::{Backend, Query};
 use crate::hist::{merge_aux, Sink, H1};
 use crate::index::ZoneMap;
+use crate::obs::trace::{Span, TraceMap};
 use crate::queryir::{self, predicate, ZoneDecision};
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
@@ -336,6 +337,10 @@ struct WorkerCtx {
     stats: Arc<Mutex<WorkerStats>>,
     health: Arc<WorkerHealth>,
     latency: Arc<LatencyEst>,
+    /// Query-id → parent span, for attaching subtask spans to the
+    /// submitting query's trace. `spans.any()` (one relaxed atomic
+    /// load) guards every lookup, so untraced runs pay one branch.
+    spans: Arc<TraceMap>,
 }
 
 /// Upper bound on one idle condvar wait: how quickly a worker re-scans the
@@ -419,6 +424,15 @@ fn worker_loop(ctx: WorkerCtx) {
                 s.failovers += 1;
             }
         }
+        if grant.failover && ctx.spans.any() {
+            ctx.spans.get(grant.task.id.query_id).event(
+                "failover",
+                Some(format!(
+                    "worker={} partition={}",
+                    ctx.id, grant.task.id.partition
+                )),
+            );
+        }
         if let Err(e) = run_subtask(&ctx, &grant.task, &mut cache) {
             crate::log_warn!("worker {}: subtask {:?} failed: {e}", ctx.id, grant.task.id);
             // Leave the claim to expire so another worker retries.
@@ -433,6 +447,21 @@ fn worker_loop(ctx: WorkerCtx) {
 
 fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> Result<(), String> {
     let t0 = Instant::now();
+    // Attach to the submitting query's trace. The `any()` guard is the
+    // whole tracing-off cost on this path: one relaxed atomic load.
+    let span = if ctx.spans.any() {
+        let parent = ctx.spans.get(task.id.query_id);
+        if parent.is_on() {
+            parent.child_meta(
+                "subtask",
+                format!("worker={} partition={}", ctx.id, task.id.partition),
+            )
+        } else {
+            Span::none()
+        }
+    } else {
+        Span::none()
+    };
     // All member queries of this subtask: the primary plus any co-queries
     // fused onto the same partition scan (usually none). Members that were
     // cancelled (or already finished via a faster duplicate) meanwhile
@@ -447,6 +476,9 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
     };
     if members.is_empty() {
         ctx.board.complete_by(&task.id, ctx.id);
+        if span.is_on() {
+            span.end_meta("all members cancelled".to_string());
+        }
         return Ok(());
     }
     let key = (task.dataset.clone(), task.id.partition);
@@ -454,10 +486,17 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
     // (stale bytes would also desynchronize data and zone map).
     let version = ctx.catalog.version(&task.dataset).unwrap_or(0);
     let part = match cache.get(&key, version) {
-        Some(p) => p,
+        Some(p) => {
+            span.event("cache_hit", None);
+            p
+        }
         None => {
+            let fetch_span = span.child("fetch");
             let p = ctx.catalog.fetch(&task.dataset, task.id.partition)?;
             cache.put(key, p.clone());
+            if fetch_span.is_on() {
+                fetch_span.end_meta(format!("bytes={}", p.cs.byte_size()));
+            }
             p
         }
     };
@@ -465,6 +504,7 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
         .iter()
         .map(|(_, q)| H1::new(q.n_bins, q.lo, q.hi))
         .collect();
+    let exec_span = span.child("exec");
     let (auxes, reps) = if members.len() == 1 {
         // Solo subtask: the ordinary (morsel-parallel) path. The group
         // entry point also fills any aux sinks (`fill2` / `profile` /
@@ -486,6 +526,13 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
         ctx.backend
             .run_fused_group(&refs, &part.cs, Some(part.zones.as_ref()), &mut hists)?
     };
+    if exec_span.is_on() {
+        exec_span.end_meta(format!(
+            "events={} members={}",
+            part.cs.n_events,
+            members.len()
+        ));
+    }
     // Simulated background load: slept while *holding* the claim, so a
     // handicapped worker looks exactly like a straggling node — its claim
     // ages past the speculation threshold and its documents arrive late
@@ -494,6 +541,7 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
     if handicap > 0 {
         std::thread::sleep(Duration::from_micros(handicap));
     }
+    let publish_span = span.child("publish");
     for ((((qid, _), hist), aux), chunks) in members.iter().zip(hists).zip(auxes).zip(reps) {
         ctx.store.insert(PartialDoc {
             id: SubtaskId { query_id: *qid, partition: task.id.partition },
@@ -504,6 +552,8 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
             chunks,
         });
     }
+    publish_span.end();
+    span.end();
     let (_, spec_win) = ctx.board.complete_by(&task.id, ctx.id);
     ctx.latency.observe(t0.elapsed());
     let mut s = ctx.stats.lock().unwrap();
@@ -656,6 +706,11 @@ pub struct Cluster {
     partitions_scanned: AtomicU64,
     query_timeouts: AtomicU64,
     submits_rejected: AtomicU64,
+    /// Queries cancelled mid-wait (client gone): solo cancels and fused
+    /// group members dropped via [`Cluster::wait_member_with_progress`].
+    queries_cancelled: AtomicU64,
+    /// Live traced queries, shared with every worker (see [`WorkerCtx`]).
+    spans: Arc<TraceMap>,
 }
 
 impl Cluster {
@@ -676,6 +731,8 @@ impl Cluster {
             partitions_scanned: AtomicU64::new(0),
             query_timeouts: AtomicU64::new(0),
             submits_rejected: AtomicU64::new(0),
+            queries_cancelled: AtomicU64::new(0),
+            spans: Arc::new(TraceMap::new()),
         };
         for _ in 0..config.n_workers {
             cluster.spawn_worker();
@@ -715,6 +772,7 @@ impl Cluster {
             stats: stats.clone(),
             health: self.health.clone(),
             latency: self.latency.clone(),
+            spans: self.spans.clone(),
         };
         let handle = std::thread::Builder::new()
             .name(format!("hepq-worker-{id}"))
@@ -862,6 +920,13 @@ impl Cluster {
     /// a fraction of the board in front of the Figure-2 scheduler, which
     /// is the paper's "indexing" multiplier on top of fast kernels.
     pub fn submit(&self, query: Query) -> Result<QueryHandle, ClusterError> {
+        self.submit_traced(query, &Span::none())
+    }
+
+    /// [`Cluster::submit`] with a trace span: worker subtask spans and
+    /// failover/speculation events attach under `span` (pass
+    /// [`Span::none`] — or call `submit` — for an untraced query).
+    pub fn submit_traced(&self, query: Query, span: &Span) -> Result<QueryHandle, ClusterError> {
         let partitions = self
             .catalog
             .n_partitions(&query.dataset)
@@ -881,6 +946,9 @@ impl Cluster {
             .collect();
         self.admit(tasks.len())?;
         self.queries.write().unwrap().insert(query_id, query.clone());
+        // Register the span before the board advertises: a worker can
+        // claim the instant the subtask is visible.
+        self.spans.insert(query_id, span.clone());
         let advertised = tasks.len();
         let skipped = partitions - advertised;
         self.partitions_skipped
@@ -908,13 +976,26 @@ impl Cluster {
     /// handle per query, in input order; every result is bit-identical to
     /// a separate `submit`.
     pub fn submit_fused(&self, queries: &[Query]) -> Result<Vec<QueryHandle>, ClusterError> {
+        self.submit_fused_traced(queries, &[])
+    }
+
+    /// [`Cluster::submit_fused`] with one trace span per member query
+    /// (missing entries mean "untraced"): each member's subtask spans
+    /// attach under its own query's span even though the group shares
+    /// one physical scan.
+    pub fn submit_fused_traced(
+        &self,
+        queries: &[Query],
+        spans: &[Span],
+    ) -> Result<Vec<QueryHandle>, ClusterError> {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
         if queries.len() == 1 {
             // A group of one gains nothing from fusion; keep the solo
             // (morsel-parallel) execution path.
-            return Ok(vec![self.submit(queries[0].clone())?]);
+            let span = spans.first().cloned().unwrap_or_else(Span::none);
+            return Ok(vec![self.submit_traced(queries[0].clone(), &span)?]);
         }
         let dataset = &queries[0].dataset;
         if queries.iter().any(|q| &q.dataset != dataset) {
@@ -932,9 +1013,12 @@ impl Cluster {
         let mut ids = Vec::with_capacity(queries.len());
         {
             let mut g = self.queries.write().unwrap();
-            for q in queries {
+            for (i, q) in queries.iter().enumerate() {
                 let qid = self.next_query.fetch_add(1, Ordering::Relaxed);
                 g.insert(qid, q.clone());
+                if let Some(s) = spans.get(i) {
+                    self.spans.insert(qid, s.clone());
+                }
                 ids.push(qid);
             }
         }
@@ -961,6 +1045,7 @@ impl Cluster {
             let mut g = self.queries.write().unwrap();
             for qid in &ids {
                 g.remove(qid);
+                self.spans.remove(*qid);
             }
             return Err(e);
         }
@@ -992,6 +1077,25 @@ impl Cluster {
         self.board.cancel(query_id);
         self.queries.write().unwrap().remove(&query_id);
         self.store.forget(query_id);
+        self.spans.remove(query_id);
+    }
+
+    /// Cancel one member of a fused group **without** touching the
+    /// board: fused subtasks are keyed by the group's primary query id
+    /// and must keep running for the surviving members. Removing the
+    /// member from the query registry makes workers drop its kernels
+    /// from every subsequent partition scan; tombstoning its documents
+    /// drops any still in flight.
+    fn cancel_member(&self, query_id: u64) {
+        self.queries.write().unwrap().remove(&query_id);
+        self.store.forget(query_id);
+        self.spans.remove(query_id);
+    }
+
+    /// Queries cancelled mid-wait because their progress callback (in
+    /// practice: the server's client-liveness check) said stop.
+    pub fn queries_cancelled(&self) -> u64 {
+        self.queries_cancelled.load(Ordering::Relaxed)
     }
 
     /// Wait for a query, merging partials incrementally. `progress` is
@@ -1012,11 +1116,44 @@ impl Cluster {
         &self,
         handle: &QueryHandle,
         query: &Query,
-        mut progress: F,
+        progress: F,
     ) -> Result<QueryResult, ClusterError>
     where
         F: FnMut(usize, usize, &H1) -> bool,
     {
+        self.wait_inner(handle, query, progress, false)
+    }
+
+    /// [`Cluster::wait_with_progress`] for one member of a fused group:
+    /// cancellation (the progress callback returning false) removes
+    /// only this member — the group's shared subtasks keep running for
+    /// its co-members instead of being cancelled off the board.
+    pub fn wait_member_with_progress<F>(
+        &self,
+        handle: &QueryHandle,
+        query: &Query,
+        progress: F,
+    ) -> Result<QueryResult, ClusterError>
+    where
+        F: FnMut(usize, usize, &H1) -> bool,
+    {
+        self.wait_inner(handle, query, progress, true)
+    }
+
+    fn wait_inner<F>(
+        &self,
+        handle: &QueryHandle,
+        query: &Query,
+        mut progress: F,
+        fused_member: bool,
+    ) -> Result<QueryResult, ClusterError>
+    where
+        F: FnMut(usize, usize, &H1) -> bool,
+    {
+        // Clone the wait-side span handle up front: `finish_query`
+        // removes it from the map, and the final reduction still wants
+        // to record under it.
+        let wspan = self.spans.get(handle.query_id);
         let mut preview = H1::new(query.n_bins, query.lo, query.hi);
         let mut parts: BTreeMap<usize, (H1, Vec<Sink>)> = BTreeMap::new();
         let mut events = 0u64;
@@ -1038,14 +1175,20 @@ impl Cluster {
             // re-advertise claims held far past the latency estimate.
             let dead = self.health.dead_workers();
             if !dead.is_empty() {
-                self.board.reap_dead(&dead);
+                let reaped = self.board.reap_dead(&dead);
+                if reaped > 0 && wspan.is_on() {
+                    wspan.event("reap_dead", Some(format!("workers={dead:?} claims={reaped}")));
+                }
             }
             if self.config.speculation_factor > 0.0 {
                 if let Some(est) = self.latency.estimate() {
                     let threshold = est
                         .mul_f64(self.config.speculation_factor)
                         .max(self.config.speculation_min);
-                    self.board.reopen_stragglers(threshold);
+                    let reopened = self.board.reopen_stragglers(threshold);
+                    if reopened > 0 && wspan.is_on() {
+                        wspan.event("speculate", Some(format!("claims={reopened}")));
+                    }
                 }
             }
             let docs = self
@@ -1058,12 +1201,19 @@ impl Cluster {
                 parts.insert(d.id.partition, (d.hist, d.aux));
             }
             if !progress(parts.len(), handle.partitions, &preview) {
-                self.finish_query(handle.query_id);
+                if fused_member {
+                    self.cancel_member(handle.query_id);
+                } else {
+                    self.finish_query(handle.query_id);
+                }
+                self.queries_cancelled.fetch_add(1, Ordering::Relaxed);
+                wspan.event("cancelled", None);
                 return Err(ClusterError::Cancelled);
             }
         }
         let merged = parts.len();
         self.finish_query(handle.query_id);
+        let reduce_span = wspan.child("reduce");
         let mut hist = H1::new(query.n_bins, query.lo, query.hi);
         hist.merge_many(parts.values().map(|(h, _)| h))?;
         // Aux sinks reduce exactly like the primary: fresh copies of the
@@ -1075,6 +1225,9 @@ impl Cluster {
                 aux = a.iter().map(Sink::fresh).collect();
             }
             merge_aux(&mut aux, a)?;
+        }
+        if reduce_span.is_on() {
+            reduce_span.end_meta(format!("partitions={merged}"));
         }
         Ok(QueryResult {
             hist,

@@ -31,6 +31,8 @@
 //!     on-disk format;
 //!   * [`index`] — zone maps (min/max/NaN statistics) for predicate
 //!     pushdown and partition/chunk skipping;
+//!   * [`obs`] — observability: the metrics registry and per-query
+//!     trace spans behind `{"op":"metrics"}` / `{"op":"trace"}`;
 //!   * [`hist`] — the `H1` result histogram and its merge semantics.
 
 pub mod columnar;
@@ -40,6 +42,7 @@ pub mod format;
 pub mod engine;
 pub mod hist;
 pub mod index;
+pub mod obs;
 pub mod queryir;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -51,6 +51,7 @@ fn app() -> App {
                 .opt("artifacts", "artifacts", "AOT artifact dir (pjrt backend)")
                 .opt("threads", "env", "morsel threads per run: N, 0=all cores, env=$HEPQ_THREADS")
                 .opt("morsel-events", "0", "events per morsel (0 = default 8192)")
+                .flag("explain", "print tier choice, fallback reasons, and pushdown verdicts")
                 .pos("file", "input .froot path"),
             CommandSpec::new("serve", "start the distributed query server")
                 .opt("addr", "127.0.0.1:8765", "listen address")
@@ -105,7 +106,15 @@ fn app() -> App {
                 .opt("y-bins", "32", "y bins for fill2 H2 sinks")
                 .opt("y-lo", "0", "y lower edge for fill2 H2 sinks")
                 .opt("y-hi", "128", "y upper edge for fill2 H2 sinks")
+                .flag("trace", "ask the server to record a span trace (prints the trace id)")
                 .pos("dataset", "dataset name on the server"),
+            CommandSpec::new("stats", "show a running server's serving/cluster stats")
+                .opt("addr", "127.0.0.1:8765", "server address")
+                .opt("watch", "0", "refresh every N seconds (0 = print once)"),
+            CommandSpec::new("trace", "fetch a recorded query trace from a running server")
+                .opt("addr", "127.0.0.1:8765", "server address")
+                .opt("id", "0", "trace id from a traced query's response (0 = most recent)")
+                .opt("chrome", "", "also write Chrome trace_event JSON to this path"),
         ],
     }
 }
@@ -125,6 +134,8 @@ fn main() {
         "query" => cmd_query(&m),
         "serve" => cmd_serve(&m),
         "client" => cmd_client(&m),
+        "stats" => cmd_stats(&m),
+        "trace" => cmd_trace(&m),
         _ => unreachable!(),
     };
     if let Err(e) = result {
@@ -251,6 +262,13 @@ fn cmd_query(m: &Matches) -> Result<(), String> {
         m.f64("y-lo").map_err(|e| e.to_string())?,
         m.f64("y-hi").map_err(|e| e.to_string())?,
     );
+    if m.flag("explain") {
+        let src_text = match &query.source {
+            Some(s) => s.clone(),
+            None => hepq::engine::compiled_exec::source_for(query.kind, m.str("list")),
+        };
+        explain_query(&src_text, &r.header)?;
+    }
     let t0 = std::time::Instant::now();
     // Selective read: only the branches this query touches (the full
     // framework and heap baselines deliberately read everything). Source
@@ -314,6 +332,87 @@ fn cmd_query(m: &Matches) -> Result<(), String> {
             zone_report.chunks_skipped, zone_report.chunks_take_all, zone_report.chunks_scanned
         );
     }
+    Ok(())
+}
+
+/// `--explain`: compile (but do not run) the program and report which
+/// execution tier it landed on, why the faster batch kernels refused it
+/// (the reasons `queryir::lower` records), what the cut predicate can
+/// prove against the file's zone map, and how long each compile stage
+/// took. The query still runs afterwards, so read/compute times follow.
+fn explain_query(src: &str, header: &hepq::format::Header) -> Result<(), String> {
+    use hepq::queryir::ZoneDecision;
+    let t0 = std::time::Instant::now();
+    let prog = hepq::queryir::compile(src, &header.schema)?;
+    let t_compile = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let (lowered, notes) = hepq::queryir::lower_with_notes(&prog);
+    let t_lower = t1.elapsed();
+    println!("== explain ==");
+    let cp = lowered.map_err(|e| format!("lowering failed: {e}"))?;
+    let info = cp.chunked_info();
+    match &info {
+        Some(i) => println!(
+            "tier: chunked {} kernel — {} fill site(s) ({} cut-masked), buffer table {} slot(s)",
+            i.shape, i.fills, i.masked_fills, i.buffers
+        ),
+        None if prog.fused.is_some() => {
+            println!("tier: fused scalar loop (one pass over offsets/content, no batch kernel)")
+        }
+        None => println!("tier: scalar closures (per-event compiled loop, no batch kernel)"),
+    }
+    if info.is_none() {
+        if notes.is_empty() {
+            println!("  no chunked family matched (body shape outside the item/event/pair kernels)");
+        } else {
+            println!("  why the batch kernels refused:");
+            for n in &notes {
+                println!("    - {n}");
+            }
+        }
+    }
+    match cp.predicate() {
+        None => println!("pushdown: no prunable predicate (cuts absent or not interval-convertible)"),
+        Some(p) => {
+            let masks = p.describe_masks();
+            println!(
+                "pushdown: {}-granularity predicate over {} fill site(s):",
+                if p.is_event_level() { "event" } else { "item" },
+                masks.len()
+            );
+            for (i, d) in masks.iter().enumerate() {
+                println!("  fill[{i}]: {d}");
+            }
+            match header.zones.as_ref() {
+                None => println!(
+                    "  (file has no zone map — regenerate with gen-data --order-by so cuts can prune)"
+                ),
+                Some(zm) => {
+                    let verdict = |d: ZoneDecision| match d {
+                        ZoneDecision::Skip => "skip",
+                        ZoneDecision::TakeAll => "take-all (run unmasked)",
+                        ZoneDecision::Scan => "scan (mask per item)",
+                    };
+                    println!("  whole file: {}", verdict(p.classify_partition(zm)));
+                    if let Some(ds) = p.classify_chunks(zm) {
+                        let n = |want: ZoneDecision| ds.iter().filter(|&&d| d == want).count();
+                        println!(
+                            "  chunks: {} skip, {} take-all, {} scan (of {})",
+                            n(ZoneDecision::Skip),
+                            n(ZoneDecision::TakeAll),
+                            n(ZoneDecision::Scan),
+                            ds.len()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "stages: parse+transform {:.0} us, lower {:.0} us",
+        t_compile.as_secs_f64() * 1e6,
+        t_lower.as_secs_f64() * 1e6
+    );
     Ok(())
 }
 
@@ -400,10 +499,17 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
     let mut client = Client::connect(m.str("addr"))?;
     // Honor the server's structured overload shedding: back off for the
     // suggested interval (jittered) and resubmit, a few times, before
-    // surfacing the error to the user.
-    let resp = client.query_with_retry(&query, 6, |done, total| {
-        eprint!("\r{done}/{total} partitions...");
-    })?;
+    // surfacing the error to the user. (`--trace` requests skip the
+    // retry wrapper: a traced run is a one-shot diagnostic.)
+    let resp = if m.flag("trace") {
+        client.query_opts(&query, true, |done, total| {
+            eprint!("\r{done}/{total} partitions...");
+        })?
+    } else {
+        client.query_with_retry(&query, 6, |done, total| {
+            eprint!("\r{done}/{total} partitions...");
+        })?
+    };
     eprintln!();
     if resp.get("ok") != Some(&hepq::util::json::Json::Bool(true)) {
         return Err(format!("server error: {resp}"));
@@ -435,5 +541,124 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
             get("chunks_scanned")
         );
     }
+    if let Some(tid) = resp.get("trace_id").and_then(|v| v.as_u64()) {
+        println!("trace id {tid} (inspect with: hepq trace --id {tid})");
+    }
     Ok(())
+}
+
+/// `hepq stats`: fetch and render the server's `stats` op; `--watch N`
+/// re-polls every N seconds over the same connection.
+fn cmd_stats(m: &Matches) -> Result<(), String> {
+    let watch = m.u64("watch").map_err(|e| e.to_string())?;
+    let mut client = Client::connect(m.str("addr"))?;
+    loop {
+        let resp = client.request(&hepq::util::json::Json::obj(vec![(
+            "op",
+            hepq::util::json::Json::str("stats"),
+        )]))?;
+        if resp.get("ok") != Some(&hepq::util::json::Json::Bool(true)) {
+            return Err(format!("server error: {resp}"));
+        }
+        if let hepq::util::json::Json::Obj(map) = &resp {
+            for (k, v) in map {
+                if k != "ok" {
+                    print_json_block(k, v, 0);
+                }
+            }
+        }
+        if watch == 0 {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_secs(watch));
+        println!("---- {} ----", chrono_ish());
+    }
+}
+
+/// Wall-clock seconds since the epoch — enough of a timestamp to tell
+/// `--watch` refreshes apart without pulling in a time formatting crate.
+fn chrono_ish() -> String {
+    match std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => format!("t+{}s", d.as_secs()),
+        Err(_) => "t+?".into(),
+    }
+}
+
+/// Indented key/value rendering of a stats JSON tree: objects nest,
+/// arrays label their elements, scalars print on one line.
+fn print_json_block(name: &str, j: &hepq::util::json::Json, indent: usize) {
+    use hepq::util::json::Json;
+    match j {
+        Json::Obj(map) => {
+            println!("{:indent$}{name}:", "");
+            for (k, v) in map {
+                print_json_block(k, v, indent + 2);
+            }
+        }
+        Json::Arr(items) => {
+            println!("{:indent$}{name}: ({} entries)", "", items.len());
+            for (i, v) in items.iter().enumerate() {
+                print_json_block(&format!("[{i}]"), v, indent + 2);
+            }
+        }
+        other => println!("{:indent$}{name}: {other}", ""),
+    }
+}
+
+/// `hepq trace`: fetch a recorded span trace (`trace` op) and print it
+/// as an indented tree; `--chrome PATH` additionally writes the Chrome
+/// `trace_event` JSON (load in chrome://tracing or Perfetto).
+fn cmd_trace(m: &Matches) -> Result<(), String> {
+    use hepq::util::json::Json;
+    let mut client = Client::connect(m.str("addr"))?;
+    let id = m.u64("id").map_err(|e| e.to_string())?;
+    let chrome_path = m.str("chrome");
+    let mut pairs = vec![("op", Json::str("trace"))];
+    if id > 0 {
+        pairs.push(("id", Json::num(id as f64)));
+    }
+    if !chrome_path.is_empty() {
+        pairs.push(("chrome", Json::Bool(true)));
+    }
+    let resp = client.request(&Json::obj(pairs))?;
+    if resp.get("ok") != Some(&Json::Bool(true)) {
+        return Err(format!("server error: {resp}"));
+    }
+    let get = |k: &str| resp.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    println!(
+        "trace {}: {} span(s), {} dropped",
+        get("trace_id"),
+        get("spans"),
+        get("dropped")
+    );
+    if let Some(root) = resp.get("root") {
+        print_span(root, 0);
+    }
+    if !chrome_path.is_empty() {
+        let events = resp.get("chrome").cloned().ok_or("no chrome data in response")?;
+        let wrapped = Json::obj(vec![("traceEvents", events)]);
+        std::fs::write(chrome_path, wrapped.to_string())
+            .map_err(|e| format!("write {chrome_path}: {e}"))?;
+        println!("wrote Chrome trace_event JSON to {chrome_path}");
+    }
+    Ok(())
+}
+
+/// One span-tree node per line: `name dur (self dur) [meta]`, indented
+/// by depth.
+fn print_span(node: &hepq::util::json::Json, depth: usize) {
+    let name = node.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+    let dur = node.get("dur_us").and_then(|v| v.as_u64()).unwrap_or(0);
+    let self_us = node.get("self_us").and_then(|v| v.as_u64()).unwrap_or(0);
+    let indent = depth * 2;
+    let meta = match node.get("meta").and_then(|v| v.as_str()) {
+        Some(mt) => format!(" [{mt}]"),
+        None => String::new(),
+    };
+    println!("{:indent$}{name} {dur}us (self {self_us}us){meta}", "");
+    if let Some(kids) = node.get("children").and_then(|v| v.as_arr()) {
+        for k in kids {
+            print_span(k, depth + 1);
+        }
+    }
 }

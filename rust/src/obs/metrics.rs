@@ -1,0 +1,398 @@
+//! Unified metrics registry: lock-free counters, gauges, and log-scale
+//! histograms registered by name, exported as JSON or Prometheus text
+//! exposition format.
+//!
+//! Handles are cheap clones of `Arc`-wrapped atomics: a counter bump on
+//! the hot path is a single `fetch_add(Relaxed)`, and the registry's
+//! name maps are only locked at registration and export time. The
+//! registry is deliberately **instance-scoped** — each `Server` owns
+//! one — rather than process-global: the test suite runs many servers
+//! in one process, and a shared registry would cross-contaminate their
+//! exact-count assertions (`queries_executed == 1` and the like).
+//!
+//! Histograms are log-scale (power-of-two buckets): `observe(v)` lands
+//! `v` in the bucket holding its bit length, so quantiles come back as
+//! the upper edge of the containing bucket — within 2x of the true
+//! value across the full `u64` range, at the cost of 65 fixed counters
+//! and zero allocation. The scale (µs, bytes, …) is the caller's
+//! convention and belongs in the metric name (`query_exec_us`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotonic event count. Clones share the underlying atomic.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value (queue depths, live connections).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, d: i64) {
+        self.0.fetch_sub(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket `i` holds values with bit length `i`: bucket 0 is exactly 0,
+/// bucket `i >= 1` covers `[2^(i-1), 2^i)`. 65 buckets span all of `u64`.
+const HISTO_BUCKETS: usize = 65;
+
+struct HistoInner {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+/// Log-scale histogram for latencies and sizes. Clones share state.
+#[derive(Clone)]
+pub struct Histo(Arc<HistoInner>);
+
+impl Histo {
+    fn new() -> Histo {
+        Histo(Arc::new(HistoInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }))
+    }
+
+    /// Record one observation. Four relaxed atomic ops, no locks.
+    pub fn observe(&self, v: u64) {
+        let idx = (u64::BITS - v.leading_zeros()) as usize;
+        self.0.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+        self.0.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snap(&self) -> HistoSnap {
+        let counts: Vec<u64> = self
+            .0
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count = self.0.count.load(Ordering::Relaxed);
+        HistoSnap {
+            count,
+            sum: self.0.sum.load(Ordering::Relaxed),
+            max: self.0.max.load(Ordering::Relaxed),
+            p50: quantile(&counts, count, 0.50),
+            p90: quantile(&counts, count, 0.90),
+            p99: quantile(&counts, count, 0.99),
+        }
+    }
+}
+
+/// Upper edge of the bucket where the cumulative count first reaches
+/// `q * total` — a conservative (never-underestimating) quantile.
+fn quantile(counts: &[u64], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64 * q).ceil() as u64).max(1);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return bucket_upper_edge(i);
+        }
+    }
+    bucket_upper_edge(HISTO_BUCKETS - 1)
+}
+
+fn bucket_upper_edge(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Exported view of one histogram at snapshot time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistoSnap {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+}
+
+/// Named metric handles, get-or-create by name. See the module docs for
+/// why this is instance-scoped rather than a process-global.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histos: Mutex<BTreeMap<String, Histo>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter registered under `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the gauge registered under `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the histogram registered under `name`.
+    pub fn histo(&self, name: &str) -> Histo {
+        let mut m = self.histos.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(Histo::new).clone()
+    }
+
+    /// Freeze every registered metric into an exportable snapshot.
+    /// Subsystems that keep their own counters (placement stats, cache
+    /// stats, queue depths) are merged in afterwards via
+    /// [`Snapshot::set_counter`] / [`Snapshot::set_gauge`].
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            snap.counters.insert(name.clone(), c.get());
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            snap.gauges.insert(name.clone(), g.get());
+        }
+        for (name, h) in self.histos.lock().unwrap().iter() {
+            snap.histos.insert(name.clone(), h.snap());
+        }
+        snap
+    }
+}
+
+/// Point-in-time view of every metric, renderable as JSON or Prometheus
+/// text exposition format.
+#[derive(Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histos: BTreeMap<String, HistoSnap>,
+}
+
+impl Snapshot {
+    /// Merge a counter collected from outside the registry (subsystems
+    /// that already keep their own atomics export through here).
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    /// Merge an externally collected gauge.
+    pub fn set_gauge(&mut self, name: &str, v: i64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let histos = Json::Obj(
+            self.histos
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(h.count as f64)),
+                            ("sum", Json::num(h.sum as f64)),
+                            ("max", Json::num(h.max as f64)),
+                            ("p50", Json::num(h.p50 as f64)),
+                            ("p90", Json::num(h.p90 as f64)),
+                            ("p99", Json::num(h.p99 as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histos),
+        ])
+    }
+
+    /// Prometheus text exposition format (v0.0.4): counters and gauges
+    /// as single samples, histograms as quantile-labeled summaries.
+    /// Names get the `hepq_` prefix and `[a-zA-Z0-9_]` sanitization.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (name, h) in &self.histos {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            out.push_str(&format!("{n}{{quantile=\"0.5\"}} {}\n", h.p50));
+            out.push_str(&format!("{n}{{quantile=\"0.9\"}} {}\n", h.p90));
+            out.push_str(&format!("{n}{{quantile=\"0.99\"}} {}\n", h.p99));
+            out.push_str(&format!("{n}_count {}\n", h.count));
+            out.push_str(&format!("{n}_sum {}\n", h.sum));
+            out.push_str(&format!("{n}_max {}\n", h.max));
+        }
+        out
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut n = String::with_capacity(name.len() + 5);
+    n.push_str("hepq_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            n.push(c);
+        } else {
+            n.push('_');
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_share_state_across_clones() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("hits").get(), 3);
+
+        let g = reg.gauge("depth");
+        g.set(5);
+        g.sub(2);
+        assert_eq!(reg.gauge("depth").get(), 3);
+        g.add(4);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histo_quantiles_are_log_bucket_upper_edges() {
+        let reg = Registry::new();
+        let h = reg.histo("lat_us");
+        // 90 observations in [64, 128) and 10 in [1024, 2048).
+        for _ in 0..90 {
+            h.observe(100);
+        }
+        for _ in 0..10 {
+            h.observe(1500);
+        }
+        let s = h.snap();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 90 * 100 + 10 * 1500);
+        assert_eq!(s.max, 1500);
+        assert_eq!(s.p50, 127); // upper edge of [64, 128)
+        assert_eq!(s.p90, 127);
+        assert_eq!(s.p99, 2047); // upper edge of [1024, 2048)
+    }
+
+    #[test]
+    fn histo_handles_zero_and_empty() {
+        let reg = Registry::new();
+        let h = reg.histo("x");
+        assert_eq!(h.snap(), HistoSnap::default());
+        h.observe(0);
+        let s = h.snap();
+        assert_eq!((s.count, s.max, s.p50, s.p99), (1, 0, 0, 0));
+    }
+
+    #[test]
+    fn snapshot_renders_json_and_prometheus() {
+        let reg = Registry::new();
+        reg.counter("queries_executed").add(7);
+        reg.gauge("active_conns").set(2);
+        reg.histo("query_exec_us").observe(900);
+        let mut snap = reg.snapshot();
+        snap.set_counter("cache.hits", 3);
+
+        let j = snap.to_json();
+        assert_eq!(j.path("counters.queries_executed").unwrap().as_u64(), Some(7));
+        // A dotted metric name is one literal key, not a path.
+        let counters = j.get("counters").unwrap();
+        assert_eq!(counters.get("cache.hits").unwrap().as_u64(), Some(3));
+        assert_eq!(j.path("gauges.active_conns").unwrap().as_i64(), Some(2));
+        assert_eq!(
+            j.path("histograms.query_exec_us.count").unwrap().as_u64(),
+            Some(1)
+        );
+
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("# TYPE hepq_queries_executed counter"));
+        assert!(prom.contains("hepq_queries_executed 7"));
+        assert!(prom.contains("# TYPE hepq_cache_hits counter"));
+        assert!(prom.contains("# TYPE hepq_active_conns gauge"));
+        assert!(prom.contains("# TYPE hepq_query_exec_us summary"));
+        assert!(prom.contains("hepq_query_exec_us{quantile=\"0.99\"} 1023"));
+        assert!(prom.contains("hepq_query_exec_us_count 1"));
+        // Every line is either a comment or `name[{labels}] value`.
+        for line in prom.lines() {
+            assert!(
+                line.starts_with("# TYPE hepq_") || line.starts_with("hepq_"),
+                "bad exposition line: {line}"
+            );
+        }
+    }
+}

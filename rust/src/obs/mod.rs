@@ -1,0 +1,13 @@
+//! Observability: the unified metrics registry ([`metrics`]) and
+//! per-query trace spans ([`trace`]).
+//!
+//! Everything the server exports through `{"op":"metrics"}` and
+//! `{"op":"trace"}` is defined here; `docs/OBSERVABILITY.md` is the
+//! operator-facing catalog (metric names, span taxonomy, EXPLAIN
+//! walkthrough, Prometheus scrape config).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histo, HistoSnap, Registry, Snapshot};
+pub use trace::{Span, TraceBuf, TraceMap, Tracer};

@@ -1,0 +1,650 @@
+//! Per-query trace spans: who spent this query's milliseconds, and where.
+//!
+//! A [`Span`] is a lightweight handle into a per-query [`TraceBuf`].
+//! Parentage is **explicit** — `span.child("decode")` — never inferred
+//! from thread-locals, because the interesting spans cross threads: a
+//! morsel worker or a cluster worker must attach its work to the
+//! *submitting query's* trace, not to whatever its own thread last
+//! touched. Handles clone freely across threads; ending a span records
+//! one [`SpanRec`] into the buffer's bounded vector (excess spans are
+//! counted as dropped, never reallocating without bound).
+//!
+//! Overhead discipline: when tracing is off every span is
+//! [`Span::none`] — a `None` buffer — so `child`/`event`/`end` are a
+//! branch on an `Option`, and the cluster fast path guards on a single
+//! relaxed atomic load ([`TraceMap::any`]) before even looking a span
+//! up. A bench rung (`bench_table1` `cluster_trace_off`) holds this to
+//! within noise of the untraced baseline.
+//!
+//! Finished traces render three ways: a span tree with per-node
+//! `self_us` ([`span_tree_json`], the `{"op":"trace"}` response), Chrome
+//! `trace_event` JSON ([`chrome_trace_json`], loadable in
+//! `chrome://tracing` / Perfetto), and a condensed indented text form
+//! ([`condensed`]) for the slow-query log.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Spans kept per query before further `end()`s count as dropped.
+const MAX_SPANS: usize = 8192;
+
+/// Finished traces kept per server before the oldest is evicted.
+const RING_CAP: usize = 64;
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Small dense per-thread id for trace rendering (a `u64` rank in
+    /// first-use order, stable for the thread's lifetime). This
+    /// thread-local is *identity*, not parentage — parent spans are
+    /// always passed explicitly.
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// One finished span interval, as stored in a [`TraceBuf`].
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub id: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    pub meta: Option<String>,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub tid: u64,
+}
+
+/// Bounded per-query span buffer. Timestamps are µs since the buffer's
+/// creation (`epoch`), so every span in one trace shares a clock.
+pub struct TraceBuf {
+    pub trace_id: u64,
+    epoch: Instant,
+    next_span: AtomicU64,
+    spans: Mutex<Vec<SpanRec>>,
+    dropped: AtomicU64,
+}
+
+impl TraceBuf {
+    fn new(trace_id: u64) -> TraceBuf {
+        TraceBuf {
+            trace_id,
+            epoch: Instant::now(),
+            next_span: AtomicU64::new(1),
+            spans: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push(&self, rec: SpanRec) {
+        let mut v = self.spans.lock().unwrap();
+        if v.len() >= MAX_SPANS {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        v.push(rec);
+    }
+
+    /// Copy of the recorded spans (finished spans only).
+    pub fn recs(&self) -> Vec<SpanRec> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// A live span. Clone it to hand the same parent to several threads;
+/// call [`Span::end`] exactly once per span you want recorded. Dropping
+/// without `end()` records nothing (deliberate: cancelled work leaves
+/// its parent interval to tell the story).
+#[derive(Clone)]
+pub struct Span {
+    buf: Option<Arc<TraceBuf>>,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    meta: Option<String>,
+    start_us: u64,
+}
+
+impl Span {
+    /// The no-op span: every operation on it is a branch and a return.
+    pub fn none() -> Span {
+        Span {
+            buf: None,
+            id: 0,
+            parent: 0,
+            name: "",
+            meta: None,
+            start_us: 0,
+        }
+    }
+
+    fn root(buf: Arc<TraceBuf>, name: &'static str, meta: Option<String>) -> Span {
+        let id = buf.alloc_id();
+        let start_us = buf.now_us();
+        Span {
+            buf: Some(buf),
+            id,
+            parent: 0,
+            name,
+            meta,
+            start_us,
+        }
+    }
+
+    /// Is this span actually recording?
+    pub fn is_on(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Trace this span belongs to, 0 for [`Span::none`].
+    pub fn trace_id(&self) -> u64 {
+        self.buf.as_ref().map_or(0, |b| b.trace_id)
+    }
+
+    /// Open a child span starting now.
+    pub fn child(&self, name: &'static str) -> Span {
+        self.child_inner(name, None)
+    }
+
+    /// Open a child span carrying a metadata string (dataset, partition
+    /// id, …). The meta allocation only happens on traced queries —
+    /// callers on hot paths should guard with [`Span::is_on`].
+    pub fn child_meta(&self, name: &'static str, meta: String) -> Span {
+        self.child_inner(name, Some(meta))
+    }
+
+    fn child_inner(&self, name: &'static str, meta: Option<String>) -> Span {
+        match &self.buf {
+            None => Span::none(),
+            Some(buf) => Span {
+                buf: Some(Arc::clone(buf)),
+                id: buf.alloc_id(),
+                parent: self.id,
+                name,
+                meta,
+                start_us: buf.now_us(),
+            },
+        }
+    }
+
+    /// Record an instantaneous event under this span (failover,
+    /// speculation, reap — things with a moment but no duration).
+    pub fn event(&self, name: &'static str, meta: Option<String>) {
+        if let Some(buf) = &self.buf {
+            let now = buf.now_us();
+            buf.push(SpanRec {
+                id: buf.alloc_id(),
+                parent: self.id,
+                name,
+                meta,
+                start_us: now,
+                end_us: now,
+                tid: current_tid(),
+            });
+        }
+    }
+
+    /// Close the span, recording its interval.
+    pub fn end(self) {
+        if let Some(buf) = &self.buf {
+            buf.push(SpanRec {
+                id: self.id,
+                parent: self.parent,
+                name: self.name,
+                meta: self.meta.clone(),
+                start_us: self.start_us,
+                end_us: buf.now_us(),
+                tid: current_tid(),
+            });
+        }
+    }
+
+    /// Close the span, attaching (or replacing) its metadata — for
+    /// facts only known at completion (event counts, cache verdicts).
+    pub fn end_meta(mut self, meta: String) {
+        if self.buf.is_some() {
+            self.meta = Some(meta);
+        }
+        self.end();
+    }
+}
+
+/// Per-server trace collector: decides whether new queries trace, and
+/// keeps the last [`RING_CAP`] trace buffers for `{"op":"trace"}`.
+pub struct Tracer {
+    enabled: AtomicBool,
+    next_trace: AtomicU64,
+    ring: Mutex<VecDeque<Arc<TraceBuf>>>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(enabled),
+            next_trace: AtomicU64::new(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// One relaxed load — the whole cost of tracing when it is off.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Begin a trace and return its root span. Returns [`Span::none`]
+    /// unless tracing is enabled or `force` is set (per-request
+    /// `"trace":true`).
+    pub fn start(&self, name: &'static str, meta: Option<String>, force: bool) -> Span {
+        if !force && !self.enabled() {
+            return Span::none();
+        }
+        let buf = Arc::new(TraceBuf::new(self.next_trace.fetch_add(1, Ordering::Relaxed)));
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(Arc::clone(&buf));
+        while ring.len() > RING_CAP {
+            ring.pop_front();
+        }
+        drop(ring);
+        Span::root(buf, name, meta)
+    }
+
+    /// Fetch a trace by id, or the most recent one when `id` is `None`.
+    pub fn get(&self, id: Option<u64>) -> Option<Arc<TraceBuf>> {
+        let ring = self.ring.lock().unwrap();
+        match id {
+            Some(id) => ring.iter().find(|b| b.trace_id == id).cloned(),
+            None => ring.back().cloned(),
+        }
+    }
+}
+
+/// Query-id → parent-span table shared between a cluster and its
+/// workers, so subtask spans attach to the submitting query's trace.
+/// The worker fast path calls [`TraceMap::any`] — one relaxed atomic
+/// load — and only takes the lock when at least one live query traces.
+#[derive(Default)]
+pub struct TraceMap {
+    active: AtomicU64,
+    map: RwLock<HashMap<u64, Span>>,
+}
+
+impl TraceMap {
+    pub fn new() -> TraceMap {
+        TraceMap::default()
+    }
+
+    /// Is any live query tracing? One relaxed atomic load.
+    #[inline]
+    pub fn any(&self) -> bool {
+        self.active.load(Ordering::Relaxed) != 0
+    }
+
+    /// Register `qid`'s parent span. No-op for [`Span::none`].
+    pub fn insert(&self, qid: u64, span: Span) {
+        if !span.is_on() {
+            return;
+        }
+        self.active.fetch_add(1, Ordering::Relaxed);
+        if self.map.write().unwrap().insert(qid, span).is_some() {
+            // Query ids are unique; tolerate a re-insert anyway.
+            self.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The span registered for `qid`, or [`Span::none`].
+    pub fn get(&self, qid: u64) -> Span {
+        if !self.any() {
+            return Span::none();
+        }
+        self.map
+            .read()
+            .unwrap()
+            .get(&qid)
+            .cloned()
+            .unwrap_or_else(Span::none)
+    }
+
+    pub fn remove(&self, qid: u64) {
+        if !self.any() {
+            return;
+        }
+        if self.map.write().unwrap().remove(&qid).is_some() {
+            self.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Render the trace as a span tree: each node carries `name`, `tid`,
+/// `start_us`, `dur_us`, `self_us` (duration minus the sum of child
+/// durations, clamped at zero) and `children` sorted by start time.
+/// Spans whose parent never finished surface as extra roots; multiple
+/// roots get wrapped in a synthetic `"trace"` node.
+pub fn span_tree_json(buf: &TraceBuf) -> Json {
+    let recs = buf.recs();
+    let ids: std::collections::HashSet<u64> = recs.iter().map(|r| r.id).collect();
+    let mut kids: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, r) in recs.iter().enumerate() {
+        if r.parent != 0 && ids.contains(&r.parent) {
+            kids.entry(r.parent).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    for v in kids.values_mut() {
+        v.sort_by_key(|&i| recs[i].start_us);
+    }
+    roots.sort_by_key(|&i| recs[i].start_us);
+    let root_nodes: Vec<Json> = roots.iter().map(|&i| tree_node(&recs, &kids, i)).collect();
+    match root_nodes.len() {
+        1 => root_nodes.into_iter().next().unwrap(),
+        _ => Json::obj(vec![
+            ("name", Json::str("trace")),
+            ("children", Json::arr(root_nodes)),
+        ]),
+    }
+}
+
+fn tree_node(recs: &[SpanRec], kids: &HashMap<u64, Vec<usize>>, i: usize) -> Json {
+    let r = &recs[i];
+    let dur = r.end_us.saturating_sub(r.start_us);
+    let mut child_nodes = Vec::new();
+    let mut child_dur = 0u64;
+    if let Some(children) = kids.get(&r.id) {
+        for &j in children {
+            child_dur += recs[j].end_us.saturating_sub(recs[j].start_us);
+            child_nodes.push(tree_node(recs, kids, j));
+        }
+    }
+    let mut pairs = vec![
+        ("name", Json::str(r.name)),
+        ("tid", Json::num(r.tid as f64)),
+        ("start_us", Json::num(r.start_us as f64)),
+        ("dur_us", Json::num(dur as f64)),
+        ("self_us", Json::num(dur.saturating_sub(child_dur) as f64)),
+        ("children", Json::arr(child_nodes)),
+    ];
+    if let Some(m) = &r.meta {
+        pairs.push(("meta", Json::str(m.clone())));
+    }
+    Json::obj(pairs)
+}
+
+/// Render the trace as a Chrome `trace_event` array (complete `"X"`
+/// events): wrap in `{"traceEvents": [...]}` or load the bare array
+/// directly in `chrome://tracing` / Perfetto.
+pub fn chrome_trace_json(buf: &TraceBuf) -> Json {
+    let recs = buf.recs();
+    Json::arr(
+        recs.iter()
+            .map(|r| {
+                let mut args = Vec::new();
+                if let Some(m) = &r.meta {
+                    args.push(("meta", Json::str(m.clone())));
+                }
+                Json::obj(vec![
+                    ("name", Json::str(r.name)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(r.start_us as f64)),
+                    ("dur", Json::num(r.end_us.saturating_sub(r.start_us) as f64)),
+                    ("pid", Json::num(buf.trace_id as f64)),
+                    ("tid", Json::num(r.tid as f64)),
+                    ("args", Json::obj(args)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Condensed indented text form of the span tree, for the slow-query
+/// log. Capped at `max_lines` lines (a final line reports the excess).
+pub fn condensed(buf: &TraceBuf, max_lines: usize) -> String {
+    let recs = buf.recs();
+    let ids: std::collections::HashSet<u64> = recs.iter().map(|r| r.id).collect();
+    let mut kids: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, r) in recs.iter().enumerate() {
+        if r.parent != 0 && ids.contains(&r.parent) {
+            kids.entry(r.parent).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    for v in kids.values_mut() {
+        v.sort_by_key(|&i| recs[i].start_us);
+    }
+    roots.sort_by_key(|&i| recs[i].start_us);
+    let mut out = String::new();
+    let mut lines = 0usize;
+    let mut stack: Vec<(usize, usize)> = roots.iter().rev().map(|&i| (i, 0)).collect();
+    let mut skipped = 0usize;
+    while let Some((i, depth)) = stack.pop() {
+        if lines >= max_lines {
+            skipped += 1;
+        } else {
+            let r = &recs[i];
+            let dur = r.end_us.saturating_sub(r.start_us);
+            out.push_str(&format!("{:indent$}{} {}us", "", r.name, dur, indent = depth * 2));
+            if let Some(m) = &r.meta {
+                out.push_str(&format!(" [{m}]"));
+            }
+            out.push('\n');
+            lines += 1;
+        }
+        if let Some(children) = kids.get(&recs[i].id) {
+            for &j in children.iter().rev() {
+                stack.push((j, depth + 1));
+            }
+        }
+    }
+    if skipped > 0 {
+        out.push_str(&format!("… (+{skipped} more spans)\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_mode_spans_are_inert() {
+        let t = Tracer::new(false);
+        let root = t.start("query", None, false);
+        assert!(!root.is_on());
+        assert_eq!(root.trace_id(), 0);
+        let child = root.child("decode");
+        assert!(!child.is_on());
+        child.event("x", None);
+        child.end();
+        root.end();
+        assert!(t.get(None).is_none());
+    }
+
+    #[test]
+    fn force_overrides_disabled() {
+        let t = Tracer::new(false);
+        let root = t.start("query", None, true);
+        assert!(root.is_on());
+        let id = root.trace_id();
+        root.end();
+        assert_eq!(t.get(Some(id)).unwrap().trace_id, id);
+    }
+
+    #[test]
+    fn tree_nests_and_self_times_account() {
+        let t = Tracer::new(true);
+        let root = t.start("query", Some("k=mass".to_string()), false);
+        let a = root.child("decode");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        a.end();
+        let b = root.child("exec");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        b.event("failover", Some("w3".to_string()));
+        b.end();
+        root.end();
+
+        let buf = t.get(None).unwrap();
+        assert_eq!(buf.len(), 4); // decode, failover event, exec, root
+        let tree = span_tree_json(&buf);
+        assert_eq!(tree.get("name").unwrap().as_str(), Some("query"));
+        assert_eq!(tree.get("meta").unwrap().as_str(), Some("k=mass"));
+        let children = tree.get("children").unwrap().as_arr().unwrap();
+        assert_eq!(children.len(), 2);
+        assert_eq!(children[0].get("name").unwrap().as_str(), Some("decode"));
+        assert_eq!(children[1].get("name").unwrap().as_str(), Some("exec"));
+        // Parent intervals contain child intervals.
+        let (rs, rd) = (
+            tree.get("start_us").unwrap().as_u64().unwrap(),
+            tree.get("dur_us").unwrap().as_u64().unwrap(),
+        );
+        for c in children {
+            let cs = c.get("start_us").unwrap().as_u64().unwrap();
+            let cd = c.get("dur_us").unwrap().as_u64().unwrap();
+            assert!(cs >= rs && cs + cd <= rs + rd);
+        }
+        // self = dur − Σ child durs.
+        let child_sum: u64 = children
+            .iter()
+            .map(|c| c.get("dur_us").unwrap().as_u64().unwrap())
+            .sum();
+        let self_us = tree.get("self_us").unwrap().as_u64().unwrap();
+        assert_eq!(self_us, rd - child_sum);
+    }
+
+    #[test]
+    fn spans_cross_threads_with_explicit_parents() {
+        let t = Tracer::new(true);
+        let root = t.start("query", None, false);
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let parent = root.child("subtask");
+                std::thread::spawn(move || {
+                    let k = parent.child("fill");
+                    k.end();
+                    parent.end_meta(format!("part={i}"));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        root.end();
+        let buf = t.get(None).unwrap();
+        assert_eq!(buf.len(), 9);
+        let tree = span_tree_json(&buf);
+        let children = tree.get("children").unwrap().as_arr().unwrap();
+        assert_eq!(children.len(), 4);
+        for c in children {
+            assert_eq!(c.get("name").unwrap().as_str(), Some("subtask"));
+            assert_eq!(c.get("children").unwrap().as_arr().unwrap().len(), 1);
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_finds_by_id() {
+        let t = Tracer::new(true);
+        let mut first_id = 0;
+        for i in 0..70 {
+            let s = t.start("query", None, false);
+            if i == 0 {
+                first_id = s.trace_id();
+            }
+            s.end();
+        }
+        assert!(t.get(Some(first_id)).is_none(), "oldest trace evicted");
+        assert!(t.get(None).is_some());
+    }
+
+    #[test]
+    fn chrome_events_have_required_fields() {
+        let t = Tracer::new(true);
+        let root = t.start("query", None, false);
+        root.child("exec").end();
+        root.end();
+        let buf = t.get(None).unwrap();
+        let events = chrome_trace_json(&buf);
+        let arr = events.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        for e in arr {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            for k in ["name", "ts", "dur", "pid", "tid"] {
+                assert!(e.get(k).is_some(), "missing {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_map_attaches_by_query_id() {
+        let t = Tracer::new(true);
+        let map = TraceMap::new();
+        assert!(!map.any());
+        assert!(!map.get(7).is_on());
+        let root = t.start("query", None, false);
+        map.insert(7, root.clone());
+        assert!(map.any());
+        assert_eq!(map.get(7).trace_id(), root.trace_id());
+        assert!(!map.get(8).is_on());
+        map.remove(7);
+        assert!(!map.any());
+        root.end();
+    }
+
+    #[test]
+    fn buffer_caps_spans_and_counts_dropped() {
+        let t = Tracer::new(true);
+        let root = t.start("query", None, false);
+        for _ in 0..MAX_SPANS + 10 {
+            root.event("tick", None);
+        }
+        root.end();
+        let buf = t.get(None).unwrap();
+        assert_eq!(buf.len(), MAX_SPANS);
+        assert_eq!(buf.dropped(), 11); // 10 excess events + the root end
+    }
+
+    #[test]
+    fn condensed_indents_and_caps() {
+        let t = Tracer::new(true);
+        let root = t.start("query", None, false);
+        let c = root.child_meta("exec", "ds=dy".to_string());
+        c.end();
+        root.end();
+        let buf = t.get(None).unwrap();
+        let text = condensed(&buf, 100);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("query "));
+        assert!(lines[1].starts_with("  exec "));
+        assert!(lines[1].contains("[ds=dy]"));
+        let capped = condensed(&buf, 1);
+        assert!(capped.contains("(+1 more spans)"));
+    }
+}

@@ -108,8 +108,8 @@ use super::transform::{self, AuxKind, AuxSpec, CExpr, CStmt, FlatProgram};
 use crate::columnar::arrays::{ColumnRange, ColumnSet};
 use crate::hist::{merge_aux, Hist, Sink, SinkSet, H1};
 use crate::index::ZoneMap;
-use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Batch width of the chunked kernel. 1024 f64 lanes = 8 KiB per buffer:
 /// big enough to amortize loop overhead and keep LLVM's vectorizer happy,
@@ -488,6 +488,65 @@ pub fn canonical(prog: &FlatProgram) -> String {
 /// for fingerprint display/telemetry — use `canonical` itself for keys).
 pub fn fingerprint(prog: &FlatProgram) -> u64 {
     fnv1a(canonical(prog).as_bytes())
+}
+
+/// Process-lifetime sum of kernel scratch-buffer grows across every
+/// [`KernelScratch`] (each scratch also keeps its own
+/// `allocation_events`). Served as `kernel.allocation_events` by the
+/// server's `{"op":"metrics"}` — steady state is a flat line; growth
+/// under load means the zero-allocation hot path regressed.
+static SCRATCH_GROWS: AtomicU64 = AtomicU64::new(0);
+
+/// See [`SCRATCH_GROWS`].
+pub fn total_allocation_events() -> u64 {
+    SCRATCH_GROWS.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// EXPLAIN support: while `Some` (inside `lower_with_notes`), the
+    /// kernel compilers record why a body was refused for a chunked
+    /// family. `None` in normal operation, making `note_refusal` free.
+    static FALLBACK_NOTES: RefCell<Option<Vec<String>>> = const { RefCell::new(None) };
+}
+
+/// Record one fallback reason (no-op outside `lower_with_notes`). The
+/// closure defers the formatting cost to EXPLAIN mode only.
+fn note_refusal(family: &str, why: impl FnOnce() -> String) {
+    FALLBACK_NOTES.with(|n| {
+        if let Some(v) = n.borrow_mut().as_mut() {
+            v.push(format!("{family}: {}", why()));
+        }
+    });
+}
+
+/// `note_refusal` + decline the current kernel family in one expression.
+fn refuse<T>(family: &str, why: impl FnOnce() -> String) -> Option<T> {
+    note_refusal(family, why);
+    None
+}
+
+/// Debug-render an expression for a fallback note, capped so EXPLAIN
+/// output stays readable on deep trees.
+fn expr_brief(e: &CExpr) -> String {
+    let mut s = format!("{e:?}");
+    if s.len() > 96 {
+        s.truncate(93);
+        s.push_str("...");
+    }
+    s
+}
+
+/// [`lower`], additionally collecting the reasons each chunked kernel
+/// family refused the body (empty when everything batched). This is the
+/// EXPLAIN entry point: the notes name the statement or expression that
+/// forced a scalar fallback, per family.
+pub fn lower_with_notes(prog: &FlatProgram) -> (Result<CompiledProgram, String>, Vec<String>) {
+    FALLBACK_NOTES.with(|n| *n.borrow_mut() = Some(Vec::new()));
+    let res = lower(prog);
+    let notes = FALLBACK_NOTES
+        .with(|n| n.borrow_mut().take())
+        .unwrap_or_default();
+    (res, notes)
 }
 
 /// Lower a transformed program into a compiled closure graph.
@@ -1051,10 +1110,17 @@ impl KernelScratch {
         self.grows
     }
 
+    /// One scratch-buffer growth: the per-scratch regression counter and
+    /// the process-lifetime metrics sum move together.
+    fn grow(&mut self) {
+        self.grows += 1;
+        SCRATCH_GROWS.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A zeroed slot file of length `n`.
     fn slot_file(&mut self, n: usize) -> &mut [f64] {
         if self.slots.len() < n {
-            self.grows += 1;
+            self.grow();
             self.slots.resize(n, 0.0);
         }
         let s = &mut self.slots[..n];
@@ -1064,20 +1130,20 @@ impl KernelScratch {
 
     fn ensure(&mut self, bins: usize, n_bufs: usize, pairs: bool) {
         if self.bins.len() < bins {
-            self.grows += 1;
+            self.grow();
             self.bins.resize(bins, 0.0);
         }
         self.bins[..bins].fill(0.0);
         while self.bufs.len() < n_bufs {
-            self.grows += 1;
+            self.grow();
             self.bufs.push(vec![0.0f64; CHUNK]);
         }
         if pairs && self.pair_a.len() < CHUNK {
-            self.grows += 1;
+            self.grow();
             self.pair_a.resize(CHUNK, 0);
         }
         if pairs && self.pair_b.len() < CHUNK {
-            self.grows += 1;
+            self.grow();
             self.pair_b.resize(CHUNK, 0);
         }
     }
@@ -1242,7 +1308,11 @@ fn compile_fused(block: &[CStmt]) -> Result<Option<FusedLoop>, String> {
 /// (`transform::inline_event_body`), then the `Fill`/`If` tree batches
 /// with the same mask machinery as the item kernel — over event lanes.
 fn compile_event_kernel(body: &[CStmt]) -> Option<ChunkedBody> {
-    let norm = transform::inline_event_body(body)?;
+    let Some(norm) = transform::inline_event_body(body) else {
+        return refuse("event", || {
+            "body has loops or assignments the event kernel cannot inline".to_string()
+        });
+    };
     compile_chunked(&norm, BatchMode::Events)
 }
 
@@ -1286,7 +1356,7 @@ fn compile_chunked(body: &[CStmt], mode: BatchMode) -> Option<ChunkedBody> {
     };
     b.block(body, None)?;
     if b.fills.is_empty() {
-        return None;
+        return refuse(mode_name(mode), || "no fill statements in the body".to_string());
     }
     let mut used_value = vec![false; b.bufs.len()];
     let mut used_mask = vec![false; b.bufs.len()];
@@ -1411,9 +1481,19 @@ impl ChunkedBuilder {
         if let Some(i) = self.keys.iter().position(|k| k.0 == folded && k.1 == gkey) {
             return Some(i);
         }
-        let batch = batch_compile(&folded, self.mode, gkey.as_ref())?;
+        let Some(batch) = batch_compile(&folded, self.mode, gkey.as_ref()) else {
+            return refuse(mode_name(self.mode), || {
+                format!("expression does not batch over this lane family: {}", expr_brief(&folded))
+            });
+        };
         if depth(&batch) > MAX_BATCH_DEPTH {
-            return None;
+            return refuse(mode_name(self.mode), || {
+                format!(
+                    "expression depth {} exceeds MAX_BATCH_DEPTH={MAX_BATCH_DEPTH}: {}",
+                    depth(&batch),
+                    expr_brief(&folded)
+                )
+            });
         }
         self.keys.push((folded, gkey));
         self.bufs.push(batch);
@@ -1493,7 +1573,13 @@ impl ChunkedBuilder {
                     // the batched mask would evaluate it everywhere. The
                     // program keeps the bounds-checked scalar loop.
                     if mask.is_some() && self.needs_guard(cond) {
-                        return None;
+                        return refuse(mode_name(self.mode), || {
+                            format!(
+                                "nested cut contains a dynamic gather (scalar loop keeps its \
+                                 short-circuit): {}",
+                                expr_brief(cond)
+                            )
+                        });
                     }
                     self.block(then, Some(&conjoin(mask, cond)))?;
                     if !els.is_empty() {
@@ -1503,10 +1589,24 @@ impl ChunkedBuilder {
                 }
                 // `try_fuse` admits only fills and `if`s inside a fused
                 // body; anything else keeps the scalar loop.
-                _ => return None,
+                _ => {
+                    return refuse(mode_name(self.mode), || {
+                        "body contains a statement that does not batch (only fill and if do)"
+                            .to_string()
+                    })
+                }
             }
         }
         Some(())
+    }
+}
+
+/// Family label for EXPLAIN fallback notes.
+fn mode_name(mode: BatchMode) -> &'static str {
+    match mode {
+        BatchMode::Items { .. } => "item",
+        BatchMode::Events => "event",
+        BatchMode::Pairs { .. } => "pair",
     }
 }
 
@@ -2370,15 +2470,22 @@ fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
                 env.bind(*slot, e)?;
             }
             CStmt::LoopRange { slot, lo, hi, body } => break (*slot, lo, hi, body),
-            _ => return None,
+            _ => {
+                return refuse("pair", || {
+                    "a statement before the loop nest is neither an assignment nor a loop"
+                        .to_string()
+                })
+            }
         }
     };
     if it.next().is_some() {
-        return None;
+        return refuse("pair", || "statements follow the outer loop".to_string());
     }
-    let i_lo = const_index(&fold(&env.subst(outer_lo)?))?;
+    let Some(i_lo) = const_index(&fold(&env.subst(outer_lo)?)) else {
+        return refuse("pair", || "outer loop start is not a constant index".to_string());
+    };
     let CExpr::ListLen { list: list_a } = env.subst(outer_hi)? else {
-        return None;
+        return refuse("pair", || "outer loop bound is not len(event.list)".to_string());
     };
     // The loop variable stands for itself inside the nest.
     env.bind_loop_var(slot_i);
@@ -2391,28 +2498,43 @@ fn compile_pair_kernel(body: &[CStmt]) -> Option<PairKernel> {
                 env.bind(*slot, e)?;
             }
             CStmt::LoopRange { slot, lo, hi, body } => break (*slot, lo, hi, body),
-            _ => return None,
+            _ => {
+                return refuse("pair", || {
+                    "a statement in the outer loop is neither an assignment nor the inner loop"
+                        .to_string()
+                })
+            }
         }
     };
     if it.next().is_some() {
-        return None;
+        return refuse("pair", || "statements follow the inner loop".to_string());
     }
     // The inner loop may scan the same list (classic i<j nests) or a
     // different one (cross-list pairs).
     let CExpr::ListLen { list: list_b } = env.subst(inner_hi)? else {
-        return None;
+        return refuse("pair", || "inner loop bound is not len(event.list)".to_string());
     };
-    let j_start = pair_start(&fold(&env.subst(inner_lo)?), slot_i)?;
+    let Some(j_start) = pair_start(&fold(&env.subst(inner_lo)?), slot_i) else {
+        return refuse("pair", || {
+            "inner loop start is neither a constant nor i + constant".to_string()
+        });
+    };
     // `range(i + c, len(b))` couples the two indices; that only has its
     // intended triangular meaning when both loops scan one list.
     if list_b != list_a && !matches!(j_start, PairStart::Abs(_)) {
-        return None;
+        return refuse("pair", || {
+            "relative inner start (range(i+c, ..)) over a different list".to_string()
+        });
     }
     env.bind_loop_var(slot_j);
-    let norm = transform::inline_body(inner_body, &mut env)?;
+    let Some(norm) = transform::inline_body(inner_body, &mut env) else {
+        return refuse("pair", || {
+            "inner body has statements the pair kernel cannot inline".to_string()
+        });
+    };
     env.finish()?;
     if norm.is_empty() {
-        return None;
+        return refuse("pair", || "inner body is empty after inlining".to_string());
     }
     let body = compile_chunked(
         &norm,

@@ -27,8 +27,8 @@ pub mod transform;
 
 pub use ast::Program;
 pub use lower::{
-    run_fused_group_indexed, run_fused_indexed, ChunkedInfo, CompiledProgram, IndexedRun,
-    KernelScratch, KernelShape, ParallelCfg,
+    lower_with_notes, run_fused_group_indexed, run_fused_indexed, ChunkedInfo, CompiledProgram,
+    IndexedRun, KernelScratch, KernelShape, ParallelCfg,
 };
 pub use parser::parse;
 pub use predicate::{CutPredicate, ZoneDecision};

@@ -186,6 +186,43 @@ impl CutPredicate {
         matches!(self.gran, Gran::Events)
     }
 
+    /// EXPLAIN support: one entry per fill site, in body order — the
+    /// conjunction of enclosing cuts gating it, or `unconditional`.
+    /// Item/event leaves are named via the program's column bindings.
+    pub fn describe_masks(&self) -> Vec<String> {
+        let name = |cols: &[String], c: usize| {
+            cols.get(c).cloned().unwrap_or_else(|| format!("col{c}"))
+        };
+        self.masks
+            .iter()
+            .map(|m| match m {
+                None => "unconditional".to_string(),
+                Some(e) => {
+                    let mut s = format!("{e:?}");
+                    // Annotate which leaves the cut reads so the Debug
+                    // rendering's column indices are resolvable.
+                    let mut refs: Vec<ColRef> = Vec::new();
+                    referenced_refs(e, self.gran, &mut refs);
+                    refs.sort_unstable();
+                    refs.dedup();
+                    let leaves: Vec<String> = refs
+                        .iter()
+                        .map(|r| match r {
+                            ColRef::Item(c) => name(&self.item_cols, *c),
+                            ColRef::Event(c) => name(&self.event_cols, *c),
+                            ColRef::Len(l) => format!("len(list{l})"),
+                        })
+                        .collect();
+                    if s.len() > 120 {
+                        s.truncate(117);
+                        s.push_str("...");
+                    }
+                    format!("{s} [reads: {}]", leaves.join(", "))
+                }
+            })
+            .collect()
+    }
+
     /// Classify one zone given a value interval per statistics leaf.
     fn classify_ref(&self, col: &dyn Fn(ColRef) -> Interval) -> ZoneDecision {
         let mut any_may_fire = false;

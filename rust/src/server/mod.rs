@@ -9,6 +9,10 @@
 //!             {"op":"query","src":"for event in dataset:\n ...","dataset":"dy"}
 //!             {"op":"datasets"} | {"op":"stats"} | {"op":"ping"}
 //!             {"op":"warm","dataset":"dy"}   (re-run top-cost cached tapes)
+//!             {"op":"metrics"}               (registry snapshot + Prometheus text)
+//!             {"op":"trace","id":N}          (span tree of a traced query; add
+//!                                             "chrome":true for trace_event JSON;
+//!                                             queries opt in with "trace":true)
 //!   response: {"ok":true,"hist":{...},"latency_ms":...,"queue_ms":...,
 //!              "exec_ms":...,"fused_with":...,"events":...,"partitions":...,
 //!              "skipped":...,"chunks_skipped":...,"chunks_take_all":...,
@@ -51,6 +55,8 @@ pub mod scan_fusion;
 
 use crate::coord::Cluster;
 use crate::engine::Query;
+use crate::obs::metrics::{Counter, Gauge, Histo, Registry, Snapshot};
+use crate::obs::trace::{self, Span, Tracer};
 use crate::queryir;
 use crate::util::json::Json;
 use fair_queue::FairQueue;
@@ -104,17 +110,36 @@ impl Default for ServerConfig {
 }
 
 /// Process-wide serving counters (reported in the `stats` op's `serving`
-/// block, alongside the fair queue's own depth/shed counters).
-#[derive(Default)]
+/// block, alongside the fair queue's own depth/shed counters). Since the
+/// metrics registry landed these are registry handles — `stats` keeps
+/// its exact JSON shape while `{"op":"metrics"}` serves the same
+/// atomics under their registered names.
 struct ServingStats {
     /// Final (non-error) query responses sent, cache hits included.
-    queries: AtomicU64,
+    queries: Counter,
     /// Summed queue wait of executed queries, microseconds.
-    queue_us: AtomicU64,
+    queue_us: Counter,
     /// Summed execution time of executed queries, microseconds.
-    exec_us: AtomicU64,
-    active_conns: AtomicU64,
-    conns_accepted: AtomicU64,
+    exec_us: Counter,
+    active_conns: Gauge,
+    conns_accepted: Counter,
+    /// Per-query latency distributions (p50/p90/p99 via `metrics`).
+    queue_lat_us: Histo,
+    exec_lat_us: Histo,
+}
+
+impl ServingStats {
+    fn new(reg: &Registry) -> ServingStats {
+        ServingStats {
+            queries: reg.counter("queries_executed"),
+            queue_us: reg.counter("queue_us_total"),
+            exec_us: reg.counter("exec_us_total"),
+            active_conns: reg.gauge("active_conns"),
+            conns_accepted: reg.counter("conns_accepted"),
+            queue_lat_us: reg.histo("query_queue_us"),
+            exec_lat_us: reg.histo("query_exec_us"),
+        }
+    }
 }
 
 /// Per-connection outgoing lines, filled by executors (and the reactor's
@@ -174,6 +199,11 @@ enum Work {
         query: Query,
         key: String,
         enqueued: Instant,
+        /// Root trace span of the query ([`Span::none`] when untraced —
+        /// every span call below is then one relaxed atomic load).
+        span: Span,
+        /// Child span covering the fair-queue wait; ended at pop.
+        queue_span: Span,
     },
     Warm { dataset: String },
 }
@@ -189,6 +219,13 @@ pub struct Server {
     outbox: Arc<Outbox>,
     serving: Arc<ServingStats>,
     fusion: Arc<FusionStats>,
+    metrics: Arc<Registry>,
+    tracer: Arc<Tracer>,
+    /// Queries slower than this (exec time) get their condensed span tree
+    /// logged at `warn` (`HEPQ_SLOW_QUERY_MS`; forces tracing on).
+    slow_query_ms: Option<u64>,
+    /// Periodic metrics-snapshot logger interval (`HEPQ_METRICS_DUMP_MS`).
+    metrics_dump_ms: Option<u64>,
 }
 
 impl Server {
@@ -198,6 +235,20 @@ impl Server {
 
     pub fn with_config(cluster: Arc<Cluster>, config: ServerConfig) -> Server {
         let queue = Arc::new(FairQueue::new(config.max_queue_depth));
+        let metrics = Arc::new(Registry::new());
+        let serving = Arc::new(ServingStats::new(&metrics));
+        let slow_query_ms = std::env::var("HEPQ_SLOW_QUERY_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok());
+        let trace_all = std::env::var("HEPQ_TRACE")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        // The slow-query log renders span trees, so it needs tracing on.
+        let tracer = Arc::new(Tracer::new(trace_all || slow_query_ms.is_some()));
+        let metrics_dump_ms = std::env::var("HEPQ_METRICS_DUMP_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&ms| ms > 0);
         Server {
             cluster,
             shutdown: Arc::new(AtomicBool::new(false)),
@@ -206,8 +257,12 @@ impl Server {
             config,
             queue,
             outbox: Arc::new(Outbox::default()),
-            serving: Arc::new(ServingStats::default()),
+            serving,
             fusion: Arc::new(FusionStats::default()),
+            metrics,
+            tracer,
+            slow_query_ms,
+            metrics_dump_ms,
         }
     }
 
@@ -230,6 +285,29 @@ impl Server {
         let local = listener.local_addr().map_err(|e| e.to_string())?;
         listener.set_nonblocking(true).map_err(|e| e.to_string())?;
         crate::log_info!("serving on {local} ({:?})", self.config);
+        // Periodic metrics dump: a detached logger thread; it re-checks the
+        // shutdown flag each tick and exits on its own after serve returns.
+        if let Some(ms) = self.metrics_dump_ms {
+            let mctx = self.metrics_ctx();
+            let shutdown = self.shutdown.clone();
+            let _ = std::thread::Builder::new()
+                .name("hepq-metrics-dump".to_string())
+                .spawn(move || {
+                    // Sleep in <=100ms slices so shutdown is prompt even
+                    // under a long dump interval.
+                    let mut elapsed_ms: u64 = 0;
+                    while !shutdown.load(Ordering::Relaxed) {
+                        let tick = ms.min(100);
+                        std::thread::sleep(Duration::from_millis(tick));
+                        elapsed_ms += tick;
+                        if elapsed_ms < ms {
+                            continue;
+                        }
+                        elapsed_ms = 0;
+                        crate::log_info!("metrics {}", mctx.snapshot().to_json());
+                    }
+                });
+        }
         let mut executors = Vec::new();
         for i in 0..self.config.executors.max(1) {
             let ctx = self.exec_ctx();
@@ -262,8 +340,8 @@ impl Server {
                         let id = next_id;
                         next_id += 1;
                         self.outbox.open(id);
-                        self.serving.active_conns.fetch_add(1, Ordering::Relaxed);
-                        self.serving.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                        self.serving.active_conns.add(1);
+                        self.serving.conns_accepted.inc();
                         conns.insert(id, Conn::new(stream));
                         crate::log_debug!("connection {id} from {peer}");
                     }
@@ -283,7 +361,7 @@ impl Server {
                 conns.remove(&id);
                 self.outbox.close(id);
                 self.queue.forget(id);
-                self.serving.active_conns.fetch_sub(1, Ordering::Relaxed);
+                self.serving.active_conns.sub(1);
                 crate::log_debug!("connection {id} closed");
             }
             if !active {
@@ -293,7 +371,7 @@ impl Server {
         // Shutdown: drop the sockets, wake and join the executors.
         for &id in conns.keys() {
             self.outbox.close(id);
-            self.serving.active_conns.fetch_sub(1, Ordering::Relaxed);
+            self.serving.active_conns.sub(1);
         }
         drop(conns);
         self.queue.wake_all();
@@ -314,6 +392,22 @@ impl Server {
             serving: self.serving.clone(),
             fusion: self.fusion.clone(),
             batch_window_ms: self.config.batch_window_ms,
+            tracer: self.tracer.clone(),
+            slow_query_ms: self.slow_query_ms,
+        }
+    }
+
+    /// Everything the metrics snapshot needs, cloned out of the server so
+    /// the periodic dump thread can assemble one without `&self`.
+    fn metrics_ctx(&self) -> MetricsCtx {
+        MetricsCtx {
+            cluster: self.cluster.clone(),
+            results: self.results.clone(),
+            warms: self.warms.clone(),
+            queue: self.queue.clone(),
+            outbox: self.outbox.clone(),
+            fusion: self.fusion.clone(),
+            metrics: self.metrics.clone(),
         }
     }
 
@@ -427,20 +521,48 @@ impl Server {
                 let name = req.get("dataset").and_then(|d| d.as_str()).unwrap_or("").to_string();
                 self.enqueue(client, Work::Warm { dataset: name });
             }
-            Some("query") => match Query::from_json(&req) {
-                Ok(q) => self.handle_query(client, q),
-                Err(e) => self.outbox.push(client, &err_json(&e)),
-            },
+            Some("metrics") => {
+                let j = self.metrics_ctx().to_json();
+                self.outbox.push(client, &j);
+            }
+            Some("trace") => {
+                let id = req.get("id").and_then(|i| i.as_u64());
+                let chrome = req.get("chrome").and_then(|c| c.as_bool()).unwrap_or(false);
+                let j = trace_json(&self.tracer, id, chrome);
+                self.outbox.push(client, &j);
+            }
+            Some("query") => {
+                // `"trace":true` forces a span tree for this one query even
+                // when the tracer is globally off.
+                let trace_req = req.get("trace").and_then(|t| t.as_bool()).unwrap_or(false);
+                match Query::from_json(&req) {
+                    Ok(q) => self.handle_query(client, q, trace_req),
+                    Err(e) => self.outbox.push(client, &err_json(&e)),
+                }
+            }
             _ => self.outbox.push(client, &err_json("unknown op")),
         }
     }
 
-    fn handle_query(&self, client: u64, q: Query) {
+    fn handle_query(&self, client: u64, q: Query, trace_req: bool) {
         let t0 = Instant::now();
+        let root = self.tracer.start(
+            "query",
+            if trace_req || self.tracer.enabled() {
+                Some(format!("dataset={} client={client}", q.dataset))
+            } else {
+                None
+            },
+            trace_req,
+        );
         // Doubles as validation: fails on unknown datasets and on source
         // that does not compile against the schema.
+        let vspan = root.child("validate_lower");
         let key = match cache_key(&self.cluster, &q) {
-            Ok(k) => k,
+            Ok(k) => {
+                vspan.end();
+                k
+            }
             Err(e) => {
                 self.outbox.push(client, &err_json(&e));
                 return;
@@ -450,19 +572,31 @@ impl Server {
         // microseconds — but only when this client has nothing queued or
         // running, so responses on one connection keep request order.
         if !self.queue.busy(client) {
+            let lspan = root.child("cache_lookup");
             if let Some(cached) = self.results.get(&key) {
-                self.serving.queries.fetch_add(1, Ordering::Relaxed);
-                let j = result_json(&cached, t0.elapsed(), true, Timing::default());
+                if lspan.is_on() {
+                    lspan.end_meta("hit".to_string());
+                }
+                self.serving.queries.inc();
+                let tid = root.trace_id();
+                root.end();
+                let j = result_json(&cached, t0.elapsed(), true, Timing::default(), tid);
                 self.outbox.push(client, &j);
                 return;
             }
+            if lspan.is_on() {
+                lspan.end_meta("miss".to_string());
+            }
         }
+        let queue_span = root.child("queue");
         self.enqueue(
             client,
             Work::Query {
                 query: q,
                 key,
                 enqueued: t0,
+                span: root,
+                queue_span,
             },
         );
     }
@@ -519,7 +653,7 @@ impl Server {
     /// shared-scan-fusion counters.
     fn serving_json(&self) -> Json {
         let o = Ordering::Relaxed;
-        let queries = self.serving.queries.load(o);
+        let queries = self.serving.queries.get();
         let avg = |total_us: u64| {
             if queries == 0 {
                 0.0
@@ -528,13 +662,13 @@ impl Server {
             }
         };
         Json::obj(vec![
-            ("active_conns", Json::num(self.serving.active_conns.load(o) as f64)),
-            ("conns_accepted", Json::num(self.serving.conns_accepted.load(o) as f64)),
+            ("active_conns", Json::num(self.serving.active_conns.get() as f64)),
+            ("conns_accepted", Json::num(self.serving.conns_accepted.get() as f64)),
             ("queue_depth", Json::num(self.queue.depth() as f64)),
             ("queue_shed", Json::num(self.queue.shed_count() as f64)),
             ("queries_executed", Json::num(queries as f64)),
-            ("avg_queue_ms", Json::num(avg(self.serving.queue_us.load(o)))),
-            ("avg_exec_ms", Json::num(avg(self.serving.exec_us.load(o)))),
+            ("avg_queue_ms", Json::num(avg(self.serving.queue_us.get()))),
+            ("avg_exec_ms", Json::num(avg(self.serving.exec_us.get()))),
             ("fused_groups", Json::num(self.fusion.groups.load(o) as f64)),
             ("fused_queries", Json::num(self.fusion.fused_queries.load(o) as f64)),
             ("scans_saved", Json::num(self.fusion.scans_saved.load(o) as f64)),
@@ -584,6 +718,8 @@ struct ExecCtx {
     serving: Arc<ServingStats>,
     fusion: Arc<FusionStats>,
     batch_window_ms: u64,
+    tracer: Arc<Tracer>,
+    slow_query_ms: Option<u64>,
 }
 
 /// Executor: pop the fair queue; queries open a batching window and scoop
@@ -609,17 +745,22 @@ fn executor_loop(ctx: ExecCtx) {
                 query,
                 key,
                 enqueued,
+                span,
+                queue_span,
             } => {
+                queue_span.end();
                 let mut jobs = vec![Job {
                     client,
                     query,
                     key,
                     enqueued,
+                    span,
                 }];
                 if ctx.batch_window_ms > 0 {
                     // The batching window: let co-arriving queries pile up,
                     // then scoop every queued query (warms stay queued —
                     // they cannot fuse).
+                    let wspan = jobs[0].span.child("fuse_window");
                     std::thread::sleep(Duration::from_millis(ctx.batch_window_ms));
                     let only_queries = |w: &Work| matches!(w, Work::Query { .. });
                     let extra = ctx.queue.pop_extra(MAX_FUSE - 1, only_queries);
@@ -628,15 +769,22 @@ fn executor_loop(ctx: ExecCtx) {
                             query,
                             key,
                             enqueued,
+                            span,
+                            queue_span,
                         } = w
                         {
+                            queue_span.end();
                             jobs.push(Job {
                                 client: c,
                                 query,
                                 key,
                                 enqueued,
+                                span,
                             });
                         }
+                    }
+                    if wspan.is_on() {
+                        wspan.end_meta(format!("scooped={}", jobs.len() - 1));
                     }
                 }
                 run_jobs(&ctx, jobs);
@@ -660,32 +808,43 @@ fn run_jobs(ctx: &ExecCtx, jobs: Vec<Job>) {
                 fused_with: 0,
             };
             record_timing(ctx, &timing);
+            let tid = j.span.trace_id();
+            if j.span.is_on() {
+                j.span.event("late_cache_hit", None);
+            }
             ctx.outbox
-                .push(j.client, &result_json(&cached, j.enqueued.elapsed(), true, timing));
+                .push(j.client, &result_json(&cached, j.enqueued.elapsed(), true, timing, tid));
+            j.span.end();
             ctx.queue.complete(j.client);
         } else {
             to_run.push(j);
         }
     }
     for group in scan_fusion::group_by_dataset(to_run) {
+        // One "execute" child per member, wrapping exactly the measured
+        // exec interval (so the span tree accounts for `exec_ms`).
+        let exec_spans: Vec<Span> = group.iter().map(|j| j.span.child("execute")).collect();
         let t_exec = Instant::now();
         let mut last = vec![0usize; group.len()];
-        let results = scan_fusion::run_group(&ctx.cluster, &group, &ctx.fusion, |i, done, total| {
-            if done != last[i] {
-                last[i] = done;
-                let frame = Json::obj(vec![
-                    ("progress", Json::num(done as f64)),
-                    ("total", Json::num(total as f64)),
-                ]);
-                ctx.outbox.push(group[i].client, &frame);
-            }
-            // Solo runs cancel when their client disconnected; fused
-            // members never cancel (co-members share their subtasks).
-            ctx.outbox.is_live(group[i].client)
-        });
+        let results =
+            scan_fusion::run_group(&ctx.cluster, &group, &exec_spans, &ctx.fusion, |i, done, total| {
+                if done != last[i] {
+                    last[i] = done;
+                    let frame = Json::obj(vec![
+                        ("progress", Json::num(done as f64)),
+                        ("total", Json::num(total as f64)),
+                    ]);
+                    ctx.outbox.push(group[i].client, &frame);
+                }
+                // A dead client cancels its own query — solo runs abort the
+                // scan, fused members drop out of the group's remaining
+                // shared subtasks while co-members keep running.
+                ctx.outbox.is_live(group[i].client)
+            });
         let exec = t_exec.elapsed();
         let fused_with = group.len() - 1;
-        for (j, r) in group.iter().zip(results) {
+        for ((j, r), espan) in group.iter().zip(results).zip(exec_spans) {
+            espan.end();
             match r {
                 Ok(res) => {
                     // The entry's eviction weight is its recomputation
@@ -705,8 +864,14 @@ fn run_jobs(ctx: &ExecCtx, jobs: Vec<Job>) {
                         fused_with,
                     };
                     record_timing(ctx, &timing);
-                    ctx.outbox
-                        .push(j.client, &result_json(&res, j.enqueued.elapsed(), false, timing));
+                    let rspan = j.span.child("respond");
+                    ctx.outbox.push(
+                        j.client,
+                        &result_json(&res, j.enqueued.elapsed(), false, timing, j.span.trace_id()),
+                    );
+                    rspan.end();
+                    j.span.clone().end();
+                    slow_query_log(ctx, j, &timing);
                 }
                 // Cluster-level admission control (`max_backlog`) surfaces
                 // as the same structured shed as a full fair queue, so the
@@ -714,19 +879,44 @@ fn run_jobs(ctx: &ExecCtx, jobs: Vec<Job>) {
                 Err(e) if e.starts_with("overloaded") => {
                     let retry = retry_after_ms(ctx.queue.depth().max(1), 1);
                     ctx.outbox.push(j.client, &overloaded_json(retry));
+                    j.span.clone().end();
                 }
-                Err(e) => ctx.outbox.push(j.client, &err_json(&e)),
+                Err(e) => {
+                    ctx.outbox.push(j.client, &err_json(&e));
+                    j.span.clone().end();
+                }
             }
             ctx.queue.complete(j.client);
         }
     }
 }
 
+/// Log the condensed span tree of a slow query (`HEPQ_SLOW_QUERY_MS`).
+fn slow_query_log(ctx: &ExecCtx, j: &Job, t: &Timing) {
+    let Some(threshold) = ctx.slow_query_ms else {
+        return;
+    };
+    if t.exec_ms < threshold as f64 {
+        return;
+    }
+    if let Some(buf) = ctx.tracer.get(Some(j.span.trace_id())) {
+        crate::log_warn!(
+            "slow query (exec {:.1} ms >= {threshold} ms) trace {}:\n{}",
+            t.exec_ms,
+            buf.trace_id,
+            trace::condensed(&buf, 40)
+        );
+    }
+}
+
 fn record_timing(ctx: &ExecCtx, t: &Timing) {
-    let o = Ordering::Relaxed;
-    ctx.serving.queries.fetch_add(1, o);
-    ctx.serving.queue_us.fetch_add((t.queue_ms * 1e3) as u64, o);
-    ctx.serving.exec_us.fetch_add((t.exec_ms * 1e3) as u64, o);
+    let queue_us = (t.queue_ms * 1e3) as u64;
+    let exec_us = (t.exec_ms * 1e3) as u64;
+    ctx.serving.queries.inc();
+    ctx.serving.queue_us.add(queue_us);
+    ctx.serving.exec_us.add(exec_us);
+    ctx.serving.queue_lat_us.observe(queue_us);
+    ctx.serving.exec_lat_us.observe(exec_us);
 }
 
 fn ms_since(t: Instant) -> f64 {
@@ -795,11 +985,22 @@ struct Timing {
     fused_with: usize,
 }
 
-fn result_json(res: &CachedResult, latency: Duration, cached: bool, t: Timing) -> Json {
+fn result_json(
+    res: &CachedResult,
+    latency: Duration,
+    cached: bool,
+    t: Timing,
+    trace_id: u64,
+) -> Json {
     let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("hist", res.hist.to_json()),
     ];
+    // Present only when the query was traced: the handle for
+    // `{"op":"trace","id":..}`.
+    if trace_id > 0 {
+        pairs.push(("trace_id", Json::num(trace_id as f64)));
+    }
     // Aux sinks (`fill2`/`profile`/`fill_vars`) ride a labeled `hists`
     // array; classic responses stay byte-identical (no empty array).
     if !res.aux.is_empty() {
@@ -946,6 +1147,112 @@ fn placement_json(cluster: &Cluster) -> Json {
     ])
 }
 
+/// Everything needed to assemble a [`Snapshot`] of the unified metrics
+/// registry plus the counters still owned by their subsystems (cluster
+/// placement, result cache, fair queue, zone maps, fusion, kernels) —
+/// one struct so the reactor and the periodic dump thread share the
+/// collection code.
+#[derive(Clone)]
+struct MetricsCtx {
+    cluster: Arc<Cluster>,
+    results: Arc<ResultCache>,
+    warms: Arc<AtomicU64>,
+    queue: Arc<FairQueue<Work>>,
+    outbox: Arc<Outbox>,
+    fusion: Arc<FusionStats>,
+    metrics: Arc<Registry>,
+}
+
+impl MetricsCtx {
+    fn snapshot(&self) -> Snapshot {
+        let o = Ordering::Relaxed;
+        let mut snap = self.metrics.snapshot();
+        let p = self.cluster.placement_stats();
+        snap.set_counter("placement.failovers", p.failovers);
+        snap.set_counter("placement.speculative_reopens", p.speculative_reopens);
+        snap.set_counter("placement.speculative_wins", p.speculative_wins);
+        snap.set_counter("placement.query_timeouts", p.query_timeouts);
+        snap.set_counter("placement.submits_rejected", p.submits_rejected);
+        snap.set_counter("placement.duplicate_docs", p.duplicate_docs);
+        snap.set_counter("placement.stale_docs", p.stale_docs);
+        snap.set_counter("queries_cancelled", self.cluster.queries_cancelled());
+        snap.set_gauge("live_workers", self.cluster.n_workers() as i64);
+        snap.set_gauge("board_backlog", self.cluster.board_backlog() as i64);
+        snap.set_gauge("pending_docs", self.cluster.pending_docs() as i64);
+        let stats = self.cluster.stats();
+        snap.set_counter("workers.tasks_done", stats.iter().map(|s| s.tasks_done).sum());
+        snap.set_counter("workers.cache_hits", stats.iter().map(|s| s.cache_hits).sum());
+        snap.set_counter("workers.cache_misses", stats.iter().map(|s| s.cache_misses).sum());
+        snap.set_counter(
+            "workers.cache_evictions",
+            stats.iter().map(|s| s.cache_evictions).sum(),
+        );
+        snap.set_counter(
+            "workers.events_processed",
+            stats.iter().map(|s| s.events_processed).sum(),
+        );
+        let (rc_hits, rc_misses) = self.results.stats();
+        snap.set_counter("result_cache.hits", rc_hits);
+        snap.set_counter("result_cache.misses", rc_misses);
+        snap.set_counter("result_cache.evictions", self.results.evictions());
+        snap.set_counter("result_cache.warms", self.warms.load(o));
+        snap.set_gauge("result_cache.entries", self.results.len() as i64);
+        snap.set_gauge("queue.depth", self.queue.depth() as i64);
+        snap.set_counter("queue.shed", self.queue.shed_count());
+        snap.set_counter("queue.accepted", self.queue.accepted_count());
+        snap.set_gauge("outbox.live", self.outbox.live_count() as i64);
+        let (p_skip, p_scan) = self.cluster.partition_skip_stats();
+        snap.set_counter("zones.partitions_skipped", p_skip);
+        snap.set_counter("zones.partitions_scanned", p_scan);
+        let chunks = self.cluster.zone_chunk_stats().unwrap_or_default();
+        snap.set_counter("zones.chunks_skipped", chunks.chunks_skipped);
+        snap.set_counter("zones.chunks_take_all", chunks.chunks_take_all);
+        snap.set_counter("zones.chunks_scanned", chunks.chunks_scanned);
+        snap.set_counter("fusion.groups", self.fusion.groups.load(o));
+        snap.set_counter("fusion.fused_queries", self.fusion.fused_queries.load(o));
+        snap.set_counter("fusion.scans_saved", self.fusion.scans_saved.load(o));
+        snap.set_counter("catalog.fetches", self.cluster.catalog.fetches.load(o));
+        snap.set_counter("catalog.bytes_fetched", self.cluster.catalog.bytes_fetched.load(o));
+        snap.set_counter(
+            "kernel.allocation_events",
+            queryir::lower::total_allocation_events(),
+        );
+        snap
+    }
+
+    /// The `{"op":"metrics"}` response: the JSON snapshot plus the same
+    /// snapshot rendered in Prometheus text exposition format.
+    fn to_json(&self) -> Json {
+        let snap = self.snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("ok".to_string(), Json::Bool(true));
+            map.insert("prometheus".to_string(), Json::str(snap.to_prometheus()));
+        }
+        j
+    }
+}
+
+/// The `{"op":"trace"}` response: the span tree of one traced query
+/// (most recent when `id` is absent), optionally with Chrome
+/// `trace_event` JSON under `"chrome"`.
+fn trace_json(tracer: &Tracer, id: Option<u64>, chrome: bool) -> Json {
+    let Some(buf) = tracer.get(id) else {
+        return err_json("no such trace");
+    };
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("trace_id", Json::num(buf.trace_id as f64)),
+        ("spans", Json::num(buf.len() as f64)),
+        ("dropped", Json::num(buf.dropped() as f64)),
+        ("root", trace::span_tree_json(&buf)),
+    ];
+    if chrome {
+        pairs.push(("chrome", trace::chrome_trace_json(&buf)));
+    }
+    Json::obj(pairs)
+}
+
 fn err_json(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
 }
@@ -1006,11 +1313,26 @@ impl Client {
     pub fn query<F: FnMut(usize, usize)>(
         &mut self,
         q: &Query,
+        on_progress: F,
+    ) -> Result<Json, String> {
+        self.query_opts(q, false, on_progress)
+    }
+
+    /// Like [`Client::query`], but `trace` asks the server to record a
+    /// span trace for this query; the response then carries a `trace_id`
+    /// retrievable via the `trace` op (`hepq trace --id N`).
+    pub fn query_opts<F: FnMut(usize, usize)>(
+        &mut self,
+        q: &Query,
+        trace: bool,
         mut on_progress: F,
     ) -> Result<Json, String> {
         let mut req = q.to_json();
         if let Json::Obj(map) = &mut req {
             map.insert("op".into(), Json::str("query"));
+            if trace {
+                map.insert("trace".into(), Json::Bool(true));
+            }
         }
         let mut line = req.to_string();
         line.push('\n');

@@ -12,6 +12,7 @@
 
 use crate::coord::{Cluster, QueryResult};
 use crate::engine::Query;
+use crate::obs::trace::Span;
 use crate::server::result_cache::CachedResult;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -25,6 +26,8 @@ pub struct Job {
     pub key: String,
     /// When the query entered the fair queue (queue-wait reporting).
     pub enqueued: Instant,
+    /// Root trace span of the query ([`Span::none`] when untraced).
+    pub span: Span,
 }
 
 /// Process-wide fusion counters (the `serving` block of the `stats` op).
@@ -57,13 +60,19 @@ pub fn group_by_dataset(jobs: Vec<Job>) -> Vec<Vec<Job>> {
 
 /// Execute one same-dataset group; returns one result per job, in order.
 ///
-/// A group of one takes the ordinary solo path (morsel-parallel, and
-/// cancellable: `progress` returning false aborts it). Larger groups are
-/// submitted fused; `progress` is informational there — cancelling one
-/// member would orphan co-members sharing its subtasks.
+/// `spans` carries one trace span per job (pass `&[]` or `Span::none`
+/// entries when untraced); each member's cluster-side spans attach to
+/// its own query's trace even when the group shares one scan.
+///
+/// `progress` returning false cancels that member: a group of one
+/// aborts outright (solo path), while a fused member is dropped from
+/// the group's remaining shared subtasks via
+/// [`Cluster::wait_member_with_progress`] — its co-members keep
+/// running undisturbed.
 pub fn run_group<F>(
     cluster: &Cluster,
     group: &[Job],
+    spans: &[Span],
     stats: &FusionStats,
     mut progress: F,
 ) -> Vec<Result<CachedResult, String>>
@@ -72,13 +81,14 @@ where
 {
     if group.len() == 1 {
         let q = &group[0].query;
-        let res = cluster.submit(q.clone()).and_then(|h| {
+        let span = spans.first().cloned().unwrap_or_else(Span::none);
+        let res = cluster.submit_traced(q.clone(), &span).and_then(|h| {
             cluster.wait_with_progress(&h, q, |done, total, _| progress(0, done, total))
         });
         return vec![res.map(to_cached).map_err(String::from)];
     }
     let queries: Vec<Query> = group.iter().map(|j| j.query.clone()).collect();
-    let handles = match cluster.submit_fused(&queries) {
+    let handles = match cluster.submit_fused_traced(&queries, spans) {
         Ok(h) => h,
         Err(e) => {
             return group.iter().map(|_| Err(String::from(e.clone()))).collect();
@@ -97,10 +107,7 @@ where
         .enumerate()
         .map(|(i, (h, q))| {
             cluster
-                .wait_with_progress(h, q, |done, total, _| {
-                    progress(i, done, total);
-                    true
-                })
+                .wait_member_with_progress(h, q, |done, total, _| progress(i, done, total))
                 .map(to_cached)
                 .map_err(String::from)
         })
@@ -135,6 +142,7 @@ mod tests {
                 query: q.clone(),
                 key: format!("k{i}"),
                 enqueued: Instant::now(),
+                span: Span::none(),
             })
             .collect()
     }
@@ -173,7 +181,7 @@ mod tests {
             Query::new(QueryKind::MaxPt, "dy", "muons"),
         ];
         let stats = FusionStats::default();
-        let res = run_group(&c, &jobs(&qs), &stats, |_, _, _| true);
+        let res = run_group(&c, &jobs(&qs), &[], &stats, |_, _, _| true);
         assert_eq!(res.len(), 2);
         for (r, q) in res.iter().zip(&qs) {
             let solo = c.run(q).unwrap();
@@ -188,6 +196,43 @@ mod tests {
         assert_eq!(stats.fused_queries.load(Ordering::Relaxed), 2);
         // 2 queries × 4 partitions sharing every scan ⇒ 4 scans saved.
         assert_eq!(stats.scans_saved.load(Ordering::Relaxed), 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn fused_member_cancellation_spares_co_members() {
+        let c = Cluster::start(
+            ClusterConfig {
+                n_workers: 2,
+                cache_bytes_per_worker: 64 << 20,
+                policy: Policy::AnyPull,
+                fetch_delay_per_mib: Duration::ZERO,
+                claim_ttl: Duration::from_secs(10),
+                ..ClusterConfig::default()
+            },
+            Backend::compiled(),
+        );
+        c.catalog.register("dy", generate_drellyan(8_000, 58), 2_000);
+        let qs = [
+            Query::new(QueryKind::FlatHist, "dy", "muons"),
+            Query::new(QueryKind::MaxPt, "dy", "muons"),
+        ];
+        let stats = FusionStats::default();
+        // Member 1's client "disconnects" (progress returns false from
+        // the first callback); member 0 must still complete, bit-exact.
+        let res = run_group(&c, &jobs(&qs), &[], &stats, |i, _, _| i != 1);
+        assert_eq!(res.len(), 2);
+        let survivor = res[0].as_ref().unwrap();
+        let solo = c.run(&qs[0]).unwrap();
+        assert_eq!(survivor.hist.bins, solo.hist.bins);
+        assert_eq!(survivor.hist.count, solo.hist.count);
+        assert_eq!(survivor.partitions, solo.partitions);
+        let err = res[1].as_ref().unwrap_err();
+        assert!(err.contains("cancelled"), "unexpected error: {err}");
+        assert_eq!(c.queries_cancelled(), 1);
+        // No leaked partials: the cancelled member's documents are
+        // tombstoned, the survivor's were consumed by its reduction.
+        assert_eq!(c.pending_docs(), 0);
         c.shutdown();
     }
 }

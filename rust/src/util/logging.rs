@@ -1,7 +1,9 @@
-//! Tiny leveled logger controlled by `HEPQ_LOG` (error|warn|info|debug|trace).
+//! Tiny leveled logger controlled by `HEPQ_LOG`
+//! (off|error|warn|info|debug|trace).
 //!
-//! The coordinator and workers log through this; benches run with logging off
-//! so the hot paths are not perturbed.
+//! The coordinator and workers log through this; benches run with
+//! `HEPQ_LOG=off` so the hot paths are not perturbed — `off` silences
+//! everything, including errors.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -14,6 +16,10 @@ pub enum Level {
     Info = 2,
     Debug = 3,
     Trace = 4,
+    /// Total silence. 254 so it never satisfies `level <= cur` for a
+    /// real message level (255 stays the uninitialized sentinel), and
+    /// `enabled` rejects it explicitly.
+    Off = 254,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
@@ -21,6 +27,7 @@ static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 fn init_level() -> u8 {
     let lv = match std::env::var("HEPQ_LOG").unwrap_or_default().to_lowercase().as_str() {
+        "off" | "none" => Level::Off,
         "error" => Level::Error,
         "info" => Level::Info,
         "debug" => Level::Debug,
@@ -39,7 +46,7 @@ fn init_level() -> u8 {
 pub fn enabled(level: Level) -> bool {
     let cur = LEVEL.load(Ordering::Relaxed);
     let cur = if cur == 255 { init_level() } else { cur };
-    (level as u8) <= cur
+    cur != Level::Off as u8 && level != Level::Off && (level as u8) <= cur
 }
 
 pub fn set_level(level: Level) {
@@ -58,6 +65,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
         Level::Info => "INFO ",
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
+        Level::Off => return, // unreachable: `enabled` rejects Off
     };
     eprintln!("[{dt:9.4}s {tag} {module}] {msg}");
 }
@@ -85,6 +93,14 @@ mod tests {
         assert!(!enabled(Level::Info));
         set_level(Level::Trace);
         assert!(enabled(Level::Trace));
+        // `off` silences everything, errors included. Same test as the
+        // gating above — the level is process-global state, so separate
+        // #[test] fns would race under the parallel test runner.
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        assert!(!enabled(Level::Trace));
+        assert!(!enabled(Level::Off));
         set_level(Level::Warn);
     }
 }

@@ -1,0 +1,377 @@
+//! Observability end-to-end: the unified metrics registry served over the
+//! wire (`metrics` op, JSON + Prometheus text exposition), per-query span
+//! traces (`"trace":true` on a query, then the `trace` op), and the
+//! golden wire schemas of the `stats`/`metrics`/`trace` responses — the
+//! key sets dashboards and scrapers bind to, locked down so a rename is a
+//! reviewed decision, not an accident.
+
+use hepq::coord::{Cluster, ClusterConfig, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::server::{Client, Server, ServerConfig};
+use hepq::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn cluster(events: usize, seed: u64, part_events: usize) -> Arc<Cluster> {
+    let c = Arc::new(Cluster::start(
+        ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            ..ClusterConfig::default()
+        },
+        Backend::compiled(),
+    ));
+    c.catalog.register("dy", generate_drellyan(events, seed), part_events);
+    c
+}
+
+fn start(cluster: Arc<Cluster>, cfg: ServerConfig) -> (String, std::thread::JoinHandle<()>, Arc<Server>) {
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = Arc::new(Server::with_config(cluster, cfg));
+    let s2 = server.clone();
+    let a2 = addr.clone();
+    let t = std::thread::spawn(move || {
+        s2.serve(&a2).unwrap();
+    });
+    for _ in 0..300 {
+        if Client::connect(&addr).is_ok() {
+            return (addr, t, server);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server did not come up on {addr}");
+}
+
+fn stop(server: &Server, t: std::thread::JoinHandle<()>) {
+    server.shutdown_flag().store(true, Ordering::Relaxed);
+    t.join().unwrap();
+}
+
+fn keys(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(map) => map.keys().cloned().collect(),
+        other => panic!("expected object, got {other}"),
+    }
+}
+
+/// The `metrics` op must serve the registry's own handles, the collected
+/// subsystem counters, and a well-formed Prometheus text exposition.
+#[test]
+fn metrics_op_exposes_registry_and_prometheus() {
+    let (addr, t, server) = start(cluster(3_000, 81, 1_000), ServerConfig::default());
+    let mut conn = Client::connect(&addr).unwrap();
+    let q = Query::new(QueryKind::MaxPt, "dy", "muons");
+    for _ in 0..2 {
+        let resp = conn.query(&q, |_, _| {}).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    }
+
+    let m = conn.request(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "{m}");
+    let counters = m.get("counters").expect("counters block");
+    let cnt = |k: &str| {
+        counters
+            .get(k)
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| panic!("counter '{k}' missing: {counters}"))
+    };
+    // Second run is a result-cache hit; both count as executed queries.
+    assert_eq!(cnt("queries_executed"), 2);
+    assert_eq!(cnt("result_cache.hits"), 1);
+    // The miss path probes the cache twice (inline, then pre-execution).
+    assert!(cnt("result_cache.misses") >= 1);
+    assert_eq!(cnt("queries_cancelled"), 0);
+    assert!(cnt("conns_accepted") >= 1);
+    assert!(cnt("queue.accepted") >= 1);
+    assert!(cnt("workers.tasks_done") >= 1);
+    assert!(cnt("workers.events_processed") >= 3_000);
+    // Present even when zero — scrapers need stable series.
+    for k in [
+        "placement.failovers",
+        "placement.speculative_wins",
+        "fusion.groups",
+        "zones.partitions_scanned",
+        "catalog.fetches",
+        "kernel.allocation_events",
+    ] {
+        assert!(counters.get(k).is_some(), "counter '{k}' missing: {counters}");
+    }
+    let gauges = m.get("gauges").expect("gauges block");
+    assert_eq!(gauges.get("active_conns").and_then(|v| v.as_u64()), Some(1));
+    assert_eq!(gauges.get("queue.depth").and_then(|v| v.as_u64()), Some(0));
+    assert!(gauges.get("live_workers").is_some());
+    // Only the executed run observes latencies; inline cache hits skip
+    // the queue entirely.
+    let hist = m
+        .get("histograms")
+        .and_then(|h| h.get("query_exec_us"))
+        .expect("query_exec_us histogram");
+    assert_eq!(hist.get("count").and_then(|v| v.as_u64()), Some(1));
+    let p50 = hist.get("p50").and_then(|v| v.as_u64()).unwrap();
+    let max = hist.get("max").and_then(|v| v.as_u64()).unwrap();
+    assert!(p50 <= max, "p50 {p50} > max {max}");
+
+    // Prometheus text exposition: every line is a TYPE comment or a
+    // `hepq_*` sample, and the executed-queries counter is in there.
+    let prom = m.get("prometheus").and_then(|p| p.as_str()).expect("prometheus text");
+    assert!(prom.contains("hepq_queries_executed 2"), "{prom}");
+    assert!(prom.contains("# TYPE hepq_query_exec_us summary"));
+    for line in prom.lines() {
+        assert!(
+            line.starts_with("# TYPE hepq_") || line.starts_with("hepq_"),
+            "bad exposition line: {line}"
+        );
+    }
+    stop(&server, t);
+}
+
+/// Golden wire schemas: the exact top-level key sets of the `stats`,
+/// `metrics`, and `trace` responses, plus the `serving` block. BTreeMap
+/// keys come back sorted, so the expectation lists are sorted too.
+#[test]
+fn golden_wire_schema_for_stats_metrics_trace() {
+    let (addr, t, server) = start(cluster(2_000, 82, 1_000), ServerConfig::default());
+    let mut conn = Client::connect(&addr).unwrap();
+
+    let stats = conn.request(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(
+        keys(&stats),
+        [
+            "bytes_fetched",
+            "cache_hit_rate",
+            "data_skipping",
+            "ok",
+            "placement",
+            "result_cache_entries",
+            "result_cache_evictions",
+            "result_cache_hits",
+            "result_cache_misses",
+            "serving",
+            "workers",
+        ],
+        "stats schema drifted"
+    );
+    assert_eq!(
+        keys(stats.get("serving").unwrap()),
+        [
+            "active_conns",
+            "avg_exec_ms",
+            "avg_queue_ms",
+            "conns_accepted",
+            "fused_groups",
+            "fused_queries",
+            "queries_executed",
+            "queue_depth",
+            "queue_shed",
+            "scans_saved",
+        ],
+        "serving block schema drifted"
+    );
+
+    let metrics = conn.request(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert_eq!(
+        keys(&metrics),
+        ["counters", "gauges", "histograms", "ok", "prometheus"],
+        "metrics schema drifted"
+    );
+
+    let q = Query::new(QueryKind::FlatHist, "dy", "muons");
+    let resp = conn.query_opts(&q, true, |_, _| {}).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let tid = resp.get("trace_id").and_then(|v| v.as_u64()).expect("trace_id");
+    std::thread::sleep(Duration::from_millis(100)); // let the executor end the root span
+    let tr = conn
+        .request(&Json::obj(vec![
+            ("op", Json::str("trace")),
+            ("id", Json::num(tid as f64)),
+            ("chrome", Json::Bool(true)),
+        ]))
+        .unwrap();
+    assert_eq!(
+        keys(&tr),
+        ["chrome", "dropped", "ok", "root", "spans", "trace_id"],
+        "trace schema drifted"
+    );
+    stop(&server, t);
+}
+
+fn collect_names(node: &Json, out: &mut Vec<String>) {
+    out.push(node.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string());
+    if let Some(kids) = node.get("children").and_then(|v| v.as_arr()) {
+        for k in kids {
+            collect_names(k, out);
+        }
+    }
+}
+
+/// Every child span must lie within its parent's [start, end] interval —
+/// the invariant that makes self-times meaningful.
+fn check_nesting(node: &Json) {
+    let start = node.get("start_us").and_then(|v| v.as_u64()).unwrap();
+    let dur = node.get("dur_us").and_then(|v| v.as_u64()).unwrap();
+    let name = node.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+    if let Some(kids) = node.get("children").and_then(|v| v.as_arr()) {
+        for k in kids {
+            let ks = k.get("start_us").and_then(|v| v.as_u64()).unwrap();
+            let kd = k.get("dur_us").and_then(|v| v.as_u64()).unwrap();
+            let kn = k.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+            assert!(ks >= start, "child {kn} starts ({ks}) before parent {name} ({start})");
+            assert!(
+                ks + kd <= start + dur,
+                "child {kn} ends ({}) after parent {name} ({})",
+                ks + kd,
+                start + dur
+            );
+            check_nesting(k);
+        }
+    }
+}
+
+fn find<'a>(node: &'a Json, want: &str) -> Option<&'a Json> {
+    if node.get("name").and_then(|v| v.as_str()) == Some(want) {
+        return Some(node);
+    }
+    node.get("children")
+        .and_then(|v| v.as_arr())
+        .and_then(|kids| kids.iter().find_map(|k| find(k, want)))
+}
+
+/// A traced query must yield a span tree covering its whole lifecycle —
+/// validate → queue → execute (with per-partition subtasks and the
+/// reduction) → respond — properly nested, with the `execute` span's
+/// duration matching the response's `exec_ms` within 5% (+scheduling
+/// slack for sub-millisecond runs).
+#[test]
+fn traced_query_span_tree_accounts_for_exec_time() {
+    let c = cluster(20_000, 83, 2_000);
+    let (addr, t, server) = start(
+        c,
+        ServerConfig {
+            batch_window_ms: 2,
+            max_queue_depth: 256,
+            max_conns: 64,
+            executors: 1,
+        },
+    );
+    let mut conn = Client::connect(&addr).unwrap();
+    let q = Query::new(QueryKind::MassPairs, "dy", "muons");
+    let resp = conn.query_opts(&q, true, |_, _| {}).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let tid = resp.get("trace_id").and_then(|v| v.as_u64()).expect("trace_id in response");
+    assert!(tid > 0);
+    let exec_ms = resp.get("exec_ms").and_then(|v| v.as_f64()).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let the executor end the root span
+
+    let tr = conn
+        .request(&Json::obj(vec![("op", Json::str("trace")), ("id", Json::num(tid as f64))]))
+        .unwrap();
+    assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr}");
+    assert_eq!(tr.get("trace_id").and_then(|v| v.as_u64()), Some(tid));
+    assert_eq!(tr.get("dropped").and_then(|v| v.as_u64()), Some(0));
+    let root = tr.get("root").expect("root span");
+    assert_eq!(root.get("name").and_then(|v| v.as_str()), Some("query"));
+
+    let mut names = Vec::new();
+    collect_names(root, &mut names);
+    for want in ["validate_lower", "queue", "execute", "subtask", "reduce", "respond"] {
+        assert!(names.iter().any(|n| n == want), "span '{want}' missing from {names:?}");
+    }
+    // 20k events at 2k per partition: every partition's scan is a span.
+    assert!(
+        names.iter().filter(|n| *n == "subtask").count() >= 10,
+        "expected one subtask span per partition: {names:?}"
+    );
+    check_nesting(root);
+
+    // The execute span wraps exactly the interval `exec_ms` measures, so
+    // the tree accounts for the reported execution time.
+    let execute = find(root, "execute").unwrap();
+    let dur_ms = execute.get("dur_us").and_then(|v| v.as_u64()).unwrap() as f64 / 1e3;
+    assert!(
+        (dur_ms - exec_ms).abs() <= 0.05 * exec_ms + 3.0,
+        "execute span {dur_ms} ms vs exec_ms {exec_ms} ms"
+    );
+    stop(&server, t);
+}
+
+/// With the tracer globally off and no `"trace":true`, responses carry no
+/// trace id and the `trace` op has nothing to serve.
+#[test]
+fn untraced_queries_leave_no_trace() {
+    let (addr, t, server) = start(cluster(2_000, 84, 1_000), ServerConfig::default());
+    let mut conn = Client::connect(&addr).unwrap();
+    let resp = conn.query(&Query::new(QueryKind::MaxPt, "dy", "muons"), |_, _| {}).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    assert!(resp.get("trace_id").is_none(), "untraced response carries trace_id: {resp}");
+    let tr = conn.request(&Json::obj(vec![("op", Json::str("trace"))])).unwrap();
+    assert_eq!(tr.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(tr.get("error").and_then(|e| e.as_str()), Some("no such trace"));
+    stop(&server, t);
+}
+
+/// Co-arriving traced queries that fuse into one shared scan still get
+/// *independent* trace trees: distinct ids, each with its own execute
+/// span and properly nested children.
+#[test]
+fn fused_members_get_independent_traces() {
+    let (addr, t, server) = start(
+        cluster(6_000, 85, 1_000),
+        ServerConfig {
+            batch_window_ms: 50,
+            max_queue_depth: 256,
+            max_conns: 64,
+            executors: 1,
+        },
+    );
+    let mix = [
+        Query::new(QueryKind::FlatHist, "dy", "muons"),
+        Query::new(QueryKind::MaxPt, "dy", "muons"),
+    ];
+    let barrier = Arc::new(Barrier::new(mix.len()));
+    let handles: Vec<_> = mix
+        .iter()
+        .map(|q| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut conn = Client::connect(&addr).unwrap();
+                barrier.wait();
+                conn.query_opts(&q, true, |_, _| {}).unwrap()
+            })
+        })
+        .collect();
+    let resps: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(100));
+    let tids: Vec<u64> = resps
+        .iter()
+        .map(|r| {
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+            r.get("trace_id").and_then(|v| v.as_u64()).expect("trace_id")
+        })
+        .collect();
+    assert_ne!(tids[0], tids[1], "fused members share a trace id");
+    let mut conn = Client::connect(&addr).unwrap();
+    for tid in tids {
+        let tr = conn
+            .request(&Json::obj(vec![("op", Json::str("trace")), ("id", Json::num(tid as f64))]))
+            .unwrap();
+        assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr}");
+        let root = tr.get("root").unwrap();
+        assert_eq!(root.get("name").and_then(|v| v.as_str()), Some("query"));
+        let mut names = Vec::new();
+        collect_names(root, &mut names);
+        assert!(names.iter().any(|n| n == "execute"), "{names:?}");
+        check_nesting(root);
+    }
+    stop(&server, t);
+}

@@ -20,6 +20,16 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
+# Docs that must exist — the glob below silently skips a deleted file, so
+# the operator-manual set is pinned here.
+REQUIRED_DOCS = [
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "docs/QUERY_LANGUAGE.md",
+    "docs/SERVER_PROTOCOL.md",
+    "docs/OBSERVABILITY.md",
+]
+
 # Relative markdown links: [text](target). Skips http(s), mailto, and
 # pure intra-page anchors.
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
@@ -72,6 +82,9 @@ def check_file(doc: Path):
 
 def main() -> int:
     all_problems = []
+    for req in REQUIRED_DOCS:
+        if not (ROOT / req).exists():
+            all_problems.append(f"missing expected doc: {req}")
     for doc in doc_files():
         if not doc.exists():
             all_problems.append(f"missing expected doc: {doc.relative_to(ROOT)}")
