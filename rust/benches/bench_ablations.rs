@@ -54,8 +54,8 @@ fn main() {
     std::fs::create_dir_all(&dir).unwrap();
     for codec in [Codec::None, Codec::Zstd(3), Codec::Flate] {
         let path = dir.join(format!("dy_abl_{}.froot", codec.name()));
-        let bytes = write_dataset(&path, &dy, WriteOptions { codec, basket_items: 256 * 1024 })
-            .unwrap();
+        let wopts = WriteOptions { codec, basket_items: 256 * 1024, ..WriteOptions::default() };
+        let bytes = write_dataset(&path, &dy, wopts).unwrap();
         b.run(&format!("selective read, codec {} ({} MiB file)", codec.name(), bytes >> 20), n, || {
             let mut r = DatasetReader::open(&path).unwrap();
             let data = r.read_selective(&["muons.pt"]).unwrap();

@@ -34,13 +34,13 @@ fn main() {
     let dir = std::env::temp_dir().join("hepq-bench");
     std::fs::create_dir_all(&dir).unwrap();
     let full_path = dir.join("dy_fig1.froot");
-    write_dataset(&full_path, &cs, WriteOptions { codec: Codec::None, basket_items: 256 * 1024 })
-        .unwrap();
+    let wopts =
+        WriteOptions { codec: Codec::None, basket_items: 256 * 1024, ..WriteOptions::default() };
+    write_dataset(&full_path, &cs, wopts).unwrap();
     // The slim file: exactly the branches the heaviest function needs.
     let slim = cs.project(&["muons.pt", "muons.eta", "muons.phi"]);
     let slim_path = dir.join("dy_fig1_slim.froot");
-    write_dataset(&slim_path, &slim, WriteOptions { codec: Codec::None, basket_items: 256 * 1024 })
-        .unwrap();
+    write_dataset(&slim_path, &slim, wopts).unwrap();
 
     #[cfg(feature = "pjrt")]
     let pjrt = {

@@ -39,8 +39,12 @@ fn main() {
     let dir = std::env::temp_dir().join("hepq-bench");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("ttbar_table1.froot");
-    write_dataset(&path, &cs, WriteOptions { codec: Codec::None, basket_items: 64 * 1024 })
-        .unwrap();
+    write_dataset(
+        &path,
+        &cs,
+        WriteOptions { codec: Codec::None, basket_items: 64 * 1024, checksums: true },
+    )
+    .unwrap();
 
     let q = Query::new(QueryKind::FlatHist, "tt", "jets");
     let mut b = Bench::new("table1");
@@ -68,6 +72,33 @@ fn main() {
 
     // Rung 3: load ONLY jets.pt, then fill.
     b.run("3 load jet pt branch only + fill", n, || {
+        let mut r = DatasetReader::open(&path).unwrap();
+        let data = r.read_selective(&["jets.pt"]).unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        columnar_exec::run(q.kind, &data, "jets", &mut h).unwrap();
+        black_box(h.total());
+    });
+
+    // Rungs 3b/3c: the selective read again, unverified legacy v1 layout vs
+    // the checksummed v2 layout (what rung 3 reads) — isolates what the
+    // per-basket CRC32 verification costs a warm scan. Target: <= 2%.
+    let path_v1 = dir.join("ttbar_table1_nocrc.froot");
+    write_dataset(
+        &path_v1,
+        &cs,
+        WriteOptions { codec: Codec::None, basket_items: 64 * 1024, checksums: false },
+    )
+    .unwrap();
+    let crc_off_name = "3b load jet pt branch, checksums off (v1 layout)";
+    b.run(crc_off_name, n, || {
+        let mut r = DatasetReader::open(&path_v1).unwrap();
+        let data = r.read_selective(&["jets.pt"]).unwrap();
+        let mut h = H1::new(64, q.lo, q.hi);
+        columnar_exec::run(q.kind, &data, "jets", &mut h).unwrap();
+        black_box(h.total());
+    });
+    let crc_on_name = "3c load jet pt branch, checksums verified (v2 layout)";
+    b.run(crc_on_name, n, || {
         let mut r = DatasetReader::open(&path).unwrap();
         let data = r.read_selective(&["jets.pt"]).unwrap();
         let mut h = H1::new(64, q.lo, q.hi);
@@ -759,6 +790,14 @@ for event in dataset:
             if ttl_stall { "  ** TTL-SCALE STALL **" } else { "" }
         );
     }
+
+    let crc_overhead_pct =
+        (b.get(crc_off_name).unwrap().rate() / b.get(crc_on_name).unwrap().rate() - 1.0) * 100.0;
+    eprintln!(
+        "checksum check: verified / unverified selective-read slowdown = {crc_overhead_pct:.2}% \
+         (target <= 2%){}",
+        if crc_overhead_pct > 2.0 { "  ** BELOW TARGET **" } else { "" }
+    );
 
     // Shape assertions (soft: print, don't panic, but flag).
     let r1 = b.get("1 full framework (all branches + modules)").unwrap().rate();

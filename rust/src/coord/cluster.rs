@@ -38,11 +38,13 @@ use crate::coord::health::WorkerHealth;
 use crate::coord::scheduler::{affinity_owners, Policy};
 use crate::engine::compiled_exec::source_for;
 use crate::engine::{Backend, Query};
+use crate::format::{fault, FormatError};
 use crate::hist::{merge_aux, Sink, H1};
 use crate::index::ZoneMap;
 use crate::obs::trace::{Span, TraceMap};
 use crate::queryir::{self, predicate, ZoneDecision};
-use std::collections::{BTreeMap, HashMap};
+use crate::util::rng::Pcg32;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -67,6 +69,13 @@ pub enum ClusterError {
     },
     /// The progress callback requested cancellation.
     Cancelled,
+    /// Some partitions were unreadable on every storage replica and the
+    /// query did not opt into partial results ([`Query::allow_partial`]).
+    /// Carries the per-partition storage errors — never a silent gap.
+    PartitionsFailed {
+        query_id: u64,
+        failed: Vec<(usize, String)>,
+    },
     Other(String),
 }
 
@@ -89,6 +98,16 @@ impl fmt::Display for ClusterError {
                 )
             }
             ClusterError::Cancelled => f.write_str("cancelled"),
+            ClusterError::PartitionsFailed { query_id, failed } => {
+                let parts: Vec<String> = failed.iter().map(|(p, e)| format!("{p}: {e}")).collect();
+                write!(
+                    f,
+                    "query {query_id}: {} partition(s) unreadable on every replica [{}] \
+                     (set allow_partial to accept a degraded result)",
+                    failed.len(),
+                    parts.join("; ")
+                )
+            }
             ClusterError::Other(s) => f.write_str(s),
         }
     }
@@ -138,6 +157,23 @@ pub struct PartitionData {
     pub version: u64,
 }
 
+/// Transient-fault retry budget per storage replica: I/O hiccups get this
+/// many capped, jittered retries before the fetch fails over.
+const FETCH_RETRIES: u32 = 3;
+
+/// Capped exponential backoff with deterministic jitter for transient
+/// storage faults — the same shape the server's reconnecting client uses,
+/// scaled down to storage-read latencies (5..200 ms).
+fn fetch_backoff(tag: &str, attempt: u32) -> Duration {
+    let base = 5u64 << attempt.min(5);
+    let mut h = 0xC0FF_EEu64;
+    for b in tag.bytes() {
+        h = h.wrapping_mul(131).wrapping_add(b as u64);
+    }
+    let jitter = Pcg32::new(h ^ attempt as u64).below(base as u32 / 2 + 1) as u64;
+    Duration::from_millis((base + jitter).min(200))
+}
+
 /// The shared dataset store ("remote storage" + partition index).
 pub struct DatasetCatalog {
     datasets: RwLock<HashMap<String, DatasetEntry>>,
@@ -145,6 +181,17 @@ pub struct DatasetCatalog {
     pub fetch_delay_per_mib: Duration,
     pub fetches: AtomicU64,
     pub bytes_fetched: AtomicU64,
+    /// Storage replicas each partition can be fetched from (the k of the
+    /// affinity replication factor). Faults are independent per replica,
+    /// so a corrupt copy fails over to a clean one.
+    pub storage_replicas: usize,
+    /// Replicas known corrupt, keyed (dataset, version, partition,
+    /// replica). Version-aware: re-registering bumps the version, so
+    /// stale entries stop matching (and are purged for that dataset).
+    quarantined: RwLock<HashSet<(String, u64, usize, usize)>>,
+    corruption_detected: AtomicU64,
+    read_retries: AtomicU64,
+    quarantine_events: AtomicU64,
 }
 
 impl DatasetCatalog {
@@ -154,6 +201,11 @@ impl DatasetCatalog {
             fetch_delay_per_mib,
             fetches: AtomicU64::new(0),
             bytes_fetched: AtomicU64::new(0),
+            storage_replicas: 2,
+            quarantined: RwLock::new(HashSet::new()),
+            corruption_detected: AtomicU64::new(0),
+            read_retries: AtomicU64::new(0),
+            quarantine_events: AtomicU64::new(0),
         }
     }
 
@@ -171,6 +223,12 @@ impl DatasetCatalog {
         let zones: Vec<Arc<ZoneMap>> = parts.iter().map(|p| Arc::new(ZoneMap::build(p))).collect();
         let mut g = self.datasets.write().unwrap();
         let version = g.get(name).map(|e| e.version + 1).unwrap_or(1);
+        // Fresh bytes: quarantine entries for older versions of this
+        // dataset can never match again — drop them.
+        self.quarantined
+            .write()
+            .unwrap()
+            .retain(|(n, v, _, _)| n != name || *v >= version);
         g.insert(
             name.to_string(),
             DatasetEntry {
@@ -218,19 +276,98 @@ impl DatasetCatalog {
         self.datasets.read().unwrap().get(name).map(|e| e.zones.clone())
     }
 
-    /// Remote fetch: pays the simulated store latency and a deep copy of
-    /// the columns. The zone map rides along by reference — it is derived
-    /// metadata a real store would serve from its catalog, not the bulk
-    /// bytes the latency models.
-    pub fn fetch(&self, name: &str, part: usize) -> Result<PartitionData, String> {
+    /// Remote fetch with end-to-end integrity handling: *transient* faults
+    /// (I/O hiccups) get up to [`FETCH_RETRIES`] capped, jittered retries;
+    /// *permanent* faults (corruption, truncation) quarantine the replica
+    /// and fail over to the next of [`DatasetCatalog::storage_replicas`].
+    /// Only when no replica is clean does the typed storage error of the
+    /// last one surface — the caller turns it into a structured subtask
+    /// failure, never a panic.
+    pub fn fetch(&self, name: &str, part: usize) -> Result<PartitionData, FormatError> {
+        self.fetch_traced(name, part, &Span::none())
+    }
+
+    /// [`DatasetCatalog::fetch`] with a trace span: retry, quarantine and
+    /// failover decisions join the query's trace tree as events.
+    pub fn fetch_traced(
+        &self,
+        name: &str,
+        part: usize,
+        span: &Span,
+    ) -> Result<PartitionData, FormatError> {
+        let version = self.version(name).unwrap_or(0);
+        let mut last_err: Option<FormatError> = None;
+        for replica in 0..self.storage_replicas.max(1) {
+            let qkey = (name.to_string(), version, part, replica);
+            if self.quarantined.read().unwrap().contains(&qkey) {
+                continue;
+            }
+            let tag = format!("fetch:{name}:part{part}:replica{replica}");
+            let mut attempt = 0u32;
+            loop {
+                match self.fetch_replica(name, part, &tag) {
+                    Ok(data) => return Ok(data),
+                    Err(e) if e.is_transient() && attempt < FETCH_RETRIES => {
+                        self.read_retries.fetch_add(1, Ordering::Relaxed);
+                        if span.is_on() {
+                            span.event("read_retry", Some(format!("{tag} attempt {attempt}: {e}")));
+                        }
+                        std::thread::sleep(fetch_backoff(&tag, attempt));
+                        attempt += 1;
+                    }
+                    Err(e) => {
+                        if e.is_transient() {
+                            // Retries exhausted: fail over, but do not
+                            // quarantine — the bytes themselves are fine.
+                            if span.is_on() {
+                                span.event("replica_failover", Some(format!("{tag}: {e}")));
+                            }
+                        } else {
+                            if matches!(e, FormatError::Corrupt { .. }) {
+                                self.corruption_detected.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // Permanent: these bytes will never improve.
+                            if self.quarantined.write().unwrap().insert(qkey.clone()) {
+                                self.quarantine_events.fetch_add(1, Ordering::Relaxed);
+                            }
+                            if span.is_on() {
+                                span.event("quarantine", Some(format!("{tag}: {e}")));
+                            }
+                        }
+                        last_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            FormatError::truncated(format!(
+                "dataset '{name}' partition {part}: every storage replica is quarantined"
+            ))
+        }))
+    }
+
+    /// One attempt against one replica: pays the simulated store latency
+    /// and a deep copy of the columns. The zone map rides along by
+    /// reference — it is derived metadata a real store would serve from
+    /// its catalog, not the bulk bytes the latency models. `tag` is the
+    /// fault-injection seam (outcome-level: catalog partitions are
+    /// in-memory columns, not serialized bytes).
+    fn fetch_replica(
+        &self,
+        name: &str,
+        part: usize,
+        tag: &str,
+    ) -> Result<PartitionData, FormatError> {
+        fault::on_op(tag)?;
         let (src, zones, version) = {
             let g = self.datasets.read().unwrap();
-            let e = g.get(name).ok_or_else(|| format!("no dataset '{name}'"))?;
-            let cs = e
-                .parts
-                .get(part)
-                .ok_or_else(|| format!("dataset '{name}' has no partition {part}"))?
-                .clone();
+            let e = g.get(name).ok_or_else(|| {
+                FormatError::truncated(format!("no dataset '{name}' in the catalog"))
+            })?;
+            let cs = e.parts.get(part).cloned().ok_or_else(|| {
+                FormatError::truncated(format!("dataset '{name}' has no partition {part}"))
+            })?;
             let zones = e
                 .zones
                 .get(part)
@@ -253,6 +390,30 @@ impl DatasetCatalog {
             zones,
             version,
         })
+    }
+
+    /// Replicas currently quarantined as corrupt (dataset, version,
+    /// partition, replica) — the degraded-storage inventory an operator
+    /// would page on.
+    pub fn quarantined(&self) -> Vec<(String, u64, usize, usize)> {
+        let mut v: Vec<_> = self.quarantined.read().unwrap().iter().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Permanent-corruption detections at fetch time (cumulative).
+    pub fn corruption_detected(&self) -> u64 {
+        self.corruption_detected.load(Ordering::Relaxed)
+    }
+
+    /// Transient-fault retries at fetch time (cumulative).
+    pub fn read_retries(&self) -> u64 {
+        self.read_retries.load(Ordering::Relaxed)
+    }
+
+    /// Replicas ever quarantined (cumulative, survives re-registration).
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events.load(Ordering::Relaxed)
     }
 }
 
@@ -435,7 +596,9 @@ fn worker_loop(ctx: WorkerCtx) {
         }
         if let Err(e) = run_subtask(&ctx, &grant.task, &mut cache) {
             crate::log_warn!("worker {}: subtask {:?} failed: {e}", ctx.id, grant.task.id);
-            // Leave the claim to expire so another worker retries.
+            // Storage failures already published an error document and
+            // completed the claim; anything else leaves the claim to
+            // expire so another worker retries.
         }
     }
     // Final stats flush.
@@ -492,12 +655,41 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
         }
         None => {
             let fetch_span = span.child("fetch");
-            let p = ctx.catalog.fetch(&task.dataset, task.id.partition)?;
-            cache.put(key, p.clone());
-            if fetch_span.is_on() {
-                fetch_span.end_meta(format!("bytes={}", p.cs.byte_size()));
+            match ctx.catalog.fetch_traced(&task.dataset, task.id.partition, &fetch_span) {
+                Ok(p) => {
+                    cache.put(key, p.clone());
+                    if fetch_span.is_on() {
+                        fetch_span.end_meta(format!("bytes={}", p.cs.byte_size()));
+                    }
+                    p
+                }
+                Err(e) => {
+                    // No clean replica. Publish a structured *error
+                    // document* per member and complete the claim, so the
+                    // waiter reacts now (degrade or fail) instead of after
+                    // the claim TTL — retry and failover already happened
+                    // inside the catalog, re-running here cannot succeed.
+                    for (qid, q) in &members {
+                        ctx.store.insert(PartialDoc {
+                            id: SubtaskId { query_id: *qid, partition: task.id.partition },
+                            worker: ctx.id,
+                            hist: H1::new(q.n_bins, q.lo, q.hi),
+                            aux: Vec::new(),
+                            events_processed: 0,
+                            chunks: Default::default(),
+                            error: Some(e.to_string()),
+                        });
+                    }
+                    ctx.board.complete_by(&task.id, ctx.id);
+                    if fetch_span.is_on() {
+                        fetch_span.end_meta(format!("failed: {e}"));
+                    }
+                    if span.is_on() {
+                        span.end_meta("fetch failed".to_string());
+                    }
+                    return Err(e.to_string());
+                }
             }
-            p
         }
     };
     let mut hists: Vec<H1> = members
@@ -550,6 +742,7 @@ fn run_subtask(ctx: &WorkerCtx, task: &Subtask, cache: &mut PartitionCache) -> R
             aux,
             events_processed: part.cs.n_events as u64,
             chunks,
+            error: None,
         });
     }
     publish_span.end();
@@ -628,6 +821,7 @@ impl Default for ClusterConfig {
     }
 }
 
+#[derive(Clone, Debug)]
 pub struct QueryResult {
     pub hist: H1,
     /// Aux sinks (`fill2`/`profile`/`fill_vars` reducers) in fill-site
@@ -645,6 +839,10 @@ pub struct QueryResult {
     /// Chunk-level skipping across this query's subtasks (the per-query
     /// face of the process-wide counters in the server's `stats` op).
     pub chunks: crate::queryir::IndexedRun,
+    /// Partitions unreadable on every storage replica, with the storage
+    /// error. Non-empty only under [`Query::allow_partial`] — otherwise
+    /// the wait returns [`ClusterError::PartitionsFailed`] instead.
+    pub failed: Vec<(usize, String)>,
 }
 
 pub struct QueryHandle {
@@ -709,14 +907,20 @@ pub struct Cluster {
     /// Queries cancelled mid-wait (client gone): solo cancels and fused
     /// group members dropped via [`Cluster::wait_member_with_progress`].
     queries_cancelled: AtomicU64,
+    /// Queries that returned a degraded (allow_partial) result.
+    partial_queries: AtomicU64,
     /// Live traced queries, shared with every worker (see [`WorkerCtx`]).
     spans: Arc<TraceMap>,
 }
 
 impl Cluster {
     pub fn start(config: ClusterConfig, backend: Backend) -> Cluster {
+        let mut catalog = DatasetCatalog::new(config.fetch_delay_per_mib);
+        // Storage replication mirrors the affinity replication factor
+        // (k replicas per partition; 2 by default).
+        catalog.storage_replicas = config.replication.max(1);
         let cluster = Cluster {
-            catalog: Arc::new(DatasetCatalog::new(config.fetch_delay_per_mib)),
+            catalog: Arc::new(catalog),
             board: Arc::new(TaskBoard::with_grace(config.claim_ttl, config.affinity_grace)),
             store: Arc::new(DocStore::new()),
             queries: Arc::new(RwLock::new(HashMap::new())),
@@ -732,6 +936,7 @@ impl Cluster {
             query_timeouts: AtomicU64::new(0),
             submits_rejected: AtomicU64::new(0),
             queries_cancelled: AtomicU64::new(0),
+            partial_queries: AtomicU64::new(0),
             spans: Arc::new(TraceMap::new()),
         };
         for _ in 0..config.n_workers {
@@ -1098,6 +1303,11 @@ impl Cluster {
         self.queries_cancelled.load(Ordering::Relaxed)
     }
 
+    /// Queries that returned a degraded (allow_partial) result.
+    pub fn partial_queries(&self) -> u64 {
+        self.partial_queries.load(Ordering::Relaxed)
+    }
+
     /// Wait for a query, merging partials incrementally. `progress` is
     /// invoked after every merge round with (merged_partitions, total,
     /// current histogram); returning false cancels the query.
@@ -1156,9 +1366,10 @@ impl Cluster {
         let wspan = self.spans.get(handle.query_id);
         let mut preview = H1::new(query.n_bins, query.lo, query.hi);
         let mut parts: BTreeMap<usize, (H1, Vec<Sink>)> = BTreeMap::new();
+        let mut failed: BTreeMap<usize, String> = BTreeMap::new();
         let mut events = 0u64;
         let mut chunks = crate::queryir::IndexedRun::default();
-        while parts.len() < handle.partitions {
+        while parts.len() + failed.len() < handle.partitions {
             if handle.submitted.elapsed() > self.config.query_deadline {
                 let outstanding = self.board.outstanding_for(handle.query_id);
                 self.query_timeouts.fetch_add(1, Ordering::Relaxed);
@@ -1195,6 +1406,16 @@ impl Cluster {
                 .store
                 .drain_wait(handle.query_id, Duration::from_millis(50));
             for d in docs {
+                if let Some(err) = d.error {
+                    if wspan.is_on() {
+                        wspan.event(
+                            "partition_failed",
+                            Some(format!("partition={} {err}", d.id.partition)),
+                        );
+                    }
+                    failed.insert(d.id.partition, err);
+                    continue;
+                }
                 preview.merge(&d.hist)?;
                 events += d.events_processed;
                 chunks.absorb(&d.chunks);
@@ -1213,6 +1434,23 @@ impl Cluster {
         }
         let merged = parts.len();
         self.finish_query(handle.query_id);
+        if !failed.is_empty() {
+            if !query.allow_partial {
+                // Degradation was not requested: the whole query fails,
+                // with the per-partition storage errors attached.
+                return Err(ClusterError::PartitionsFailed {
+                    query_id: handle.query_id,
+                    failed: failed.into_iter().collect(),
+                });
+            }
+            self.partial_queries.fetch_add(1, Ordering::Relaxed);
+            if wspan.is_on() {
+                wspan.event(
+                    "partial_result",
+                    Some(format!("failed={} merged={merged}", failed.len())),
+                );
+            }
+        }
         let reduce_span = wspan.child("reduce");
         let mut hist = H1::new(query.n_bins, query.lo, query.hi);
         hist.merge_many(parts.values().map(|(h, _)| h))?;
@@ -1237,6 +1475,7 @@ impl Cluster {
             skipped: handle.skipped,
             events,
             chunks,
+            failed: failed.into_iter().collect(),
         })
     }
 
@@ -1684,6 +1923,111 @@ mod tests {
         assert_eq!(id, 1);
         let res = c.run(&q).unwrap();
         assert_eq!(res.partitions, 8);
+        c.shutdown();
+    }
+
+    fn fast_cluster() -> Cluster {
+        Cluster::start(
+            ClusterConfig {
+                n_workers: 2,
+                cache_bytes_per_worker: 64 << 20,
+                policy: Policy::AnyPull,
+                fetch_delay_per_mib: Duration::ZERO,
+                ..ClusterConfig::default()
+            },
+            Backend::Columnar,
+        )
+    }
+
+    /// Transient I/O faults at the storage layer are retried with backoff
+    /// and the query still returns the exact histogram — the faults are
+    /// visible only in the retry counters, never in the result.
+    #[test]
+    fn transient_fetch_faults_retry_to_exact_result() {
+        use crate::format::{fault, FaultKind, FaultRule};
+        let c = fast_cluster();
+        let cs = generate_drellyan(6_000, 77);
+        c.catalog.register("dy_retry", cs.clone(), 1_000);
+        let faults = fault::inject(FaultRule::new("fetch:dy_retry:part3", FaultKind::Eio, 2));
+        let q = Query::new(QueryKind::MaxPt, "dy_retry", "muons");
+        let res = c.run(&q).unwrap();
+        let mut local = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::Columnar.run(&q, &cs, &mut local).unwrap();
+        assert_eq!(res.hist.bins, local.bins, "retried result must be bit-exact");
+        assert!(res.failed.is_empty());
+        assert_eq!(faults.fired(), 2);
+        assert!(c.catalog.read_retries() >= 2);
+        assert!(c.catalog.quarantined().is_empty(), "transient faults never quarantine");
+        c.shutdown();
+    }
+
+    /// A corrupt replica is quarantined and the fetch fails over to the
+    /// clean one: the result is exact and the quarantine inventory names
+    /// exactly the bad (dataset, version, partition, replica).
+    #[test]
+    fn corrupt_replica_quarantines_and_fails_over() {
+        use crate::format::{fault, FaultKind, FaultRule};
+        let c = fast_cluster();
+        let cs = generate_drellyan(6_000, 78);
+        c.catalog.register("dy_quar", cs.clone(), 1_000);
+        let _faults = fault::inject(FaultRule::new(
+            "fetch:dy_quar:part2:replica0",
+            FaultKind::Corrupt,
+            1000,
+        ));
+        let q = Query::new(QueryKind::MaxPt, "dy_quar", "muons");
+        let res = c.run(&q).unwrap();
+        let mut local = H1::new(q.n_bins, q.lo, q.hi);
+        Backend::Columnar.run(&q, &cs, &mut local).unwrap();
+        assert_eq!(res.hist.bins, local.bins, "failover result must be bit-exact");
+        assert!(res.failed.is_empty());
+        assert!(c.catalog.corruption_detected() >= 1);
+        assert_eq!(c.catalog.quarantined(), vec![("dy_quar".to_string(), 1, 2, 0)]);
+        // Re-registration bumps the version and clears stale quarantine.
+        c.catalog.register("dy_quar", cs, 1_000);
+        assert!(c.catalog.quarantined().is_empty());
+        c.shutdown();
+    }
+
+    /// When every replica of one partition is bad, the query fails with a
+    /// structured error naming the partition — or, with `allow_partial`,
+    /// degrades to the healthy partitions plus an error manifest. Either
+    /// way: no panic, no silent gap, no claim-TTL stall.
+    #[test]
+    fn unreadable_partition_fails_structured_then_degrades() {
+        use crate::format::{fault, FaultKind, FaultRule};
+        let c = fast_cluster();
+        let cs = generate_drellyan(6_000, 79);
+        c.catalog.register("dy_part", cs.clone(), 1_000);
+        let _faults =
+            fault::inject(FaultRule::new("fetch:dy_part:part1:", FaultKind::Corrupt, 1000));
+        let q = Query::new(QueryKind::MaxPt, "dy_part", "muons");
+        match c.run(&q) {
+            Err(ClusterError::PartitionsFailed { failed, .. }) => {
+                assert_eq!(failed.len(), 1);
+                assert_eq!(failed[0].0, 1);
+                assert!(failed[0].1.contains("corrupt"), "error names the cause: {}", failed[0].1);
+            }
+            Err(other) => panic!("expected PartitionsFailed, got {other}"),
+            Ok(_) => panic!("expected PartitionsFailed, got a full result"),
+        }
+        // Degraded mode: merged histogram over the healthy partitions plus
+        // the per-partition error manifest.
+        let res = c.run(&q.clone().with_allow_partial(true)).unwrap();
+        assert_eq!(res.partitions, 5);
+        assert_eq!(res.failed.len(), 1);
+        assert_eq!(res.failed[0].0, 1);
+        assert_eq!(c.partial_queries(), 1);
+        // What *was* merged is exact: local reference minus partition 1.
+        let mut local = H1::new(q.n_bins, q.lo, q.hi);
+        for (i, p) in cs.partition(1_000).iter().enumerate() {
+            if i != 1 {
+                let mut h = H1::new(q.n_bins, q.lo, q.hi);
+                Backend::Columnar.run(&q, p, &mut h).unwrap();
+                local.merge(&h).unwrap();
+            }
+        }
+        assert_eq!(res.hist.bins, local.bins);
         c.shutdown();
     }
 }

@@ -31,6 +31,12 @@ pub struct PartialDoc {
     /// What zone-map chunk skipping did while producing this partial —
     /// rides along so the aggregator can report per-query skip counters.
     pub chunks: crate::queryir::IndexedRun,
+    /// Set when the subtask could not produce a histogram (every storage
+    /// replica of its partition failed): `hist` is empty and the waiter
+    /// either degrades to a partial result or fails the query. Publishing
+    /// an error document (instead of leaving the claim to expire) is what
+    /// lets the waiter react immediately rather than after the claim TTL.
+    pub error: Option<String>,
 }
 
 #[derive(Default)]
@@ -160,6 +166,7 @@ mod tests {
             aux: Vec::new(),
             events_processed: 10,
             chunks: Default::default(),
+            error: None,
         }
     }
 

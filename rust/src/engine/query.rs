@@ -99,6 +99,10 @@ pub struct Query {
     pub y_bins: usize,
     pub y_lo: f64,
     pub y_hi: f64,
+    /// Accept a degraded answer: when some partitions have no readable
+    /// replica, return the merged histogram over the healthy ones plus a
+    /// per-partition error manifest instead of failing the whole query.
+    pub allow_partial: bool,
 }
 
 impl Query {
@@ -115,6 +119,7 @@ impl Query {
             y_bins: 32,
             y_lo: 0.0,
             y_hi: 128.0,
+            allow_partial: false,
         }
     }
 
@@ -131,6 +136,7 @@ impl Query {
             y_bins: 32,
             y_lo: 0.0,
             y_hi: 128.0,
+            allow_partial: false,
         }
     }
 
@@ -146,6 +152,12 @@ impl Query {
         self.y_bins = y_bins;
         self.y_lo = y_lo;
         self.y_hi = y_hi;
+        self
+    }
+
+    /// Tolerate unreadable partitions, returning a partial result.
+    pub fn with_allow_partial(mut self, yes: bool) -> Query {
+        self.allow_partial = yes;
         self
     }
 
@@ -180,6 +192,9 @@ impl Query {
             pairs.push(("y_lo", Json::num(self.y_lo)));
             pairs.push(("y_hi", Json::num(self.y_hi)));
         }
+        if self.allow_partial {
+            pairs.push(("allow_partial", Json::Bool(true)));
+        }
         Json::obj(pairs)
     }
 
@@ -206,6 +221,7 @@ impl Query {
             y_bins: j.get("y_bins").and_then(|v| v.as_usize()).unwrap_or(32),
             y_lo: j.get("y_lo").and_then(|v| v.as_f64()).unwrap_or(0.0),
             y_hi: j.get("y_hi").and_then(|v| v.as_f64()).unwrap_or(128.0),
+            allow_partial: j.get("allow_partial").and_then(|v| v.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -247,6 +263,18 @@ mod tests {
         assert!(d.to_json().get("y_bins").is_none());
         let j = Json::parse(&d.to_json().to_string()).unwrap();
         assert_eq!(Query::from_json(&j).unwrap(), d);
+    }
+
+    #[test]
+    fn allow_partial_roundtrips_and_default_stays_compact() {
+        let d = Query::new(QueryKind::MaxPt, "dy", "muons");
+        // Off the wire by default: cache keys for classic queries unchanged.
+        assert!(d.to_json().get("allow_partial").is_none());
+        let q = d.clone().with_allow_partial(true);
+        let j = Json::parse(&q.to_json().to_string()).unwrap();
+        let back = Query::from_json(&j).unwrap();
+        assert!(back.allow_partial);
+        assert_eq!(back, q);
     }
 
     #[test]

@@ -1,0 +1,61 @@
+//! CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the basket and
+//! header checksum for femto-ROOT v2.
+//!
+//! In-repo like the LZ77 codec: no external crates. The lookup table is
+//! built in a `const fn` so it costs nothing at startup and the whole
+//! thing stays dependency-free. This is the same CRC as zlib/gzip/XRootD
+//! ("adler-less" variant aside), so v2 files can be cross-checked with
+//! standard tools.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC32 of `bytes` (IEEE, init 0xFFFFFFFF, final xor 0xFFFFFFFF).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard CRC32 check values (same as zlib's crc32()).
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let base = b"femto-ROOT basket payload".to_vec();
+        let c0 = crc32(&base);
+        for byte in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), c0, "flip at byte {byte} bit {bit} undetected");
+            }
+        }
+    }
+}

@@ -7,8 +7,9 @@
 //! Both codec names now run on **femtolz**, an in-repo LZ77 with an
 //! LZ4-style token stream: `Flate` uses a small hash table (fast, weaker),
 //! `Zstd(level)` scales the hash table with the level (slower, stronger).
-//! The decoder is fully bounds-checked: corrupt baskets produce `Err`,
-//! never a panic or out-of-range copy.
+//! The decoder is fully bounds-checked and allocation-capped: corrupt or
+//! hostile baskets produce a typed [`FormatError`], never a panic, an
+//! out-of-range copy, or an unbounded allocation.
 //!
 //! Compatibility note: the codec *tags* ("zstd"/"flate") are kept although
 //! the algorithm changed — no build of this crate ever shipped before the
@@ -22,6 +23,8 @@
 //!           then (unless the stream ends) offset u16 (1-based back
 //!           distance) and the match continues from `out_len - offset`.
 
+use crate::format::error::FormatError;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Codec {
     None,
@@ -32,6 +35,16 @@ pub enum Codec {
 const MIN_MATCH: usize = 4;
 const MAX_OFFSET: usize = 65_535;
 
+/// Hard cap on a basket's declared decompressed size. A hostile header can
+/// claim any `raw_size` it likes; rejecting absurd claims *before* any
+/// allocation keeps a corrupt file from OOMing the worker. Real baskets
+/// are a few MiB, so 1 GiB leaves orders of magnitude of headroom.
+pub const MAX_RAW_SIZE: usize = 1 << 30;
+
+/// Initial allocation cap: growth beyond this is earned by actually
+/// producing output, so a tiny hostile basket can't reserve gigabytes.
+const INITIAL_ALLOC: usize = 1 << 20;
+
 impl Codec {
     pub fn name(&self) -> String {
         match self {
@@ -41,6 +54,9 @@ impl Codec {
         }
     }
 
+    // Kept `Result<_, String>`: this parses CLI/JSON codec *names*, which
+    // is user input, not on-disk bytes — the FormatError taxonomy does not
+    // apply.
     pub fn from_name(s: &str) -> Result<Codec, String> {
         if s == "none" {
             Ok(Codec::None)
@@ -67,16 +83,36 @@ impl Codec {
         }
     }
 
-    pub fn compress(&self, raw: &[u8]) -> Result<Vec<u8>, String> {
+    pub fn compress(&self, raw: &[u8]) -> Result<Vec<u8>, FormatError> {
         match self {
             Codec::None => Ok(raw.to_vec()),
             _ => Ok(lz_compress(raw, self.hash_bits())),
         }
     }
 
-    pub fn decompress(&self, comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
+    /// Decompress one basket. `raw_size` is the header's declared output
+    /// size; corruption offsets in errors are relative to the basket start
+    /// (callers rebase onto the absolute file position).
+    pub fn decompress(&self, comp: &[u8], raw_size: usize) -> Result<Vec<u8>, FormatError> {
+        if raw_size > MAX_RAW_SIZE {
+            return Err(FormatError::corrupt(
+                format!("declared raw size {raw_size} exceeds the {MAX_RAW_SIZE} B cap"),
+                0,
+            ));
+        }
         match self {
-            Codec::None => Ok(comp.to_vec()),
+            Codec::None => {
+                if comp.len() != raw_size {
+                    return Err(FormatError::corrupt(
+                        format!(
+                            "stored basket is {} bytes, header declares {raw_size}",
+                            comp.len()
+                        ),
+                        0,
+                    ));
+                }
+                Ok(comp.to_vec())
+            }
             _ => lz_decompress(comp, raw_size),
         }
     }
@@ -169,13 +205,18 @@ fn lz_compress(raw: &[u8], hash_bits: u32) -> Vec<u8> {
     out
 }
 
-fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
-    let mut out: Vec<u8> = Vec::with_capacity(raw_size);
+fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, FormatError> {
+    // The initial reservation is capped: a 20-byte hostile basket claiming
+    // a huge raw_size gets at most INITIAL_ALLOC up front, and every later
+    // grow is backed by bytes already legitimately produced.
+    let mut out: Vec<u8> = Vec::with_capacity(raw_size.min(INITIAL_ALLOC));
     let mut sp = 0usize;
-    let read_ext = |sp: &mut usize| -> Result<usize, String> {
+    let read_ext = |sp: &mut usize| -> Result<usize, FormatError> {
         let mut total = 0usize;
         loop {
-            let b = *comp.get(*sp).ok_or("truncated length run")?;
+            let b = *comp
+                .get(*sp)
+                .ok_or_else(|| FormatError::corrupt("truncated length run", *sp as u64))?;
             *sp += 1;
             total += b as usize;
             if b != 255 {
@@ -191,9 +232,17 @@ fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
         if lit == 15 {
             lit += read_ext(&mut sp)?;
         }
-        let lit_end = sp.checked_add(lit).ok_or("literal length overflow")?;
+        let lit_end = sp
+            .checked_add(lit)
+            .ok_or_else(|| FormatError::corrupt("literal length overflow", sp as u64))?;
         if lit_end > comp.len() {
-            return Err("literal run past end of basket".to_string());
+            return Err(FormatError::corrupt("literal run past end of basket", sp as u64));
+        }
+        if out.len() + lit > raw_size {
+            return Err(FormatError::corrupt(
+                "decompressed data exceeds declared raw size",
+                sp as u64,
+            ));
         }
         out.extend_from_slice(&comp[sp..lit_end]);
         sp = lit_end;
@@ -202,7 +251,7 @@ fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
         }
         // Match.
         if sp + 2 > comp.len() {
-            return Err("truncated match offset".to_string());
+            return Err(FormatError::corrupt("truncated match offset", sp as u64));
         }
         let offset = u16::from_le_bytes([comp[sp], comp[sp + 1]]) as usize;
         sp += 2;
@@ -212,13 +261,18 @@ fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
         }
         mlen += MIN_MATCH;
         if offset == 0 || offset > out.len() {
-            return Err(format!(
-                "bad match offset {offset} at output position {}",
-                out.len()
+            // An out-of-range back-reference: points before the start of
+            // the output (or nowhere at all).
+            return Err(FormatError::corrupt(
+                format!("bad match offset {offset} at output position {}", out.len()),
+                sp as u64,
             ));
         }
         if out.len() + mlen > raw_size {
-            return Err("decompressed data exceeds declared raw size".to_string());
+            return Err(FormatError::corrupt(
+                "decompressed data exceeds declared raw size",
+                sp as u64,
+            ));
         }
         // Byte-by-byte copy: overlapping matches (offset < len) replicate.
         let start = out.len() - offset;
@@ -228,9 +282,9 @@ fn lz_decompress(comp: &[u8], raw_size: usize) -> Result<Vec<u8>, String> {
         }
     }
     if out.len() != raw_size {
-        return Err(format!(
-            "decompressed {} bytes, expected {raw_size}",
-            out.len()
+        return Err(FormatError::corrupt(
+            format!("decompressed {} bytes, expected {raw_size}", out.len()),
+            sp as u64,
         ));
     }
     Ok(out)
@@ -357,5 +411,68 @@ mod tests {
         // Wrong declared size.
         assert!(codec.decompress(&good, raw.len() + 1).is_err());
         assert!(codec.decompress(&good, raw.len().saturating_sub(1)).is_err());
+    }
+
+    #[test]
+    fn hostile_raw_size_rejected_before_allocation() {
+        // A 3-byte "basket" claiming terabytes must fail fast and typed,
+        // not reserve memory. The cap check precedes every allocation.
+        for codec in [Codec::None, Codec::Zstd(3), Codec::Flate] {
+            let err = codec.decompress(&[0x10, 0xAA, 0x00], usize::MAX).unwrap_err();
+            assert!(matches!(err, FormatError::Corrupt { .. }), "codec {codec:?}: {err}");
+            let err = codec.decompress(&[0x10, 0xAA, 0x00], MAX_RAW_SIZE + 1).unwrap_err();
+            assert!(err.to_string().contains("cap"), "codec {codec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_backref_is_typed() {
+        // token: 1 literal, match nibble 0 (=> MIN_MATCH), then literal 'A',
+        // then offset 9999 with only 1 byte of output so far.
+        let bad = [0x10, b'A', 0x0F, 0x27];
+        let err = Codec::Flate.decompress(&bad, 64).unwrap_err();
+        assert!(matches!(err, FormatError::Corrupt { .. }));
+        assert!(err.to_string().contains("bad match offset"), "{err}");
+    }
+
+    #[test]
+    fn random_inputs_never_panic_and_never_overallocate() {
+        // Pure fuzz: feed random bytes as compressed streams. Every outcome
+        // must be Ok (coincidentally valid) or a typed error — no panics,
+        // no allocation beyond the declared raw size + initial cap.
+        let mut rng = Pcg32::new(0xFA57);
+        for _ in 0..500 {
+            let n = rng.below(300) as usize;
+            let buf: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let declared = rng.below(10_000) as usize;
+            for codec in [Codec::Zstd(3), Codec::Flate] {
+                match codec.decompress(&buf, declared) {
+                    Ok(out) => assert_eq!(out.len(), declared),
+                    Err(e) => assert!(!e.is_transient(), "decode faults are permanent: {e}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mutated_valid_streams_never_panic() {
+        // Corpus-style: take valid compressed streams and mutate each byte
+        // through several values; decoding must never panic and any Ok
+        // result must have exactly the declared size (the CRC layer above
+        // catches semantic corruption — this layer only promises safety).
+        let raw = sample();
+        let small = &raw[..1024];
+        for codec in [Codec::Zstd(4), Codec::Flate] {
+            let good = codec.compress(small).unwrap();
+            for i in 0..good.len() {
+                for delta in [1u8, 0x80, 0xFF] {
+                    let mut bad = good.clone();
+                    bad[i] = bad[i].wrapping_add(delta);
+                    if let Ok(out) = codec.decompress(&bad, small.len()) {
+                        assert_eq!(out.len(), small.len());
+                    }
+                }
+            }
+        }
     }
 }

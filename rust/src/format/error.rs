@@ -1,0 +1,126 @@
+//! Typed errors for the femto-ROOT storage layer.
+//!
+//! Every fallible path in `format/` returns [`FormatError`] instead of a
+//! bare `String`. The taxonomy matters operationally: the cluster retries
+//! *transient* faults (I/O hiccups) with backoff, while *permanent* faults
+//! (corruption, truncation, unknown formats) quarantine the partition and
+//! fail over to a replica — retrying a bad byte never helps.
+
+use std::fmt;
+
+/// A storage-layer fault, classified by how the caller should react.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FormatError {
+    /// The bytes on disk are present but wrong: a checksum mismatch, an
+    /// out-of-range back-reference, a malformed header. `offset` is the
+    /// file position of the damaged region (0 when unknown/not file-backed).
+    Corrupt { what: String, offset: u64 },
+    /// The file ends before the structure it declares: short reads,
+    /// header positions past EOF, offsets baskets that are not a whole
+    /// number of entries.
+    Truncated { what: String },
+    /// The operating system failed the I/O itself. The only *transient*
+    /// variant: retrying may succeed.
+    Io { what: String },
+    /// The leading magic bytes are not femto-ROOT at all.
+    BadMagic,
+    /// The magic is femto-ROOT but the version byte is from the future.
+    UnsupportedVersion { version: u8 },
+}
+
+impl FormatError {
+    /// True when retrying the same read may succeed (OS-level I/O faults).
+    /// Corruption, truncation, and format mismatches are permanent: the
+    /// bytes will not improve, so callers should quarantine and fail over.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, FormatError::Io { .. })
+    }
+
+    /// Shorthand for a corruption error at a known file offset.
+    pub fn corrupt(what: impl Into<String>, offset: u64) -> Self {
+        FormatError::Corrupt { what: what.into(), offset }
+    }
+
+    /// Shorthand for a truncation error.
+    pub fn truncated(what: impl Into<String>) -> Self {
+        FormatError::Truncated { what: what.into() }
+    }
+
+    /// Re-anchor a relative corruption offset (e.g. from the codec, which
+    /// only knows positions within one basket) onto an absolute file
+    /// position. Non-`Corrupt` variants pass through unchanged.
+    pub fn rebase(self, base: u64) -> Self {
+        match self {
+            FormatError::Corrupt { what, offset } => {
+                FormatError::Corrupt { what, offset: base + offset }
+            }
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for FormatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FormatError::Corrupt { what, offset } => {
+                write!(f, "corrupt: {what} (at offset {offset})")
+            }
+            FormatError::Truncated { what } => write!(f, "truncated: {what}"),
+            FormatError::Io { what } => write!(f, "i/o error: {what}"),
+            FormatError::BadMagic => write!(f, "not a femto-ROOT file (bad magic)"),
+            FormatError::UnsupportedVersion { version } => {
+                write!(f, "unsupported femto-ROOT version {version}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FormatError {}
+
+impl From<std::io::Error> for FormatError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FormatError::Truncated { what: e.to_string() }
+        } else {
+            FormatError::Io { what: e.to_string() }
+        }
+    }
+}
+
+/// Interop with the pre-existing `Result<_, String>` surfaces (CLI, engine,
+/// cluster): `?` keeps composing where the caller still wants a string.
+impl From<FormatError> for String {
+    fn from(e: FormatError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classification() {
+        assert!(FormatError::Io { what: "eio".into() }.is_transient());
+        assert!(!FormatError::corrupt("crc", 12).is_transient());
+        assert!(!FormatError::truncated("short basket").is_transient());
+        assert!(!FormatError::BadMagic.is_transient());
+        assert!(!FormatError::UnsupportedVersion { version: 9 }.is_transient());
+    }
+
+    #[test]
+    fn io_error_conversion_distinguishes_eof() {
+        let eof = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "short");
+        assert!(matches!(FormatError::from(eof), FormatError::Truncated { .. }));
+        let eio = std::io::Error::other("disk on fire");
+        assert!(matches!(FormatError::from(eio), FormatError::Io { .. }));
+    }
+
+    #[test]
+    fn display_and_string_interop() {
+        let e = FormatError::corrupt("basket crc mismatch", 4096);
+        let s: String = e.clone().into();
+        assert_eq!(s, e.to_string());
+        assert!(s.contains("4096"));
+    }
+}

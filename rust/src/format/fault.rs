@@ -1,0 +1,350 @@
+//! Deterministic storage-fault injection — the `FaultFs` seam.
+//!
+//! Reader, writer, and catalog route their I/O through the hooks in this
+//! module. With no rules installed the hooks are a single relaxed atomic
+//! load, so production pays nothing. Tests (and the chaos CI job) install
+//! seeded [`FaultRule`]s that fire at matching sites: EIO, short reads,
+//! bit-flips, truncation, latency — each a failure mode a real disk or
+//! remote store produces.
+//!
+//! Rules are scoped by a [`FaultHandle`] guard that removes them on drop,
+//! and match sites by *tag substring* — tags embed the dataset/path/branch
+//! name, so parallel `cargo test` threads using unique names never see each
+//! other's faults. An environment plan (`HEPQ_FAULT_PLAN`, seeded by
+//! `HEPQ_FAULT_SEED` like the soak's `HEPQ_SOAK_SEED`) installs rules
+//! process-wide for CLI-level chaos runs.
+
+use super::error::FormatError;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// What a matched rule does to the operation.
+#[derive(Clone, Debug)]
+pub enum FaultKind {
+    /// Fail with a *transient* `FormatError::Io` (the OS returned EIO).
+    Eio,
+    /// Flip one seeded bit in the bytes being read. The read "succeeds";
+    /// only checksum verification can tell the data is wrong.
+    BitFlip { seed: u64 },
+    /// Silently drop the tail of the bytes being read, keeping `keep`
+    /// bytes. Like `BitFlip`, the read itself reports success.
+    Truncate { keep: usize },
+    /// Fail with `FormatError::Truncated` (read_exact hit EOF).
+    ShortRead,
+    /// Fail with *permanent* `FormatError::Corrupt` directly. Used at
+    /// outcome-level sites that hold no serialized bytes (the in-memory
+    /// catalog), where a byte-level flip has nothing to land on.
+    Corrupt,
+    /// Delay the operation by `ms` milliseconds, then let it succeed.
+    Latency { ms: u64 },
+}
+
+/// One injection rule: fire `kind` at most `times` times at any site whose
+/// tag contains `tag` as a substring.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub tag: String,
+    pub kind: FaultKind,
+    pub times: u32,
+}
+
+impl FaultRule {
+    pub fn new(tag: impl Into<String>, kind: FaultKind, times: u32) -> Self {
+        Self { tag: tag.into(), kind, times }
+    }
+}
+
+struct RuleState {
+    id: u64,
+    tag: String,
+    kind: FaultKind,
+    remaining: AtomicU64,
+    fired: AtomicU64,
+}
+
+fn rules() -> &'static Mutex<Vec<Arc<RuleState>>> {
+    static RULES: OnceLock<Mutex<Vec<Arc<RuleState>>>> = OnceLock::new();
+    RULES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Count of installed rules; the fast-path check every hook starts with.
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Guard owning a set of injected rules; dropping it removes them.
+pub struct FaultHandle {
+    mine: Vec<Arc<RuleState>>,
+}
+
+impl FaultHandle {
+    /// Total times this handle's rules have fired so far.
+    pub fn fired(&self) -> u64 {
+        self.mine.iter().map(|r| r.fired.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Drop for FaultHandle {
+    fn drop(&mut self) {
+        let mut g = rules().lock().unwrap();
+        for r in &self.mine {
+            if let Some(i) = g.iter().position(|x| x.id == r.id) {
+                g.remove(i);
+                ACTIVE.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Install one rule; it stays active until the returned handle drops.
+pub fn inject(rule: FaultRule) -> FaultHandle {
+    inject_all(vec![rule])
+}
+
+/// Install a batch of rules under one handle.
+pub fn inject_all(batch: Vec<FaultRule>) -> FaultHandle {
+    let mut mine = Vec::with_capacity(batch.len());
+    let mut g = rules().lock().unwrap();
+    for rule in batch {
+        let st = Arc::new(RuleState {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            tag: rule.tag,
+            kind: rule.kind,
+            remaining: AtomicU64::new(rule.times as u64),
+            fired: AtomicU64::new(0),
+        });
+        g.push(st.clone());
+        ACTIVE.fetch_add(1, Ordering::Relaxed);
+        mine.push(st);
+    }
+    FaultHandle { mine }
+}
+
+/// Find the first live rule matching `tag`, consume one firing, return its
+/// kind. `None` on the (hot) no-rules path or when nothing matches.
+fn take(tag: &str) -> Option<FaultKind> {
+    if ACTIVE.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let g = rules().lock().unwrap();
+    for r in g.iter() {
+        if !tag.contains(r.tag.as_str()) {
+            continue;
+        }
+        // Claim one firing; skip rules that are spent.
+        let mut left = r.remaining.load(Ordering::Relaxed);
+        loop {
+            if left == 0 {
+                break;
+            }
+            match r.remaining.compare_exchange_weak(
+                left,
+                left - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    r.fired.fetch_add(1, Ordering::Relaxed);
+                    return Some(r.kind.clone());
+                }
+                Err(now) => left = now,
+            }
+        }
+    }
+    None
+}
+
+/// Stable per-site hash, mixed into bit-flip seeds so distinct baskets
+/// flip distinct (but replayable) bit positions.
+fn tag_hash(tag: &str) -> u64 {
+    let mut h = 0u64;
+    for b in tag.bytes() {
+        h = h.wrapping_mul(131).wrapping_add(b as u64);
+    }
+    h
+}
+
+/// Byte-level hook: call after filling `buf` from disk. Mutating kinds
+/// (bit-flip, truncate) silently damage the buffer — exactly what a bad
+/// sector does — leaving detection to checksums; failing kinds return the
+/// error `read` would have produced.
+pub fn on_read_bytes(tag: &str, buf: &mut Vec<u8>) -> Result<(), FormatError> {
+    match take(tag) {
+        None => Ok(()),
+        Some(FaultKind::Eio) => Err(FormatError::Io { what: format!("injected EIO at {tag}") }),
+        Some(FaultKind::ShortRead) => {
+            Err(FormatError::Truncated { what: format!("injected short read at {tag}") })
+        }
+        Some(FaultKind::Corrupt) => {
+            Err(FormatError::Corrupt { what: format!("injected corruption at {tag}"), offset: 0 })
+        }
+        Some(FaultKind::BitFlip { seed }) => {
+            if !buf.is_empty() {
+                let mut rng = Pcg32::new(seed ^ tag_hash(tag));
+                let bit = rng.next_u64() as usize % (buf.len() * 8);
+                buf[bit / 8] ^= 1 << (bit % 8);
+            }
+            Ok(())
+        }
+        Some(FaultKind::Truncate { keep }) => {
+            buf.truncate(keep.min(buf.len()));
+            Ok(())
+        }
+        Some(FaultKind::Latency { ms }) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+/// Outcome-level hook for sites with no byte buffer (catalog fetch, writer
+/// commit). Byte-mutating kinds degrade to `Corrupt` here — there are no
+/// bytes to damage, but the observable outcome (permanent bad data) is the
+/// same.
+pub fn on_op(tag: &str) -> Result<(), FormatError> {
+    match take(tag) {
+        None => Ok(()),
+        Some(FaultKind::Eio) => Err(FormatError::Io { what: format!("injected EIO at {tag}") }),
+        Some(FaultKind::ShortRead) => {
+            Err(FormatError::Truncated { what: format!("injected short read at {tag}") })
+        }
+        Some(FaultKind::Corrupt)
+        | Some(FaultKind::BitFlip { .. })
+        | Some(FaultKind::Truncate { .. }) => {
+            Err(FormatError::Corrupt { what: format!("injected corruption at {tag}"), offset: 0 })
+        }
+        Some(FaultKind::Latency { ms }) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+/// Parse and install the `HEPQ_FAULT_PLAN` environment plan, if set.
+///
+/// Grammar: comma-separated entries `kind@tag@times`, where `kind` is one
+/// of `eio`, `bitflip`, `trunc<N>` (keep N bytes), `shortread`, `corrupt`,
+/// `latency<N>` (N ms). Bit-flip positions are seeded by `HEPQ_FAULT_SEED`
+/// (default 0xC0FFEE, matching the soak's pinned seed). Example:
+///
+/// ```text
+/// HEPQ_FAULT_PLAN="eio@fetch:ttbar@2,bitflip@jets.pt@1" hepq serve ...
+/// ```
+///
+/// Returns `None` when the variable is unset or empty; malformed entries
+/// are reported and skipped rather than aborting the process.
+pub fn install_env_plan() -> Option<FaultHandle> {
+    let plan = std::env::var("HEPQ_FAULT_PLAN").ok()?;
+    if plan.trim().is_empty() {
+        return None;
+    }
+    let seed = std::env::var("HEPQ_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut batch = Vec::new();
+    for entry in plan.split(',') {
+        match parse_entry(entry.trim(), seed) {
+            Some(rule) => batch.push(rule),
+            None => crate::log_warn!("fault: ignoring malformed HEPQ_FAULT_PLAN entry {entry:?}"),
+        }
+    }
+    if batch.is_empty() {
+        return None;
+    }
+    Some(inject_all(batch))
+}
+
+fn parse_entry(entry: &str, seed: u64) -> Option<FaultRule> {
+    let mut it = entry.splitn(3, '@');
+    let kind = it.next()?.trim();
+    let tag = it.next()?.trim().to_string();
+    let times: u32 = it.next().map_or(Some(1), |t| t.trim().parse().ok())?;
+    let kind = if kind == "eio" {
+        FaultKind::Eio
+    } else if kind == "bitflip" {
+        FaultKind::BitFlip { seed }
+    } else if kind == "shortread" {
+        FaultKind::ShortRead
+    } else if kind == "corrupt" {
+        FaultKind::Corrupt
+    } else if let Some(n) = kind.strip_prefix("trunc") {
+        FaultKind::Truncate { keep: n.parse().ok()? }
+    } else if let Some(n) = kind.strip_prefix("latency") {
+        FaultKind::Latency { ms: n.parse().ok()? }
+    } else {
+        return None;
+    };
+    Some(FaultRule { tag, kind, times })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_rules_is_a_no_op() {
+        let mut buf = vec![1, 2, 3];
+        assert!(on_read_bytes("fault-test-noop:x", &mut buf).is_ok());
+        assert_eq!(buf, vec![1, 2, 3]);
+        assert!(on_op("fault-test-noop:y").is_ok());
+    }
+
+    #[test]
+    fn rules_fire_times_then_expire_and_drop_removes() {
+        let h = inject(FaultRule::new("fault-test-expire", FaultKind::Eio, 2));
+        assert!(on_op("op:fault-test-expire:0").is_err());
+        assert!(on_op("op:fault-test-expire:1").is_err());
+        // Spent: third call passes.
+        assert!(on_op("op:fault-test-expire:2").is_ok());
+        assert_eq!(h.fired(), 2);
+        drop(h);
+        assert!(on_op("op:fault-test-expire:3").is_ok());
+    }
+
+    #[test]
+    fn tags_are_substring_scoped() {
+        let _h = inject(FaultRule::new("fault-test-scope-a", FaultKind::Eio, 100));
+        assert!(on_op("basket:fault-test-scope-b:jets.pt:0").is_ok());
+        assert!(on_op("basket:fault-test-scope-a:jets.pt:0").is_err());
+    }
+
+    #[test]
+    fn bitflip_is_deterministic_and_changes_one_bit() {
+        let orig: Vec<u8> = (0..64).collect();
+        let flip = |tag: &str| {
+            let _h = inject(FaultRule::new("fault-test-flip", FaultKind::BitFlip { seed: 9 }, 1));
+            let mut buf = orig.clone();
+            on_read_bytes(tag, &mut buf).unwrap();
+            buf
+        };
+        let a = flip("fault-test-flip:basket0");
+        let b = flip("fault-test-flip:basket0");
+        assert_eq!(a, b, "same seed + tag must flip the same bit");
+        let diff: u32 = orig.iter().zip(&a).map(|(x, y)| (x ^ y).count_ones()).sum();
+        assert_eq!(diff, 1, "exactly one bit flips");
+    }
+
+    #[test]
+    fn truncate_shortens_buffer() {
+        let _h = inject(FaultRule::new("fault-test-trunc", FaultKind::Truncate { keep: 3 }, 1));
+        let mut buf = vec![0u8; 10];
+        on_read_bytes("fault-test-trunc:b", &mut buf).unwrap();
+        assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn env_plan_parses() {
+        let r = parse_entry("eio@fetch:ds@2", 7).unwrap();
+        assert!(matches!(r.kind, FaultKind::Eio));
+        assert_eq!(r.tag, "fetch:ds");
+        assert_eq!(r.times, 2);
+        let r = parse_entry("trunc16@basket", 7).unwrap();
+        assert!(matches!(r.kind, FaultKind::Truncate { keep: 16 }));
+        assert_eq!(r.times, 1);
+        let r = parse_entry("latency25@fetch@3", 7).unwrap();
+        assert!(matches!(r.kind, FaultKind::Latency { ms: 25 }));
+        assert!(parse_entry("explode@x@1", 7).is_none());
+        assert!(parse_entry("eio", 7).is_none());
+    }
+}

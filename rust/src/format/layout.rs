@@ -1,27 +1,42 @@
 //! femto-ROOT on-disk layout.
 //!
+//! Version 2 (current, checksummed):
+//!
 //! ```text
 //! +--------------------+
-//! | magic  "FROOT1\0\0"|  8 bytes
+//! | magic  "FROOT2\0\0"|  8 bytes
 //! | header_pos  u64 LE |  8 bytes (patched after writing baskets)
+//! | header_len  u64 LE |  8 bytes (patched after writing baskets)
+//! | header_crc  u32 LE |  4 bytes (CRC32 of the header JSON bytes)
 //! | basket bytes ...   |
-//! | header JSON        |  from header_pos to EOF
+//! | header JSON        |  header_len bytes at header_pos
 //! +--------------------+
 //! ```
 //!
+//! Version 1 (legacy, still readable): magic `"FROOT1\0\0"`, 8-byte
+//! header_pos, header JSON from header_pos to EOF — no checksums anywhere.
+//! Readers report such files as *unverified* rather than rejecting them.
+//!
 //! The header describes the schema and, for every branch (one per content
 //! array and one per offsets array), its basket index: absolute file
-//! position, compressed size, raw size and item count per basket. This is
-//! what makes *selective* reading possible: a reader seeks straight to the
-//! baskets of the branches a query needs and touches nothing else — the
-//! first two orders of magnitude of the paper's Table 1.
+//! position, compressed size, raw size, item count and — since v2 — a
+//! CRC32 over the basket's *compressed* bytes, verified on every read
+//! before decompression. This is what makes *selective* reading possible:
+//! a reader seeks straight to the baskets of the branches a query needs
+//! and touches nothing else — the first two orders of magnitude of the
+//! paper's Table 1.
 
 use crate::columnar::schema::{PrimType, Ty};
 use crate::format::compress::Codec;
 use crate::index::ZoneMap;
 use crate::util::json::Json;
 
+/// Legacy v1 magic — files with this prefix have no checksums.
 pub const MAGIC: &[u8; 8] = b"FROOT1\0\0";
+/// Current v2 magic — checksummed header and baskets.
+pub const MAGIC_V2: &[u8; 8] = b"FROOT2\0\0";
+/// The version new files are written at.
+pub const FORMAT_VERSION: u32 = 2;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct BasketInfo {
@@ -30,6 +45,9 @@ pub struct BasketInfo {
     pub comp_size: u64,
     pub raw_size: u64,
     pub items: u64,
+    /// CRC32 of the compressed basket bytes. `None` in v1 files (written
+    /// before checksums existed): the basket reads, but unverified.
+    pub crc: Option<u32>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +81,9 @@ impl BranchInfo {
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Header {
+    /// Format version this header was written at (1 = unchecksummed
+    /// legacy, 2 = checksummed). Drives which layout `to_json` emits.
+    pub version: u32,
     pub schema: Ty,
     pub n_events: u64,
     pub codec: Codec,
@@ -80,8 +101,9 @@ impl Header {
     }
 
     pub fn to_json(&self) -> Json {
+        let with_crc = self.version >= 2;
         let mut pairs = vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(self.version as f64)),
             ("schema", self.schema.to_json()),
             ("n_events", Json::num(self.n_events as f64)),
             ("codec", Json::str(self.codec.name())),
@@ -106,12 +128,18 @@ impl Header {
                                         b.baskets
                                             .iter()
                                             .map(|k| {
-                                                Json::Arr(vec![
+                                                let mut a = vec![
                                                     Json::num(k.pos as f64),
                                                     Json::num(k.comp_size as f64),
                                                     Json::num(k.raw_size as f64),
                                                     Json::num(k.items as f64),
-                                                ])
+                                                ];
+                                                if with_crc {
+                                                    a.push(Json::num(
+                                                        k.crc.unwrap_or(0) as f64
+                                                    ));
+                                                }
+                                                Json::Arr(a)
                                             })
                                             .collect(),
                                     ),
@@ -130,6 +158,10 @@ impl Header {
     }
 
     pub fn from_json(j: &Json) -> Result<Header, String> {
+        let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1) as u32;
+        if version == 0 || version > FORMAT_VERSION {
+            return Err(format!("unsupported header version {version}"));
+        }
         let schema = Ty::from_json(j.get("schema").ok_or("missing schema")?)?;
         let n_events = j.get("n_events").and_then(|v| v.as_u64()).ok_or("missing n_events")?;
         let codec = Codec::from_name(
@@ -149,14 +181,21 @@ impl Header {
             let mut baskets = Vec::new();
             for k in b.get("baskets").and_then(|v| v.as_arr()).ok_or("baskets")? {
                 let a = k.as_arr().ok_or("basket entry")?;
-                if a.len() != 4 {
-                    return Err("basket entry must have 4 fields".into());
+                // v1 baskets have 4 fields; v2 adds the CRC as a fifth.
+                if a.len() != 4 && a.len() != 5 {
+                    return Err("basket entry must have 4 or 5 fields".into());
                 }
+                let crc = if a.len() == 5 {
+                    Some(a[4].as_u64().ok_or("crc")? as u32)
+                } else {
+                    None
+                };
                 baskets.push(BasketInfo {
                     pos: a[0].as_u64().ok_or("pos")?,
                     comp_size: a[1].as_u64().ok_or("csize")?,
                     raw_size: a[2].as_u64().ok_or("rsize")?,
                     items: a[3].as_u64().ok_or("items")?,
+                    crc,
                 });
             }
             branches.push(BranchInfo { name, kind, baskets });
@@ -166,6 +205,7 @@ impl Header {
             None => None,
         };
         Ok(Header {
+            version,
             schema,
             n_events,
             codec,
@@ -183,6 +223,7 @@ mod tests {
     #[test]
     fn header_json_roundtrip() {
         let h = Header {
+            version: 2,
             schema: muon_event_schema(),
             n_events: 123,
             codec: Codec::Zstd(3),
@@ -190,8 +231,14 @@ mod tests {
                 name: "muons.pt".into(),
                 kind: BranchKind::Leaf(PrimType::F32),
                 baskets: vec![
-                    BasketInfo { pos: 16, comp_size: 100, raw_size: 400, items: 100 },
-                    BasketInfo { pos: 116, comp_size: 80, raw_size: 92, items: 23 },
+                    BasketInfo {
+                        pos: 28,
+                        comp_size: 100,
+                        raw_size: 400,
+                        items: 100,
+                        crc: Some(0xDEAD_BEEF),
+                    },
+                    BasketInfo { pos: 128, comp_size: 80, raw_size: 92, items: 23, crc: Some(7) },
                 ],
             }],
             zones: None,
@@ -202,6 +249,50 @@ mod tests {
         assert_eq!(back.branch("muons.pt").unwrap().total_items(), 123);
         assert_eq!(back.branch("muons.pt").unwrap().total_raw_bytes(), 492);
         assert!(back.zones.is_none(), "absent zonemap reads as None");
+    }
+
+    #[test]
+    fn v1_header_roundtrip_keeps_four_field_baskets() {
+        let h = Header {
+            version: 1,
+            schema: muon_event_schema(),
+            n_events: 100,
+            codec: Codec::None,
+            branches: vec![BranchInfo {
+                name: "muons.pt".into(),
+                kind: BranchKind::Leaf(PrimType::F32),
+                baskets: vec![BasketInfo {
+                    pos: 16,
+                    comp_size: 400,
+                    raw_size: 400,
+                    items: 100,
+                    crc: None,
+                }],
+            }],
+            zones: None,
+        };
+        let s = h.to_json().to_string();
+        let back = Header::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, h);
+        assert!(back.branches[0].baskets[0].crc.is_none(), "v1 baskets carry no CRC");
+        // The serialized v1 basket stays a 4-tuple — byte-compatible with
+        // pre-checksum readers.
+        assert!(s.contains("[16,400,400,100]"), "v1 basket must stay 4 fields: {s}");
+    }
+
+    #[test]
+    fn future_header_version_is_rejected() {
+        let h = Header {
+            version: 2,
+            schema: muon_event_schema(),
+            n_events: 1,
+            codec: Codec::None,
+            branches: vec![],
+            zones: None,
+        };
+        let s = h.to_json().to_string().replace("\"version\":2", "\"version\":99");
+        let err = Header::from_json(&Json::parse(&s).unwrap()).unwrap_err();
+        assert!(err.contains("unsupported header version 99"), "{err}");
     }
 
     #[test]
@@ -220,6 +311,7 @@ mod tests {
             .insert("muons.charge".into(), Array::I32(vec![1, -1]));
         cs.leaves.insert("met".into(), Array::F32(vec![12.0]));
         let h = Header {
+            version: 2,
             schema: muon_event_schema(),
             n_events: 1,
             codec: Codec::None,

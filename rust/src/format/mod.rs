@@ -1,13 +1,24 @@
 //! femto-ROOT: a columnar, basketized, optionally-compressed on-disk format
 //! with selective branch reading — the stand-in for ROOT I/O and the BulkIO
 //! branch→array fast path (paper ref. [2]).
+//!
+//! Since v2 the format is checksummed end to end (CRC32 per basket and over
+//! the header), every fallible path returns a typed [`FormatError`], and
+//! all I/O flows through the [`fault`] injection seam so storage failures
+//! can be rehearsed deterministically.
 
+pub mod checksum;
 pub mod compress;
+pub mod error;
+pub mod fault;
 pub mod layout;
 pub mod reader;
 pub mod writer;
 
+pub use checksum::crc32;
 pub use compress::Codec;
+pub use error::FormatError;
+pub use fault::{FaultHandle, FaultKind, FaultRule};
 pub use layout::{BasketInfo, BranchInfo, BranchKind, Header};
-pub use reader::DatasetReader;
+pub use reader::{DatasetReader, VerifyIssue, VerifyReport};
 pub use writer::{write_dataset, WriteOptions};

@@ -4,9 +4,19 @@
 //! rung); `read_selective` loads only the branches a query needs (the
 //! "load jet p_T branch and no others" rung) — the access pattern that buys
 //! the first two orders of magnitude in Table 1.
+//!
+//! Since format v2 every basket read is CRC32-verified against the header's
+//! per-basket checksum *before* decompression, and the header itself is
+//! length- and CRC-guarded, so bit rot and torn writes surface as typed
+//! [`FormatError::Corrupt`]/[`FormatError::Truncated`] instead of silently
+//! wrong histograms. Legacy v1 files (no checksums) still read and are
+//! reported as unverified ([`DatasetReader::verified`] returns `false`).
 
 use crate::columnar::arrays::{Array, ColumnSet};
-use crate::format::layout::{BranchInfo, BranchKind, Header, MAGIC};
+use crate::format::checksum::crc32;
+use crate::format::error::FormatError;
+use crate::format::fault;
+use crate::format::layout::{BasketInfo, BranchInfo, BranchKind, Header, MAGIC, MAGIC_V2};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -17,33 +27,123 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct DatasetReader {
     file: File,
     pub header: Header,
+    /// Display path, used for fault-injection tags and error context.
+    tag: String,
+    /// Where the header starts — baskets must live strictly before it.
+    header_pos: u64,
+    /// True when the file carries checksums (v2) so reads are verified.
+    checksummed: bool,
     /// Compressed bytes actually read from disk (metrics / Table 1 evidence).
     bytes_read: AtomicU64,
 }
 
+/// One problem `DatasetReader::verify` found.
+#[derive(Clone, Debug)]
+pub struct VerifyIssue {
+    pub branch: String,
+    pub basket: usize,
+    pub error: FormatError,
+}
+
+/// The result of a full-file integrity walk.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub version: u32,
+    /// False for legacy v1 files: readable, but nothing to verify against.
+    pub checksummed: bool,
+    /// Per branch: (name, total baskets, CRC-verified baskets).
+    pub branch_baskets: Vec<(String, usize, usize)>,
+    pub issues: Vec<VerifyIssue>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.issues.is_empty()
+    }
+
+    pub fn total_baskets(&self) -> usize {
+        self.branch_baskets.iter().map(|(_, n, _)| n).sum()
+    }
+
+    pub fn verified_baskets(&self) -> usize {
+        self.branch_baskets.iter().map(|(_, _, v)| v).sum()
+    }
+}
+
 impl DatasetReader {
-    pub fn open(path: &Path) -> Result<DatasetReader, String> {
-        let mut file = File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+    pub fn open(path: &Path) -> Result<DatasetReader, FormatError> {
+        let tag = path.display().to_string();
+        let mut file =
+            File::open(path).map_err(|e| FormatError::Io { what: format!("open {tag}: {e}") })?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| FormatError::Io { what: format!("stat {tag}: {e}") })?
+            .len();
         let mut magic = [0u8; 8];
-        file.read_exact(&mut magic).map_err(|e| e.to_string())?;
-        if &magic != MAGIC {
-            return Err(format!("{} is not a femto-ROOT file", path.display()));
-        }
-        let mut pos_bytes = [0u8; 8];
-        file.read_exact(&mut pos_bytes).map_err(|e| e.to_string())?;
-        let header_pos = u64::from_le_bytes(pos_bytes);
+        file.read_exact(&mut magic)?;
+        let v2 = if &magic == MAGIC_V2 {
+            true
+        } else if &magic == MAGIC {
+            false
+        } else if magic.starts_with(b"FROOT") {
+            // femto-ROOT family, but a version this reader does not speak.
+            return Err(FormatError::UnsupportedVersion {
+                version: magic[5].saturating_sub(b'0'),
+            });
+        } else {
+            return Err(FormatError::BadMagic);
+        };
+
+        let mut u64buf = [0u8; 8];
+        file.read_exact(&mut u64buf)?;
+        let header_pos = u64::from_le_bytes(u64buf);
         if header_pos == 0 {
-            return Err("file was not finalized (header_pos == 0)".into());
+            return Err(FormatError::corrupt("file was not finalized (header_pos == 0)", 8));
         }
-        file.seek(SeekFrom::Start(header_pos)).map_err(|e| e.to_string())?;
-        let mut header_text = String::new();
-        file.read_to_string(&mut header_text).map_err(|e| e.to_string())?;
+        if header_pos > file_len {
+            return Err(FormatError::truncated(format!(
+                "header position {header_pos} past end of file ({file_len} bytes)"
+            )));
+        }
+
+        let header_bytes = if v2 {
+            file.read_exact(&mut u64buf)?;
+            let header_len = u64::from_le_bytes(u64buf);
+            let mut u32buf = [0u8; 4];
+            file.read_exact(&mut u32buf)?;
+            let header_crc = u32::from_le_bytes(u32buf);
+            if header_pos + header_len > file_len {
+                return Err(FormatError::truncated(format!(
+                    "header extends to {} but file is {file_len} bytes",
+                    header_pos + header_len
+                )));
+            }
+            file.seek(SeekFrom::Start(header_pos))?;
+            let mut bytes = vec![0u8; header_len as usize];
+            file.read_exact(&mut bytes)?;
+            if crc32(&bytes) != header_crc {
+                return Err(FormatError::corrupt("header checksum mismatch", header_pos));
+            }
+            bytes
+        } else {
+            file.seek(SeekFrom::Start(header_pos))?;
+            let mut bytes = Vec::new();
+            file.read_to_end(&mut bytes)?;
+            bytes
+        };
+        let header_text = String::from_utf8(header_bytes)
+            .map_err(|_| FormatError::corrupt("header is not valid UTF-8", header_pos))?;
         let header = Header::from_json(
-            &Json::parse(&header_text).map_err(|e| format!("header: {e}"))?,
-        )?;
+            &Json::parse(&header_text)
+                .map_err(|e| FormatError::corrupt(format!("header: {e}"), header_pos))?,
+        )
+        .map_err(|e| FormatError::corrupt(format!("header: {e}"), header_pos))?;
         Ok(DatasetReader {
             file,
             header,
+            tag,
+            header_pos,
+            checksummed: v2,
             bytes_read: AtomicU64::new(0),
         })
     }
@@ -54,6 +154,13 @@ impl DatasetReader {
 
     pub fn bytes_read(&self) -> u64 {
         self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// True when this file carries checksums, i.e. every basket read is
+    /// CRC-verified. Legacy v1 files read fine but return `false` here —
+    /// "unverified" — so callers can surface the distinction.
+    pub fn verified(&self) -> bool {
+        self.checksummed
     }
 
     /// The file's zone map (per-column min/max/NaN statistics), when the
@@ -68,56 +175,95 @@ impl DatasetReader {
         self.bytes_read.store(0, Ordering::Relaxed);
     }
 
-    fn branch(&self, name: &str) -> Result<&BranchInfo, String> {
+    fn branch(&self, name: &str) -> Result<&BranchInfo, FormatError> {
         self.header
             .branch(name)
-            .ok_or_else(|| format!("no branch '{name}'"))
+            .ok_or_else(|| FormatError::corrupt(format!("no branch '{name}'"), 0))
     }
 
-    fn read_branch_raw(&mut self, info: &BranchInfo) -> Result<Vec<u8>, String> {
+    /// Read and verify one basket's compressed bytes. The CRC (when the
+    /// file has one) is checked over exactly the bytes read from disk,
+    /// before decompression gets anywhere near them.
+    fn read_basket_comp(
+        &mut self,
+        branch: &str,
+        idx: usize,
+        basket: &BasketInfo,
+    ) -> Result<Vec<u8>, FormatError> {
+        if basket.pos + basket.comp_size > self.header_pos {
+            return Err(FormatError::corrupt(
+                format!("basket {idx} of branch '{branch}' overlaps the header"),
+                basket.pos,
+            ));
+        }
+        let mut comp = vec![0u8; basket.comp_size as usize];
+        self.file.seek(SeekFrom::Start(basket.pos))?;
+        self.file.read_exact(&mut comp)?;
+        self.bytes_read.fetch_add(basket.comp_size, Ordering::Relaxed);
+        // The injection seam: seeded tests damage `comp` (or fail the read)
+        // here, exactly where a bad disk would.
+        fault::on_read_bytes(&format!("basket:{}:{branch}:{idx}", self.tag), &mut comp)?;
+        if comp.len() as u64 != basket.comp_size {
+            return Err(FormatError::truncated(format!(
+                "basket {idx} of branch '{branch}': read {} of {} bytes",
+                comp.len(),
+                basket.comp_size
+            )));
+        }
+        if let Some(crc) = basket.crc {
+            if crc32(&comp) != crc {
+                return Err(FormatError::corrupt(
+                    format!("basket {idx} of branch '{branch}': checksum mismatch"),
+                    basket.pos,
+                ));
+            }
+        }
+        Ok(comp)
+    }
+
+    fn read_branch_raw(&mut self, info: &BranchInfo) -> Result<Vec<u8>, FormatError> {
         let mut out = Vec::with_capacity(info.total_raw_bytes() as usize);
-        for basket in &info.baskets {
-            let mut comp = vec![0u8; basket.comp_size as usize];
-            self.file
-                .seek(SeekFrom::Start(basket.pos))
-                .map_err(|e| e.to_string())?;
-            self.file.read_exact(&mut comp).map_err(|e| e.to_string())?;
-            self.bytes_read.fetch_add(basket.comp_size, Ordering::Relaxed);
-            let raw = self.header.codec.decompress(&comp, basket.raw_size as usize)?;
+        for (idx, basket) in info.baskets.iter().enumerate() {
+            let comp = self.read_basket_comp(&info.name, idx, basket)?;
+            let raw = self
+                .header
+                .codec
+                .decompress(&comp, basket.raw_size as usize)
+                .map_err(|e| e.rebase(basket.pos))?;
             out.extend_from_slice(&raw);
         }
         Ok(out)
     }
 
     /// Read a content branch into a typed array.
-    pub fn read_leaf(&mut self, name: &str) -> Result<Array, String> {
+    pub fn read_leaf(&mut self, name: &str) -> Result<Array, FormatError> {
         let info = self.branch(name)?.clone();
         let prim = match info.kind {
             BranchKind::Leaf(p) => p,
-            BranchKind::Offsets => return Err(format!("'{name}' is an offsets branch")),
+            BranchKind::Offsets => {
+                return Err(FormatError::corrupt(format!("'{name}' is an offsets branch"), 0))
+            }
         };
         let raw = self.read_branch_raw(&info)?;
         Array::from_bytes(prim, &raw)
+            .map_err(|e| FormatError::corrupt(format!("branch '{name}': {e}"), 0))
     }
 
     /// Read an offsets branch for a list path.
-    pub fn read_offsets(&mut self, list_path: &str) -> Result<Vec<i64>, String> {
+    pub fn read_offsets(&mut self, list_path: &str) -> Result<Vec<i64>, FormatError> {
         let info = self.branch(&format!("@offsets:{list_path}"))?.clone();
         if info.kind != BranchKind::Offsets {
-            return Err(format!("'{list_path}' is not an offsets branch"));
+            return Err(FormatError::corrupt(
+                format!("'{list_path}' is not an offsets branch"),
+                0,
+            ));
         }
         let raw = self.read_branch_raw(&info)?;
-        if raw.len() % 8 != 0 {
-            return Err("offsets branch length not multiple of 8".into());
-        }
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        decode_offsets(&raw, &info.name)
     }
 
     /// Load the whole dataset (all branches).
-    pub fn read_full(&mut self) -> Result<ColumnSet, String> {
+    pub fn read_full(&mut self) -> Result<ColumnSet, FormatError> {
         let layout = self.header.schema.layout();
         let mut offsets = BTreeMap::new();
         for key in &layout.lists {
@@ -133,17 +279,18 @@ impl DatasetReader {
             offsets,
             leaves,
         };
-        cs.validate()?;
+        cs.validate()
+            .map_err(|e| FormatError::corrupt(format!("dataset inconsistent: {e}"), 0))?;
         Ok(cs)
     }
 
     /// Load only `keep_leaves` (and the offsets arrays that govern them).
     /// The resulting ColumnSet has the projected schema.
-    pub fn read_selective(&mut self, keep_leaves: &[&str]) -> Result<ColumnSet, String> {
+    pub fn read_selective(&mut self, keep_leaves: &[&str]) -> Result<ColumnSet, FormatError> {
         let full_layout = self.header.schema.layout();
         for k in keep_leaves {
             if !full_layout.leaves.iter().any(|(p, _)| p == k) {
-                return Err(format!("no leaf '{k}' in schema"));
+                return Err(FormatError::corrupt(format!("no leaf '{k}' in schema"), 0));
             }
         }
         // Projected schema determines which offsets we need.
@@ -165,9 +312,111 @@ impl DatasetReader {
             offsets,
             leaves,
         };
-        cs.validate()?;
+        cs.validate()
+            .map_err(|e| FormatError::corrupt(format!("dataset inconsistent: {e}"), 0))?;
         Ok(cs)
     }
+
+    /// Walk every basket of every branch, verifying checksums, declared
+    /// sizes, decompression, and offsets monotonicity. Collects *all*
+    /// problems instead of stopping at the first — this is the oracle the
+    /// `hepq verify` subcommand and the chaos tests use.
+    pub fn verify(&mut self) -> VerifyReport {
+        let branches = self.header.branches.clone();
+        let codec = self.header.codec;
+        let mut report = VerifyReport {
+            version: self.header.version,
+            checksummed: self.checksummed,
+            branch_baskets: Vec::with_capacity(branches.len()),
+            issues: Vec::new(),
+        };
+        for info in &branches {
+            let mut verified = 0usize;
+            let mut raw_all: Vec<u8> = Vec::new();
+            let mut branch_clean = true;
+            for (idx, basket) in info.baskets.iter().enumerate() {
+                let comp = match self.read_basket_comp(&info.name, idx, basket) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        report.issues.push(VerifyIssue {
+                            branch: info.name.clone(),
+                            basket: idx,
+                            error: e,
+                        });
+                        branch_clean = false;
+                        continue;
+                    }
+                };
+                match codec.decompress(&comp, basket.raw_size as usize) {
+                    Ok(raw) => {
+                        if basket.crc.is_some() {
+                            verified += 1;
+                        }
+                        raw_all.extend_from_slice(&raw);
+                    }
+                    Err(e) => {
+                        report.issues.push(VerifyIssue {
+                            branch: info.name.clone(),
+                            basket: idx,
+                            error: e.rebase(basket.pos),
+                        });
+                        branch_clean = false;
+                    }
+                }
+            }
+            // Offsets branches additionally promise monotonicity — a basket
+            // can checksum clean yet still describe an impossible layout if
+            // the writer was broken.
+            if branch_clean && info.kind == BranchKind::Offsets {
+                match decode_offsets(&raw_all, &info.name) {
+                    Ok(offs) => {
+                        if let Some(i) = (1..offs.len()).find(|&i| offs[i] < offs[i - 1]) {
+                            report.issues.push(VerifyIssue {
+                                branch: info.name.clone(),
+                                basket: 0,
+                                error: FormatError::corrupt(
+                                    format!(
+                                        "offsets not monotonic at entry {i}: {} < {}",
+                                        offs[i],
+                                        offs[i - 1]
+                                    ),
+                                    0,
+                                ),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        report.issues.push(VerifyIssue {
+                            branch: info.name.clone(),
+                            basket: 0,
+                            error: e,
+                        });
+                    }
+                }
+            }
+            report.branch_baskets.push((info.name.clone(), info.baskets.len(), verified));
+        }
+        report
+    }
+}
+
+/// Decode a raw offsets buffer into i64s — without any `unwrap` reachable
+/// from on-disk bytes: a buffer that is not a whole number of entries is a
+/// typed truncation error.
+fn decode_offsets(raw: &[u8], branch: &str) -> Result<Vec<i64>, FormatError> {
+    if raw.len() % 8 != 0 {
+        return Err(FormatError::truncated(format!(
+            "offsets branch '{branch}' length {} not a multiple of 8",
+            raw.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(raw.len() / 8);
+    for c in raw.chunks_exact(8) {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(c);
+        out.push(i64::from_le_bytes(b));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -176,6 +425,7 @@ mod tests {
     use crate::columnar::explode::{explode, Value};
     use crate::columnar::schema::muon_event_schema;
     use crate::format::compress::Codec;
+    use crate::format::fault::{FaultKind, FaultRule};
     use crate::format::writer::{write_dataset, WriteOptions};
     use crate::util::rng::Pcg32;
 
@@ -213,9 +463,12 @@ mod tests {
     fn write_read_roundtrip_uncompressed() {
         let cs = sample_columns(500, 1);
         let path = tmpfile("rt_none.froot");
-        write_dataset(&path, &cs, WriteOptions { codec: Codec::None, basket_items: 128 }).unwrap();
+        let opts =
+            WriteOptions { codec: Codec::None, basket_items: 128, ..WriteOptions::default() };
+        write_dataset(&path, &cs, opts).unwrap();
         let mut r = DatasetReader::open(&path).unwrap();
         assert_eq!(r.n_events(), 500);
+        assert!(r.verified(), "v2 files are checksummed");
         let back = r.read_full().unwrap();
         assert_eq!(back, cs);
     }
@@ -225,7 +478,8 @@ mod tests {
         let cs = sample_columns(700, 2);
         for codec in [Codec::Zstd(3), Codec::Flate] {
             let path = tmpfile(&format!("rt_{}.froot", codec.name()));
-            write_dataset(&path, &cs, WriteOptions { codec, basket_items: 100 }).unwrap();
+            let opts = WriteOptions { codec, basket_items: 100, ..WriteOptions::default() };
+            write_dataset(&path, &cs, opts).unwrap();
             let mut r = DatasetReader::open(&path).unwrap();
             let back = r.read_full().unwrap();
             assert_eq!(back, cs);
@@ -284,7 +538,18 @@ mod tests {
     fn rejects_non_froot_file() {
         let path = tmpfile("garbage.bin");
         std::fs::write(&path, b"definitely not froot").unwrap();
-        assert!(DatasetReader::open(&path).is_err());
+        let err = DatasetReader::open(&path).unwrap_err();
+        assert_eq!(err, FormatError::BadMagic);
+    }
+
+    #[test]
+    fn rejects_future_format_version() {
+        let path = tmpfile("future.froot");
+        let mut bytes = b"FROOT9\0\0".to_vec();
+        bytes.extend_from_slice(&[0u8; 32]);
+        std::fs::write(&path, bytes).unwrap();
+        let err = DatasetReader::open(&path).unwrap_err();
+        assert_eq!(err, FormatError::UnsupportedVersion { version: 9 });
     }
 
     #[test]
@@ -301,12 +566,160 @@ mod tests {
     fn multi_basket_branches() {
         let cs = sample_columns(1000, 6);
         let path = tmpfile("baskets.froot");
-        let opts = WriteOptions { codec: Codec::Zstd(1), basket_items: 64 };
+        let opts = WriteOptions { codec: Codec::Zstd(1), basket_items: 64, ..Default::default() };
         write_dataset(&path, &cs, opts).unwrap();
         let r = DatasetReader::open(&path).unwrap();
         let info = r.header.branch("muons.pt").unwrap();
         assert!(info.baskets.len() > 5, "expected many baskets, got {}", info.baskets.len());
         let mut r = r;
         assert_eq!(r.read_full().unwrap(), cs);
+    }
+
+    #[test]
+    fn v1_files_still_read_and_report_unverified() {
+        let cs = sample_columns(600, 8);
+        let path = tmpfile("legacy_v1.froot");
+        let opts = WriteOptions { checksums: false, basket_items: 128, ..Default::default() };
+        write_dataset(&path, &cs, opts).unwrap();
+        // On-disk prefix is the legacy magic.
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC);
+        let mut r = DatasetReader::open(&path).unwrap();
+        assert!(!r.verified(), "v1 files have nothing to verify against");
+        assert_eq!(r.header.version, 1);
+        assert_eq!(r.read_full().unwrap(), cs);
+        let rep = r.verify();
+        assert!(rep.ok());
+        assert!(!rep.checksummed);
+        assert_eq!(rep.verified_baskets(), 0, "no CRCs, nothing verified");
+        assert!(rep.total_baskets() > 0);
+    }
+
+    #[test]
+    fn bitflip_on_disk_is_caught_by_basket_crc() {
+        let cs = sample_columns(400, 9);
+        let path = tmpfile("bitflip.froot");
+        write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+        let r = DatasetReader::open(&path).unwrap();
+        let basket = r.header.branch("muons.pt").unwrap().baskets[0].clone();
+        drop(r);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[basket.pos as usize + 3] ^= 0x10;
+        std::fs::write(&path, bytes).unwrap();
+        let mut r = DatasetReader::open(&path).unwrap();
+        let err = r.read_leaf("muons.pt").unwrap_err();
+        assert!(
+            matches!(err, FormatError::Corrupt { .. }),
+            "flipped bit must be a checksum corruption, got {err}"
+        );
+        assert!(!err.is_transient());
+        // Unrelated branches still read clean.
+        assert!(r.read_leaf("met").is_ok());
+        // And the full-file verify pinpoints the damaged branch.
+        let rep = r.verify();
+        assert!(!rep.ok());
+        assert!(rep.issues.iter().all(|i| i.branch == "muons.pt"));
+    }
+
+    #[test]
+    fn header_corruption_is_caught_at_open() {
+        let cs = sample_columns(50, 10);
+        let path = tmpfile("badheader.froot");
+        write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let header_pos = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        bytes[header_pos + 5] ^= 0x01;
+        std::fs::write(&path, bytes).unwrap();
+        let err = DatasetReader::open(&path).unwrap_err();
+        assert!(matches!(err, FormatError::Corrupt { .. }), "got {err}");
+        assert!(err.to_string().contains("header checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_is_a_typed_error() {
+        let cs = sample_columns(300, 11);
+        let path = tmpfile("truncfile.froot");
+        write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Chop the file in the middle of the header.
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let err = DatasetReader::open(&path).unwrap_err();
+        assert!(matches!(err, FormatError::Truncated { .. }), "got {err}");
+    }
+
+    #[test]
+    fn injected_faults_surface_as_typed_errors() {
+        let cs = sample_columns(200, 12);
+        let path = tmpfile("faulty_reader.froot");
+        write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+
+        // EIO: transient, typed Io.
+        {
+            let _h = fault::inject(FaultRule::new(
+                format!("basket:{}:muons.pt", path.display()),
+                FaultKind::Eio,
+                1,
+            ));
+            let mut r = DatasetReader::open(&path).unwrap();
+            let err = r.read_leaf("muons.pt").unwrap_err();
+            assert!(err.is_transient(), "EIO should be transient: {err}");
+            // The rule is spent — the retry succeeds.
+            assert!(r.read_leaf("muons.pt").is_ok());
+        }
+        // Short read: typed Truncated.
+        {
+            let _h = fault::inject(FaultRule::new(
+                format!("basket:{}:met", path.display()),
+                FaultKind::ShortRead,
+                1,
+            ));
+            let mut r = DatasetReader::open(&path).unwrap();
+            let err = r.read_leaf("met").unwrap_err();
+            assert!(matches!(err, FormatError::Truncated { .. }), "got {err}");
+        }
+        // In-flight bit flip: the CRC catches it even though the read "worked".
+        {
+            let _h = fault::inject(FaultRule::new(
+                format!("basket:{}:muons.eta", path.display()),
+                FaultKind::BitFlip { seed: 42 },
+                1,
+            ));
+            let mut r = DatasetReader::open(&path).unwrap();
+            let err = r.read_leaf("muons.eta").unwrap_err();
+            assert!(matches!(err, FormatError::Corrupt { .. }), "got {err}");
+        }
+        // In-flight truncation: CRC (or length) catches it.
+        {
+            let _h = fault::inject(FaultRule::new(
+                format!("basket:{}:muons.phi", path.display()),
+                FaultKind::Truncate { keep: 5 },
+                1,
+            ));
+            let mut r = DatasetReader::open(&path).unwrap();
+            assert!(r.read_leaf("muons.phi").is_err());
+        }
+    }
+
+    #[test]
+    fn verify_is_clean_on_good_files_both_codecs() {
+        for codec in [Codec::None, Codec::Zstd(2)] {
+            let cs = sample_columns(800, 13);
+            let path = tmpfile(&format!("verify_ok_{}.froot", codec.name()));
+            let opts = WriteOptions { codec, basket_items: 96, ..Default::default() };
+            write_dataset(&path, &cs, opts).unwrap();
+            let mut r = DatasetReader::open(&path).unwrap();
+            let rep = r.verify();
+            assert!(rep.ok(), "clean file must verify: {:?}", rep.issues);
+            assert_eq!(rep.verified_baskets(), rep.total_baskets());
+            assert!(rep.checksummed);
+            assert_eq!(rep.version, 2);
+        }
+    }
+
+    #[test]
+    fn decode_offsets_rejects_ragged_buffers() {
+        let err = decode_offsets(&[0u8; 12], "@offsets:muons").unwrap_err();
+        assert!(matches!(err, FormatError::Truncated { .. }));
+        assert_eq!(decode_offsets(&[0u8; 16], "@offsets:muons").unwrap().len(), 2);
     }
 }

@@ -1,8 +1,17 @@
 //! femto-ROOT writer: explode-format `ColumnSet` → on-disk branches/baskets.
+//!
+//! Writes v2 (checksummed) files by default: a CRC32 per basket (over the
+//! compressed bytes) plus a CRC32 over the header JSON, so any torn write
+//! or bit rot is caught at read time. `WriteOptions { checksums: false }`
+//! emits the byte-exact legacy v1 layout — used by the backward-compat
+//! tests and the checksum-overhead bench rung.
 
 use crate::columnar::arrays::{Array, ColumnSet};
+use crate::format::checksum::crc32;
 use crate::format::compress::Codec;
-use crate::format::layout::{BasketInfo, BranchInfo, BranchKind, Header, MAGIC};
+use crate::format::error::FormatError;
+use crate::format::fault;
+use crate::format::layout::{BasketInfo, BranchInfo, BranchKind, Header, MAGIC, MAGIC_V2};
 use crate::index::ZoneMap;
 use std::fs::File;
 use std::io::{Seek, SeekFrom, Write};
@@ -14,6 +23,10 @@ pub struct WriteOptions {
     /// Items per basket (ROOT default order of magnitude; tune per branch
     /// type in real ROOT — fixed here).
     pub basket_items: usize,
+    /// Write the checksummed v2 layout (default). `false` produces the
+    /// legacy v1 layout byte for byte — no CRCs, readable by pre-checksum
+    /// readers — for compatibility tests and the verify-overhead bench.
+    pub checksums: bool,
 }
 
 impl Default for WriteOptions {
@@ -21,16 +34,31 @@ impl Default for WriteOptions {
         Self {
             codec: Codec::None,
             basket_items: 64 * 1024,
+            checksums: true,
         }
     }
 }
 
 /// Write a dataset file; returns total bytes written.
-pub fn write_dataset(path: &Path, cs: &ColumnSet, opts: WriteOptions) -> Result<u64, String> {
-    cs.validate()?;
-    let mut f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
-    f.write_all(MAGIC).map_err(|e| e.to_string())?;
-    f.write_all(&0u64.to_le_bytes()).map_err(|e| e.to_string())?;
+pub fn write_dataset(path: &Path, cs: &ColumnSet, opts: WriteOptions) -> Result<u64, FormatError> {
+    cs.validate().map_err(|e| FormatError::Corrupt {
+        what: format!("refusing to write invalid column set: {e}"),
+        offset: 0,
+    })?;
+    fault::on_op(&format!("write:{}", path.display()))?;
+    let mut f = File::create(path)
+        .map_err(|e| FormatError::Io { what: format!("create {}: {e}", path.display()) })?;
+    if opts.checksums {
+        // v2 preamble: magic + header_pos + header_len + header_crc, the
+        // last three patched once the header is on disk.
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&0u64.to_le_bytes())?;
+        f.write_all(&0u64.to_le_bytes())?;
+        f.write_all(&0u32.to_le_bytes())?;
+    } else {
+        f.write_all(MAGIC)?;
+        f.write_all(&0u64.to_le_bytes())?;
+    }
 
     let mut branches: Vec<BranchInfo> = Vec::new();
 
@@ -54,6 +82,7 @@ pub fn write_dataset(path: &Path, cs: &ColumnSet, opts: WriteOptions) -> Result<
     }
 
     let header = Header {
+        version: if opts.checksums { 2 } else { 1 },
         schema: cs.schema.clone(),
         n_events: cs.n_events as u64,
         codec: opts.codec,
@@ -62,15 +91,20 @@ pub fn write_dataset(path: &Path, cs: &ColumnSet, opts: WriteOptions) -> Result<
         // right to skip chunks this file's data can prove empty.
         zones: Some(ZoneMap::build(cs)),
     };
-    let header_pos = f.stream_position().map_err(|e| e.to_string())?;
+    let header_pos = f.stream_position()?;
     let header_bytes = header.to_json().to_string().into_bytes();
-    f.write_all(&header_bytes).map_err(|e| e.to_string())?;
-    let end = f.stream_position().map_err(|e| e.to_string())?;
+    f.write_all(&header_bytes)?;
+    let end = f.stream_position()?;
 
-    // Patch the header position.
-    f.seek(SeekFrom::Start(MAGIC.len() as u64)).map_err(|e| e.to_string())?;
-    f.write_all(&header_pos.to_le_bytes()).map_err(|e| e.to_string())?;
-    f.flush().map_err(|e| e.to_string())?;
+    // Patch the preamble now that the header's position (and, for v2, its
+    // length and checksum) are known.
+    f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
+    f.write_all(&header_pos.to_le_bytes())?;
+    if opts.checksums {
+        f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&crc32(&header_bytes).to_le_bytes())?;
+    }
+    f.flush()?;
     Ok(end)
 }
 
@@ -78,7 +112,7 @@ fn write_baskets_array(
     f: &mut File,
     arr: &Array,
     opts: WriteOptions,
-) -> Result<Vec<BasketInfo>, String> {
+) -> Result<Vec<BasketInfo>, FormatError> {
     let n = arr.len();
     let mut baskets = Vec::new();
     let mut lo = 0usize;
@@ -87,7 +121,7 @@ fn write_baskets_array(
         let hi = (lo + opts.basket_items).min(n);
         let chunk = arr.slice(lo, hi);
         let raw = chunk.to_bytes();
-        baskets.push(write_one_basket(f, &raw, (hi - lo) as u64, opts.codec)?);
+        baskets.push(write_one_basket(f, &raw, (hi - lo) as u64, opts)?);
         lo = hi;
         if lo >= n {
             break;
@@ -100,14 +134,14 @@ fn write_baskets_i64(
     f: &mut File,
     values: &[i64],
     opts: WriteOptions,
-) -> Result<Vec<BasketInfo>, String> {
+) -> Result<Vec<BasketInfo>, FormatError> {
     let n = values.len();
     let mut baskets = Vec::new();
     let mut lo = 0usize;
     loop {
         let hi = (lo + opts.basket_items).min(n);
         let raw: Vec<u8> = values[lo..hi].iter().flat_map(|x| x.to_le_bytes()).collect();
-        baskets.push(write_one_basket(f, &raw, (hi - lo) as u64, opts.codec)?);
+        baskets.push(write_one_basket(f, &raw, (hi - lo) as u64, opts)?);
         lo = hi;
         if lo >= n {
             break;
@@ -120,15 +154,18 @@ fn write_one_basket(
     f: &mut File,
     raw: &[u8],
     items: u64,
-    codec: Codec,
-) -> Result<BasketInfo, String> {
-    let comp = codec.compress(raw)?;
-    let pos = f.stream_position().map_err(|e| e.to_string())?;
-    f.write_all(&comp).map_err(|e| e.to_string())?;
+    opts: WriteOptions,
+) -> Result<BasketInfo, FormatError> {
+    let comp = opts.codec.compress(raw)?;
+    let pos = f.stream_position()?;
+    f.write_all(&comp)?;
     Ok(BasketInfo {
         pos,
         comp_size: comp.len() as u64,
         raw_size: raw.len() as u64,
         items,
+        // The CRC covers the *compressed* bytes: verification happens on
+        // exactly what was read from disk, before decompression touches it.
+        crc: if opts.checksums { Some(crc32(&comp)) } else { None },
     })
 }

@@ -30,8 +30,11 @@ fn app() -> App {
                     "",
                     "cluster events by a leaf (e.g. muons.pt, met) so zone maps prune",
                 )
+                .flag("no-checksums", "write the legacy v1 layout without CRCs")
                 .pos("out", "output .froot path"),
             CommandSpec::new("inspect", "print a dataset file's header")
+                .pos("file", "input .froot path"),
+            CommandSpec::new("verify", "verify a dataset file's checksums and basket layout")
                 .pos("file", "input .froot path"),
             CommandSpec::new("query", "run one query over a dataset file")
                 .opt("kind", "max_pt", "max_pt|eta_best|ptsum_pairs|mass_pairs|flat_hist")
@@ -107,6 +110,10 @@ fn app() -> App {
                 .opt("y-lo", "0", "y lower edge for fill2 H2 sinks")
                 .opt("y-hi", "128", "y upper edge for fill2 H2 sinks")
                 .flag("trace", "ask the server to record a span trace (prints the trace id)")
+                .flag(
+                    "allow-partial",
+                    "accept a partial histogram plus an error manifest if partitions fail",
+                )
                 .pos("dataset", "dataset name on the server"),
             CommandSpec::new("stats", "show a running server's serving/cluster stats")
                 .opt("addr", "127.0.0.1:8765", "server address")
@@ -128,9 +135,13 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Chaos runs: HEPQ_FAULT_PLAN installs storage-fault rules process-wide
+    // (kept alive for the whole run by design).
+    let _faults = hepq::format::fault::install_env_plan();
     let result = match cmd.as_str() {
         "gen-data" => cmd_gen(&m),
         "inspect" => cmd_inspect(&m),
+        "verify" => cmd_verify(&m),
         "query" => cmd_query(&m),
         "serve" => cmd_serve(&m),
         "client" => cmd_client(&m),
@@ -167,7 +178,12 @@ fn cmd_gen(m: &Matches) -> Result<(), String> {
         cs = cs.order_events_by(order_by)?;
         println!("clustered events by '{order_by}'");
     }
-    let bytes = write_dataset(out, &cs, WriteOptions { codec, basket_items: 256 * 1024 })?;
+    let wopts = WriteOptions {
+        codec,
+        basket_items: 256 * 1024,
+        checksums: !m.flag("no-checksums"),
+    };
+    let bytes = write_dataset(out, &cs, wopts)?;
     println!(
         "wrote {} events ({} MiB) to {} in {:.2}s",
         events,
@@ -181,6 +197,11 @@ fn cmd_gen(m: &Matches) -> Result<(), String> {
 fn cmd_inspect(m: &Matches) -> Result<(), String> {
     let r = DatasetReader::open(Path::new(m.str("file")))?;
     let h = &r.header;
+    println!(
+        "version:  {}{}",
+        h.version,
+        if r.verified() { " (checksummed)" } else { " (pre-checksum: reads unverified)" }
+    );
     println!("schema:   {}", h.schema);
     println!("events:   {}", h.n_events);
     println!("codec:    {}", h.codec.name());
@@ -196,6 +217,52 @@ fn cmd_inspect(m: &Matches) -> Result<(), String> {
         );
     }
     Ok(())
+}
+
+/// `hepq verify`: walk every basket of every branch, checking checksums,
+/// declared sizes, decompression, and offsets monotonicity. Exits 2 when
+/// anything is corrupt — the chaos tests use this as their oracle.
+fn cmd_verify(m: &Matches) -> Result<(), String> {
+    let path = Path::new(m.str("file"));
+    let mut r = match DatasetReader::open(path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{}: {e}", path.display());
+            std::process::exit(2);
+        }
+    };
+    let rep = r.verify();
+    println!(
+        "{}: femto-ROOT v{}{}",
+        path.display(),
+        rep.version,
+        if rep.checksummed { "" } else { " (pre-checksum file: baskets unverified)" }
+    );
+    for (name, total, verified) in &rep.branch_baskets {
+        let bad = rep.issues.iter().filter(|i| &i.branch == name).count();
+        let status = if bad > 0 {
+            "CORRUPT"
+        } else if verified == total {
+            "ok"
+        } else {
+            "unverified"
+        };
+        println!("  {name:<24} {total:>5} baskets  {verified:>5} verified  {status}");
+    }
+    for i in &rep.issues {
+        println!("  !! {} basket {}: {}", i.branch, i.basket, i.error);
+    }
+    if rep.ok() {
+        println!(
+            "verify: OK ({} baskets, {} checksum-verified)",
+            rep.total_baskets(),
+            rep.verified_baskets()
+        );
+        Ok(())
+    } else {
+        eprintln!("verify: FAILED with {} issue(s)", rep.issues.len());
+        std::process::exit(2);
+    }
 }
 
 /// Intra-partition parallelism from `--threads` / `--morsel-events`.
@@ -495,7 +562,8 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
         m.usize("y-bins").map_err(|e| e.to_string())?,
         m.f64("y-lo").map_err(|e| e.to_string())?,
         m.f64("y-hi").map_err(|e| e.to_string())?,
-    );
+    )
+    .with_allow_partial(m.flag("allow-partial"));
     let mut client = Client::connect(m.str("addr"))?;
     // Honor the server's structured overload shedding: back off for the
     // suggested interval (jittered) and resubmit, a few times, before
@@ -520,6 +588,22 @@ fn cmd_client(m: &Matches) -> Result<(), String> {
     if let Some(hists) = resp.get("hists").and_then(|h| h.as_arr()) {
         for j in hists {
             println!("{}", ascii::render_sink(&Sink::from_json(j)?, 48));
+        }
+    }
+    // Degraded-read manifest: with --allow-partial the server returns the
+    // merged histogram over the partitions that *did* answer, plus which
+    // partitions failed and why.
+    if let Some(partial) = resp.get("partial") {
+        let failed = partial.get("partitions_failed").and_then(|v| v.as_u64()).unwrap_or(0);
+        println!("PARTIAL RESULT: {failed} partition(s) missing from the histogram");
+        if let Some(errs) = partial.get("errors").and_then(|v| v.as_arr()) {
+            for e in errs {
+                println!(
+                    "  partition {}: {}",
+                    e.get("partition").and_then(|v| v.as_u64()).unwrap_or(0),
+                    e.get("error").and_then(|v| v.as_str()).unwrap_or("?")
+                );
+            }
         }
     }
     println!(

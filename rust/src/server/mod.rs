@@ -851,13 +851,18 @@ fn run_jobs(ctx: &ExecCtx, jobs: Vec<Job>) {
                     // cost (wall-clock seconds), so quadratic pair loops
                     // are preferentially retained over cheap flat fills.
                     // The query rides along so warming can re-run the
-                    // entry after a dataset re-registration.
-                    ctx.results.put_with_query(
-                        j.key.clone(),
-                        res.clone(),
-                        exec.as_secs_f64(),
-                        Some(j.query.clone()),
-                    );
+                    // entry after a dataset re-registration. Degraded
+                    // (partial) results are never cached: a later
+                    // identical query must retry the failed partitions,
+                    // not inherit the gap.
+                    if res.failed.is_empty() {
+                        ctx.results.put_with_query(
+                            j.key.clone(),
+                            res.clone(),
+                            exec.as_secs_f64(),
+                            Some(j.query.clone()),
+                        );
+                    }
                     let timing = Timing {
                         queue_ms: ms_between(j.enqueued, t_exec),
                         exec_ms: exec.as_secs_f64() * 1e3,
@@ -1009,6 +1014,27 @@ fn result_json(
             Json::Arr(res.aux.iter().map(|s| s.to_json()).collect()),
         ));
     }
+    // Degraded (allow_partial) results carry their error manifest; complete
+    // responses stay byte-identical (no empty block on the wire).
+    if !res.failed.is_empty() {
+        let errors: Vec<Json> = res
+            .failed
+            .iter()
+            .map(|(p, e)| {
+                Json::obj(vec![
+                    ("partition", Json::num(*p as f64)),
+                    ("error", Json::str(e.clone())),
+                ])
+            })
+            .collect();
+        pairs.push((
+            "partial",
+            Json::obj(vec![
+                ("partitions_failed", Json::num(res.failed.len() as f64)),
+                ("errors", Json::Arr(errors)),
+            ]),
+        ));
+    }
     pairs.extend([
         ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
         ("queue_ms", Json::num(t.queue_ms)),
@@ -1042,6 +1068,7 @@ fn run_query<F: FnMut(usize, usize)>(
         partitions: res.partitions,
         skipped: res.skipped,
         chunks: res.chunks,
+        failed: res.failed,
     })
 }
 
@@ -1078,6 +1105,11 @@ fn warm_dataset(
         let t0 = Instant::now();
         match run_query(cluster, &q, |_, _| {}) {
             Ok(res) => {
+                // A degraded re-run (storage failed under an allow_partial
+                // query) must not poison the cache with a gap.
+                if !res.failed.is_empty() {
+                    continue;
+                }
                 let cost = t0.elapsed().as_secs_f64();
                 results.put_with_query(key, res, cost, Some(q));
                 warmed += 1;
@@ -1213,6 +1245,17 @@ impl MetricsCtx {
         snap.set_counter("fusion.scans_saved", self.fusion.scans_saved.load(o));
         snap.set_counter("catalog.fetches", self.cluster.catalog.fetches.load(o));
         snap.set_counter("catalog.bytes_fetched", self.cluster.catalog.bytes_fetched.load(o));
+        snap.set_counter(
+            "storage.corruption_detected",
+            self.cluster.catalog.corruption_detected(),
+        );
+        snap.set_counter("storage.read_retries", self.cluster.catalog.read_retries());
+        snap.set_counter("storage.quarantine_events", self.cluster.catalog.quarantine_events());
+        snap.set_gauge(
+            "storage.partitions_quarantined",
+            self.cluster.catalog.quarantined().len() as i64,
+        );
+        snap.set_counter("storage.partial_queries", self.cluster.partial_queries());
         snap.set_counter(
             "kernel.allocation_events",
             queryir::lower::total_allocation_events(),

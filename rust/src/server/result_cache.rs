@@ -51,6 +51,11 @@ pub struct CachedResult {
     /// Chunk-level skipping while it was produced (per-query counters —
     /// served back with the cached result so the client always sees them).
     pub chunks: crate::queryir::IndexedRun,
+    /// Per-partition storage errors of a degraded (allow_partial) result.
+    /// Non-empty results are **never inserted into the cache** — a later
+    /// identical query must retry the failed partitions, not inherit the
+    /// gap — but the field rides through so the response renderer sees it.
+    pub failed: Vec<(usize, String)>,
 }
 
 struct Entry {
@@ -226,6 +231,7 @@ mod tests {
             partitions: 1,
             skipped: 0,
             chunks: Default::default(),
+            failed: Vec::new(),
         }
     }
 

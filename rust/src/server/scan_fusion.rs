@@ -122,6 +122,7 @@ fn to_cached(res: QueryResult) -> CachedResult {
         partitions: res.partitions,
         skipped: res.skipped,
         chunks: res.chunks,
+        failed: res.failed,
     }
 }
 

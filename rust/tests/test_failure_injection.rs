@@ -65,16 +65,20 @@ fn straggler_duplicate_is_dropped() {
         id: id.clone(),
         worker: 1,
         hist: h.clone(),
+        aux: Vec::new(),
         events_processed: 10,
         chunks: Default::default(),
+        error: None,
     }));
     // The straggler finishes the same subtask later.
     assert!(!store.insert(PartialDoc {
         id,
         worker: 0,
         hist: h,
+        aux: Vec::new(),
         events_processed: 10,
         chunks: Default::default(),
+        error: None,
     }));
     let docs = store.drain(1);
     assert_eq!(docs.len(), 1);

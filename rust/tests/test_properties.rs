@@ -120,7 +120,8 @@ fn prop_format_roundtrip_any_codec() {
             case += 1;
             let cs = generate_drellyan(n, seed);
             let path = dir.join(format!("prop{case}.froot"));
-            write_dataset(&path, &cs, WriteOptions { codec, basket_items: basket })?;
+            let wopts = WriteOptions { codec, basket_items: basket, ..WriteOptions::default() };
+            write_dataset(&path, &cs, wopts)?;
             let mut r = DatasetReader::open(&path)?;
             let back = r.read_full()?;
             let _ = std::fs::remove_file(&path);

@@ -1,0 +1,310 @@
+//! Storage-fault grid — the chaos suite for the end-to-end integrity story.
+//!
+//! Every test drives an injected failure mode (bit-flip, truncation, EIO,
+//! short read, latency — per basket, per codec, per fetch site) through the
+//! public read paths and asserts the only two acceptable outcomes:
+//!
+//!   1. a **bit-exact** result, when retry/failover can absorb the fault, or
+//!   2. a **structured, typed error** (or explicit partial manifest),
+//!
+//! never a panic and never silently wrong data. Bit-flip positions honor
+//! `HEPQ_FAULT_SEED` (pinned in the CI chaos job, default 0xC0FFEE) so a
+//! failing grid cell reproduces locally with the same seed.
+
+use hepq::coord::{Cluster, ClusterConfig, ClusterError, Policy};
+use hepq::datagen::generate_drellyan;
+use hepq::engine::{Backend, Query, QueryKind};
+use hepq::format::{
+    fault, write_dataset, Codec, DatasetReader, FaultKind, FaultRule, FormatError, WriteOptions,
+};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn seed() -> u64 {
+    std::env::var("HEPQ_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hepq-fault-grid");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A small cluster tuned for fault tests: no simulated fetch delay, short
+/// claim TTL, default (k=2) replication.
+fn fault_cluster() -> Cluster {
+    Cluster::start(
+        ClusterConfig {
+            n_workers: 2,
+            cache_bytes_per_worker: 64 << 20,
+            policy: Policy::AnyPull,
+            fetch_delay_per_mib: Duration::ZERO,
+            claim_ttl: Duration::from_secs(10),
+            ..ClusterConfig::default()
+        },
+        Backend::compiled(),
+    )
+}
+
+/// Flip one seeded bit in **every basket of every branch**, one at a time,
+/// under both codecs: each cell of the grid must surface as a typed
+/// `Corrupt` error naming the damaged branch — the read never "succeeds" —
+/// and once the fault rule is gone the same file reads back bit-exact.
+#[test]
+fn bitflip_grid_every_basket_every_codec() {
+    for codec in [Codec::None, Codec::Zstd(2)] {
+        let cs = generate_drellyan(1_500, 21);
+        let path = tmpfile(&format!("grid_flip_{}.froot", codec.name()));
+        let opts = WriteOptions { codec, basket_items: 256, ..WriteOptions::default() };
+        write_dataset(&path, &cs, opts).unwrap();
+        let mut r = DatasetReader::open(&path).unwrap();
+        let reference = r.read_full().unwrap();
+        let branches: Vec<(String, usize)> =
+            r.header.branches.iter().map(|b| (b.name.clone(), b.baskets.len())).collect();
+        drop(r);
+        let total: usize = branches.iter().map(|(_, n)| n).sum();
+        assert!(total >= 8, "grid needs multiple baskets, got {total}");
+        for (branch, n_baskets) in &branches {
+            for idx in 0..*n_baskets {
+                let h = fault::inject(FaultRule::new(
+                    format!("basket:{}:{branch}:{idx}", path.display()),
+                    FaultKind::BitFlip { seed: seed() ^ idx as u64 },
+                    1,
+                ));
+                let mut r = DatasetReader::open(&path).unwrap();
+                let err = match r.read_full() {
+                    Ok(_) => panic!("flipped bit in {branch}[{idx}] must not read clean"),
+                    Err(e) => e,
+                };
+                assert!(
+                    matches!(err, FormatError::Corrupt { .. }),
+                    "{branch}[{idx}]: want Corrupt, got {err}"
+                );
+                assert!(!err.is_transient(), "corruption is permanent: {err}");
+                assert!(err.to_string().contains(branch.as_str()), "{branch}[{idx}]: {err}");
+                assert_eq!(h.fired(), 1, "{branch}[{idx}]: rule must have fired");
+                drop(h);
+                assert_eq!(r.read_full().unwrap(), reference, "{branch}[{idx}]: clean reread");
+            }
+        }
+    }
+}
+
+/// Chop the file at a spread of byte positions — inside the magic, the
+/// preamble, the basket region, and the trailing header — and assert every
+/// cut is a typed error at open or read time, never a panic and never a
+/// quietly wrong ColumnSet.
+#[test]
+fn truncation_grid_is_typed_never_panics() {
+    let cs = generate_drellyan(800, 22);
+    let path = tmpfile("grid_trunc.froot");
+    write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let reference = DatasetReader::open(&path).unwrap().read_full().unwrap();
+    let header_pos = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let len = bytes.len();
+    let cuts = [
+        0,
+        1,
+        7, // mid-magic
+        8,
+        15, // mid header_pos
+        16,
+        27, // mid preamble CRC
+        28,
+        28 + (header_pos - 28) / 2, // mid-baskets
+        header_pos - 1,
+        header_pos + 1, // mid-header
+        len - 10,
+        len - 1,
+        len, // untouched control
+    ];
+    for cut in cuts {
+        let p = tmpfile(&format!("grid_trunc_{cut}.froot"));
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        let outcome = DatasetReader::open(&p).and_then(|mut r| r.read_full());
+        match outcome {
+            Err(err) => {
+                assert!(cut < len, "untouched file must read: {err}");
+                // Exercising Display is part of the contract: rendering the
+                // error must not panic either.
+                assert!(!err.to_string().is_empty());
+            }
+            Ok(got) => {
+                assert_eq!(cut, len, "cut at {cut}/{len} bytes read back \"clean\"");
+                assert_eq!(got, reference);
+            }
+        }
+    }
+}
+
+/// Transient EIO: the read fails typed-transient, and the immediate retry
+/// (rule spent) returns the exact bytes — the contract the catalog's retry
+/// loop is built on. Runs under both codecs.
+#[test]
+fn transient_eio_retry_reads_bit_exact() {
+    for codec in [Codec::None, Codec::Flate] {
+        let cs = generate_drellyan(1_200, 23);
+        let path = tmpfile(&format!("grid_eio_{}.froot", codec.name()));
+        let opts = WriteOptions { codec, basket_items: 300, ..WriteOptions::default() };
+        write_dataset(&path, &cs, opts).unwrap();
+        let want = cs.leaf("muons.pt").unwrap().as_f32().unwrap().to_vec();
+        let h = fault::inject(FaultRule::new(
+            format!("basket:{}:muons.pt", path.display()),
+            FaultKind::Eio,
+            1,
+        ));
+        let mut r = DatasetReader::open(&path).unwrap();
+        let err = r.read_leaf("muons.pt").unwrap_err();
+        assert!(err.is_transient(), "EIO must be transient: {err}");
+        let again = r.read_leaf("muons.pt").unwrap();
+        assert_eq!(again.as_f32().unwrap(), &want[..], "retry must be bit-exact");
+        assert_eq!(h.fired(), 1);
+    }
+}
+
+/// Short reads and in-flight truncations (0 bytes kept, a few bytes kept):
+/// all typed, all permanent, and the file itself stays readable once the
+/// fault clears.
+#[test]
+fn shortread_and_inflight_truncation_are_typed() {
+    let cs = generate_drellyan(900, 24);
+    let path = tmpfile("grid_short.froot");
+    write_dataset(&path, &cs, WriteOptions::default()).unwrap();
+    for kind in [
+        FaultKind::ShortRead,
+        FaultKind::Truncate { keep: 0 },
+        FaultKind::Truncate { keep: 9 },
+    ] {
+        let h = fault::inject(FaultRule::new(
+            format!("basket:{}:muons.phi", path.display()),
+            kind.clone(),
+            1,
+        ));
+        let mut r = DatasetReader::open(&path).unwrap();
+        let err = r.read_leaf("muons.phi").expect_err("damaged read must not pass");
+        assert!(!err.is_transient(), "{kind:?} must be permanent: {err}");
+        assert_eq!(h.fired(), 1, "{kind:?}");
+        drop(h);
+        assert!(r.read_leaf("muons.phi").is_ok(), "clean reread after {kind:?}");
+    }
+}
+
+/// A mixed storm at the catalog fetch seam — transient EIOs on one
+/// partition, a permanently corrupt replica on another, injected latency on
+/// a third — must be fully absorbed by retry + quarantine + failover: the
+/// query result is bit-exact and reports zero failed partitions.
+#[test]
+fn cluster_absorbs_mixed_fault_storm_bit_exact() {
+    let cs = generate_drellyan(10_000, 33);
+    let q = Query::new(QueryKind::MassPairs, "dy_storm", "muons");
+    let make = || {
+        let c = fault_cluster();
+        c.catalog.register("dy_storm", cs.clone(), 1_000);
+        c
+    };
+    let clean = make();
+    let want = clean.run(&q).unwrap();
+    clean.shutdown();
+
+    let c = make();
+    let _h = fault::inject_all(vec![
+        FaultRule::new("fetch:dy_storm:part0", FaultKind::Eio, 2),
+        FaultRule::new("fetch:dy_storm:part2:replica0", FaultKind::Corrupt, 1_000),
+        FaultRule::new("fetch:dy_storm:part4", FaultKind::Latency { ms: 2 }, 4),
+    ]);
+    let got = c.run(&q).unwrap();
+    assert_eq!(got.hist, want.hist, "storm-absorbed result must be bit-exact");
+    assert!(got.failed.is_empty(), "no partition may fail: {:?}", got.failed);
+    assert!(c.catalog.read_retries() >= 1, "EIOs should have been retried");
+    assert!(c.catalog.corruption_detected() >= 1);
+    assert_eq!(
+        c.catalog.quarantined(),
+        vec![("dy_storm".to_string(), 1, 2, 0)],
+        "exactly the corrupt replica is quarantined"
+    );
+    c.shutdown();
+}
+
+/// When **every** replica of a partition is corrupt, the strict query fails
+/// with the structured `PartitionsFailed` error and the `allow_partial`
+/// rerun degrades: merged histogram over the readable partitions plus a
+/// per-partition error manifest.
+#[test]
+fn cluster_unreadable_partition_degrades_with_manifest() {
+    let cs = generate_drellyan(6_000, 34);
+    let c = fault_cluster();
+    c.catalog.register("dy_manifest", cs.clone(), 1_000);
+    // Trailing colon: "part1:" cannot accidentally match a part1x tag.
+    let _h = fault::inject(FaultRule::new(
+        "fetch:dy_manifest:part1:",
+        FaultKind::Corrupt,
+        1_000,
+    ));
+    let q = Query::new(QueryKind::FlatHist, "dy_manifest", "muons");
+    match c.run(&q) {
+        Err(ClusterError::PartitionsFailed { failed, .. }) => {
+            assert_eq!(failed.len(), 1);
+            assert_eq!(failed[0].0, 1);
+        }
+        Err(other) => panic!("expected PartitionsFailed, got {other}"),
+        Ok(_) => panic!("strict query over an unreadable partition must fail"),
+    }
+    let res = c.run(&q.clone().with_allow_partial(true)).unwrap();
+    assert_eq!(res.failed.len(), 1, "manifest lists the dead partition");
+    assert_eq!(res.failed[0].0, 1);
+    // The degraded histogram is exactly the readable partitions' merge.
+    let mut want = hepq::hist::H1::new(q.n_bins, q.lo, q.hi);
+    for (p, part) in cs.partition(1_000).iter().enumerate() {
+        if p == 1 {
+            continue;
+        }
+        let mut h = hepq::hist::H1::new(q.n_bins, q.lo, q.hi);
+        hepq::engine::columnar_exec::run(q.kind, part, "muons", &mut h).unwrap();
+        want.merge(&h).unwrap();
+    }
+    assert_eq!(res.hist.bins, want.bins);
+    assert_eq!(res.hist.count, want.count);
+    c.shutdown();
+}
+
+/// The checked-in corrupt-file corpus: structurally broken files a writer
+/// crash, a bad disk, or a future format could leave behind. Every one must
+/// open to a typed error — this pins the error taxonomy across releases.
+#[test]
+fn corrupt_corpus_every_file_is_a_typed_error() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/corpus");
+    let open_err = |name: &str| DatasetReader::open(&dir.join(name)).unwrap_err();
+
+    assert_eq!(open_err("bad_magic.froot"), FormatError::BadMagic);
+    assert_eq!(
+        open_err("future_version.froot"),
+        FormatError::UnsupportedVersion { version: 9 }
+    );
+    let e = open_err("unfinalized.froot");
+    assert!(matches!(e, FormatError::Corrupt { .. }), "got {e}");
+    assert!(e.to_string().contains("not finalized"), "{e}");
+    let e = open_err("header_past_eof.froot");
+    assert!(matches!(e, FormatError::Truncated { .. }), "got {e}");
+    let e = open_err("truncated_preamble.froot");
+    assert!(matches!(e, FormatError::Truncated { .. }), "got {e}");
+
+    // Belt and braces: every corpus file — including ones a future session
+    // adds — must fail to open with a typed error, never a panic.
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().and_then(|e| e.to_str()) != Some("froot") {
+            continue;
+        }
+        seen += 1;
+        let err = DatasetReader::open(&p)
+            .err()
+            .unwrap_or_else(|| panic!("{} opened clean", p.display()));
+        assert!(!err.to_string().is_empty());
+    }
+    assert!(seen >= 5, "corpus went missing ({seen} files)");
+}
